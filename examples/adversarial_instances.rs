@@ -1,0 +1,46 @@
+//! The paper's adversarial constructions (§4.5, Lemma 2), swept over the
+//! size parameter z: watch LogDP's ratio climb toward 3 and SimpleDP's
+//! toward 5/3 while DP stays optimal.
+//!
+//! ```sh
+//! cargo run --release --example adversarial_instances
+//! ```
+
+use tapesched::model::adversarial::{logdp_worst_case, simpledp_five_thirds};
+use tapesched::sched::{Dp, Gs, LogDp, Scheduler, SimpleDp};
+use tapesched::sim::evaluate;
+
+fn main() {
+    println!("=== §4.5: LogDP(1) worst case — ratio → 3 as z → ∞ (U = 0) ===");
+    println!("{:>4} {:>16} {:>16} {:>9} {:>16} {:>9}", "z", "OPT", "LogDP(1)", "ratio", "GS", "ratio");
+    for z in [8u64, 16, 32, 64, 96] {
+        let inst = logdp_worst_case(z);
+        let opt = evaluate(&inst, &Dp.schedule(&inst)).cost;
+        let log = evaluate(&inst, &LogDp::new(1.0).schedule(&inst)).cost;
+        let gs = evaluate(&inst, &Gs.schedule(&inst)).cost;
+        println!(
+            "{z:>4} {opt:>16} {log:>16} {:>9.4} {gs:>16} {:>9.4}",
+            log as f64 / opt as f64,
+            gs as f64 / opt as f64
+        );
+    }
+
+    println!("\n=== Lemma 2: SimpleDP lower bound — ratio → 5/3 ≈ 1.667 ===");
+    println!("{:>4} {:>16} {:>16} {:>9}", "z", "OPT", "SimpleDP", "ratio");
+    for z in [5u64, 10, 20, 40, 80, 160] {
+        let inst = simpledp_five_thirds(z);
+        let opt = evaluate(&inst, &Dp.schedule(&inst)).cost;
+        let sdp = evaluate(&inst, &SimpleDp.schedule(&inst)).cost;
+        println!("{z:>4} {opt:>16} {sdp:>16} {:>9.4}", sdp as f64 / opt as f64);
+    }
+
+    println!("\n=== The optimal intertwined structure SimpleDP cannot express ===");
+    let inst = simpledp_five_thirds(20);
+    println!("DP       : {:?}", Dp.schedule(&inst));
+    println!("SimpleDP : {:?}", SimpleDp.schedule(&inst));
+    println!(
+        "DP reads f3 alone first, then rides f2→f4 over the already-read f3 — \n\
+         detour intervals overlap. SimpleDP must pick disjoint intervals and \n\
+         pays the 5/3 factor."
+    );
+}

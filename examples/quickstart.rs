@@ -1,0 +1,79 @@
+//! Quickstart: build an LTSP instance, solve it with every algorithm of
+//! the paper, and inspect the optimal head trajectory.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use tapesched::model::{virtual_lb, Instance, ReqFile};
+use tapesched::sched::{paper_schedulers, Dp, Scheduler};
+use tapesched::sim::{evaluate, trajectory};
+
+fn main() {
+    // A toy tape, 1 GB long (positions in bytes). Five requested files:
+    // the hot pair far on the right is what detours are made for.
+    let inst = Instance::new(
+        1_000_000_000,
+        2_000_000, // U-turn penalty worth 2 MB of travel
+        vec![
+            ReqFile { l: 10_000_000, r: 60_000_000, x: 1 },
+            ReqFile { l: 200_000_000, r: 210_000_000, x: 3 },
+            ReqFile { l: 650_000_000, r: 655_000_000, x: 40 }, // hot
+            ReqFile { l: 655_000_000, r: 662_000_000, x: 25 }, // hot
+            ReqFile { l: 900_000_000, r: 950_000_000, x: 2 },
+        ],
+    )
+    .expect("valid instance");
+
+    println!(
+        "Instance: {} requested files, {} requests, VirtualLB = {}",
+        inst.k(),
+        inst.n(),
+        virtual_lb(&inst)
+    );
+    println!();
+    println!("{:<12} {:>20} {:>12} {:>10}", "algorithm", "Σ service time", "vs optimal", "detours");
+
+    let opt = evaluate(&inst, &Dp.schedule(&inst)).cost;
+    for algo in paper_schedulers() {
+        let schedule = algo.schedule(&inst);
+        let out = evaluate(&inst, &schedule);
+        println!(
+            "{:<12} {:>20} {:>11.2}% {:>10}",
+            algo.name(),
+            out.cost,
+            (out.cost - opt) as f64 / opt as f64 * 100.0,
+            schedule.len()
+        );
+    }
+
+    // The optimal trajectory, as the head-position polyline.
+    let schedule = Dp.schedule(&inst);
+    println!("\nOptimal schedule (detours over requested-file indices): {schedule:?}");
+    println!("Head trajectory (time, position), megabyte units:");
+    for seg in trajectory::polyline(&inst, &schedule) {
+        if seg.from == seg.to {
+            println!("  t={:>7.1} U-turn at {:>7.1}", seg.t0 as f64 / 1e6, seg.from as f64 / 1e6);
+        } else {
+            println!(
+                "  t={:>7.1} move {:>7.1} -> {:>7.1}",
+                seg.t0 as f64 / 1e6,
+                seg.from as f64 / 1e6,
+                seg.to as f64 / 1e6
+            );
+        }
+    }
+
+    let out = evaluate(&inst, &schedule);
+    println!("\nPer-file service times (MB units):");
+    for f in 0..inst.k() {
+        println!(
+            "  file {f} [{:>6.1}, {:>6.1}) x{:<3} served at t={:.1}",
+            inst.l(f) as f64 / 1e6,
+            inst.r(f) as f64 / 1e6,
+            inst.x(f),
+            out.service[f] as f64 / 1e6
+        );
+    }
+    println!("\nmean service time = {:.2} MB-units", out.mean_service_time(&inst) / 1e6);
+}

@@ -1,0 +1,4 @@
+"""Build-time compile path: JAX model + Pallas kernels + AOT export.
+
+Never imported by the Rust runtime — artifacts are the only interface.
+"""

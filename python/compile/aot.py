@@ -1,0 +1,76 @@
+"""AOT export: lower the L2 SimpleDP model to HLO *text* per shape bucket.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the Rust side's bundled
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (normally via
+``make artifacts``). Buckets must stay in sync with
+``rust/src/runtime/xla_simpledp.rs::DEFAULT_BUCKETS``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import model_fn
+
+# (K, NS) buckets — keep in sync with runtime::DEFAULT_BUCKETS.
+BUCKETS = [(16, 128), (64, 1024), (128, 4096)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(k: int, ns: int, use_pallas: bool = True) -> str:
+    vec = jax.ShapeDtypeStruct((k,), jnp.float64)
+    scalar = jax.ShapeDtypeStruct((), jnp.float64)
+    lowered = jax.jit(model_fn(ns, use_pallas=use_pallas)).lower(
+        vec, vec, vec, scalar
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact dir")
+    parser.add_argument(
+        "--buckets",
+        default=",".join(f"{k}x{ns}" for k, ns in BUCKETS),
+        help="comma-separated KxNS bucket list",
+    )
+    parser.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the plain-jnp detour step instead of the Pallas kernel",
+    )
+    args = parser.parse_args()
+
+    out_dir = args.out
+    if out_dir.endswith(".hlo.txt"):  # Makefile passes the first target file
+        out_dir = os.path.dirname(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    for spec in args.buckets.split(","):
+        k, ns = (int(v) for v in spec.strip().split("x"))
+        text = lower_bucket(k, ns, use_pallas=not args.no_pallas)
+        path = os.path.join(out_dir, f"simpledp_{k}x{ns}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels + their pure-numpy/jnp correctness oracles."""
+
+from . import ref  # noqa: F401
+from .simpledp_step import detour_min_row, NS_BLK  # noqa: F401

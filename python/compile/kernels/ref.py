@@ -1,0 +1,77 @@
+"""Pure-numpy/jnp oracle for the dense SimpleDP wavefront (L1 correctness ref).
+
+Mirrors ``rust/src/sched/simpledp_dense.rs`` (the exact ``i128`` twin) in
+f64: the table ``T[b, ns]`` of the SimpleDP recurrence (paper section 4.5)
+over a ``(K, NS)`` grid, where ``K`` is the padded number of requested
+files and ``NS - 1`` the maximum total number of requests.
+
+Recurrence (positions already rescaled; ``s(i) = r[i] - l[i]``)::
+
+    T[0, ns]   = 2*s(0)*ns
+    skip(b,ns) = T[b-1, min(ns+x[b], NS-1)] + 2*(r[b]-r[b-1])*ns
+               + 2*(l[b]-r[b-1])*x[b]
+    detour_c(b,ns) = T[c-1, ns] + 2*(r[b]-r[c-1])*ns
+               + 2*(u + r[b]-l[c])*(ns + nl[c]) + 2*inner(c, b)
+    inner(c,b) = sum_{c<f<=b} (l[f]-l[c])*x[f]
+    T[b, ns]   = min(skip, min_{1<=c<=b} detour_c)
+
+Padding contract: padded files (``x = 0``, zero size, parked at the right
+end) only influence rows ``b >= k`` of the table, which callers never read.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+BIG = 1e30  # +inf stand-in that survives arithmetic
+
+
+def prefixes(l, r, x):
+    """Shared prefix sums: ``nl`` (exclusive), ``lxi``/``nxi`` (inclusive)."""
+    l = np.asarray(l, dtype=np.float64)
+    x = np.asarray(x, dtype=np.float64)
+    nl = np.concatenate([[0.0], np.cumsum(x)[:-1]])
+    lxi = np.cumsum(l * x)
+    nxi = np.cumsum(x)
+    return nl, lxi, nxi
+
+
+def dense_table_np(l, r, x, u, ns_max):
+    """Reference table, plain numpy, straight from the recurrence."""
+    l = np.asarray(l, dtype=np.float64)
+    r = np.asarray(r, dtype=np.float64)
+    x = np.asarray(x, dtype=np.float64)
+    k = len(l)
+    nl, lxi, nxi = prefixes(l, r, x)
+    ns = np.arange(ns_max, dtype=np.float64)
+    t = np.zeros((k, ns_max), dtype=np.float64)
+    t[0] = 2.0 * (r[0] - l[0]) * ns
+    for b in range(1, k):
+        shift = np.minimum(np.arange(ns_max) + int(x[b]), ns_max - 1)
+        skip = t[b - 1][shift] + 2.0 * (r[b] - r[b - 1]) * ns \
+            + 2.0 * (l[b] - r[b - 1]) * x[b]
+        best = skip
+        for c in range(1, b + 1):
+            inner = (lxi[b] - lxi[c]) - l[c] * (nxi[b] - nxi[c])
+            cand = t[c - 1] + 2.0 * (r[b] - r[c - 1]) * ns \
+                + 2.0 * (u + r[b] - l[c]) * (ns + nl[c]) + 2.0 * inner
+            best = np.minimum(best, cand)
+        t[b] = best
+    return t
+
+
+def detour_min_row_np(tshift, a, b_coef):
+    """Reference for the L1 kernel alone: ``min_c tshift[c,ns] + a[c]*ns +
+    b_coef[c]`` over axis 0 (invalid ``c`` pre-masked to +BIG in a/b)."""
+    k, ns_max = tshift.shape
+    ns = np.arange(ns_max, dtype=np.float64)
+    cand = tshift + np.outer(a, ns) + b_coef[:, None]
+    return cand.min(axis=0)
+
+
+def virtual_lb_np(l, r, x, u, m):
+    """``VirtualLB = sum_f x(f) * (m - l(f) + s(f) + u)`` (paper section 3)."""
+    l = np.asarray(l, dtype=np.float64)
+    r = np.asarray(r, dtype=np.float64)
+    x = np.asarray(x, dtype=np.float64)
+    return float(np.sum(x * (m - l + (r - l) + u)))

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: the SimpleDP wavefront's detour-min step.
+
+For a fixed file ``b`` the recurrence needs, for every skip count ``ns``::
+
+    detour_min[ns] = min_{1<=c<=b} T[c-1, ns] + A[c]*ns + B[c]
+
+where ``A``/``B`` are per-candidate scalars precomputed at L2 (invalid
+candidates masked to +BIG). This is the O(K*NS) hot spot of the wavefront
+— the skip branch is O(NS) and stays in plain jnp at L2.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the ``(c, ns)``
+candidate plane is tiled along ``ns`` into VMEM blocks of ``(K, NS_BLK)``;
+the min-reduction over ``c`` runs on the VPU (there is no matmul here, so
+the MXU is idle by design). ``interpret=True`` everywhere: the CPU PJRT
+client cannot execute Mosaic custom-calls, and interpret-mode lowers the
+kernel to plain HLO ops that AOT-export cleanly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block width along the ns axis. 512 doubles * K=128 candidates = 512 KiB
+# per VMEM block at the largest shipped bucket — comfortably under the
+# ~16 MiB VMEM budget with double buffering.
+NS_BLK = 512
+
+
+def _detour_min_kernel(tshift_ref, a_ref, b_ref, out_ref):
+    """One (K, NS_BLK) tile: min over candidates of an affine-in-ns plane."""
+    ns0 = pl.program_id(0) * out_ref.shape[0]
+    ns = ns0 + jax.lax.broadcasted_iota(jnp.float64, (1, out_ref.shape[0]), 1)
+    cand = tshift_ref[...] + a_ref[...] * ns + b_ref[...]
+    out_ref[...] = jnp.min(cand, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def detour_min_row(tshift, a, b, interpret=True):
+    """``min_c tshift[c, ns] + a[c]*ns + b[c]`` for every ``ns``.
+
+    Args:
+      tshift: f64[K, NS] — rows ``T[c-1]`` of the table built so far
+        (row 0 is junk; its candidate must be masked via ``a``/``b``).
+      a, b:   f64[K]     — affine coefficients per candidate ``c``,
+        pre-masked to +BIG for invalid candidates.
+      interpret: keep True (see module docstring).
+
+    Returns: f64[NS].
+    """
+    k, ns_max = tshift.shape
+    if ns_max % NS_BLK == 0:
+        blk = NS_BLK
+    else:  # small test shapes: one block
+        blk = ns_max
+    grid = ns_max // blk
+    return pl.pallas_call(
+        _detour_min_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((k, blk), lambda j: (0, j)),
+            pl.BlockSpec((k, 1), lambda j: (0, 0)),
+            pl.BlockSpec((k, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((ns_max,), jnp.float64),
+        interpret=interpret,
+    )(tshift, a[:, None], b[:, None])

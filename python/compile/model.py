@@ -1,0 +1,94 @@
+"""L2 JAX model: the dense SimpleDP table as a lax.scan wavefront.
+
+Computes the full ``(K, NS)`` table ``T[b, ns]`` of the SimpleDP recurrence
+(paper section 4.5) for a statically shaped bucket. The per-step detour
+minimum — the O(K*NS) hot spot — runs in the L1 Pallas kernel
+(``kernels.simpledp_step``); the O(NS) skip branch and the prefix-sum
+bookkeeping stay in plain jnp where XLA fuses them.
+
+This module is AOT-lowered once per shape bucket by ``aot.py`` and executed
+from Rust through PJRT (``rust/src/runtime/``); it is never imported at
+request time.
+
+Inputs (all f64, positions pre-scaled by the caller, see POS_SCALE on the
+Rust side):
+
+  l: f64[K]  left end of each requested file (padded: parked at r[k-1])
+  r: f64[K]  right end (same padding)
+  x: f64[K]  request multiplicity (padded: 0)
+  u: f64[]   U-turn penalty
+
+Output: the f64[K, NS] table. Rows ``b >= k`` (padding) are junk by
+contract; rows ``b < k`` never consult them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.simpledp_step import detour_min_row  # noqa: E402
+
+BIG = 1e30
+
+
+@functools.partial(jax.jit, static_argnames=("ns_max", "use_pallas"))
+def simpledp_table(l, r, x, u, *, ns_max, use_pallas=True):
+    """Dense SimpleDP table ``T[b, ns]`` for one padded instance."""
+    k = l.shape[0]
+    ns = jnp.arange(ns_max, dtype=jnp.float64)
+    c_idx = jnp.arange(k, dtype=jnp.float64)
+
+    # Prefix sums (exclusive nl, inclusive lxi/nxi) — shared by every step.
+    nl = jnp.concatenate([jnp.zeros(1), jnp.cumsum(x)[:-1]])
+    lxi = jnp.cumsum(l * x)
+    nxi = jnp.cumsum(x)
+
+    # Base row: T[0, ns] = 2*s(0)*ns.
+    row0 = 2.0 * (r[0] - l[0]) * ns
+    table0 = jnp.zeros((k, ns_max), dtype=jnp.float64).at[0].set(row0)
+
+    def step(table, b):
+        # --- skip branch (plain jnp: one gather along ns) ---------------
+        xb = x[b]
+        shift = jnp.minimum(ns + xb, float(ns_max - 1)).astype(jnp.int32)
+        prev = table[b - 1]
+        skip = prev[shift] + 2.0 * (r[b] - r[b - 1]) * ns \
+            + 2.0 * (l[b] - r[b - 1]) * xb
+
+        # --- detour branch (L1 kernel): min over candidates c ------------
+        # cand[c, ns] = T[c-1, ns] + A[c]*ns + B[c], for 1 <= c <= b.
+        inner = (lxi[b] - lxi) - l * (nxi[b] - nxi)
+        det2 = 2.0 * (u + r[b] - l)
+        rprev = jnp.concatenate([jnp.zeros(1), r[:-1]])  # r[c-1]
+        a_coef = 2.0 * (r[b] - rprev) + det2
+        b_coef = det2 * nl + 2.0 * inner
+        valid = (c_idx >= 1.0) & (c_idx <= jnp.float64(b))
+        a_coef = jnp.where(valid, a_coef, 0.0)
+        b_coef = jnp.where(valid, b_coef, BIG)
+        tshift = jnp.concatenate([jnp.zeros((1, ns_max)), table[:-1]], axis=0)
+        if use_pallas:
+            detour = detour_min_row(tshift, a_coef, b_coef)
+        else:
+            cand = tshift + a_coef[:, None] * ns[None, :] + b_coef[:, None]
+            detour = jnp.min(cand, axis=0)
+
+        row = jnp.minimum(skip, detour)
+        table = jax.lax.dynamic_update_slice(table, row[None, :], (b, 0))
+        return table, ()
+
+    table, _ = jax.lax.scan(step, table0, jnp.arange(1, k))
+    return table
+
+
+def model_fn(ns_max, use_pallas=True):
+    """The function AOT-lowered per bucket: ``(l, r, x, u) -> (table,)``."""
+
+    def fn(l, r, x, u):
+        return (simpledp_table(l, r, x, u, ns_max=ns_max, use_pallas=use_pallas),)
+
+    return fn

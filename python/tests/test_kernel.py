@@ -1,0 +1,92 @@
+"""L1 correctness: the Pallas detour-min kernel vs the numpy oracle.
+
+Hypothesis sweeps shapes and value regimes; every case asserts
+``assert_allclose`` between the kernel (interpret mode) and ``ref.py``.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp  # noqa: E402
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile.kernels import ref  # noqa: E402
+from compile.kernels.simpledp_step import NS_BLK, detour_min_row  # noqa: E402
+
+
+def run_both(tshift, a, b):
+    got = np.asarray(detour_min_row(jnp.asarray(tshift), jnp.asarray(a), jnp.asarray(b)))
+    want = ref.detour_min_row_np(tshift, a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=0)
+    return got
+
+
+def test_single_candidate_affine():
+    tshift = np.zeros((1, 8))
+    a = np.array([2.0])
+    b = np.array([5.0])
+    got = run_both(tshift, a, b)
+    np.testing.assert_allclose(got, 2.0 * np.arange(8) + 5.0)
+
+
+def test_min_picks_crossing_lines():
+    # Two candidates whose affine costs cross midway.
+    ns_max = 16
+    tshift = np.zeros((2, ns_max))
+    a = np.array([1.0, 3.0])
+    b = np.array([20.0, 0.0])
+    got = run_both(tshift, a, b)
+    ns = np.arange(ns_max)
+    np.testing.assert_allclose(got, np.minimum(ns + 20.0, 3.0 * ns))
+
+
+def test_masked_candidates_never_win():
+    tshift = np.random.default_rng(0).uniform(0, 10, (4, 8))
+    a = np.array([0.0, 0.0, 0.0, 0.0])
+    b = np.array([ref.BIG, 1.0, ref.BIG, 2.0])
+    got = run_both(tshift, a, b)
+    want = np.minimum(tshift[1] + 1.0, tshift[3] + 2.0)
+    np.testing.assert_allclose(got, want)
+
+
+def test_multiblock_grid():
+    # ns_max a multiple of NS_BLK exercises the tiled grid path.
+    rng = np.random.default_rng(1)
+    k, ns_max = 8, 2 * NS_BLK
+    tshift = rng.uniform(0, 1e6, (k, ns_max))
+    a = rng.uniform(0, 1e3, k)
+    b = rng.uniform(0, 1e6, k)
+    run_both(tshift, a, b)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(1, 12),
+    ns_pow=st.integers(0, 7),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1.0, 1e4, 1e9]),
+)
+def test_kernel_matches_ref_random(k, ns_pow, seed, scale):
+    rng = np.random.default_rng(seed)
+    ns_max = 2**ns_pow
+    tshift = rng.uniform(0, scale, (k, ns_max))
+    a = rng.uniform(0, scale, k)
+    b = rng.uniform(-scale, scale, k)
+    # Randomly mask some candidates like L2 does.
+    mask = rng.uniform(size=k) < 0.3
+    b = np.where(mask, ref.BIG, b)
+    a = np.where(mask, 0.0, a)
+    if mask.all():
+        b[0] = 0.0  # keep at least one valid candidate
+    run_both(tshift, a, b)
+
+
+@pytest.mark.parametrize("dtype", [np.float64])
+def test_dtype_is_preserved(dtype):
+    tshift = np.zeros((2, 4), dtype=dtype)
+    out = detour_min_row(jnp.asarray(tshift), jnp.zeros(2), jnp.zeros(2))
+    assert out.dtype == jnp.float64

@@ -1,0 +1,118 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. LogDP's λ — solution quality vs compute time on a median instance
+//!    (the paper's "λ can be adjusted to trade accuracy for time").
+//! 2. The coordinator's batch window — batching is what turns random
+//!    arrivals into LTSP instances worth optimizing; a zero window
+//!    degenerates to per-request FIFO service.
+//! 3. U-turn penalty sweep — how the optimal structure (number of
+//!    detours) and the DP/GS gap react as U grows (Figs 14→16 trend).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use tapesched::bench::{bench, BenchConfig, Suite};
+use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, ReadRequest};
+use tapesched::dataset::{generate_dataset, GeneratorConfig};
+use tapesched::sched::{scheduler_by_name, Dp, Gs, LogDp, Scheduler};
+use tapesched::sim::{evaluate, DriveParams};
+use tapesched::util::rng::Rng;
+
+fn main() {
+    let mut suite = Suite::new();
+    let ds = generate_dataset(&GeneratorConfig::default());
+    let [_, u_half, _] = ds.paper_u_values();
+
+    // --- 1. LogDP λ sweep: quality vs time -------------------------------
+    // A mid-size tape (exact DP still feasible for the reference).
+    let tape = ds
+        .tapes
+        .iter()
+        .filter(|t| (60..=90).contains(&t.n_req()))
+        .min_by_key(|t| t.n_req())
+        .expect("mid-size tape exists");
+    let inst = tape.instance(u_half).unwrap();
+    println!(
+        "=== LogDP λ ablation on {} (n_req={}, n={}) ===",
+        tape.tape.name,
+        inst.k(),
+        inst.n()
+    );
+    let opt = evaluate(&inst, &Dp.schedule(&inst)).cost;
+    println!("{:>8} {:>14} {:>10} {:>12}", "λ", "cost", "overhead", "median time");
+    for lambda in [0.5, 1.0, 2.0, 5.0, 10.0] {
+        let algo = LogDp::new(lambda);
+        let r = bench(
+            &format!("logdp_lambda/{lambda}"),
+            &BenchConfig::quick(),
+            || algo.schedule(&inst),
+        );
+        let cost = evaluate(&inst, &algo.schedule(&inst)).cost;
+        println!(
+            "{lambda:>8} {cost:>14} {:>9.3}% {:>12}",
+            (cost - opt) as f64 / opt as f64 * 100.0,
+            tapesched::bench::fmt_seconds(r.median)
+        );
+        suite.results.push(r);
+    }
+
+    // --- 2. batch-window ablation ----------------------------------------
+    println!("\n=== batch-window ablation (SimpleDP, 4 drives, 3000 reqs) ===");
+    println!("{:>10} {:>9} {:>14} {:>14}", "window", "batches", "mean svc (s)", "wall (s)");
+    for window_ms in [0u64, 2, 10, 50] {
+        let t0 = Instant::now();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                n_drives: 4,
+                batcher: BatcherConfig {
+                    window: std::time::Duration::from_millis(window_ms),
+                    max_batch: 1024,
+                },
+                drive: DriveParams::default(),
+            },
+            ds.tapes.iter().take(24).map(|t| t.tape.clone()),
+            Arc::from(scheduler_by_name("SimpleDP").unwrap()),
+        );
+        let mut rng = Rng::new(3);
+        for id in 0..3_000u64 {
+            let t = &ds.tapes[rng.below(24) as usize];
+            coord.submit(ReadRequest {
+                id,
+                tape: t.tape.name.clone(),
+                file_index: rng.zipf(t.tape.n_files() as u64, 1.2) as usize - 1,
+            });
+        }
+        let (_, m) = coord.finish();
+        println!(
+            "{:>8}ms {:>9} {:>14.1} {:>14.2}",
+            window_ms,
+            m.batches,
+            m.mean_service_s,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // --- 3. U sweep: optimal structure vs penalty -------------------------
+    let tape = ds
+        .tapes
+        .iter()
+        .filter(|t| (30..=50).contains(&t.n_req()))
+        .min_by_key(|t| t.n_req())
+        .expect("small tape exists");
+    println!(
+        "\n=== U-turn penalty sweep on {} (n_req={}) ===",
+        tape.tape.name,
+        tape.n_req()
+    );
+    println!("{:>16} {:>10} {:>12}", "U (bytes)", "detours", "GS/OPT");
+    let avg = ds.avg_segment_size();
+    for u in [0, avg / 8, avg / 2, avg, 4 * avg] {
+        let inst = tape.instance(u).unwrap();
+        let sched = Dp.schedule(&inst);
+        let opt = evaluate(&inst, &sched).cost;
+        let gs = evaluate(&inst, &Gs.schedule(&inst)).cost;
+        println!("{u:>16} {:>10} {:>12.4}", sched.len(), gs as f64 / opt as f64);
+    }
+
+    suite.write_csv("bench_ablations.csv");
+}

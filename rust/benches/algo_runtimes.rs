@@ -1,0 +1,58 @@
+//! Bench E4 — the §5.3 "time to solution" table: median running time of
+//! every algorithm over dataset instances, bucketed by instance size.
+//!
+//! The paper reports (single-thread Python): DP ≈ 281 s, LogDP(5) ≈ 47 s,
+//! SimpleDP ≈ 21 s, LogDP(1) ≈ 5 s, NFGS ≈ 0.4 s, LogNFGS ≈ 0.1 s,
+//! others < 1 ms. The *ordering* is the reproduction target; the Rust
+//! implementations shift absolute numbers by the language factor.
+
+use tapesched::bench::{bench, BenchConfig, Suite};
+use tapesched::dataset::{generate_dataset, GeneratorConfig};
+use tapesched::sched::paper_schedulers;
+
+fn main() {
+    let ds = generate_dataset(&GeneratorConfig::default());
+    let [_, _, u_avg] = ds.paper_u_values();
+
+    // Size buckets over n_req: small / median-ish / large. The paper's
+    // median instance has n_req ≈ 148.
+    let buckets: [(&str, usize, usize); 3] =
+        [("small(k<=60)", 2, 60), ("median(k<=180)", 61, 180), ("large(k<=300)", 181, 300)];
+
+    let mut suite = Suite::new();
+    println!("=== §5.3 timing table (median per instance; per size bucket) ===\n");
+    for (label, lo, hi) in buckets {
+        // Representative instance: the first tape whose n_req is closest
+        // to the bucket midpoint.
+        let mid = (lo + hi) / 2;
+        let tape = ds
+            .tapes
+            .iter()
+            .filter(|t| (lo..=hi).contains(&t.n_req()))
+            .min_by_key(|t| t.n_req().abs_diff(mid));
+        let Some(tape) = tape else { continue };
+        let inst = tape.instance(u_avg).unwrap();
+        println!("--- bucket {label}: tape {} (n_req = {}, n = {}) ---", tape.tape.name, inst.k(), inst.n());
+        for algo in paper_schedulers() {
+            // Exact DP on large instances is minutes; measure once there.
+            let cfg = if algo.name() == "DP" && inst.k() > 150 {
+                BenchConfig {
+                    warmup: std::time::Duration::ZERO,
+                    measure: std::time::Duration::ZERO,
+                    max_iters: 1,
+                    min_iters: 1,
+                }
+            } else if inst.k() > 60 {
+                BenchConfig::quick()
+            } else {
+                BenchConfig::default()
+            };
+            let name = format!("{}/{}", algo.name(), label);
+            let r = bench(&name, &cfg, || algo.schedule(&inst));
+            suite.record(r);
+        }
+        println!();
+    }
+    suite.write_csv("bench_algo_runtimes.csv");
+    println!("CSV → bench_algo_runtimes.csv");
+}

@@ -1,0 +1,112 @@
+//! Bench — the serving layer: batcher throughput, end-to-end coordinator
+//! throughput per policy, and drive-pool scaling of the library simulator.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use tapesched::bench::{bench, BenchConfig, BenchResult, Suite};
+use tapesched::coordinator::{Batcher, BatcherConfig, Coordinator, CoordinatorConfig, ReadRequest};
+use tapesched::dataset::{generate_dataset, GeneratorConfig};
+use tapesched::sched::scheduler_by_name;
+use tapesched::sim::{DriveParams, LibrarySim, TapeJob};
+use tapesched::util::rng::Rng;
+
+fn main() {
+    let mut suite = Suite::new();
+
+    // --- batcher micro-bench: push+pop throughput -----------------------
+    let cfg = BenchConfig::quick();
+    suite.run("batcher/push_pop_10k", &cfg, || {
+        let mut b = Batcher::new(BatcherConfig { window: std::time::Duration::ZERO, max_batch: 256 });
+        let t0 = Instant::now();
+        for id in 0..10_000u64 {
+            b.push(["A", "B", "C", "D"][(id % 4) as usize], (id % 64) as usize, id, t0);
+        }
+        let mut n = 0;
+        while let Some(batch) = b.pop_ready(t0, true) {
+            n += batch.n_requests();
+        }
+        assert_eq!(n, 10_000);
+    });
+
+    // --- coordinator end-to-end throughput per policy -------------------
+    let ds = generate_dataset(&GeneratorConfig { n_tapes: 24, ..Default::default() });
+    for policy_name in ["GS", "SimpleDP", "LogDP(1)"] {
+        let n_req = 4_000u64;
+        let r = bench(
+            &format!("coordinator/e2e_{n_req}req/{policy_name}"),
+            &BenchConfig {
+                warmup: std::time::Duration::ZERO,
+                measure: std::time::Duration::from_secs(2),
+                max_iters: 5,
+                min_iters: 2,
+            },
+            || {
+                let coord = Coordinator::start(
+                    CoordinatorConfig {
+                        n_drives: 8,
+                        batcher: BatcherConfig {
+                            window: std::time::Duration::from_millis(2),
+                            max_batch: 256,
+                        },
+                        drive: DriveParams::default(),
+                    },
+                    ds.tapes.iter().map(|t| t.tape.clone()),
+                    Arc::from(scheduler_by_name(policy_name).unwrap()),
+                );
+                let mut rng = Rng::new(5);
+                for id in 0..n_req {
+                    let t = &ds.tapes[rng.below(ds.tapes.len() as u64) as usize];
+                    coord.submit(ReadRequest {
+                        id,
+                        tape: t.tape.name.clone(),
+                        file_index: rng.below(t.tape.n_files() as u64) as usize,
+                    });
+                }
+                let (completions, _) = coord.finish();
+                assert_eq!(completions.len() as u64, n_req);
+            },
+        );
+        let req_per_s = 4_000.0 / r.median;
+        println!("    → {:.0} requests/s through the full stack", req_per_s);
+        suite.record(r);
+    }
+
+    // --- library sim: drive-pool scaling ---------------------------------
+    let policy = scheduler_by_name("SimpleDP").unwrap();
+    let mut rng = Rng::new(11);
+    let mut by_size: Vec<_> = ds.tapes.iter().collect();
+    by_size.sort_by_key(|t| t.n_req());
+    let jobs: Vec<TapeJob> = by_size
+        .iter()
+        .take(16)
+        .map(|t| TapeJob {
+            tape_name: t.tape.name.clone(),
+            arrival_s: rng.f64() * 10.0,
+            instance: t.instance(0).unwrap(),
+        })
+        .collect();
+    for n_drives in [1usize, 4, 16] {
+        let sim = LibrarySim::new(DriveParams::default(), n_drives, policy.as_ref());
+        let jobs2 = jobs.clone();
+        let t0 = Instant::now();
+        let (_, m) = sim.run(jobs2);
+        let s = t0.elapsed().as_secs_f64();
+        suite.record(BenchResult {
+            name: format!("library_sim/16jobs/{n_drives}drives"),
+            iters: 1,
+            median: s,
+            mean: s,
+            p10: s,
+            p90: s,
+        });
+        println!(
+            "    → makespan {:.0}s, mean latency {:.0}s, utilization {:.0}%",
+            m.makespan_s,
+            m.mean_latency_s,
+            m.drive_utilization * 100.0
+        );
+    }
+
+    suite.write_csv("bench_coordinator.csv");
+}

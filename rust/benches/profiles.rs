@@ -1,0 +1,50 @@
+//! Bench E1–E3 — regenerate the Figure 14/15/16 performance profiles and
+//! report the end-to-end evaluation cost per U scenario.
+//!
+//! `cargo bench --bench profiles [-- <n_tapes> <max_k>]`
+//! Writes `results/fig1{4,5,6}.csv` like `tapesched figures` and prints
+//! the headline profile values the paper quotes in §5.3.
+
+use tapesched::analysis::report::run_evaluation;
+use tapesched::bench::{once, Suite};
+use tapesched::dataset::{generate_dataset, GeneratorConfig};
+use tapesched::sched::paper_schedulers;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let n_tapes: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
+    let max_k: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(55);
+
+    let ds = generate_dataset(&GeneratorConfig { n_tapes, ..Default::default() });
+    let [u0, u_half, u_avg] = ds.paper_u_values();
+    let schedulers = paper_schedulers();
+    std::fs::create_dir_all("results").ok();
+
+    let mut suite = Suite::new();
+    for (fig, u) in [("fig14", u0), ("fig15", u_avg), ("fig16", u_half)] {
+        let (table, r) = once(&format!("evaluation/{fig}(U={u})"), || {
+            run_evaluation(&ds, &schedulers, u, Some(max_k))
+        });
+        suite.record(r);
+        std::fs::write(format!("results/{fig}.csv"), table.profiles_csv("DP")).ok();
+
+        // Headline checks from §5.3, printed for eyeballing:
+        let curves = table.profiles("DP");
+        let at = |name: &str, tau: f64| {
+            curves
+                .iter()
+                .find(|c| c.algorithm == name)
+                .map(|c| c.at(tau) * 100.0)
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "  {fig}: SimpleDP ≤1% of OPT on {:.0}% of instances; \
+             NFGS ≤2.5% on {:.0}%; NoDetour >10% on {:.0}%",
+            at("SimpleDP", 1.0),
+            at("NFGS", 2.5),
+            100.0 - at("NoDetour", 10.0),
+        );
+    }
+    suite.write_csv("bench_profiles.csv");
+    println!("profiles → results/fig14.csv, fig15.csv, fig16.csv");
+}

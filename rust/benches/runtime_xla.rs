@@ -1,0 +1,58 @@
+//! Bench — the XLA evaluation engine: PJRT execute latency per shape
+//! bucket vs the exact i128 dense implementation on the same instances,
+//! plus compile-once cost. Skips cleanly when artifacts are absent.
+
+use tapesched::bench::{bench, once, BenchConfig, Suite};
+use tapesched::runtime::{XlaSimpleDp, ARTIFACT_DIR};
+use tapesched::sched::simpledp_dense::dense_table;
+use tapesched::sched::{Scheduler, SimpleDp};
+use tapesched::testkit::{random_instance, InstanceGenConfig};
+use tapesched::util::rng::Rng;
+
+fn main() {
+    let backend = match XlaSimpleDp::new(ARTIFACT_DIR) {
+        Ok(b) if !b.buckets().is_empty() => b,
+        _ => {
+            println!("runtime_xla: no artifacts (run `make artifacts`) — skipping");
+            return;
+        }
+    };
+    let mut suite = Suite::new();
+    let mut rng = Rng::new(7);
+
+    for bucket in backend.buckets().to_vec() {
+        // An instance that fills ~3/4 of the bucket.
+        let k_target = (bucket.k * 3 / 4).max(2);
+        let cfg = InstanceGenConfig {
+            min_files: k_target,
+            max_files: k_target,
+            max_size: 40,
+            max_gap: 25,
+            // keep n safely under the bucket's NS
+            max_x: ((bucket.ns - 1) / k_target.max(1)).clamp(1, 8) as u64,
+            max_u: 20,
+        };
+        let inst = random_instance(&mut rng, &cfg);
+        assert!(bucket.fits(&inst));
+
+        // First call = compile + execute; record separately.
+        let (_, compile_r) = once(
+            &format!("xla/compile+run/{}", bucket.artifact()),
+            || backend.table(&inst).unwrap(),
+        );
+        suite.record(compile_r);
+
+        let cfg_b = BenchConfig::quick();
+        suite.run(&format!("xla/execute/{}", bucket.artifact()), &cfg_b, || {
+            backend.table(&inst).unwrap()
+        });
+        suite.run(&format!("rust/dense_table/k={}", inst.k()), &cfg_b, || {
+            dense_table(&inst)
+        });
+        suite.run(&format!("rust/sparse_simpledp/k={}", inst.k()), &cfg_b, || {
+            SimpleDp.schedule(&inst)
+        });
+        println!();
+    }
+    suite.write_csv("bench_runtime_xla.csv");
+}

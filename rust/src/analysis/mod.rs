@@ -1,0 +1,10 @@
+//! Evaluation harness: per-instance algorithm costs, Dolan–Moré performance
+//! profiles (the §5.3 methodology) and CSV/report writers for Figures 14–16.
+
+pub mod profile;
+pub mod report;
+pub mod svg;
+
+pub use profile::{performance_profile, ProfileCurve, ProfilePoint};
+pub use report::{run_evaluation, EvalRecord, EvalTable};
+pub use svg::trajectory_svg;

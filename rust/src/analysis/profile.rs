@@ -1,0 +1,188 @@
+//! Dolan–Moré performance profiles (§5.3, after [13]).
+//!
+//! For each algorithm and each overhead threshold `τ` (in percent), the
+//! profile value is the fraction of instances on which the algorithm's cost
+//! is at most `(1 + τ/100) · cost(DP)`. The higher the curve, the better.
+
+/// One `(τ %, fraction)` point of a profile curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProfilePoint {
+    pub tau_pct: f64,
+    pub fraction: f64,
+}
+
+/// A full profile curve for one algorithm.
+#[derive(Debug, Clone)]
+pub struct ProfileCurve {
+    pub algorithm: String,
+    pub points: Vec<ProfilePoint>,
+}
+
+impl ProfileCurve {
+    /// Profile value at threshold `tau_pct` (step function, right-continuous).
+    pub fn at(&self, tau_pct: f64) -> f64 {
+        self.points
+            .iter()
+            .rev()
+            .find(|p| p.tau_pct <= tau_pct)
+            .map_or(0.0, |p| p.fraction)
+    }
+
+    /// Area under the curve on `[0, max_tau]` (useful as a scalar summary;
+    /// higher is better).
+    pub fn auc(&self, max_tau: f64) -> f64 {
+        let mut area = 0.0;
+        let mut prev_tau = 0.0;
+        let mut prev_val = 0.0;
+        for p in &self.points {
+            if p.tau_pct > max_tau {
+                break;
+            }
+            area += prev_val * (p.tau_pct - prev_tau);
+            prev_tau = p.tau_pct;
+            prev_val = p.fraction;
+        }
+        area + prev_val * (max_tau - prev_tau)
+    }
+}
+
+/// Build the performance-profile curve of one algorithm from per-instance
+/// `(algorithm cost, reference cost)` pairs, sampled at `taus` (percent).
+///
+/// `reference` is the optimum (DP); costs may be any totally ordered scalar
+/// as long as `cost ≥ reference > 0`.
+pub fn performance_profile(
+    algorithm: &str,
+    costs: &[(i128, i128)],
+    taus: &[f64],
+) -> ProfileCurve {
+    assert!(!costs.is_empty(), "need at least one instance");
+    let n = costs.len() as f64;
+    // Overhead of each instance, in percent.
+    let mut overheads: Vec<f64> = costs
+        .iter()
+        .map(|&(c, r)| {
+            assert!(r > 0, "reference cost must be positive");
+            debug_assert!(c >= r, "algorithm beats the exact reference: {c} < {r}");
+            (c - r) as f64 / r as f64 * 100.0
+        })
+        .collect();
+    overheads.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let points = taus
+        .iter()
+        .map(|&tau| {
+            // fraction of instances with overhead ≤ tau (+ tiny f64 slack)
+            let cnt = overheads.partition_point(|&o| o <= tau + 1e-12);
+            ProfilePoint { tau_pct: tau, fraction: cnt as f64 / n }
+        })
+        .collect();
+    ProfileCurve { algorithm: algorithm.to_string(), points }
+}
+
+/// The τ grid used for Figures 14–16: dense near 0, log-spread to 50 %.
+pub fn paper_tau_grid() -> Vec<f64> {
+    let mut taus = vec![0.0];
+    // 0.1 … 1.0 by 0.1; 1.25 … 10 by 0.25; 11 … 50 by 1.
+    for i in 1..=10 {
+        taus.push(i as f64 * 0.1);
+    }
+    let mut t = 1.25;
+    while t <= 10.0 {
+        taus.push(t);
+        t += 0.25;
+    }
+    for i in 11..=50 {
+        taus.push(i as f64);
+    }
+    taus
+}
+
+/// Render a set of curves as CSV: `tau,algo1,algo2,…`.
+pub fn curves_csv(curves: &[ProfileCurve]) -> String {
+    assert!(!curves.is_empty());
+    let mut out = String::from("tau_pct");
+    for c in curves {
+        out.push(',');
+        out.push_str(&c.algorithm);
+    }
+    out.push('\n');
+    let n_pts = curves[0].points.len();
+    for i in 0..n_pts {
+        out.push_str(&format!("{:.2}", curves[0].points[i].tau_pct));
+        for c in curves {
+            out.push_str(&format!(",{:.4}", c.points[i].fraction));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render curves as a compact ASCII chart (for terminal output).
+pub fn curves_ascii(curves: &[ProfileCurve], taus: &[f64]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{:<12}", "algorithm"));
+    for &t in taus {
+        out.push_str(&format!(" τ≤{:>4}%", t));
+    }
+    out.push('\n');
+    for c in curves {
+        out.push_str(&format!("{:<12}", c.algorithm));
+        for &t in taus {
+            out.push_str(&format!(" {:>6.1}%", c.at(t) * 100.0));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_fractions() {
+        // 4 instances: overheads 0 %, 0 %, 10 %, 50 %.
+        let costs = vec![(100, 100), (200, 200), (110, 100), (300, 200)];
+        let cur = performance_profile("X", &costs, &[0.0, 5.0, 10.0, 50.0, 100.0]);
+        let fr: Vec<f64> = cur.points.iter().map(|p| p.fraction).collect();
+        assert_eq!(fr, vec![0.5, 0.5, 0.75, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn at_is_right_continuous_step() {
+        let costs = vec![(110, 100)];
+        let cur = performance_profile("X", &costs, &[0.0, 10.0]);
+        assert_eq!(cur.at(0.0), 0.0);
+        assert_eq!(cur.at(9.9), 0.0); // sampled grid: no point between 0 and 10
+        assert_eq!(cur.at(10.0), 1.0);
+        assert_eq!(cur.at(99.0), 1.0);
+    }
+
+    #[test]
+    fn auc_orders_better_algorithms_higher() {
+        let exact = performance_profile("exact", &[(100, 100), (200, 200)], &[0.0, 10.0]);
+        let sloppy = performance_profile("sloppy", &[(150, 100), (300, 200)], &[0.0, 10.0]);
+        assert!(exact.auc(10.0) > sloppy.auc(10.0));
+        assert_eq!(exact.auc(10.0), 10.0); // 100 % everywhere
+    }
+
+    #[test]
+    fn csv_shape() {
+        let a = performance_profile("A", &[(100, 100)], &[0.0, 1.0]);
+        let b = performance_profile("B", &[(101, 100)], &[0.0, 1.0]);
+        let csv = curves_csv(&[a, b]);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("tau_pct,A,B"));
+        assert_eq!(lines.next(), Some("0.00,1.0000,0.0000"));
+        assert_eq!(lines.next(), Some("1.00,1.0000,1.0000"));
+    }
+
+    #[test]
+    fn paper_grid_is_sorted_and_dense_near_zero() {
+        let g = paper_tau_grid();
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(g[0], 0.0);
+        assert!(g.iter().filter(|&&t| t <= 1.0).count() >= 10);
+        assert_eq!(*g.last().unwrap(), 50.0);
+    }
+}

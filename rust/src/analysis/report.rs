@@ -1,0 +1,210 @@
+//! Full-evaluation driver: run every scheduler on every instance of a
+//! dataset for one U value, recording costs and wall-clock times — the data
+//! behind Figures 14–16 and the §5.3 timing table.
+
+use std::time::Instant;
+
+use crate::dataset::Dataset;
+use crate::model::{virtual_lb, Cost};
+use crate::sched::Scheduler;
+use crate::sim::evaluate;
+
+use super::profile::{curves_csv, performance_profile, paper_tau_grid, ProfileCurve};
+
+/// Result of one `(algorithm, instance)` run.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub algorithm: String,
+    pub tape: String,
+    pub cost: Cost,
+    pub virtual_lb: Cost,
+    pub n_detours: usize,
+    pub seconds: f64,
+}
+
+/// All records of an evaluation sweep at a fixed U.
+#[derive(Debug, Clone)]
+pub struct EvalTable {
+    pub u: u64,
+    pub records: Vec<EvalRecord>,
+    /// Algorithm names in run order (reference algorithm included).
+    pub algorithms: Vec<String>,
+}
+
+impl EvalTable {
+    /// Per-instance `(cost, reference cost)` pairs for `algo`, where the
+    /// reference is `reference_algo` (normally `"DP"`).
+    pub fn cost_pairs(&self, algo: &str, reference_algo: &str) -> Vec<(Cost, Cost)> {
+        let refc: std::collections::HashMap<&str, Cost> = self
+            .records
+            .iter()
+            .filter(|r| r.algorithm == reference_algo)
+            .map(|r| (r.tape.as_str(), r.cost))
+            .collect();
+        self.records
+            .iter()
+            .filter(|r| r.algorithm == algo)
+            .map(|r| (r.cost, refc[r.tape.as_str()]))
+            .collect()
+    }
+
+    /// Build the performance-profile curves of Figures 14–16 (all
+    /// algorithms except the reference, normalized by the reference).
+    pub fn profiles(&self, reference_algo: &str) -> Vec<ProfileCurve> {
+        let taus = paper_tau_grid();
+        self.algorithms
+            .iter()
+            .filter(|a| *a != reference_algo)
+            .map(|a| performance_profile(a, &self.cost_pairs(a, reference_algo), &taus))
+            .collect()
+    }
+
+    /// Median wall-clock seconds per algorithm (§5.3 timing table).
+    pub fn median_times(&self) -> Vec<(String, f64)> {
+        self.algorithms
+            .iter()
+            .map(|a| {
+                let mut ts: Vec<f64> = self
+                    .records
+                    .iter()
+                    .filter(|r| &r.algorithm == a)
+                    .map(|r| r.seconds)
+                    .collect();
+                ts.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                let med = if ts.is_empty() { 0.0 } else { ts[ts.len() / 2] };
+                (a.clone(), med)
+            })
+            .collect()
+    }
+
+    /// Raw records as CSV (matches the artifact's `results.csv` role).
+    pub fn records_csv(&self) -> String {
+        let mut out =
+            String::from("algorithm,tape,u,cost,virtual_lb,n_detours,seconds\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{:.6}\n",
+                r.algorithm, r.tape, self.u, r.cost, r.virtual_lb, r.n_detours, r.seconds
+            ));
+        }
+        out
+    }
+
+    /// Profile curves as CSV (one figure's worth of data).
+    pub fn profiles_csv(&self, reference_algo: &str) -> String {
+        curves_csv(&self.profiles(reference_algo))
+    }
+}
+
+/// Run `schedulers` over every tape of `ds` at penalty `u`.
+///
+/// `max_k` skips instances with more requested files than the cap (used to
+/// keep exact-DP sweeps tractable in CI; `None` = run everything).
+pub fn run_evaluation(
+    ds: &Dataset,
+    schedulers: &[Box<dyn Scheduler + Send + Sync>],
+    u: u64,
+    max_k: Option<usize>,
+) -> EvalTable {
+    let mut records = Vec::new();
+    let names: Vec<String> = schedulers.iter().map(|s| s.name()).collect();
+    for t in &ds.tapes {
+        if let Some(cap) = max_k {
+            if t.n_req() > cap {
+                continue;
+            }
+        }
+        let inst = t.instance(u).expect("dataset tapes are valid instances");
+        let lb = virtual_lb(&inst);
+        for s in schedulers {
+            let start = Instant::now();
+            let sched = s.schedule(&inst);
+            let seconds = start.elapsed().as_secs_f64();
+            let out = evaluate(&inst, &sched);
+            records.push(EvalRecord {
+                algorithm: s.name(),
+                tape: t.tape.name.clone(),
+                cost: out.cost,
+                virtual_lb: lb,
+                n_detours: sched.len(),
+                seconds,
+            });
+        }
+    }
+    EvalTable { u, records, algorithms: names }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{generate_dataset, GeneratorConfig};
+    use crate::sched::{Dp, Gs, NoDetour};
+
+    fn small_ds() -> Dataset {
+        // Shrink the marginals so DP runs fast in tests.
+        generate_dataset(&GeneratorConfig {
+            n_tapes: 6,
+            nf: (30, 60.0, 70.0, 120),
+            nreq: (5, 10.0, 12.0, 20),
+            n: (10, 30.0, 40.0, 80),
+            ..Default::default()
+        })
+    }
+
+    fn algos() -> Vec<Box<dyn Scheduler + Send + Sync>> {
+        vec![Box::new(NoDetour), Box::new(Gs), Box::new(Dp)]
+    }
+
+    #[test]
+    fn evaluation_produces_full_grid() {
+        let ds = small_ds();
+        let table = run_evaluation(&ds, &algos(), 0, None);
+        assert_eq!(table.records.len(), 3 * ds.tapes.len());
+        // DP is the reference: zero overhead everywhere.
+        for (c, r) in table.cost_pairs("DP", "DP") {
+            assert_eq!(c, r);
+        }
+        // Everyone ≥ DP ≥ VirtualLB.
+        for rec in &table.records {
+            assert!(rec.cost >= rec.virtual_lb);
+        }
+        for algo in ["NoDetour", "GS"] {
+            for (c, r) in table.cost_pairs(algo, "DP") {
+                assert!(c >= r, "{algo}: {c} < {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn profiles_are_monotone_and_dp_reference_excluded() {
+        let ds = small_ds();
+        let table = run_evaluation(&ds, &algos(), 1000, None);
+        let curves = table.profiles("DP");
+        assert_eq!(curves.len(), 2);
+        for c in &curves {
+            for w in c.points.windows(2) {
+                assert!(w[0].fraction <= w[1].fraction, "{}", c.algorithm);
+            }
+            let last = c.points.last().unwrap();
+            assert!(last.fraction <= 1.0);
+        }
+    }
+
+    #[test]
+    fn max_k_filters_instances() {
+        let ds = small_ds();
+        let all = run_evaluation(&ds, &algos(), 0, None);
+        let few = run_evaluation(&ds, &algos(), 0, Some(1));
+        assert!(few.records.len() < all.records.len());
+    }
+
+    #[test]
+    fn csv_outputs() {
+        let ds = small_ds();
+        let table = run_evaluation(&ds, &algos(), 0, None);
+        assert!(table.records_csv().starts_with("algorithm,tape,"));
+        assert!(table.profiles_csv("DP").starts_with("tau_pct,"));
+        let times = table.median_times();
+        assert_eq!(times.len(), 3);
+    }
+}

@@ -1,0 +1,132 @@
+//! Head-trajectory visualization — the Rust equivalent of the paper
+//! artifact's `draw.py`: renders the `(time, position)` polyline of a
+//! schedule as an SVG, with the requested files drawn as vertical bands
+//! and service instants marked.
+
+use crate::model::Instance;
+use crate::sched::Detour;
+use crate::sim::{evaluate, trajectory};
+
+/// Render the trajectory of `detours` on `inst` as a standalone SVG.
+///
+/// Axes: x = position on tape (left → right), y = time (downwards), so the
+/// head "descends" through the schedule like in the paper's Figures 1–2.
+pub fn trajectory_svg(inst: &Instance, detours: &[Detour], title: &str) -> String {
+    const W: f64 = 900.0;
+    const H: f64 = 600.0;
+    const MX: f64 = 60.0; // margins
+    const MY: f64 = 50.0;
+
+    let segs = trajectory::polyline(inst, detours);
+    let out = evaluate(inst, detours);
+    let t_max = segs.last().map(|s| s.t1).unwrap_or(1).max(1) as f64;
+    let m = inst.tape_len().max(1) as f64;
+
+    let sx = |pos: f64| MX + pos / m * (W - 2.0 * MX);
+    let sy = |t: f64| MY + t / t_max * (H - 2.0 * MY);
+
+    let mut svg = String::new();
+    svg.push_str(&format!(
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" viewBox="0 0 {W} {H}">"#
+    ));
+    svg.push('\n');
+    svg.push_str(&format!(
+        r#"<rect width="{W}" height="{H}" fill="white"/>
+<text x="{}" y="24" font-family="sans-serif" font-size="16" text-anchor="middle">{}</text>
+<text x="{}" y="{}" font-family="sans-serif" font-size="12" text-anchor="middle">position on tape →</text>
+<text x="16" y="{}" font-family="sans-serif" font-size="12" transform="rotate(-90 16 {})" text-anchor="middle">← time</text>
+"#,
+        W / 2.0,
+        xml_escape(title),
+        W / 2.0,
+        H - 12.0,
+        H / 2.0,
+        H / 2.0,
+    ));
+
+    // Requested files as vertical bands, labeled with multiplicity.
+    for f in 0..inst.k() {
+        let x0 = sx(inst.l(f) as f64);
+        let x1 = sx(inst.r(f) as f64);
+        svg.push_str(&format!(
+            r##"<rect x="{:.1}" y="{MY}" width="{:.2}" height="{:.1}" fill="#9ecae1" fill-opacity="0.35"/>
+<text x="{:.1}" y="{:.1}" font-family="sans-serif" font-size="10" text-anchor="middle">f{} ×{}</text>
+"##,
+            x0,
+            (x1 - x0).max(1.0),
+            H - 2.0 * MY,
+            (x0 + x1) / 2.0,
+            MY - 6.0,
+            f,
+            inst.x(f)
+        ));
+    }
+
+    // The trajectory polyline (U-turn dwells appear as vertical steps).
+    let mut path = String::new();
+    for (i, s) in segs.iter().enumerate() {
+        if i == 0 {
+            path.push_str(&format!("M {:.1} {:.1} ", sx(s.from as f64), sy(s.t0 as f64)));
+        }
+        path.push_str(&format!("L {:.1} {:.1} ", sx(s.to as f64), sy(s.t1 as f64)));
+    }
+    svg.push_str(&format!(
+        r##"<path d="{path}" fill="none" stroke="#d62728" stroke-width="1.8"/>
+"##
+    ));
+
+    // Service instants: a dot where each file's right end is passed.
+    for f in 0..inst.k() {
+        svg.push_str(&format!(
+            r##"<circle cx="{:.1}" cy="{:.1}" r="3.5" fill="#2ca02c"><title>f{} served at t={}</title></circle>
+"##,
+            sx(inst.r(f) as f64),
+            sy(out.service[f] as f64),
+            f,
+            out.service[f]
+        ));
+    }
+
+    svg.push_str("</svg>\n");
+    svg
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ReqFile;
+    use crate::sched::{Dp, Scheduler};
+
+    fn inst() -> Instance {
+        Instance::new(
+            100,
+            3,
+            vec![ReqFile { l: 10, r: 20, x: 2 }, ReqFile { l: 60, r: 70, x: 5 }],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn svg_is_well_formed_and_complete() {
+        let i = inst();
+        let sched = Dp.schedule(&i);
+        let svg = trajectory_svg(&i, &sched, "test <schedule>");
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.trim_end().ends_with("</svg>"));
+        assert!(svg.contains("&lt;schedule&gt;"), "title must be escaped");
+        // One band + one service dot per requested file.
+        assert_eq!(svg.matches("fill-opacity").count(), i.k());
+        assert_eq!(svg.matches("<circle").count(), i.k());
+        assert_eq!(svg.matches("<path").count(), 1);
+    }
+
+    #[test]
+    fn empty_schedule_still_renders() {
+        let svg = trajectory_svg(&inst(), &[], "no detours");
+        assert!(svg.contains("<path"));
+    }
+}

@@ -1,0 +1,237 @@
+//! In-crate micro/macro-benchmark framework.
+//!
+//! The offline crate registry carries no criterion, so `cargo bench`
+//! binaries (declared with `harness = false`) use this framework instead:
+//! warmup, a fixed-duration measurement loop, robust summary statistics
+//! (median, p10/p90), and text + CSV reporting.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile_sorted;
+
+/// Configuration for one benchmark run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Warmup duration before measuring.
+    pub warmup: Duration,
+    /// Target measurement duration.
+    pub measure: Duration,
+    /// Hard cap on iterations (for very slow benchmarks).
+    pub max_iters: u32,
+    /// Minimum number of measured iterations.
+    pub min_iters: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for slow end-to-end benchmarks.
+    pub fn quick() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(400),
+            max_iters: 200,
+            min_iters: 3,
+        }
+    }
+}
+
+/// Summary of one benchmark: all times in seconds per iteration.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub median: f64,
+    pub mean: f64,
+    pub p10: f64,
+    pub p90: f64,
+}
+
+impl BenchResult {
+    /// Human format with auto-scaled units.
+    pub fn pretty(&self) -> String {
+        format!(
+            "{:<44} {:>12}  (p10 {:>10}, p90 {:>10}, {} iters)",
+            self.name,
+            fmt_seconds(self.median),
+            fmt_seconds(self.p10),
+            fmt_seconds(self.p90),
+            self.iters
+        )
+    }
+
+    /// CSV row: `name,iters,median_s,mean_s,p10_s,p90_s`.
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.9},{:.9},{:.9},{:.9}",
+            self.name, self.iters, self.median, self.mean, self.p10, self.p90
+        )
+    }
+}
+
+/// Format seconds with an auto-scaled unit.
+pub fn fmt_seconds(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark a closure. The closure's return value is passed through
+/// [`std::hint::black_box`] to keep the optimizer honest.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup.
+    let wstart = Instant::now();
+    while wstart.elapsed() < cfg.warmup {
+        std::hint::black_box(f());
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let mstart = Instant::now();
+    while (mstart.elapsed() < cfg.measure && samples.len() < cfg.max_iters as usize)
+        || samples.len() < cfg.min_iters as usize
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len() as u32,
+        median: percentile_sorted(&samples, 50.0),
+        mean: samples.iter().sum::<f64>() / samples.len() as f64,
+        p10: percentile_sorted(&samples, 10.0),
+        p90: percentile_sorted(&samples, 90.0),
+    }
+}
+
+/// A suite accumulates results and prints a report at the end.
+#[derive(Debug, Default)]
+pub struct Suite {
+    pub results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new() -> Suite {
+        Suite::default()
+    }
+
+    /// Run and record one benchmark, echoing the result line immediately.
+    pub fn run<T>(&mut self, name: &str, cfg: &BenchConfig, f: impl FnMut() -> T) {
+        let r = bench(name, cfg, f);
+        println!("{}", r.pretty());
+        self.results.push(r);
+    }
+
+    /// Record an externally produced result (e.g. a one-shot measurement).
+    pub fn record(&mut self, r: BenchResult) {
+        println!("{}", r.pretty());
+        self.results.push(r);
+    }
+
+    /// Full CSV of all results.
+    pub fn csv(&self) -> String {
+        let mut out = String::from("name,iters,median_s,mean_s,p10_s,p90_s\n");
+        for r in &self.results {
+            out.push_str(&r.csv_row());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV next to the target dir (best effort; benches also
+    /// print everything to stdout).
+    pub fn write_csv(&self, path: &str) {
+        if let Err(e) = std::fs::write(path, self.csv()) {
+            eprintln!("warning: could not write {path}: {e}");
+        }
+    }
+}
+
+/// Measure a single execution (for expensive runs where iteration is
+/// impossible); produces a 1-iteration [`BenchResult`].
+pub fn once<T>(name: &str, f: impl FnOnce() -> T) -> (T, BenchResult) {
+    let t0 = Instant::now();
+    let v = std::hint::black_box(f());
+    let s = t0.elapsed().as_secs_f64();
+    (
+        v,
+        BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            median: s,
+            mean: s,
+            p10: s,
+            p90: s,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            max_iters: 1_000,
+            min_iters: 3,
+        }
+    }
+
+    #[test]
+    fn bench_produces_ordered_percentiles() {
+        let r = bench("noop", &fast_cfg(), || 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.p10 <= r.median && r.median <= r.p90);
+        assert!(r.median >= 0.0);
+    }
+
+    #[test]
+    fn min_iters_enforced_for_slow_bodies() {
+        let cfg = BenchConfig {
+            warmup: Duration::ZERO,
+            measure: Duration::from_millis(1),
+            max_iters: 100,
+            min_iters: 4,
+        };
+        let r = bench("sleepy", &cfg, || std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.iters >= 4);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_seconds(2.5), "2.500 s");
+        assert_eq!(fmt_seconds(0.0025), "2.500 ms");
+        assert_eq!(fmt_seconds(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_seconds(2.5e-8), "25.0 ns");
+    }
+
+    #[test]
+    fn suite_csv() {
+        let mut s = Suite::new();
+        s.run("a", &fast_cfg(), || 42);
+        let (v, r) = once("b", || 7);
+        assert_eq!(v, 7);
+        s.record(r);
+        let csv = s.csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(2).unwrap().starts_with("b,1,"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Minimal argument parser (the offline registry has no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with typed accessors and an unknown-flag check.
+
+use std::collections::HashMap;
+
+/// Parsed command line: positionals + flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments (exclusive of argv[0] and the subcommand).
+    pub fn parse(raw: &[String]) -> Args {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.insert(k, v);
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    args.insert(flag, &raw[i + 1]);
+                    i += 1;
+                } else {
+                    args.insert(flag, "true");
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    fn insert(&mut self, k: &str, v: &str) {
+        self.flags.insert(k.to_string(), v.to_string());
+        self.seen.push(k.to_string());
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed flag with default; exits with a message on a parse failure.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: invalid value for --{key}: {v}");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Boolean flag (`--x` or `--x=true`).
+    pub fn has(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Abort on flags not in `known` (catches typos).
+    pub fn reject_unknown(&self, known: &[&str]) {
+        for k in &self.seen {
+            if !known.contains(&k.as_str()) {
+                eprintln!("error: unknown flag --{k} (known: {})", known.join(", "));
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["pos1", "--x", "5", "--flag", "--y=hello", "pos2"]);
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+        assert_eq!(a.get("x"), Some("5"));
+        assert_eq!(a.get_parsed_or("x", 0u64), 5);
+        assert!(a.has("flag"));
+        assert_eq!(a.get_or("y", ""), "hello");
+        assert_eq!(a.get_or("absent", "dflt"), "dflt");
+        assert_eq!(a.get_parsed_or("absent", 7i32), 7);
+    }
+
+    #[test]
+    fn boolean_styles() {
+        let a = parse(&["--a", "--b=true", "--c=1", "--d=no"]);
+        assert!(a.has("a") && a.has("b") && a.has("c"));
+        assert!(!a.has("d") && !a.has("zzz"));
+    }
+}

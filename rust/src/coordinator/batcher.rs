@@ -1,0 +1,237 @@
+//! Per-tape request batching.
+//!
+//! Pure, deterministic, lock-free data structure (the [`super::service`]
+//! layer wraps it in a mutex): requests accumulate per tape; a batch closes
+//! when its window elapses or it reaches the size cap. Tapes are dispatched
+//! FIFO by batch-open time, which keeps the router fair across tapes.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// A batch is dispatchable once this much time passed since its first
+    /// request (lets more requests for the same tape coalesce).
+    pub window: Duration,
+    /// … or as soon as it holds this many requests.
+    pub max_batch: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { window: Duration::from_millis(100), max_batch: 4096 }
+    }
+}
+
+/// A closed batch ready for dispatch: request ids per file index.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tape: String,
+    /// `(file index on tape, request ids)` — multiplicity = `ids.len()`.
+    pub by_file: Vec<(usize, Vec<u64>)>,
+    /// When the batch was opened (its first request's enqueue time).
+    pub opened_at: Instant,
+}
+
+impl Batch {
+    /// Total number of user requests in the batch.
+    pub fn n_requests(&self) -> usize {
+        self.by_file.iter().map(|(_, ids)| ids.len()).sum()
+    }
+
+    /// `(file index, multiplicity)` pairs, the [`crate::model::Instance`]
+    /// input shape.
+    pub fn multiplicities(&self) -> Vec<(usize, u64)> {
+        self.by_file.iter().map(|(f, ids)| (*f, ids.len() as u64)).collect()
+    }
+}
+
+#[derive(Debug)]
+struct OpenBatch {
+    by_file: HashMap<usize, Vec<u64>>,
+    n: usize,
+    opened_at: Instant,
+}
+
+/// The batcher: open batches per tape + FIFO of tapes by open time, plus a
+/// queue of batches already closed by the size cap.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    open: HashMap<String, OpenBatch>,
+    fifo: VecDeque<String>,
+    closed: VecDeque<Batch>,
+    enqueued: u64,
+    dispatched: u64,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher {
+            cfg,
+            open: HashMap::new(),
+            fifo: VecDeque::new(),
+            closed: VecDeque::new(),
+            enqueued: 0,
+            dispatched: 0,
+        }
+    }
+
+    fn seal(tape: String, b: OpenBatch) -> Batch {
+        let mut by_file: Vec<(usize, Vec<u64>)> = b.by_file.into_iter().collect();
+        by_file.sort();
+        Batch { tape, by_file, opened_at: b.opened_at }
+    }
+
+    /// Add one request. When the tape's open batch reaches the size cap it
+    /// is *closed* immediately (a later request opens a fresh batch), so no
+    /// dispatched batch ever exceeds `max_batch`. Returns `true` if a batch
+    /// became dispatchable.
+    pub fn push(&mut self, tape: &str, file_index: usize, request_id: u64, now: Instant) -> bool {
+        self.enqueued += 1;
+        let entry = self.open.entry(tape.to_string()).or_insert_with(|| {
+            self.fifo.push_back(tape.to_string());
+            OpenBatch { by_file: HashMap::new(), n: 0, opened_at: now }
+        });
+        entry.by_file.entry(file_index).or_default().push(request_id);
+        entry.n += 1;
+        if entry.n >= self.cfg.max_batch {
+            let b = self.open.remove(tape).unwrap();
+            self.fifo.retain(|t| t != tape);
+            self.closed.push_back(Self::seal(tape.to_string(), b));
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Pop the next dispatchable batch: a cap-closed batch first, otherwise
+    /// the oldest open batch whose window has expired. `force` dispatches
+    /// the oldest batch regardless of window (used at drain/shutdown or
+    /// when drives are idle — an idle drive should never wait on a timer).
+    pub fn pop_ready(&mut self, now: Instant, force: bool) -> Option<Batch> {
+        if let Some(b) = self.closed.pop_front() {
+            self.dispatched += b.n_requests() as u64;
+            return Some(b);
+        }
+        let pos = self.fifo.iter().position(|t| {
+            let b = &self.open[t];
+            force || now.duration_since(b.opened_at) >= self.cfg.window
+        })?;
+        let tape = self.fifo.remove(pos).unwrap();
+        let b = self.open.remove(&tape).unwrap();
+        self.dispatched += b.n as u64;
+        Some(Self::seal(tape, b))
+    }
+
+    /// Number of requests currently waiting in open batches.
+    pub fn pending(&self) -> u64 {
+        self.enqueued - self.dispatched
+    }
+
+    /// Number of open (undispatched) tape batches.
+    pub fn open_tapes(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Deadline of the oldest open batch, if any (service loop wake-up).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.fifo.front().map(|t| self.open[t].opened_at + self.cfg.window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(window_ms: u64, max_batch: usize) -> BatcherConfig {
+        BatcherConfig { window: Duration::from_millis(window_ms), max_batch }
+    }
+
+    #[test]
+    fn batches_by_tape_and_respects_window() {
+        let mut b = Batcher::new(cfg(50, 100));
+        let t0 = Instant::now();
+        b.push("A", 3, 1, t0);
+        b.push("A", 3, 2, t0);
+        b.push("B", 7, 3, t0);
+        assert_eq!(b.open_tapes(), 2);
+        assert_eq!(b.pending(), 3);
+        // Window not expired: nothing ready.
+        assert!(b.pop_ready(t0, false).is_none());
+        // After the window, FIFO order: A first.
+        let later = t0 + Duration::from_millis(60);
+        let batch = b.pop_ready(later, false).unwrap();
+        assert_eq!(batch.tape, "A");
+        assert_eq!(batch.by_file, vec![(3, vec![1, 2])]);
+        assert_eq!(batch.n_requests(), 2);
+        assert_eq!(batch.multiplicities(), vec![(3, 2)]);
+        let batch = b.pop_ready(later, false).unwrap();
+        assert_eq!(batch.tape, "B");
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn size_cap_triggers_immediate_dispatch() {
+        let mut b = Batcher::new(cfg(1_000_000, 3));
+        let t0 = Instant::now();
+        assert!(!b.push("A", 0, 1, t0));
+        assert!(!b.push("A", 1, 2, t0));
+        assert!(b.push("A", 0, 3, t0), "cap reached");
+        let batch = b.pop_ready(t0, false).expect("cap makes it ready");
+        assert_eq!(batch.n_requests(), 3);
+    }
+
+    #[test]
+    fn force_dispatches_oldest_regardless_of_window() {
+        let mut b = Batcher::new(cfg(1_000_000, 1_000_000));
+        let t0 = Instant::now();
+        b.push("A", 0, 1, t0);
+        assert!(b.pop_ready(t0, false).is_none());
+        let batch = b.pop_ready(t0, true).unwrap();
+        assert_eq!(batch.tape, "A");
+    }
+
+    #[test]
+    fn multiplicities_sorted_by_file() {
+        let mut b = Batcher::new(cfg(0, 100));
+        let t0 = Instant::now();
+        b.push("A", 9, 1, t0);
+        b.push("A", 2, 2, t0);
+        b.push("A", 9, 3, t0);
+        let batch = b.pop_ready(t0, false).unwrap();
+        assert_eq!(batch.multiplicities(), vec![(2, 1), (9, 2)]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = Batcher::new(cfg(100, 10));
+        let t0 = Instant::now();
+        assert!(b.next_deadline().is_none());
+        b.push("A", 0, 1, t0);
+        b.push("B", 0, 2, t0 + Duration::from_millis(10));
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated() {
+        let mut b = Batcher::new(cfg(0, 7));
+        let t0 = Instant::now();
+        let mut sent: Vec<u64> = Vec::new();
+        for id in 0..1_000u64 {
+            let tape = format!("T{}", id % 13);
+            b.push(&tape, (id % 5) as usize, id, t0);
+            sent.push(id);
+        }
+        let mut got: Vec<u64> = Vec::new();
+        while let Some(batch) = b.pop_ready(t0, true) {
+            for (_, ids) in batch.by_file {
+                got.extend(ids);
+            }
+        }
+        got.sort();
+        assert_eq!(got, sent);
+        assert_eq!(b.pending(), 0);
+    }
+}

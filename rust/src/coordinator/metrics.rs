@@ -1,0 +1,138 @@
+//! Coordinator metrics: lock-free counters + a sampled latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metrics handle (cheaply clonable via `Arc` at the service layer).
+#[derive(Debug, Default)]
+pub struct SharedMetrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    /// Sum of end-to-end request latencies, in µs.
+    latency_sum_us: AtomicU64,
+    /// Sum of in-tape service times, in µs.
+    service_sum_us: AtomicU64,
+    /// Scheduler compute time, in µs.
+    sched_sum_us: AtomicU64,
+    /// Reservoir of end-to-end latencies (seconds) for percentiles.
+    reservoir: Mutex<Vec<f64>>,
+}
+
+/// Point-in-time snapshot of all metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_latency_s: f64,
+    pub mean_service_s: f64,
+    pub mean_sched_s_per_batch: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+}
+
+const RESERVOIR_CAP: usize = 65_536;
+
+impl SharedMetrics {
+    pub fn on_submit(&self, n: u64) {
+        self.submitted.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record a dispatched batch: scheduler compute seconds.
+    pub fn on_batch(&self, sched_s: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.sched_sum_us
+            .fetch_add((sched_s * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Record one served request: end-to-end latency + in-tape service (s).
+    pub fn on_complete(&self, latency_s: f64, service_s: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us
+            .fetch_add((latency_s * 1e6) as u64, Ordering::Relaxed);
+        self.service_sum_us
+            .fetch_add((service_s * 1e6) as u64, Ordering::Relaxed);
+        let mut r = self.reservoir.lock().unwrap();
+        if r.len() < RESERVOIR_CAP {
+            r.push(latency_s);
+        } else {
+            // Cheap replacement keyed on the counter: uniform-ish reservoir.
+            let i = (self.completed.load(Ordering::Relaxed) as usize)
+                .wrapping_mul(0x9E3779B9)
+                % RESERVOIR_CAP;
+            r[i] = latency_s;
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let mut lat: Vec<f64> = self.reservoir.lock().unwrap().clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                0.0
+            } else {
+                crate::util::stats::percentile_sorted(&lat, p)
+            }
+        };
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            batches,
+            mean_latency_s: self.latency_sum_us.load(Ordering::Relaxed) as f64
+                / 1e6
+                / completed.max(1) as f64,
+            mean_service_s: self.service_sum_us.load(Ordering::Relaxed) as f64
+                / 1e6
+                / completed.max(1) as f64,
+            mean_sched_s_per_batch: self.sched_sum_us.load(Ordering::Relaxed) as f64
+                / 1e6
+                / batches.max(1) as f64,
+            p50_latency_s: pct(50.0),
+            p99_latency_s: pct(99.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_means() {
+        let m = SharedMetrics::default();
+        m.on_submit(3);
+        m.on_batch(0.5);
+        m.on_complete(2.0, 1.0);
+        m.on_complete(4.0, 3.0);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_latency_s - 3.0).abs() < 1e-3);
+        assert!((s.mean_service_s - 2.0).abs() < 1e-3);
+        assert!((s.mean_sched_s_per_batch - 0.5).abs() < 1e-3);
+        assert!(s.p50_latency_s >= 2.0 && s.p99_latency_s <= 4.0 + 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = SharedMetrics::default().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.mean_latency_s, 0.0);
+        assert_eq!(s.p99_latency_s, 0.0);
+    }
+
+    #[test]
+    fn reservoir_survives_many_samples() {
+        let m = SharedMetrics::default();
+        for i in 0..(RESERVOIR_CAP + 1000) {
+            m.on_complete(i as f64 * 1e-3, 0.0);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed as usize, RESERVOIR_CAP + 1000);
+        assert!(s.p50_latency_s > 0.0);
+    }
+}

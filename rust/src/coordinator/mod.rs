@@ -1,0 +1,33 @@
+//! The mass-storage request coordinator — the serving layer a datacenter
+//! deployment would put in front of the tape library (the role HPSS/DMF
+//! play in §1 of the paper).
+//!
+//! Architecture (vLLM-router-like, adapted to tapes):
+//!
+//! ```text
+//!   clients ──submit──▶ [Router / per-tape Batcher] ──jobs──▶ worker pool
+//!                            │  (batch window, size cap)       (1 thread
+//!                            ▼                                  = 1 drive)
+//!                        [Metrics]  ◀──────── completions ────────┘
+//! ```
+//!
+//! - Incoming read requests are routed to a **per-tape batch**: tapes are
+//!   the unit of mounting, so batching by tape is what converts random
+//!   arrivals into LTSP instances worth optimizing.
+//! - A batch is dispatched when its window expires or it hits the size cap;
+//!   the dispatched job carries the LTSP instance for the batch.
+//! - Each worker owns one (virtual) drive: it computes the schedule with
+//!   the configured policy ([`crate::sched`]), obtains exact service times
+//!   from the ground-truth simulator, and reports per-request latencies.
+//!
+//! Python never appears anywhere on this path; when the XLA engine is
+//! enabled the worker calls the AOT-compiled artifact through
+//! [`crate::runtime`], still in-process.
+
+mod batcher;
+mod metrics;
+mod service;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::{MetricsSnapshot, SharedMetrics};
+pub use service::{Completion, Coordinator, CoordinatorConfig, ReadRequest};

@@ -1,0 +1,377 @@
+//! The coordinator service: router + dispatcher + drive-worker pool.
+//!
+//! Built on `std::thread` + channels (the offline registry has no tokio;
+//! the work here is CPU-bound scheduling, for which OS threads are the
+//! right tool anyway). One worker thread models one tape drive: batches
+//! for distinct tapes run concurrently up to the drive count, batches for
+//! the same tape serialize through the batcher (one open batch per tape).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::metrics::{MetricsSnapshot, SharedMetrics};
+use crate::model::{Instance, Tape};
+use crate::sched::Scheduler;
+use crate::sim::{evaluate, DriveParams};
+
+/// A client read request for one file on one tape.
+#[derive(Debug, Clone)]
+pub struct ReadRequest {
+    pub id: u64,
+    pub tape: String,
+    /// 0-based index of the file on the tape.
+    pub file_index: usize,
+}
+
+/// A served request with its measured latencies.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub request_id: u64,
+    pub tape: String,
+    /// End-to-end: submit → served (queueing + mount + in-tape), seconds.
+    pub latency_s: f64,
+    /// In-tape service time component, seconds (the paper's objective).
+    pub service_s: f64,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Number of drive workers (48 in the IN2P3 library).
+    pub n_drives: usize,
+    pub batcher: BatcherConfig,
+    pub drive: DriveParams,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            n_drives: 4,
+            batcher: BatcherConfig::default(),
+            drive: DriveParams::default(),
+        }
+    }
+}
+
+struct Shared {
+    batcher: Mutex<Batcher>,
+    wakeup: Condvar,
+    submit_times: Mutex<HashMap<u64, Instant>>,
+    catalog: Mutex<HashMap<String, Tape>>,
+    metrics: SharedMetrics,
+    completions: Mutex<Vec<Completion>>,
+    stopping: AtomicBool,
+}
+
+/// The running service. Create with [`Coordinator::start`], feed with
+/// [`Coordinator::submit`], stop with [`Coordinator::finish`].
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    shared: Arc<Shared>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+struct Job {
+    batch: Batch,
+    instance: Instance,
+}
+
+impl Coordinator {
+    /// Start the service over a tape catalog with the given policy.
+    pub fn start(
+        cfg: CoordinatorConfig,
+        catalog: impl IntoIterator<Item = Tape>,
+        policy: Arc<dyn Scheduler + Send + Sync>,
+    ) -> Coordinator {
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::new(cfg.batcher)),
+            wakeup: Condvar::new(),
+            submit_times: Mutex::new(HashMap::new()),
+            catalog: Mutex::new(
+                catalog.into_iter().map(|t| (t.name.clone(), t)).collect(),
+            ),
+            metrics: SharedMetrics::default(),
+            completions: Mutex::new(Vec::new()),
+            stopping: AtomicBool::new(false),
+        });
+
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+
+        let workers = (0..cfg.n_drives)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                let rx = Arc::clone(&rx);
+                let drive = cfg.drive;
+                let policy = Arc::clone(&policy);
+                std::thread::spawn(move || worker_loop(shared, rx, drive, policy))
+            })
+            .collect();
+
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            let drive = cfg.drive;
+            std::thread::spawn(move || dispatcher_loop(shared, tx, drive))
+        };
+
+        Coordinator { cfg, shared, dispatcher: Some(dispatcher), workers }
+    }
+
+    /// Submit one read request. Returns `false` (dropping the request) if
+    /// the tape is unknown or the service is stopping.
+    pub fn submit(&self, req: ReadRequest) -> bool {
+        if self.shared.stopping.load(Ordering::SeqCst) {
+            return false;
+        }
+        {
+            let catalog = self.shared.catalog.lock().unwrap();
+            match catalog.get(&req.tape) {
+                Some(t) if req.file_index < t.n_files() => {}
+                _ => return false,
+            }
+        }
+        let now = Instant::now();
+        self.shared.submit_times.lock().unwrap().insert(req.id, now);
+        self.shared.metrics.on_submit(1);
+        let cap_hit = self
+            .shared
+            .batcher
+            .lock()
+            .unwrap()
+            .push(&req.tape, req.file_index, req.id, now);
+        if cap_hit {
+            self.shared.wakeup.notify_all();
+        }
+        true
+    }
+
+    /// Register a tape (or replace its catalog entry) while running.
+    pub fn register_tape(&self, tape: Tape) {
+        self.shared.catalog.lock().unwrap().insert(tape.name.clone(), tape);
+    }
+
+    /// Current metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Number of drive workers configured.
+    pub fn n_drives(&self) -> usize {
+        self.cfg.n_drives
+    }
+
+    /// Drain: stop accepting, flush all open batches, join every thread,
+    /// return all completions + the final metrics snapshot.
+    pub fn finish(mut self) -> (Vec<Completion>, MetricsSnapshot) {
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        self.shared.wakeup.notify_all();
+        if let Some(d) = self.dispatcher.take() {
+            d.join().expect("dispatcher panicked");
+        }
+        for w in self.workers.drain(..) {
+            w.join().expect("worker panicked");
+        }
+        let completions = std::mem::take(&mut *self.shared.completions.lock().unwrap());
+        (completions, self.shared.metrics.snapshot())
+    }
+}
+
+fn dispatcher_loop(shared: Arc<Shared>, tx: Sender<Job>, drive: DriveParams) {
+    loop {
+        let stopping = shared.stopping.load(Ordering::SeqCst);
+        let batch = {
+            let mut b = shared.batcher.lock().unwrap();
+            match b.pop_ready(Instant::now(), stopping) {
+                Some(batch) => Some(batch),
+                None if stopping && b.pending() == 0 => break,
+                None => {
+                    // Sleep until the oldest batch's window or a notify.
+                    let deadline = b.next_deadline();
+                    let wait = deadline
+                        .map(|d| d.saturating_duration_since(Instant::now()))
+                        .unwrap_or(std::time::Duration::from_millis(20));
+                    let (_b, _timeout) = shared
+                        .wakeup
+                        .wait_timeout(b, wait.min(std::time::Duration::from_millis(50)))
+                        .unwrap();
+                    None
+                }
+            }
+        };
+        if let Some(batch) = batch {
+            let instance = {
+                let catalog = shared.catalog.lock().unwrap();
+                let tape = &catalog[&batch.tape];
+                Instance::from_tape(tape, &batch.multiplicities(), drive.uturn_bytes())
+                    .expect("batch requests validated at submit")
+            };
+            if tx.send(Job { batch, instance }).is_err() {
+                break; // workers gone
+            }
+        }
+    }
+    drop(tx); // closes the channel; workers drain and exit
+}
+
+fn worker_loop(
+    shared: Arc<Shared>,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    drive: DriveParams,
+    policy: Arc<dyn Scheduler + Send + Sync>,
+) {
+    loop {
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => break, // dispatcher closed the channel
+        };
+        let policy_t0 = Instant::now();
+        let schedule = policy.schedule(&job.instance);
+        let sched_s = policy_t0.elapsed().as_secs_f64();
+        shared.metrics.on_batch(sched_s);
+
+        let out = evaluate(&job.instance, &schedule);
+        let done_wall = Instant::now();
+
+        // Map per-file service times back to request ids. The instance's
+        // files are the batch's files in sorted order (from_tape sorts and
+        // merges, and the batch is already sorted+deduped by file).
+        let mut submit = shared.submit_times.lock().unwrap();
+        let mut completions = shared.completions.lock().unwrap();
+        for (i, (_file, ids)) in job.batch.by_file.iter().enumerate() {
+            let service_s = drive.to_seconds(out.service[i]) + drive.mount_s;
+            for &id in ids {
+                let t_submit = submit.remove(&id).unwrap_or(job.batch.opened_at);
+                let queue_s = done_wall.duration_since(t_submit).as_secs_f64();
+                let latency_s = queue_s + service_s;
+                shared.metrics.on_complete(latency_s, service_s);
+                completions.push(Completion {
+                    request_id: id,
+                    tape: job.batch.tape.clone(),
+                    latency_s,
+                    service_s,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Gs, SimpleDp};
+    use std::time::Duration;
+
+    fn catalog() -> Vec<Tape> {
+        vec![
+            Tape::from_sizes("TAPE001", &[1_000; 50]),
+            Tape::from_sizes("TAPE002", &[500; 100]),
+        ]
+    }
+
+    fn cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            n_drives: 3,
+            batcher: BatcherConfig {
+                window: Duration::from_millis(5),
+                max_batch: 64,
+            },
+            drive: DriveParams {
+                mount_s: 1.0,
+                unmount_s: 0.5,
+                bytes_per_s: 1e6,
+                uturn_s: 0.001,
+            },
+        }
+    }
+
+    #[test]
+    fn serves_every_submitted_request_exactly_once() {
+        let c = Coordinator::start(cfg(), catalog(), Arc::new(SimpleDp));
+        let mut ids = Vec::new();
+        for i in 0..500u64 {
+            let tape = if i % 3 == 0 { "TAPE001" } else { "TAPE002" };
+            let req = ReadRequest {
+                id: i,
+                tape: tape.into(),
+                file_index: (i % 50) as usize,
+            };
+            assert!(c.submit(req));
+            ids.push(i);
+        }
+        let (completions, m) = c.finish();
+        assert_eq!(m.submitted, 500);
+        assert_eq!(m.completed, 500);
+        let mut got: Vec<u64> = completions.iter().map(|c| c.request_id).collect();
+        got.sort();
+        assert_eq!(got, ids);
+        assert!(m.mean_latency_s >= m.mean_service_s * 0.99);
+        assert!(m.batches >= 2, "both tapes must have been dispatched");
+    }
+
+    #[test]
+    fn rejects_unknown_tape_and_bad_index() {
+        let c = Coordinator::start(cfg(), catalog(), Arc::new(Gs));
+        assert!(!c.submit(ReadRequest { id: 1, tape: "NOPE".into(), file_index: 0 }));
+        assert!(!c.submit(ReadRequest {
+            id: 2,
+            tape: "TAPE001".into(),
+            file_index: 9_999
+        }));
+        let (completions, m) = c.finish();
+        assert!(completions.is_empty());
+        assert_eq!(m.submitted, 0);
+    }
+
+    #[test]
+    fn register_tape_makes_it_routable() {
+        let c = Coordinator::start(cfg(), catalog(), Arc::new(Gs));
+        assert!(!c.submit(ReadRequest { id: 1, tape: "NEW".into(), file_index: 0 }));
+        c.register_tape(Tape::from_sizes("NEW", &[100, 100]));
+        assert!(c.submit(ReadRequest { id: 2, tape: "NEW".into(), file_index: 1 }));
+        let (completions, _) = c.finish();
+        assert_eq!(completions.len(), 1);
+        assert_eq!(completions[0].request_id, 2);
+        assert_eq!(completions[0].tape, "NEW");
+    }
+
+    #[test]
+    fn duplicate_file_requests_batch_into_multiplicity() {
+        let c = Coordinator::start(cfg(), catalog(), Arc::new(SimpleDp));
+        for i in 0..10u64 {
+            assert!(c.submit(ReadRequest {
+                id: i,
+                tape: "TAPE001".into(),
+                file_index: 7,
+            }));
+        }
+        let (completions, m) = c.finish();
+        assert_eq!(completions.len(), 10);
+        // All ten requests share one batch (same tape, inside the window or
+        // flushed at shutdown) and thus the same service time.
+        let s0 = completions[0].service_s;
+        assert!(completions.iter().all(|c| (c.service_s - s0).abs() < 1e-9));
+        assert!(m.batches >= 1);
+    }
+
+    #[test]
+    fn size_cap_splits_batches() {
+        let mut config = cfg();
+        config.batcher.max_batch = 4;
+        let c = Coordinator::start(config, catalog(), Arc::new(Gs));
+        for i in 0..16u64 {
+            assert!(c.submit(ReadRequest {
+                id: i,
+                tape: "TAPE002".into(),
+                file_index: i as usize,
+            }));
+        }
+        let (_, m) = c.finish();
+        assert!(m.batches >= 4, "16 requests with cap 4 ⇒ ≥4 batches, got {}", m.batches);
+    }
+}

@@ -1,0 +1,263 @@
+//! Loader / writer for the paper's public dataset format (Appendix C.1):
+//!
+//! ```text
+//! <root>/list_of_tape.txt          one tape name per line (TAPE001 …)
+//! <root>/tapes/TAPEXXX.txt         id  cumulative_position  segment_size  index
+//! <root>/requests/TAPEXXX.txt      index  nb_requests
+//! ```
+//!
+//! Columns are whitespace- or comma-separated; a non-numeric first line is
+//! treated as a header and skipped. File `index` is 1-based in the dataset
+//! (leftmost file = 1) and converted to 0-based in memory.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::{Dataset, TapeData};
+use crate::model::{FileExtent, Tape};
+
+/// Errors raised while reading a dataset directory.
+#[derive(Debug, thiserror::Error)]
+pub enum LoadError {
+    #[error("I/O error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: io::Error,
+    },
+    #[error("{path}:{line}: expected {expected} numeric columns, got {got}")]
+    BadColumns { path: String, line: usize, expected: usize, got: usize },
+    #[error("{path}:{line}: file indices must be 1-based and contiguous (got {got}, expected {expected})")]
+    BadIndex { path: String, line: usize, got: usize, expected: usize },
+    #[error("{path}:{line}: request on unknown file index {index} (tape has {n_files} files)")]
+    UnknownFile { path: String, line: usize, index: usize, n_files: usize },
+    #[error("{path}:{line}: positions must be non-decreasing / consistent with sizes")]
+    Inconsistent { path: String, line: usize },
+    #[error("tape {0} has no requests")]
+    NoRequests(String),
+}
+
+fn read(path: &Path) -> Result<String, LoadError> {
+    fs::read_to_string(path).map_err(|source| LoadError::Io {
+        path: path.display().to_string(),
+        source,
+    })
+}
+
+/// Parse whitespace/comma separated numeric rows, skipping header lines,
+/// blank lines, and `#` comments.
+fn numeric_rows(content: &str) -> impl Iterator<Item = (usize, Vec<u64>)> + '_ {
+    content.lines().enumerate().filter_map(|(i, line)| {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return None;
+        }
+        let cols: Vec<&str> = line
+            .split(|c: char| c.is_whitespace() || c == ',' || c == ';')
+            .filter(|s| !s.is_empty())
+            .collect();
+        let nums: Option<Vec<u64>> = cols.iter().map(|s| s.parse().ok()).collect();
+        match nums {
+            Some(v) => Some((i + 1, v)),
+            None if i == 0 => None, // header line
+            None => Some((i + 1, Vec::new())), // poisoned row → error downstream
+        }
+    })
+}
+
+/// Load a single tape description + its request file.
+pub fn load_tape(root: &Path, name: &str) -> Result<TapeData, LoadError> {
+    // --- tapes/NAME.txt: id, cumulative_position, segment_size, index ---
+    let tpath = root.join("tapes").join(format!("{name}.txt"));
+    let tstr = tpath.display().to_string();
+    let mut files = Vec::new();
+    let mut cursor = 0u64;
+    for (line, cols) in numeric_rows(&read(&tpath)?) {
+        if cols.len() != 4 {
+            return Err(LoadError::BadColumns {
+                path: tstr.clone(),
+                line,
+                expected: 4,
+                got: cols.len(),
+            });
+        }
+        let (pos, size, index) = (cols[1], cols[2], cols[3] as usize);
+        if index != files.len() + 1 {
+            return Err(LoadError::BadIndex {
+                path: tstr.clone(),
+                line,
+                got: index,
+                expected: files.len() + 1,
+            });
+        }
+        // `cumulative_position` is the position of the segment's right end
+        // (cumulative sum of sizes, as documented in Appendix C.2); accept
+        // either that or a left-end convention, and validate continuity.
+        let left = if pos == cursor + size || pos == cursor {
+            cursor
+        } else {
+            return Err(LoadError::Inconsistent { path: tstr.clone(), line });
+        };
+        files.push(FileExtent { left, size });
+        cursor = left + size;
+    }
+
+    // --- requests/NAME.txt: index, nb_requests ---
+    let rpath = root.join("requests").join(format!("{name}.txt"));
+    let rstr = rpath.display().to_string();
+    let mut requests = Vec::new();
+    for (line, cols) in numeric_rows(&read(&rpath)?) {
+        if cols.len() != 2 {
+            return Err(LoadError::BadColumns {
+                path: rstr.clone(),
+                line,
+                expected: 2,
+                got: cols.len(),
+            });
+        }
+        let (index, x) = (cols[0] as usize, cols[1]);
+        if index == 0 || index > files.len() {
+            return Err(LoadError::UnknownFile {
+                path: rstr.clone(),
+                line,
+                index,
+                n_files: files.len(),
+            });
+        }
+        if x > 0 {
+            requests.push((index - 1, x));
+        }
+    }
+    if requests.is_empty() {
+        return Err(LoadError::NoRequests(name.to_string()));
+    }
+    requests.sort();
+
+    Ok(TapeData { tape: Tape { name: name.to_string(), files }, requests })
+}
+
+/// Load a full dataset directory (`list_of_tape.txt` + `tapes/` + `requests/`).
+pub fn load_dataset(root: &Path) -> Result<Dataset, LoadError> {
+    let list = read(&root.join("list_of_tape.txt"))?;
+    let mut tapes = Vec::new();
+    for name in list.lines().map(str::trim).filter(|l| !l.is_empty()) {
+        let name = name.strip_suffix(".txt").unwrap_or(name);
+        tapes.push(load_tape(root, name)?);
+    }
+    Ok(Dataset { tapes })
+}
+
+/// Write a dataset in the paper's on-disk format (inverse of [`load_dataset`]).
+pub fn write_dataset(root: &Path, ds: &Dataset) -> io::Result<()> {
+    fs::create_dir_all(root.join("tapes"))?;
+    fs::create_dir_all(root.join("requests"))?;
+    let mut list = String::new();
+    for t in &ds.tapes {
+        list.push_str(&t.tape.name);
+        list.push('\n');
+
+        let mut tf = String::from("id cumulative_position segment_size index\n");
+        for (i, f) in t.tape.files.iter().enumerate() {
+            tf.push_str(&format!("{} {} {} {}\n", i + 1, f.right(), f.size, i + 1));
+        }
+        fs::write(root.join("tapes").join(format!("{}.txt", t.tape.name)), tf)?;
+
+        let mut rf = String::from("index nb_requests\n");
+        for &(idx, x) in &t.requests {
+            rf.push_str(&format!("{} {}\n", idx + 1, x));
+        }
+        fs::write(root.join("requests").join(format!("{}.txt", t.tape.name)), rf)?;
+    }
+    fs::write(root.join("list_of_tape.txt"), list)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tapesched_loader_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> Dataset {
+        let tape = Tape::from_sizes("TAPE001", &[100, 250, 50]);
+        Dataset {
+            tapes: vec![TapeData { tape, requests: vec![(0, 3), (2, 1)] }],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = tmpdir("roundtrip");
+        write_dataset(&d, &sample()).unwrap();
+        let ds = load_dataset(&d).unwrap();
+        assert_eq!(ds.tapes.len(), 1);
+        let t = &ds.tapes[0];
+        assert_eq!(t.tape.name, "TAPE001");
+        assert_eq!(t.tape.n_files(), 3);
+        assert_eq!(t.tape.files[1], FileExtent { left: 100, size: 250 });
+        assert_eq!(t.requests, vec![(0, 3), (2, 1)]);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn header_and_separator_tolerance() {
+        let d = tmpdir("tolerance");
+        fs::create_dir_all(d.join("tapes")).unwrap();
+        fs::create_dir_all(d.join("requests")).unwrap();
+        fs::write(d.join("list_of_tape.txt"), "TAPE001\n\n").unwrap();
+        fs::write(
+            d.join("tapes/TAPE001.txt"),
+            "id,cumulative_position,segment_size,index\n1,10,10,1\n2,25,15,2\n",
+        )
+        .unwrap();
+        fs::write(d.join("requests/TAPE001.txt"), "index nb_requests\n2 4\n").unwrap();
+        let ds = load_dataset(&d).unwrap();
+        assert_eq!(ds.tapes[0].tape.len(), 25);
+        assert_eq!(ds.tapes[0].requests, vec![(1, 4)]);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn rejects_bad_index() {
+        let d = tmpdir("badindex");
+        fs::create_dir_all(d.join("tapes")).unwrap();
+        fs::create_dir_all(d.join("requests")).unwrap();
+        fs::write(d.join("list_of_tape.txt"), "TAPE001\n").unwrap();
+        fs::write(d.join("tapes/TAPE001.txt"), "h h h h\n1 10 10 2\n").unwrap();
+        fs::write(d.join("requests/TAPE001.txt"), "h h\n1 1\n").unwrap();
+        match load_dataset(&d) {
+            Err(LoadError::BadIndex { got: 2, expected: 1, .. }) => {}
+            other => panic!("expected BadIndex, got {other:?}"),
+        }
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn rejects_request_on_unknown_file() {
+        let d = tmpdir("unknownfile");
+        fs::create_dir_all(d.join("tapes")).unwrap();
+        fs::create_dir_all(d.join("requests")).unwrap();
+        fs::write(d.join("list_of_tape.txt"), "TAPE001\n").unwrap();
+        fs::write(d.join("tapes/TAPE001.txt"), "h h h h\n1 10 10 1\n").unwrap();
+        fs::write(d.join("requests/TAPE001.txt"), "h h\n5 1\n").unwrap();
+        assert!(matches!(
+            load_dataset(&d),
+            Err(LoadError::UnknownFile { index: 5, n_files: 1, .. })
+        ));
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_dir_is_io_error() {
+        assert!(matches!(
+            load_dataset(Path::new("/nonexistent/nowhere")),
+            Err(LoadError::Io { .. })
+        ));
+    }
+}

@@ -1,0 +1,146 @@
+//! Dataset pipeline: the paper's public IN2P3 dataset format (Appendix C.1),
+//! a calibrated synthetic generator reproducing its published statistics,
+//! and the statistics harness behind Tables 1–2 and Figures 17–19.
+//!
+//! The authors' real dataset (figshare) is not reachable offline; the
+//! [`generator`] synthesizes 169 tapes matching every published marginal
+//! (see DESIGN.md §4). The [`loader`] reads either the authors' files
+//! unchanged or the generator's output — they share the same on-disk format.
+
+pub mod generator;
+pub mod loader;
+pub mod rawlog;
+pub mod stats;
+
+pub use generator::{generate_dataset, GeneratorConfig};
+pub use loader::{load_dataset, load_tape, write_dataset, LoadError};
+pub use rawlog::{filter_raw_log, synth_catalog, synth_raw_log, FilterStats, LogLine, OpKind};
+pub use stats::{dataset_stats, DatasetStats, ScatterPoint};
+
+use crate::model::{Instance, InstanceError, Tape};
+
+/// One tape with its read-request multiset — a single LTSP instance modulo
+/// the choice of the U-turn penalty.
+#[derive(Debug, Clone)]
+pub struct TapeData {
+    pub tape: Tape,
+    /// `(file index on tape, request multiplicity)`, 0-based, sorted.
+    pub requests: Vec<(usize, u64)>,
+}
+
+impl TapeData {
+    /// Compact this tape into an LTSP [`Instance`] with penalty `u`.
+    pub fn instance(&self, u: u64) -> Result<Instance, InstanceError> {
+        Instance::from_tape(&self.tape, &self.requests, u)
+    }
+
+    /// Number of distinct requested files `n_req`.
+    pub fn n_req(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Total number of user requests `n`.
+    pub fn n_total(&self) -> u64 {
+        self.requests.iter().map(|&(_, x)| x).sum()
+    }
+}
+
+/// The full dataset: one [`TapeData`] per tape, i.e. 169 LTSP instances.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub tapes: Vec<TapeData>,
+}
+
+impl Dataset {
+    /// Average file ("segment") size across all tapes of the dataset —
+    /// the paper derives its non-zero U values from this quantity
+    /// (`U ∈ {0, avg/2, avg}`, §5.2 and Appendix C.2).
+    pub fn avg_segment_size(&self) -> u64 {
+        let (mut len, mut nf) = (0u128, 0u128);
+        for t in &self.tapes {
+            len += t.tape.len() as u128;
+            nf += t.tape.n_files() as u128;
+        }
+        if nf == 0 {
+            0
+        } else {
+            (len / nf) as u64
+        }
+    }
+
+    /// The paper's three U-turn penalty scenarios: `[0, avg/2, avg]`.
+    pub fn paper_u_values(&self) -> [u64; 3] {
+        let avg = self.avg_segment_size();
+        [0, avg / 2, avg]
+    }
+
+    /// Total number of files stored across all tapes.
+    pub fn total_files(&self) -> usize {
+        self.tapes.iter().map(|t| t.tape.n_files()).sum()
+    }
+
+    /// Total number of distinct requested files across all tapes.
+    pub fn total_unique_requests(&self) -> usize {
+        self.tapes.iter().map(|t| t.n_req()).sum()
+    }
+
+    /// Total number of user requests across all tapes.
+    pub fn total_user_requests(&self) -> u64 {
+        self.tapes.iter().map(|t| t.n_total()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::FileExtent;
+
+    fn tiny() -> Dataset {
+        let t1 = Tape {
+            name: "TAPE001".into(),
+            files: vec![
+                FileExtent { left: 0, size: 10 },
+                FileExtent { left: 10, size: 30 },
+            ],
+        };
+        let t2 = Tape {
+            name: "TAPE002".into(),
+            files: vec![FileExtent { left: 0, size: 20 }],
+        };
+        Dataset {
+            tapes: vec![
+                TapeData { tape: t1, requests: vec![(0, 2), (1, 1)] },
+                TapeData { tape: t2, requests: vec![(0, 5)] },
+            ],
+        }
+    }
+
+    #[test]
+    fn aggregate_counters() {
+        let d = tiny();
+        assert_eq!(d.total_files(), 3);
+        assert_eq!(d.total_unique_requests(), 3);
+        assert_eq!(d.total_user_requests(), 8);
+        // (40 + 20) / 3 = 20
+        assert_eq!(d.avg_segment_size(), 20);
+        assert_eq!(d.paper_u_values(), [0, 10, 20]);
+    }
+
+    #[test]
+    fn tape_data_to_instance() {
+        let d = tiny();
+        let inst = d.tapes[0].instance(7).unwrap();
+        assert_eq!(inst.k(), 2);
+        assert_eq!(inst.u(), 7);
+        assert_eq!(inst.n(), 3);
+        assert_eq!(d.tapes[0].n_req(), 2);
+        assert_eq!(d.tapes[0].n_total(), 3);
+    }
+
+    #[test]
+    fn empty_dataset_is_safe() {
+        let d = Dataset::default();
+        assert_eq!(d.avg_segment_size(), 0);
+        assert_eq!(d.paper_u_values(), [0, 0, 0]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Dataset statistics: Tables 1–2 and the Figure 17/18/19 scatter data of
+//! Appendix C.1.
+
+use super::Dataset;
+use crate::util::stats::{summarize, Summary};
+
+/// One point of the Fig. 17/18/19 scatters: per-tape characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct ScatterPoint {
+    /// Tape index (1-based, matches TAPEXXX naming).
+    pub tape: usize,
+    /// `n_f` — number of files on the tape (Fig. 17 y-axis).
+    pub n_f: usize,
+    /// `n_req` — unique requested files (Fig. 17 x-axis, Fig. 18 y-axis).
+    pub n_req: usize,
+    /// `n` — total user requests (Fig. 18 x-axis).
+    pub n: u64,
+    /// Mean file size in GB (Fig. 19 x-axis).
+    pub mean_size_gb: f64,
+    /// File-size coefficient of variation, % (Fig. 19 y-axis).
+    pub cv_pct: f64,
+}
+
+/// Aggregated dataset statistics (Tables 1–2 + document totals).
+#[derive(Debug, Clone)]
+pub struct DatasetStats {
+    /// Table 1: per-tape `n_f`, `n_req`, `n` summaries.
+    pub n_f: Summary,
+    pub n_req: Summary,
+    pub n: Summary,
+    /// Table 2: per-tape mean file size (GB) and size CV (%) summaries.
+    pub mean_size_gb: Summary,
+    pub cv_pct: Summary,
+    /// Document totals: tapes, files, unique requested files, user requests.
+    pub n_tapes: usize,
+    pub total_files: usize,
+    pub total_unique: usize,
+    pub total_requests: u64,
+    /// Average segment size in bytes (the U-value base of §5.2).
+    pub avg_segment_size: u64,
+    /// Per-tape scatter points (Figs 17–19).
+    pub points: Vec<ScatterPoint>,
+}
+
+/// Compute all statistics for a dataset.
+pub fn dataset_stats(ds: &Dataset) -> DatasetStats {
+    const GB: f64 = 1e9;
+    let points: Vec<ScatterPoint> = ds
+        .tapes
+        .iter()
+        .enumerate()
+        .map(|(i, t)| ScatterPoint {
+            tape: i + 1,
+            n_f: t.tape.n_files(),
+            n_req: t.n_req(),
+            n: t.n_total(),
+            mean_size_gb: t.tape.mean_file_size() / GB,
+            cv_pct: t.tape.file_size_cv() * 100.0,
+        })
+        .collect();
+
+    let col = |f: &dyn Fn(&ScatterPoint) -> f64| -> Vec<f64> {
+        points.iter().map(f).collect()
+    };
+    DatasetStats {
+        n_f: summarize(&col(&|p| p.n_f as f64)),
+        n_req: summarize(&col(&|p| p.n_req as f64)),
+        n: summarize(&col(&|p| p.n as f64)),
+        mean_size_gb: summarize(&col(&|p| p.mean_size_gb)),
+        cv_pct: summarize(&col(&|p| p.cv_pct)),
+        n_tapes: ds.tapes.len(),
+        total_files: ds.total_files(),
+        total_unique: ds.total_unique_requests(),
+        total_requests: ds.total_user_requests(),
+        avg_segment_size: ds.avg_segment_size(),
+        points,
+    }
+}
+
+impl DatasetStats {
+    /// Render Tables 1 and 2 in the paper's layout.
+    pub fn render_tables(&self) -> String {
+        let int = |v: f64| format!("{}", v.round() as i64);
+        let f1 = |v: f64| format!("{v:.1}");
+        let mut out = String::new();
+        out.push_str("Table 1 — instance characteristics (per tape)\n");
+        out.push_str("|         |  Tape size | #Requested |  #Requests |\n");
+        out.push_str(&format!(
+            "| Maximum | {:>10} | {:>10} | {:>10} |\n",
+            int(self.n_f.max), int(self.n_req.max), int(self.n.max)
+        ));
+        out.push_str(&format!(
+            "| Minimum | {:>10} | {:>10} | {:>10} |\n",
+            int(self.n_f.min), int(self.n_req.min), int(self.n.min)
+        ));
+        out.push_str(&format!(
+            "| Median  | {:>10} | {:>10} | {:>10} |\n",
+            int(self.n_f.median), int(self.n_req.median), int(self.n.median)
+        ));
+        out.push_str(&format!(
+            "| Mean    | {:>10} | {:>10} | {:>10} |\n",
+            int(self.n_f.mean), int(self.n_req.mean), int(self.n.mean)
+        ));
+        out.push('\n');
+        out.push_str("Table 2 — file sizes (per tape)\n");
+        out.push_str("|         | Avg size (GB) | Size CV (%) |\n");
+        let accessors: [(&str, fn(&Summary) -> f64); 4] = [
+            ("Maximum", |s| s.max),
+            ("Minimum", |s| s.min),
+            ("Median", |s| s.median),
+            ("Mean", |s| s.mean),
+        ];
+        for (name, acc) in accessors {
+            out.push_str(&format!(
+                "| {name:<7} | {:>13} | {:>11} |\n",
+                f1(acc(&self.mean_size_gb)),
+                f1(acc(&self.cv_pct))
+            ));
+        }
+        out.push('\n');
+        out.push_str(&format!(
+            "Totals: {} tapes, {} files, {} unique requested files, {} user requests\n",
+            self.n_tapes, self.total_files, self.total_unique, self.total_requests
+        ));
+        out.push_str(&format!(
+            "Average segment size: {} bytes (paper U values: 0, {}, {})\n",
+            self.avg_segment_size,
+            self.avg_segment_size / 2,
+            self.avg_segment_size
+        ));
+        out
+    }
+
+    /// CSV for Figure 17 (`n_req` vs `n_f`), 18 (`n` vs `n_req`) and 19
+    /// (mean size vs CV) — one file with all per-tape columns.
+    pub fn scatter_csv(&self) -> String {
+        let mut out = String::from("tape,n_f,n_req,n,mean_size_gb,cv_pct\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{},{},{},{:.3},{:.1}\n",
+                p.tape, p.n_f, p.n_req, p.n, p.mean_size_gb, p.cv_pct
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{generate_dataset, GeneratorConfig};
+
+    #[test]
+    fn stats_on_generated_dataset() {
+        let ds = generate_dataset(&GeneratorConfig { n_tapes: 20, ..Default::default() });
+        let st = dataset_stats(&ds);
+        assert_eq!(st.n_tapes, 20);
+        assert_eq!(st.points.len(), 20);
+        assert!(st.n_f.min >= 111.0 && st.n_f.max <= 4142.0);
+        assert!(st.total_files > 0);
+        // Mean size ≈ 20 TB / n_f for every tape (full tapes).
+        for p in &st.points {
+            let expect = 20_000.0 / p.n_f as f64;
+            assert!((p.mean_size_gb - expect).abs() / expect < 1e-6);
+        }
+    }
+
+    #[test]
+    fn tables_render_plausibly() {
+        let ds = generate_dataset(&GeneratorConfig { n_tapes: 8, ..Default::default() });
+        let txt = dataset_stats(&ds).render_tables();
+        assert!(txt.contains("Table 1"));
+        assert!(txt.contains("Table 2"));
+        assert!(txt.contains("8 tapes"));
+    }
+
+    #[test]
+    fn scatter_csv_has_header_and_rows() {
+        let ds = generate_dataset(&GeneratorConfig { n_tapes: 3, ..Default::default() });
+        let csv = dataset_stats(&ds).scatter_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("tape,n_f,"));
+    }
+}

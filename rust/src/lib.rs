@@ -1,0 +1,50 @@
+//! # tapesched — Linear Tape Scheduling
+//!
+//! Production-shaped reproduction of *“An Exact Algorithm for the Linear
+//! Tape Scheduling Problem”* (Honoré, Simon, Suter — 2021): exact and
+//! heuristic schedulers minimizing the **average service time** of read
+//! requests on a linear magnetic tape, plus the surrounding mass-storage
+//! machinery: a ground-truth head simulator, a robotic-library serving
+//! runtime, a dataset pipeline, an XLA-accelerated evaluation engine and
+//! the full evaluation harness of the paper.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use tapesched::model::{Instance, ReqFile};
+//! use tapesched::sched::{Dp, Scheduler};
+//! use tapesched::sim::evaluate;
+//!
+//! // A 100-unit tape; two requested files, the right one is urgent.
+//! let inst = Instance::new(100, 5, vec![
+//!     ReqFile { l: 10, r: 20, x: 1 },
+//!     ReqFile { l: 60, r: 70, x: 40 },
+//! ]).unwrap();
+//!
+//! let schedule = Dp.schedule(&inst);          // exact optimum
+//! let outcome  = evaluate(&inst, &schedule);  // ground-truth service times
+//! assert!(outcome.cost <= evaluate(&inst, &[]).cost);
+//! ```
+//!
+//! ## Layout
+//!
+//! - [`model`] — tapes, requests, instances, exact cost arithmetic.
+//! - [`sched`] — the paper's nine algorithms behind one [`sched::Scheduler`] trait.
+//! - [`sim`] — head-trajectory ground truth + robotic library simulator.
+//! - [`coordinator`] — multi-threaded request-serving service.
+//! - [`runtime`] — PJRT/XLA loading of the AOT-compiled SimpleDP engine.
+//! - [`dataset`] — IN2P3-format loader, calibrated synthetic generator, stats.
+//! - [`analysis`] — performance profiles (Dolan–Moré) and CSV reports.
+//! - [`bench`] — the in-crate benchmark framework used by `cargo bench`.
+
+pub mod analysis;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod dataset;
+pub mod model;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod testkit;
+pub mod util;

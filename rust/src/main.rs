@@ -1,0 +1,290 @@
+//! `tapesched` — CLI for the LTSP scheduling framework.
+//!
+//! Subcommands:
+//!
+//! - `generate`       — synthesize the IN2P3-calibrated dataset to disk
+//! - `dataset-stats`  — Tables 1–2 and the Fig. 17–19 scatter CSV
+//! - `figures`        — regenerate Fig. 14/15/16 + the §5.3 timing table
+//! - `adversarial`    — the §4.5 / Lemma 2 adversarial instances
+//! - `solve`          — run one algorithm on one tape of a dataset
+//! - `serve`          — run the coordinator serving demo
+//!
+//! Run `tapesched <cmd> --help` equivalent: flags are documented below in
+//! each handler (and in README.md).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use tapesched::analysis::report::run_evaluation;
+use tapesched::cli::Args;
+use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, ReadRequest};
+use tapesched::dataset::{
+    dataset_stats, generate_dataset, load_dataset, write_dataset, Dataset, GeneratorConfig,
+};
+use tapesched::model::virtual_lb;
+use tapesched::sched::{paper_schedulers, scheduler_by_name, Scheduler};
+use tapesched::sim::{evaluate, DriveParams};
+use tapesched::util::rng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        usage();
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd {
+        "generate" => cmd_generate(&args),
+        "dataset-stats" => cmd_dataset_stats(&args),
+        "figures" => cmd_figures(&args),
+        "adversarial" => cmd_adversarial(&args),
+        "solve" => cmd_solve(&args),
+        "draw" => cmd_draw(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => usage(),
+        other => {
+            eprintln!("error: unknown command `{other}`");
+            usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "tapesched — Linear Tape Scheduling (Honoré, Simon, Suter 2021)
+
+USAGE: tapesched <COMMAND> [FLAGS]
+
+COMMANDS:
+  generate        --out DIR [--seed N] [--tapes N]
+  dataset-stats   [--data DIR] [--scatter FILE]
+  figures         --experiment fig14|fig15|fig16|timing|all
+                  [--data DIR] [--out DIR] [--max-k N] [--algos a,b,…]
+  adversarial     [--z N]
+  solve           --tape NAME --algo NAME [--data DIR] [--u N]
+  draw            --out FILE.svg [--tape NAME] [--algo NAME] [--u N]
+  serve           [--policy NAME] [--drives N] [--requests N] [--seed N]
+  help
+
+Without --data, commands use the built-in calibrated generator (seed 0x12P32021)."
+    );
+}
+
+/// Load `--data DIR` or fall back to the calibrated generator.
+fn dataset_from(args: &Args) -> Dataset {
+    match args.get("data") {
+        Some(dir) => match load_dataset(Path::new(dir)) {
+            Ok(ds) => {
+                eprintln!("loaded {} tapes from {dir}", ds.tapes.len());
+                ds
+            }
+            Err(e) => {
+                eprintln!("error loading dataset: {e}");
+                std::process::exit(1);
+            }
+        },
+        None => {
+            let tapes = args.get_parsed_or("tapes", 169usize);
+            let seed = args.get_parsed_or("seed", GeneratorConfig::default().seed);
+            generate_dataset(&GeneratorConfig { n_tapes: tapes, seed, ..Default::default() })
+        }
+    }
+}
+
+fn cmd_generate(args: &Args) {
+    args.reject_unknown(&["out", "seed", "tapes"]);
+    let out = PathBuf::from(args.get_or("out", "data/in2p3-synth"));
+    let ds = dataset_from(args);
+    write_dataset(&out, &ds).unwrap_or_else(|e| {
+        eprintln!("error writing dataset: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "wrote {} tapes ({} files, {} unique requested, {} user requests) to {}",
+        ds.tapes.len(),
+        ds.total_files(),
+        ds.total_unique_requests(),
+        ds.total_user_requests(),
+        out.display()
+    );
+}
+
+fn cmd_dataset_stats(args: &Args) {
+    args.reject_unknown(&["data", "scatter", "seed", "tapes"]);
+    let ds = dataset_from(args);
+    let st = dataset_stats(&ds);
+    print!("{}", st.render_tables());
+    if let Some(path) = args.get("scatter") {
+        std::fs::write(path, st.scatter_csv()).expect("write scatter CSV");
+        println!("scatter data (Figs 17–19) → {path}");
+    }
+}
+
+fn cmd_figures(args: &Args) {
+    args.reject_unknown(&["experiment", "data", "out", "max-k", "algos", "seed", "tapes"]);
+    let experiment = args.get_or("experiment", "all");
+    let ds = dataset_from(args);
+    let out_dir = PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out_dir).expect("create results dir");
+    // Exact DP is O(n_req³·n): cap instance size by default so the full
+    // sweep stays tractable; `--max-k 0` removes the cap.
+    let max_k = match args.get_parsed_or("max-k", 80usize) {
+        0 => None,
+        k => Some(k),
+    };
+
+    let schedulers: Vec<Box<dyn Scheduler + Send + Sync>> = match args.get("algos") {
+        None => paper_schedulers(),
+        Some(list) => list
+            .split(',')
+            .map(|n| {
+                scheduler_by_name(n.trim()).unwrap_or_else(|| {
+                    eprintln!("error: unknown algorithm `{n}`");
+                    std::process::exit(2);
+                })
+            })
+            .collect(),
+    };
+
+    let [_, u_half, u_avg] = ds.paper_u_values();
+    let runs: Vec<(&str, u64)> = match experiment.as_str() {
+        "fig14" => vec![("fig14", 0)],
+        "fig15" => vec![("fig15", u_avg)],
+        "fig16" => vec![("fig16", u_half)],
+        "timing" => vec![("timing", u_avg)],
+        "all" => vec![("fig14", 0), ("fig15", u_avg), ("fig16", u_half)],
+        other => {
+            eprintln!("error: unknown experiment `{other}`");
+            std::process::exit(2);
+        }
+    };
+
+    for (name, u) in runs {
+        eprintln!("running {name} (U = {u}) on {} tapes…", ds.tapes.len());
+        let table = run_evaluation(&ds, &schedulers, u, max_k);
+        let profile_path = out_dir.join(format!("{name}.csv"));
+        std::fs::write(&profile_path, table.profiles_csv("DP")).expect("write profiles");
+        let raw_path = out_dir.join(format!("{name}_raw.csv"));
+        std::fs::write(&raw_path, table.records_csv()).expect("write records");
+        println!("{name}: profiles → {} ; raw → {}", profile_path.display(), raw_path.display());
+        println!("median time-to-solution (s):");
+        for (algo, t) in table.median_times() {
+            println!("  {algo:<12} {t:>12.6}");
+        }
+    }
+}
+
+/// §4.5's adversarial instances: the LogDP ratio→3 family and the Lemma 2
+/// 5/3 family, parameterized by z.
+fn cmd_adversarial(args: &Args) {
+    args.reject_unknown(&["z"]);
+    let z = args.get_parsed_or("z", 20u64);
+    println!("LogDP worst case (§4.5), z = {z}:");
+    let inst = tapesched::model::adversarial::logdp_worst_case(z);
+    let dp = tapesched::sched::Dp.schedule(&inst);
+    let logdp = tapesched::sched::LogDp::new(1.0).schedule(&inst);
+    let gs = tapesched::sched::Gs.schedule(&inst);
+    let c_dp = evaluate(&inst, &dp).cost;
+    let c_log = evaluate(&inst, &logdp).cost;
+    let c_gs = evaluate(&inst, &gs).cost;
+    println!("  OPT(DP) = {c_dp}");
+    println!("  LogDP(1) = {c_log}  (ratio {:.4})", c_log as f64 / c_dp as f64);
+    println!("  GS = {c_gs}  (ratio {:.4})", c_gs as f64 / c_dp as f64);
+
+    println!("SimpleDP 5/3 lower-bound instance (Lemma 2), z = {z}:");
+    let inst = tapesched::model::adversarial::simpledp_five_thirds(z);
+    let c_dp = evaluate(&inst, &tapesched::sched::Dp.schedule(&inst)).cost;
+    let c_sdp = evaluate(&inst, &tapesched::sched::SimpleDp.schedule(&inst)).cost;
+    println!("  OPT(DP) = {c_dp}");
+    println!(
+        "  SimpleDP = {c_sdp}  (ratio {:.4}, → 5/3 as z→∞)",
+        c_sdp as f64 / c_dp as f64
+    );
+}
+
+fn cmd_solve(args: &Args) {
+    args.reject_unknown(&["tape", "algo", "data", "u", "seed", "tapes"]);
+    let ds = dataset_from(args);
+    let name = args.get_or("tape", &ds.tapes[0].tape.name);
+    let Some(tape) = ds.tapes.iter().find(|t| t.tape.name == name) else {
+        eprintln!("error: tape {name} not in dataset");
+        std::process::exit(1);
+    };
+    let u = args.get_parsed_or("u", ds.avg_segment_size());
+    let algo_name = args.get_or("algo", "SimpleDP");
+    let Some(algo) = scheduler_by_name(&algo_name) else {
+        eprintln!("error: unknown algorithm {algo_name}");
+        std::process::exit(2);
+    };
+    let inst = tape.instance(u).expect("valid tape");
+    let t0 = std::time::Instant::now();
+    let sched = algo.schedule(&inst);
+    let secs = t0.elapsed().as_secs_f64();
+    let out = evaluate(&inst, &sched);
+    println!("tape {name}: n_f={} n_req={} n={} U={u}", tape.tape.n_files(), inst.k(), inst.n());
+    println!("algorithm {}: {} detours in {secs:.4}s", algo.name(), sched.len());
+    println!("  sum of service times = {}", out.cost);
+    println!("  mean service time    = {:.1}", out.mean_service_time(&inst));
+    println!("  VirtualLB            = {}", virtual_lb(&inst));
+    println!("  detours: {:?}", &sched[..sched.len().min(20)]);
+}
+
+/// Render a schedule's head trajectory as an SVG (the artifact's draw.py).
+fn cmd_draw(args: &Args) {
+    args.reject_unknown(&["tape", "algo", "data", "u", "out", "seed", "tapes"]);
+    let ds = dataset_from(args);
+    let name = args.get_or("tape", &ds.tapes[0].tape.name);
+    let Some(tape) = ds.tapes.iter().find(|t| t.tape.name == name) else {
+        eprintln!("error: tape {name} not in dataset");
+        std::process::exit(1);
+    };
+    let u = args.get_parsed_or("u", ds.avg_segment_size());
+    let algo_name = args.get_or("algo", "SimpleDP");
+    let Some(algo) = scheduler_by_name(&algo_name) else {
+        eprintln!("error: unknown algorithm {algo_name}");
+        std::process::exit(2);
+    };
+    let inst = tape.instance(u).expect("valid tape");
+    let sched = algo.schedule(&inst);
+    let title = format!("{name} — {} ({} detours, U = {u})", algo.name(), sched.len());
+    let svg = tapesched::analysis::trajectory_svg(&inst, &sched, &title);
+    let out = args.get_or("out", "trajectory.svg");
+    std::fs::write(&out, svg).expect("write SVG");
+    println!("trajectory → {out}");
+}
+
+fn cmd_serve(args: &Args) {
+    args.reject_unknown(&["policy", "drives", "requests", "seed", "tapes", "data"]);
+    let policy_name = args.get_or("policy", "SimpleDP");
+    let Some(policy) = scheduler_by_name(&policy_name) else {
+        eprintln!("error: unknown policy {policy_name}");
+        std::process::exit(2);
+    };
+    let n_drives = args.get_parsed_or("drives", 8usize);
+    let n_requests = args.get_parsed_or("requests", 5_000u64);
+    let ds = dataset_from(args);
+    let drive = DriveParams::default();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            n_drives,
+            batcher: BatcherConfig::default(),
+            drive,
+        },
+        ds.tapes.iter().map(|t| t.tape.clone()),
+        Arc::from(policy),
+    );
+    let mut rng = Rng::new(args.get_parsed_or("seed", 1u64));
+    for id in 0..n_requests {
+        let t = &ds.tapes[rng.below(ds.tapes.len() as u64) as usize];
+        let file_index = rng.below(t.tape.n_files() as u64) as usize;
+        coord.submit(ReadRequest { id, tape: t.tape.name.clone(), file_index });
+    }
+    let (completions, m) = coord.finish();
+    println!("policy {policy_name}, {n_drives} drives, {} requests:", completions.len());
+    println!("  batches dispatched      = {}", m.batches);
+    println!("  mean in-tape service    = {:.1} s", m.mean_service_s);
+    println!("  mean end-to-end latency = {:.1} s", m.mean_latency_s);
+    println!("  p50 / p99 latency       = {:.1} / {:.1} s", m.p50_latency_s, m.p99_latency_s);
+    println!("  mean schedule compute   = {:.4} s/batch", m.mean_sched_s_per_batch);
+}

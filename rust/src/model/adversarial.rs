@@ -1,0 +1,111 @@
+//! The paper's adversarial instance families (§4.5 and Lemma 2), used to
+//! exhibit approximation-ratio lower bounds experimentally.
+
+use super::{Instance, ReqFile};
+
+/// §4.5's LogDP worst case: `z` requested files; a small non-urgent file on
+/// the far left, a contiguous cluster far right whose leftmost member is
+/// very urgent (`x = z²`) and whose rightmost member is large (`s = z²`)
+/// and moderately urgent (`x = z`). The optimal solution uses one long
+/// detour `(f₂, f_z)` — out of reach once detour spans are capped — so
+/// LogDP's ratio tends to 3 (with `U = 0`) as `z` grows.
+pub fn logdp_worst_case(z: u64) -> Instance {
+    assert!(z >= 4, "the construction needs z ≥ 4");
+    let base = 2 * z * z * z;
+    let mut files = vec![ReqFile { l: 0, r: 1, x: 1 }];
+    // z − 1 contiguous files starting at 2z³: unit size except the last.
+    for i in 0..z - 1 {
+        let l = base + i;
+        let (r, x) = if i == z - 2 {
+            (l + z * z, z) // rightmost: large, moderately urgent
+        } else if i == 0 {
+            (l + 1, z * z) // leftmost of the cluster: very urgent
+        } else {
+            (l + 1, 1)
+        };
+        files.push(ReqFile { l, r, x });
+    }
+    let m = files.last().unwrap().r;
+    Instance::new(m, 0, files).expect("construction is valid")
+}
+
+/// Lemma 2's 5/3 lower-bound instance for SimpleDP: four files where the
+/// best solution reads `f₃` alone, then `f₂` and `f₄` in one *intertwined*
+/// detour over the already-read `f₃` — exactly what SimpleDP's disjoint
+/// detours cannot express. SimpleDP/OPT → 5/3 as `z` grows.
+pub fn simpledp_five_thirds(z: u64) -> Instance {
+    assert!(z >= 3);
+    let f1 = ReqFile { l: 0, r: 1, x: 1 };
+    let l2 = 3 * z * z;
+    let f2 = ReqFile { l: l2, r: l2 + 1, x: z * z };
+    let l3 = l2 + z;
+    let f3 = ReqFile { l: l3, r: l3 + 1, x: z * z };
+    let f4 = ReqFile { l: l3 + 1, r: l3 + 1 + z, x: z };
+    let m = f4.r;
+    Instance::new(m, 0, vec![f1, f2, f3, f4]).expect("construction is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Dp, Gs, LogDp, Scheduler, SimpleDp};
+    use crate::sim::evaluate;
+
+    #[test]
+    fn simpledp_ratio_tends_to_five_thirds() {
+        let mut last = 0.0;
+        for z in [5u64, 10, 20, 40] {
+            let inst = simpledp_five_thirds(z);
+            let opt = evaluate(&inst, &Dp.schedule(&inst)).cost;
+            let sdp = evaluate(&inst, &SimpleDp.schedule(&inst)).cost;
+            let ratio = sdp as f64 / opt as f64;
+            assert!(ratio > 1.0, "SimpleDP must be suboptimal here (z={z})");
+            assert!(ratio <= 3.0 + 1e-9, "Lemma 2 upper bound (z={z})");
+            last = ratio;
+        }
+        assert!(
+            (last - 5.0 / 3.0).abs() < 0.1,
+            "ratio at z=40 should approach 5/3, got {last}"
+        );
+    }
+
+    #[test]
+    fn optimal_uses_the_intertwined_detour() {
+        let inst = simpledp_five_thirds(20);
+        let sched = Dp.schedule(&inst);
+        // The signature move: a detour covering f2..f4 plus a nested/earlier
+        // one on f3 alone — i.e. detours are NOT pairwise disjoint.
+        let mut s = sched.clone();
+        s.sort();
+        let disjoint = s.windows(2).all(|w| w[0].b < w[1].a);
+        assert!(!disjoint, "expected intertwined detours, got {sched:?}");
+    }
+
+    #[test]
+    fn logdp_worst_case_ratio_grows() {
+        let mut prev = 1.0;
+        for z in [8u64, 16, 24] {
+            let inst = logdp_worst_case(z);
+            let opt = evaluate(&inst, &Dp.schedule(&inst)).cost;
+            let log1 = evaluate(&inst, &LogDp::new(1.0).schedule(&inst)).cost;
+            let gs = evaluate(&inst, &Gs.schedule(&inst)).cost;
+            let ratio = log1 as f64 / opt as f64;
+            assert!(ratio >= prev - 0.05, "ratio should grow with z, got {ratio} at z={z}");
+            assert!(gs >= opt);
+            prev = ratio;
+        }
+        assert!(prev > 1.5, "LogDP(1) ratio at z=24 should exceed 1.5, got {prev}");
+    }
+
+    #[test]
+    fn constructions_scale_consistently() {
+        for z in [4u64, 7, 33] {
+            let a = logdp_worst_case(z);
+            assert_eq!(a.k() as u64, z);
+            assert_eq!(a.n(), 1 + z * z + (z - 3) + z);
+            let b = simpledp_five_thirds(z);
+            assert_eq!(b.k(), 4);
+            assert_eq!(b.n(), 1 + 2 * z * z + z);
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Compacted LTSP instance: the requested files only, plus tape length and
+//! U-turn penalty. All scheduling algorithms of the paper consume only
+//! `(ℓ(f), r(f), x(f))` of requested files, `m` and `U` — gaps between
+//! requested files (unrequested data) enter through `ℓ(b) − r(left(b))`.
+
+use super::{Cost, Tape};
+
+/// A requested file: extent `[l, r)` and request multiplicity `x ≥ 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReqFile {
+    pub l: u64,
+    pub r: u64,
+    pub x: u64,
+}
+
+/// Errors raised when assembling an [`Instance`].
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum InstanceError {
+    #[error("instance must contain at least one requested file")]
+    Empty,
+    #[error("file {0} has zero or negative extent")]
+    BadExtent(usize),
+    #[error("file {0} has zero requests")]
+    ZeroRequests(usize),
+    #[error("files {0} and {1} overlap or are out of order")]
+    Overlap(usize, usize),
+    #[error("file {0} extends past the tape end")]
+    PastEnd(usize),
+}
+
+/// An LTSP instance over the requested files, indexed `0..k` left-to-right.
+///
+/// Precomputes the prefix sums used throughout the algorithms:
+/// `n_ℓ(i)` (requests strictly left of file `i`), `Σ ℓ(f)·x(f)` and
+/// `Σ x(f)` prefixes for SimpleDP's closed-form detour cost.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    tape_len: u64,
+    u: u64,
+    files: Vec<ReqFile>,
+    /// `nl[i]` = number of requests on files strictly left of file `i`.
+    /// `nl[k]` = total number of requests `n`.
+    nl: Vec<u64>,
+    /// `lx[i+1]` = Σ_{j ≤ i} ℓ(j)·x(j) (so `lx[0] = 0`).
+    lx: Vec<i128>,
+}
+
+impl Instance {
+    /// Build and validate an instance. Files must be sorted left-to-right,
+    /// disjoint, non-empty, with `x ≥ 1`, and fit within `[0, tape_len]`.
+    pub fn new(tape_len: u64, u: u64, files: Vec<ReqFile>) -> Result<Instance, InstanceError> {
+        if files.is_empty() {
+            return Err(InstanceError::Empty);
+        }
+        for (i, f) in files.iter().enumerate() {
+            if f.r <= f.l {
+                return Err(InstanceError::BadExtent(i));
+            }
+            if f.x == 0 {
+                return Err(InstanceError::ZeroRequests(i));
+            }
+            if f.r > tape_len {
+                return Err(InstanceError::PastEnd(i));
+            }
+            if i > 0 && files[i - 1].r > f.l {
+                return Err(InstanceError::Overlap(i - 1, i));
+            }
+        }
+        let mut nl = Vec::with_capacity(files.len() + 1);
+        let mut lx = Vec::with_capacity(files.len() + 1);
+        nl.push(0);
+        lx.push(0);
+        for f in &files {
+            nl.push(nl.last().unwrap() + f.x);
+            lx.push(lx.last().unwrap() + f.l as i128 * f.x as i128);
+        }
+        Ok(Instance { tape_len, u, files, nl, lx })
+    }
+
+    /// Build an instance from a full [`Tape`] and `(file index, multiplicity)`
+    /// request pairs (indices into `tape.files`, any order, merged if dup).
+    pub fn from_tape(
+        tape: &Tape,
+        requests: &[(usize, u64)],
+        u: u64,
+    ) -> Result<Instance, InstanceError> {
+        let mut counts = std::collections::BTreeMap::new();
+        for &(idx, x) in requests {
+            *counts.entry(idx).or_insert(0u64) += x;
+        }
+        let files = counts
+            .into_iter()
+            .map(|(idx, x)| {
+                let f = tape.files[idx];
+                ReqFile { l: f.left, r: f.right(), x }
+            })
+            .collect();
+        Instance::new(tape.len(), u, files)
+    }
+
+    /// Number of distinct requested files `n_req` (written `k` in the code).
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.files.len()
+    }
+
+    /// Total number of requests `n`.
+    #[inline]
+    pub fn n(&self) -> u64 {
+        *self.nl.last().unwrap()
+    }
+
+    /// Tape length `m`.
+    #[inline]
+    pub fn tape_len(&self) -> u64 {
+        self.tape_len
+    }
+
+    /// U-turn penalty.
+    #[inline]
+    pub fn u(&self) -> u64 {
+        self.u
+    }
+
+    /// Return a copy of this instance with a different U-turn penalty.
+    pub fn with_u(&self, u: u64) -> Instance {
+        let mut inst = self.clone();
+        inst.u = u;
+        inst
+    }
+
+    /// Left end `ℓ(i)` of requested file `i`.
+    #[inline]
+    pub fn l(&self, i: usize) -> u64 {
+        self.files[i].l
+    }
+
+    /// Right end `r(i)`.
+    #[inline]
+    pub fn r(&self, i: usize) -> u64 {
+        self.files[i].r
+    }
+
+    /// Size `s(i) = r(i) − ℓ(i)`.
+    #[inline]
+    pub fn s(&self, i: usize) -> u64 {
+        self.files[i].r - self.files[i].l
+    }
+
+    /// Multiplicity `x(i)`.
+    #[inline]
+    pub fn x(&self, i: usize) -> u64 {
+        self.files[i].x
+    }
+
+    /// `n_ℓ(i)`: number of requests on files strictly left of file `i`.
+    #[inline]
+    pub fn nl(&self, i: usize) -> u64 {
+        self.nl[i]
+    }
+
+    /// Prefix `Σ_{j < i} ℓ(j)·x(j)` (note: exclusive, `lx_prefix(0) = 0`).
+    #[inline]
+    pub fn lx_prefix(&self, i: usize) -> i128 {
+        self.lx[i]
+    }
+
+    /// `Σ_{c < f ≤ b} (ℓ(f) − ℓ(c))·x(f)` — the SimpleDP in-detour term,
+    /// computed from prefix sums in O(1).
+    pub fn in_detour_span_cost(&self, c: usize, b: usize) -> Cost {
+        debug_assert!(c <= b);
+        let sum_lx = self.lx[b + 1] - self.lx[c + 1];
+        let sum_x = (self.nl[b + 1] - self.nl[c + 1]) as i128;
+        sum_lx - self.l(c) as i128 * sum_x
+    }
+
+    /// The requested files slice.
+    pub fn files(&self) -> &[ReqFile] {
+        &self.files
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst3() -> Instance {
+        Instance::new(
+            100,
+            2,
+            vec![
+                ReqFile { l: 0, r: 10, x: 1 },
+                ReqFile { l: 20, r: 25, x: 3 },
+                ReqFile { l: 40, r: 70, x: 2 },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn accessors_and_prefixes() {
+        let i = inst3();
+        assert_eq!(i.k(), 3);
+        assert_eq!(i.n(), 6);
+        assert_eq!(i.s(2), 30);
+        assert_eq!(i.nl(0), 0);
+        assert_eq!(i.nl(1), 1);
+        assert_eq!(i.nl(2), 4);
+        assert_eq!(i.lx_prefix(3), 0 + 20 * 3 + 40 * 2);
+    }
+
+    #[test]
+    fn in_detour_span_cost_matches_naive() {
+        let i = inst3();
+        // c = 0, b = 2: Σ_{0<f≤2} (ℓ(f) − ℓ(0))·x(f) = 20*3 + 40*2 = 140
+        assert_eq!(i.in_detour_span_cost(0, 2), 140);
+        // c = 1, b = 2: (40-20)*2 = 40
+        assert_eq!(i.in_detour_span_cost(1, 2), 40);
+        // c = b: empty sum
+        assert_eq!(i.in_detour_span_cost(2, 2), 0);
+    }
+
+    #[test]
+    fn validation_errors() {
+        assert_eq!(Instance::new(10, 0, vec![]).unwrap_err(), InstanceError::Empty);
+        assert_eq!(
+            Instance::new(10, 0, vec![ReqFile { l: 5, r: 5, x: 1 }]).unwrap_err(),
+            InstanceError::BadExtent(0)
+        );
+        assert_eq!(
+            Instance::new(10, 0, vec![ReqFile { l: 0, r: 5, x: 0 }]).unwrap_err(),
+            InstanceError::ZeroRequests(0)
+        );
+        assert_eq!(
+            Instance::new(
+                10,
+                0,
+                vec![ReqFile { l: 0, r: 6, x: 1 }, ReqFile { l: 5, r: 8, x: 1 }]
+            )
+            .unwrap_err(),
+            InstanceError::Overlap(0, 1)
+        );
+        assert_eq!(
+            Instance::new(10, 0, vec![ReqFile { l: 0, r: 11, x: 1 }]).unwrap_err(),
+            InstanceError::PastEnd(0)
+        );
+    }
+
+    #[test]
+    fn from_tape_merges_duplicates() {
+        let t = Tape::from_sizes("T", &[10, 10, 10]);
+        let inst = Instance::from_tape(&t, &[(2, 1), (0, 2), (2, 3)], 5).unwrap();
+        assert_eq!(inst.k(), 2);
+        assert_eq!(inst.x(0), 2);
+        assert_eq!(inst.x(1), 4);
+        assert_eq!(inst.l(1), 20);
+        assert_eq!(inst.tape_len(), 30);
+    }
+}

@@ -1,0 +1,56 @@
+//! Problem model for the Linear Tape Scheduling Problem (LTSP).
+//!
+//! The model follows §3 of the paper: a linear tape of length `m` divided in
+//! disjoint files, a multiset of read requests over those files, a reading
+//! head starting at the right end of the tape, and a U-turn penalty `U`.
+//!
+//! Positions and sizes are in **bytes** (`u64`); service times and costs are
+//! exact **`i128`** values (byte-resolution positions up to 20 TB multiplied
+//! by up to ~15 k requests overflow `i64` products).
+
+pub mod adversarial;
+mod instance;
+mod tape;
+
+pub use instance::{Instance, InstanceError, ReqFile};
+pub use tape::{FileExtent, Tape};
+
+/// Exact cost / time type used across the crate.
+pub type Cost = i128;
+
+/// The `VirtualLB` lower bound of §3: `Σ_f x(f) · (m − ℓ(f) + s(f) + U)`,
+/// i.e. the cost if each request were served by its own dedicated head.
+pub fn virtual_lb(inst: &Instance) -> Cost {
+    let m = inst.tape_len() as Cost;
+    let u = inst.u() as Cost;
+    (0..inst.k())
+        .map(|i| {
+            inst.x(i) as Cost * (m - inst.l(i) as Cost + inst.s(i) as Cost + u)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_lb_single_file() {
+        // One file [10, 20) on a tape of length 100, 3 requests, U = 7.
+        let inst = Instance::new(100, 7, vec![ReqFile { l: 10, r: 20, x: 3 }]).unwrap();
+        // 3 * (100 - 10 + 10 + 7) = 3 * 107 = 321
+        assert_eq!(virtual_lb(&inst), 321);
+    }
+
+    #[test]
+    fn virtual_lb_two_files() {
+        let inst = Instance::new(
+            100,
+            0,
+            vec![ReqFile { l: 0, r: 5, x: 1 }, ReqFile { l: 50, r: 60, x: 2 }],
+        )
+        .unwrap();
+        // f1: 1*(100-0+5+0)=105 ; f2: 2*(100-50+10+0)=120
+        assert_eq!(virtual_lb(&inst), 225);
+    }
+}

@@ -1,0 +1,121 @@
+//! Physical tape description: the full sequence of files (requested or not)
+//! as stored in the mass-storage catalog. This is the on-tape view used by
+//! the dataset loader and the library simulator; scheduling algorithms work
+//! on the compacted [`super::Instance`] view (requested files only).
+
+/// A file (or aggregate) extent on the tape, `[left, left + size)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FileExtent {
+    /// Distance from the left end of the tape to the left of the file.
+    pub left: u64,
+    /// File size in bytes.
+    pub size: u64,
+}
+
+impl FileExtent {
+    /// Right end of the file.
+    pub fn right(&self) -> u64 {
+        self.left + self.size
+    }
+}
+
+/// A full tape: an ordered, contiguous partition of `[0, len)` into files.
+///
+/// Mirrors the dataset's `tapes/TAPEXXX.txt` description (segments with
+/// cumulative positions and sizes, indexed from 1 for the leftmost file).
+#[derive(Debug, Clone)]
+pub struct Tape {
+    /// Tape identifier (e.g. `TAPE042`).
+    pub name: String,
+    /// Files left-to-right. `files[0].left == 0` and files are contiguous.
+    pub files: Vec<FileExtent>,
+}
+
+impl Tape {
+    /// Build a tape from consecutive file sizes (files are contiguous,
+    /// starting at position 0), as in the dataset's `segment_size` column.
+    pub fn from_sizes(name: impl Into<String>, sizes: &[u64]) -> Tape {
+        let mut files = Vec::with_capacity(sizes.len());
+        let mut pos = 0u64;
+        for &s in sizes {
+            files.push(FileExtent { left: pos, size: s });
+            pos += s;
+        }
+        Tape { name: name.into(), files }
+    }
+
+    /// Total tape length `m` (right end of the last file).
+    pub fn len(&self) -> u64 {
+        self.files.last().map(|f| f.right()).unwrap_or(0)
+    }
+
+    /// Number of files `n_f` on the tape.
+    pub fn n_files(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    /// Average file ("segment") size, used to derive the paper's U values.
+    pub fn mean_file_size(&self) -> f64 {
+        if self.files.is_empty() {
+            return 0.0;
+        }
+        self.len() as f64 / self.files.len() as f64
+    }
+
+    /// Coefficient of variation of file sizes (stddev / mean), as a fraction.
+    pub fn file_size_cv(&self) -> f64 {
+        if self.files.is_empty() {
+            return 0.0;
+        }
+        let mean = self.mean_file_size();
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = self
+            .files
+            .iter()
+            .map(|f| {
+                let d = f.size as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / self.files.len() as f64;
+        var.sqrt() / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_sizes_builds_contiguous_extents() {
+        let t = Tape::from_sizes("T", &[5, 10, 3]);
+        assert_eq!(t.n_files(), 3);
+        assert_eq!(t.files[0], FileExtent { left: 0, size: 5 });
+        assert_eq!(t.files[1], FileExtent { left: 5, size: 10 });
+        assert_eq!(t.files[2], FileExtent { left: 15, size: 3 });
+        assert_eq!(t.len(), 18);
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tape::from_sizes("T", &[10, 10, 10]);
+        assert_eq!(t.mean_file_size(), 10.0);
+        assert_eq!(t.file_size_cv(), 0.0);
+        let t2 = Tape::from_sizes("T2", &[5, 15]);
+        assert!((t2.file_size_cv() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_tape() {
+        let t = Tape::from_sizes("E", &[]);
+        assert_eq!(t.len(), 0);
+        assert!(t.is_empty());
+        assert_eq!(t.mean_file_size(), 0.0);
+    }
+}

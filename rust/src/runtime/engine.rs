@@ -1,0 +1,174 @@
+//! PJRT client wrapper: compile-once / execute-many over HLO-text artifacts.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Errors from the XLA runtime layer.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifact not found: {0} (run `make artifacts`)")]
+    MissingArtifact(PathBuf),
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("artifact {name} returned {got} outputs, expected {expected}")]
+    BadArity { name: String, got: usize, expected: usize },
+}
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by
+/// artifact name. Thread-safe: executions are internally serialized by the
+/// mutex only during cache lookup; PJRT executions themselves run without
+/// holding it.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create an engine loading artifacts from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Engine, RuntimeError> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            dir: dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// True if `name.hlo.txt` exists in the artifact directory.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Compile (or fetch from cache) the artifact `name`.
+    pub fn load(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>, RuntimeError> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(RuntimeError::MissingArtifact(path));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact path is valid UTF-8"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` on f64 input tensors, returning the first
+    /// (tuple-unwrapped) output as a flat f64 vector.
+    ///
+    /// `inputs` are `(data, shape)` pairs; jax artifacts are lowered with
+    /// `return_tuple=True`, so the single output is a 1-tuple.
+    pub fn run_f64(
+        &self,
+        name: &str,
+        inputs: &[(&[f64], &[i64])],
+    ) -> Result<Vec<f64>, RuntimeError> {
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                if shape.len() == 1 && shape[0] as usize == data.len() {
+                    Ok(lit)
+                } else {
+                    lit.reshape(shape)
+                }
+            })
+            .collect::<Result<_, xla::Error>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| RuntimeError::BadArity {
+                name: name.to_string(),
+                got: 0,
+                expected: 1,
+            })?
+            .to_literal_sync()?;
+        let out = first.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// HLO text for a trivial computation `f(x) = (x * 2 + 1,)` over
+    /// f64[4], hand-written so the engine tests do not depend on `make
+    /// artifacts` having run.
+    const DOUBLER_HLO: &str = r#"HloModule doubler, entry_computation_layout={(f64[4]{0})->(f64[4]{0})}
+
+ENTRY main {
+  x = f64[4]{0} parameter(0)
+  two = f64[] constant(2)
+  btwo = f64[4]{0} broadcast(two), dimensions={}
+  one = f64[] constant(1)
+  bone = f64[4]{0} broadcast(one), dimensions={}
+  mul = f64[4]{0} multiply(x, btwo)
+  add = f64[4]{0} add(mul, bone)
+  ROOT t = (f64[4]{0}) tuple(add)
+}
+"#;
+
+    fn engine_with_doubler() -> (Engine, std::path::PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("tapesched_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("doubler.hlo.txt"), DOUBLER_HLO).unwrap();
+        (Engine::new(&dir).expect("PJRT CPU client"), dir)
+    }
+
+    #[test]
+    fn compiles_and_runs_hlo_text() {
+        let (eng, dir) = engine_with_doubler();
+        assert!(eng.has_artifact("doubler"));
+        let out = eng
+            .run_f64("doubler", &[(&[1.0, 2.0, 3.0, 4.0], &[4])])
+            .unwrap();
+        assert_eq!(out, vec![3.0, 5.0, 7.0, 9.0]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn caches_compiled_executables() {
+        let (eng, dir) = engine_with_doubler();
+        let a = eng.load("doubler").unwrap();
+        let b = eng.load("doubler").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let (eng, dir) = engine_with_doubler();
+        match eng.run_f64("nope", &[]) {
+            Err(RuntimeError::MissingArtifact(p)) => {
+                assert!(p.ends_with("nope.hlo.txt"));
+            }
+            other => panic!("expected MissingArtifact, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

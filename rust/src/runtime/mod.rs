@@ -1,0 +1,25 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts produced
+//! by `python/compile/aot.py` (`make artifacts`).
+//!
+//! Python runs once at build time; this module is how the Rust hot path
+//! runs the resulting computation. The interchange format is **HLO text**
+//! (`artifacts/*.hlo.txt`): jax ≥ 0.5 emits protos with 64-bit instruction
+//! ids that the crate's bundled XLA rejects, while the text parser
+//! reassigns ids and round-trips cleanly.
+//!
+//! - [`Engine`] — PJRT CPU client + artifact cache (compile once per
+//!   artifact, execute many times).
+//! - [`XlaSimpleDp`] — the accelerated SimpleDP evaluation backend: pads an
+//!   instance into a `(K, NS)` shape bucket, runs the dense wavefront
+//!   artifact, and reconstructs the detour list in Rust from the returned
+//!   table values (cross-validated against the exact `i128` implementation
+//!   in `sched::simpledp_dense`).
+
+mod engine;
+mod xla_simpledp;
+
+pub use engine::{Engine, RuntimeError};
+pub use xla_simpledp::{ShapeBucket, XlaSimpleDp, DEFAULT_BUCKETS, POS_SCALE};
+
+/// Default artifact directory (relative to the repo root / working dir).
+pub const ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,101 @@
+//! Exhaustive search over detour sets — the exactness oracle for tests.
+//!
+//! Enumerates every subset of the `k(k+1)/2` possible detours `(a, b)` and
+//! evaluates each with the ground-truth simulator. By Lemma 1 an optimal
+//! solution is describable as a (strictly laminar) detour set, so the
+//! minimum over all subsets is the true optimum. Exponential: use only for
+//! `k ≤ ~6`.
+
+use crate::model::Instance;
+use crate::sched::{Detour, Schedule, Scheduler};
+use crate::sim::evaluate;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BruteForce {
+    /// Safety cap on `k`: enumeration is `2^(k(k+1)/2)`.
+    pub max_k: usize,
+}
+
+impl Default for BruteForce {
+    fn default() -> Self {
+        BruteForce { max_k: 6 }
+    }
+}
+
+impl Scheduler for BruteForce {
+    fn name(&self) -> String {
+        "BruteForce".into()
+    }
+
+    fn schedule(&self, inst: &Instance) -> Schedule {
+        let k = inst.k();
+        assert!(
+            k <= self.max_k,
+            "BruteForce is exponential; refusing k={k} > max_k={}",
+            self.max_k
+        );
+        let mut pairs = Vec::new();
+        for a in 0..k {
+            for b in a..k {
+                pairs.push(Detour::new(a, b));
+            }
+        }
+        let n_pairs = pairs.len();
+        assert!(n_pairs < 64);
+        let mut best: Option<(i128, Schedule)> = None;
+        for mask in 0u64..(1u64 << n_pairs) {
+            let detours: Schedule = (0..n_pairs)
+                .filter(|&i| mask >> i & 1 == 1)
+                .map(|i| pairs[i])
+                .collect();
+            let cost = evaluate(inst, &detours).cost;
+            if best.as_ref().map_or(true, |(c, _)| cost < *c) {
+                best = Some((cost, detours));
+            }
+        }
+        best.unwrap().1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{virtual_lb, ReqFile};
+
+    #[test]
+    fn finds_the_obvious_detour() {
+        // Urgent small file far right of the start: serving it first wins.
+        let inst = Instance::new(
+            1_000,
+            0,
+            vec![ReqFile { l: 0, r: 10, x: 1 }, ReqFile { l: 900, r: 910, x: 50 }],
+        )
+        .unwrap();
+        let sched = BruteForce::default().schedule(&inst);
+        let cost = evaluate(&inst, &sched).cost;
+        // Detour (1,1) then sweep: f1 at 110, f0 at... vs no detour.
+        let with_detour = evaluate(&inst, &[Detour::atomic(1)]).cost;
+        assert_eq!(cost, with_detour);
+        assert!(cost >= virtual_lb(&inst));
+    }
+
+    #[test]
+    fn single_file_needs_no_detour() {
+        let inst =
+            Instance::new(100, 5, vec![ReqFile { l: 40, r: 50, x: 2 }]).unwrap();
+        let sched = BruteForce::default().schedule(&inst);
+        let best = evaluate(&inst, &sched).cost;
+        assert_eq!(best, evaluate(&inst, &[]).cost);
+        assert_eq!(best, virtual_lb(&inst));
+    }
+
+    #[test]
+    #[should_panic]
+    fn refuses_large_k() {
+        let files: Vec<ReqFile> = (0..10)
+            .map(|i| ReqFile { l: i * 10, r: i * 10 + 5, x: 1 })
+            .collect();
+        let inst = Instance::new(200, 0, files).unwrap();
+        let _ = BruteForce::default().schedule(&inst);
+    }
+}

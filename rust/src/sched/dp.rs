@@ -1,0 +1,484 @@
+//! **DP** — the paper's exact polynomial algorithm (§4.3–4.4) — and its
+//! span-restricted variant **LogDP** (§4.5).
+//!
+//! Cell `T[a, b, n_skip]` is the extra cost (on top of `VirtualLB`) of the
+//! best head strategy between `r(b)` and `ℓ(a)` given that a detour
+//! `(a, f≥b)` exists, no detour `(f₁, f₂)` with `a < f₁ < b < f₂` exists,
+//! and exactly `n_skip` file *requests* are skipped when the head first
+//! reaches `r(b)`. Recurrence:
+//!
+//! ```text
+//! T[b, b, ns] = 2·s(b)·(ns + n_ℓ(b))
+//! skip(a,b,ns)     = T[a, b−1, ns + x(b)]
+//!                  + 2·(r(b) − r(b−1))·(ns + n_ℓ(a))
+//!                  + 2·(ℓ(b) − r(b−1))·x(b)
+//! detour_c(a,b,ns) = T[a, c−1, ns] + T[c, b, ns]
+//!                  + 2·(r(b) − r(c−1))·(ns + n_ℓ(a))
+//!                  + 2·U·(ns + n_ℓ(c))
+//! T[a, b, ns] = min(skip, min_{c ∈ (a, b]} detour_c)
+//! OPT = T[f₁, f_{n_f}, 0] + VirtualLB
+//! ```
+//!
+//! The table is *sparsely* reachable in `n_skip`: we memoize top-down so
+//! only cells actually touched from the root are computed (the paper's own
+//! implementation does the same; the `O(n_req³·n)` bound is a worst case).
+//!
+//! **LogDP** limits `c` to at most `⌊λ·log₂ n_req⌋` requested files left of
+//! `b`, shrinking both the reachable table and the per-cell scan; it is
+//! optimal among schedules whose detours span at most that many files.
+
+use std::collections::HashMap;
+
+use crate::model::{virtual_lb, Cost, Instance};
+use crate::sched::{Detour, Schedule, Scheduler};
+use crate::util::hash::FxHashMap;
+
+/// The exact algorithm.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Dp;
+
+/// `LogDP(λ)`: detour span (in requested files) capped at `⌊λ·log₂ k⌋`.
+#[derive(Debug, Clone, Copy)]
+pub struct LogDp {
+    pub lambda: f64,
+}
+
+impl LogDp {
+    pub fn new(lambda: f64) -> LogDp {
+        assert!(lambda > 0.0);
+        LogDp { lambda }
+    }
+
+    /// Maximum detour span in requested files for instance size `k`.
+    pub fn span(&self, k: usize) -> usize {
+        let lg = (k.max(2) as f64).log2();
+        ((self.lambda * lg).floor() as usize).max(1)
+    }
+}
+
+impl Scheduler for Dp {
+    fn name(&self) -> String {
+        "DP".into()
+    }
+
+    fn schedule(&self, inst: &Instance) -> Schedule {
+        DpSolver::new(inst, usize::MAX).solve().1
+    }
+}
+
+impl Scheduler for LogDp {
+    fn name(&self) -> String {
+        format!("LogDP({})", self.lambda)
+    }
+
+    fn schedule(&self, inst: &Instance) -> Schedule {
+        let span = self.span(inst.k());
+        DpSolver::new(inst, span).solve().1
+    }
+}
+
+impl Dp {
+    /// Optimal cost (root cell + VirtualLB) without reconstructing detours.
+    pub fn optimal_cost(inst: &Instance) -> Cost {
+        let mut s = DpSolver::new(inst, usize::MAX);
+        let k = inst.k();
+        let root = s.cell(0, k - 1, 0);
+        root + virtual_lb(inst)
+    }
+}
+
+/// The arbitrary-starting-position extension (paper's conclusion): the
+/// head starts at position `x_pos` instead of the right end of the tape.
+///
+/// As the paper observes, it suffices to forbid detours *starting* on the
+/// right of `x_pos`: such a schedule is exactly a right-end schedule whose
+/// initial `m → x_pos` leg serves nothing, so for every candidate schedule
+/// `cost_from(x_pos) = cost_from(m) − n·(m − x_pos)` and the argmin is
+/// preserved. [`Scheduler::schedule`] therefore returns the optimal detour
+/// list for a head starting at `x_pos`.
+#[derive(Debug, Clone, Copy)]
+pub struct DpFromStart {
+    pub x_pos: u64,
+}
+
+impl Scheduler for DpFromStart {
+    fn name(&self) -> String {
+        format!("DP[start={}]", self.x_pos)
+    }
+
+    fn schedule(&self, inst: &Instance) -> Schedule {
+        DpSolver::new(inst, usize::MAX)
+            .with_max_start(self.x_pos)
+            .solve()
+            .1
+    }
+}
+
+impl DpFromStart {
+    /// Optimal cost for a head starting at `x_pos` (requires `x_pos ≥
+    /// r(f₁)` so every file remains servable without moving right first;
+    /// costs are measured from t = 0 at `x_pos`).
+    pub fn optimal_cost(&self, inst: &Instance) -> Cost {
+        let (cost_from_m, _) = DpSolver::new(inst, usize::MAX)
+            .with_max_start(self.x_pos)
+            .solve();
+        let delta = inst.tape_len() as Cost - self.x_pos as Cost;
+        cost_from_m - inst.n() as Cost * delta
+    }
+}
+
+/// Decision stored per cell for reconstruction: `u32::MAX` = skip,
+/// otherwise the chosen `c`.
+const SKIP: u32 = u32::MAX;
+
+/// Sentinel for "cell not yet computed" in a layer.
+const UNSET: Cost = Cost::MIN;
+
+/// One `n_skip` layer of the memo: the `(a, b)` plane for a fixed skip
+/// count, as a flat triangular-ish array indexed `a·k + b`.
+///
+/// The detour scan of a cell reads ~`2·span` cells **all within two
+/// layers** (`ns` and `ns + x(b)`), so keeping a layer contiguous turns
+/// what was a 100-ns cache miss per lookup on a single 240 MB hashmap into
+/// L1/L2 hits — the dominant win of the §Perf pass (see EXPERIMENTS.md).
+struct Layer {
+    cells: Box<[(Cost, u32)]>,
+}
+
+impl Layer {
+    fn new(k: usize) -> Layer {
+        // Triangular: only a <= b pairs exist (see DpSolver::idx).
+        Layer { cells: vec![(UNSET, 0); k * (k + 1) / 2].into_boxed_slice() }
+    }
+}
+
+pub(crate) struct DpSolver<'a> {
+    inst: &'a Instance,
+    /// Max `b − c` allowed in `detour_c` (LogDP restriction).
+    span: usize,
+    /// Highest index allowed to *start* a detour (arbitrary-start-position
+    /// extension, paper's conclusion): `k - 1` = unrestricted.
+    c_max: usize,
+    k: usize,
+    /// Memo: `n_skip` → the (a, b) plane for that skip count.
+    layers: FxHashMap<u64, Layer>,
+}
+
+impl<'a> DpSolver<'a> {
+    pub(crate) fn new(inst: &'a Instance, span: usize) -> DpSolver<'a> {
+        let k = inst.k();
+        assert!(k < (1 << 12), "DP supports up to 4095 requested files");
+        DpSolver { inst, span, c_max: k - 1, k, layers: HashMap::default() }
+    }
+
+    /// Restrict detours to start at files whose left end is at most
+    /// `x_pos` (the head's arbitrary starting position).
+    pub(crate) fn with_max_start(mut self, x_pos: u64) -> DpSolver<'a> {
+        // Largest index c with l(c) <= x_pos; detours from righter files
+        // can never be met by a head starting at x_pos.
+        self.c_max = (0..self.k).rev().find(|&c| self.inst.l(c) <= x_pos).unwrap_or(0);
+        self
+    }
+
+    /// Triangular index for `a <= b`: row `b` holds `b + 1` cells.
+    #[inline]
+    fn idx(&self, a: usize, b: usize) -> usize {
+        debug_assert!(a <= b && b < self.k);
+        b * (b + 1) / 2 + a
+    }
+
+    fn lookup(&self, a: usize, b: usize, ns: u64) -> Option<Cost> {
+        let v = self.layers.get(&ns)?.cells[self.idx(a, b)].0;
+        (v != UNSET).then_some(v)
+    }
+
+    /// Compute `T[a, b, ns]` — memoized, iterative two-phase DFS.
+    ///
+    /// Phase 0 of a frame pushes every missing dependency; phase 1
+    /// (re-visited once the deps completed) evaluates the cell in a single
+    /// O(span) scan over exactly two memo layers.
+    pub(crate) fn cell(&mut self, a: usize, b: usize, ns: u64) -> Cost {
+        if let Some(v) = self.lookup(a, b, ns) {
+            return v;
+        }
+        let k = self.k;
+        // (a, b, ns, phase)
+        let mut stack: Vec<(usize, usize, u64, u8)> = vec![(a, b, ns, 0)];
+        while let Some((fa, fb, fns, phase)) = stack.pop() {
+            if fa == fb {
+                let inst = self.inst;
+                let v = 2 * inst.s(fb) as Cost * (fns as Cost + inst.nl(fb) as Cost);
+                let i = self.idx(fa, fb);
+                self.layers.entry(fns).or_insert_with(|| Layer::new(k)).cells[i] = (v, SKIP);
+                continue;
+            }
+            if phase == 0 {
+                if self.lookup(fa, fb, fns).is_some() {
+                    continue;
+                }
+                // Re-visit for evaluation once the deps below are done.
+                stack.push((fa, fb, fns, 1));
+                let xb = self.inst.x(fb);
+                {
+                    // Layer refs fetched once; dep checks are array reads.
+                    let lay_same = self.layers.get(&fns).map(|l| &l.cells);
+                    let lay_skip = self.layers.get(&(fns + xb)).map(|l| &l.cells);
+                    let missing = |lay: Option<&Box<[(Cost, u32)]>>, i: usize| {
+                        lay.map_or(true, |c| c[i].0 == UNSET)
+                    };
+                    if missing(lay_skip, self.idx(fa, fb - 1)) {
+                        stack.push((fa, fb - 1, fns + xb, 0));
+                    }
+                    for c in self.c_lo(fa, fb)..=fb.min(self.c_max) {
+                        if missing(lay_same, self.idx(fa, c - 1)) {
+                            stack.push((fa, c - 1, fns, 0));
+                        }
+                        if missing(lay_same, self.idx(c, fb)) {
+                            stack.push((c, fb, fns, 0));
+                        }
+                    }
+                }
+            } else {
+                let vc = self.eval(fa, fb, fns);
+                let i = self.idx(fa, fb);
+                self.layers.entry(fns).or_insert_with(|| Layer::new(k)).cells[i] = vc;
+            }
+        }
+        self.lookup(a, b, ns).expect("root cell computed")
+    }
+
+    /// Lowest detour start `c` for a cell (LogDP span cap `b − c`).
+    #[inline]
+    fn c_lo(&self, a: usize, b: usize) -> usize {
+        if self.span == usize::MAX {
+            a + 1
+        } else {
+            (a + 1).max(b.saturating_sub(self.span))
+        }
+    }
+
+    /// Evaluate a cell whose dependencies are all memoized.
+    fn eval(&self, a: usize, b: usize, ns: u64) -> (Cost, u32) {
+        let inst = self.inst;
+        debug_assert!(a < b);
+        let skip_dep = self.layers[&(ns + inst.x(b))].cells[self.idx(a, b - 1)].0;
+        debug_assert_ne!(skip_dep, UNSET);
+
+        // skip(a, b, ns)
+        let skip = skip_dep
+            + 2 * (inst.r(b) - inst.r(b - 1)) as Cost * (ns as Cost + inst.nl(a) as Cost)
+            + 2 * (inst.l(b) - inst.r(b - 1)) as Cost * inst.x(b) as Cost;
+        let mut best = (skip, SKIP);
+
+        // detour_c(a, b, ns) for c ∈ (a, b], with the LogDP span cap and
+        // the arbitrary-start cap. The range may be empty (harsh c_max),
+        // in which case layer `ns` may not even exist yet.
+        let (lo, hi) = (self.c_lo(a, b), b.min(self.c_max));
+        if lo <= hi {
+            let lay_same = &self.layers[&ns].cells;
+            let nla = inst.nl(a) as Cost;
+            let u2 = 2 * inst.u() as Cost;
+            let rb = inst.r(b) as Cost;
+            for c in lo..=hi {
+                let t_left = lay_same[self.idx(a, c - 1)].0;
+                let t_in = lay_same[self.idx(c, b)].0;
+                debug_assert!(t_left != UNSET && t_in != UNSET);
+                let v = t_left
+                    + t_in
+                    + 2 * (rb - inst.r(c - 1) as Cost) * (ns as Cost + nla)
+                    + u2 * (ns as Cost + inst.nl(c) as Cost);
+                if v < best.0 {
+                    best = (v, c as u32);
+                }
+            }
+        }
+        best
+    }
+
+    /// Solve from the root and reconstruct the detour list.
+    pub(crate) fn solve(mut self) -> (Cost, Schedule) {
+        let k = self.inst.k();
+        let root = self.cell(0, k - 1, 0);
+        let opt = root + virtual_lb(self.inst);
+        // Reconstruct: walk decisions. A cell's context detour (a, ·) is
+        // implicit (root = final sweep); each detour_c decision materializes
+        // the detour (c, b).
+        let mut detours = Vec::new();
+        let mut todo = vec![(0usize, k - 1, 0u64)];
+        while let Some((a, b, ns)) = todo.pop() {
+            if a == b {
+                continue;
+            }
+            let (_, choice) = self.layers[&ns].cells[self.idx(a, b)];
+            if choice == SKIP {
+                todo.push((a, b - 1, ns + self.inst.x(b)));
+            } else {
+                let c = choice as usize;
+                detours.push(Detour::new(c, b));
+                // strategy left of the detour (may itself contain detours)
+                todo.push((a, c - 1, ns));
+                // strategy inside the detour (c, b)
+                todo.push((c, b, ns));
+            }
+        }
+        (opt, detours)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ReqFile;
+    use crate::sched::{is_strictly_laminar, BruteForce, Gs, NoDetour};
+    use crate::sim::evaluate;
+
+    fn inst(u: u64, files: &[(u64, u64, u64)], m: u64) -> Instance {
+        Instance::new(m, u, files.iter().map(|&(l, r, x)| ReqFile { l, r, x }).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn two_files_hand_checked() {
+        // Contiguous files; worked through §4.3's formulas by hand in the
+        // design notes: OPT = min(no-detour, atomic detour on f2).
+        for (x1, x2, u) in [(1u64, 1u64, 0u64), (5, 1, 0), (1, 5, 0), (3, 4, 7), (10, 1, 100)] {
+            let i = inst(u, &[(0, 10, x1), (10, 30, x2)], 50);
+            let (opt, sched) = DpSolver::new(&i, usize::MAX).solve();
+            let simulated = evaluate(&i, &sched).cost;
+            assert_eq!(opt, simulated, "predicted vs simulated, x=({x1},{x2}) U={u}");
+            let no_detour = evaluate(&i, &[]).cost;
+            let detour2 = evaluate(&i, &[Detour::atomic(1)]).cost;
+            assert_eq!(opt, no_detour.min(detour2));
+        }
+    }
+
+    #[test]
+    fn matches_bruteforce_on_fixtures() {
+        let cases = vec![
+            inst(0, &[(0, 5, 1), (10, 12, 9), (40, 60, 1)], 80),
+            inst(7, &[(0, 5, 1), (10, 12, 9), (40, 60, 1)], 80),
+            inst(0, &[(5, 6, 2), (6, 30, 1), (31, 32, 8), (60, 61, 3)], 100),
+            inst(3, &[(5, 6, 2), (6, 30, 1), (31, 32, 8), (60, 61, 3)], 100),
+            inst(1, &[(0, 1, 1), (2, 3, 1), (4, 5, 1), (6, 7, 1), (8, 9, 1)], 10),
+        ];
+        for i in cases {
+            let (opt, sched) = DpSolver::new(&i, usize::MAX).solve();
+            assert_eq!(opt, evaluate(&i, &sched).cost, "self-consistency");
+            let bf = BruteForce::default().schedule(&i);
+            assert_eq!(opt, evaluate(&i, &bf).cost, "DP vs brute force");
+            assert!(is_strictly_laminar(&sched), "laminar: {:?}", sched);
+        }
+    }
+
+    #[test]
+    fn never_worse_than_baselines() {
+        let i = inst(
+            11,
+            &[(0, 4, 3), (8, 20, 1), (25, 26, 14), (40, 70, 2), (90, 95, 6)],
+            120,
+        );
+        let opt = Dp::optimal_cost(&i);
+        for s in [&NoDetour as &dyn Scheduler, &Gs] {
+            assert!(opt <= evaluate(&i, &s.schedule(&i)).cost, "vs {}", s.name());
+        }
+        assert!(opt >= virtual_lb(&i));
+    }
+
+    #[test]
+    fn logdp_spans() {
+        assert_eq!(LogDp::new(1.0).span(256), 8);
+        assert_eq!(LogDp::new(5.0).span(256), 40);
+        assert_eq!(LogDp::new(1.0).span(2), 1);
+        assert_eq!(LogDp::new(0.1).span(4), 1); // floor→0 clamped to 1
+    }
+
+    #[test]
+    fn logdp_between_gs_and_dp() {
+        let i = inst(
+            2,
+            &[(0, 4, 3), (8, 20, 1), (25, 26, 14), (40, 70, 2), (90, 95, 6)],
+            120,
+        );
+        let opt = Dp::optimal_cost(&i);
+        let gs = evaluate(&i, &Gs.schedule(&i)).cost;
+        for lambda in [1.0, 5.0] {
+            let c = evaluate(&i, &LogDp::new(lambda).schedule(&i)).cost;
+            assert!(c >= opt && c <= gs, "λ={lambda}: {opt} <= {c} <= {gs}");
+        }
+        // λ large enough ⇒ LogDP == DP.
+        let c = evaluate(&i, &LogDp::new(100.0).schedule(&i)).cost;
+        assert_eq!(c, opt);
+    }
+
+    #[test]
+    fn from_start_restricts_detours_and_stays_optimal() {
+        use crate::sim::evaluate_from;
+        // Urgent file far right: unrestricted DP detours on it, but a head
+        // starting left of it cannot.
+        let i = inst(2, &[(0, 10, 1), (200, 210, 1), (800, 810, 30)], 1000);
+        for x_pos in [1000u64, 600, 150] {
+            let solver = DpFromStart { x_pos };
+            let sched = solver.schedule(&i);
+            for d in &sched {
+                assert!(i.l(d.a) <= x_pos, "detour {d:?} beyond start {x_pos}");
+            }
+            // Optimal among ALL laminar schedules whose detours start <= x_pos:
+            // enumerate via brute force over detour subsets.
+            let k = i.k();
+            let mut pairs = Vec::new();
+            for a in 0..k {
+                if i.l(a) <= x_pos {
+                    for b in a..k {
+                        pairs.push(Detour::new(a, b));
+                    }
+                }
+            }
+            let mut best = Cost::MAX;
+            for mask in 0u32..(1 << pairs.len()) {
+                let ds: Vec<Detour> = (0..pairs.len())
+                    .filter(|&j| mask >> j & 1 == 1)
+                    .map(|j| pairs[j])
+                    .collect();
+                best = best.min(evaluate_from(&i, &ds, x_pos).cost);
+            }
+            assert_eq!(evaluate_from(&i, &sched, x_pos).cost, best, "x_pos={x_pos}");
+            // And the documented cost identity.
+            let delta = (i.tape_len() - x_pos) as Cost * i.n() as Cost;
+            assert_eq!(
+                evaluate_from(&i, &sched, x_pos).cost,
+                evaluate(&i, &sched).cost - delta
+            );
+            assert_eq!(solver.optimal_cost(&i), best);
+        }
+    }
+
+    #[test]
+    fn from_start_at_tape_end_equals_plain_dp() {
+        let i = inst(7, &[(0, 4, 3), (8, 20, 1), (25, 26, 14), (40, 70, 2)], 120);
+        let plain = evaluate(&i, &Dp.schedule(&i)).cost;
+        let ext = DpFromStart { x_pos: i.tape_len() };
+        assert_eq!(evaluate(&i, &ext.schedule(&i)).cost, plain);
+        assert_eq!(ext.optimal_cost(&i), plain);
+    }
+
+    #[test]
+    fn uturn_penalty_changes_the_optimal_structure() {
+        // With U = 0 a detour is worth it; with a harsh U it is not.
+        let i0 = inst(0, &[(0, 100, 1), (500, 501, 30)], 1000);
+        let (_, s0) = DpSolver::new(&i0, usize::MAX).solve();
+        assert!(!s0.is_empty(), "cheap U-turns: serve the urgent file first");
+        let i1 = i0.with_u(1_000_000);
+        let (_, s1) = DpSolver::new(&i1, usize::MAX).solve();
+        assert!(s1.is_empty(), "harsh U-turns: a single sweep is optimal");
+    }
+}
+
+impl<'a> DpSolver<'a> {
+    /// Number of memoized cells (diagnostics).
+    pub(crate) fn memo_len(&self) -> usize {
+        self.layers
+            .values()
+            .map(|l| l.cells.iter().filter(|c| c.0 != UNSET).count())
+            .sum()
+    }
+}

@@ -1,0 +1,60 @@
+//! **GS** — Greedy Scheduling (§4.2, Appendix B.2): one atomic detour per
+//! requested file, i.e. every file is read as soon as the head reaches it.
+//! A 3-approximation when `U = 0` [Cardonha & Real], with no guarantee under
+//! U-turn penalties.
+
+use crate::model::Instance;
+use crate::sched::{Detour, Schedule, Scheduler};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Gs;
+
+impl Scheduler for Gs {
+    fn name(&self) -> String {
+        "GS".into()
+    }
+
+    fn schedule(&self, inst: &Instance) -> Schedule {
+        (0..inst.k()).map(Detour::atomic).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ReqFile;
+    use crate::sim::evaluate;
+
+    #[test]
+    fn reads_every_file_on_sight() {
+        let inst = Instance::new(
+            100,
+            0,
+            vec![ReqFile { l: 10, r: 20, x: 5 }, ReqFile { l: 60, r: 80, x: 1 }],
+        )
+        .unwrap();
+        let out = evaluate(&inst, &Gs.schedule(&inst));
+        // f1: 100→60 (40), served at 60. Back at 60 (80)... then 60→10 (130),
+        // served f0 at 140.
+        assert_eq!(out.service, vec![140, 60]);
+    }
+
+    #[test]
+    fn worst_case_shape_small_urgent_left_of_large_single() {
+        // §4.2's worst case: many requests on a small file left of a large
+        // single-request file. GS pays the big detour before the urgent file.
+        let inst = Instance::new(
+            2_000,
+            0,
+            vec![ReqFile { l: 0, r: 10, x: 100 }, ReqFile { l: 1_000, r: 2_000, x: 1 }],
+        )
+        .unwrap();
+        let gs = evaluate(&inst, &Gs.schedule(&inst));
+        let nodetour = evaluate(&inst, &[]);
+        // GS detours through the 1000-long file first: the 100 urgent
+        // requests on f0 are all delayed by 2·s(f1) = 2000.
+        assert_eq!(gs.service, vec![4_010, 2_000]);
+        assert_eq!(nodetour.service, vec![2_010, 4_000]);
+        assert!(nodetour.cost < gs.cost);
+    }
+}

@@ -1,0 +1,174 @@
+//! Scheduling algorithms for LTSP.
+//!
+//! Every algorithm implements [`Scheduler`] and returns a [`Schedule`]: a
+//! list of detours over requested-file indices. A detour `(a, b)` means the
+//! head, upon first attaining `ℓ(a)`, turns, goes to `r(b)` and comes back
+//! to `ℓ(a)` (§4.1). The implicit final detour `(f₁, f_{n_f})` — the final
+//! left-to-right sweep serving skipped files — is never listed explicitly.
+//!
+//! Algorithms (paper §4.2–4.5, Appendix B):
+//! - [`NoDetour`] — makespan-optimal straight sweep.
+//! - [`Gs`] — Greedy Scheduling, one atomic detour per requested file.
+//! - [`Fgs`] — GS + iterated removal of detrimental detours (Eq. 5).
+//! - [`Nfgs`] / [`LogNfgs`] — FGS + non-atomic detour upgrades (Δ function).
+//! - [`Dp`] — the paper's exact polynomial dynamic program (§4.3).
+//! - [`LogDp`] — DP with detour span capped at `λ·log₂ n_req` (§4.5).
+//! - [`SimpleDp`] — DP restricted to disjoint detours (§4.5).
+//! - [`BruteForce`] — exhaustive search over detour sets (test oracle).
+
+mod bruteforce;
+mod dp;
+mod fgs;
+mod gs;
+mod nfgs;
+mod nodetour;
+mod simpledp;
+pub mod simpledp_dense;
+
+pub use bruteforce::BruteForce;
+pub use dp::{Dp, DpFromStart, LogDp};
+pub use fgs::Fgs;
+pub use gs::Gs;
+pub use nfgs::{LogNfgs, Nfgs};
+pub use nodetour::NoDetour;
+pub use simpledp::SimpleDp;
+
+use crate::model::Instance;
+
+/// A detour `(a, b)` over requested-file indices, `a ≤ b`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Detour {
+    pub a: usize,
+    pub b: usize,
+}
+
+impl Detour {
+    pub fn new(a: usize, b: usize) -> Detour {
+        assert!(a <= b, "detour must satisfy a <= b (got {a} > {b})");
+        Detour { a, b }
+    }
+
+    /// Atomic detour on a single file.
+    pub fn atomic(f: usize) -> Detour {
+        Detour { a: f, b: f }
+    }
+}
+
+/// An ordered list of detours. Execution order is decreasing left endpoint
+/// (the head meets detours right-to-left); [`crate::sim::evaluate`] sorts.
+pub type Schedule = Vec<Detour>;
+
+/// A scheduling policy: maps an instance to a detour list.
+pub trait Scheduler {
+    /// Display name (matches the paper's algorithm names).
+    fn name(&self) -> String;
+
+    /// Compute the schedule for `inst`.
+    fn schedule(&self, inst: &Instance) -> Schedule;
+}
+
+/// Check the *strictly laminar* property of §4.1: any two detours are either
+/// disjoint or strictly nested, and left endpoints are pairwise distinct.
+pub fn is_strictly_laminar(detours: &[Detour]) -> bool {
+    for (i, d1) in detours.iter().enumerate() {
+        for d2 in &detours[i + 1..] {
+            let (lo, hi) = if d1.a <= d2.a { (d1, d2) } else { (d2, d1) };
+            if lo.a == hi.a {
+                return false; // duplicate left endpoint
+            }
+            let disjoint = hi.a > lo.b;
+            let nested = hi.b < lo.b; // hi strictly inside lo
+            if !disjoint && !nested {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// All schedulers evaluated in the paper's §5, in the paper's naming.
+/// (`BruteForce` is excluded: it is a test oracle, not an evaluated policy.)
+pub fn paper_schedulers() -> Vec<Box<dyn Scheduler + Send + Sync>> {
+    vec![
+        Box::new(NoDetour),
+        Box::new(Gs),
+        Box::new(Fgs),
+        Box::new(Nfgs),
+        Box::new(LogNfgs::new(5.0)),
+        Box::new(LogDp::new(1.0)),
+        Box::new(LogDp::new(5.0)),
+        Box::new(SimpleDp),
+        Box::new(Dp),
+    ]
+}
+
+/// Look a scheduler up by (case-insensitive) paper name, e.g. `"logdp(5)"`.
+pub fn scheduler_by_name(name: &str) -> Option<Box<dyn Scheduler + Send + Sync>> {
+    let n = name.to_ascii_lowercase();
+    Some(match n.as_str() {
+        "nodetour" => Box::new(NoDetour),
+        "gs" => Box::new(Gs),
+        "fgs" => Box::new(Fgs),
+        "nfgs" => Box::new(Nfgs),
+        "lognfgs" | "lognfgs(5)" => Box::new(LogNfgs::new(5.0)),
+        "lognfgs(1)" => Box::new(LogNfgs::new(1.0)),
+        "dp" => Box::new(Dp),
+        "logdp(1)" => Box::new(LogDp::new(1.0)),
+        "logdp(5)" => Box::new(LogDp::new(5.0)),
+        "simpledp" => Box::new(SimpleDp),
+        "bruteforce" => Box::new(BruteForce::default()),
+        _ => {
+            // Generic parameterized forms: logdp(<float>), lognfgs(<float>)
+            if let Some(arg) = n.strip_prefix("logdp(").and_then(|s| s.strip_suffix(')')) {
+                return arg.parse::<f64>().ok().map(|l| Box::new(LogDp::new(l)) as _);
+            }
+            if let Some(arg) = n.strip_prefix("lognfgs(").and_then(|s| s.strip_suffix(')')) {
+                return arg.parse::<f64>().ok().map(|l| Box::new(LogNfgs::new(l)) as _);
+            }
+            return None;
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laminar_checks() {
+        let d = |a, b| Detour::new(a, b);
+        assert!(is_strictly_laminar(&[d(0, 3), d(1, 2)])); // nested
+        assert!(is_strictly_laminar(&[d(0, 1), d(2, 3)])); // disjoint
+        assert!(!is_strictly_laminar(&[d(0, 2), d(1, 3)])); // crossing
+        assert!(!is_strictly_laminar(&[d(0, 2), d(2, 3)])); // touching
+        assert!(!is_strictly_laminar(&[d(1, 2), d(1, 3)])); // same left
+        assert!(is_strictly_laminar(&[d(5, 5)]));
+        assert!(is_strictly_laminar(&[]));
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        for n in [
+            "NoDetour", "GS", "FGS", "NFGS", "LogNFGS", "DP", "LogDP(1)", "LogDP(5)",
+            "SimpleDP", "LogDP(2.5)", "BruteForce",
+        ] {
+            assert!(scheduler_by_name(n).is_some(), "missing {n}");
+        }
+        assert!(scheduler_by_name("nope").is_none());
+        assert!(scheduler_by_name("logdp(x)").is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_detour_panics() {
+        let _ = Detour::new(3, 2);
+    }
+}
+
+/// Diagnostic: solve DP and report (optimal cost, number of memoized cells).
+/// Used by the perf harness to size the reachable state space.
+pub fn dp_debug_stats(inst: &Instance) -> (crate::model::Cost, usize) {
+    let mut s = dp::DpSolver::new(inst, usize::MAX);
+    let root = s.cell(0, inst.k() - 1, 0);
+    (root + crate::model::virtual_lb(inst), s.memo_len())
+}

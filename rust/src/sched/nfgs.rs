@@ -1,0 +1,230 @@
+//! **NFGS** / **LogNFGS** — Non-atomic Filtered Greedy Scheduling
+//! (Appendix B.4–B.5): start from FGS, then scan files left-to-right and
+//! upgrade atomic detours to the multi-file detour `(f, f*)` minimizing the
+//! Δ estimate of Definition 1 (U-turn aware):
+//!
+//! ```text
+//! Δ(L,(a,b)) = 2·(r(b) − ℓ(a) + U)·( Σ_{f<a} x(f) + Σ_{f>b, f∉L} x(f) )
+//!   − 2·Σ_{f∈[a,b], f∉L} x(f) · ( ℓ(a) − ℓ(f₁) + Σ_{(f',g')∈L, f'<a} (r(g')−ℓ(f')+U) )
+//! ```
+//!
+//! where `f ∈ L` means `f` is covered by some detour of `L`. We apply the
+//! paper's three corrections (allow `f* = f`; never drop a detour covered by
+//! an earlier multi-file detour; index `f' < a` in the last sum) and one
+//! further repair implied by §4.2's prose ("after removing the detour
+//! starting from a if it existed"): accepting `(f, f*)` *replaces* the
+//! previous detour starting at `f` instead of coexisting with it.
+//!
+//! **LogNFGS** caps the candidate span at `⌊λ·log₂ n_req⌋` requested files.
+
+use crate::model::{Cost, Instance};
+use crate::sched::fgs::fgs_filter;
+use crate::sched::{Detour, Schedule, Scheduler};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Nfgs;
+
+/// LogNFGS with span parameter λ (the paper's experiments use λ = 5).
+#[derive(Debug, Clone, Copy)]
+pub struct LogNfgs {
+    pub lambda: f64,
+}
+
+impl LogNfgs {
+    pub fn new(lambda: f64) -> LogNfgs {
+        assert!(lambda > 0.0);
+        LogNfgs { lambda }
+    }
+
+    fn span(&self, k: usize) -> usize {
+        let lg = (k.max(2) as f64).log2();
+        ((self.lambda * lg).floor() as usize).max(1)
+    }
+}
+
+impl Scheduler for Nfgs {
+    fn name(&self) -> String {
+        "NFGS".into()
+    }
+
+    fn schedule(&self, inst: &Instance) -> Schedule {
+        nfgs_run(inst, usize::MAX)
+    }
+}
+
+impl Scheduler for LogNfgs {
+    fn name(&self) -> String {
+        format!("LogNFGS({})", self.lambda)
+    }
+
+    fn schedule(&self, inst: &Instance) -> Schedule {
+        nfgs_run(inst, self.span(inst.k()))
+    }
+}
+
+fn nfgs_run(inst: &Instance, span: usize) -> Schedule {
+    let k = inst.k();
+    let u = inst.u() as Cost;
+    let l0 = inst.l(0) as Cost;
+    // det[a] = Some(b): the detour starting at a (at most one per file).
+    let mut det: Vec<Option<usize>> = fgs_filter(inst)
+        .into_iter()
+        .map(|keep| if keep { Some(0) } else { None })
+        .collect();
+    for (f, d) in det.iter_mut().enumerate() {
+        if d.is_some() {
+            *d = Some(f);
+        }
+    }
+
+    let mut rightest: i64 = -1;
+    for f in 0..k {
+        let was = det[f];
+        det[f] = None; // temp = res \ {(f, f)}
+
+        // Coverage of temp and its prefix sums (O(k) per iteration).
+        let mut covered = vec![false; k];
+        for (a, d) in det.iter().enumerate() {
+            if let Some(b) = *d {
+                for g in a..=b {
+                    covered[g] = true;
+                }
+            }
+        }
+        // uncx[i+1] = Σ_{g ≤ i, g∉L} x(g)
+        let mut uncx = vec![0 as Cost; k + 1];
+        for g in 0..k {
+            uncx[g + 1] = uncx[g] + if covered[g] { 0 } else { inst.x(g) as Cost };
+        }
+        // D = Σ_{(f',g')∈L, f'<f} (r(g') − ℓ(f') + U)
+        let d_left: Cost = det[..f]
+            .iter()
+            .enumerate()
+            .filter_map(|(a, d)| d.map(|b| inst.r(b) as Cost - inst.l(a) as Cost + u))
+            .sum();
+        let depth = inst.l(f) as Cost - l0 + d_left;
+        let pending_left = inst.nl(f) as Cost; // Σ_{g<f} x(g)
+
+        // Scan candidates f' ∈ [f, f+span]; Δ in O(1) each.
+        let hi = if span == usize::MAX { k - 1 } else { (f + span).min(k - 1) };
+        let mut best: Option<(Cost, usize)> = None;
+        for fp in f..=hi {
+            let skipped_right = uncx[k] - uncx[fp + 1];
+            let term1 = 2 * (inst.r(fp) as Cost - inst.l(f) as Cost + u)
+                * (pending_left + skipped_right);
+            let inside_uncov = uncx[fp + 1] - uncx[f];
+            let term2 = 2 * inside_uncov * depth;
+            let delta = term1 - term2;
+            if best.map_or(true, |(bd, _)| delta < bd) {
+                best = Some((delta, fp));
+            }
+        }
+        let (mut best_delta, mut fstar) = best.expect("candidate range non-empty");
+
+        // Correction 2 (Appendix B): if f held a detour and is covered by an
+        // earlier multi-file detour, Δ ≥ 0 artificially — keep the atomic
+        // detour rather than dropping it.
+        if best_delta >= 0 && was.is_some() && rightest > f as i64 {
+            fstar = f;
+            // Recompute Δ for (f, f) — same formula, fp = f.
+            let skipped_right = uncx[k] - uncx[f + 1];
+            let term1 = 2 * (inst.r(f) as Cost - inst.l(f) as Cost + u)
+                * (pending_left + skipped_right);
+            let term2 = 2 * (uncx[f + 1] - uncx[f]) * depth;
+            best_delta = term1 - term2;
+            // Keep regardless of sign (the "never remove" repair).
+            det[f] = was;
+            let _ = (fstar, best_delta);
+            continue;
+        }
+
+        if best_delta < 0 {
+            det[f] = Some(fstar);
+            rightest = rightest.max(fstar as i64);
+        } else {
+            det[f] = was; // keep whatever FGS decided
+        }
+    }
+
+    det.iter()
+        .enumerate()
+        .filter_map(|(a, d)| d.map(|b| Detour::new(a, b)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ReqFile;
+    use crate::sched::{Fgs, Gs};
+    use crate::sim::evaluate;
+
+    fn inst(u: u64, files: &[(u64, u64, u64)], m: u64) -> Instance {
+        Instance::new(m, u, files.iter().map(|&(l, r, x)| ReqFile { l, r, x }).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn multi_file_detour_beats_atomic_ones() {
+        // A mildly urgent file (f2) whose own detour FGS filters out, right
+        // next to a hot file (f1): riding f2 on the (1,2) detour serves it
+        // almost for free, so NFGS must upgrade (1,1) -> (1,2). (NFGS's
+        // delta cannot merge two detours that FGS *kept* -- the estimate
+        // sees covered files as zero-benefit -- so the inner file must be
+        // one FGS dropped.)
+        let i = inst(
+            50,
+            &[(0, 10, 1), (800, 810, 30), (820, 830, 1)],
+            1_000,
+        );
+        let sched = Nfgs.schedule(&i);
+        let cost = evaluate(&i, &sched).cost;
+        let gs = evaluate(&i, &Gs.schedule(&i)).cost;
+        assert!(cost <= gs, "NFGS {cost} <= GS {gs}");
+        // And it should find a multi-file detour.
+        assert!(
+            sched.iter().any(|d| d.b > d.a),
+            "expected a non-atomic detour in {sched:?}"
+        );
+    }
+
+    #[test]
+    fn not_worse_than_fgs_on_fixtures() {
+        let cases = vec![
+            inst(0, &[(0, 4, 3), (8, 20, 1), (25, 26, 14), (40, 70, 2), (90, 95, 6)], 120),
+            inst(9, &[(0, 4, 3), (8, 20, 1), (25, 26, 14), (40, 70, 2), (90, 95, 6)], 120),
+            inst(50, &[(0, 10, 1), (800, 810, 20), (820, 830, 20)], 1_000),
+            inst(3, &[(5, 6, 1), (7, 40, 1), (41, 42, 20)], 50),
+        ];
+        for i in cases {
+            let nfgs = evaluate(&i, &Nfgs.schedule(&i)).cost;
+            let fgs = evaluate(&i, &Fgs.schedule(&i)).cost;
+            assert!(nfgs <= fgs, "NFGS {nfgs} <= FGS {fgs}");
+        }
+    }
+
+    #[test]
+    fn lognfgs_restricts_span() {
+        let files: Vec<(u64, u64, u64)> = (0..12)
+            .map(|i| (i * 100, i * 100 + 10, if i > 5 { 30 } else { 1 }))
+            .collect();
+        let i = inst(5, &files, 1_200);
+        let span = LogNfgs::new(1.0).span(12); // ⌊log₂ 12⌋ = 3
+        assert_eq!(span, 3);
+        for d in LogNfgs::new(1.0).schedule(&i) {
+            assert!(d.b - d.a <= span);
+        }
+        // λ large enough ⇒ identical to NFGS.
+        assert_eq!(LogNfgs::new(100.0).schedule(&i), Nfgs.schedule(&i));
+    }
+
+    #[test]
+    fn schedules_have_distinct_left_endpoints() {
+        let i = inst(7, &[(0, 4, 3), (8, 20, 1), (25, 26, 14), (40, 70, 2)], 120);
+        let s = Nfgs.schedule(&i);
+        let mut lefts: Vec<usize> = s.iter().map(|d| d.a).collect();
+        lefts.sort();
+        lefts.dedup();
+        assert_eq!(lefts.len(), s.len());
+    }
+}

@@ -1,0 +1,41 @@
+//! **NoDetour** (§4.2): no detour at all — the head moves straight to the
+//! leftmost requested file and reads everything in a single left-to-right
+//! sweep. Minimizes the makespan but can be arbitrarily far from the optimal
+//! average service time.
+
+use crate::model::Instance;
+use crate::sched::{Schedule, Scheduler};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoDetour;
+
+impl Scheduler for NoDetour {
+    fn name(&self) -> String {
+        "NoDetour".into()
+    }
+
+    fn schedule(&self, _inst: &Instance) -> Schedule {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ReqFile;
+    use crate::sim::evaluate;
+
+    #[test]
+    fn single_sweep_cost() {
+        let inst = Instance::new(
+            100,
+            4,
+            vec![ReqFile { l: 10, r: 20, x: 1 }, ReqFile { l: 60, r: 80, x: 2 }],
+        )
+        .unwrap();
+        let out = evaluate(&inst, &NoDetour.schedule(&inst));
+        // 100→10 (90) + U (94); f0 at 94+10, f1 at 94+70.
+        assert_eq!(out.cost, 104 + 2 * 164);
+        assert_eq!(out.uturns, 1);
+    }
+}

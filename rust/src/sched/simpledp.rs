@@ -1,0 +1,221 @@
+//! **SimpleDP** (§4.5): the DP restricted to solutions whose detour
+//! intervals are pairwise disjoint (no intertwined detours). The first DP
+//! index is then always `f₁`, giving a two-dimensional table `T[b, n_skip]`:
+//!
+//! ```text
+//! T[f₁, ns]  = 2·s(f₁)·ns
+//! skip(b,ns) = T[b−1, ns + x(b)] + 2·(r(b) − r(b−1))·ns
+//!            + 2·(ℓ(b) − r(b−1))·x(b)
+//! detour_c(b,ns) = T[c−1, ns]
+//!            + 2·(r(b) − r(c−1))·ns
+//!            + 2·(U + r(b) − ℓ(c))·(ns + n_ℓ(c))
+//!            + Σ_{c<f≤b} 2·(ℓ(f) − ℓ(c))·x(f)
+//! T[b, ns] = min(skip, min_{c ∈ (f₁, b]} detour_c)
+//! cost = T[f_{n_req−1}, 0] + VirtualLB
+//! ```
+//!
+//! (`n_ℓ(f₁) = 0` since no request lies left of the leftmost requested
+//! file, which is why the `n_ℓ(a)` terms of the full DP collapse to `ns`.)
+//!
+//! Complexity `O(n·n_req²)` worst case; like [`super::Dp`] we memoize
+//! top-down so only `n_skip` values reachable from the root are computed.
+//! Approximation ratio is in `[5/3, 3]` for any `U` (Lemma 2).
+
+use crate::model::{virtual_lb, Cost, Instance};
+use crate::sched::{Detour, Schedule, Scheduler};
+use crate::util::hash::FxHashMap;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimpleDp;
+
+impl Scheduler for SimpleDp {
+    fn name(&self) -> String {
+        "SimpleDP".into()
+    }
+
+    fn schedule(&self, inst: &Instance) -> Schedule {
+        SimpleDpSolver::new(inst).solve().1
+    }
+}
+
+impl SimpleDp {
+    /// Cost of the best disjoint-detour schedule, without reconstruction.
+    pub fn cost(inst: &Instance) -> Cost {
+        let mut s = SimpleDpSolver::new(inst);
+        s.cell(inst.k() - 1, 0) + virtual_lb(inst)
+    }
+}
+
+const SKIP: u32 = u32::MAX;
+
+pub(crate) struct SimpleDpSolver<'a> {
+    inst: &'a Instance,
+    memo: FxHashMap<u64, (Cost, u32)>,
+}
+
+impl<'a> SimpleDpSolver<'a> {
+    pub(crate) fn new(inst: &'a Instance) -> SimpleDpSolver<'a> {
+        assert!(inst.k() < (1 << 20));
+        assert!(inst.n() < (1 << 44));
+        SimpleDpSolver { inst, memo: FxHashMap::default() }
+    }
+
+    #[inline]
+    fn key(b: usize, ns: u64) -> u64 {
+        (b as u64) << 44 | ns
+    }
+
+    /// `T[b, ns]`, memoized with an explicit worklist.
+    pub(crate) fn cell(&mut self, b: usize, ns: u64) -> Cost {
+        let mut stack = vec![(b, ns)];
+        while let Some(&(fb, fns)) = stack.last() {
+            if self.memo.contains_key(&Self::key(fb, fns)) {
+                stack.pop();
+                continue;
+            }
+            if let Some(vc) = self.try_eval(fb, fns, &mut stack) {
+                self.memo.insert(Self::key(fb, fns), vc);
+                stack.pop();
+            }
+        }
+        self.memo[&Self::key(b, ns)].0
+    }
+
+    fn try_eval(
+        &self,
+        b: usize,
+        ns: u64,
+        stack: &mut Vec<(usize, u64)>,
+    ) -> Option<(Cost, u32)> {
+        let inst = self.inst;
+        if b == 0 {
+            return Some((2 * inst.s(0) as Cost * ns as Cost, SKIP));
+        }
+        let mut missing = false;
+        let lookup = |bb: usize, nns: u64, stack: &mut Vec<(usize, u64)>| -> Option<Cost> {
+            match self.memo.get(&Self::key(bb, nns)) {
+                Some(&(v, _)) => Some(v),
+                None => {
+                    stack.push((bb, nns));
+                    None
+                }
+            }
+        };
+
+        let mut best: Option<(Cost, u32)> = None;
+        // skip branch
+        match lookup(b - 1, ns + inst.x(b), stack) {
+            Some(t) => {
+                let v = t
+                    + 2 * (inst.r(b) - inst.r(b - 1)) as Cost * ns as Cost
+                    + 2 * (inst.l(b) - inst.r(b - 1)) as Cost * inst.x(b) as Cost;
+                best = Some((v, SKIP));
+            }
+            None => missing = true,
+        }
+        // detour_c branches: closed-form in-detour cost, no inner recursion.
+        let u = inst.u() as Cost;
+        for c in 1..=b {
+            let Some(t) = lookup(c - 1, ns, stack) else {
+                missing = true;
+                continue;
+            };
+            let v = t
+                + 2 * (inst.r(b) - inst.r(c - 1)) as Cost * ns as Cost
+                + 2 * (u + inst.r(b) as Cost - inst.l(c) as Cost)
+                    * (ns as Cost + inst.nl(c) as Cost)
+                + 2 * inst.in_detour_span_cost(c, b);
+            if best.map_or(true, |(bv, _)| v < bv) {
+                best = Some((v, c as u32));
+            }
+        }
+        if missing {
+            None
+        } else {
+            Some(best.expect("at least one branch"))
+        }
+    }
+
+    pub(crate) fn solve(mut self) -> (Cost, Schedule) {
+        let k = self.inst.k();
+        let root = self.cell(k - 1, 0);
+        let opt = root + virtual_lb(self.inst);
+        let mut detours = Vec::new();
+        let (mut b, mut ns) = (k - 1, 0u64);
+        loop {
+            if b == 0 {
+                break;
+            }
+            let (_, choice) = self.memo[&Self::key(b, ns)];
+            if choice == SKIP {
+                ns += self.inst.x(b);
+                b -= 1;
+            } else {
+                let c = choice as usize;
+                detours.push(Detour::new(c, b));
+                b = c - 1;
+                // ns unchanged: files in (c−1, b] are read by the detour.
+            }
+        }
+        (opt, detours)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ReqFile;
+    use crate::sched::{is_strictly_laminar, Dp, Gs, Scheduler};
+    use crate::sim::evaluate;
+
+    fn inst(u: u64, files: &[(u64, u64, u64)], m: u64) -> Instance {
+        Instance::new(m, u, files.iter().map(|&(l, r, x)| ReqFile { l, r, x }).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn predicted_cost_equals_simulated() {
+        let cases = vec![
+            inst(0, &[(0, 5, 1), (10, 12, 9), (40, 60, 1)], 80),
+            inst(7, &[(0, 5, 1), (10, 12, 9), (40, 60, 1)], 80),
+            inst(3, &[(5, 6, 2), (6, 30, 1), (31, 32, 8), (60, 61, 3)], 100),
+            inst(0, &[(2, 4, 2), (10, 30, 5), (33, 34, 1), (50, 80, 4), (90, 99, 2)], 110),
+        ];
+        for i in cases {
+            let (cost, sched) = SimpleDpSolver::new(&i).solve();
+            assert_eq!(cost, evaluate(&i, &sched).cost);
+            assert!(is_strictly_laminar(&sched));
+            // disjointness: stronger than laminar
+            let mut s = sched.clone();
+            s.sort();
+            for w in s.windows(2) {
+                assert!(w[0].b < w[1].a, "detours must be disjoint: {:?}", s);
+            }
+        }
+    }
+
+    #[test]
+    fn sandwiched_between_dp_and_gs() {
+        let cases = vec![
+            inst(0, &[(0, 4, 3), (8, 20, 1), (25, 26, 14), (40, 70, 2), (90, 95, 6)], 120),
+            inst(13, &[(0, 4, 3), (8, 20, 1), (25, 26, 14), (40, 70, 2), (90, 95, 6)], 120),
+        ];
+        for i in cases {
+            let opt = Dp::optimal_cost(&i);
+            let sdp = SimpleDp::cost(&i);
+            let gs = evaluate(&i, &Gs.schedule(&i)).cost;
+            assert!(opt <= sdp, "OPT {opt} <= SimpleDP {sdp}");
+            assert!(sdp <= gs, "SimpleDP {sdp} <= GS {gs} (search space contains GS)");
+            assert!(sdp <= 3 * opt, "Lemma 2 upper bound");
+        }
+    }
+
+    #[test]
+    fn atomic_detour_case_matches_full_dp_formula() {
+        // On a 2-file instance SimpleDP and DP agree (no intertwining possible).
+        for u in [0u64, 5, 50] {
+            let i = inst(u, &[(0, 10, 4), (30, 50, 1)], 70);
+            assert_eq!(SimpleDp::cost(&i), Dp::optimal_cost(&i));
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Dense bottom-up SimpleDP evaluation — the exact Rust mirror of the
+//! L2 JAX model (`python/compile/model.py`).
+//!
+//! Computes the full `(k × (n+1))` table `T[b, n_skip]` for **every**
+//! `n_skip` value (the sparse solver only touches reachable ones). This is
+//! the semantics the AOT-compiled XLA artifact implements, so this module
+//! is the cross-validation reference for [`crate::runtime::XlaSimpleDp`]:
+//! same wavefront order, same dense grid, exact `i128` arithmetic here vs
+//! `f64` there.
+//!
+//! Memory/time are Θ(k·n) and Θ(k²·n): use for moderate instances only.
+
+use crate::model::{virtual_lb, Cost, Instance};
+use crate::sched::{Detour, Schedule};
+
+/// Full dense table: `table[b][ns]` for `b ∈ 0..k`, `ns ∈ 0..=n`.
+pub struct DenseTable {
+    pub k: usize,
+    pub ns_max: usize,
+    /// Row-major `k × (ns_max+1)`.
+    pub t: Vec<Cost>,
+    /// Choice per cell: `u32::MAX` = skip, else chosen `c`.
+    pub choice: Vec<u32>,
+}
+
+const SKIP: u32 = u32::MAX;
+
+impl DenseTable {
+    #[inline]
+    pub fn at(&self, b: usize, ns: usize) -> Cost {
+        self.t[b * (self.ns_max + 1) + ns]
+    }
+
+    #[inline]
+    fn choice_at(&self, b: usize, ns: usize) -> u32 {
+        self.choice[b * (self.ns_max + 1) + ns]
+    }
+}
+
+/// Compute the dense SimpleDP table bottom-up (wavefront over `b`).
+pub fn dense_table(inst: &Instance) -> DenseTable {
+    let k = inst.k();
+    let ns_max = inst.n() as usize;
+    let width = ns_max + 1;
+    let mut t = vec![0 as Cost; k * width];
+    let mut choice = vec![SKIP; k * width];
+
+    // Base row b = 0: T[0, ns] = 2·s(0)·ns.
+    for ns in 0..width {
+        t[ns] = 2 * inst.s(0) as Cost * ns as Cost;
+    }
+
+    let u = inst.u() as Cost;
+    for b in 1..k {
+        let (prev_rows, row) = t.split_at_mut(b * width);
+        let row = &mut row[..width];
+        let crow = &mut choice[b * width..(b + 1) * width];
+        let xb = inst.x(b) as usize;
+        let gap2 = 2 * (inst.r(b) - inst.r(b - 1)) as Cost;
+        let lead2 = 2 * (inst.l(b) - inst.r(b - 1)) as Cost * inst.x(b) as Cost;
+
+        // skip branch — shifted read of row b−1 (clamped at the edge; the
+        // clamped cells are unreachable from the root where Σ skipped ≤ n).
+        let prev = &prev_rows[(b - 1) * width..];
+        for ns in 0..width {
+            let shifted = (ns + xb).min(ns_max);
+            row[ns] = prev[shifted] + gap2 * ns as Cost + lead2;
+            crow[ns] = SKIP;
+        }
+        // detour_c branches.
+        for c in 1..=b {
+            let pc = &prev_rows[(c - 1) * width..(c - 1) * width + width];
+            let span2 = 2 * (inst.r(b) - inst.r(c - 1)) as Cost;
+            let det2 = 2 * (u + inst.r(b) as Cost - inst.l(c) as Cost);
+            let nlc = inst.nl(c) as Cost;
+            let inner2 = 2 * inst.in_detour_span_cost(c, b);
+            for ns in 0..width {
+                let v = pc[ns]
+                    + span2 * ns as Cost
+                    + det2 * (ns as Cost + nlc)
+                    + inner2;
+                if v < row[ns] {
+                    row[ns] = v;
+                    crow[ns] = c as u32;
+                }
+            }
+        }
+    }
+    DenseTable { k, ns_max, t, choice }
+}
+
+/// Optimal disjoint-detour cost from a dense table.
+pub fn dense_cost(inst: &Instance) -> Cost {
+    let tbl = dense_table(inst);
+    tbl.at(inst.k() - 1, 0) + virtual_lb(inst)
+}
+
+/// Reconstruct the schedule from a dense table (same walk as the sparse
+/// solver). Exposed so the XLA runtime can reconstruct from its own table.
+pub fn reconstruct(inst: &Instance, tbl: &DenseTable) -> Schedule {
+    let mut detours = Vec::new();
+    let (mut b, mut ns) = (inst.k() - 1, 0usize);
+    while b > 0 {
+        let ch = tbl.choice_at(b, ns);
+        if ch == SKIP {
+            ns = (ns + inst.x(b) as usize).min(tbl.ns_max);
+            b -= 1;
+        } else {
+            let c = ch as usize;
+            detours.push(Detour::new(c, b));
+            b = c - 1;
+        }
+    }
+    detours
+}
+
+/// Reconstruct a schedule from raw table values only (no choice array) by
+/// re-deriving the argmin at each visited cell — this is what the XLA
+/// backend does, since the artifact returns values, not decisions.
+pub fn reconstruct_from_values(
+    inst: &Instance,
+    at: &dyn Fn(usize, usize) -> f64,
+    tol: f64,
+) -> Schedule {
+    let k = inst.k();
+    let ns_max = inst.n() as usize;
+    let u = inst.u() as f64;
+    let mut detours = Vec::new();
+    let (mut b, mut ns) = (k - 1, 0usize);
+    while b > 0 {
+        let here = at(b, ns);
+        // Try skip first (ties favor skip, like the exact solver).
+        let shifted = (ns + inst.x(b) as usize).min(ns_max);
+        let skip = at(b - 1, shifted)
+            + 2.0 * (inst.r(b) - inst.r(b - 1)) as f64 * ns as f64
+            + 2.0 * (inst.l(b) - inst.r(b - 1)) as f64 * inst.x(b) as f64;
+        if (skip - here).abs() <= tol * here.abs().max(1.0) {
+            ns = shifted;
+            b -= 1;
+            continue;
+        }
+        let mut chosen = None;
+        for c in 1..=b {
+            let v = at(c - 1, ns)
+                + 2.0 * (inst.r(b) - inst.r(c - 1)) as f64 * ns as f64
+                + 2.0 * (u + (inst.r(b) - inst.l(c)) as f64)
+                    * (ns as f64 + inst.nl(c) as f64)
+                + 2.0 * inst.in_detour_span_cost(c, b) as f64;
+            if (v - here).abs() <= tol * here.abs().max(1.0) {
+                chosen = Some(c);
+                break;
+            }
+        }
+        let c = chosen.expect("no branch reproduces the table value");
+        detours.push(Detour::new(c, b));
+        b = c - 1;
+    }
+    detours
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ReqFile;
+    use crate::sched::{Scheduler, SimpleDp};
+    use crate::sim::evaluate;
+
+    fn inst(u: u64, files: &[(u64, u64, u64)], m: u64) -> Instance {
+        Instance::new(m, u, files.iter().map(|&(l, r, x)| ReqFile { l, r, x }).collect())
+            .unwrap()
+    }
+
+    fn fixtures() -> Vec<Instance> {
+        vec![
+            inst(0, &[(0, 5, 1), (10, 12, 9), (40, 60, 1)], 80),
+            inst(7, &[(0, 5, 1), (10, 12, 9), (40, 60, 1)], 80),
+            inst(3, &[(5, 6, 2), (6, 30, 1), (31, 32, 8), (60, 61, 3)], 100),
+            inst(0, &[(2, 4, 2), (10, 30, 5), (33, 34, 1), (50, 80, 4), (90, 99, 2)], 110),
+            inst(11, &[(0, 4, 3), (8, 20, 1), (25, 26, 14), (40, 70, 2), (90, 95, 6)], 120),
+        ]
+    }
+
+    #[test]
+    fn dense_equals_sparse() {
+        for i in fixtures() {
+            assert_eq!(dense_cost(&i), SimpleDp::cost(&i));
+        }
+    }
+
+    #[test]
+    fn dense_reconstruction_achieves_table_cost() {
+        for i in fixtures() {
+            let tbl = dense_table(&i);
+            let sched = reconstruct(&i, &tbl);
+            assert_eq!(evaluate(&i, &sched).cost, dense_cost(&i));
+            // and matches the sparse schedule's cost
+            let sparse = SimpleDp.schedule(&i);
+            assert_eq!(evaluate(&i, &sparse).cost, dense_cost(&i));
+        }
+    }
+
+    #[test]
+    fn value_only_reconstruction() {
+        for i in fixtures() {
+            let tbl = dense_table(&i);
+            let at = |b: usize, ns: usize| tbl.at(b, ns) as f64;
+            let sched = reconstruct_from_values(&i, &at, 1e-9);
+            assert_eq!(evaluate(&i, &sched).cost, dense_cost(&i));
+        }
+    }
+}

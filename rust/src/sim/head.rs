@@ -1,0 +1,220 @@
+//! Event-based head-trajectory simulator — the normative cost semantics.
+//!
+//! Semantics (paper §3–4.1):
+//! - The head starts at the right end `m` of the tape, moving left, at t = 0.
+//! - Detours are executed in decreasing order of left endpoint: when the head
+//!   first attains `ℓ(a)` of detour `(a, b)`, it U-turns (+U), sweeps right to
+//!   `r(b)` serving every not-yet-served file fully contained in the sweep,
+//!   U-turns again (+U) and comes back to `ℓ(a)`, then resumes moving left.
+//! - After all explicit detours, the implicit final detour: the head moves
+//!   left to the leftmost unserved file (if any), U-turns (+U), and sweeps
+//!   right, serving every remaining file. Movement after the last service
+//!   does not count toward anything.
+//! - A file is served when it has been traversed left-to-right entirely; the
+//!   service time of its `x(f)` requests is the instant its right end is
+//!   passed. Cost = `Σ_f x(f) · t(f)`.
+
+use crate::model::{Cost, Instance};
+use crate::sched::Detour;
+
+/// Outcome of executing a schedule.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// `Σ_f x(f) · t(f)` — the objective.
+    pub cost: Cost,
+    /// Service time of each requested file (all files are always served).
+    pub service: Vec<Cost>,
+    /// Time at which the last request is served.
+    pub finish: Cost,
+    /// Number of U-turns performed up to the last service.
+    pub uturns: u32,
+}
+
+impl SimOutcome {
+    /// Average service time over the `n` requests.
+    pub fn mean_service_time(&self, inst: &Instance) -> f64 {
+        self.cost as f64 / inst.n() as f64
+    }
+}
+
+/// Execute `detours` on `inst` and return exact per-file service times.
+///
+/// Accepts **any** detour list (not only laminar ones): duplicates are
+/// collapsed, execution order is decreasing left endpoint (ties broken by
+/// increasing right endpoint so that redundant nested duplicates cost their
+/// worth), and useless movement is still paid for — this is what makes the
+/// simulator a fair judge of heuristic output such as NFGS's.
+pub fn evaluate(inst: &Instance, detours: &[Detour]) -> SimOutcome {
+    evaluate_from(inst, detours, inst.tape_len())
+}
+
+/// [`evaluate`] with an arbitrary head starting position (the paper's
+/// conclusion extension). Every detour must start at or left of `start`
+/// (a head starting at `start` can never meet a righter detour).
+pub fn evaluate_from(inst: &Instance, detours: &[Detour], start: u64) -> SimOutcome {
+    let k = inst.k();
+    for d in detours {
+        assert!(d.a <= d.b && d.b < k, "detour {:?} out of range (k={k})", d);
+        assert!(
+            inst.l(d.a) <= start,
+            "detour {:?} starts right of the head start {start}",
+            d
+        );
+    }
+    // Execution order: decreasing a. For equal a, the head turning at ℓ(a)
+    // performs the *shorter* detour first only if listed; we keep all and
+    // execute in increasing b so each adds its movement.
+    let mut order: Vec<Detour> = detours.to_vec();
+    order.sort_by(|p, q| q.a.cmp(&p.a).then(p.b.cmp(&q.b)));
+    order.dedup();
+
+    let mut served = vec![false; k];
+    let mut service: Vec<Cost> = vec![0; k];
+    let mut t: Cost = 0;
+    let mut pos: Cost = start as Cost;
+    let u = inst.u() as Cost;
+    let mut uturns = 0u32;
+
+    for d in &order {
+        let la = inst.l(d.a) as Cost;
+        let rb = inst.r(d.b) as Cost;
+        debug_assert!(la <= pos, "detours must be met right-to-left");
+        // Move left to ℓ(a), turn.
+        t += pos - la;
+        t += u;
+        uturns += 1;
+        // Rightward sweep ℓ(a) → r(b): serve unserved files inside.
+        for f in d.a..=d.b {
+            if !served[f] {
+                served[f] = true;
+                service[f] = t + (inst.r(f) as Cost - la);
+            }
+        }
+        // Reach r(b), turn, come back to ℓ(a).
+        t += rb - la;
+        t += u;
+        uturns += 1;
+        t += rb - la;
+        pos = la;
+    }
+
+    // Implicit final detour: serve whatever remains.
+    if let Some(fmin) = (0..k).find(|&f| !served[f]) {
+        let start = pos.min(inst.l(fmin) as Cost);
+        t += pos - start; // move further left if needed (no cost if start==pos)
+        t += u;
+        uturns += 1;
+        for f in 0..k {
+            if !served[f] {
+                served[f] = true;
+                service[f] = t + (inst.r(f) as Cost - start);
+            }
+        }
+    }
+
+    let cost = (0..k).map(|f| inst.x(f) as Cost * service[f]).sum();
+    let finish = service.iter().copied().max().unwrap_or(0);
+    SimOutcome { cost, service, finish, uturns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ReqFile;
+
+    fn inst(u: u64, files: &[(u64, u64, u64)], m: u64) -> Instance {
+        Instance::new(
+            m,
+            u,
+            files.iter().map(|&(l, r, x)| ReqFile { l, r, x }).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn no_detours_single_sweep() {
+        // Files [10,20) x1, [50,60) x2, tape len 100, U = 5.
+        let i = inst(5, &[(10, 20, 1), (50, 60, 2)], 100);
+        let out = evaluate(&i, &[]);
+        // Head: 100 → 10 (t=90), U-turn (95), then serve f0 at 95+10=105,
+        // f1 at 95+50=145.
+        assert_eq!(out.service, vec![105, 145]);
+        assert_eq!(out.cost, 105 + 2 * 145);
+        assert_eq!(out.uturns, 1);
+        assert_eq!(out.finish, 145);
+    }
+
+    #[test]
+    fn atomic_detour_on_right_file() {
+        // Same instance; detour (1,1): serve f1 early.
+        let i = inst(5, &[(10, 20, 1), (50, 60, 2)], 100);
+        let out = evaluate(&i, &[Detour::atomic(1)]);
+        // Head: 100 → 50 (t=50), U (55), serve f1 at 55+10=65, reach 60 (65),
+        // U (70), back to 50 (80). Then to 10 (120), U (125), serve f0 at 135.
+        assert_eq!(out.service, vec![135, 65]);
+        assert_eq!(out.cost, 135 + 2 * 65);
+        assert_eq!(out.uturns, 3);
+    }
+
+    #[test]
+    fn detour_on_leftmost_file_then_final_sweep() {
+        let i = inst(5, &[(10, 20, 1), (50, 60, 2)], 100);
+        let out = evaluate(&i, &[Detour::atomic(0)]);
+        // Head: 100 → 10 (90), U (95), serve f0 at 105, reach 20 (105), U
+        // (110), back to 10 (120). f1 unserved: already at ℓ(f0)=10 < ℓ(f1);
+        // final sweep starts at pos=10: U (125), serve f1 at 125+50=175.
+        assert_eq!(out.service, vec![105, 175]);
+        assert_eq!(out.uturns, 3);
+    }
+
+    #[test]
+    fn nested_detours_figure1_style() {
+        // Three files; inner detour (2,2) executed before outer (1,2).
+        let i = inst(0, &[(0, 10, 1), (20, 30, 1), (40, 50, 1)], 100);
+        let out = evaluate(&i, &[Detour::new(1, 2), Detour::atomic(2)]);
+        // Order: (2,2) then (1,2).
+        // 100→40 (60), serve f2 at 70, back at 40 (80).
+        // 40→20 (100), sweep right to 50: f1 served at 110; f2 already
+        // served. Back at 20 (160). Final: 20→0 (180), serve f0 at 190.
+        assert_eq!(out.service, vec![190, 110, 70]);
+    }
+
+    #[test]
+    fn crossing_detours_still_executable() {
+        // Non-laminar list (1,2) & (0,1): f1 served by the rightmost detour.
+        let i = inst(0, &[(0, 10, 1), (20, 30, 1), (40, 50, 1)], 100);
+        let out = evaluate(&i, &[Detour::new(0, 1), Detour::new(1, 2)]);
+        // (1,2) first: 100→20 (80), f1 at 90, f2 at 110, back at 20 (140).
+        // (0,1): 20→0 (160), f0 at 170, sweep to r(1)=30 wasted, back (220).
+        // Nothing left.
+        assert_eq!(out.service, vec![170, 90, 110]);
+    }
+
+    #[test]
+    fn duplicate_detours_collapse() {
+        let i = inst(3, &[(10, 20, 2)], 100);
+        let a = evaluate(&i, &[Detour::atomic(0)]);
+        let b = evaluate(&i, &[Detour::atomic(0), Detour::atomic(0)]);
+        assert_eq!(a.cost, b.cost);
+    }
+
+    #[test]
+    fn uturn_penalty_delays_everything() {
+        let i0 = inst(0, &[(10, 20, 1), (50, 60, 1)], 100);
+        let i9 = inst(9, &[(10, 20, 1), (50, 60, 1)], 100);
+        let d = vec![Detour::atomic(1)];
+        let c0 = evaluate(&i0, &d);
+        let c9 = evaluate(&i9, &d);
+        // f1 pays 1 U-turn, f0 pays 3.
+        assert_eq!(c9.service[1] - c0.service[1], 9);
+        assert_eq!(c9.service[0] - c0.service[0], 27);
+    }
+
+    #[test]
+    fn gap_between_files_costs_travel() {
+        // Requested files with a hole between them; final sweep crosses it.
+        let i = inst(0, &[(0, 10, 1), (90, 100, 1)], 100);
+        let out = evaluate(&i, &[]);
+        assert_eq!(out.service, vec![110, 200]);
+    }
+}

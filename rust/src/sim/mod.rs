@@ -1,0 +1,17 @@
+//! Simulation layer.
+//!
+//! [`head`] is the **ground truth** of the whole crate: it executes a detour
+//! list as an actual head trajectory and yields the exact service time of
+//! every request. Every algorithm's internal cost accounting is validated
+//! against it. [`trajectory`] is a second, deliberately naive implementation
+//! (explicit polyline walk) used to cross-check `head` in tests.
+//!
+//! [`library`] simulates the robotic tape library (drive pool, mount/unmount
+//! latencies) that the coordinator drives in the end-to-end example.
+
+pub mod head;
+pub mod library;
+pub mod trajectory;
+
+pub use head::{evaluate, evaluate_from, SimOutcome};
+pub use library::{DriveParams, LibraryMetrics, LibrarySim, TapeJob, TapeJobResult};

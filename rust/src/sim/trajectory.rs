@@ -1,0 +1,131 @@
+//! Naive polyline-based trajectory simulator.
+//!
+//! Builds the explicit `(time, position)` polyline of the head and derives
+//! each file's service time by scanning for the first rightward segment that
+//! fully covers it. Deliberately independent from [`super::head`] (different
+//! data flow, no incremental serving) so the two can cross-check each other
+//! in property tests.
+
+use crate::model::{Cost, Instance};
+use crate::sched::Detour;
+
+/// A segment of head movement. U-turn dwells are encoded as zero-length
+/// segments of duration `U`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub t0: Cost,
+    pub t1: Cost,
+    pub from: Cost,
+    pub to: Cost,
+}
+
+/// Build the full trajectory polyline for a detour list (sorted internally),
+/// extended through the implicit final sweep to the right end of the tape.
+pub fn polyline(inst: &Instance, detours: &[Detour]) -> Vec<Segment> {
+    let mut order: Vec<Detour> = detours.to_vec();
+    order.sort_by(|p, q| q.a.cmp(&p.a).then(p.b.cmp(&q.b)));
+    order.dedup();
+
+    let u = inst.u() as Cost;
+    let mut segs = Vec::new();
+    let mut t: Cost = 0;
+    let mut pos: Cost = inst.tape_len() as Cost;
+    let push = |segs: &mut Vec<Segment>, t: &mut Cost, pos: &mut Cost, to: Cost| {
+        let d = (*pos - to).abs();
+        segs.push(Segment { t0: *t, t1: *t + d, from: *pos, to });
+        *t += d;
+        *pos = to;
+    };
+    let dwell = |segs: &mut Vec<Segment>, t: &mut Cost, pos: Cost, u: Cost| {
+        segs.push(Segment { t0: *t, t1: *t + u, from: pos, to: pos });
+        *t += u;
+    };
+
+    for d in &order {
+        let la = inst.l(d.a) as Cost;
+        let rb = inst.r(d.b) as Cost;
+        push(&mut segs, &mut t, &mut pos, la);
+        dwell(&mut segs, &mut t, pos, u);
+        push(&mut segs, &mut t, &mut pos, rb);
+        dwell(&mut segs, &mut t, pos, u);
+        push(&mut segs, &mut t, &mut pos, la);
+    }
+    // Final sweep: down to the leftmost file, then all the way right.
+    let lmin = inst.l(0) as Cost;
+    if pos > lmin {
+        push(&mut segs, &mut t, &mut pos, lmin);
+    }
+    dwell(&mut segs, &mut t, pos, u);
+    push(&mut segs, &mut t, &mut pos, inst.tape_len() as Cost);
+    segs
+}
+
+/// Service time of every file: first rightward segment fully covering it.
+pub fn service_times(inst: &Instance, detours: &[Detour]) -> Vec<Cost> {
+    let segs = polyline(inst, detours);
+    (0..inst.k())
+        .map(|f| {
+            let (l, r) = (inst.l(f) as Cost, inst.r(f) as Cost);
+            segs.iter()
+                .filter(|s| s.to > s.from) // rightward
+                .find(|s| s.from <= l && r <= s.to)
+                .map(|s| s.t0 + (r - s.from))
+                .expect("final sweep serves every file")
+        })
+        .collect()
+}
+
+/// Total cost via the polyline walk.
+pub fn cost(inst: &Instance, detours: &[Detour]) -> Cost {
+    service_times(inst, detours)
+        .iter()
+        .enumerate()
+        .map(|(f, &t)| inst.x(f) as Cost * t)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ReqFile;
+    use crate::sim::evaluate;
+
+    fn inst(u: u64, files: &[(u64, u64, u64)], m: u64) -> Instance {
+        Instance::new(m, u, files.iter().map(|&(l, r, x)| ReqFile { l, r, x }).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn agrees_with_head_simulator_on_fixtures() {
+        let cases: Vec<(Instance, Vec<Detour>)> = vec![
+            (inst(5, &[(10, 20, 1), (50, 60, 2)], 100), vec![]),
+            (inst(5, &[(10, 20, 1), (50, 60, 2)], 100), vec![Detour::atomic(1)]),
+            (inst(5, &[(10, 20, 1), (50, 60, 2)], 100), vec![Detour::atomic(0)]),
+            (
+                inst(3, &[(0, 10, 1), (20, 30, 4), (40, 50, 1)], 100),
+                vec![Detour::new(1, 2), Detour::atomic(2)],
+            ),
+            (
+                inst(0, &[(0, 10, 1), (20, 30, 1), (40, 50, 1)], 100),
+                vec![Detour::new(0, 1), Detour::new(1, 2)],
+            ),
+        ];
+        for (i, d) in cases {
+            let head = evaluate(&i, &d);
+            assert_eq!(service_times(&i, &d), head.service, "detours {:?}", d);
+            assert_eq!(cost(&i, &d), head.cost);
+        }
+    }
+
+    #[test]
+    fn polyline_is_continuous() {
+        let i = inst(2, &[(5, 10, 1), (30, 42, 2)], 80);
+        let segs = polyline(&i, &[Detour::atomic(1), Detour::atomic(0)]);
+        for w in segs.windows(2) {
+            assert_eq!(w[0].t1, w[1].t0);
+            assert_eq!(w[0].to, w[1].from);
+        }
+        assert_eq!(segs[0].t0, 0);
+        assert_eq!(segs[0].from, 80);
+    }
+}

@@ -1,0 +1,106 @@
+//! Property-testing support (the offline registry has no proptest): random
+//! instance generators over a deterministic PRNG, plus a tiny case-runner
+//! that reports the seed of a failing case so it can be replayed.
+
+use crate::model::{Instance, ReqFile};
+use crate::util::rng::Rng;
+
+/// Knobs for random instance generation.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceGenConfig {
+    pub min_files: usize,
+    pub max_files: usize,
+    /// Max file size (sizes uniform in 1..=max).
+    pub max_size: u64,
+    /// Max gap before each file (uniform in 0..=max).
+    pub max_gap: u64,
+    /// Max request multiplicity (log-uniform-ish in 1..=max).
+    pub max_x: u64,
+    /// Max U-turn penalty (uniform in 0..=max).
+    pub max_u: u64,
+}
+
+impl Default for InstanceGenConfig {
+    fn default() -> Self {
+        InstanceGenConfig {
+            min_files: 1,
+            max_files: 8,
+            max_size: 50,
+            max_gap: 30,
+            max_x: 20,
+            max_u: 40,
+        }
+    }
+}
+
+/// Generate a random valid instance.
+pub fn random_instance(rng: &mut Rng, cfg: &InstanceGenConfig) -> Instance {
+    let k = rng.range(cfg.min_files as u64, cfg.max_files as u64) as usize;
+    let mut files = Vec::with_capacity(k);
+    let mut pos = 0u64;
+    for _ in 0..k {
+        pos += rng.range(0, cfg.max_gap);
+        let size = rng.range(1, cfg.max_size);
+        // Multiplicity skewed toward small values, occasionally large.
+        let x = if rng.f64() < 0.8 {
+            rng.range(1, 4.min(cfg.max_x))
+        } else {
+            rng.range(1, cfg.max_x)
+        };
+        files.push(ReqFile { l: pos, r: pos + size, x });
+        pos += size;
+    }
+    let tail = rng.range(0, cfg.max_gap);
+    let u = rng.range(0, cfg.max_u);
+    Instance::new(pos + tail, u, files).expect("generator produces valid instances")
+}
+
+/// Run `n_cases` random cases; on failure, panic with the replay seed.
+pub fn check_cases(
+    base_seed: u64,
+    n_cases: u64,
+    cfg: &InstanceGenConfig,
+    prop: impl Fn(&Instance),
+) {
+    for case in 0..n_cases {
+        let seed = base_seed ^ case.wrapping_mul(0xA076_1D64_78BD_642F);
+        let mut rng = Rng::new(seed);
+        let inst = random_instance(&mut rng, cfg);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&inst)));
+        if let Err(e) = result {
+            eprintln!(
+                "testkit: case {case} FAILED (seed={seed:#x})\ninstance: {:?}",
+                inst
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_instances_are_valid_and_varied() {
+        let mut rng = Rng::new(1);
+        let cfg = InstanceGenConfig::default();
+        let mut ks = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let inst = random_instance(&mut rng, &cfg);
+            assert!(inst.k() >= 1 && inst.k() <= 8);
+            ks.insert(inst.k());
+        }
+        assert!(ks.len() >= 5, "size diversity: {ks:?}");
+    }
+
+    #[test]
+    fn check_cases_reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            check_cases(42, 10, &InstanceGenConfig::default(), |inst| {
+                assert!(inst.k() == 0, "always fails");
+            });
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! Small self-contained utilities (the offline crate registry provides no
+//! rand / fxhash / itertools — we carry our own).
+
+pub mod hash;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,96 @@
+//! Summary-statistics helpers shared by dataset stats, the bench framework
+//! and the analysis harness.
+
+/// Min / max / median / mean of a numeric sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub mean: f64,
+}
+
+/// Compute a [`Summary`]; returns zeros for an empty slice.
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary { min: 0.0, max: 0.0, median: 0.0, mean: 0.0 };
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        min: v[0],
+        max: *v.last().unwrap(),
+        median: percentile_sorted(&v, 50.0),
+        mean: v.iter().sum::<f64>() / v.len() as f64,
+    }
+}
+
+/// Percentile (linear interpolation) over a **sorted** slice; `p` in 0..=100.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    var.sqrt()
+}
+
+/// Coefficient of variation (stddev / mean), as a fraction.
+pub fn cv(xs: &[f64]) -> f64 {
+    let mean = xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    if mean == 0.0 {
+        0.0
+    } else {
+        stddev(xs) / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mean, 2.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(summarize(&[]).mean, 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let v = [0.0, 10.0, 20.0, 30.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 30.0);
+        assert_eq!(percentile_sorted(&v, 50.0), 15.0);
+        assert_eq!(percentile_sorted(&v, 25.0), 7.5);
+        assert_eq!(percentile_sorted(&[5.0], 70.0), 5.0);
+    }
+
+    #[test]
+    fn cv_matches_hand_calc() {
+        // values 5, 15: mean 10, stddev 5 → CV 0.5
+        assert!((cv(&[5.0, 15.0]) - 0.5).abs() < 1e-12);
+        assert_eq!(cv(&[0.0, 0.0]), 0.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! End-to-end integration: dataset pipeline → evaluation harness →
+//! coordinator service, exercising the public API the way the CLI and the
+//! examples do.
+
+use std::sync::Arc;
+
+use tapesched::analysis::report::run_evaluation;
+use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, ReadRequest};
+use tapesched::dataset::{
+    dataset_stats, generate_dataset, load_dataset, write_dataset, GeneratorConfig,
+};
+use tapesched::sched::{paper_schedulers, scheduler_by_name};
+use tapesched::sim::{DriveParams, LibrarySim, TapeJob};
+use tapesched::util::rng::Rng;
+
+fn small_cfg(n_tapes: usize) -> GeneratorConfig {
+    GeneratorConfig {
+        n_tapes,
+        nf: (30, 60.0, 70.0, 150),
+        nreq: (5, 12.0, 14.0, 25),
+        n: (10, 40.0, 50.0, 120),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn dataset_roundtrip_through_disk() {
+    let dir = std::env::temp_dir().join(format!("tapesched_e2e_{}", std::process::id()));
+    let ds = generate_dataset(&small_cfg(6));
+    write_dataset(&dir, &ds).unwrap();
+    let loaded = load_dataset(&dir).unwrap();
+    assert_eq!(loaded.tapes.len(), ds.tapes.len());
+    for (a, b) in ds.tapes.iter().zip(&loaded.tapes) {
+        assert_eq!(a.tape.name, b.tape.name);
+        assert_eq!(a.tape.files, b.tape.files);
+        assert_eq!(a.requests, b.requests);
+    }
+    // Stats identical through the round trip.
+    let sa = dataset_stats(&ds);
+    let sb = dataset_stats(&loaded);
+    assert_eq!(sa.total_files, sb.total_files);
+    assert_eq!(sa.total_requests, sb.total_requests);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn full_evaluation_reproduces_expected_ordering() {
+    // The qualitative "shape" of Figures 14–16 on a small sampled dataset:
+    // DP optimal everywhere; SimpleDP/LogDP(5) dominate the FGS family in
+    // aggregate; NoDetour trails.
+    let ds = generate_dataset(&small_cfg(14));
+    let [_, _, u_avg] = ds.paper_u_values();
+    let table = run_evaluation(&ds, &paper_schedulers(), u_avg, None);
+
+    let total = |name: &str| -> i128 {
+        table
+            .records
+            .iter()
+            .filter(|r| r.algorithm == name)
+            .map(|r| r.cost)
+            .sum()
+    };
+    let dp = total("DP");
+    assert!(dp <= total("SimpleDP"));
+    assert!(total("SimpleDP") <= total("GS"));
+    assert!(total("LogDP(5)") <= total("LogDP(1)"));
+    assert!(total("GS") < total("NoDetour"), "detours must pay off at dataset scale");
+
+    // Profiles: DP-normalized curves reach 1.0 by τ = ∞-ish for sane algos.
+    for c in table.profiles("DP") {
+        let last = c.points.last().unwrap().fraction;
+        assert!(last > 0.0, "{} never within 50% of OPT?", c.algorithm);
+    }
+}
+
+#[test]
+fn coordinator_full_stack_improves_with_better_policy() {
+    let ds = generate_dataset(&small_cfg(8));
+    let mut results = Vec::new();
+    for policy in ["NoDetour", "SimpleDP"] {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                n_drives: 4,
+                batcher: BatcherConfig {
+                    window: std::time::Duration::from_millis(1),
+                    max_batch: 512,
+                },
+                drive: DriveParams::default(),
+            },
+            ds.tapes.iter().map(|t| t.tape.clone()),
+            Arc::from(scheduler_by_name(policy).unwrap()),
+        );
+        let mut rng = Rng::new(42);
+        let n = 2_000u64;
+        for id in 0..n {
+            let t = &ds.tapes[rng.below(ds.tapes.len() as u64) as usize];
+            // Skewed file popularity: detours earn their keep.
+            let f = rng.zipf(t.tape.n_files() as u64, 1.2) as usize - 1;
+            assert!(coord.submit(ReadRequest { id, tape: t.tape.name.clone(), file_index: f }));
+        }
+        let (completions, m) = coord.finish();
+        assert_eq!(completions.len() as u64, n);
+        assert_eq!(m.completed, n);
+        results.push((policy, m.mean_service_s));
+    }
+    let (nd, sdp) = (results[0].1, results[1].1);
+    assert!(
+        sdp <= nd * 1.001,
+        "SimpleDP mean service {sdp} should not exceed NoDetour {nd}"
+    );
+}
+
+#[test]
+fn library_sim_serves_dataset_jobs() {
+    let ds = generate_dataset(&small_cfg(10));
+    let policy = scheduler_by_name("LogDP(1)").unwrap();
+    let params = DriveParams::default();
+    let u = params.uturn_bytes();
+    let jobs: Vec<TapeJob> = ds
+        .tapes
+        .iter()
+        .enumerate()
+        .map(|(i, t)| TapeJob {
+            tape_name: t.tape.name.clone(),
+            arrival_s: i as f64 * 5.0,
+            instance: t.instance(u).unwrap(),
+        })
+        .collect();
+    let sim = LibrarySim::new(params, 3, policy.as_ref());
+    let (results, metrics) = sim.run(jobs);
+    assert_eq!(results.len(), 10);
+    assert_eq!(metrics.jobs, 10);
+    assert!(metrics.drive_utilization > 0.0 && metrics.drive_utilization <= 1.0);
+    assert!(metrics.mean_latency_s >= metrics.mean_service_s);
+    // Every job's completion respects causality.
+    for r in &results {
+        assert!(r.done_s >= r.mount_s);
+        assert!(r.mean_latency_s >= r.mean_service_s);
+    }
+}
+
+#[test]
+fn paper_u_values_follow_the_rule() {
+    let ds = generate_dataset(&small_cfg(5));
+    let [u0, u_half, u_avg] = ds.paper_u_values();
+    assert_eq!(u0, 0);
+    assert_eq!(u_half, ds.avg_segment_size() / 2);
+    assert_eq!(u_avg, ds.avg_segment_size());
+    // On the full default dataset the average-segment U is in the tens of
+    // GB, like the paper's 28,509,500,000.
+    let full = generate_dataset(&GeneratorConfig::default());
+    let avg = full.avg_segment_size();
+    assert!(
+        (10_000_000_000..60_000_000_000).contains(&avg),
+        "avg segment size {avg} should be tens of GB"
+    );
+}

@@ -1,0 +1,279 @@
+//! Cross-module property tests: the paper's theorems as executable
+//! invariants over hundreds of random instances.
+
+use tapesched::model::{virtual_lb, Instance};
+use tapesched::sched::{
+    is_strictly_laminar, BruteForce, Dp, Fgs, Gs, LogDp, LogNfgs, Nfgs, NoDetour, Scheduler,
+    SimpleDp,
+};
+use tapesched::sched::simpledp_dense::{dense_cost, dense_table, reconstruct};
+use tapesched::sim::{evaluate, trajectory};
+use tapesched::testkit::{check_cases, InstanceGenConfig};
+
+fn tiny() -> InstanceGenConfig {
+    InstanceGenConfig { min_files: 1, max_files: 5, ..Default::default() }
+}
+
+fn small() -> InstanceGenConfig {
+    InstanceGenConfig { min_files: 1, max_files: 10, ..Default::default() }
+}
+
+/// Theorem 1: DP is exact — equal to exhaustive search (k ≤ 5).
+#[test]
+fn dp_equals_bruteforce() {
+    check_cases(0xD9, 120, &tiny(), |inst| {
+        let dp = evaluate(inst, &Dp.schedule(inst)).cost;
+        let bf = evaluate(inst, &BruteForce::default().schedule(inst)).cost;
+        assert_eq!(dp, bf, "DP must match exhaustive search");
+    });
+}
+
+/// Optimality: DP ≤ every other algorithm, and ≥ VirtualLB.
+#[test]
+fn dp_dominates_every_policy() {
+    check_cases(0xA1, 150, &small(), |inst| {
+        let opt = evaluate(inst, &Dp.schedule(inst)).cost;
+        assert!(opt >= virtual_lb(inst), "OPT >= VirtualLB");
+        let others: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(NoDetour),
+            Box::new(Gs),
+            Box::new(Fgs),
+            Box::new(Nfgs),
+            Box::new(LogNfgs::new(1.0)),
+            Box::new(LogDp::new(1.0)),
+            Box::new(LogDp::new(5.0)),
+            Box::new(SimpleDp),
+        ];
+        for s in others {
+            let c = evaluate(inst, &s.schedule(inst)).cost;
+            assert!(opt <= c, "DP {opt} must be <= {} {c}", s.name());
+        }
+    });
+}
+
+/// DP's internal accounting: predicted cell value + VirtualLB equals the
+/// simulated cost of the reconstructed schedule (Theorem 1's identity).
+#[test]
+fn dp_cost_identity() {
+    check_cases(0xB2, 150, &small(), |inst| {
+        let predicted = Dp::optimal_cost(inst);
+        let sched = Dp.schedule(inst);
+        assert_eq!(predicted, evaluate(inst, &sched).cost);
+        assert!(is_strictly_laminar(&sched));
+    });
+}
+
+/// GS is a 3-approximation when U = 0 (Cardonha & Real, via Lemma 2 logic).
+#[test]
+fn gs_three_approx_without_penalty() {
+    let cfg = InstanceGenConfig { max_u: 0, ..small() };
+    check_cases(0xC3, 150, &cfg, |inst| {
+        let opt = evaluate(inst, &Dp.schedule(inst)).cost;
+        let gs = evaluate(inst, &Gs.schedule(inst)).cost;
+        assert!(gs <= 3 * opt, "GS {gs} <= 3*OPT {}", 3 * opt);
+    });
+}
+
+/// Lemma 2: SimpleDP ≤ 3·OPT for ANY U.
+#[test]
+fn simpledp_three_approx_any_penalty() {
+    check_cases(0xD4, 150, &small(), |inst| {
+        let opt = evaluate(inst, &Dp.schedule(inst)).cost;
+        let sdp = evaluate(inst, &SimpleDp.schedule(inst)).cost;
+        assert!(sdp <= 3 * opt, "SimpleDP {sdp} <= 3*OPT {}", 3 * opt);
+    });
+}
+
+/// LogDP's search space contains GS (all atomic detours) when U = 0, so
+/// LogDP ≤ GS; same for SimpleDP at any U.
+#[test]
+fn dp_variants_not_worse_than_gs() {
+    let cfg = InstanceGenConfig { max_u: 0, ..small() };
+    check_cases(0xE5, 120, &cfg, |inst| {
+        let gs = evaluate(inst, &Gs.schedule(inst)).cost;
+        for lambda in [1.0, 5.0] {
+            let c = evaluate(inst, &LogDp::new(lambda).schedule(inst)).cost;
+            assert!(c <= gs, "LogDP({lambda}) {c} <= GS {gs}");
+        }
+        let sdp = evaluate(inst, &SimpleDp.schedule(inst)).cost;
+        assert!(sdp <= gs);
+    });
+}
+
+/// Monotonicity in λ: a larger LogDP span can only help; λ=∞ equals DP.
+#[test]
+fn logdp_monotone_in_lambda() {
+    check_cases(0xF6, 100, &small(), |inst| {
+        let c1 = evaluate(inst, &LogDp::new(1.0).schedule(inst)).cost;
+        let c5 = evaluate(inst, &LogDp::new(5.0).schedule(inst)).cost;
+        let cinf = evaluate(inst, &LogDp::new(1e6).schedule(inst)).cost;
+        let opt = evaluate(inst, &Dp.schedule(inst)).cost;
+        assert!(c5 <= c1, "λ=5 {c5} <= λ=1 {c1}");
+        assert!(cinf <= c5);
+        assert_eq!(cinf, opt, "unbounded span = exact DP");
+    });
+}
+
+/// The two independent simulators agree on arbitrary (even non-laminar)
+/// detour lists produced by every algorithm.
+#[test]
+fn simulators_agree() {
+    check_cases(0x17, 150, &small(), |inst| {
+        let schedules = [
+            Dp.schedule(inst),
+            Gs.schedule(inst),
+            Nfgs.schedule(inst),
+            SimpleDp.schedule(inst),
+            vec![],
+        ];
+        for sched in schedules {
+            let head = evaluate(inst, &sched);
+            assert_eq!(
+                trajectory::service_times(inst, &sched),
+                head.service,
+                "simulators disagree on {sched:?}"
+            );
+            assert_eq!(trajectory::cost(inst, &sched), head.cost);
+        }
+    });
+}
+
+/// Dense-table SimpleDP (the XLA twin) equals the sparse solver, and its
+/// reconstruction achieves the table cost.
+#[test]
+fn dense_simpledp_equals_sparse() {
+    check_cases(0x28, 100, &small(), |inst| {
+        let sparse = evaluate(inst, &SimpleDp.schedule(inst)).cost;
+        let dense = dense_cost(inst);
+        assert_eq!(dense, sparse);
+        let tbl = dense_table(inst);
+        let sched = reconstruct(inst, &tbl);
+        assert_eq!(evaluate(inst, &sched).cost, dense);
+    });
+}
+
+/// Every algorithm returns structurally valid schedules: in-range detours,
+/// distinct left endpoints, laminar for the DP family.
+#[test]
+fn schedules_are_structurally_valid() {
+    check_cases(0x39, 120, &small(), |inst| {
+        let algos: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(Gs),
+            Box::new(Fgs),
+            Box::new(Nfgs),
+            Box::new(Dp),
+            Box::new(LogDp::new(1.0)),
+            Box::new(SimpleDp),
+        ];
+        for s in algos {
+            let sched = s.schedule(inst);
+            for d in &sched {
+                assert!(d.a <= d.b && d.b < inst.k(), "{} out of range", s.name());
+            }
+            let mut lefts: Vec<usize> = sched.iter().map(|d| d.a).collect();
+            lefts.sort();
+            let len = lefts.len();
+            lefts.dedup();
+            assert_eq!(lefts.len(), len, "{}: duplicate left endpoints", s.name());
+        }
+        for s in [&Dp as &dyn Scheduler, &LogDp::new(1.0), &SimpleDp] {
+            assert!(is_strictly_laminar(&s.schedule(inst)), "{}", s.name());
+        }
+    });
+}
+
+/// Raising U never lowers the optimal cost, and the no-detour cost rises
+/// by exactly x·Δ per unit (one final U-turn for everyone).
+#[test]
+fn uturn_penalty_monotonicity() {
+    check_cases(0x4A, 100, &small(), |inst| {
+        let base = inst.with_u(0);
+        let c0 = evaluate(&base, &Dp.schedule(&base)).cost;
+        let hi = inst.with_u(1000);
+        let c1 = evaluate(&hi, &Dp.schedule(&hi)).cost;
+        assert!(c1 >= c0, "harsher U cannot help: {c0} -> {c1}");
+        // NoDetour: exactly one U-turn before everything.
+        let n0 = evaluate(&base, &[]).cost;
+        let n1 = evaluate(&hi, &[]).cost;
+        assert_eq!(n1 - n0, 1000 * inst.n() as i128);
+    });
+}
+
+/// Scale invariance: multiplying all positions and U by a constant scales
+/// every cost by the same constant (the model is unit-free).
+#[test]
+fn scale_invariance() {
+    check_cases(0x5B, 80, &tiny(), |inst| {
+        let files = inst
+            .files()
+            .iter()
+            .map(|f| tapesched::model::ReqFile { l: f.l * 1000, r: f.r * 1000, x: f.x })
+            .collect();
+        let scaled =
+            Instance::new(inst.tape_len() * 1000, inst.u() * 1000, files).unwrap();
+        let c = evaluate(inst, &Dp.schedule(inst)).cost;
+        let cs = evaluate(&scaled, &Dp.schedule(&scaled)).cost;
+        assert_eq!(cs, c * 1000);
+    });
+}
+
+/// With a single request per file and *uniform* sizes and no penalty, GS's
+/// detours can still lose to DP — but FGS must at least never be worse
+/// than GS (its passes only remove detrimental detours).
+#[test]
+fn fgs_never_worse_than_gs() {
+    check_cases(0x6C, 150, &small(), |inst| {
+        let gs = evaluate(inst, &Gs.schedule(inst)).cost;
+        let fgs = evaluate(inst, &Fgs.schedule(inst)).cost;
+        assert!(fgs <= gs, "FGS {fgs} <= GS {gs}");
+    });
+}
+
+/// Arbitrary-start extension (paper's conclusion): DpFromStart's schedule
+/// never starts a detour right of X, achieves the documented cost identity
+/// `cost_from(X) = cost_from(m) − n·(m − X)`, and beats DP's *restricted*
+/// competitors.
+#[test]
+fn from_start_extension_invariants() {
+    use tapesched::sched::DpFromStart;
+    use tapesched::sim::evaluate_from;
+    check_cases(0x7D, 80, &small(), |inst| {
+        // A start position somewhere mid-tape, but right of f₁ so every
+        // schedule can still begin by moving left.
+        let x_pos = inst.l(0) + (inst.tape_len() - inst.l(0)) / 2;
+        let solver = DpFromStart { x_pos };
+        let sched = solver.schedule(inst);
+        for d in &sched {
+            assert!(inst.l(d.a) <= x_pos);
+        }
+        let from_x = evaluate_from(inst, &sched, x_pos).cost;
+        let from_m = evaluate(inst, &sched).cost;
+        let delta = (inst.tape_len() - x_pos) as i128 * inst.n() as i128;
+        assert_eq!(from_x, from_m - delta, "cost identity");
+        assert_eq!(solver.optimal_cost(inst), from_x);
+        // Restricting the start can never help.
+        let unrestricted = evaluate(inst, &Dp.schedule(inst)).cost;
+        assert!(from_m >= unrestricted);
+        // GS restricted to detours left of X is still a competitor.
+        let gs_restricted: Vec<_> = Gs
+            .schedule(inst)
+            .into_iter()
+            .filter(|d| inst.l(d.a) <= x_pos)
+            .collect();
+        assert!(from_x <= evaluate_from(inst, &gs_restricted, x_pos).cost);
+    });
+}
+
+/// evaluate_from at the tape end is exactly evaluate.
+#[test]
+fn evaluate_from_tape_end_is_evaluate() {
+    use tapesched::sim::evaluate_from;
+    check_cases(0x8E, 80, &small(), |inst| {
+        for sched in [Gs.schedule(inst), Dp.schedule(inst), vec![]] {
+            let a = evaluate(inst, &sched);
+            let b = evaluate_from(inst, &sched, inst.tape_len());
+            assert_eq!(a.cost, b.cost);
+            assert_eq!(a.service, b.service);
+        }
+    });
+}

@@ -1,0 +1,131 @@
+//! Cross-layer integration: the AOT-compiled XLA SimpleDP engine vs the
+//! exact Rust implementation over random and adversarial instances.
+//!
+//! Gated on `artifacts/` (produced by `make artifacts`); every test skips
+//! cleanly when artifacts are absent so `cargo test` works pre-build.
+
+use tapesched::model::adversarial::simpledp_five_thirds;
+use tapesched::runtime::{XlaSimpleDp, ARTIFACT_DIR};
+use tapesched::sched::simpledp_dense::dense_cost;
+use tapesched::sched::{Scheduler, SimpleDp};
+use tapesched::sim::evaluate;
+use tapesched::testkit::{random_instance, InstanceGenConfig};
+use tapesched::util::rng::Rng;
+
+fn backend() -> Option<XlaSimpleDp> {
+    let b = XlaSimpleDp::new(ARTIFACT_DIR).ok()?;
+    if b.buckets().is_empty() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    } else {
+        Some(b)
+    }
+}
+
+#[test]
+fn xla_cost_matches_exact_on_random_instances() {
+    let Some(b) = backend() else { return };
+    let mut rng = Rng::new(0x71A);
+    let cfg = InstanceGenConfig {
+        min_files: 1,
+        max_files: 14,
+        max_size: 60,
+        max_gap: 40,
+        max_x: 8,
+        max_u: 50,
+    };
+    for case in 0..60 {
+        let inst = random_instance(&mut rng, &cfg);
+        let exact = dense_cost(&inst);
+        let xla = b.cost(&inst).expect("fits smallest bucket");
+        assert_eq!(xla, exact, "case {case}: {inst:?}");
+    }
+}
+
+#[test]
+fn xla_schedule_cost_matches_exact_everywhere() {
+    let Some(b) = backend() else { return };
+    let mut rng = Rng::new(0x71B);
+    let cfg = InstanceGenConfig {
+        min_files: 2,
+        max_files: 12,
+        ..Default::default()
+    };
+    for _ in 0..40 {
+        let inst = random_instance(&mut rng, &cfg);
+        let sched = b.try_schedule(&inst).unwrap();
+        let exact_sched = SimpleDp.schedule(&inst);
+        assert_eq!(
+            evaluate(&inst, &sched).cost,
+            evaluate(&inst, &exact_sched).cost,
+            "XLA reconstruction must achieve the exact cost"
+        );
+    }
+}
+
+#[test]
+fn xla_handles_byte_scale_positions() {
+    // GB-scale byte positions (the real dataset's regime): the POS_SCALE
+    // rescaling must keep f64 exact enough for i128 equality after
+    // rounding.
+    let Some(b) = backend() else { return };
+    let mut rng = Rng::new(0x71C);
+    let cfg = InstanceGenConfig {
+        min_files: 2,
+        max_files: 10,
+        max_size: 170_000, // scaled ×1e6 below
+        max_gap: 120_000,
+        max_x: 9,
+        max_u: 30_000,
+    };
+    for _ in 0..20 {
+        let small = random_instance(&mut rng, &cfg);
+        let files = small
+            .files()
+            .iter()
+            .map(|f| tapesched::model::ReqFile {
+                l: f.l * 1_000_000,
+                r: f.r * 1_000_000,
+                x: f.x,
+            })
+            .collect();
+        let inst = tapesched::model::Instance::new(
+            small.tape_len() * 1_000_000,
+            small.u() * 1_000_000,
+            files,
+        )
+        .unwrap();
+        assert_eq!(b.cost(&inst).unwrap(), dense_cost(&inst));
+    }
+}
+
+#[test]
+fn xla_agrees_on_adversarial_instance() {
+    let Some(b) = backend() else { return };
+    for z in [5u64, 10, 20] {
+        let inst = simpledp_five_thirds(z);
+        if b.bucket_for(&inst).is_none() {
+            continue; // n = 2z²+z+1 outgrows the shipped buckets fast
+        }
+        assert_eq!(b.cost(&inst).unwrap(), dense_cost(&inst), "z={z}");
+    }
+}
+
+#[test]
+fn bucket_routing_picks_smallest_fit() {
+    let Some(b) = backend() else { return };
+    if b.buckets().len() < 2 {
+        return;
+    }
+    let mut rng = Rng::new(0x71D);
+    let small = random_instance(
+        &mut rng,
+        &InstanceGenConfig { min_files: 2, max_files: 8, max_x: 3, ..Default::default() },
+    );
+    let bucket = b.bucket_for(&small).unwrap();
+    for other in b.buckets() {
+        if other.fits(&small) {
+            assert!(bucket.k * bucket.ns <= other.k * other.ns);
+        }
+    }
+}
