@@ -1,0 +1,50 @@
+# Repo-level entry points. `make verify` is the tier-1 gate every PR must
+# keep green (see ROADMAP.md); `make ci` adds formatting and compile gates.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: verify build test benches bench-smoke examples fmt fmt-check artifacts ci clean
+
+verify: ## tier-1 gate: release build + full test suite
+	$(CARGO) build --release
+	$(CARGO) test -q
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Compile every bench binary without running it (fast structural gate).
+benches:
+	$(CARGO) bench --no-run
+
+# Run every bench binary on its --smoke fast path (seconds, not minutes).
+bench-smoke:
+	$(CARGO) bench --bench ablations -- --smoke
+	$(CARGO) bench --bench algo_runtimes -- --smoke
+	$(CARGO) bench --bench coordinator -- --smoke
+	$(CARGO) bench --bench profiles -- --smoke
+	$(CARGO) bench --bench runtime_xla -- --smoke
+
+examples:
+	$(CARGO) build --examples
+
+fmt:
+	$(CARGO) fmt --all
+
+fmt-check:
+	$(CARGO) fmt --all -- --check
+
+# AOT-compile the SimpleDP shape-bucket artifacts consumed by the `xla`
+# backend (requires jax; see python/compile/aot.py).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts
+
+ci:
+	bash scripts/ci.sh
+
+clean:
+	$(CARGO) clean
+	rm -rf results bench_*.csv

@@ -1,29 +1,32 @@
-//! The three-layer stack in action: run the AOT-compiled SimpleDP
-//! evaluation engine (Pallas kernel → JAX scan → HLO text → PJRT) from
-//! Rust and cross-validate it against the exact i128 implementation.
+//! The pluggable SimpleDP backend layer in action: cross-validate every
+//! available evaluation backend against the exact sparse solver.
 //!
-//! Requires `make artifacts` (skips gracefully otherwise).
+//! In a default build the only backend is the pure-Rust dense wavefront.
+//! With `--features xla` (and `make artifacts`) the PJRT engine joins the
+//! comparison: Pallas kernel → JAX scan → HLO text → PJRT, cross-validated
+//! against the exact `i128` implementation, bit-for-bit after rounding.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example xla_acceleration
+//! cargo run --release --example xla_acceleration
+//! make artifacts && cargo run --release --features xla --example xla_acceleration
 //! ```
 
-use tapesched::runtime::{XlaSimpleDp, ARTIFACT_DIR};
-use tapesched::sched::simpledp_dense::dense_cost;
+use tapesched::runtime::{available_backends, backend_by_name, BackendPolicy, SimpleDpBackend};
 use tapesched::sched::{Scheduler, SimpleDp};
 use tapesched::sim::evaluate;
 use tapesched::testkit::{random_instance, InstanceGenConfig};
 use tapesched::util::rng::Rng;
 
 fn main() {
-    let backend = match XlaSimpleDp::new(ARTIFACT_DIR) {
-        Ok(b) if !b.buckets().is_empty() => b,
-        _ => {
-            eprintln!("no artifacts found — run `make artifacts` first");
-            std::process::exit(0);
-        }
-    };
-    println!("PJRT buckets available: {:?}\n", backend.buckets());
+    let backends = available_backends();
+    println!(
+        "SimpleDP backends available: {}",
+        backends.iter().map(|b| b.id()).collect::<Vec<_>>().join(", ")
+    );
+    if let Err(e) = backend_by_name("xla") {
+        println!("({e})");
+    }
+    println!();
 
     let mut rng = Rng::new(2024);
     let cfg = InstanceGenConfig {
@@ -33,30 +36,50 @@ fn main() {
         max_gap: 25,
         max_x: 7,
         max_u: 30,
-        ..Default::default()
     };
 
     println!(
-        "{:>4} {:>3} {:>5} {:>16} {:>16} {:>16}  agree",
-        "case", "k", "n", "exact i128", "XLA f64", "schedule cost"
+        "{:>4} {:>3} {:>5} {:>16} {}",
+        "case",
+        "k",
+        "n",
+        "exact sparse",
+        backends
+            .iter()
+            .map(|b| format!("{:>16}", b.id()))
+            .collect::<Vec<_>>()
+            .join(" ")
     );
     let mut all_agree = true;
     for case in 0..20 {
         let inst = random_instance(&mut rng, &cfg);
-        let exact = dense_cost(&inst);
-        let xla = backend.cost(&inst).expect("instance fits a bucket");
-        let sched = backend.schedule(&inst);
-        let achieved = evaluate(&inst, &sched).cost;
-        let rust_sched_cost = evaluate(&inst, &SimpleDp.schedule(&inst)).cost;
-        let ok = xla == exact && achieved == rust_sched_cost;
-        all_agree &= ok;
-        println!(
-            "{case:>4} {:>3} {:>5} {exact:>16} {xla:>16} {achieved:>16}  {}",
+        let sparse = SimpleDp::cost(&inst);
+        let mut row = format!(
+            "{case:>4} {:>3} {:>5} {sparse:>16}",
             inst.k(),
-            inst.n(),
-            if ok { "✓" } else { "✗ MISMATCH" }
+            inst.n()
         );
+        let mut ok = true;
+        for b in &backends {
+            let cost = b.opt_cost(&inst);
+            let achieved = evaluate(&inst, &b.opt_schedule(&inst)).cost;
+            ok &= cost == sparse && achieved == sparse;
+            row.push_str(&format!(" {cost:>16}"));
+        }
+        all_agree &= ok;
+        println!("{row}  {}", if ok { "✓" } else { "✗ MISMATCH" });
     }
-    assert!(all_agree, "XLA backend must agree with the exact implementation");
-    println!("\nall 20 random instances agree bit-for-bit after rounding — L1/L2/L3 compose.");
+    assert!(all_agree, "every backend must agree with the exact sparse solver");
+
+    // Any backend doubles as a coordinator/CLI policy via the adapter.
+    let policy = BackendPolicy::new(backends[0].clone());
+    let inst = random_instance(&mut rng, &cfg);
+    let sched = policy.schedule(&inst);
+    println!(
+        "\npolicy {} schedules {} detours at cost {} — backends compose with the \
+         serving layer unchanged.",
+        policy.name(),
+        sched.len(),
+        evaluate(&inst, &sched).cost
+    );
 }

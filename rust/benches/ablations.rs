@@ -11,17 +11,36 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use tapesched::bench::{bench, BenchConfig, Suite};
+use tapesched::bench::{bench, smoke_requested, BenchConfig, Suite};
 use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, ReadRequest};
 use tapesched::dataset::{generate_dataset, GeneratorConfig};
 use tapesched::sched::{scheduler_by_name, Dp, Gs, LogDp, Scheduler};
 use tapesched::sim::{evaluate, DriveParams};
 use tapesched::util::rng::Rng;
 
+/// Small-marginal dataset for `--smoke`: the pinned extreme tapes keep the
+/// n_req filters below satisfiable (tape 1 lands at n_req = 90, tape 0 at
+/// n_req = 35).
+fn smoke_dataset() -> GeneratorConfig {
+    GeneratorConfig {
+        n_tapes: 12,
+        nf: (40, 60.0, 70.0, 150),
+        nreq: (35, 60.0, 65.0, 90),
+        n: (60, 150.0, 170.0, 300),
+        ..Default::default()
+    }
+}
+
 fn main() {
+    let smoke = smoke_requested();
     let mut suite = Suite::new();
-    let ds = generate_dataset(&GeneratorConfig::default());
+    let ds = if smoke {
+        generate_dataset(&smoke_dataset())
+    } else {
+        generate_dataset(&GeneratorConfig::default())
+    };
     let [_, u_half, _] = ds.paper_u_values();
+    let bench_cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
 
     // --- 1. LogDP λ sweep: quality vs time -------------------------------
     // A mid-size tape (exact DP still feasible for the reference).
@@ -44,7 +63,7 @@ fn main() {
         let algo = LogDp::new(lambda);
         let r = bench(
             &format!("logdp_lambda/{lambda}"),
-            &BenchConfig::quick(),
+            &bench_cfg,
             || algo.schedule(&inst),
         );
         let cost = evaluate(&inst, &algo.schedule(&inst)).cost;
@@ -57,9 +76,12 @@ fn main() {
     }
 
     // --- 2. batch-window ablation ----------------------------------------
-    println!("\n=== batch-window ablation (SimpleDP, 4 drives, 3000 reqs) ===");
+    let n_reqs: u64 = if smoke { 500 } else { 3_000 };
+    let n_tapes = ds.tapes.len().min(24);
+    let windows: &[u64] = if smoke { &[0, 10] } else { &[0, 2, 10, 50] };
+    println!("\n=== batch-window ablation (SimpleDP, 4 drives, {n_reqs} reqs) ===");
     println!("{:>10} {:>9} {:>14} {:>14}", "window", "batches", "mean svc (s)", "wall (s)");
-    for window_ms in [0u64, 2, 10, 50] {
+    for &window_ms in windows {
         let t0 = Instant::now();
         let coord = Coordinator::start(
             CoordinatorConfig {
@@ -70,12 +92,12 @@ fn main() {
                 },
                 drive: DriveParams::default(),
             },
-            ds.tapes.iter().take(24).map(|t| t.tape.clone()),
+            ds.tapes.iter().take(n_tapes).map(|t| t.tape.clone()),
             Arc::from(scheduler_by_name("SimpleDP").unwrap()),
         );
         let mut rng = Rng::new(3);
-        for id in 0..3_000u64 {
-            let t = &ds.tapes[rng.below(24) as usize];
+        for id in 0..n_reqs {
+            let t = &ds.tapes[rng.below(n_tapes as u64) as usize];
             coord.submit(ReadRequest {
                 id,
                 tape: t.tape.name.clone(),

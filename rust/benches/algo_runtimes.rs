@@ -6,12 +6,25 @@
 //! others < 1 ms. The *ordering* is the reproduction target; the Rust
 //! implementations shift absolute numbers by the language factor.
 
-use tapesched::bench::{bench, BenchConfig, Suite};
+use tapesched::bench::{bench, smoke_requested, BenchConfig, Suite};
 use tapesched::dataset::{generate_dataset, GeneratorConfig};
 use tapesched::sched::paper_schedulers;
 
 fn main() {
-    let ds = generate_dataset(&GeneratorConfig::default());
+    let smoke = smoke_requested();
+    let ds = if smoke {
+        // Small marginals: only the small bucket is populated, every
+        // algorithm (exact DP included) finishes in seconds.
+        generate_dataset(&GeneratorConfig {
+            n_tapes: 8,
+            nf: (40, 60.0, 70.0, 120),
+            nreq: (10, 25.0, 30.0, 50),
+            n: (20, 60.0, 70.0, 150),
+            ..Default::default()
+        })
+    } else {
+        generate_dataset(&GeneratorConfig::default())
+    };
     let [_, _, u_avg] = ds.paper_u_values();
 
     // Size buckets over n_req: small / median-ish / large. The paper's
@@ -35,7 +48,9 @@ fn main() {
         println!("--- bucket {label}: tape {} (n_req = {}, n = {}) ---", tape.tape.name, inst.k(), inst.n());
         for algo in paper_schedulers() {
             // Exact DP on large instances is minutes; measure once there.
-            let cfg = if algo.name() == "DP" && inst.k() > 150 {
+            let cfg = if smoke {
+                BenchConfig::smoke()
+            } else if algo.name() == "DP" && inst.k() > 150 {
                 BenchConfig {
                     warmup: std::time::Duration::ZERO,
                     measure: std::time::Duration::ZERO,

@@ -4,7 +4,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use tapesched::bench::{bench, BenchConfig, BenchResult, Suite};
+use tapesched::bench::{bench, smoke_requested, BenchConfig, BenchResult, Suite};
 use tapesched::coordinator::{Batcher, BatcherConfig, Coordinator, CoordinatorConfig, ReadRequest};
 use tapesched::dataset::{generate_dataset, GeneratorConfig};
 use tapesched::sched::scheduler_by_name;
@@ -12,10 +12,11 @@ use tapesched::sim::{DriveParams, LibrarySim, TapeJob};
 use tapesched::util::rng::Rng;
 
 fn main() {
+    let smoke = smoke_requested();
     let mut suite = Suite::new();
 
     // --- batcher micro-bench: push+pop throughput -----------------------
-    let cfg = BenchConfig::quick();
+    let cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
     suite.run("batcher/push_pop_10k", &cfg, || {
         let mut b = Batcher::new(BatcherConfig { window: std::time::Duration::ZERO, max_batch: 256 });
         let t0 = Instant::now();
@@ -30,17 +31,34 @@ fn main() {
     });
 
     // --- coordinator end-to-end throughput per policy -------------------
-    let ds = generate_dataset(&GeneratorConfig { n_tapes: 24, ..Default::default() });
-    for policy_name in ["GS", "SimpleDP", "LogDP(1)"] {
-        let n_req = 4_000u64;
-        let r = bench(
-            &format!("coordinator/e2e_{n_req}req/{policy_name}"),
-            &BenchConfig {
+    let ds = if smoke {
+        generate_dataset(&GeneratorConfig {
+            n_tapes: 8,
+            nf: (40, 60.0, 70.0, 150),
+            nreq: (10, 25.0, 30.0, 60),
+            n: (20, 60.0, 70.0, 180),
+            ..Default::default()
+        })
+    } else {
+        generate_dataset(&GeneratorConfig { n_tapes: 24, ..Default::default() })
+    };
+    let policies: &[&str] =
+        if smoke { &["GS", "SimpleDP"] } else { &["GS", "SimpleDP", "LogDP(1)"] };
+    for policy_name in policies.iter().copied() {
+        let n_req = if smoke { 500u64 } else { 4_000u64 };
+        let e2e_cfg = if smoke {
+            BenchConfig::smoke()
+        } else {
+            BenchConfig {
                 warmup: std::time::Duration::ZERO,
                 measure: std::time::Duration::from_secs(2),
                 max_iters: 5,
                 min_iters: 2,
-            },
+            }
+        };
+        let r = bench(
+            &format!("coordinator/e2e_{n_req}req/{policy_name}"),
+            &e2e_cfg,
             || {
                 let coord = Coordinator::start(
                     CoordinatorConfig {
@@ -67,7 +85,7 @@ fn main() {
                 assert_eq!(completions.len() as u64, n_req);
             },
         );
-        let req_per_s = 4_000.0 / r.median;
+        let req_per_s = n_req as f64 / r.median;
         println!("    → {:.0} requests/s through the full stack", req_per_s);
         suite.record(r);
     }
@@ -86,7 +104,8 @@ fn main() {
             instance: t.instance(0).unwrap(),
         })
         .collect();
-    for n_drives in [1usize, 4, 16] {
+    let drive_pools: &[usize] = if smoke { &[1, 4] } else { &[1, 4, 16] };
+    for &n_drives in drive_pools {
         let sim = LibrarySim::new(DriveParams::default(), n_drives, policy.as_ref());
         let jobs2 = jobs.clone();
         let t0 = Instant::now();

@@ -6,14 +6,17 @@
 //! the headline profile values the paper quotes in §5.3.
 
 use tapesched::analysis::report::run_evaluation;
-use tapesched::bench::{once, Suite};
+use tapesched::bench::{once, smoke_requested, Suite};
 use tapesched::dataset::{generate_dataset, GeneratorConfig};
 use tapesched::sched::paper_schedulers;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let n_tapes: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
-    let max_k: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(55);
+    // Smoke: the pinned minimum tape (n_req = 31) must survive the max_k
+    // filter or the profile builder has zero instances.
+    let (default_tapes, default_max_k) = if smoke_requested() { (6, 35) } else { (24, 55) };
+    let n_tapes: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(default_tapes);
+    let max_k: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(default_max_k);
 
     let ds = generate_dataset(&GeneratorConfig { n_tapes, ..Default::default() });
     let [u0, u_half, u_avg] = ds.paper_u_values();

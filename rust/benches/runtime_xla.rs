@@ -1,25 +1,77 @@
-//! Bench — the XLA evaluation engine: PJRT execute latency per shape
-//! bucket vs the exact i128 dense implementation on the same instances,
-//! plus compile-once cost. Skips cleanly when artifacts are absent.
+//! Bench — the SimpleDP backend layer: every available backend
+//! (pure-Rust dense always; the PJRT XLA engine with `--features xla`)
+//! against the sparse exact solver on the same instances. With the `xla`
+//! feature and artifacts present, adds the per-shape-bucket PJRT
+//! compile/execute latencies; skips that section cleanly otherwise.
+//!
+//! `cargo bench --bench runtime_xla [-- --smoke]`
 
-use tapesched::bench::{bench, once, BenchConfig, Suite};
-use tapesched::runtime::{XlaSimpleDp, ARTIFACT_DIR};
+use tapesched::bench::{smoke_requested, BenchConfig, Suite};
+use tapesched::runtime::{available_backends, SimpleDpBackend};
 use tapesched::sched::simpledp_dense::dense_table;
 use tapesched::sched::{Scheduler, SimpleDp};
 use tapesched::testkit::{random_instance, InstanceGenConfig};
 use tapesched::util::rng::Rng;
 
 fn main() {
-    let backend = match XlaSimpleDp::new(ARTIFACT_DIR) {
-        Ok(b) if !b.buckets().is_empty() => b,
-        _ => {
-            println!("runtime_xla: no artifacts (run `make artifacts`) — skipping");
-            return;
-        }
-    };
+    let smoke = smoke_requested();
+    let cfg_b = if smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
     let mut suite = Suite::new();
     let mut rng = Rng::new(7);
 
+    let backends = available_backends();
+    println!(
+        "backends: {}\n",
+        backends.iter().map(|b| b.id()).collect::<Vec<_>>().join(", ")
+    );
+
+    let sizes: &[usize] = if smoke { &[8, 24] } else { &[8, 24, 64, 96] };
+    for &k in sizes {
+        let cfg = InstanceGenConfig {
+            min_files: k,
+            max_files: k,
+            max_size: 40,
+            max_gap: 25,
+            max_x: 6,
+            max_u: 20,
+        };
+        let inst = random_instance(&mut rng, &cfg);
+        for b in &backends {
+            suite.run(&format!("backend/{}/opt_cost/k={k}", b.id()), &cfg_b, || {
+                b.opt_cost(&inst)
+            });
+            suite.run(&format!("backend/{}/opt_schedule/k={k}", b.id()), &cfg_b, || {
+                b.opt_schedule(&inst)
+            });
+        }
+        suite.run(&format!("rust/dense_table/k={k}"), &cfg_b, || dense_table(&inst));
+        suite.run(&format!("rust/sparse_simpledp/k={k}"), &cfg_b, || {
+            SimpleDp.schedule(&inst)
+        });
+        println!();
+    }
+
+    #[cfg(feature = "xla")]
+    xla_bucket_bench(&mut suite, smoke);
+
+    suite.write_csv("bench_runtime_xla.csv");
+}
+
+/// Per-bucket PJRT latencies (compile-once cost recorded separately).
+#[cfg(feature = "xla")]
+fn xla_bucket_bench(suite: &mut Suite, smoke: bool) {
+    use tapesched::bench::once;
+    use tapesched::runtime::{XlaSimpleDp, ARTIFACT_DIR};
+
+    let backend = match XlaSimpleDp::new(ARTIFACT_DIR) {
+        Ok(b) if !b.buckets().is_empty() => b,
+        _ => {
+            println!("runtime_xla: no artifacts (run `make artifacts`) — skipping PJRT section");
+            return;
+        }
+    };
+    let cfg_b = if smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
+    let mut rng = Rng::new(7);
     for bucket in backend.buckets().to_vec() {
         // An instance that fills ~3/4 of the bucket.
         let k_target = (bucket.k * 3 / 4).max(2);
@@ -41,18 +93,9 @@ fn main() {
             || backend.table(&inst).unwrap(),
         );
         suite.record(compile_r);
-
-        let cfg_b = BenchConfig::quick();
         suite.run(&format!("xla/execute/{}", bucket.artifact()), &cfg_b, || {
             backend.table(&inst).unwrap()
         });
-        suite.run(&format!("rust/dense_table/k={}", inst.k()), &cfg_b, || {
-            dense_table(&inst)
-        });
-        suite.run(&format!("rust/sparse_simpledp/k={}", inst.k()), &cfg_b, || {
-            SimpleDp.schedule(&inst)
-        });
         println!();
     }
-    suite.write_csv("bench_runtime_xla.csv");
 }

@@ -43,6 +43,26 @@ impl BenchConfig {
             min_iters: 3,
         }
     }
+
+    /// The `--smoke` profile: one measured iteration, no warmup. Numbers
+    /// are meaningless as benchmarks; the point is that the whole bench
+    /// binary *runs* in seconds so CI can gate on it (`make bench-smoke`).
+    pub fn smoke() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::ZERO,
+            measure: Duration::ZERO,
+            max_iters: 1,
+            min_iters: 1,
+        }
+    }
+}
+
+/// True when the bench binary should take its fast path: invoked with
+/// `--smoke` (after `cargo bench --bench NAME -- --smoke`) or with
+/// `TAPESCHED_SMOKE=1` in the environment.
+pub fn smoke_requested() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("TAPESCHED_SMOKE").map_or(false, |v| v == "1")
 }
 
 /// Summary of one benchmark: all times in seconds per iteration.
@@ -213,6 +233,12 @@ mod tests {
         };
         let r = bench("sleepy", &cfg, || std::thread::sleep(Duration::from_millis(2)));
         assert!(r.iters >= 4);
+    }
+
+    #[test]
+    fn smoke_profile_is_single_iteration() {
+        let r = bench("noop", &BenchConfig::smoke(), || 1 + 1);
+        assert_eq!(r.iters, 1);
     }
 
     #[test]

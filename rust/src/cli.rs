@@ -68,6 +68,22 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Constrained-choice flag: the value (or `default` when absent) must
+    /// be one of `allowed`, case-insensitively; exits with a message
+    /// otherwise. Returns the matched value in lowercase.
+    pub fn get_choice_or(&self, key: &str, allowed: &[&str], default: &str) -> String {
+        let v = self.get_or(key, default).to_ascii_lowercase();
+        if allowed.iter().any(|a| a.eq_ignore_ascii_case(&v)) {
+            v
+        } else {
+            eprintln!(
+                "error: invalid value for --{key}: {v} (expected one of: {})",
+                allowed.join("|")
+            );
+            std::process::exit(2);
+        }
+    }
+
     /// Abort on flags not in `known` (catches typos).
     pub fn reject_unknown(&self, known: &[&str]) {
         for k in &self.seen {
@@ -97,6 +113,14 @@ mod tests {
         assert_eq!(a.get_or("y", ""), "hello");
         assert_eq!(a.get_or("absent", "dflt"), "dflt");
         assert_eq!(a.get_parsed_or("absent", 7i32), 7);
+    }
+
+    #[test]
+    fn choice_flags() {
+        let a = parse(&["--backend", "XLA"]);
+        assert_eq!(a.get_choice_or("backend", &["dense", "xla"], "dense"), "xla");
+        // Absent flag: the default is returned (and must itself be valid).
+        assert_eq!(a.get_choice_or("mode", &["fast", "slow"], "slow"), "slow");
     }
 
     #[test]

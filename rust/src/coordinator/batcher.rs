@@ -135,8 +135,16 @@ impl Batcher {
         self.open.len()
     }
 
-    /// Deadline of the oldest open batch, if any (service loop wake-up).
+    /// Wake-up deadline: immediate (a past instant) when a cap-closed
+    /// batch is already waiting, otherwise the oldest open batch's window
+    /// expiry. `pop_ready` serves closed batches regardless of windows, so
+    /// a caller that pops before sleeping (as the dispatcher does, under
+    /// one lock) never observes the closed branch — it exists so the
+    /// deadline contract holds for *any* caller, not just that pattern.
     pub fn next_deadline(&self) -> Option<Instant> {
+        if let Some(b) = self.closed.front() {
+            return Some(b.opened_at); // in the past ⇒ zero wait
+        }
         self.fifo.front().map(|t| self.open[t].opened_at + self.cfg.window)
     }
 }
@@ -212,6 +220,31 @@ mod tests {
         b.push("A", 0, 1, t0);
         b.push("B", 0, 2, t0 + Duration::from_millis(10));
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn next_deadline_is_immediate_while_a_closed_batch_waits() {
+        // Regression: a cap-closed batch used to be invisible to
+        // next_deadline (only fifo.front() was inspected), so a caller
+        // sleeping until the reported deadline would wait out an open
+        // batch's window while a dispatchable batch sat in the closed
+        // queue. (The in-tree dispatcher pops before sleeping and so never
+        // hit this; the contract must hold for external callers too.)
+        let window = Duration::from_millis(1_000_000);
+        let mut b = Batcher::new(cfg(1_000_000, 2));
+        let t0 = Instant::now();
+        b.push("A", 0, 1, t0);
+        assert!(b.push("A", 1, 2, t0), "cap of 2 closes A's batch");
+        b.push("B", 0, 3, t0 + Duration::from_millis(5));
+        // A's closed batch makes the deadline immediate (not B's window).
+        let d = b.next_deadline().expect("work pending");
+        assert!(d <= t0, "deadline {d:?} must not wait for an open window");
+        // Popping the closed batch restores the open batch's window.
+        assert_eq!(b.pop_ready(t0, false).unwrap().tape, "A");
+        assert_eq!(
+            b.next_deadline(),
+            Some(t0 + Duration::from_millis(5) + window)
+        );
     }
 
     #[test]

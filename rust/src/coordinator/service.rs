@@ -16,6 +16,7 @@ use std::time::Instant;
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::{MetricsSnapshot, SharedMetrics};
 use crate::model::{Instance, Tape};
+use crate::runtime::{BackendPolicy, SimpleDpBackend};
 use crate::sched::Scheduler;
 use crate::sim::{evaluate, DriveParams};
 
@@ -121,6 +122,17 @@ impl Coordinator {
         };
 
         Coordinator { cfg, shared, dispatcher: Some(dispatcher), workers }
+    }
+
+    /// [`Coordinator::start`] with a SimpleDP evaluation backend as the
+    /// policy: the backend (pure-Rust dense or the XLA engine) is wrapped
+    /// in a [`BackendPolicy`] so drive workers schedule batches through it.
+    pub fn start_with_backend(
+        cfg: CoordinatorConfig,
+        catalog: impl IntoIterator<Item = Tape>,
+        backend: Arc<dyn SimpleDpBackend>,
+    ) -> Coordinator {
+        Coordinator::start(cfg, catalog, Arc::new(BackendPolicy::new(backend)))
     }
 
     /// Submit one read request. Returns `false` (dropping the request) if
@@ -357,6 +369,41 @@ mod tests {
         let s0 = completions[0].service_s;
         assert!(completions.iter().all(|c| (c.service_s - s0).abs() < 1e-9));
         assert!(m.batches >= 1);
+    }
+
+    #[test]
+    fn backend_policy_serves_like_the_sparse_scheduler() {
+        // A window far longer than the test (batches only flush at drain)
+        // makes batch composition deterministic: one batch per tape, so
+        // in-tape service times are comparable across runs.
+        let mut config = cfg();
+        config.batcher.window = Duration::from_secs(3600);
+
+        let drain = |c: Coordinator| -> Vec<f64> {
+            for i in 0..120u64 {
+                let tape = if i % 2 == 0 { "TAPE001" } else { "TAPE002" };
+                assert!(c.submit(ReadRequest {
+                    id: i,
+                    tape: tape.into(),
+                    file_index: (i % 40) as usize,
+                }));
+            }
+            let (mut completions, m) = c.finish();
+            assert_eq!(m.completed, 120);
+            completions.sort_by_key(|c| c.request_id);
+            completions.iter().map(|c| c.service_s).collect()
+        };
+
+        let via_backend = drain(Coordinator::start_with_backend(
+            config.clone(),
+            catalog(),
+            crate::runtime::default_backend(),
+        ));
+        let via_sparse = drain(Coordinator::start(config, catalog(), Arc::new(SimpleDp)));
+        assert_eq!(via_backend.len(), via_sparse.len());
+        for (a, b) in via_backend.iter().zip(&via_sparse) {
+            assert!((a - b).abs() < 1e-9, "backend {a} vs sparse {b}");
+        }
     }
 
     #[test]

@@ -18,24 +18,49 @@ use super::{Dataset, TapeData};
 use crate::model::{FileExtent, Tape};
 
 /// Errors raised while reading a dataset directory.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LoadError {
-    #[error("I/O error on {path}: {source}")]
-    Io {
-        path: String,
-        #[source]
-        source: io::Error,
-    },
-    #[error("{path}:{line}: expected {expected} numeric columns, got {got}")]
+    Io { path: String, source: io::Error },
     BadColumns { path: String, line: usize, expected: usize, got: usize },
-    #[error("{path}:{line}: file indices must be 1-based and contiguous (got {got}, expected {expected})")]
     BadIndex { path: String, line: usize, got: usize, expected: usize },
-    #[error("{path}:{line}: request on unknown file index {index} (tape has {n_files} files)")]
     UnknownFile { path: String, line: usize, index: usize, n_files: usize },
-    #[error("{path}:{line}: positions must be non-decreasing / consistent with sizes")]
     Inconsistent { path: String, line: usize },
-    #[error("tape {0} has no requests")]
     NoRequests(String),
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadError::Io { path, source } => write!(f, "I/O error on {path}: {source}"),
+            LoadError::BadColumns { path, line, expected, got } => {
+                write!(f, "{path}:{line}: expected {expected} numeric columns, got {got}")
+            }
+            LoadError::BadIndex { path, line, got, expected } => write!(
+                f,
+                "{path}:{line}: file indices must be 1-based and contiguous \
+                 (got {got}, expected {expected})"
+            ),
+            LoadError::UnknownFile { path, line, index, n_files } => write!(
+                f,
+                "{path}:{line}: request on unknown file index {index} \
+                 (tape has {n_files} files)"
+            ),
+            LoadError::Inconsistent { path, line } => write!(
+                f,
+                "{path}:{line}: positions must be non-decreasing / consistent with sizes"
+            ),
+            LoadError::NoRequests(tape) => write!(f, "tape {tape} has no requests"),
+        }
+    }
+}
+
+impl std::error::Error for LoadError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LoadError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 fn read(path: &Path) -> Result<String, LoadError> {

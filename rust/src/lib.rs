@@ -5,8 +5,9 @@
 //! heuristic schedulers minimizing the **average service time** of read
 //! requests on a linear magnetic tape, plus the surrounding mass-storage
 //! machinery: a ground-truth head simulator, a robotic-library serving
-//! runtime, a dataset pipeline, an XLA-accelerated evaluation engine and
-//! the full evaluation harness of the paper.
+//! runtime, a dataset pipeline, pluggable SimpleDP evaluation backends
+//! (optionally XLA-accelerated) and the full evaluation harness of the
+//! paper.
 //!
 //! ## Quick start
 //!
@@ -32,7 +33,8 @@
 //! - [`sched`] — the paper's nine algorithms behind one [`sched::Scheduler`] trait.
 //! - [`sim`] — head-trajectory ground truth + robotic library simulator.
 //! - [`coordinator`] — multi-threaded request-serving service.
-//! - [`runtime`] — PJRT/XLA loading of the AOT-compiled SimpleDP engine.
+//! - [`runtime`] — pluggable SimpleDP backends: pure-Rust dense (default)
+//!   plus the PJRT/XLA engine behind the off-by-default `xla` feature.
 //! - [`dataset`] — IN2P3-format loader, calibrated synthetic generator, stats.
 //! - [`analysis`] — performance profiles (Dolan–Moré) and CSV reports.
 //! - [`bench`] — the in-crate benchmark framework used by `cargo bench`.

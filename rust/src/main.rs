@@ -22,6 +22,7 @@ use tapesched::dataset::{
     dataset_stats, generate_dataset, load_dataset, write_dataset, Dataset, GeneratorConfig,
 };
 use tapesched::model::virtual_lb;
+use tapesched::runtime::{backend_by_name, BackendPolicy};
 use tapesched::sched::{paper_schedulers, scheduler_by_name, Scheduler};
 use tapesched::sim::{evaluate, DriveParams};
 use tapesched::util::rng::Rng;
@@ -62,12 +63,15 @@ COMMANDS:
   figures         --experiment fig14|fig15|fig16|timing|all
                   [--data DIR] [--out DIR] [--max-k N] [--algos a,b,…]
   adversarial     [--z N]
-  solve           --tape NAME --algo NAME [--data DIR] [--u N]
-  draw            --out FILE.svg [--tape NAME] [--algo NAME] [--u N]
+  solve           --tape NAME --algo NAME [--data DIR] [--u N] [--backend dense|xla]
+  draw            --out FILE.svg [--tape NAME] [--algo NAME] [--u N] [--backend dense|xla]
   serve           [--policy NAME] [--drives N] [--requests N] [--seed N]
+                  [--backend dense|xla]
   help
 
-Without --data, commands use the built-in calibrated generator (seed 0x12P32021)."
+Without --data, commands use the built-in calibrated generator (seed 0x12P32021).
+--backend picks the SimpleDP evaluation backend (dense = pure Rust, the
+default; xla = the PJRT engine, requires building with --features xla)."
     );
 }
 
@@ -88,6 +92,37 @@ fn dataset_from(args: &Args) -> Dataset {
             let tapes = args.get_parsed_or("tapes", 169usize);
             let seed = args.get_parsed_or("seed", GeneratorConfig::default().seed);
             generate_dataset(&GeneratorConfig { n_tapes: tapes, seed, ..Default::default() })
+        }
+    }
+}
+
+/// Resolve `--<flag>` (an algorithm name) plus the optional `--backend`
+/// into a scheduling policy. `--backend` selects the execution engine of
+/// the SimpleDP policy, so it only combines with `--<flag> SimpleDP` (the
+/// default for every command that accepts it).
+fn resolve_policy(args: &Args, flag: &str, default_name: &str) -> Box<dyn Scheduler + Send + Sync> {
+    let name = args.get_or(flag, default_name);
+    if args.get("backend").is_some() {
+        let backend_name = args.get_choice_or("backend", &["dense", "xla"], "dense");
+        if !name.eq_ignore_ascii_case("simpledp") {
+            eprintln!(
+                "error: --backend selects a SimpleDP backend; it cannot combine with --{flag} {name}"
+            );
+            std::process::exit(2);
+        }
+        match backend_by_name(&backend_name) {
+            Ok(b) => return Box::new(BackendPolicy::new(b)),
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    match scheduler_by_name(&name) {
+        Some(s) => s,
+        None => {
+            eprintln!("error: unknown algorithm {name}");
+            std::process::exit(2);
         }
     }
 }
@@ -204,7 +239,7 @@ fn cmd_adversarial(args: &Args) {
 }
 
 fn cmd_solve(args: &Args) {
-    args.reject_unknown(&["tape", "algo", "data", "u", "seed", "tapes"]);
+    args.reject_unknown(&["tape", "algo", "data", "u", "seed", "tapes", "backend"]);
     let ds = dataset_from(args);
     let name = args.get_or("tape", &ds.tapes[0].tape.name);
     let Some(tape) = ds.tapes.iter().find(|t| t.tape.name == name) else {
@@ -212,11 +247,7 @@ fn cmd_solve(args: &Args) {
         std::process::exit(1);
     };
     let u = args.get_parsed_or("u", ds.avg_segment_size());
-    let algo_name = args.get_or("algo", "SimpleDP");
-    let Some(algo) = scheduler_by_name(&algo_name) else {
-        eprintln!("error: unknown algorithm {algo_name}");
-        std::process::exit(2);
-    };
+    let algo = resolve_policy(args, "algo", "SimpleDP");
     let inst = tape.instance(u).expect("valid tape");
     let t0 = std::time::Instant::now();
     let sched = algo.schedule(&inst);
@@ -232,7 +263,7 @@ fn cmd_solve(args: &Args) {
 
 /// Render a schedule's head trajectory as an SVG (the artifact's draw.py).
 fn cmd_draw(args: &Args) {
-    args.reject_unknown(&["tape", "algo", "data", "u", "out", "seed", "tapes"]);
+    args.reject_unknown(&["tape", "algo", "data", "u", "out", "seed", "tapes", "backend"]);
     let ds = dataset_from(args);
     let name = args.get_or("tape", &ds.tapes[0].tape.name);
     let Some(tape) = ds.tapes.iter().find(|t| t.tape.name == name) else {
@@ -240,11 +271,7 @@ fn cmd_draw(args: &Args) {
         std::process::exit(1);
     };
     let u = args.get_parsed_or("u", ds.avg_segment_size());
-    let algo_name = args.get_or("algo", "SimpleDP");
-    let Some(algo) = scheduler_by_name(&algo_name) else {
-        eprintln!("error: unknown algorithm {algo_name}");
-        std::process::exit(2);
-    };
+    let algo = resolve_policy(args, "algo", "SimpleDP");
     let inst = tape.instance(u).expect("valid tape");
     let sched = algo.schedule(&inst);
     let title = format!("{name} — {} ({} detours, U = {u})", algo.name(), sched.len());
@@ -255,12 +282,9 @@ fn cmd_draw(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
-    args.reject_unknown(&["policy", "drives", "requests", "seed", "tapes", "data"]);
-    let policy_name = args.get_or("policy", "SimpleDP");
-    let Some(policy) = scheduler_by_name(&policy_name) else {
-        eprintln!("error: unknown policy {policy_name}");
-        std::process::exit(2);
-    };
+    args.reject_unknown(&["policy", "drives", "requests", "seed", "tapes", "data", "backend"]);
+    let policy = resolve_policy(args, "policy", "SimpleDP");
+    let policy_name = policy.name();
     let n_drives = args.get_parsed_or("drives", 8usize);
     let n_requests = args.get_parsed_or("requests", 5_000u64);
     let ds = dataset_from(args);

@@ -14,19 +14,32 @@ pub struct ReqFile {
 }
 
 /// Errors raised when assembling an [`Instance`].
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InstanceError {
-    #[error("instance must contain at least one requested file")]
     Empty,
-    #[error("file {0} has zero or negative extent")]
     BadExtent(usize),
-    #[error("file {0} has zero requests")]
     ZeroRequests(usize),
-    #[error("files {0} and {1} overlap or are out of order")]
     Overlap(usize, usize),
-    #[error("file {0} extends past the tape end")]
     PastEnd(usize),
 }
+
+impl std::fmt::Display for InstanceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InstanceError::Empty => {
+                write!(f, "instance must contain at least one requested file")
+            }
+            InstanceError::BadExtent(i) => write!(f, "file {i} has zero or negative extent"),
+            InstanceError::ZeroRequests(i) => write!(f, "file {i} has zero requests"),
+            InstanceError::Overlap(i, j) => {
+                write!(f, "files {i} and {j} overlap or are out of order")
+            }
+            InstanceError::PastEnd(i) => write!(f, "file {i} extends past the tape end"),
+        }
+    }
+}
+
+impl std::error::Error for InstanceError {}
 
 /// An LTSP instance over the requested files, indexed `0..k` left-to-right.
 ///

@@ -1,0 +1,76 @@
+//! The always-available pure-Rust SimpleDP backend.
+//!
+//! Wraps the exact `i128` dense wavefront of
+//! [`crate::sched::simpledp_dense`]: the same `(k × (n+1))` table the AOT
+//! artifacts compute, evaluated bottom-up in Rust. Memory and time are
+//! Θ(k·n) and Θ(k²·n) — identical asymptotics to the accelerated path,
+//! with no artifact or feature requirements.
+
+use crate::model::{Cost, Instance};
+use crate::sched::simpledp_dense::{dense_cost, dense_table, reconstruct};
+use crate::sched::Schedule;
+
+use super::SimpleDpBackend;
+
+/// Pure-Rust dense SimpleDP backend (the default).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DenseBackend;
+
+impl SimpleDpBackend for DenseBackend {
+    fn id(&self) -> &'static str {
+        "dense"
+    }
+
+    fn opt_cost(&self, inst: &Instance) -> Cost {
+        dense_cost(inst)
+    }
+
+    fn opt_schedule(&self, inst: &Instance) -> Schedule {
+        reconstruct(inst, &dense_table(inst))
+    }
+
+    fn accelerates(&self, _inst: &Instance) -> bool {
+        true // native path: every instance is served without fallback
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ReqFile;
+    use crate::sched::{Scheduler, SimpleDp};
+    use crate::sim::evaluate;
+    use crate::testkit::{check_cases, InstanceGenConfig};
+
+    #[test]
+    fn matches_sparse_solver_on_random_instances() {
+        let cfg = InstanceGenConfig { min_files: 1, max_files: 10, ..Default::default() };
+        check_cases(0xDE15E, 60, &cfg, |inst| {
+            let b = DenseBackend;
+            let sparse = SimpleDp::cost(inst);
+            assert_eq!(b.opt_cost(inst), sparse);
+            assert_eq!(evaluate(inst, &b.opt_schedule(inst)).cost, sparse);
+        });
+    }
+
+    #[test]
+    fn schedule_achieves_reported_cost() {
+        let inst = Instance::new(
+            120,
+            11,
+            vec![
+                ReqFile { l: 0, r: 4, x: 3 },
+                ReqFile { l: 8, r: 20, x: 1 },
+                ReqFile { l: 25, r: 26, x: 14 },
+                ReqFile { l: 40, r: 70, x: 2 },
+                ReqFile { l: 90, r: 95, x: 6 },
+            ],
+        )
+        .unwrap();
+        let b = DenseBackend;
+        assert_eq!(evaluate(&inst, &b.opt_schedule(&inst)).cost, b.opt_cost(&inst));
+        // The policy adapter must agree with the sparse scheduler's cost.
+        let sparse = evaluate(&inst, &SimpleDp.schedule(&inst)).cost;
+        assert_eq!(b.opt_cost(&inst), sparse);
+    }
+}

@@ -1,25 +1,191 @@
-//! PJRT runtime: load and execute the AOT-compiled XLA artifacts produced
-//! by `python/compile/aot.py` (`make artifacts`).
+//! Pluggable SimpleDP evaluation backends.
 //!
-//! Python runs once at build time; this module is how the Rust hot path
-//! runs the resulting computation. The interchange format is **HLO text**
-//! (`artifacts/*.hlo.txt`): jax ≥ 0.5 emits protos with 64-bit instruction
-//! ids that the crate's bundled XLA rejects, while the text parser
-//! reassigns ids and round-trips cleanly.
+//! The dense SimpleDP wavefront (the `(K, NS)` table of §4.5, evaluated
+//! bottom-up) has two interchangeable execution engines behind the
+//! [`SimpleDpBackend`] trait:
 //!
-//! - [`Engine`] — PJRT CPU client + artifact cache (compile once per
-//!   artifact, execute many times).
-//! - [`XlaSimpleDp`] — the accelerated SimpleDP evaluation backend: pads an
-//!   instance into a `(K, NS)` shape bucket, runs the dense wavefront
-//!   artifact, and reconstructs the detour list in Rust from the returned
-//!   table values (cross-validated against the exact `i128` implementation
-//!   in `sched::simpledp_dense`).
+//! - [`DenseBackend`] — the exact pure-Rust `i128` implementation in
+//!   [`crate::sched::simpledp_dense`]. Always available; the default.
+//! - `XlaSimpleDp` — PJRT execution of the AOT-compiled artifacts produced
+//!   by `python/compile/aot.py` (`make artifacts`). Compiled in only with
+//!   `--features xla`; instances that fit no artifact bucket fall back to
+//!   the exact sparse solver.
+//!
+//! [`BackendPolicy`] adapts any backend into a [`crate::sched::Scheduler`]
+//! so the coordinator, the CLI (`--backend dense|xla`) and the bench
+//! harness can treat backends as ordinary scheduling policies.
 
+mod dense;
+#[cfg(feature = "xla")]
 mod engine;
+#[cfg(feature = "xla")]
 mod xla_simpledp;
 
+pub use dense::DenseBackend;
+#[cfg(feature = "xla")]
 pub use engine::{Engine, RuntimeError};
+#[cfg(feature = "xla")]
 pub use xla_simpledp::{ShapeBucket, XlaSimpleDp, DEFAULT_BUCKETS, POS_SCALE};
+
+use std::sync::Arc;
+
+use crate::model::{Cost, Instance};
+use crate::sched::{Schedule, Scheduler};
 
 /// Default artifact directory (relative to the repo root / working dir).
 pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// An execution engine for the disjoint-detour (SimpleDP) optimum.
+///
+/// Implementations must return the *exact* optimal disjoint-detour cost
+/// and a schedule achieving it for every valid instance — accelerated
+/// backends are expected to fall back to a pure-Rust path for inputs they
+/// cannot handle (missing artifacts, no fitting shape bucket), never to
+/// approximate.
+pub trait SimpleDpBackend: Send + Sync {
+    /// Stable identifier used for CLI selection and report labels
+    /// (`"dense"`, `"xla"`).
+    fn id(&self) -> &'static str;
+
+    /// Optimal disjoint-detour cost (including `VirtualLB`).
+    fn opt_cost(&self, inst: &Instance) -> Cost;
+
+    /// A schedule achieving [`SimpleDpBackend::opt_cost`].
+    fn opt_schedule(&self, inst: &Instance) -> Schedule;
+
+    /// Whether this backend actually accelerates `inst` (as opposed to
+    /// serving it through a fallback path). Diagnostics only.
+    fn accelerates(&self, _inst: &Instance) -> bool {
+        false
+    }
+}
+
+/// Adapter: any [`SimpleDpBackend`] as a [`Scheduler`] policy.
+pub struct BackendPolicy {
+    backend: Arc<dyn SimpleDpBackend>,
+}
+
+impl BackendPolicy {
+    pub fn new(backend: Arc<dyn SimpleDpBackend>) -> BackendPolicy {
+        BackendPolicy { backend }
+    }
+
+    /// The wrapped backend.
+    pub fn backend(&self) -> &dyn SimpleDpBackend {
+        self.backend.as_ref()
+    }
+}
+
+impl Scheduler for BackendPolicy {
+    fn name(&self) -> String {
+        format!("SimpleDP[{}]", self.backend.id())
+    }
+
+    fn schedule(&self, inst: &Instance) -> Schedule {
+        self.backend.opt_schedule(inst)
+    }
+}
+
+/// The backend used when nothing is configured: pure-Rust dense.
+pub fn default_backend() -> Arc<dyn SimpleDpBackend> {
+    Arc::new(DenseBackend)
+}
+
+/// Look a backend up by (case-insensitive) id: `"dense"` is always
+/// available; `"xla"` requires the `xla` feature and a constructible PJRT
+/// engine. Errors carry a user-facing explanation.
+pub fn backend_by_name(name: &str) -> Result<Arc<dyn SimpleDpBackend>, String> {
+    let n = name.to_ascii_lowercase();
+    if n == "dense" {
+        return Ok(Arc::new(DenseBackend));
+    }
+    if n == "xla" {
+        #[cfg(feature = "xla")]
+        {
+            return match XlaSimpleDp::new(ARTIFACT_DIR) {
+                Ok(b) => Ok(Arc::new(b)),
+                Err(e) => Err(format!("xla backend unavailable: {e}")),
+            };
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            return Err(
+                "backend `xla` requires building with `--features xla`".to_string()
+            );
+        }
+    }
+    Err(format!("unknown backend `{name}` (known: dense, xla)"))
+}
+
+/// Every backend constructible in this build: dense always, xla when the
+/// feature is compiled in and the engine constructs (artifact presence is
+/// *not* required — an artifact-less xla backend serves through its
+/// fallback path).
+pub fn available_backends() -> Vec<Arc<dyn SimpleDpBackend>> {
+    #[allow(unused_mut)] // mutated only when the xla feature is compiled in
+    let mut backends: Vec<Arc<dyn SimpleDpBackend>> = vec![Arc::new(DenseBackend)];
+    #[cfg(feature = "xla")]
+    if let Ok(b) = XlaSimpleDp::new(ARTIFACT_DIR) {
+        backends.push(Arc::new(b));
+    }
+    backends
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ReqFile;
+    use crate::sched::{Scheduler, SimpleDp};
+    use crate::sim::evaluate;
+
+    fn inst() -> Instance {
+        Instance::new(
+            100,
+            3,
+            vec![
+                ReqFile { l: 5, r: 6, x: 2 },
+                ReqFile { l: 6, r: 30, x: 1 },
+                ReqFile { l: 31, r: 32, x: 8 },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn default_backend_is_dense() {
+        assert_eq!(default_backend().id(), "dense");
+    }
+
+    #[test]
+    fn backend_by_name_resolves_dense_case_insensitively() {
+        assert_eq!(backend_by_name("dense").unwrap().id(), "dense");
+        assert_eq!(backend_by_name("Dense").unwrap().id(), "dense");
+        assert!(backend_by_name("nope").unwrap_err().contains("unknown backend"));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_backend_errors_without_the_feature() {
+        let err = backend_by_name("xla").unwrap_err();
+        assert!(err.contains("--features xla"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn backend_policy_is_an_exact_simpledp_scheduler() {
+        let policy = BackendPolicy::new(default_backend());
+        assert_eq!(policy.name(), "SimpleDP[dense]");
+        assert_eq!(policy.backend().id(), "dense");
+        let i = inst();
+        let via_policy = evaluate(&i, &policy.schedule(&i)).cost;
+        let via_sparse = evaluate(&i, &SimpleDp.schedule(&i)).cost;
+        assert_eq!(via_policy, via_sparse);
+        assert_eq!(policy.backend().opt_cost(&i), via_sparse);
+    }
+
+    #[test]
+    fn available_backends_lead_with_dense() {
+        let backends = available_backends();
+        assert!(!backends.is_empty());
+        assert_eq!(backends[0].id(), "dense");
+    }
+}

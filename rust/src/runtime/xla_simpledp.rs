@@ -17,6 +17,7 @@ use crate::sched::simpledp_dense::reconstruct_from_values;
 use crate::sched::{Schedule, Scheduler, SimpleDp};
 
 use super::engine::{Engine, RuntimeError};
+use super::SimpleDpBackend;
 
 /// Position rescale factor applied before entering f64 (bytes → GB keeps
 /// products comfortably inside the 53-bit mantissa).
@@ -159,6 +160,32 @@ impl Scheduler for XlaSimpleDp {
             Ok(s) => s,
             Err(_) => SimpleDp.schedule(inst), // no bucket / artifact: exact path
         }
+    }
+}
+
+impl SimpleDpBackend for XlaSimpleDp {
+    fn id(&self) -> &'static str {
+        "xla"
+    }
+
+    fn opt_cost(&self, inst: &Instance) -> Cost {
+        // The artifact path is fallible (no bucket, missing artifact,
+        // engine error); fall back to the exact sparse solver, never fail.
+        match XlaSimpleDp::cost(self, inst) {
+            Ok(c) => c,
+            Err(_) => SimpleDp::cost(inst),
+        }
+    }
+
+    fn opt_schedule(&self, inst: &Instance) -> Schedule {
+        match self.try_schedule(inst) {
+            Ok(s) => s,
+            Err(_) => SimpleDp.schedule(inst),
+        }
+    }
+
+    fn accelerates(&self, inst: &Instance) -> bool {
+        self.bucket_for(inst).is_some()
     }
 }
 

@@ -27,8 +27,6 @@
 //! `b`, shrinking both the reachable table and the per-cell scan; it is
 //! optimal among schedules whose detours span at most that many files.
 
-use std::collections::HashMap;
-
 use crate::model::{virtual_lb, Cost, Instance};
 use crate::sched::{Detour, Schedule, Scheduler};
 use crate::util::hash::FxHashMap;
@@ -168,7 +166,9 @@ impl<'a> DpSolver<'a> {
     pub(crate) fn new(inst: &'a Instance, span: usize) -> DpSolver<'a> {
         let k = inst.k();
         assert!(k < (1 << 12), "DP supports up to 4095 requested files");
-        DpSolver { inst, span, c_max: k - 1, k, layers: HashMap::default() }
+        // Construct through the alias: `std::collections::HashMap::default()`
+        // would silently fall back to SipHash if the field type ever loosened.
+        DpSolver { inst, span, c_max: k - 1, k, layers: FxHashMap::default() }
     }
 
     /// Restrict detours to start at files whose left end is at most

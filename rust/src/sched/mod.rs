@@ -147,6 +147,19 @@ mod tests {
     }
 
     #[test]
+    fn paper_schedulers_round_trip_through_scheduler_by_name() {
+        // Every self-reported name must resolve back to a scheduler with
+        // the same name — catches name-format drift like `LogDP(5)` vs
+        // `logdp(5.0)` between the registry and the implementations.
+        for s in paper_schedulers() {
+            let name = s.name();
+            let resolved = scheduler_by_name(&name)
+                .unwrap_or_else(|| panic!("scheduler_by_name cannot resolve {name:?}"));
+            assert_eq!(resolved.name(), name, "round trip must preserve the name");
+        }
+    }
+
+    #[test]
     fn lookup_by_name() {
         for n in [
             "NoDetour", "GS", "FGS", "NFGS", "LogNFGS", "DP", "LogDP(1)", "LogDP(5)",

@@ -4,7 +4,8 @@
 //! Computes the full `(k × (n+1))` table `T[b, n_skip]` for **every**
 //! `n_skip` value (the sparse solver only touches reachable ones). This is
 //! the semantics the AOT-compiled XLA artifact implements, so this module
-//! is the cross-validation reference for [`crate::runtime::XlaSimpleDp`]:
+//! is both the default execution engine (`runtime::DenseBackend`) and the
+//! cross-validation reference for the XLA backend in [`crate::runtime`]:
 //! same wavefront order, same dense grid, exact `i128` arithmetic here vs
 //! `f64` there.
 //!
@@ -196,6 +197,28 @@ mod tests {
             // and matches the sparse schedule's cost
             let sparse = SimpleDp.schedule(&i);
             assert_eq!(evaluate(&i, &sparse).cost, dense_cost(&i));
+        }
+    }
+
+    #[test]
+    fn edge_clamp_when_one_file_carries_nearly_all_requests() {
+        // The skip branch reads row b−1 at column `(ns + x(b)).min(ns_max)`.
+        // A file holding (almost) all n requests pushes that index against
+        // the clamp for most ns; dense and sparse must still agree because
+        // clamped cells are unreachable from the root (Σ skipped ≤ n).
+        let cases = vec![
+            // All n requests on the single requested file (k = 1).
+            inst(4, &[(10, 20, 17)], 50),
+            // One dominant file left, right, and mid among unit requests.
+            inst(0, &[(0, 5, 60), (20, 30, 1), (40, 45, 1)], 60),
+            inst(3, &[(0, 5, 1), (20, 30, 1), (40, 45, 60)], 60),
+            inst(7, &[(0, 5, 1), (20, 30, 60), (40, 45, 1)], 60),
+        ];
+        for i in cases {
+            assert_eq!(dense_cost(&i), SimpleDp::cost(&i), "instance {i:?}");
+            let tbl = dense_table(&i);
+            let sched = reconstruct(&i, &tbl);
+            assert_eq!(evaluate(&i, &sched).cost, dense_cost(&i), "instance {i:?}");
         }
     }
 

@@ -1,30 +1,27 @@
-//! Cross-layer integration: the AOT-compiled XLA SimpleDP engine vs the
-//! exact Rust implementation over random and adversarial instances.
+//! Cross-layer integration of the SimpleDP backend layer.
 //!
-//! Gated on `artifacts/` (produced by `make artifacts`); every test skips
-//! cleanly when artifacts are absent so `cargo test` works pre-build.
+//! The backend-agnostic half runs in every build: the pure-Rust dense
+//! backend (the default) must agree with the exact sparse solver, the
+//! policy adapter must behave as a scheduler, and backend selection must
+//! resolve/reject names correctly.
+//!
+//! The PJRT half (`mod xla`) compiles only with `--features xla` and is
+//! additionally gated on `artifacts/` (produced by `make artifacts`);
+//! every test there skips cleanly when artifacts are absent so
+//! `cargo test` works pre-build.
 
-use tapesched::model::adversarial::simpledp_five_thirds;
-use tapesched::runtime::{XlaSimpleDp, ARTIFACT_DIR};
-use tapesched::sched::simpledp_dense::dense_cost;
+use tapesched::runtime::{
+    available_backends, backend_by_name, default_backend, BackendPolicy, SimpleDpBackend,
+};
 use tapesched::sched::{Scheduler, SimpleDp};
 use tapesched::sim::evaluate;
 use tapesched::testkit::{random_instance, InstanceGenConfig};
 use tapesched::util::rng::Rng;
 
-fn backend() -> Option<XlaSimpleDp> {
-    let b = XlaSimpleDp::new(ARTIFACT_DIR).ok()?;
-    if b.buckets().is_empty() {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
-        None
-    } else {
-        Some(b)
-    }
-}
-
 #[test]
-fn xla_cost_matches_exact_on_random_instances() {
-    let Some(b) = backend() else { return };
+fn dense_backend_matches_sparse_on_random_instances() {
+    let backend = default_backend();
+    assert_eq!(backend.id(), "dense");
     let mut rng = Rng::new(0x71A);
     let cfg = InstanceGenConfig {
         min_files: 1,
@@ -36,96 +33,204 @@ fn xla_cost_matches_exact_on_random_instances() {
     };
     for case in 0..60 {
         let inst = random_instance(&mut rng, &cfg);
-        let exact = dense_cost(&inst);
-        let xla = b.cost(&inst).expect("fits smallest bucket");
-        assert_eq!(xla, exact, "case {case}: {inst:?}");
-    }
-}
-
-#[test]
-fn xla_schedule_cost_matches_exact_everywhere() {
-    let Some(b) = backend() else { return };
-    let mut rng = Rng::new(0x71B);
-    let cfg = InstanceGenConfig {
-        min_files: 2,
-        max_files: 12,
-        ..Default::default()
-    };
-    for _ in 0..40 {
-        let inst = random_instance(&mut rng, &cfg);
-        let sched = b.try_schedule(&inst).unwrap();
-        let exact_sched = SimpleDp.schedule(&inst);
+        let sparse = SimpleDp::cost(&inst);
+        assert_eq!(backend.opt_cost(&inst), sparse, "case {case}: {inst:?}");
         assert_eq!(
-            evaluate(&inst, &sched).cost,
-            evaluate(&inst, &exact_sched).cost,
-            "XLA reconstruction must achieve the exact cost"
+            evaluate(&inst, &backend.opt_schedule(&inst)).cost,
+            sparse,
+            "case {case}: schedule must achieve the optimal cost"
         );
     }
 }
 
 #[test]
-fn xla_handles_byte_scale_positions() {
-    // GB-scale byte positions (the real dataset's regime): the POS_SCALE
-    // rescaling must keep f64 exact enough for i128 equality after
-    // rounding.
-    let Some(b) = backend() else { return };
-    let mut rng = Rng::new(0x71C);
-    let cfg = InstanceGenConfig {
-        min_files: 2,
-        max_files: 10,
-        max_size: 170_000, // scaled ×1e6 below
-        max_gap: 120_000,
-        max_x: 9,
-        max_u: 30_000,
-    };
-    for _ in 0..20 {
-        let small = random_instance(&mut rng, &cfg);
-        let files = small
-            .files()
-            .iter()
-            .map(|f| tapesched::model::ReqFile {
-                l: f.l * 1_000_000,
-                r: f.r * 1_000_000,
-                x: f.x,
-            })
-            .collect();
-        let inst = tapesched::model::Instance::new(
-            small.tape_len() * 1_000_000,
-            small.u() * 1_000_000,
-            files,
-        )
-        .unwrap();
-        assert_eq!(b.cost(&inst).unwrap(), dense_cost(&inst));
-    }
-}
-
-#[test]
-fn xla_agrees_on_adversarial_instance() {
-    let Some(b) = backend() else { return };
-    for z in [5u64, 10, 20] {
-        let inst = simpledp_five_thirds(z);
-        if b.bucket_for(&inst).is_none() {
-            continue; // n = 2z²+z+1 outgrows the shipped buckets fast
+fn every_available_backend_agrees_with_sparse() {
+    let backends = available_backends();
+    assert!(!backends.is_empty());
+    let mut rng = Rng::new(0x71B);
+    let cfg = InstanceGenConfig { min_files: 2, max_files: 12, ..Default::default() };
+    for _ in 0..40 {
+        let inst = random_instance(&mut rng, &cfg);
+        let sparse = SimpleDp::cost(&inst);
+        for b in &backends {
+            assert_eq!(b.opt_cost(&inst), sparse, "backend {}", b.id());
+            assert_eq!(
+                evaluate(&inst, &b.opt_schedule(&inst)).cost,
+                sparse,
+                "backend {}",
+                b.id()
+            );
         }
-        assert_eq!(b.cost(&inst).unwrap(), dense_cost(&inst), "z={z}");
     }
 }
 
 #[test]
-fn bucket_routing_picks_smallest_fit() {
-    let Some(b) = backend() else { return };
-    if b.buckets().len() < 2 {
-        return;
-    }
-    let mut rng = Rng::new(0x71D);
-    let small = random_instance(
+fn backend_policy_plugs_into_the_scheduler_surface() {
+    let policy = BackendPolicy::new(default_backend());
+    assert_eq!(policy.name(), "SimpleDP[dense]");
+    let mut rng = Rng::new(0x71C);
+    let inst = random_instance(
         &mut rng,
-        &InstanceGenConfig { min_files: 2, max_files: 8, max_x: 3, ..Default::default() },
+        &InstanceGenConfig { min_files: 3, max_files: 9, ..Default::default() },
     );
-    let bucket = b.bucket_for(&small).unwrap();
-    for other in b.buckets() {
-        if other.fits(&small) {
-            assert!(bucket.k * bucket.ns <= other.k * other.ns);
+    let sparse = evaluate(&inst, &SimpleDp.schedule(&inst)).cost;
+    assert_eq!(evaluate(&inst, &policy.schedule(&inst)).cost, sparse);
+}
+
+#[test]
+fn backend_selection_resolves_and_rejects() {
+    assert_eq!(backend_by_name("dense").unwrap().id(), "dense");
+    assert_eq!(backend_by_name("DENSE").unwrap().id(), "dense");
+    let err = backend_by_name("tpu").unwrap_err();
+    assert!(err.contains("unknown backend"), "{err}");
+}
+
+#[cfg(not(feature = "xla"))]
+#[test]
+fn xla_backend_unavailable_without_feature() {
+    let err = backend_by_name("xla").unwrap_err();
+    assert!(err.contains("--features xla"), "{err}");
+    assert_eq!(available_backends().len(), 1, "dense only");
+}
+
+/// PJRT engine vs the exact implementations — `--features xla` builds only,
+/// skipping without artifacts.
+#[cfg(feature = "xla")]
+mod xla {
+    use super::*;
+    use tapesched::model::adversarial::simpledp_five_thirds;
+    use tapesched::runtime::{XlaSimpleDp, ARTIFACT_DIR};
+    use tapesched::sched::simpledp_dense::dense_cost;
+
+    fn backend() -> Option<XlaSimpleDp> {
+        let b = XlaSimpleDp::new(ARTIFACT_DIR).ok()?;
+        if b.buckets().is_empty() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            None
+        } else {
+            Some(b)
+        }
+    }
+
+    #[test]
+    fn xla_cost_matches_exact_on_random_instances() {
+        let Some(b) = backend() else { return };
+        let mut rng = Rng::new(0x71A);
+        let cfg = InstanceGenConfig {
+            min_files: 1,
+            max_files: 14,
+            max_size: 60,
+            max_gap: 40,
+            max_x: 8,
+            max_u: 50,
+        };
+        for case in 0..60 {
+            let inst = random_instance(&mut rng, &cfg);
+            let exact = dense_cost(&inst);
+            let xla = b.cost(&inst).expect("fits smallest bucket");
+            assert_eq!(xla, exact, "case {case}: {inst:?}");
+        }
+    }
+
+    #[test]
+    fn xla_schedule_cost_matches_exact_everywhere() {
+        let Some(b) = backend() else { return };
+        let mut rng = Rng::new(0x71B);
+        let cfg = InstanceGenConfig {
+            min_files: 2,
+            max_files: 12,
+            ..Default::default()
+        };
+        for _ in 0..40 {
+            let inst = random_instance(&mut rng, &cfg);
+            let sched = b.try_schedule(&inst).unwrap();
+            let exact_sched = SimpleDp.schedule(&inst);
+            assert_eq!(
+                evaluate(&inst, &sched).cost,
+                evaluate(&inst, &exact_sched).cost,
+                "XLA reconstruction must achieve the exact cost"
+            );
+        }
+    }
+
+    #[test]
+    fn xla_handles_byte_scale_positions() {
+        // GB-scale byte positions (the real dataset's regime): the
+        // POS_SCALE rescaling must keep f64 exact enough for i128 equality
+        // after rounding.
+        let Some(b) = backend() else { return };
+        let mut rng = Rng::new(0x71C);
+        let cfg = InstanceGenConfig {
+            min_files: 2,
+            max_files: 10,
+            max_size: 170_000, // scaled ×1e6 below
+            max_gap: 120_000,
+            max_x: 9,
+            max_u: 30_000,
+        };
+        for _ in 0..20 {
+            let small = random_instance(&mut rng, &cfg);
+            let files = small
+                .files()
+                .iter()
+                .map(|f| tapesched::model::ReqFile {
+                    l: f.l * 1_000_000,
+                    r: f.r * 1_000_000,
+                    x: f.x,
+                })
+                .collect();
+            let inst = tapesched::model::Instance::new(
+                small.tape_len() * 1_000_000,
+                small.u() * 1_000_000,
+                files,
+            )
+            .unwrap();
+            assert_eq!(b.cost(&inst).unwrap(), dense_cost(&inst));
+        }
+    }
+
+    #[test]
+    fn xla_agrees_on_adversarial_instance() {
+        let Some(b) = backend() else { return };
+        for z in [5u64, 10, 20] {
+            let inst = simpledp_five_thirds(z);
+            if b.bucket_for(&inst).is_none() {
+                continue; // n = 2z²+z+1 outgrows the shipped buckets fast
+            }
+            assert_eq!(b.cost(&inst).unwrap(), dense_cost(&inst), "z={z}");
+        }
+    }
+
+    #[test]
+    fn bucket_routing_picks_smallest_fit() {
+        let Some(b) = backend() else { return };
+        if b.buckets().len() < 2 {
+            return;
+        }
+        let mut rng = Rng::new(0x71D);
+        let small = random_instance(
+            &mut rng,
+            &InstanceGenConfig { min_files: 2, max_files: 8, max_x: 3, ..Default::default() },
+        );
+        let bucket = b.bucket_for(&small).unwrap();
+        for other in b.buckets() {
+            if other.fits(&small) {
+                assert!(bucket.k * bucket.ns <= other.k * other.ns);
+            }
+        }
+    }
+
+    #[test]
+    fn xla_backend_appears_in_selection() {
+        // Engine construction works even artifact-less (the backend then
+        // serves through its sparse fallback), so selection must succeed.
+        match backend_by_name("xla") {
+            Ok(b) => assert_eq!(b.id(), "xla"),
+            Err(e) => {
+                // Real bindings may fail client construction in exotic
+                // environments; the error must at least be descriptive.
+                assert!(e.contains("xla"), "{e}");
+            }
         }
     }
 }

@@ -1,0 +1,157 @@
+//! Offline API stub for the PJRT/XLA bindings.
+//!
+//! The offline crate registry cannot supply the real `xla` crate, so this
+//! in-tree stand-in carries the exact API subset `tapesched`'s runtime
+//! layer consumes. It lets `cargo build --features xla` type-check (and
+//! link) with no registry access. At runtime every operation that would
+//! need a real PJRT client fails with [`Error::Unimplemented`], which the
+//! runtime layer treats like "no artifacts": callers fall back to the pure
+//! Rust SimpleDP path and tests skip.
+//!
+//! To execute AOT artifacts for real, point the `xla` path dependency in
+//! `rust/Cargo.toml` at actual PJRT bindings exposing this same surface
+//! (client construction, HLO-text parsing, compile, execute, literal
+//! conversion).
+
+use std::fmt;
+
+/// Errors surfaced by the (stubbed) XLA layer.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub cannot perform this operation; a real PJRT binding is
+    /// required.
+    Unimplemented(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unimplemented(what) => {
+                write!(f, "{what} requires real PJRT bindings (offline xla stub)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real bindings' signatures.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle. The stub constructs (so artifact discovery and
+/// graceful-fallback paths run) but cannot compile or execute.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// CPU client. Always succeeds in the stub so that backends can be
+    /// constructed and report "no artifacts" instead of hard-failing.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    /// Platform name for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unimplemented("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unimplemented("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// A compiled, device-loaded executable.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on literal arguments, returning per-device output buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unimplemented("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer holding one executable output.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unimplemented("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side tensor literal.
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1(_data: &[f64]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unimplemented("Literal::reshape"))
+    }
+
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::Unimplemented("Literal::to_tuple1"))
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unimplemented("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_but_cannot_compile() {
+        let client = PjRtClient::cpu().expect("stub client always constructs");
+        assert_eq!(client.platform_name(), "stub-cpu");
+        let comp = XlaComputation::from_proto(&HloModuleProto { _priv: () });
+        assert!(client.compile(&comp).is_err());
+    }
+
+    #[test]
+    fn errors_display_their_origin() {
+        let e = Error::Unimplemented("Literal::to_vec");
+        assert!(e.to_string().contains("Literal::to_vec"));
+        assert!(e.to_string().contains("stub"));
+    }
+}

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# One-command gate for every PR: formatting check (advisory unless
+# FMT_STRICT=1, since rustfmt may be absent from offline toolchains),
+# the tier-1 verify, and compile gates for benches and examples.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if cargo fmt --version >/dev/null 2>&1; then
+    if ! cargo fmt --all -- --check; then
+        echo "ci: formatting drift detected (run \`cargo fmt --all\` to fix)" >&2
+        if [ "${FMT_STRICT:-0}" = "1" ]; then
+            exit 1
+        fi
+    fi
+else
+    echo "ci: rustfmt unavailable; skipping fmt-check" >&2
+fi
+
+cargo build --release
+cargo test -q
+cargo bench --no-run
+cargo build --examples
+
+echo "ci: all gates green"
