@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test benches bench-smoke examples fmt fmt-check artifacts ci clean
+.PHONY: verify build test benches bench-smoke replay-smoke examples fmt fmt-check artifacts ci clean
 
 verify: ## tier-1 gate: release build + full test suite
 	$(CARGO) build --release
@@ -26,7 +26,16 @@ bench-smoke:
 	$(CARGO) bench --bench algo_runtimes -- --smoke
 	$(CARGO) bench --bench coordinator -- --smoke
 	$(CARGO) bench --bench profiles -- --smoke
+	$(CARGO) bench --bench replay -- --smoke
 	$(CARGO) bench --bench runtime_xla -- --smoke
+
+# Seeded 2-second virtual replay across two policies; the QoS JSON lands in
+# results/ (byte-identical for a fixed seed — diff two runs to check).
+replay-smoke: build
+	mkdir -p results
+	./target/release/tapesched replay --arrivals poisson --rate 50 --duration 2 \
+		--policy GS,SimpleDP --seed 7 --tapes 12 --out results/replay-smoke.json
+	@echo "replay-smoke: results/replay-smoke.json"
 
 examples:
 	$(CARGO) build --examples

@@ -60,6 +60,7 @@ fn main() {
                 batcher: BatcherConfig {
                     window: std::time::Duration::from_millis(20),
                     max_batch: 512,
+                    ..BatcherConfig::default()
                 },
                 drive: DriveParams::default(),
             },
@@ -68,7 +69,9 @@ fn main() {
         );
         for (id, tape, file) in &trace {
             assert!(
-                coord.submit(ReadRequest { id: *id, tape: tape.clone(), file_index: *file }),
+                coord
+                    .submit(ReadRequest { id: *id, tape: tape.clone(), file_index: *file })
+                    .is_ok(),
                 "trace request must be routable"
             );
         }

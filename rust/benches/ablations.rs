@@ -89,6 +89,7 @@ fn main() {
                 batcher: BatcherConfig {
                     window: std::time::Duration::from_millis(window_ms),
                     max_batch: 1024,
+                    ..BatcherConfig::default()
                 },
                 drive: DriveParams::default(),
             },
@@ -98,11 +99,13 @@ fn main() {
         let mut rng = Rng::new(3);
         for id in 0..n_reqs {
             let t = &ds.tapes[rng.below(n_tapes as u64) as usize];
-            coord.submit(ReadRequest {
-                id,
-                tape: t.tape.name.clone(),
-                file_index: rng.zipf(t.tape.n_files() as u64, 1.2) as usize - 1,
-            });
+            coord
+                .submit(ReadRequest {
+                    id,
+                    tape: t.tape.name.clone(),
+                    file_index: rng.zipf(t.tape.n_files() as u64, 1.2) as usize - 1,
+                })
+                .expect("bench requests are routable");
         }
         let (_, m) = coord.finish();
         println!(

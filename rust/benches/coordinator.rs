@@ -18,7 +18,11 @@ fn main() {
     // --- batcher micro-bench: push+pop throughput -----------------------
     let cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
     suite.run("batcher/push_pop_10k", &cfg, || {
-        let mut b = Batcher::new(BatcherConfig { window: std::time::Duration::ZERO, max_batch: 256 });
+        let mut b = Batcher::new(BatcherConfig {
+            window: std::time::Duration::ZERO,
+            max_batch: 256,
+            ..BatcherConfig::default()
+        });
         let t0 = Instant::now();
         for id in 0..10_000u64 {
             b.push(["A", "B", "C", "D"][(id % 4) as usize], (id % 64) as usize, id, t0);
@@ -66,6 +70,7 @@ fn main() {
                         batcher: BatcherConfig {
                             window: std::time::Duration::from_millis(2),
                             max_batch: 256,
+                            ..BatcherConfig::default()
                         },
                         drive: DriveParams::default(),
                     },
@@ -75,11 +80,13 @@ fn main() {
                 let mut rng = Rng::new(5);
                 for id in 0..n_req {
                     let t = &ds.tapes[rng.below(ds.tapes.len() as u64) as usize];
-                    coord.submit(ReadRequest {
-                        id,
-                        tape: t.tape.name.clone(),
-                        file_index: rng.below(t.tape.n_files() as u64) as usize,
-                    });
+                    coord
+                        .submit(ReadRequest {
+                            id,
+                            tape: t.tape.name.clone(),
+                            file_index: rng.below(t.tape.n_files() as u64) as usize,
+                        })
+                        .expect("bench requests are routable");
                 }
                 let (completions, _) = coord.finish();
                 assert_eq!(completions.len() as u64, n_req);

@@ -1,0 +1,84 @@
+//! Bench — the replay engine: virtual-time acceleration (virtual seconds
+//! simulated per wall second) and end-to-end replay throughput per policy
+//! and arrival model.
+
+use std::time::Instant;
+
+use tapesched::bench::{smoke_requested, BenchResult, Suite};
+use tapesched::coordinator::BatcherConfig;
+use tapesched::dataset::{generate_dataset, GeneratorConfig};
+use tapesched::model::Tape;
+use tapesched::replay::{
+    simulate, ArrivalModel, BurstyArrivals, LoopMode, PoissonArrivals, ReplayConfig,
+    RequestMix,
+};
+use tapesched::sched::scheduler_by_name;
+use tapesched::sim::DriveParams;
+
+fn main() {
+    let smoke = smoke_requested();
+    let mut suite = Suite::new();
+
+    let ds = if smoke {
+        generate_dataset(&GeneratorConfig {
+            n_tapes: 8,
+            nf: (40, 60.0, 70.0, 150),
+            nreq: (10, 25.0, 30.0, 60),
+            n: (20, 60.0, 70.0, 180),
+            ..Default::default()
+        })
+    } else {
+        generate_dataset(&GeneratorConfig { n_tapes: 32, ..Default::default() })
+    };
+    let catalog: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
+    let mix = RequestMix::new(&catalog);
+
+    let cfg = ReplayConfig {
+        n_drives: 8,
+        batcher: BatcherConfig {
+            window: std::time::Duration::from_millis(100),
+            max_batch: 256,
+            ..BatcherConfig::default()
+        },
+        drive: DriveParams::default(),
+        mode: LoopMode::Open,
+        retry_backoff_s: 0.01,
+    };
+
+    let (rate, duration) = if smoke { (50.0, 2.0) } else { (100.0, 120.0) };
+    let policies: &[&str] = if smoke { &["SimpleDP"] } else { &["GS", "SimpleDP", "LogDP(1)"] };
+    let arrivals: &[&str] = if smoke { &["poisson"] } else { &["poisson", "bursty"] };
+
+    for policy_name in policies.iter().copied() {
+        let policy = scheduler_by_name(policy_name).unwrap();
+        for kind in arrivals.iter().copied() {
+            let mut model: Box<dyn ArrivalModel> = match kind {
+                "bursty" => Box::new(BurstyArrivals::new(mix.clone(), rate, duration, 7)),
+                _ => Box::new(PoissonArrivals::new(mix.clone(), rate, duration, 7)),
+            };
+            let wall = Instant::now();
+            let out = simulate(&cfg, &catalog, policy.as_ref(), model.as_mut());
+            let s = wall.elapsed().as_secs_f64();
+            assert!(out.stats.completed > 0, "replay must serve requests");
+            assert_eq!(out.stats.completed, out.stats.submitted);
+            suite.record(BenchResult {
+                name: format!("replay/{kind}_{rate}rps_{duration}s/{policy_name}"),
+                iters: 1,
+                median: s,
+                mean: s,
+                p10: s,
+                p90: s,
+            });
+            println!(
+                "    → {} requests in {:.3} wall s ({:.0} virtual s; {:.0}× real time, {:.0} req/wall-s)",
+                out.stats.completed,
+                s,
+                out.stats.makespan_us as f64 / 1e6,
+                out.stats.makespan_us as f64 / 1e6 / s.max(1e-9),
+                out.stats.completed as f64 / s.max(1e-9),
+            );
+        }
+    }
+
+    suite.write_csv("bench_replay.csv");
+}

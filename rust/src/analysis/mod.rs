@@ -1,10 +1,11 @@
 //! Evaluation harness: per-instance algorithm costs, Dolan–Moré performance
-//! profiles (the §5.3 methodology) and CSV/report writers for Figures 14–16.
+//! profiles (the §5.3 methodology), CSV/report writers for Figures 14–16,
+//! and the cross-policy QoS comparison for replay runs.
 
 pub mod profile;
 pub mod report;
 pub mod svg;
 
 pub use profile::{performance_profile, ProfileCurve, ProfilePoint};
-pub use report::{run_evaluation, EvalRecord, EvalTable};
+pub use report::{qos_comparison, run_evaluation, EvalRecord, EvalTable};
 pub use svg::trajectory_svg;

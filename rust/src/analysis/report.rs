@@ -1,11 +1,15 @@
 //! Full-evaluation driver: run every scheduler on every instance of a
 //! dataset for one U value, recording costs and wall-clock times — the data
-//! behind Figures 14–16 and the §5.3 timing table.
+//! behind Figures 14–16 and the §5.3 timing table. Plus the cross-policy
+//! QoS comparison table distilled from replay reports.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::dataset::Dataset;
+use crate::dataset::{Dataset, TapeData};
 use crate::model::{virtual_lb, Cost};
+use crate::replay::QosReport;
 use crate::sched::Scheduler;
 use crate::sim::evaluate;
 
@@ -100,38 +104,89 @@ impl EvalTable {
 ///
 /// `max_k` skips instances with more requested files than the cap (used to
 /// keep exact-DP sweeps tractable in CI; `None` = run everything).
+///
+/// Tapes are independent LTSP instances, so the sweep fans out over a
+/// scoped `std::thread` pool (one worker per core, at most one per tape —
+/// the coordinator's drive-pool pattern, minus the channels). Records land
+/// in per-tape slots and are flattened in tape order, so the output is
+/// byte-for-byte what the sequential sweep produced (wall-clock `seconds`
+/// aside).
 pub fn run_evaluation(
     ds: &Dataset,
     schedulers: &[Box<dyn Scheduler + Send + Sync>],
     u: u64,
     max_k: Option<usize>,
 ) -> EvalTable {
-    let mut records = Vec::new();
     let names: Vec<String> = schedulers.iter().map(|s| s.name()).collect();
-    for t in &ds.tapes {
-        if let Some(cap) = max_k {
-            if t.n_req() > cap {
-                continue;
-            }
-        }
-        let inst = t.instance(u).expect("dataset tapes are valid instances");
-        let lb = virtual_lb(&inst);
-        for s in schedulers {
-            let start = Instant::now();
-            let sched = s.schedule(&inst);
-            let seconds = start.elapsed().as_secs_f64();
-            let out = evaluate(&inst, &sched);
-            records.push(EvalRecord {
-                algorithm: s.name(),
-                tape: t.tape.name.clone(),
-                cost: out.cost,
-                virtual_lb: lb,
-                n_detours: sched.len(),
-                seconds,
+    let work: Vec<&TapeData> = ds
+        .tapes
+        .iter()
+        .filter(|t| max_k.map_or(true, |cap| t.n_req() <= cap))
+        .collect();
+    let n_workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(work.len())
+        .max(1);
+    let slots: Vec<Mutex<Vec<EvalRecord>>> =
+        (0..work.len()).map(|_| Mutex::new(Vec::new())).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(t) = work.get(i) else { break };
+                let inst = t.instance(u).expect("dataset tapes are valid instances");
+                let lb = virtual_lb(&inst);
+                let mut recs = Vec::with_capacity(schedulers.len());
+                for s in schedulers {
+                    let start = Instant::now();
+                    let sched = s.schedule(&inst);
+                    let seconds = start.elapsed().as_secs_f64();
+                    let out = evaluate(&inst, &sched);
+                    recs.push(EvalRecord {
+                        algorithm: s.name(),
+                        tape: t.tape.name.clone(),
+                        cost: out.cost,
+                        virtual_lb: lb,
+                        n_detours: sched.len(),
+                        seconds,
+                    });
+                }
+                *slots[i].lock().unwrap() = recs;
             });
         }
-    }
+    });
+    let records = slots
+        .into_iter()
+        .flat_map(|m| m.into_inner().unwrap())
+        .collect();
     EvalTable { u, records, algorithms: names }
+}
+
+/// Cross-policy QoS comparison: the replay analogue of the §5 cost tables.
+/// One row per report (one replay per policy over the same arrival
+/// stream); latencies in seconds.
+pub fn qos_comparison(reports: &[QosReport]) -> String {
+    let mut out = format!(
+        "{:<18} {:>9} {:>6} {:>9} {:>9} {:>9} {:>9} {:>10} {:>6}\n",
+        "policy", "completed", "shed", "p50 lat", "p95 lat", "p99 lat", "p99.9", "mean svc", "util%"
+    );
+    for r in reports {
+        out.push_str(&format!(
+            "{:<18} {:>9} {:>6} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>10.1} {:>6.1}\n",
+            r.policy,
+            r.completed,
+            r.shed,
+            r.latency.p50_s,
+            r.latency.p95_s,
+            r.latency.p99_s,
+            r.latency.p999_s,
+            r.service.mean_s,
+            r.drive_utilization * 100.0,
+        ));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -188,6 +243,53 @@ mod tests {
             let last = c.points.last().unwrap();
             assert!(last.fraction <= 1.0);
         }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_itself_structurally() {
+        // The thread pool must not perturb record order or contents
+        // (wall-clock `seconds` aside): two sweeps agree field-by-field.
+        let ds = small_ds();
+        let a = run_evaluation(&ds, &algos(), 500, None);
+        let b = run_evaluation(&ds, &algos(), 500, None);
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.algorithm, y.algorithm);
+            assert_eq!(x.tape, y.tape);
+            assert_eq!(x.cost, y.cost);
+            assert_eq!(x.virtual_lb, y.virtual_lb);
+            assert_eq!(x.n_detours, y.n_detours);
+        }
+        // Records stay grouped by tape in dataset order, schedulers in
+        // declaration order inside each tape (the sequential layout).
+        for chunk in a.records.chunks(3) {
+            assert_eq!(chunk.len(), 3);
+            assert!(chunk.iter().all(|r| r.tape == chunk[0].tape));
+            assert_eq!(chunk[0].algorithm, "NoDetour");
+            assert_eq!(chunk[2].algorithm, "DP");
+        }
+    }
+
+    #[test]
+    fn qos_comparison_renders_one_row_per_report() {
+        use crate::model::Tape;
+        use crate::replay::{run_replay, PoissonArrivals, ReplayConfig, RequestMix};
+        let catalog = vec![Tape::from_sizes("T0", &[1_000; 30])];
+        let cfg = ReplayConfig::default();
+        let mut reports = Vec::new();
+        for policy in ["GS", "SimpleDP"] {
+            let p = crate::sched::scheduler_by_name(policy).unwrap();
+            let mut model =
+                PoissonArrivals::new(RequestMix::new(&catalog), 20.0, 5.0, 3);
+            let (r, _) = run_replay(&cfg, &catalog, p.as_ref(), &mut model, 3, 5.0);
+            reports.push(r);
+        }
+        let table = qos_comparison(&reports);
+        let lines: Vec<&str> = table.lines().collect();
+        assert_eq!(lines.len(), 3, "header + one row per policy:\n{table}");
+        assert!(lines[0].contains("p99"));
+        assert!(lines[1].starts_with("GS"));
+        assert!(lines[2].starts_with("SimpleDP"));
     }
 
     #[test]

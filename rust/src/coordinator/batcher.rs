@@ -8,6 +8,8 @@
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
+use crate::sim::{DriveParams, SimOutcome};
+
 /// Batching policy knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
@@ -16,11 +18,47 @@ pub struct BatcherConfig {
     pub window: Duration,
     /// … or as soon as it holds this many requests.
     pub max_batch: usize,
+    /// Per-tape backlog bound: the number of requests waiting for one tape
+    /// (open batch plus cap-closed batches not yet dispatched). A push at
+    /// the bound is rejected with [`PushOutcome::Busy`] so callers shed or
+    /// retry instead of growing memory without bound under overload.
+    pub max_tape_backlog: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { window: Duration::from_millis(100), max_batch: 4096 }
+        BatcherConfig {
+            window: Duration::from_millis(100),
+            max_batch: 4096,
+            // Generous safety valve (~1M queued requests per tape): real
+            // deployments lower it to taste; the default only guards
+            // against unbounded growth when drives fall hopelessly behind.
+            max_tape_backlog: 1 << 20,
+        }
+    }
+}
+
+/// Result of [`Batcher::push`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Accepted, and a batch became dispatchable (size cap reached).
+    Ready,
+    /// Accepted into an open batch.
+    Accepted,
+    /// Rejected: the tape is at `max_tape_backlog`. The request was NOT
+    /// enqueued; the caller may retry once the dispatcher drains the tape.
+    Busy,
+}
+
+impl PushOutcome {
+    /// The request was enqueued (either variant but [`PushOutcome::Busy`]).
+    pub fn accepted(self) -> bool {
+        self != PushOutcome::Busy
+    }
+
+    /// A batch became dispatchable as a result of the push.
+    pub fn ready(self) -> bool {
+        self == PushOutcome::Ready
     }
 }
 
@@ -45,6 +83,26 @@ impl Batch {
     pub fn multiplicities(&self) -> Vec<(usize, u64)> {
         self.by_file.iter().map(|(f, ids)| (*f, ids.len() as u64)).collect()
     }
+
+    /// Map the ground-truth outcome of this batch's schedule back to per
+    /// request `(id, mount-inclusive service seconds)` pairs.
+    ///
+    /// This is the single home of a load-bearing invariant: the instance
+    /// built from [`Batch::multiplicities`] has its files in *this batch's
+    /// sorted file order* ([`Batcher::push`] seals sorted,
+    /// `Instance::from_tape` folds by index), so `out.service[i]` belongs
+    /// to `by_file[i]`. Both the coordinator drive worker and the replay
+    /// engine account completions through here — change it in one place.
+    pub fn request_service_times<'a>(
+        &'a self,
+        out: &'a SimOutcome,
+        drive: DriveParams,
+    ) -> impl Iterator<Item = (u64, f64)> + 'a {
+        self.by_file.iter().enumerate().flat_map(move |(i, (_file, ids))| {
+            let service_s = drive.to_seconds(out.service[i]) + drive.mount_s;
+            ids.iter().map(move |&id| (id, service_s))
+        })
+    }
 }
 
 #[derive(Debug)]
@@ -62,8 +120,13 @@ pub struct Batcher {
     open: HashMap<String, OpenBatch>,
     fifo: VecDeque<String>,
     closed: VecDeque<Batch>,
+    /// Requests waiting per tape (open + cap-closed undispatched batches);
+    /// entries are removed when they hit zero so the map tracks only tapes
+    /// with live backlog.
+    backlog: HashMap<String, u64>,
     enqueued: u64,
     dispatched: u64,
+    rejected: u64,
 }
 
 impl Batcher {
@@ -73,8 +136,10 @@ impl Batcher {
             open: HashMap::new(),
             fifo: VecDeque::new(),
             closed: VecDeque::new(),
+            backlog: HashMap::new(),
             enqueued: 0,
             dispatched: 0,
+            rejected: 0,
         }
     }
 
@@ -86,10 +151,27 @@ impl Batcher {
 
     /// Add one request. When the tape's open batch reaches the size cap it
     /// is *closed* immediately (a later request opens a fresh batch), so no
-    /// dispatched batch ever exceeds `max_batch`. Returns `true` if a batch
-    /// became dispatchable.
-    pub fn push(&mut self, tape: &str, file_index: usize, request_id: u64, now: Instant) -> bool {
+    /// dispatched batch ever exceeds `max_batch`. A push finding the tape's
+    /// backlog at `max_tape_backlog` is rejected ([`PushOutcome::Busy`]).
+    pub fn push(
+        &mut self,
+        tape: &str,
+        file_index: usize,
+        request_id: u64,
+        now: Instant,
+    ) -> PushOutcome {
+        if self.tape_backlog(tape) >= self.cfg.max_tape_backlog {
+            self.rejected += 1;
+            return PushOutcome::Busy;
+        }
         self.enqueued += 1;
+        // Avoid allocating the key when the tape already has live backlog
+        // (this runs once per request under the service's batcher mutex).
+        if let Some(v) = self.backlog.get_mut(tape) {
+            *v += 1;
+        } else {
+            self.backlog.insert(tape.to_string(), 1);
+        }
         let entry = self.open.entry(tape.to_string()).or_insert_with(|| {
             self.fifo.push_back(tape.to_string());
             OpenBatch { by_file: HashMap::new(), n: 0, opened_at: now }
@@ -100,9 +182,18 @@ impl Batcher {
             let b = self.open.remove(tape).unwrap();
             self.fifo.retain(|t| t != tape);
             self.closed.push_back(Self::seal(tape.to_string(), b));
-            true
+            PushOutcome::Ready
         } else {
-            false
+            PushOutcome::Accepted
+        }
+    }
+
+    fn debit_backlog(backlog: &mut HashMap<String, u64>, tape: &str, n: u64) {
+        if let Some(v) = backlog.get_mut(tape) {
+            *v = v.saturating_sub(n);
+            if *v == 0 {
+                backlog.remove(tape);
+            }
         }
     }
 
@@ -113,6 +204,7 @@ impl Batcher {
     pub fn pop_ready(&mut self, now: Instant, force: bool) -> Option<Batch> {
         if let Some(b) = self.closed.pop_front() {
             self.dispatched += b.n_requests() as u64;
+            Self::debit_backlog(&mut self.backlog, &b.tape, b.n_requests() as u64);
             return Some(b);
         }
         let pos = self.fifo.iter().position(|t| {
@@ -122,7 +214,18 @@ impl Batcher {
         let tape = self.fifo.remove(pos).unwrap();
         let b = self.open.remove(&tape).unwrap();
         self.dispatched += b.n as u64;
+        Self::debit_backlog(&mut self.backlog, &tape, b.n as u64);
         Some(Self::seal(tape, b))
+    }
+
+    /// Requests currently queued for `tape` (open + cap-closed batches).
+    pub fn tape_backlog(&self, tape: &str) -> usize {
+        self.backlog.get(tape).copied().unwrap_or(0) as usize
+    }
+
+    /// Pushes rejected by the per-tape backlog bound since construction.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
     }
 
     /// Number of requests currently waiting in open batches.
@@ -154,7 +257,11 @@ mod tests {
     use super::*;
 
     fn cfg(window_ms: u64, max_batch: usize) -> BatcherConfig {
-        BatcherConfig { window: Duration::from_millis(window_ms), max_batch }
+        BatcherConfig {
+            window: Duration::from_millis(window_ms),
+            max_batch,
+            max_tape_backlog: usize::MAX,
+        }
     }
 
     #[test]
@@ -184,11 +291,42 @@ mod tests {
     fn size_cap_triggers_immediate_dispatch() {
         let mut b = Batcher::new(cfg(1_000_000, 3));
         let t0 = Instant::now();
-        assert!(!b.push("A", 0, 1, t0));
-        assert!(!b.push("A", 1, 2, t0));
-        assert!(b.push("A", 0, 3, t0), "cap reached");
+        assert_eq!(b.push("A", 0, 1, t0), PushOutcome::Accepted);
+        assert_eq!(b.push("A", 1, 2, t0), PushOutcome::Accepted);
+        assert!(b.push("A", 0, 3, t0).ready(), "cap reached");
         let batch = b.pop_ready(t0, false).expect("cap makes it ready");
         assert_eq!(batch.n_requests(), 3);
+    }
+
+    #[test]
+    fn backlog_bound_rejects_and_recovers() {
+        let mut b = Batcher::new(BatcherConfig {
+            window: Duration::from_millis(1_000_000),
+            max_batch: 2,
+            max_tape_backlog: 3,
+        });
+        let t0 = Instant::now();
+        // Two pushes close a batch (cap 2); the third sits in a new open
+        // batch. Backlog = 3 = bound ⇒ the fourth push is rejected, and the
+        // rejected request must not be counted as pending.
+        assert!(b.push("A", 0, 1, t0).ready());
+        assert_eq!(b.push("A", 1, 2, t0), PushOutcome::Accepted);
+        assert_eq!(b.tape_backlog("A"), 3);
+        assert_eq!(b.push("A", 2, 3, t0), PushOutcome::Busy);
+        assert_eq!(b.rejected(), 1);
+        assert_eq!(b.pending(), 3);
+        // Another tape is unaffected.
+        assert_eq!(b.push("B", 0, 4, t0), PushOutcome::Accepted);
+        // Dispatching the cap-closed batch frees 2 slots on A.
+        let batch = b.pop_ready(t0, false).expect("closed batch ready");
+        assert_eq!(batch.tape, "A");
+        assert_eq!(b.tape_backlog("A"), 1);
+        assert_eq!(b.push("A", 2, 5, t0), PushOutcome::Accepted);
+        // Drain everything; the backlog map must empty out.
+        while b.pop_ready(t0, true).is_some() {}
+        assert_eq!(b.tape_backlog("A"), 0);
+        assert_eq!(b.tape_backlog("B"), 0);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]
@@ -234,7 +372,7 @@ mod tests {
         let mut b = Batcher::new(cfg(1_000_000, 2));
         let t0 = Instant::now();
         b.push("A", 0, 1, t0);
-        assert!(b.push("A", 1, 2, t0), "cap of 2 closes A's batch");
+        assert!(b.push("A", 1, 2, t0).ready(), "cap of 2 closes A's batch");
         b.push("B", 0, 3, t0 + Duration::from_millis(5));
         // A's closed batch makes the deadline immediate (not B's window).
         let d = b.next_deadline().expect("work pending");

@@ -8,6 +8,8 @@ use std::sync::Mutex;
 pub struct SharedMetrics {
     submitted: AtomicU64,
     completed: AtomicU64,
+    /// Submissions rejected with `Busy` by the per-tape backlog bound.
+    rejected: AtomicU64,
     batches: AtomicU64,
     /// Sum of end-to-end request latencies, in µs.
     latency_sum_us: AtomicU64,
@@ -24,6 +26,8 @@ pub struct SharedMetrics {
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
+    /// Submissions rejected with `Busy` (backpressure shed load).
+    pub rejected: u64,
     pub batches: u64,
     pub mean_latency_s: f64,
     pub mean_service_s: f64,
@@ -37,6 +41,11 @@ const RESERVOIR_CAP: usize = 65_536;
 impl SharedMetrics {
     pub fn on_submit(&self, n: u64) {
         self.submitted.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` submissions rejected by backpressure (`Busy`).
+    pub fn on_reject(&self, n: u64) {
+        self.rejected.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Record a dispatched batch: scheduler compute seconds.
@@ -80,6 +89,7 @@ impl SharedMetrics {
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
+            rejected: self.rejected.load(Ordering::Relaxed),
             batches,
             mean_latency_s: self.latency_sum_us.load(Ordering::Relaxed) as f64
                 / 1e6
@@ -104,11 +114,13 @@ mod tests {
     fn counters_and_means() {
         let m = SharedMetrics::default();
         m.on_submit(3);
+        m.on_reject(2);
         m.on_batch(0.5);
         m.on_complete(2.0, 1.0);
         m.on_complete(4.0, 3.0);
         let s = m.snapshot();
         assert_eq!(s.submitted, 3);
+        assert_eq!(s.rejected, 2);
         assert_eq!(s.completed, 2);
         assert_eq!(s.batches, 1);
         assert!((s.mean_latency_s - 3.0).abs() < 1e-3);

@@ -13,7 +13,10 @@
 //!
 //! - Incoming read requests are routed to a **per-tape batch**: tapes are
 //!   the unit of mounting, so batching by tape is what converts random
-//!   arrivals into LTSP instances worth optimizing.
+//!   arrivals into LTSP instances worth optimizing. Each tape's backlog is
+//!   bounded (`BatcherConfig::max_tape_backlog`): past it, `submit` sheds
+//!   the request with [`SubmitError::Busy`] instead of growing memory —
+//!   callers retry after the dispatcher drains (see `replay::driver`).
 //! - A batch is dispatched when its window expires or it hits the size cap;
 //!   the dispatched job carries the LTSP instance for the batch.
 //! - Each worker owns one (virtual) drive: it computes the schedule with
@@ -28,6 +31,6 @@ mod batcher;
 mod metrics;
 mod service;
 
-pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use batcher::{Batch, Batcher, BatcherConfig, PushOutcome};
 pub use metrics::{MetricsSnapshot, SharedMetrics};
-pub use service::{Completion, Coordinator, CoordinatorConfig, ReadRequest};
+pub use service::{Completion, Coordinator, CoordinatorConfig, ReadRequest, SubmitError};

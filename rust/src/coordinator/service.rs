@@ -13,7 +13,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::batcher::{Batch, Batcher, BatcherConfig, PushOutcome};
 use super::metrics::{MetricsSnapshot, SharedMetrics};
 use crate::model::{Instance, Tape};
 use crate::runtime::{BackendPolicy, SimpleDpBackend};
@@ -28,6 +28,34 @@ pub struct ReadRequest {
     /// 0-based index of the file on the tape.
     pub file_index: usize,
 }
+
+/// Why a [`Coordinator::submit`] was not accepted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No tape with that name in the catalog.
+    UnknownTape,
+    /// The file index is past the end of the tape.
+    BadFileIndex,
+    /// The service is draining ([`Coordinator::finish`] was called).
+    Stopping,
+    /// The tape's batch queue is at its backlog bound (`max_tape_backlog`).
+    /// The request was shed; the caller may retry once the dispatcher
+    /// drains the tape.
+    Busy,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownTape => write!(f, "unknown tape"),
+            SubmitError::BadFileIndex => write!(f, "file index out of range"),
+            SubmitError::Stopping => write!(f, "service is stopping"),
+            SubmitError::Busy => write!(f, "tape backlog full, retry later"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A served request with its measured latencies.
 #[derive(Debug, Clone)]
@@ -135,32 +163,46 @@ impl Coordinator {
         Coordinator::start(cfg, catalog, Arc::new(BackendPolicy::new(backend)))
     }
 
-    /// Submit one read request. Returns `false` (dropping the request) if
-    /// the tape is unknown or the service is stopping.
-    pub fn submit(&self, req: ReadRequest) -> bool {
+    /// Submit one read request. The request is shed — with the reason —
+    /// when the tape is unknown, the file index is invalid, the service is
+    /// stopping, or the tape's backlog is at its bound ([`SubmitError::Busy`],
+    /// the backpressure signal: retry after the dispatcher drains the tape).
+    pub fn submit(&self, req: ReadRequest) -> Result<(), SubmitError> {
         if self.shared.stopping.load(Ordering::SeqCst) {
-            return false;
+            return Err(SubmitError::Stopping);
         }
         {
             let catalog = self.shared.catalog.lock().unwrap();
             match catalog.get(&req.tape) {
-                Some(t) if req.file_index < t.n_files() => {}
-                _ => return false,
+                None => return Err(SubmitError::UnknownTape),
+                Some(t) if req.file_index >= t.n_files() => {
+                    return Err(SubmitError::BadFileIndex)
+                }
+                Some(_) => {}
             }
         }
         let now = Instant::now();
-        self.shared.submit_times.lock().unwrap().insert(req.id, now);
-        self.shared.metrics.on_submit(1);
-        let cap_hit = self
-            .shared
-            .batcher
-            .lock()
-            .unwrap()
-            .push(&req.tape, req.file_index, req.id, now);
+        // Record the submit time while holding the batcher lock: the
+        // dispatcher needs that lock to pop, so a worker can never serve
+        // the request before its submit time is registered.
+        let cap_hit = {
+            let mut batcher = self.shared.batcher.lock().unwrap();
+            match batcher.push(&req.tape, req.file_index, req.id, now) {
+                PushOutcome::Busy => {
+                    self.shared.metrics.on_reject(1);
+                    return Err(SubmitError::Busy);
+                }
+                outcome => {
+                    self.shared.submit_times.lock().unwrap().insert(req.id, now);
+                    self.shared.metrics.on_submit(1);
+                    outcome.ready()
+                }
+            }
+        };
         if cap_hit {
             self.shared.wakeup.notify_all();
         }
-        true
+        Ok(())
     }
 
     /// Register a tape (or replace its catalog entry) while running.
@@ -250,25 +292,21 @@ fn worker_loop(
         let out = evaluate(&job.instance, &schedule);
         let done_wall = Instant::now();
 
-        // Map per-file service times back to request ids. The instance's
-        // files are the batch's files in sorted order (from_tape sorts and
-        // merges, and the batch is already sorted+deduped by file).
+        // Map per-file service times back to request ids through the one
+        // shared accounting path (`Batch::request_service_times`).
         let mut submit = shared.submit_times.lock().unwrap();
         let mut completions = shared.completions.lock().unwrap();
-        for (i, (_file, ids)) in job.batch.by_file.iter().enumerate() {
-            let service_s = drive.to_seconds(out.service[i]) + drive.mount_s;
-            for &id in ids {
-                let t_submit = submit.remove(&id).unwrap_or(job.batch.opened_at);
-                let queue_s = done_wall.duration_since(t_submit).as_secs_f64();
-                let latency_s = queue_s + service_s;
-                shared.metrics.on_complete(latency_s, service_s);
-                completions.push(Completion {
-                    request_id: id,
-                    tape: job.batch.tape.clone(),
-                    latency_s,
-                    service_s,
-                });
-            }
+        for (id, service_s) in job.batch.request_service_times(&out, drive) {
+            let t_submit = submit.remove(&id).unwrap_or(job.batch.opened_at);
+            let queue_s = done_wall.duration_since(t_submit).as_secs_f64();
+            let latency_s = queue_s + service_s;
+            shared.metrics.on_complete(latency_s, service_s);
+            completions.push(Completion {
+                request_id: id,
+                tape: job.batch.tape.clone(),
+                latency_s,
+                service_s,
+            });
         }
     }
 }
@@ -292,6 +330,7 @@ mod tests {
             batcher: BatcherConfig {
                 window: Duration::from_millis(5),
                 max_batch: 64,
+                ..BatcherConfig::default()
             },
             drive: DriveParams {
                 mount_s: 1.0,
@@ -313,7 +352,7 @@ mod tests {
                 tape: tape.into(),
                 file_index: (i % 50) as usize,
             };
-            assert!(c.submit(req));
+            assert!(c.submit(req).is_ok());
             ids.push(i);
         }
         let (completions, m) = c.finish();
@@ -329,12 +368,18 @@ mod tests {
     #[test]
     fn rejects_unknown_tape_and_bad_index() {
         let c = Coordinator::start(cfg(), catalog(), Arc::new(Gs));
-        assert!(!c.submit(ReadRequest { id: 1, tape: "NOPE".into(), file_index: 0 }));
-        assert!(!c.submit(ReadRequest {
-            id: 2,
-            tape: "TAPE001".into(),
-            file_index: 9_999
-        }));
+        assert_eq!(
+            c.submit(ReadRequest { id: 1, tape: "NOPE".into(), file_index: 0 }),
+            Err(SubmitError::UnknownTape)
+        );
+        assert_eq!(
+            c.submit(ReadRequest {
+                id: 2,
+                tape: "TAPE001".into(),
+                file_index: 9_999
+            }),
+            Err(SubmitError::BadFileIndex)
+        );
         let (completions, m) = c.finish();
         assert!(completions.is_empty());
         assert_eq!(m.submitted, 0);
@@ -343,9 +388,12 @@ mod tests {
     #[test]
     fn register_tape_makes_it_routable() {
         let c = Coordinator::start(cfg(), catalog(), Arc::new(Gs));
-        assert!(!c.submit(ReadRequest { id: 1, tape: "NEW".into(), file_index: 0 }));
+        assert_eq!(
+            c.submit(ReadRequest { id: 1, tape: "NEW".into(), file_index: 0 }),
+            Err(SubmitError::UnknownTape)
+        );
         c.register_tape(Tape::from_sizes("NEW", &[100, 100]));
-        assert!(c.submit(ReadRequest { id: 2, tape: "NEW".into(), file_index: 1 }));
+        assert!(c.submit(ReadRequest { id: 2, tape: "NEW".into(), file_index: 1 }).is_ok());
         let (completions, _) = c.finish();
         assert_eq!(completions.len(), 1);
         assert_eq!(completions[0].request_id, 2);
@@ -356,11 +404,13 @@ mod tests {
     fn duplicate_file_requests_batch_into_multiplicity() {
         let c = Coordinator::start(cfg(), catalog(), Arc::new(SimpleDp));
         for i in 0..10u64 {
-            assert!(c.submit(ReadRequest {
-                id: i,
-                tape: "TAPE001".into(),
-                file_index: 7,
-            }));
+            assert!(c
+                .submit(ReadRequest {
+                    id: i,
+                    tape: "TAPE001".into(),
+                    file_index: 7,
+                })
+                .is_ok());
         }
         let (completions, m) = c.finish();
         assert_eq!(completions.len(), 10);
@@ -382,11 +432,13 @@ mod tests {
         let drain = |c: Coordinator| -> Vec<f64> {
             for i in 0..120u64 {
                 let tape = if i % 2 == 0 { "TAPE001" } else { "TAPE002" };
-                assert!(c.submit(ReadRequest {
-                    id: i,
-                    tape: tape.into(),
-                    file_index: (i % 40) as usize,
-                }));
+                assert!(c
+                    .submit(ReadRequest {
+                        id: i,
+                        tape: tape.into(),
+                        file_index: (i % 40) as usize,
+                    })
+                    .is_ok());
             }
             let (mut completions, m) = c.finish();
             assert_eq!(m.completed, 120);
@@ -412,13 +464,55 @@ mod tests {
         config.batcher.max_batch = 4;
         let c = Coordinator::start(config, catalog(), Arc::new(Gs));
         for i in 0..16u64 {
-            assert!(c.submit(ReadRequest {
-                id: i,
-                tape: "TAPE002".into(),
-                file_index: i as usize,
-            }));
+            assert!(c
+                .submit(ReadRequest {
+                    id: i,
+                    tape: "TAPE002".into(),
+                    file_index: i as usize,
+                })
+                .is_ok());
         }
         let (_, m) = c.finish();
         assert!(m.batches >= 4, "16 requests with cap 4 ⇒ ≥4 batches, got {}", m.batches);
+    }
+
+    #[test]
+    fn busy_backpressure_bounds_the_tape_queue() {
+        // A window far longer than the test: nothing dispatches until
+        // drain, so the 9th..20th submits must all see the bound.
+        let mut config = cfg();
+        config.batcher.window = Duration::from_secs(3600);
+        config.batcher.max_tape_backlog = 8;
+        let c = Coordinator::start(config, catalog(), Arc::new(Gs));
+        let mut busy = 0;
+        for i in 0..20u64 {
+            match c.submit(ReadRequest {
+                id: i,
+                tape: "TAPE001".into(),
+                file_index: (i % 50) as usize,
+            }) {
+                Ok(()) => {}
+                Err(SubmitError::Busy) => busy += 1,
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert_eq!(busy, 12, "bound 8 must shed exactly the overflow");
+        let (completions, m) = c.finish();
+        assert_eq!(completions.len(), 8);
+        assert_eq!(m.submitted, 8);
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.rejected, 12);
+    }
+
+    #[test]
+    fn submit_after_finish_reports_stopping() {
+        let c = Coordinator::start(cfg(), catalog(), Arc::new(Gs));
+        c.shared.stopping.store(true, Ordering::SeqCst);
+        assert_eq!(
+            c.submit(ReadRequest { id: 1, tape: "TAPE001".into(), file_index: 0 }),
+            Err(SubmitError::Stopping)
+        );
+        let (completions, _) = c.finish();
+        assert!(completions.is_empty());
     }
 }

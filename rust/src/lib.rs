@@ -33,6 +33,8 @@
 //! - [`sched`] — the paper's nine algorithms behind one [`sched::Scheduler`] trait.
 //! - [`sim`] — head-trajectory ground truth + robotic library simulator.
 //! - [`coordinator`] — multi-threaded request-serving service.
+//! - [`replay`] — virtual-time workload replay: arrival models, the
+//!   discrete-event engine, and QoS percentile reports.
 //! - [`runtime`] — pluggable SimpleDP backends: pure-Rust dense (default)
 //!   plus the PJRT/XLA engine behind the off-by-default `xla` feature.
 //! - [`dataset`] — IN2P3-format loader, calibrated synthetic generator, stats.
@@ -45,6 +47,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod dataset;
 pub mod model;
+pub mod replay;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

@@ -7,21 +7,28 @@
 //! - `figures`        — regenerate Fig. 14/15/16 + the §5.3 timing table
 //! - `adversarial`    — the §4.5 / Lemma 2 adversarial instances
 //! - `solve`          — run one algorithm on one tape of a dataset
-//! - `serve`          — run the coordinator serving demo
+//! - `serve`          — run the coordinator serving demo (wall clock)
+//! - `replay`         — virtual-time workload replay with QoS JSON reports
 //!
 //! Run `tapesched <cmd> --help` equivalent: flags are documented below in
 //! each handler (and in README.md).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
-use tapesched::analysis::report::run_evaluation;
+use tapesched::analysis::{qos_comparison, report::run_evaluation};
 use tapesched::cli::Args;
-use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, ReadRequest};
+use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
 use tapesched::dataset::{
-    dataset_stats, generate_dataset, load_dataset, write_dataset, Dataset, GeneratorConfig,
+    dataset_stats, generate_dataset, load_dataset, synth_catalog, synth_raw_log,
+    write_dataset, Dataset, GeneratorConfig,
 };
-use tapesched::model::virtual_lb;
+use tapesched::model::{virtual_lb, Tape};
+use tapesched::replay::{
+    drive_closed_loop, reports_json, run_replay, ArrivalModel, BurstyArrivals,
+    DiurnalArrivals, LoopMode, PoissonArrivals, ReplayConfig, RequestMix, TraceArrivals,
+};
 use tapesched::runtime::{backend_by_name, BackendPolicy};
 use tapesched::sched::{paper_schedulers, scheduler_by_name, Scheduler};
 use tapesched::sim::{evaluate, DriveParams};
@@ -42,6 +49,7 @@ fn main() {
         "solve" => cmd_solve(&args),
         "draw" => cmd_draw(&args),
         "serve" => cmd_serve(&args),
+        "replay" => cmd_replay(&args),
         "help" | "--help" | "-h" => usage(),
         other => {
             eprintln!("error: unknown command `{other}`");
@@ -66,12 +74,20 @@ COMMANDS:
   solve           --tape NAME --algo NAME [--data DIR] [--u N] [--backend dense|xla]
   draw            --out FILE.svg [--tape NAME] [--algo NAME] [--u N] [--backend dense|xla]
   serve           [--policy NAME] [--drives N] [--requests N] [--seed N]
+                  [--cap N] [--backlog N] [--backend dense|xla]
+  replay          [--arrivals poisson|bursty|diurnal|trace] [--rate R]
+                  [--duration S] [--policy NAME[,NAME…]] [--drives N] [--seed N]
+                  [--mode open|closed] [--cap N] [--window-ms N] [--max-batch N]
+                  [--backlog N] [--data DIR] [--tapes N] [--out FILE.json]
                   [--backend dense|xla]
   help
 
 Without --data, commands use the built-in calibrated generator (seed 0x12P32021).
 --backend picks the SimpleDP evaluation backend (dense = pure Rust, the
-default; xla = the PJRT engine, requires building with --features xla)."
+default; xla = the PJRT engine, requires building with --features xla).
+`replay` runs in virtual time (deterministic for a fixed seed) and prints a
+QoS JSON document — p50/p95/p99/p99.9 latencies per policy — to stdout (or
+--out); the human-readable comparison table goes to stderr."
     );
 }
 
@@ -282,33 +298,206 @@ fn cmd_draw(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
-    args.reject_unknown(&["policy", "drives", "requests", "seed", "tapes", "data", "backend"]);
+    args.reject_unknown(&[
+        "policy", "drives", "requests", "seed", "tapes", "data", "backend", "cap", "backlog",
+    ]);
     let policy = resolve_policy(args, "policy", "SimpleDP");
     let policy_name = policy.name();
     let n_drives = args.get_parsed_or("drives", 8usize);
     let n_requests = args.get_parsed_or("requests", 5_000u64);
+    let seed = args.get_parsed_or("seed", 1u64);
+    let cap = args.get_parsed_or("cap", 1_024u64);
+    if cap == 0 || args.get_parsed_or("backlog", 1usize) == 0 {
+        eprintln!("error: --cap and --backlog must be positive");
+        std::process::exit(2);
+    }
     let ds = dataset_from(args);
-    let drive = DriveParams::default();
+    let tapes: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
     let coord = Coordinator::start(
         CoordinatorConfig {
             n_drives,
-            batcher: BatcherConfig::default(),
-            drive,
+            batcher: BatcherConfig {
+                max_tape_backlog: args
+                    .get_parsed_or("backlog", BatcherConfig::default().max_tape_backlog),
+                ..BatcherConfig::default()
+            },
+            drive: DriveParams::default(),
         },
-        ds.tapes.iter().map(|t| t.tape.clone()),
+        tapes.iter().cloned(),
         Arc::from(policy),
     );
-    let mut rng = Rng::new(args.get_parsed_or("seed", 1u64));
-    for id in 0..n_requests {
-        let t = &ds.tapes[rng.below(ds.tapes.len() as u64) as usize];
-        let file_index = rng.below(t.tape.n_files() as u64) as usize;
-        coord.submit(ReadRequest { id, tape: t.tape.name.clone(), file_index });
-    }
+    // The same arrival models and closed-loop driver the replay engine
+    // evaluates with, here against the real threaded service (timestamps
+    // ignored: the demo generates load as fast as the cap allows).
+    let mut model =
+        PoissonArrivals::new(RequestMix::new(&tapes), 1_000.0, f64::INFINITY, seed);
+    let stats = drive_closed_loop(
+        &coord,
+        &tapes,
+        &mut model,
+        cap,
+        Duration::from_millis(1),
+        n_requests,
+    );
     let (completions, m) = coord.finish();
     println!("policy {policy_name}, {n_drives} drives, {} requests:", completions.len());
     println!("  batches dispatched      = {}", m.batches);
+    println!("  busy retries / rejected = {} / {}", stats.busy_retries, m.rejected);
     println!("  mean in-tape service    = {:.1} s", m.mean_service_s);
     println!("  mean end-to-end latency = {:.1} s", m.mean_latency_s);
     println!("  p50 / p99 latency       = {:.1} / {:.1} s", m.p50_latency_s, m.p99_latency_s);
     println!("  mean schedule compute   = {:.4} s/batch", m.mean_sched_s_per_batch);
+}
+
+/// Virtual-time workload replay: a timestamped request stream (trace,
+/// Poisson, bursty, or diurnal arrivals) through the production batching
+/// layer onto a simulated drive pool, per policy, at CPU speed. Emits the
+/// deterministic QoS JSON document on stdout (or `--out`) and the
+/// cross-policy comparison table on stderr.
+fn cmd_replay(args: &Args) {
+    args.reject_unknown(&[
+        "arrivals", "rate", "duration", "policy", "drives", "seed", "mode", "cap", "data",
+        "tapes", "backend", "window-ms", "max-batch", "backlog", "out",
+    ]);
+    let kind =
+        args.get_choice_or("arrivals", &["poisson", "bursty", "diurnal", "trace"], "poisson");
+    let rate = args.get_parsed_or("rate", 50.0f64);
+    let duration = args.get_parsed_or("duration", 60.0f64);
+    let n_drives = args.get_parsed_or("drives", 4usize);
+    let seed = args.get_parsed_or("seed", 1u64);
+    if rate <= 0.0 || duration <= 0.0 || n_drives == 0 {
+        eprintln!("error: --rate, --duration and --drives must be positive");
+        std::process::exit(2);
+    }
+    if args.get_parsed_or("backlog", 1usize) == 0 {
+        eprintln!("error: --backlog must be positive (0 would reject every request)");
+        std::process::exit(2);
+    }
+    let mode = match args.get_choice_or("mode", &["open", "closed"], "open").as_str() {
+        "closed" => {
+            let cap = args.get_parsed_or("cap", 256usize);
+            if cap == 0 {
+                eprintln!("error: --cap must be positive in closed mode");
+                std::process::exit(2);
+            }
+            LoopMode::Closed { max_in_flight: cap }
+        }
+        _ => LoopMode::Open,
+    };
+    let cfg = ReplayConfig {
+        n_drives,
+        batcher: BatcherConfig {
+            window: Duration::from_millis(args.get_parsed_or("window-ms", 100u64)),
+            max_batch: args.get_parsed_or("max-batch", 4096usize),
+            max_tape_backlog: args
+                .get_parsed_or("backlog", BatcherConfig::default().max_tape_backlog),
+        },
+        drive: DriveParams::default(),
+        mode,
+        retry_backoff_s: 0.01,
+    };
+
+    // Policies: comma-separated list; `--backend` selects the SimpleDP
+    // evaluation engine and therefore combines with a single entry only.
+    let policy_list = args.get_or("policy", "SimpleDP");
+    let names: Vec<&str> =
+        policy_list.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
+    if names.is_empty() {
+        eprintln!("error: --policy needs at least one algorithm");
+        std::process::exit(2);
+    }
+    let policies: Vec<Box<dyn Scheduler + Send + Sync>> = if args.get("backend").is_some() {
+        if names.len() != 1 {
+            eprintln!("error: --backend combines with a single --policy entry");
+            std::process::exit(2);
+        }
+        vec![resolve_policy(args, "policy", "SimpleDP")]
+    } else {
+        names
+            .iter()
+            .map(|n| {
+                scheduler_by_name(n).unwrap_or_else(|| {
+                    eprintln!("error: unknown algorithm `{n}`");
+                    std::process::exit(2);
+                })
+            })
+            .collect()
+    };
+
+    // The catalog and a factory producing the identical arrival stream for
+    // every policy (fresh model, same seed ⇒ same stream).
+    let (catalog, make_model): (Vec<Tape>, Box<dyn Fn() -> Box<dyn ArrivalModel>>) =
+        if kind == "trace" {
+            // Synthesize a raw activity log over synthetic tape catalogs and
+            // replay it through the Appendix-C filters — the full
+            // `dataset::rawlog` path, timestamps included.
+            let n_tapes = args.get_parsed_or("tapes", 16usize).max(1);
+            let mut rng = Rng::new(seed ^ 0x7_2ACE);
+            let mut cats = std::collections::BTreeMap::new();
+            for i in 0..n_tapes {
+                let name = format!("TAPE{i:03}");
+                let segs = rng.range(60, 400) as usize;
+                cats.insert(name.clone(), synth_catalog(&name, segs, seed ^ (i as u64)));
+            }
+            // Oversample: ~20% of synthetic lines are writes/updates the
+            // filter drops, plus the spanning-aggregate discards.
+            let n_lines = (((rate * duration) as usize).max(1) * 5) / 4 + 8;
+            let log = synth_raw_log(&cats, n_lines, duration.ceil() as u64, seed);
+            let catalog = TraceArrivals::catalog_tapes(&cats);
+            let proto = TraceArrivals::from_log(&log, &cats);
+            eprintln!(
+                "trace: {} raw lines over {} tapes → {} read requests",
+                n_lines,
+                n_tapes,
+                proto.remaining()
+            );
+            (catalog, Box::new(move || Box::new(proto.clone()) as Box<dyn ArrivalModel>))
+        } else {
+            let ds = dataset_from(args);
+            let catalog: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
+            let mix = RequestMix::new(&catalog);
+            (
+                catalog,
+                Box::new(move || -> Box<dyn ArrivalModel> {
+                    match kind.as_str() {
+                        "bursty" => {
+                            Box::new(BurstyArrivals::new(mix.clone(), rate, duration, seed))
+                        }
+                        "diurnal" => {
+                            Box::new(DiurnalArrivals::new(mix.clone(), rate, duration, seed))
+                        }
+                        _ => Box::new(PoissonArrivals::new(mix.clone(), rate, duration, seed)),
+                    }
+                }),
+            )
+        };
+
+    let mut reports = Vec::new();
+    for policy in &policies {
+        let mut model = make_model();
+        let (report, outcome) =
+            run_replay(&cfg, &catalog, policy.as_ref(), model.as_mut(), seed, duration);
+        eprintln!(
+            "replay {}: {} completed over {:.1} virtual s ({} batches, {:.3} wall s of schedule compute)",
+            report.policy,
+            report.completed,
+            report.makespan_s,
+            report.batches,
+            outcome.stats.sched_wall_s
+        );
+        reports.push(report);
+    }
+
+    eprint!("{}", qos_comparison(&reports));
+    let json = reports_json(&reports);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &json).unwrap_or_else(|e| {
+                eprintln!("error writing {path}: {e}");
+                std::process::exit(1);
+            });
+            eprintln!("QoS report → {path}");
+        }
+        None => print!("{json}"),
+    }
 }

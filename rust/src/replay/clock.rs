@@ -1,0 +1,194 @@
+//! Virtual time for the replay engine.
+//!
+//! A replay runs at CPU speed: simulated time is an integer microsecond
+//! counter ([`VirtualClock`]) advanced by a deterministic discrete-event
+//! queue ([`EventQueue`]), never by sleeping. The clock still hands out
+//! `std::time::Instant`s — anchored at an arbitrary origin captured at
+//! construction — so virtual components can drive real-time APIs (the
+//! coordinator's [`crate::coordinator::Batcher`] takes `Instant`s) without
+//! those APIs knowing they are being replayed. Only *differences* between
+//! instants ever matter, and those are exact integer arithmetic, so the
+//! translation costs no determinism.
+
+use std::collections::BinaryHeap;
+use std::time::{Duration, Instant};
+
+/// Convert seconds to virtual microseconds (the engine's time unit).
+#[inline]
+pub fn secs_to_us(s: f64) -> u64 {
+    (s.max(0.0) * 1e6).round() as u64
+}
+
+/// Convert virtual microseconds back to seconds.
+#[inline]
+pub fn us_to_secs(us: u64) -> f64 {
+    us as f64 / 1e6
+}
+
+/// Monotone virtual clock in integer microseconds.
+#[derive(Debug, Clone)]
+pub struct VirtualClock {
+    origin: Instant,
+    now_us: u64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { origin: Instant::now(), now_us: 0 }
+    }
+
+    /// Current virtual time in microseconds.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+
+    /// Current virtual time in seconds.
+    #[inline]
+    pub fn now_s(&self) -> f64 {
+        us_to_secs(self.now_us)
+    }
+
+    /// Jump forward to `t_us` (no-op when `t_us` is in the past — events
+    /// popped at the current instant must not rewind the clock).
+    pub fn advance_to(&mut self, t_us: u64) {
+        self.now_us = self.now_us.max(t_us);
+    }
+
+    /// The `Instant` corresponding to virtual time `t_us`.
+    #[inline]
+    pub fn instant_at(&self, t_us: u64) -> Instant {
+        self.origin + Duration::from_micros(t_us)
+    }
+
+    /// The `Instant` corresponding to *now*.
+    #[inline]
+    pub fn now_instant(&self) -> Instant {
+        self.instant_at(self.now_us)
+    }
+
+    /// Inverse of [`VirtualClock::instant_at`]: virtual microseconds of an
+    /// `Instant` previously produced by this clock (pre-origin clamps to 0).
+    #[inline]
+    pub fn us_of(&self, i: Instant) -> u64 {
+        i.saturating_duration_since(self.origin).as_micros() as u64
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+struct Entry<E> {
+    t_us: u64,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_us == other.t_us && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, the earliest (time, seq) must
+        // surface first. The sequence number breaks time ties FIFO, which
+        // is what makes the whole replay deterministic.
+        (other.t_us, other.seq).cmp(&(self.t_us, self.seq))
+    }
+}
+
+/// Deterministic future-event queue: events pop in (time, insertion) order.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `ev` at virtual time `t_us`.
+    pub fn push(&mut self, t_us: u64, ev: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { t_us, seq, ev });
+    }
+
+    /// Pop the earliest event (ties FIFO by insertion order).
+    pub fn pop(&mut self) -> Option<(u64, E)> {
+        self.heap.pop().map(|e| (e.t_us, e.ev))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_then_fifo_order() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a1");
+        q.push(10, "a2");
+        q.push(20, "b");
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.pop(), Some((10, "a1")));
+        assert_eq!(q.pop(), Some((10, "a2")), "ties break FIFO");
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn clock_round_trips_through_instants() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now_us(), 0);
+        c.advance_to(1_500_000);
+        assert_eq!(c.now_us(), 1_500_000);
+        assert!((c.now_s() - 1.5).abs() < 1e-12);
+        let i = c.instant_at(2_000_000);
+        assert_eq!(c.us_of(i), 2_000_000);
+        assert_eq!(c.us_of(c.now_instant()), 1_500_000);
+        // Going backwards is a no-op, not a panic.
+        c.advance_to(1_000_000);
+        assert_eq!(c.now_us(), 1_500_000);
+    }
+
+    #[test]
+    fn second_microsecond_conversions() {
+        assert_eq!(secs_to_us(0.0), 0);
+        assert_eq!(secs_to_us(1.0), 1_000_000);
+        assert_eq!(secs_to_us(0.1234567), 123_457, "rounds to nearest µs");
+        assert_eq!(secs_to_us(-5.0), 0, "negative clamps to zero");
+        assert!((us_to_secs(2_500_000) - 2.5).abs() < 1e-12);
+    }
+}

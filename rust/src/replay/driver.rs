@@ -1,0 +1,128 @@
+//! Live closed-loop driver for the *real* coordinator.
+//!
+//! The virtual engine ([`super::engine`]) is the measurement tool; this
+//! driver is its wall-clock sibling for exercising the actual threaded
+//! [`Coordinator`] — the serving demo (`tapesched serve`) and the
+//! backpressure integration tests share it, so the demo and the evaluation
+//! drive the service through one code path. Requests come from the same
+//! [`ArrivalModel`]s; arrival *timestamps* are ignored (the driver is a
+//! load generator, not a simulator): it submits as fast as the in-flight
+//! cap allows and retries `Busy` rejections after a backoff, which is
+//! exactly the contract the coordinator's backpressure promises callers.
+
+use std::time::Duration;
+
+use crate::coordinator::{Coordinator, ReadRequest, SubmitError};
+use crate::model::Tape;
+
+use super::arrivals::ArrivalModel;
+
+/// What the driver observed while feeding the coordinator.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LiveDriveStats {
+    /// Requests accepted by the coordinator.
+    pub submitted: u64,
+    /// `Busy` rejections that were retried (each retry re-submits).
+    pub busy_retries: u64,
+    /// Requests dropped for a non-retryable reason (unknown tape, bad
+    /// index, stopping service).
+    pub dropped: u64,
+}
+
+/// Feed up to `limit` arrivals from `model` into `coord`, keeping at most
+/// `max_in_flight` requests outstanding (observed through the metrics
+/// counters) and retrying `Busy` after `retry_backoff`. `tapes` maps the
+/// model's tape indices to catalog names — pass the same slice the model's
+/// [`super::arrivals::RequestMix`] was built from.
+pub fn drive_closed_loop(
+    coord: &Coordinator,
+    tapes: &[Tape],
+    model: &mut dyn ArrivalModel,
+    max_in_flight: u64,
+    retry_backoff: Duration,
+    limit: u64,
+) -> LiveDriveStats {
+    assert!(max_in_flight > 0, "closed loop needs a positive in-flight cap");
+    let mut stats = LiveDriveStats::default();
+    let mut id = 0u64;
+    while id < limit {
+        let Some(a) = model.next_arrival() else { break };
+        // Gate on the in-flight level before submitting.
+        loop {
+            let m = coord.metrics();
+            if m.submitted.saturating_sub(m.completed) < max_in_flight {
+                break;
+            }
+            std::thread::sleep(retry_backoff);
+        }
+        loop {
+            let req = ReadRequest {
+                id,
+                tape: tapes[a.tape].name.clone(),
+                file_index: a.file,
+            };
+            match coord.submit(req) {
+                Ok(()) => {
+                    stats.submitted += 1;
+                    break;
+                }
+                Err(SubmitError::Busy) => {
+                    stats.busy_retries += 1;
+                    std::thread::sleep(retry_backoff);
+                }
+                Err(_) => {
+                    stats.dropped += 1;
+                    break;
+                }
+            }
+        }
+        id += 1;
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, CoordinatorConfig};
+    use crate::replay::arrivals::{PoissonArrivals, RequestMix};
+    use crate::sched::Gs;
+    use crate::sim::DriveParams;
+    use std::sync::Arc;
+
+    #[test]
+    fn drives_the_real_coordinator_to_completion() {
+        let tapes = vec![
+            Tape::from_sizes("T0", &[1_000; 40]),
+            Tape::from_sizes("T1", &[500; 80]),
+        ];
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                n_drives: 2,
+                batcher: BatcherConfig {
+                    window: Duration::from_millis(2),
+                    max_batch: 64,
+                    ..BatcherConfig::default()
+                },
+                drive: DriveParams::default(),
+            },
+            tapes.clone(),
+            Arc::new(Gs),
+        );
+        let mut model =
+            PoissonArrivals::new(RequestMix::new(&tapes), 100.0, f64::INFINITY, 3);
+        let stats = drive_closed_loop(
+            &coord,
+            &tapes,
+            &mut model,
+            64,
+            Duration::from_millis(1),
+            150,
+        );
+        assert_eq!(stats.submitted, 150);
+        assert_eq!(stats.dropped, 0);
+        let (completions, m) = coord.finish();
+        assert_eq!(completions.len(), 150);
+        assert_eq!(m.completed, 150);
+    }
+}

@@ -1,0 +1,550 @@
+//! The discrete-event replay core.
+//!
+//! One single-threaded event loop simulates the full serving path in
+//! virtual time: arrivals (from any [`ArrivalModel`]) flow through the
+//! coordinator's *real* [`Batcher`] — fed synthetic `Instant`s from the
+//! [`VirtualClock`], so batching semantics (window, size cap, per-tape
+//! backlog bound) are byte-for-byte the production ones — onto a simulated
+//! drive pool. Schedules come from the configured [`Scheduler`] policy and
+//! service times from the ground-truth simulator, exactly like a
+//! coordinator drive worker; only the waiting happens in zero wall time.
+//!
+//! Two driver disciplines:
+//!
+//! - **Open loop** — arrivals submit at their trace time regardless of
+//!   system state (the offered load is external). `Busy` rejections shed
+//!   the request, which is precisely what a datacenter front-end sees.
+//! - **Closed loop** — at most `max_in_flight` submitted-but-unserved
+//!   requests; later arrivals queue client-side, and `Busy` rejections
+//!   retry after a virtual backoff (the retry path the coordinator's
+//!   backpressure contract promises callers).
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use crate::coordinator::{Batch, Batcher, BatcherConfig, PushOutcome};
+use crate::model::{Instance, Tape};
+use crate::sched::Scheduler;
+use crate::sim::{evaluate, DriveParams};
+
+use super::arrivals::{Arrival, ArrivalModel};
+use super::clock::{secs_to_us, EventQueue, VirtualClock};
+use super::histogram::LatencyHistogram;
+
+/// Driver discipline for a replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopMode {
+    /// Submit at trace time; shed on `Busy`.
+    Open,
+    /// Cap in-flight requests; queue client-side and retry on `Busy`.
+    Closed {
+        max_in_flight: usize,
+    },
+}
+
+/// Replay configuration: the serving stack under test plus the driver.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Simulated drive pool size.
+    pub n_drives: usize,
+    pub batcher: BatcherConfig,
+    pub drive: DriveParams,
+    pub mode: LoopMode,
+    /// Virtual backoff before a closed-loop `Busy` retry, seconds.
+    pub retry_backoff_s: f64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            n_drives: 4,
+            batcher: BatcherConfig::default(),
+            drive: DriveParams::default(),
+            mode: LoopMode::Open,
+            retry_backoff_s: 0.01,
+        }
+    }
+}
+
+/// One served request, in virtual time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplayCompletion {
+    pub id: u64,
+    pub tape: String,
+    /// Virtual time the client first presented the request (µs). In closed
+    /// loop this precedes acceptance by any client-side queueing and
+    /// `Busy`-retry backoff — latency is measured from *here*, so overload
+    /// is never hidden (no coordinated omission).
+    pub arrived_us: u64,
+    /// Virtual time the batcher accepted the request (µs).
+    pub submitted_us: u64,
+    /// Virtual completion time (µs).
+    pub done_us: u64,
+    /// End-to-end latency (µs): `done - arrived` — client-side waiting +
+    /// batch queueing + mount + in-tape service.
+    pub latency_us: u64,
+    /// Mount + in-tape service component (µs) — the paper's objective plus
+    /// the mount, matching the coordinator's `Completion::service_s`.
+    pub service_us: u64,
+}
+
+/// Aggregate counters of one replay. (No `PartialEq`: `sched_wall_s` is a
+/// wall-clock diagnostic, so whole-struct equality across two runs of the
+/// same seed would fail spuriously — compare the deterministic fields, the
+/// completion log, or the [`super::report::QosReport`] instead.)
+#[derive(Debug, Clone, Default)]
+pub struct ReplayStats {
+    /// Requests accepted by the batcher.
+    pub submitted: u64,
+    /// Requests served (equals `submitted` at drain).
+    pub completed: u64,
+    /// Open-loop requests dropped on `Busy`.
+    pub shed: u64,
+    /// `Busy` rejections observed (open: each sheds; closed: each retries).
+    pub busy_rejections: u64,
+    /// Closed-loop retry submissions performed.
+    pub retries: u64,
+    /// Batches dispatched to drives.
+    pub batches: u64,
+    /// Virtual time of the last completion (µs).
+    pub makespan_us: u64,
+    /// Total virtual drive-busy time across the pool (µs).
+    pub busy_drive_us: u64,
+    /// Wall-clock seconds spent inside `Scheduler::schedule` — a real
+    /// measurement of policy compute, NOT part of the deterministic report.
+    pub sched_wall_s: f64,
+}
+
+/// Everything a replay produces.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    pub stats: ReplayStats,
+    /// Completion log, sorted by (virtual completion time, request id).
+    pub completions: Vec<ReplayCompletion>,
+    /// End-to-end latency distribution.
+    pub latency: LatencyHistogram,
+    /// Mount + in-tape service-time distribution.
+    pub service: LatencyHistogram,
+}
+
+enum Ev {
+    Arrival(Arrival),
+    Retry { id: u64, tape: usize, file: usize, arrived_us: u64 },
+    /// Re-check batch windows (scheduled for the batcher's next deadline).
+    BatchTimer,
+    /// A drive finished its batch (mount + span + unmount elapsed).
+    DriveFree,
+    /// One request completed: closed-loop in-flight slot release.
+    Slot,
+}
+
+struct Engine<'a> {
+    cfg: &'a ReplayConfig,
+    catalog: &'a [Tape],
+    tape_index: HashMap<String, usize>,
+    policy: &'a dyn Scheduler,
+    clock: VirtualClock,
+    events: EventQueue<Ev>,
+    batcher: Batcher,
+    free_drives: usize,
+    /// id → (arrived, accepted) virtual µs for accepted-but-unserved
+    /// requests.
+    pending: HashMap<u64, (u64, u64)>,
+    /// Closed-loop client-side queue: `(id, tape, file, arrived_us)`.
+    client_queue: VecDeque<(u64, usize, usize, u64)>,
+    in_flight: usize,
+    arrivals_done: bool,
+    next_timer_us: Option<u64>,
+    next_id: u64,
+    stats: ReplayStats,
+    completions: Vec<ReplayCompletion>,
+    latency: LatencyHistogram,
+    service: LatencyHistogram,
+}
+
+/// Run `model` against `catalog` under `policy`: the whole replay, at CPU
+/// speed. Deterministic: same config + catalog + model stream ⇒ identical
+/// [`ReplayOutcome`] (modulo the wall-clock `sched_wall_s` diagnostic).
+pub fn simulate(
+    cfg: &ReplayConfig,
+    catalog: &[Tape],
+    policy: &dyn Scheduler,
+    model: &mut dyn ArrivalModel,
+) -> ReplayOutcome {
+    assert!(cfg.n_drives > 0, "replay needs at least one drive");
+    assert!(
+        cfg.batcher.max_tape_backlog > 0,
+        "a zero tape backlog rejects every request (and would retry forever in closed loop)"
+    );
+    if let LoopMode::Closed { max_in_flight } = cfg.mode {
+        assert!(max_in_flight > 0, "closed loop needs a positive in-flight cap");
+    }
+    let mut eng = Engine {
+        cfg,
+        catalog,
+        tape_index: catalog
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect(),
+        policy,
+        clock: VirtualClock::new(),
+        events: EventQueue::new(),
+        batcher: Batcher::new(cfg.batcher),
+        free_drives: cfg.n_drives,
+        pending: HashMap::new(),
+        client_queue: VecDeque::new(),
+        in_flight: 0,
+        arrivals_done: false,
+        next_timer_us: None,
+        next_id: 0,
+        stats: ReplayStats::default(),
+        completions: Vec::new(),
+        latency: LatencyHistogram::new(),
+        service: LatencyHistogram::new(),
+    };
+
+    eng.pull_arrival(model);
+    while let Some((t, ev)) = eng.events.pop() {
+        eng.clock.advance_to(t);
+        match ev {
+            Ev::Arrival(a) => {
+                assert!(
+                    a.tape < eng.catalog.len() && a.file < eng.catalog[a.tape].n_files(),
+                    "arrival ({}, {}) outside the catalog",
+                    a.tape,
+                    a.file
+                );
+                let id = eng.next_id;
+                eng.next_id += 1;
+                eng.on_request(id, a.tape, a.file);
+                eng.pull_arrival(model);
+            }
+            Ev::Retry { id, tape, file, arrived_us } => {
+                eng.stats.retries += 1;
+                eng.try_submit(id, tape, file, arrived_us);
+            }
+            Ev::BatchTimer => {
+                if eng.next_timer_us == Some(t) {
+                    eng.next_timer_us = None;
+                }
+            }
+            Ev::DriveFree => eng.free_drives += 1,
+            Ev::Slot => eng.on_slot_free(),
+        }
+        eng.dispatch_ready();
+        eng.schedule_timer();
+    }
+
+    debug_assert_eq!(eng.batcher.pending(), 0, "replay drained with work queued");
+    debug_assert!(eng.pending.is_empty(), "unserved submitted requests");
+    debug_assert!(eng.client_queue.is_empty(), "stranded client-side requests");
+    eng.completions.sort_by_key(|c| (c.done_us, c.id));
+    ReplayOutcome {
+        stats: eng.stats,
+        completions: eng.completions,
+        latency: eng.latency,
+        service: eng.service,
+    }
+}
+
+impl<'a> Engine<'a> {
+    fn pull_arrival(&mut self, model: &mut dyn ArrivalModel) {
+        match model.next_arrival() {
+            Some(a) => {
+                // Guard model misbehavior: times must never run backwards.
+                let t = secs_to_us(a.at_s).max(self.clock.now_us());
+                self.events.push(t, Ev::Arrival(a));
+            }
+            None => self.arrivals_done = true,
+        }
+    }
+
+    fn on_request(&mut self, id: u64, tape: usize, file: usize) {
+        let arrived_us = self.clock.now_us();
+        if let LoopMode::Closed { max_in_flight } = self.cfg.mode {
+            if self.in_flight >= max_in_flight {
+                self.client_queue.push_back((id, tape, file, arrived_us));
+                return;
+            }
+        }
+        self.in_flight += 1;
+        self.try_submit(id, tape, file, arrived_us);
+    }
+
+    fn on_slot_free(&mut self) {
+        self.in_flight = self.in_flight.saturating_sub(1);
+        if let LoopMode::Closed { max_in_flight } = self.cfg.mode {
+            if self.in_flight < max_in_flight {
+                if let Some((id, tape, file, arrived_us)) = self.client_queue.pop_front() {
+                    self.in_flight += 1;
+                    self.try_submit(id, tape, file, arrived_us);
+                }
+            }
+        }
+    }
+
+    fn try_submit(&mut self, id: u64, tape: usize, file: usize, arrived_us: u64) {
+        let now = self.clock.now_instant();
+        match self.batcher.push(&self.catalog[tape].name, file, id, now) {
+            PushOutcome::Busy => {
+                self.stats.busy_rejections += 1;
+                match self.cfg.mode {
+                    LoopMode::Open => {
+                        self.stats.shed += 1;
+                        self.in_flight = self.in_flight.saturating_sub(1);
+                    }
+                    LoopMode::Closed { .. } => {
+                        let t = self.clock.now_us()
+                            + secs_to_us(self.cfg.retry_backoff_s).max(1);
+                        self.events.push(t, Ev::Retry { id, tape, file, arrived_us });
+                    }
+                }
+            }
+            _accepted => {
+                self.stats.submitted += 1;
+                self.pending.insert(id, (arrived_us, self.clock.now_us()));
+            }
+        }
+    }
+
+    /// Feed ready batches to free drives. Once arrivals are exhausted and
+    /// no request waits client-side, open batches dispatch without waiting
+    /// out their window — the coordinator's drain semantics.
+    fn dispatch_ready(&mut self) {
+        while self.free_drives > 0 {
+            let draining = self.arrivals_done && self.client_queue.is_empty();
+            let now = self.clock.now_instant();
+            let Some(batch) = self.batcher.pop_ready(now, draining) else { break };
+            self.dispatch(batch);
+        }
+    }
+
+    /// Wake the dispatcher at the batcher's next window expiry. Only needed
+    /// while a drive is free — otherwise the next `DriveFree` re-checks.
+    fn schedule_timer(&mut self) {
+        if self.free_drives == 0 {
+            return;
+        }
+        let Some(deadline) = self.batcher.next_deadline() else { return };
+        let t = self.clock.us_of(deadline).max(self.clock.now_us());
+        match self.next_timer_us {
+            Some(cur) if cur <= t => {}
+            _ => {
+                self.next_timer_us = Some(t);
+                self.events.push(t, Ev::BatchTimer);
+            }
+        }
+    }
+
+    fn dispatch(&mut self, batch: Batch) {
+        self.free_drives -= 1;
+        self.stats.batches += 1;
+        let t_us = self.clock.now_us();
+        let tape = &self.catalog[self.tape_index[&batch.tape]];
+        let inst = Instance::from_tape(tape, &batch.multiplicities(), self.cfg.drive.uturn_bytes())
+            .expect("replayed requests are validated against the catalog");
+
+        let wall = Instant::now();
+        let sched = self.policy.schedule(&inst);
+        self.stats.sched_wall_s += wall.elapsed().as_secs_f64();
+        let out = evaluate(&inst, &sched);
+
+        // Per-request accounting through the same shared mapping the
+        // coordinator drive worker uses (`Batch::request_service_times`).
+        let drive = self.cfg.drive;
+        for (id, service_s) in batch.request_service_times(&out, drive) {
+            let service_us = secs_to_us(service_s);
+            let done_us = t_us + service_us;
+            let (arrived_us, submitted_us) =
+                self.pending.remove(&id).expect("completion for unsubmitted id");
+            let latency_us = done_us - arrived_us;
+            self.latency.record_us(latency_us);
+            self.service.record_us(service_us);
+            self.stats.completed += 1;
+            self.stats.makespan_us = self.stats.makespan_us.max(done_us);
+            self.completions.push(ReplayCompletion {
+                id,
+                tape: batch.tape.clone(),
+                arrived_us,
+                submitted_us,
+                done_us,
+                latency_us,
+                service_us,
+            });
+            self.events.push(done_us, Ev::Slot);
+        }
+
+        let busy_s = self.cfg.drive.mount_s
+            + self.cfg.drive.to_seconds(out.finish)
+            + self.cfg.drive.unmount_s;
+        let busy_us = secs_to_us(busy_s);
+        self.stats.busy_drive_us += busy_us;
+        self.events.push(t_us + busy_us, Ev::DriveFree);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::arrivals::{PoissonArrivals, RequestMix};
+    use crate::sched::{Gs, SimpleDp};
+    use std::time::Duration;
+
+    fn catalog() -> Vec<Tape> {
+        vec![
+            Tape::from_sizes("T0", &[1_000; 60]),
+            Tape::from_sizes("T1", &[500; 120]),
+            Tape::from_sizes("T2", &[2_000; 30]),
+        ]
+    }
+
+    fn fast_drive() -> DriveParams {
+        DriveParams { mount_s: 1.0, unmount_s: 0.5, bytes_per_s: 1e6, uturn_s: 0.001 }
+    }
+
+    fn cfg(mode: LoopMode) -> ReplayConfig {
+        ReplayConfig {
+            n_drives: 3,
+            batcher: BatcherConfig {
+                window: Duration::from_millis(200),
+                max_batch: 64,
+                ..BatcherConfig::default()
+            },
+            drive: fast_drive(),
+            mode,
+            retry_backoff_s: 0.05,
+        }
+    }
+
+    fn poisson(rate: f64, horizon: f64, seed: u64) -> PoissonArrivals {
+        PoissonArrivals::new(RequestMix::new(&catalog()), rate, horizon, seed)
+    }
+
+    #[test]
+    fn serves_every_arrival_and_is_deterministic() {
+        let run = || {
+            let mut model = poisson(40.0, 10.0, 9);
+            simulate(&cfg(LoopMode::Open), &catalog(), &SimpleDp, &mut model)
+        };
+        let a = run();
+        let b = run();
+        assert!(a.stats.submitted > 200, "expected ~400 arrivals");
+        assert_eq!(a.stats.completed, a.stats.submitted);
+        assert_eq!(a.stats.shed, 0);
+        assert_eq!(a.completions, b.completions, "same seed ⇒ identical log");
+        assert_eq!(a.latency, b.latency);
+        assert_eq!(a.stats.completed, b.stats.completed);
+        // Completion ids are exactly the submitted ids.
+        let mut ids: Vec<u64> = a.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..a.stats.submitted).collect::<Vec<_>>());
+        // Latency decomposes sanely: measured from client arrival, which in
+        // open loop coincides with batcher acceptance.
+        for c in &a.completions {
+            assert_eq!(c.done_us - c.arrived_us, c.latency_us);
+            assert_eq!(c.arrived_us, c.submitted_us, "open loop never delays submit");
+            assert!(c.latency_us >= c.service_us);
+        }
+        assert_eq!(a.stats.makespan_us, a.completions.last().unwrap().done_us);
+    }
+
+    #[test]
+    fn virtual_time_decouples_from_wall_time() {
+        // 10 virtual minutes of traffic; the replay itself must be fast.
+        let wall = Instant::now();
+        let mut model = poisson(20.0, 600.0, 4);
+        let out = simulate(&cfg(LoopMode::Open), &catalog(), &Gs, &mut model);
+        assert!(out.stats.completed > 5_000, "got {}", out.stats.completed);
+        assert!(out.stats.makespan_us > 500_000_000, "makespan is virtual");
+        assert!(
+            wall.elapsed().as_secs_f64() < 30.0,
+            "replay must run at CPU speed"
+        );
+    }
+
+    #[test]
+    fn open_loop_sheds_on_busy() {
+        let mut config = cfg(LoopMode::Open);
+        config.batcher.max_tape_backlog = 4;
+        config.n_drives = 1;
+        // One hot tape saturates instantly at this rate.
+        let catalog = vec![Tape::from_sizes("HOT", &[1_000; 50])];
+        let mut model =
+            PoissonArrivals::new(RequestMix::new(&catalog), 200.0, 5.0, 1);
+        let out = simulate(&config, &catalog, &Gs, &mut model);
+        assert!(out.stats.shed > 0, "backlog 4 at 200 rps must shed");
+        assert_eq!(out.stats.shed, out.stats.busy_rejections);
+        assert_eq!(out.stats.completed, out.stats.submitted);
+        assert_eq!(out.stats.retries, 0);
+    }
+
+    #[test]
+    fn closed_loop_retries_busy_and_respects_cap() {
+        let cap = 8;
+        let mut config = cfg(LoopMode::Closed { max_in_flight: cap });
+        config.batcher.max_tape_backlog = 4;
+        config.n_drives = 1;
+        let catalog = vec![Tape::from_sizes("HOT", &[1_000; 50])];
+        let mut model =
+            PoissonArrivals::new(RequestMix::new(&catalog), 200.0, 5.0, 1);
+        let out = simulate(&config, &catalog, &Gs, &mut model);
+        assert!(out.stats.busy_rejections > 0, "backlog 4 under cap 8 must reject");
+        assert!(out.stats.retries >= out.stats.busy_rejections);
+        assert_eq!(out.stats.shed, 0, "closed loop never sheds");
+        assert_eq!(out.stats.completed, out.stats.submitted);
+        // Reconstruct the in-flight level over time from the completion
+        // log: it must never exceed the cap.
+        let mut edges: Vec<(u64, i64)> = Vec::new();
+        for c in &out.completions {
+            edges.push((c.submitted_us, 1));
+            edges.push((c.done_us, -1));
+        }
+        // At equal times, completions free slots before submissions claim.
+        edges.sort_by_key(|&(t, d)| (t, d));
+        let (mut level, mut peak) = (0i64, 0i64);
+        for (_, d) in edges {
+            level += d;
+            peak = peak.max(level);
+        }
+        assert!(peak <= cap as i64, "in-flight peaked at {peak} > cap {cap}");
+        assert!(peak >= 2, "the hot tape should queue more than one request");
+        // Latency is measured from client arrival: queued/retried requests
+        // must show the client-side wait, not hide it.
+        assert!(out.completions.iter().all(|c| c.submitted_us >= c.arrived_us));
+        assert!(
+            out.completions.iter().any(|c| c.submitted_us > c.arrived_us),
+            "a saturated closed loop must delay some submissions client-side"
+        );
+    }
+
+    #[test]
+    fn batching_coalesces_and_better_policy_serves_faster() {
+        // A long window coalesces each tape's burst into one batch.
+        let mut config = cfg(LoopMode::Open);
+        config.batcher.window = Duration::from_secs(30);
+        let run = |policy: &dyn Scheduler| {
+            let mut model = poisson(30.0, 20.0, 12);
+            simulate(&config, &catalog(), policy, &mut model)
+        };
+        let gs = run(&Gs);
+        let sdp = run(&SimpleDp);
+        assert_eq!(gs.stats.completed, sdp.stats.completed);
+        assert!(
+            gs.stats.batches * 10 <= gs.stats.completed,
+            "window must coalesce ≥10 requests/batch: {} batches for {}",
+            gs.stats.batches,
+            gs.stats.completed
+        );
+        // Batch composition is policy-independent (arrivals + batcher only),
+        // and GS's atomic detours are a feasible disjoint-detour schedule,
+        // so the disjoint-detour optimum can't serve slower (tolerance: µs
+        // rounding of per-request service times).
+        assert!(
+            sdp.service.mean_s() <= gs.service.mean_s() + 1e-5,
+            "SimpleDP {} vs GS {}",
+            sdp.service.mean_s(),
+            gs.service.mean_s()
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! Fixed-size log-bucketed latency histogram (HDR-style, no deps).
+//!
+//! Values are recorded in integer microseconds into a log-linear bucket
+//! grid: exact below 64 µs, then 64 linear sub-buckets per power of two —
+//! a worst-case relative quantile error of 1/64 ≈ 1.6% across the full
+//! `u64` range, in a constant ~30 KB of memory. Recording is O(1) and
+//! branch-light; quantile queries walk the cumulative counts.
+//!
+//! Everything here is integer arithmetic on a fixed grid, so two replays
+//! that record the same values report byte-identical quantiles — the
+//! property the determinism acceptance test leans on.
+
+/// Linear sub-bucket resolution: 2^6 = 64 buckets per octave.
+const SUB_BITS: u32 = 6;
+const SUB: u64 = 1 << SUB_BITS;
+/// Octaves SUB_BITS..=63 each contribute SUB buckets after the linear head.
+const N_BUCKETS: usize = ((64 - SUB_BITS as usize) + 1) * SUB as usize;
+
+/// Log-bucketed histogram over microsecond samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: u128,
+    max_us: u64,
+}
+
+#[inline]
+fn bucket_index(v_us: u64) -> usize {
+    if v_us < SUB {
+        return v_us as usize;
+    }
+    let exp = 63 - v_us.leading_zeros(); // ≥ SUB_BITS
+    let mantissa = (v_us >> (exp - SUB_BITS)) - SUB; // ∈ [0, SUB)
+    ((exp - SUB_BITS + 1) as u64 * SUB + mantissa) as usize
+}
+
+/// Highest value (µs) mapping into bucket `i` — quantiles report this edge,
+/// so they never under-state a latency.
+#[inline]
+fn bucket_high_us(i: usize) -> u64 {
+    if i < SUB as usize {
+        return i as u64;
+    }
+    let exp = (i / SUB as usize) as u32 + SUB_BITS - 1;
+    let mantissa = (i % SUB as usize) as u64;
+    let low = (SUB + mantissa) << (exp - SUB_BITS);
+    low + (1u64 << (exp - SUB_BITS)) - 1
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: vec![0; N_BUCKETS],
+            total: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+
+    /// Record one sample in microseconds.
+    pub fn record_us(&mut self, v_us: u64) {
+        self.counts[bucket_index(v_us)] += 1;
+        self.total += 1;
+        self.sum_us += v_us as u128;
+        self.max_us = self.max_us.max(v_us);
+    }
+
+    /// Record one sample in seconds (negative clamps to zero).
+    pub fn record_seconds(&mut self, s: f64) {
+        self.record_us((s.max(0.0) * 1e6).round() as u64);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Exact mean of the recorded samples, seconds (0 when empty).
+    pub fn mean_s(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            (self.sum_us / self.total as u128) as f64 / 1e6
+                + (self.sum_us % self.total as u128) as f64
+                    / self.total as f64
+                    / 1e6
+        }
+    }
+
+    /// Exact maximum recorded sample, seconds.
+    pub fn max_s(&self) -> f64 {
+        self.max_us as f64 / 1e6
+    }
+
+    /// Quantile `p` ∈ [0, 100] in seconds: the high edge of the bucket
+    /// holding the ⌈p/100·n⌉-th smallest sample (≤ 1/64 relative error),
+    /// clamped to the exact maximum. 0 when empty.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_high_us(i).min(self.max_us) as f64 / 1e6;
+            }
+        }
+        self.max_s()
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::percentile_sorted;
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut values: Vec<u64> = Vec::new();
+        for shift in 0..64u32 {
+            for delta in [0u64, 1, 3] {
+                values.push((1u64 << shift).saturating_add(delta));
+            }
+        }
+        values.push(0);
+        values.sort_unstable();
+        let mut last = 0usize;
+        for v in values {
+            let i = bucket_index(v);
+            assert!(i < N_BUCKETS, "v={v} i={i}");
+            assert!(i >= last, "index must be monotone in the value (v={v})");
+            last = i;
+            // The bucket's range must actually contain the value.
+            assert!(bucket_high_us(i) >= v, "v={v} high={}", bucket_high_us(i));
+        }
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(bucket_high_us(N_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LatencyHistogram::new();
+        for v in 0..SUB {
+            h.record_us(v);
+        }
+        assert_eq!(h.count(), SUB);
+        // Every value below SUB sits in its own bucket: the k-th quantile
+        // rank maps straight back to the value.
+        assert_eq!(h.quantile(50.0), 31.0 / 1e6);
+        assert_eq!(h.quantile(100.0), 63.0 / 1e6);
+        assert_eq!(h.max_s(), 63.0 / 1e6);
+    }
+
+    #[test]
+    fn quantiles_match_exact_sorted_vector_within_bucket_error() {
+        // The satellite-task contract: histogram quantile math vs the exact
+        // sorted-vector quantiles, across a skewed (log-normal) sample.
+        let mut rng = Rng::new(0x9077);
+        let mut h = LatencyHistogram::new();
+        let mut xs = Vec::with_capacity(20_000);
+        for _ in 0..20_000 {
+            let s = rng.lognormal(2.0, 1.2); // seconds, heavy right tail
+            h.record_seconds(s);
+            xs.push((s * 1e6).round() / 1e6); // what the histogram saw
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            let exact = percentile_sorted(&xs, p);
+            let approx = h.quantile(p);
+            // High-edge reporting: at most one bucket (1/64) above, and the
+            // rank convention differs from interpolation by ≤ one sample.
+            let tol = exact * 0.04 + 1e-6;
+            assert!(
+                (approx - exact).abs() <= tol,
+                "p{p}: histogram {approx} vs exact {exact}"
+            );
+        }
+        let exact_mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((h.mean_s() - exact_mean).abs() < 1e-6, "mean is exact");
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroed() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(50.0), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+        assert_eq!(h.max_s(), 0.0);
+    }
+
+    #[test]
+    fn identical_inputs_give_identical_histograms() {
+        let fill = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut h = LatencyHistogram::new();
+            for _ in 0..5_000 {
+                h.record_seconds(rng.lognormal(1.0, 1.0));
+            }
+            h
+        };
+        assert_eq!(fill(3), fill(3));
+        assert_ne!(fill(3), fill(4));
+    }
+}

@@ -1,0 +1,248 @@
+//! QoS reports: the user-facing distillate of a replay.
+//!
+//! One [`QosReport`] per `(policy, arrival model)` replay: counters,
+//! throughput, utilization, and the latency/service percentile ladder
+//! (p50/p95/p99/p99.9) the paper's serving scenario cares about. Reports
+//! serialize to JSON by hand (stable key order, fixed float precision, no
+//! serde) so two replays with the same seed and configuration emit
+//! **byte-identical** documents — the acceptance contract of the replay
+//! subsystem. Wall-clock measurements (scheduler compute) deliberately
+//! never enter the JSON; they go to stderr diagnostics instead.
+
+use super::engine::{LoopMode, ReplayConfig, ReplayOutcome};
+use super::histogram::LatencyHistogram;
+
+/// Percentile ladder of one distribution, seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyStats {
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub p999_s: f64,
+    pub max_s: f64,
+}
+
+impl LatencyStats {
+    pub fn from_histogram(h: &LatencyHistogram) -> LatencyStats {
+        LatencyStats {
+            mean_s: h.mean_s(),
+            p50_s: h.quantile(50.0),
+            p95_s: h.quantile(95.0),
+            p99_s: h.quantile(99.0),
+            p999_s: h.quantile(99.9),
+            max_s: h.max_s(),
+        }
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"mean_s\":{:.6},\"p50_s\":{:.6},\"p95_s\":{:.6},\"p99_s\":{:.6},\"p999_s\":{:.6},\"max_s\":{:.6}}}",
+            self.mean_s, self.p50_s, self.p95_s, self.p99_s, self.p999_s, self.max_s
+        )
+    }
+}
+
+/// The quality-of-service report of one replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QosReport {
+    pub policy: String,
+    pub arrivals: String,
+    pub seed: u64,
+    /// `"open"` or `"closed(cap)"`.
+    pub mode: String,
+    pub n_drives: usize,
+    /// Configured arrival horizon, seconds.
+    pub duration_s: f64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub busy_rejections: u64,
+    pub retries: u64,
+    pub batches: u64,
+    /// Virtual time of the last completion, seconds.
+    pub makespan_s: f64,
+    /// Completions per virtual second over the makespan.
+    pub throughput_rps: f64,
+    pub mean_batch_size: f64,
+    /// Mean fraction of the drive pool busy over the makespan.
+    pub drive_utilization: f64,
+    /// End-to-end latency (queueing + mount + in-tape).
+    pub latency: LatencyStats,
+    /// Mount + in-tape service time (the paper's objective, shifted).
+    pub service: LatencyStats,
+}
+
+impl QosReport {
+    pub fn new(
+        policy: &str,
+        arrivals: &str,
+        seed: u64,
+        duration_s: f64,
+        cfg: &ReplayConfig,
+        outcome: &ReplayOutcome,
+    ) -> QosReport {
+        let s = &outcome.stats;
+        let makespan_s = s.makespan_us as f64 / 1e6;
+        QosReport {
+            policy: policy.to_string(),
+            arrivals: arrivals.to_string(),
+            seed,
+            mode: match cfg.mode {
+                LoopMode::Open => "open".to_string(),
+                LoopMode::Closed { max_in_flight } => format!("closed({max_in_flight})"),
+            },
+            n_drives: cfg.n_drives,
+            duration_s,
+            submitted: s.submitted,
+            completed: s.completed,
+            shed: s.shed,
+            busy_rejections: s.busy_rejections,
+            retries: s.retries,
+            batches: s.batches,
+            makespan_s,
+            throughput_rps: if makespan_s > 0.0 {
+                s.completed as f64 / makespan_s
+            } else {
+                0.0
+            },
+            mean_batch_size: s.completed as f64 / s.batches.max(1) as f64,
+            drive_utilization: if s.makespan_us > 0 {
+                (s.busy_drive_us as f64 / (cfg.n_drives as f64 * s.makespan_us as f64))
+                    .min(1.0)
+            } else {
+                0.0
+            },
+            latency: LatencyStats::from_histogram(&outcome.latency),
+            service: LatencyStats::from_histogram(&outcome.service),
+        }
+    }
+
+    /// Deterministic single-object JSON (stable key order, `%.6f` floats).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"policy\":\"{}\",\"arrivals\":\"{}\",\"seed\":{},\"mode\":\"{}\",\
+             \"drives\":{},\"duration_s\":{:.6},\"submitted\":{},\"completed\":{},\
+             \"shed\":{},\"busy_rejections\":{},\"retries\":{},\"batches\":{},\
+             \"makespan_s\":{:.6},\"throughput_rps\":{:.6},\"mean_batch_size\":{:.6},\
+             \"drive_utilization\":{:.6},\"latency\":{},\"service\":{}}}",
+            esc(&self.policy),
+            esc(&self.arrivals),
+            self.seed,
+            esc(&self.mode),
+            self.n_drives,
+            self.duration_s,
+            self.submitted,
+            self.completed,
+            self.shed,
+            self.busy_rejections,
+            self.retries,
+            self.batches,
+            self.makespan_s,
+            self.throughput_rps,
+            self.mean_batch_size,
+            self.drive_utilization,
+            self.latency.json(),
+            self.service.json(),
+        )
+    }
+}
+
+/// The multi-policy document the `replay` CLI emits: one report per policy,
+/// one line each, wrapped in `{"reports": [...]}`.
+pub fn reports_json(reports: &[QosReport]) -> String {
+    let mut out = String::from("{\"reports\":[\n");
+    for (i, r) in reports.iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(&r.to_json());
+        if i + 1 < reports.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Tape;
+    use crate::replay::arrivals::{PoissonArrivals, RequestMix};
+    use crate::replay::engine::simulate;
+    use crate::sched::Gs;
+
+    fn sample_report(seed: u64) -> QosReport {
+        let catalog = vec![
+            Tape::from_sizes("T0", &[1_000; 40]),
+            Tape::from_sizes("T1", &[500; 80]),
+        ];
+        let cfg = ReplayConfig::default();
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 30.0, 8.0, seed);
+        let outcome = simulate(&cfg, &catalog, &Gs, &mut model);
+        QosReport::new("GS", &model.name(), seed, 8.0, &cfg, &outcome)
+    }
+
+    #[test]
+    fn report_fields_are_consistent() {
+        let r = sample_report(5);
+        assert!(r.completed > 0);
+        assert_eq!(r.completed, r.submitted);
+        assert!(r.makespan_s > 0.0);
+        assert!(r.throughput_rps > 0.0);
+        assert!(r.mean_batch_size >= 1.0);
+        assert!(r.drive_utilization > 0.0 && r.drive_utilization <= 1.0);
+        // The percentile ladder is monotone and capped by the max.
+        let l = &r.latency;
+        assert!(l.p50_s <= l.p95_s && l.p95_s <= l.p99_s && l.p99_s <= l.p999_s);
+        assert!(l.p999_s <= l.max_s + 1e-9);
+        assert!(l.mean_s > 0.0);
+        // Latency dominates service (it includes queueing).
+        assert!(r.latency.mean_s >= r.service.mean_s - 1e-9);
+    }
+
+    #[test]
+    fn json_is_deterministic_and_structured() {
+        let a = sample_report(7);
+        let b = sample_report(7);
+        assert_eq!(a.to_json(), b.to_json(), "same seed ⇒ byte-identical JSON");
+        let doc = reports_json(&[a.clone(), b]);
+        for key in [
+            "\"policy\":\"GS\"",
+            "\"arrivals\":\"poisson(rate=30)\"",
+            "\"p50_s\":",
+            "\"p95_s\":",
+            "\"p99_s\":",
+            "\"p999_s\":",
+            "\"throughput_rps\":",
+            "\"reports\":[",
+        ] {
+            assert!(doc.contains(key), "missing {key} in {doc}");
+        }
+        // Balanced braces/brackets ⇒ structurally sound.
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count());
+        assert_ne!(sample_report(8).to_json(), sample_report(9).to_json());
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(esc("plain"), "plain");
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(esc("x\ny"), "x\\u000ay");
+    }
+}

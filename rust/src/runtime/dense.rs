@@ -5,12 +5,25 @@
 //! artifacts compute, evaluated bottom-up in Rust. Memory and time are
 //! Θ(k·n) and Θ(k²·n) — identical asymptotics to the accelerated path,
 //! with no artifact or feature requirements.
+//!
+//! Dispatch-path allocation discipline: each worker thread keeps one
+//! [`DenseScratch`] (thread-local, the backend itself stays a stateless
+//! `Copy` type shared through `Arc`), so coordinator batches and replay
+//! dispatches on hot tapes reuse the Θ(k·n) buffers instead of allocating
+//! them anew per call; cost-only queries additionally skip the choice
+//! table entirely.
+
+use std::cell::RefCell;
 
 use crate::model::{Cost, Instance};
-use crate::sched::simpledp_dense::{dense_cost, dense_table, reconstruct};
+use crate::sched::simpledp_dense::{dense_cost_into, dense_solve_into, DenseScratch};
 use crate::sched::Schedule;
 
 use super::SimpleDpBackend;
+
+thread_local! {
+    static SCRATCH: RefCell<DenseScratch> = RefCell::new(DenseScratch::default());
+}
 
 /// Pure-Rust dense SimpleDP backend (the default).
 #[derive(Debug, Clone, Copy, Default)]
@@ -22,11 +35,11 @@ impl SimpleDpBackend for DenseBackend {
     }
 
     fn opt_cost(&self, inst: &Instance) -> Cost {
-        dense_cost(inst)
+        SCRATCH.with(|s| dense_cost_into(inst, &mut s.borrow_mut()))
     }
 
     fn opt_schedule(&self, inst: &Instance) -> Schedule {
-        reconstruct(inst, &dense_table(inst))
+        SCRATCH.with(|s| dense_solve_into(inst, &mut s.borrow_mut()).1)
     }
 
     fn accelerates(&self, _inst: &Instance) -> bool {

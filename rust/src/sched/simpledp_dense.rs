@@ -10,6 +10,18 @@
 //! `f64` there.
 //!
 //! Memory/time are Θ(k·n) and Θ(k²·n): use for moderate instances only.
+//!
+//! ## Allocation discipline
+//!
+//! A literal two-row rolling wavefront is **impossible** for this
+//! recurrence: the detour branch of row `b` reads row `c−1` for every
+//! `c ≤ b`, so all earlier value rows stay live. What hot dispatch paths
+//! (coordinator drive workers, the replay engine) *can* avoid paying per
+//! call is (a) the choice table when only the cost is consumed — see
+//! [`dense_cost_into`], which runs the wavefront value-only — and (b) the
+//! Θ(k·n) allocation itself: [`DenseScratch`] keeps the buffers alive
+//! across calls, so repeated dispatches on hot tapes reuse capacity
+//! instead of round-tripping the allocator ([`dense_solve_into`]).
 
 use crate::model::{virtual_lb, Cost, Instance};
 use crate::sched::{Detour, Schedule};
@@ -31,20 +43,34 @@ impl DenseTable {
     pub fn at(&self, b: usize, ns: usize) -> Cost {
         self.t[b * (self.ns_max + 1) + ns]
     }
-
-    #[inline]
-    fn choice_at(&self, b: usize, ns: usize) -> u32 {
-        self.choice[b * (self.ns_max + 1) + ns]
-    }
 }
 
-/// Compute the dense SimpleDP table bottom-up (wavefront over `b`).
-pub fn dense_table(inst: &Instance) -> DenseTable {
+/// Reusable buffers for dense evaluations. Capacity survives across calls,
+/// so a hot caller pays the Θ(k·n) allocation once, not per dispatch.
+#[derive(Debug, Default)]
+pub struct DenseScratch {
+    t: Vec<Cost>,
+    choice: Vec<u32>,
+}
+
+/// The wavefront core: fill `t` (and, when `TRACK`, `choice`) bottom-up.
+/// The const generic folds the decision bookkeeping out of the inner loop
+/// entirely for cost-only queries. Buffers are cleared and resized here;
+/// their capacity is reused.
+fn fill_dense<const TRACK: bool>(
+    inst: &Instance,
+    t: &mut Vec<Cost>,
+    choice: &mut Vec<u32>,
+) -> usize {
     let k = inst.k();
     let ns_max = inst.n() as usize;
     let width = ns_max + 1;
-    let mut t = vec![0 as Cost; k * width];
-    let mut choice = vec![SKIP; k * width];
+    t.clear();
+    t.resize(k * width, 0);
+    if TRACK {
+        choice.clear();
+        choice.resize(k * width, SKIP);
+    }
 
     // Base row b = 0: T[0, ns] = 2·s(0)·ns.
     for ns in 0..width {
@@ -55,18 +81,17 @@ pub fn dense_table(inst: &Instance) -> DenseTable {
     for b in 1..k {
         let (prev_rows, row) = t.split_at_mut(b * width);
         let row = &mut row[..width];
-        let crow = &mut choice[b * width..(b + 1) * width];
         let xb = inst.x(b) as usize;
         let gap2 = 2 * (inst.r(b) - inst.r(b - 1)) as Cost;
         let lead2 = 2 * (inst.l(b) - inst.r(b - 1)) as Cost * inst.x(b) as Cost;
 
         // skip branch — shifted read of row b−1 (clamped at the edge; the
         // clamped cells are unreachable from the root where Σ skipped ≤ n).
+        // The choice row is already SKIP from the resize above.
         let prev = &prev_rows[(b - 1) * width..];
         for ns in 0..width {
             let shifted = (ns + xb).min(ns_max);
             row[ns] = prev[shifted] + gap2 * ns as Cost + lead2;
-            crow[ns] = SKIP;
         }
         // detour_c branches.
         for c in 1..=b {
@@ -82,29 +107,53 @@ pub fn dense_table(inst: &Instance) -> DenseTable {
                     + inner2;
                 if v < row[ns] {
                     row[ns] = v;
-                    crow[ns] = c as u32;
+                    if TRACK {
+                        choice[b * width + ns] = c as u32;
+                    }
                 }
             }
         }
     }
-    DenseTable { k, ns_max, t, choice }
+    width
 }
 
-/// Optimal disjoint-detour cost from a dense table.
+/// Compute the dense SimpleDP table bottom-up (wavefront over `b`).
+pub fn dense_table(inst: &Instance) -> DenseTable {
+    let mut t = Vec::new();
+    let mut choice = Vec::new();
+    fill_dense::<true>(inst, &mut t, &mut choice);
+    DenseTable { k: inst.k(), ns_max: inst.n() as usize, t, choice }
+}
+
+/// Optimal disjoint-detour cost (value wavefront only, no choice table).
 pub fn dense_cost(inst: &Instance) -> Cost {
-    let tbl = dense_table(inst);
-    tbl.at(inst.k() - 1, 0) + virtual_lb(inst)
+    dense_cost_into(inst, &mut DenseScratch::default())
 }
 
-/// Reconstruct the schedule from a dense table (same walk as the sparse
-/// solver). Exposed so the XLA runtime can reconstruct from its own table.
-pub fn reconstruct(inst: &Instance, tbl: &DenseTable) -> Schedule {
+/// [`dense_cost`] writing into reusable buffers: no choice table, and the
+/// value table reuses `scratch`'s capacity.
+pub fn dense_cost_into(inst: &Instance, scratch: &mut DenseScratch) -> Cost {
+    let width = fill_dense::<false>(inst, &mut scratch.t, &mut scratch.choice);
+    scratch.t[(inst.k() - 1) * width] + virtual_lb(inst)
+}
+
+/// Optimal cost **and** schedule, writing into reusable buffers.
+pub fn dense_solve_into(inst: &Instance, scratch: &mut DenseScratch) -> (Cost, Schedule) {
+    let width = fill_dense::<true>(inst, &mut scratch.t, &mut scratch.choice);
+    let cost = scratch.t[(inst.k() - 1) * width] + virtual_lb(inst);
+    (cost, reconstruct_choices(inst, &scratch.choice, width - 1))
+}
+
+/// Walk a choice table root-down into the detour list (the values are not
+/// needed — decisions alone determine the schedule).
+fn reconstruct_choices(inst: &Instance, choice: &[u32], ns_max: usize) -> Schedule {
+    let width = ns_max + 1;
     let mut detours = Vec::new();
     let (mut b, mut ns) = (inst.k() - 1, 0usize);
     while b > 0 {
-        let ch = tbl.choice_at(b, ns);
+        let ch = choice[b * width + ns];
         if ch == SKIP {
-            ns = (ns + inst.x(b) as usize).min(tbl.ns_max);
+            ns = (ns + inst.x(b) as usize).min(ns_max);
             b -= 1;
         } else {
             let c = ch as usize;
@@ -113,6 +162,12 @@ pub fn reconstruct(inst: &Instance, tbl: &DenseTable) -> Schedule {
         }
     }
     detours
+}
+
+/// Reconstruct the schedule from a dense table (same walk as the sparse
+/// solver). Exposed so the XLA runtime can reconstruct from its own table.
+pub fn reconstruct(inst: &Instance, tbl: &DenseTable) -> Schedule {
+    reconstruct_choices(inst, &tbl.choice, tbl.ns_max)
 }
 
 /// Reconstruct a schedule from raw table values only (no choice array) by
@@ -220,6 +275,31 @@ mod tests {
             let sched = reconstruct(&i, &tbl);
             assert_eq!(evaluate(&i, &sched).cost, dense_cost(&i), "instance {i:?}");
         }
+    }
+
+    #[test]
+    fn scratch_paths_match_the_full_table_and_survive_reuse() {
+        // One scratch across instances of different shapes (grow, shrink,
+        // grow again): cost-only and solve paths must keep agreeing with
+        // the freshly-allocated table and the sparse solver.
+        let mut scratch = DenseScratch::default();
+        let mut order = fixtures();
+        order.reverse();
+        for pass in 0..2 {
+            for i in &order {
+                let expected = SimpleDp::cost(i);
+                assert_eq!(dense_cost_into(i, &mut scratch), expected, "pass {pass}");
+                let (cost, sched) = dense_solve_into(i, &mut scratch);
+                assert_eq!(cost, expected);
+                assert_eq!(evaluate(i, &sched).cost, expected);
+            }
+        }
+        // The single-request edge case (k = 1, no wavefront rows).
+        let tiny = inst(4, &[(10, 20, 17)], 50);
+        assert_eq!(dense_cost_into(&tiny, &mut scratch), SimpleDp::cost(&tiny));
+        let (c, s) = dense_solve_into(&tiny, &mut scratch);
+        assert_eq!(c, SimpleDp::cost(&tiny));
+        assert!(s.is_empty());
     }
 
     #[test]

@@ -84,6 +84,7 @@ fn coordinator_full_stack_improves_with_better_policy() {
                 batcher: BatcherConfig {
                     window: std::time::Duration::from_millis(1),
                     max_batch: 512,
+                    ..BatcherConfig::default()
                 },
                 drive: DriveParams::default(),
             },
@@ -96,7 +97,9 @@ fn coordinator_full_stack_improves_with_better_policy() {
             let t = &ds.tapes[rng.below(ds.tapes.len() as u64) as usize];
             // Skewed file popularity: detours earn their keep.
             let f = rng.zipf(t.tape.n_files() as u64, 1.2) as usize - 1;
-            assert!(coord.submit(ReadRequest { id, tape: t.tape.name.clone(), file_index: f }));
+            assert!(coord
+                .submit(ReadRequest { id, tape: t.tape.name.clone(), file_index: f })
+                .is_ok());
         }
         let (completions, m) = coord.finish();
         assert_eq!(completions.len() as u64, n);

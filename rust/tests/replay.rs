@@ -1,0 +1,176 @@
+//! Integration tests for the workload-replay subsystem: end-to-end
+//! determinism, histogram percentiles against exact quantiles on real
+//! replay data, and the `Busy`-retry path against the live coordinator.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use tapesched::dataset::{generate_dataset, GeneratorConfig};
+use tapesched::model::Tape;
+use tapesched::replay::{
+    drive_closed_loop, reports_json, run_replay, LoopMode, PoissonArrivals, ReplayConfig,
+    RequestMix,
+};
+use tapesched::sched::scheduler_by_name;
+use tapesched::sim::DriveParams;
+use tapesched::util::stats::percentile_sorted;
+
+fn small_catalog(n_tapes: usize) -> Vec<Tape> {
+    let ds = generate_dataset(&GeneratorConfig {
+        n_tapes,
+        nf: (30, 60.0, 70.0, 120),
+        nreq: (5, 10.0, 12.0, 20),
+        n: (10, 30.0, 40.0, 80),
+        ..Default::default()
+    });
+    ds.tapes.iter().map(|t| t.tape.clone()).collect()
+}
+
+fn fast_cfg(mode: LoopMode) -> ReplayConfig {
+    ReplayConfig {
+        n_drives: 4,
+        batcher: BatcherConfig {
+            window: Duration::from_millis(100),
+            max_batch: 256,
+            ..BatcherConfig::default()
+        },
+        drive: DriveParams {
+            mount_s: 2.0,
+            unmount_s: 1.0,
+            bytes_per_s: 1e9,
+            uturn_s: 0.1,
+        },
+        mode,
+        retry_backoff_s: 0.02,
+    }
+}
+
+/// The acceptance contract: the same seed and configuration produce an
+/// identical completion log, identical percentiles, and byte-identical
+/// JSON — across policies.
+#[test]
+fn replay_is_deterministic_end_to_end() {
+    let catalog = small_catalog(6);
+    let cfg = fast_cfg(LoopMode::Open);
+    let run = |policy_name: &str| {
+        let policy = scheduler_by_name(policy_name).unwrap();
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 50.0, 10.0, 7);
+        run_replay(&cfg, &catalog, policy.as_ref(), &mut model, 7, 10.0)
+    };
+    for policy in ["GS", "SimpleDP", "DP"] {
+        let (ra, oa) = run(policy);
+        let (rb, ob) = run(policy);
+        assert!(ra.completed > 300, "{policy}: expected ~500 requests");
+        assert_eq!(oa.completions, ob.completions, "{policy}: completion log differs");
+        assert_eq!(ra, rb, "{policy}: QoS reports differ");
+        assert_eq!(
+            reports_json(&[ra]),
+            reports_json(&[rb]),
+            "{policy}: JSON must be byte-identical"
+        );
+    }
+}
+
+/// Replay percentiles come from the log-bucketed histogram; on real replay
+/// latencies they must track the exact sorted-vector quantiles within the
+/// bucket resolution.
+#[test]
+fn report_percentiles_track_exact_quantiles() {
+    let catalog = small_catalog(8);
+    let cfg = fast_cfg(LoopMode::Open);
+    let policy = scheduler_by_name("SimpleDP").unwrap();
+    let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 80.0, 15.0, 11);
+    let (report, outcome) =
+        run_replay(&cfg, &catalog, policy.as_ref(), &mut model, 11, 15.0);
+    let mut lat: Vec<f64> =
+        outcome.completions.iter().map(|c| c.latency_us as f64 / 1e6).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!(lat.len() > 500, "need a real sample, got {}", lat.len());
+    for (p, got) in [
+        (50.0, report.latency.p50_s),
+        (95.0, report.latency.p95_s),
+        (99.0, report.latency.p99_s),
+        (99.9, report.latency.p999_s),
+    ] {
+        // The histogram reports the high edge of the bucket holding the
+        // ⌈p/100·n⌉-th smallest sample: bracket it exactly.
+        let rank = ((p / 100.0) * lat.len() as f64).ceil().max(1.0) as usize;
+        let exact = lat[rank - 1];
+        assert!(
+            got >= exact - 1e-9 && got <= exact * (1.0 + 1.0 / 64.0) + 1e-5,
+            "p{p}: report {got} outside [{exact}, {exact}·(1+1/64)] (n={})",
+            lat.len()
+        );
+        // And it stays close to the interpolated quantile, the user-facing
+        // claim (one order statistic + one bucket of slack).
+        let interp = percentile_sorted(&lat, p);
+        assert!(
+            (got - interp).abs() <= interp * 0.05 + 1e-5,
+            "p{p}: report {got} vs interpolated {interp}"
+        );
+    }
+    let exact_mean = lat.iter().sum::<f64>() / lat.len() as f64;
+    assert!((report.latency.mean_s - exact_mean).abs() < 1e-5, "mean is exact");
+    assert_eq!(report.completed as usize, lat.len());
+}
+
+/// Closed-loop virtual replay against a saturated single tape: the
+/// backpressure bound rejects, the driver retries, nothing is lost.
+#[test]
+fn closed_loop_replay_exercises_busy_retry() {
+    let catalog = vec![Tape::from_sizes("HOT", &[10_000; 64])];
+    let mut cfg = fast_cfg(LoopMode::Closed { max_in_flight: 16 });
+    cfg.n_drives = 1;
+    cfg.batcher.max_tape_backlog = 6;
+    let policy = scheduler_by_name("GS").unwrap();
+    let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 150.0, 6.0, 3);
+    let (report, outcome) =
+        run_replay(&cfg, &catalog, policy.as_ref(), &mut model, 3, 6.0);
+    assert!(report.busy_rejections > 0, "backlog 6 under cap 16 must reject");
+    assert_eq!(report.retries, report.busy_rejections, "every Busy retries once");
+    assert_eq!(report.shed, 0, "closed loop never shed");
+    assert_eq!(report.completed, report.submitted);
+    assert_eq!(outcome.completions.len() as u64, report.completed);
+}
+
+/// The live (wall-clock) side of the same contract: a real coordinator
+/// with a tight backlog bound pushes `Busy` back to the closed-loop
+/// driver, which retries until every request lands.
+#[test]
+fn live_coordinator_busy_retry_roundtrip() {
+    let tapes = vec![Tape::from_sizes("HOT", &[1_000; 50])];
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            n_drives: 1,
+            batcher: BatcherConfig {
+                // Window-gated (no size-cap closes): each window drains at
+                // most one 8-request batch, so the blasting driver is
+                // *guaranteed* to hit the backlog bound in between.
+                window: Duration::from_millis(50),
+                max_batch: 4096,
+                max_tape_backlog: 8,
+            },
+            drive: DriveParams::default(),
+        },
+        tapes.clone(),
+        Arc::new(tapesched::sched::Gs),
+    );
+    let mut model =
+        PoissonArrivals::new(RequestMix::new(&tapes), 1_000.0, f64::INFINITY, 5);
+    let stats = drive_closed_loop(
+        &coord,
+        &tapes,
+        &mut model,
+        64, // in-flight cap above the backlog bound, so Busy must fire
+        Duration::from_millis(1),
+        120,
+    );
+    assert_eq!(stats.submitted, 120, "every request lands after retries");
+    assert!(stats.busy_retries > 0, "backlog 8 must push back at this pace");
+    assert_eq!(stats.dropped, 0);
+    let (completions, m) = coord.finish();
+    assert_eq!(completions.len(), 120);
+    assert_eq!(m.completed, 120);
+    assert_eq!(m.rejected, stats.busy_retries);
+}

@@ -21,4 +21,21 @@ cargo test -q
 cargo bench --no-run
 cargo build --examples
 
+# Replay gate: a seeded 2-second virtual replay must emit a parseable,
+# non-empty QoS report with a sane percentile ladder per policy.
+./target/release/tapesched replay --arrivals poisson --rate 50 --duration 2 \
+    --policy GS,SimpleDP --seed 7 --tapes 12 --out /tmp/replay_ci.json
+python3 - /tmp/replay_ci.json <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+reports = doc["reports"]
+assert reports, "no QoS reports emitted"
+for r in reports:
+    assert r["completed"] > 0, f"policy {r['policy']} completed nothing"
+    lat = r["latency"]
+    assert 0 <= lat["p50_s"] <= lat["p95_s"] <= lat["p99_s"] <= lat["p999_s"], lat
+print(f"ci: replay smoke OK ({len(reports)} policies)")
+EOF
+
 echo "ci: all gates green"
