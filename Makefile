@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test benches bench-smoke replay-smoke examples fmt fmt-check artifacts ci clean
+.PHONY: verify build test benches bench-smoke replay-smoke shard-smoke examples fmt fmt-check artifacts ci clean
 
 verify: ## tier-1 gate: release build + full test suite
 	$(CARGO) build --release
@@ -36,6 +36,16 @@ replay-smoke: build
 	./target/release/tapesched replay --arrivals poisson --rate 50 --duration 2 \
 		--policy GS,SimpleDP --seed 7 --tapes 12 --out results/replay-smoke.json
 	@echo "replay-smoke: results/replay-smoke.json"
+
+# Sharded replay gate: 4 libraries behind the consistent-hash router (the
+# --smoke preset: 2 virtual seconds at 100 rps over 48 tapes); the QoS JSON
+# with its per-shard breakdown lands in results/ (byte-identical for a
+# fixed seed).
+shard-smoke: build
+	mkdir -p results
+	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+		--out results/shard-smoke.json
+	@echo "shard-smoke: results/shard-smoke.json"
 
 examples:
 	$(CARGO) build --examples

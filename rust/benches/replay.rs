@@ -43,11 +43,44 @@ fn main() {
         drive: DriveParams::default(),
         mode: LoopMode::Open,
         retry_backoff_s: 0.01,
+        ..ReplayConfig::default()
     };
 
     let (rate, duration) = if smoke { (50.0, 2.0) } else { (100.0, 120.0) };
     let policies: &[&str] = if smoke { &["SimpleDP"] } else { &["GS", "SimpleDP", "LogDP(1)"] };
     let arrivals: &[&str] = if smoke { &["poisson"] } else { &["poisson", "bursty"] };
+
+    // Sharded replay: the same offered load over 1 vs 4 libraries (drive
+    // pool scaled down so the fleet keeps 8 drives total) — measures the
+    // routing layer's overhead and the per-shard batching win.
+    for n_shards in [1usize, 4] {
+        let shard_cfg = ReplayConfig {
+            n_drives: 8 / n_shards,
+            n_shards,
+            ..cfg.clone()
+        };
+        let policy = scheduler_by_name("SimpleDP").unwrap();
+        let mut model = PoissonArrivals::new(mix.clone(), rate, duration, 7);
+        let wall = Instant::now();
+        let out = simulate(&shard_cfg, &catalog, policy.as_ref(), &mut model);
+        let s = wall.elapsed().as_secs_f64();
+        assert!(out.stats.completed > 0, "sharded replay must serve requests");
+        assert_eq!(out.per_shard.len(), n_shards);
+        suite.record(BenchResult {
+            name: format!("replay/sharded_{n_shards}x{}drives/SimpleDP", 8 / n_shards),
+            iters: 1,
+            median: s,
+            mean: s,
+            p10: s,
+            p90: s,
+        });
+        println!(
+            "    → shards={n_shards}: {} requests in {:.3} wall s ({:.0} req/wall-s)",
+            out.stats.completed,
+            s,
+            out.stats.completed as f64 / s.max(1e-9),
+        );
+    }
 
     for policy_name in policies.iter().copied() {
         let policy = scheduler_by_name(policy_name).unwrap();

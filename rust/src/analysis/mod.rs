@@ -1,11 +1,12 @@
 //! Evaluation harness: per-instance algorithm costs, Dolan–Moré performance
 //! profiles (the §5.3 methodology), CSV/report writers for Figures 14–16,
-//! and the cross-policy QoS comparison for replay runs.
+//! the cross-policy QoS comparison for replay runs, and the shard-imbalance
+//! summary for sharded (multi-library) replays.
 
 pub mod profile;
 pub mod report;
 pub mod svg;
 
 pub use profile::{performance_profile, ProfileCurve, ProfilePoint};
-pub use report::{qos_comparison, run_evaluation, EvalRecord, EvalTable};
+pub use report::{qos_comparison, run_evaluation, shard_summary, EvalRecord, EvalTable};
 pub use svg::trajectory_svg;

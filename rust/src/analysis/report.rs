@@ -189,6 +189,52 @@ pub fn qos_comparison(reports: &[QosReport]) -> String {
     out
 }
 
+/// Shard-imbalance summary for a sharded replay report: one row per
+/// library shard (tapes owned, ring key-space share, load, tail latency,
+/// utilization) plus the imbalance footer — max/min shard load and the
+/// ring spread extremes. This is the fleet-partitioning diagnostic: per
+/// the sharding literature, fleet service time is dominated by how
+/// requests split across devices *before* any per-device ordering runs.
+pub fn shard_summary(r: &QosReport) -> String {
+    let mut out = format!(
+        "{:<6} {:>6} {:>7} {:>10} {:>8} {:>6} {:>9} {:>9} {:>6}\n",
+        "shard", "tapes", "share%", "completed", "batches", "shed", "p99 lat", "p99.9", "util%"
+    );
+    for s in &r.shards {
+        out.push_str(&format!(
+            "{:<6} {:>6} {:>7.2} {:>10} {:>8} {:>6} {:>9.1} {:>9.1} {:>6.1}\n",
+            s.shard,
+            s.tapes,
+            s.ring_share * 100.0,
+            s.completed,
+            s.batches,
+            s.shed,
+            s.latency.p99_s,
+            s.latency.p999_s,
+            s.drive_utilization * 100.0,
+        ));
+    }
+    let max = r.shards.iter().map(|s| s.completed).max().unwrap_or(0);
+    let min = r.shards.iter().map(|s| s.completed).min().unwrap_or(0);
+    let ratio = if min > 0 {
+        format!("{:.2}", max as f64 / min as f64)
+    } else if max > 0 {
+        "inf".to_string()
+    } else {
+        "1.00".to_string()
+    };
+    let share_max =
+        r.shards.iter().map(|s| s.ring_share).fold(f64::NEG_INFINITY, f64::max);
+    let share_min = r.shards.iter().map(|s| s.ring_share).fold(f64::INFINITY, f64::min);
+    out.push_str(&format!(
+        "imbalance: max/min shard load = {max}/{min} (ratio {ratio}); \
+         ring spread ∈ [{:.2}%, {:.2}%]\n",
+        share_min * 100.0,
+        share_max * 100.0,
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +336,24 @@ mod tests {
         assert!(lines[0].contains("p99"));
         assert!(lines[1].starts_with("GS"));
         assert!(lines[2].starts_with("SimpleDP"));
+    }
+
+    #[test]
+    fn shard_summary_renders_one_row_per_shard_plus_footer() {
+        use crate::model::Tape;
+        use crate::replay::{run_replay, PoissonArrivals, ReplayConfig, RequestMix};
+        let catalog: Vec<Tape> =
+            (0..12).map(|i| Tape::from_sizes(format!("T{i:02}"), &[1_000; 30])).collect();
+        let cfg = ReplayConfig { n_shards: 3, vnodes: 64, ..ReplayConfig::default() };
+        let p = crate::sched::scheduler_by_name("GS").unwrap();
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 20.0, 5.0, 3);
+        let (r, _) = run_replay(&cfg, &catalog, p.as_ref(), &mut model, 3, 5.0);
+        let table = shard_summary(&r);
+        let lines: Vec<&str> = table.lines().collect();
+        assert_eq!(lines.len(), 1 + 3 + 1, "header + one row per shard + footer:\n{table}");
+        assert!(lines[0].contains("share%"));
+        assert!(lines.last().unwrap().starts_with("imbalance:"));
+        assert!(lines.last().unwrap().contains("ring spread"));
     }
 
     #[test]

@@ -1,0 +1,158 @@
+//! Cluster-level metrics: per-shard coordinator snapshots plus routing
+//! counters, rolled up into one fleet view.
+//!
+//! The rollup is pure arithmetic over [`MetricsSnapshot`]s — counters add,
+//! means combine completion-weighted — so it can serve both the live
+//! [`super::Cluster`] and any offline aggregation of per-shard snapshots.
+//! Percentiles deliberately do **not** roll up here: a fleet percentile
+//! cannot be derived from per-shard percentiles (only from the merged
+//! sample), which is exactly why the replay engine keeps separate fleet
+//! and per-shard histograms.
+
+use crate::coordinator::MetricsSnapshot;
+
+/// One shard's contribution: its id, how many submissions the router sent
+/// its way, and its coordinator's own metrics snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardLoad {
+    /// Ring shard id (stable across membership changes).
+    pub shard: usize,
+    /// Submissions the cluster router directed at this shard (accepted or
+    /// not — rejected submissions still count as routed).
+    pub routed: u64,
+    pub metrics: MetricsSnapshot,
+}
+
+/// Point-in-time rollup of a whole cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterMetricsSnapshot {
+    /// Per-shard loads, ascending by shard id.
+    pub shards: Vec<ShardLoad>,
+    pub routed_total: u64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    /// Accepted requests shed at dispatch (tape deregistered mid-flight —
+    /// see `MetricsSnapshot::shed`).
+    pub shed: u64,
+    pub batches: u64,
+    /// Completion-weighted mean end-to-end latency, seconds.
+    pub mean_latency_s: f64,
+    /// Completion-weighted mean in-tape service time, seconds.
+    pub mean_service_s: f64,
+    /// Largest / smallest per-shard completion count — the load-imbalance
+    /// extremes the routing layer is judged on.
+    pub max_shard_completed: u64,
+    pub min_shard_completed: u64,
+}
+
+impl ClusterMetricsSnapshot {
+    /// `max/min` completed across shards: 1.0 for a perfectly balanced (or
+    /// empty) cluster, `∞` when some shard served nothing while another
+    /// served something.
+    pub fn imbalance_ratio(&self) -> f64 {
+        if self.max_shard_completed == 0 {
+            1.0
+        } else if self.min_shard_completed == 0 {
+            f64::INFINITY
+        } else {
+            self.max_shard_completed as f64 / self.min_shard_completed as f64
+        }
+    }
+}
+
+/// Roll per-shard loads up into one [`ClusterMetricsSnapshot`].
+pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
+    shards.sort_by_key(|s| s.shard);
+    let mut snap = ClusterMetricsSnapshot {
+        shards: Vec::new(),
+        routed_total: 0,
+        submitted: 0,
+        completed: 0,
+        rejected: 0,
+        shed: 0,
+        batches: 0,
+        mean_latency_s: 0.0,
+        mean_service_s: 0.0,
+        max_shard_completed: 0,
+        min_shard_completed: u64::MAX,
+    };
+    let (mut lat_sum, mut svc_sum) = (0.0f64, 0.0f64);
+    for s in &shards {
+        snap.routed_total += s.routed;
+        snap.submitted += s.metrics.submitted;
+        snap.completed += s.metrics.completed;
+        snap.rejected += s.metrics.rejected;
+        snap.shed += s.metrics.shed;
+        snap.batches += s.metrics.batches;
+        lat_sum += s.metrics.mean_latency_s * s.metrics.completed as f64;
+        svc_sum += s.metrics.mean_service_s * s.metrics.completed as f64;
+        snap.max_shard_completed = snap.max_shard_completed.max(s.metrics.completed);
+        snap.min_shard_completed = snap.min_shard_completed.min(s.metrics.completed);
+    }
+    if shards.is_empty() {
+        snap.min_shard_completed = 0;
+    }
+    if snap.completed > 0 {
+        snap.mean_latency_s = lat_sum / snap.completed as f64;
+        snap.mean_service_s = svc_sum / snap.completed as f64;
+    }
+    snap.shards = shards;
+    snap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(submitted: u64, completed: u64, rejected: u64, lat: f64, svc: f64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted,
+            completed,
+            rejected,
+            shed: 0,
+            batches: completed / 2,
+            mean_latency_s: lat,
+            mean_service_s: svc,
+            mean_sched_s_per_batch: 0.0,
+            p50_latency_s: lat,
+            p99_latency_s: lat,
+        }
+    }
+
+    #[test]
+    fn rollup_adds_counters_and_weights_means() {
+        let snap = rollup(vec![
+            ShardLoad { shard: 1, routed: 40, metrics: m(30, 30, 10, 4.0, 2.0) },
+            ShardLoad { shard: 0, routed: 12, metrics: m(10, 10, 2, 1.0, 0.5) },
+        ]);
+        // Sorted by shard id regardless of input order.
+        assert_eq!(snap.shards[0].shard, 0);
+        assert_eq!(snap.shards[1].shard, 1);
+        assert_eq!(snap.routed_total, 52);
+        assert_eq!(snap.submitted, 40);
+        assert_eq!(snap.completed, 40);
+        assert_eq!(snap.rejected, 12);
+        // Weighted means: (30·4 + 10·1)/40 = 3.25; (30·2 + 10·0.5)/40.
+        assert!((snap.mean_latency_s - 3.25).abs() < 1e-12);
+        assert!((snap.mean_service_s - 1.625).abs() < 1e-12);
+        assert_eq!(snap.max_shard_completed, 30);
+        assert_eq!(snap.min_shard_completed, 10);
+        assert!((snap.imbalance_ratio() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_idle_rollups_are_sane() {
+        let empty = rollup(Vec::new());
+        assert_eq!(empty.completed, 0);
+        assert_eq!(empty.min_shard_completed, 0);
+        assert_eq!(empty.imbalance_ratio(), 1.0);
+
+        let idle = rollup(vec![
+            ShardLoad { shard: 0, routed: 0, metrics: m(0, 0, 0, 0.0, 0.0) },
+            ShardLoad { shard: 1, routed: 5, metrics: m(5, 5, 0, 2.0, 1.0) },
+        ]);
+        assert_eq!(idle.min_shard_completed, 0);
+        assert_eq!(idle.imbalance_ratio(), f64::INFINITY);
+    }
+}

@@ -1,0 +1,46 @@
+//! The multi-library cluster layer — many tape libraries behind one
+//! consistent-hash router.
+//!
+//! The paper's evaluation logs come from a datacenter mass-storage system
+//! that spans many tape libraries served concurrently; a single
+//! [`crate::coordinator::Coordinator`] models one library. This subsystem
+//! scales the serving layer out: requests are partitioned across
+//! libraries *before* any per-device ordering runs — which is where
+//! fleet-level service time is won or lost (Bachmat; Cardonha & Villa
+//! Real) — by consistent-hashing tape names onto shards.
+//!
+//! ```text
+//!                         ┌──────────────────────────────┐
+//!   clients ──submit──▶   │  Cluster router (HashRing)   │
+//!                         │  tape name ─▶ shard id       │
+//!                         └──┬─────────┬─────────┬───────┘
+//!                            ▼         ▼         ▼
+//!                       [Coordinator][Coordinator][Coordinator]
+//!                        library 0    library 1    library 2
+//!                        (batcher +   (batcher +   (batcher +
+//!                         drive pool)  drive pool)  drive pool)
+//!                            │         │         │
+//!                            └────┬────┴────┬────┘
+//!                                 ▼         ▼
+//!                        [ClusterMetricsSnapshot rollup]
+//! ```
+//!
+//! - [`ring`] — the deterministic consistent-hash ring (virtual nodes,
+//!   bounded key movement on shard add/remove).
+//! - [`router`] — [`Cluster`]: N independent coordinators, per-shard
+//!   `SubmitError::Busy` backpressure, live add/remove for rebalancing.
+//! - [`metrics`] — per-shard loads + routing counters rolled up into one
+//!   fleet snapshot.
+//!
+//! The replay engine mirrors this layout in virtual time
+//! ([`crate::replay`] with `ReplayConfig::n_shards > 1`): one batcher and
+//! one simulated drive pool per shard behind the same ring, producing the
+//! per-shard QoS breakdown in [`crate::replay::QosReport`].
+
+pub mod metrics;
+pub mod ring;
+pub mod router;
+
+pub use metrics::{rollup, ClusterMetricsSnapshot, ShardLoad};
+pub use ring::HashRing;
+pub use router::{Cluster, ClusterConfig};

@@ -1,0 +1,190 @@
+//! Consistent-hash ring over tape names.
+//!
+//! Tapes are the unit of placement: a tape lives in exactly one library
+//! (shard), because a cartridge can only be mounted by drives of the
+//! library that physically holds it. The ring maps tape *names* onto
+//! shards through the classic virtual-node construction: every shard owns
+//! `vnodes` pseudo-random points on a `u64` circle, and a key routes to
+//! the shard owning the first point at or after the key's hash (wrapping).
+//!
+//! Properties the rest of the crate builds on:
+//!
+//! - **Determinism** — points and key hashes come from
+//!   [`crate::util::hash::stable_hash64`] (no per-process seeding), so the
+//!   same construction sequence routes every key identically across runs,
+//!   processes, and platforms. Replay reports stay byte-reproducible.
+//! - **Bounded movement** — adding a shard to an `N`-shard ring only
+//!   *steals* arcs for the new shard: every remapped key moves **to** the
+//!   newcomer, and in expectation only `keys/(N+1)` keys move (the vnode
+//!   count controls the variance). Removing a shard only remaps the keys
+//!   it owned. Both are exercised by `tests/cluster.rs`.
+//! - **Stable shard ids** — ids are assigned by a monotone counter and
+//!   survive unrelated add/remove operations, so per-shard metrics can be
+//!   tracked across membership changes.
+
+use crate::util::hash::stable_hash64;
+
+/// A consistent-hash ring: `vnodes` points per shard on the `u64` circle.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    vnodes: usize,
+    /// Ring points sorted by `(point, shard)`; ties (astronomically rare)
+    /// break toward the smaller shard id, deterministically.
+    points: Vec<(u64, usize)>,
+    /// Live shard ids, in id order (ids are assigned monotonically).
+    shard_ids: Vec<usize>,
+    next_shard: usize,
+}
+
+impl HashRing {
+    /// A fresh ring with shards `0..n_shards`, each owning `vnodes` points.
+    pub fn new(n_shards: usize, vnodes: usize) -> HashRing {
+        assert!(n_shards > 0, "a ring needs at least one shard");
+        assert!(vnodes > 0, "a shard needs at least one virtual node");
+        let mut ring = HashRing {
+            vnodes,
+            points: Vec::with_capacity(n_shards * vnodes),
+            shard_ids: Vec::with_capacity(n_shards),
+            next_shard: 0,
+        };
+        for _ in 0..n_shards {
+            ring.add_shard();
+        }
+        ring
+    }
+
+    /// Add one shard; returns its id. Only keys landing on the new shard's
+    /// arcs move — everything else keeps its owner (bounded key movement).
+    pub fn add_shard(&mut self) -> usize {
+        let id = self.next_shard;
+        self.next_shard += 1;
+        self.shard_ids.push(id);
+        for v in 0..self.vnodes {
+            let entry = (stable_hash64(format!("shard{id}:vnode{v}").as_bytes()), id);
+            let pos = self.points.partition_point(|&p| p < entry);
+            self.points.insert(pos, entry);
+        }
+        id
+    }
+
+    /// Remove a shard (its keys redistribute to the arcs' successors).
+    /// Returns `false` when the id is not live. The last shard cannot be
+    /// removed — the ring would route nothing.
+    pub fn remove_shard(&mut self, id: usize) -> bool {
+        let Some(pos) = self.shard_ids.iter().position(|&s| s == id) else {
+            return false;
+        };
+        assert!(self.shard_ids.len() > 1, "cannot remove the last shard");
+        self.shard_ids.remove(pos);
+        self.points.retain(|&(_, s)| s != id);
+        true
+    }
+
+    /// Route a key (a tape name) to its owning shard id.
+    pub fn route(&self, key: &str) -> usize {
+        let h = stable_hash64(key.as_bytes());
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        let idx = if i == self.points.len() { 0 } else { i };
+        self.points[idx].1
+    }
+
+    /// Live shard ids, ascending.
+    pub fn shard_ids(&self) -> &[usize] {
+        &self.shard_ids
+    }
+
+    /// Number of live shards.
+    pub fn n_shards(&self) -> usize {
+        self.shard_ids.len()
+    }
+
+    /// Virtual nodes per shard.
+    pub fn vnodes_per_shard(&self) -> usize {
+        self.vnodes
+    }
+
+    /// Fraction of the `u64` key space owned per live shard, aligned with
+    /// [`HashRing::shard_ids`]. Sums to 1; the per-shard deviation from
+    /// `1/n` is the ring's intrinsic imbalance (shrinks like `1/√vnodes`).
+    pub fn spread(&self) -> Vec<f64> {
+        if self.points.len() == 1 {
+            return vec![1.0];
+        }
+        let mut owned: Vec<u128> = vec![0; self.shard_ids.len()];
+        let slot: std::collections::BTreeMap<usize, usize> =
+            self.shard_ids.iter().enumerate().map(|(i, &s)| (s, i)).collect();
+        for (i, &(p, s)) in self.points.iter().enumerate() {
+            let prev =
+                if i == 0 { self.points[self.points.len() - 1].0 } else { self.points[i - 1].0 };
+            // The arc (prev, p] belongs to this point's shard; wrapping
+            // subtraction makes the arcs sum to exactly 2^64.
+            owned[slot[&s]] += p.wrapping_sub(prev) as u128;
+        }
+        owned.into_iter().map(|o| o as f64 / 2f64.powi(64)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_every_key_to_a_live_shard() {
+        let ring = HashRing::new(4, 64);
+        assert_eq!(ring.shard_ids(), &[0, 1, 2, 3]);
+        assert_eq!(ring.n_shards(), 4);
+        assert_eq!(ring.vnodes_per_shard(), 64);
+        for i in 0..1_000 {
+            let s = ring.route(&format!("TAPE{i:04}"));
+            assert!(s < 4, "routed to dead shard {s}");
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic_across_constructions() {
+        let a = HashRing::new(5, 32);
+        let b = HashRing::new(5, 32);
+        for i in 0..500 {
+            let key = format!("K{i}");
+            assert_eq!(a.route(&key), b.route(&key));
+        }
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let ring = HashRing::new(1, 8);
+        for i in 0..100 {
+            assert_eq!(ring.route(&format!("T{i}")), 0);
+        }
+        let spread = ring.spread();
+        assert_eq!(spread.len(), 1);
+        assert!((spread[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spread_sums_to_one() {
+        let ring = HashRing::new(4, 128);
+        let spread = ring.spread();
+        assert_eq!(spread.len(), 4);
+        let total: f64 = spread.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "spread sums to {total}");
+        for (i, s) in spread.iter().enumerate() {
+            assert!(*s > 0.0, "shard {i} owns nothing");
+        }
+    }
+
+    #[test]
+    fn shard_ids_survive_membership_changes() {
+        let mut ring = HashRing::new(3, 16);
+        assert!(ring.remove_shard(1));
+        assert!(!ring.remove_shard(1), "already removed");
+        assert_eq!(ring.shard_ids(), &[0, 2]);
+        let id = ring.add_shard();
+        assert_eq!(id, 3, "ids are monotone, never recycled");
+        assert_eq!(ring.shard_ids(), &[0, 2, 3]);
+        for i in 0..200 {
+            let s = ring.route(&format!("T{i}"));
+            assert!(ring.shard_ids().contains(&s));
+        }
+    }
+}

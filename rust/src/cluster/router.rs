@@ -1,0 +1,330 @@
+//! The cluster front-end: N independent [`Coordinator`] shards behind one
+//! consistent-hash router.
+//!
+//! Each shard is a full single-library coordinator (its own batcher,
+//! dispatcher, and drive-worker pool) holding exactly the tapes the ring
+//! routes to it. `submit` hashes the tape name, bumps the shard's routing
+//! counter, and delegates — so every per-shard contract (validation,
+//! `SubmitError::Busy` backpressure, drain-on-finish) holds unchanged at
+//! the cluster level, per shard.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::{
+    Completion, Coordinator, CoordinatorConfig, MetricsSnapshot, ReadRequest, SubmitError,
+};
+use crate::model::Tape;
+use crate::replay::RequestSink;
+use crate::sched::Scheduler;
+
+use super::metrics::{rollup, ClusterMetricsSnapshot, ShardLoad};
+use super::ring::HashRing;
+
+/// Cluster configuration: the ring shape plus one per-shard coordinator
+/// configuration (every library gets the same drive pool and batcher).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of library shards.
+    pub n_shards: usize,
+    /// Virtual nodes per shard on the consistent-hash ring.
+    pub vnodes: usize,
+    /// Configuration applied to every shard's coordinator.
+    pub shard: CoordinatorConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { n_shards: 4, vnodes: 64, shard: CoordinatorConfig::default() }
+    }
+}
+
+/// The running multi-library cluster. Create with [`Cluster::start`], feed
+/// with [`Cluster::submit`], stop with [`Cluster::finish`].
+pub struct Cluster {
+    cfg: ClusterConfig,
+    ring: HashRing,
+    /// Shard id → running coordinator (BTreeMap: ids stay sorted and
+    /// stable across add/remove).
+    shards: BTreeMap<usize, Coordinator>,
+    /// Shard id → submissions routed there (accepted or rejected).
+    routed: BTreeMap<usize, AtomicU64>,
+    /// Master catalog, for re-registering tapes on membership changes.
+    catalog: HashMap<String, Tape>,
+    policy: Arc<dyn Scheduler + Send + Sync>,
+}
+
+impl Cluster {
+    /// Start `cfg.n_shards` coordinators, partitioning `catalog` across
+    /// them by consistent-hashing each tape's name.
+    pub fn start(
+        cfg: ClusterConfig,
+        catalog: impl IntoIterator<Item = Tape>,
+        policy: Arc<dyn Scheduler + Send + Sync>,
+    ) -> Cluster {
+        assert!(cfg.n_shards > 0, "a cluster needs at least one shard");
+        assert!(cfg.vnodes > 0, "a shard needs at least one virtual node");
+        let ring = HashRing::new(cfg.n_shards, cfg.vnodes);
+        let catalog: HashMap<String, Tape> =
+            catalog.into_iter().map(|t| (t.name.clone(), t)).collect();
+        let mut per_shard: BTreeMap<usize, Vec<Tape>> =
+            ring.shard_ids().iter().map(|&s| (s, Vec::new())).collect();
+        for tape in catalog.values() {
+            per_shard.get_mut(&ring.route(&tape.name)).unwrap().push(tape.clone());
+        }
+        let shards = per_shard
+            .into_iter()
+            .map(|(id, tapes)| {
+                (id, Coordinator::start(cfg.shard.clone(), tapes, Arc::clone(&policy)))
+            })
+            .collect();
+        let routed =
+            ring.shard_ids().iter().map(|&s| (s, AtomicU64::new(0))).collect();
+        Cluster { cfg, ring, shards, routed, catalog, policy }
+    }
+
+    /// Submit one read request: route by tape name, delegate to the owning
+    /// shard. All of the coordinator's submit errors — including the
+    /// [`SubmitError::Busy`] backpressure signal — propagate per shard, so
+    /// one overloaded library sheds without touching its siblings.
+    pub fn submit(&self, req: ReadRequest) -> Result<(), SubmitError> {
+        let shard = self.ring.route(&req.tape);
+        self.routed[&shard].fetch_add(1, Ordering::Relaxed);
+        self.shards[&shard].submit(req)
+    }
+
+    /// Register a tape (or replace its entry) on the shard that owns it.
+    pub fn register_tape(&mut self, tape: Tape) {
+        let shard = self.ring.route(&tape.name);
+        self.shards[&shard].register_tape(tape.clone());
+        self.catalog.insert(tape.name.clone(), tape);
+    }
+
+    /// Add one shard for rebalancing experiments: a fresh coordinator
+    /// joins the ring, and only the tapes whose arcs the newcomer stole
+    /// move — registered on the new shard and deregistered from their
+    /// previous owner, so old catalogs don't accumulate stale entries
+    /// across membership changes. (A previous owner still draining queued
+    /// requests for a moved tape keeps its entry until that backlog
+    /// clears — `Coordinator::deregister_tape` refuses busy tapes; the
+    /// router never routes new work there either way.) Returns
+    /// `(shard id, tapes moved)`.
+    pub fn add_shard(&mut self) -> (usize, usize) {
+        let old_owner: Vec<(String, usize)> = self
+            .catalog
+            .keys()
+            .map(|name| (name.clone(), self.ring.route(name)))
+            .collect();
+        let id = self.ring.add_shard();
+        let coord = Coordinator::start(
+            self.cfg.shard.clone(),
+            std::iter::empty::<Tape>(),
+            Arc::clone(&self.policy),
+        );
+        let mut moved = 0;
+        for (name, owner) in old_owner {
+            if self.ring.route(&name) == id {
+                coord.register_tape(self.catalog[&name].clone());
+                self.shards[&owner].deregister_tape(&name);
+                moved += 1;
+            }
+        }
+        self.shards.insert(id, coord);
+        self.routed.insert(id, AtomicU64::new(0));
+        (id, moved)
+    }
+
+    /// Drain and remove one shard (bounded movement: only its tapes remap,
+    /// each to the shard now owning its arc). Returns the drained shard's
+    /// completions and final metrics, or `None` when the id is not live or
+    /// is the last shard.
+    pub fn remove_shard(&mut self, id: usize) -> Option<(Vec<Completion>, MetricsSnapshot)> {
+        if self.shards.len() <= 1 || !self.shards.contains_key(&id) {
+            return None;
+        }
+        // The departed shard's tapes, identified before the ring changes.
+        let orphans: Vec<String> = self
+            .catalog
+            .keys()
+            .filter(|name| self.ring.route(name.as_str()) == id)
+            .cloned()
+            .collect();
+        let coord = self.shards.remove(&id).unwrap();
+        self.ring.remove_shard(id);
+        self.routed.remove(&id);
+        let drained = coord.finish();
+        // Hand only those tapes to the shards now owning their arcs —
+        // every other tape's registration is untouched.
+        for name in orphans {
+            let shard = self.ring.route(&name);
+            self.shards[&shard].register_tape(self.catalog[&name].clone());
+        }
+        Some(drained)
+    }
+
+    /// The routing ring (read-only: spread diagnostics, shard ids).
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    /// Number of live shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total drive workers across the cluster.
+    pub fn n_drives(&self) -> usize {
+        self.shards.len() * self.cfg.shard.n_drives
+    }
+
+    /// Current rollup of every shard's metrics plus routing counters.
+    pub fn metrics(&self) -> ClusterMetricsSnapshot {
+        let loads = self
+            .shards
+            .iter()
+            .map(|(&id, coord)| ShardLoad {
+                shard: id,
+                routed: self.routed[&id].load(Ordering::Relaxed),
+                metrics: coord.metrics(),
+            })
+            .collect();
+        rollup(loads)
+    }
+
+    /// Drain every shard and join all threads; completions come back
+    /// merged and sorted by request id, with the final cluster rollup.
+    pub fn finish(self) -> (Vec<Completion>, ClusterMetricsSnapshot) {
+        let Cluster { shards, routed, .. } = self;
+        let mut completions = Vec::new();
+        let mut loads = Vec::new();
+        for (id, coord) in shards {
+            let n_routed = routed.get(&id).map(|a| a.load(Ordering::Relaxed)).unwrap_or(0);
+            let (mut c, m) = coord.finish();
+            completions.append(&mut c);
+            loads.push(ShardLoad { shard: id, routed: n_routed, metrics: m });
+        }
+        completions.sort_by_key(|c| c.request_id);
+        (completions, rollup(loads))
+    }
+}
+
+impl RequestSink for Cluster {
+    fn submit_request(&self, req: ReadRequest) -> Result<(), SubmitError> {
+        self.submit(req)
+    }
+
+    fn in_flight(&self) -> u64 {
+        // A cluster's in-flight level is the sum of its shards', by the
+        // coordinator's own definition of in-flight.
+        self.shards.values().map(|c| c.in_flight()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BatcherConfig;
+    use crate::sched::Gs;
+    use crate::sim::DriveParams;
+    use std::time::Duration;
+
+    fn catalog(n: usize) -> Vec<Tape> {
+        (0..n).map(|i| Tape::from_sizes(format!("TAPE{i:03}"), &[1_000; 20])).collect()
+    }
+
+    fn cfg(n_shards: usize) -> ClusterConfig {
+        ClusterConfig {
+            n_shards,
+            vnodes: 64,
+            shard: CoordinatorConfig {
+                n_drives: 2,
+                batcher: BatcherConfig {
+                    window: Duration::from_millis(5),
+                    max_batch: 64,
+                    ..BatcherConfig::default()
+                },
+                drive: DriveParams {
+                    mount_s: 1.0,
+                    unmount_s: 0.5,
+                    bytes_per_s: 1e6,
+                    uturn_s: 0.001,
+                },
+            },
+        }
+    }
+
+    #[test]
+    fn routes_to_owning_shard_and_serves_everything() {
+        let tapes = catalog(32);
+        let cluster = Cluster::start(cfg(3), tapes.clone(), Arc::new(Gs));
+        assert_eq!(cluster.n_shards(), 3);
+        assert_eq!(cluster.n_drives(), 6);
+        for i in 0..300u64 {
+            let tape = &tapes[(i % 32) as usize].name;
+            let req = ReadRequest { id: i, tape: tape.clone(), file_index: (i % 20) as usize };
+            assert!(cluster.submit(req).is_ok());
+        }
+        let (completions, m) = cluster.finish();
+        assert_eq!(completions.len(), 300);
+        assert_eq!(m.completed, 300);
+        assert_eq!(m.routed_total, 300);
+        assert_eq!(m.shards.len(), 3);
+        // Round-robin over 32 tapes: every shard owning tapes sees load.
+        assert!(m.min_shard_completed > 0, "a shard served nothing: {m:?}");
+        assert_eq!(m.shards.iter().map(|s| s.metrics.completed).sum::<u64>(), 300);
+        // Completions come back sorted by request id.
+        assert!(completions.windows(2).all(|w| w[0].request_id < w[1].request_id));
+    }
+
+    #[test]
+    fn unknown_tape_fails_on_the_routed_shard() {
+        let cluster = Cluster::start(cfg(2), catalog(8), Arc::new(Gs));
+        assert_eq!(
+            cluster.submit(ReadRequest { id: 1, tape: "NOPE".into(), file_index: 0 }),
+            Err(SubmitError::UnknownTape)
+        );
+        let (completions, m) = cluster.finish();
+        assert!(completions.is_empty());
+        // The routing counter still ticked: routing happens before
+        // validation, exactly like a front-end proxy.
+        assert_eq!(m.routed_total, 1);
+    }
+
+    #[test]
+    fn add_shard_moves_tapes_and_keeps_serving() {
+        let tapes = catalog(32);
+        let mut cluster = Cluster::start(cfg(2), tapes.clone(), Arc::new(Gs));
+        let (id, moved) = cluster.add_shard();
+        assert_eq!(id, 2);
+        assert!(moved < 32, "adding one shard must not move the whole catalog");
+        assert_eq!(cluster.n_shards(), 3);
+        // Every tape is still servable wherever it landed.
+        for (i, tape) in tapes.iter().enumerate() {
+            let req =
+                ReadRequest { id: i as u64, tape: tape.name.clone(), file_index: 0 };
+            assert!(cluster.submit(req).is_ok(), "tape {} unroutable", tape.name);
+        }
+        let (completions, m) = cluster.finish();
+        assert_eq!(completions.len(), 32);
+        assert_eq!(m.shards.len(), 3);
+    }
+
+    #[test]
+    fn remove_shard_drains_and_rehomes_tapes() {
+        let tapes = catalog(24);
+        let mut cluster = Cluster::start(cfg(3), tapes.clone(), Arc::new(Gs));
+        let victim = *cluster.ring().shard_ids().first().unwrap();
+        let (_, drained_m) = cluster.remove_shard(victim).expect("live shard");
+        assert_eq!(drained_m.submitted, 0);
+        assert_eq!(cluster.n_shards(), 2);
+        assert!(cluster.remove_shard(victim).is_none(), "already gone");
+        for (i, tape) in tapes.iter().enumerate() {
+            let req =
+                ReadRequest { id: i as u64, tape: tape.name.clone(), file_index: 0 };
+            assert!(cluster.submit(req).is_ok(), "tape {} unroutable", tape.name);
+        }
+        let (completions, _) = cluster.finish();
+        assert_eq!(completions.len(), 24);
+    }
+}

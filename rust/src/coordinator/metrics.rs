@@ -10,6 +10,10 @@ pub struct SharedMetrics {
     completed: AtomicU64,
     /// Submissions rejected with `Busy` by the per-tape backlog bound.
     rejected: AtomicU64,
+    /// Requests *accepted* but dropped at dispatch because their tape was
+    /// deregistered in between (the rehoming race) — distinct from
+    /// `rejected`, which never entered the system.
+    shed: AtomicU64,
     batches: AtomicU64,
     /// Sum of end-to-end request latencies, in µs.
     latency_sum_us: AtomicU64,
@@ -28,6 +32,10 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     /// Submissions rejected with `Busy` (backpressure shed load).
     pub rejected: u64,
+    /// Accepted requests dropped at dispatch (tape deregistered while
+    /// they were queued — the rehoming race). These will never complete:
+    /// in-flight accounting is `submitted − completed − shed`.
+    pub shed: u64,
     pub batches: u64,
     pub mean_latency_s: f64,
     pub mean_service_s: f64,
@@ -46,6 +54,11 @@ impl SharedMetrics {
     /// Record `n` submissions rejected by backpressure (`Busy`).
     pub fn on_reject(&self, n: u64) {
         self.rejected.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` accepted requests shed at dispatch (deregistered tape).
+    pub fn on_shed(&self, n: u64) {
+        self.shed.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Record a dispatched batch: scheduler compute seconds.
@@ -90,6 +103,7 @@ impl SharedMetrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
             rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             batches,
             mean_latency_s: self.latency_sum_us.load(Ordering::Relaxed) as f64
                 / 1e6
@@ -115,12 +129,14 @@ mod tests {
         let m = SharedMetrics::default();
         m.on_submit(3);
         m.on_reject(2);
+        m.on_shed(1);
         m.on_batch(0.5);
         m.on_complete(2.0, 1.0);
         m.on_complete(4.0, 3.0);
         let s = m.snapshot();
         assert_eq!(s.submitted, 3);
         assert_eq!(s.rejected, 2);
+        assert_eq!(s.shed, 1);
         assert_eq!(s.completed, 2);
         assert_eq!(s.batches, 1);
         assert!((s.mean_latency_s - 3.0).abs() < 1e-3);

@@ -26,6 +26,11 @@
 //! Python never appears anywhere on this path; when the XLA engine is
 //! enabled the worker calls the AOT-compiled artifact through
 //! [`crate::runtime`], still in-process.
+//!
+//! One coordinator models one tape **library**. Fleet deployments put
+//! several behind the consistent-hash router of [`crate::cluster`], which
+//! partitions the catalog by tape name and preserves every per-shard
+//! contract here (validation, `Busy` backpressure, drain-on-finish).
 
 mod batcher;
 mod metrics;

@@ -210,6 +210,26 @@ impl Coordinator {
         self.shared.catalog.lock().unwrap().insert(tape.name.clone(), tape);
     }
 
+    /// Remove a tape from the catalog so subsequent submits for it fail
+    /// with [`SubmitError::UnknownTape`] — the rehoming half of cluster
+    /// rebalancing. Refuses (returns `false`) while requests for the tape
+    /// are still queued, so accepted work is never orphaned; callers
+    /// retry after the dispatcher drains the tape. (A submit that passed
+    /// validation concurrently with this call may still land its push —
+    /// the dispatcher sheds such batches, see `dispatcher_loop`.)
+    pub fn deregister_tape(&self, name: &str) -> bool {
+        // Hold the batcher lock across the backlog check and the catalog
+        // removal: a queued request observed as zero backlog here cannot
+        // reappear, because every push needs this lock.
+        let batcher = self.shared.batcher.lock().unwrap();
+        if batcher.tape_backlog(name) > 0 {
+            return false;
+        }
+        let removed = self.shared.catalog.lock().unwrap().remove(name).is_some();
+        drop(batcher);
+        removed
+    }
+
     /// Current metrics.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.metrics.snapshot()
@@ -261,9 +281,30 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: Sender<Job>, drive: DriveParams) {
         if let Some(batch) = batch {
             let instance = {
                 let catalog = shared.catalog.lock().unwrap();
-                let tape = &catalog[&batch.tape];
-                Instance::from_tape(tape, &batch.multiplicities(), drive.uturn_bytes())
-                    .expect("batch requests validated at submit")
+                match catalog.get(&batch.tape) {
+                    Some(tape) => {
+                        Instance::from_tape(tape, &batch.multiplicities(), drive.uturn_bytes())
+                            .expect("batch requests validated at submit")
+                    }
+                    None => {
+                        // The tape was deregistered between a submit's
+                        // validation and its push (rehoming race): shed
+                        // the batch rather than panicking on the missing
+                        // entry. `on_shed` (not `on_reject`) keeps the
+                        // in-flight accounting honest — these requests
+                        // were accepted but will never complete.
+                        drop(catalog);
+                        let n = batch.n_requests() as u64;
+                        let mut submit = shared.submit_times.lock().unwrap();
+                        for (_, ids) in &batch.by_file {
+                            for id in ids {
+                                submit.remove(id);
+                            }
+                        }
+                        shared.metrics.on_shed(n);
+                        continue;
+                    }
+                }
             };
             if tx.send(Job { batch, instance }).is_err() {
                 break; // workers gone
@@ -398,6 +439,34 @@ mod tests {
         assert_eq!(completions.len(), 1);
         assert_eq!(completions[0].request_id, 2);
         assert_eq!(completions[0].tape, "NEW");
+    }
+
+    #[test]
+    fn deregister_tape_rejects_new_submits_but_never_orphans_queued_work() {
+        // A window far longer than the test: queued requests stay queued,
+        // so the busy-tape refusal is deterministic.
+        let mut config = cfg();
+        config.batcher.window = Duration::from_secs(3600);
+        let c = Coordinator::start(config, catalog(), Arc::new(Gs));
+        assert!(c
+            .submit(ReadRequest { id: 1, tape: "TAPE001".into(), file_index: 3 })
+            .is_ok());
+        assert!(
+            !c.deregister_tape("TAPE001"),
+            "a tape with queued requests must refuse deregistration"
+        );
+        // An idle tape deregisters; submits then fail as unknown.
+        assert!(c.deregister_tape("TAPE002"));
+        assert!(!c.deregister_tape("TAPE002"), "already gone");
+        assert_eq!(
+            c.submit(ReadRequest { id: 2, tape: "TAPE002".into(), file_index: 0 }),
+            Err(SubmitError::UnknownTape)
+        );
+        // The refused tape's queued request still completes at drain.
+        let (completions, m) = c.finish();
+        assert_eq!(completions.len(), 1);
+        assert_eq!(completions[0].request_id, 1);
+        assert_eq!(m.completed, 1);
     }
 
     #[test]

@@ -14,7 +14,10 @@ pub mod stats;
 
 pub use generator::{generate_dataset, GeneratorConfig};
 pub use loader::{load_dataset, load_tape, write_dataset, LoadError};
-pub use rawlog::{filter_raw_log, synth_catalog, synth_raw_log, FilterStats, LogLine, OpKind};
+pub use rawlog::{
+    filter_raw_log, parse_trace, read_trace_file, synth_catalog, synth_raw_log,
+    trace_to_string, FilterStats, LogLine, OpKind, TraceRecord,
+};
 pub use stats::{dataset_stats, DatasetStats, ScatterPoint};
 
 use crate::model::{Instance, InstanceError, Tape};

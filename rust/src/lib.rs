@@ -32,7 +32,9 @@
 //! - [`model`] — tapes, requests, instances, exact cost arithmetic.
 //! - [`sched`] — the paper's nine algorithms behind one [`sched::Scheduler`] trait.
 //! - [`sim`] — head-trajectory ground truth + robotic library simulator.
-//! - [`coordinator`] — multi-threaded request-serving service.
+//! - [`coordinator`] — multi-threaded request-serving service (one library).
+//! - [`cluster`] — multi-library sharding: consistent-hash routing over N
+//!   coordinators, per-shard backpressure, cluster metrics rollup.
 //! - [`replay`] — virtual-time workload replay: arrival models, the
 //!   discrete-event engine, and QoS percentile reports.
 //! - [`runtime`] — pluggable SimpleDP backends: pure-Rust dense (default)
@@ -44,6 +46,7 @@
 pub mod analysis;
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod coordinator;
 pub mod dataset;
 pub mod model;

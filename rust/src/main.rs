@@ -17,19 +17,20 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use tapesched::analysis::{qos_comparison, report::run_evaluation};
+use tapesched::analysis::{qos_comparison, report::run_evaluation, shard_summary};
 use tapesched::cli::Args;
+use tapesched::cluster::{Cluster, ClusterConfig};
 use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
 use tapesched::dataset::{
-    dataset_stats, generate_dataset, load_dataset, synth_catalog, synth_raw_log,
-    write_dataset, Dataset, GeneratorConfig,
+    dataset_stats, generate_dataset, load_dataset, read_trace_file, synth_catalog,
+    synth_raw_log, write_dataset, Dataset, GeneratorConfig,
 };
 use tapesched::model::{virtual_lb, Tape};
 use tapesched::replay::{
     drive_closed_loop, reports_json, run_replay, ArrivalModel, BurstyArrivals,
     DiurnalArrivals, LoopMode, PoissonArrivals, ReplayConfig, RequestMix, TraceArrivals,
 };
-use tapesched::runtime::{backend_by_name, BackendPolicy};
+use tapesched::runtime::{backend_by_name, dense_cache_stats, BackendPolicy};
 use tapesched::sched::{paper_schedulers, scheduler_by_name, Scheduler};
 use tapesched::sim::{evaluate, DriveParams};
 use tapesched::util::rng::Rng;
@@ -75,11 +76,13 @@ COMMANDS:
   draw            --out FILE.svg [--tape NAME] [--algo NAME] [--u N] [--backend dense|xla]
   serve           [--policy NAME] [--drives N] [--requests N] [--seed N]
                   [--cap N] [--backlog N] [--backend dense|xla]
+                  [--shards N] [--vnodes K]
   replay          [--arrivals poisson|bursty|diurnal|trace] [--rate R]
                   [--duration S] [--policy NAME[,NAME…]] [--drives N] [--seed N]
                   [--mode open|closed] [--cap N] [--window-ms N] [--max-batch N]
                   [--backlog N] [--data DIR] [--tapes N] [--out FILE.json]
-                  [--backend dense|xla]
+                  [--backend dense|xla] [--shards N] [--vnodes K]
+                  [--trace-file PATH] [--smoke]
   help
 
 Without --data, commands use the built-in calibrated generator (seed 0x12P32021).
@@ -87,7 +90,14 @@ Without --data, commands use the built-in calibrated generator (seed 0x12P32021)
 default; xla = the PJRT engine, requires building with --features xla).
 `replay` runs in virtual time (deterministic for a fixed seed) and prints a
 QoS JSON document — p50/p95/p99/p99.9 latencies per policy — to stdout (or
---out); the human-readable comparison table goes to stderr."
+--out); the human-readable comparison table goes to stderr.
+--shards N (serve, replay) shards the catalog over N libraries behind a
+consistent-hash router (--vnodes points per shard); the replay report then
+carries a per-shard QoS breakdown next to the fleet-wide one, with --drives
+drives per shard. --trace-file replays an on-disk timestamped log
+(`timestamp_ns<TAB>tape<TAB>file_id`, see rust/README.md). --smoke is the
+fast deterministic CI preset (2 virtual seconds at 100 rps over 48 tapes
+unless overridden)."
     );
 }
 
@@ -110,6 +120,12 @@ fn dataset_from(args: &Args) -> Dataset {
             generate_dataset(&GeneratorConfig { n_tapes: tapes, seed, ..Default::default() })
         }
     }
+}
+
+/// Whether `--backend dense` was selected — the only configuration in
+/// which the dense result-cache counters describe the serving path.
+fn dense_backend_selected(args: &Args) -> bool {
+    matches!(args.get("backend"), Some(b) if b.eq_ignore_ascii_case("dense"))
 }
 
 /// Resolve `--<flag>` (an algorithm name) plus the optional `--backend`
@@ -300,6 +316,7 @@ fn cmd_draw(args: &Args) {
 fn cmd_serve(args: &Args) {
     args.reject_unknown(&[
         "policy", "drives", "requests", "seed", "tapes", "data", "backend", "cap", "backlog",
+        "shards", "vnodes",
     ]);
     let policy = resolve_policy(args, "policy", "SimpleDP");
     let policy_name = policy.name();
@@ -307,30 +324,78 @@ fn cmd_serve(args: &Args) {
     let n_requests = args.get_parsed_or("requests", 5_000u64);
     let seed = args.get_parsed_or("seed", 1u64);
     let cap = args.get_parsed_or("cap", 1_024u64);
+    let n_shards = args.get_parsed_or("shards", 1usize);
+    let vnodes = args.get_parsed_or("vnodes", 64usize);
     if cap == 0 || args.get_parsed_or("backlog", 1usize) == 0 {
         eprintln!("error: --cap and --backlog must be positive");
         std::process::exit(2);
     }
+    if n_shards == 0 || vnodes == 0 {
+        eprintln!("error: --shards and --vnodes must be positive");
+        std::process::exit(2);
+    }
+    let shard_cfg = CoordinatorConfig {
+        n_drives,
+        batcher: BatcherConfig {
+            max_tape_backlog: args
+                .get_parsed_or("backlog", BatcherConfig::default().max_tape_backlog),
+            ..BatcherConfig::default()
+        },
+        drive: DriveParams::default(),
+    };
     let ds = dataset_from(args);
     let tapes: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
-    let coord = Coordinator::start(
-        CoordinatorConfig {
-            n_drives,
-            batcher: BatcherConfig {
-                max_tape_backlog: args
-                    .get_parsed_or("backlog", BatcherConfig::default().max_tape_backlog),
-                ..BatcherConfig::default()
-            },
-            drive: DriveParams::default(),
-        },
-        tapes.iter().cloned(),
-        Arc::from(policy),
-    );
     // The same arrival models and closed-loop driver the replay engine
     // evaluates with, here against the real threaded service (timestamps
     // ignored: the demo generates load as fast as the cap allows).
     let mut model =
         PoissonArrivals::new(RequestMix::new(&tapes), 1_000.0, f64::INFINITY, seed);
+
+    if n_shards > 1 {
+        // Multi-library cluster: one coordinator per shard behind the
+        // consistent-hash router, same driver via the RequestSink trait.
+        let cluster = Cluster::start(
+            ClusterConfig { n_shards, vnodes, shard: shard_cfg },
+            tapes.iter().cloned(),
+            Arc::from(policy),
+        );
+        let stats = drive_closed_loop(
+            &cluster,
+            &tapes,
+            &mut model,
+            cap,
+            Duration::from_millis(1),
+            n_requests,
+        );
+        let (completions, m) = cluster.finish();
+        println!(
+            "policy {policy_name}, {n_shards} shards × {n_drives} drives, {} requests:",
+            completions.len()
+        );
+        println!("  batches dispatched      = {}", m.batches);
+        println!("  busy retries / rejected = {} / {}", stats.busy_retries, m.rejected);
+        println!("  mean in-tape service    = {:.1} s", m.mean_service_s);
+        println!("  mean end-to-end latency = {:.1} s", m.mean_latency_s);
+        println!(
+            "  shard load max/min      = {} / {} (ratio {:.2})",
+            m.max_shard_completed,
+            m.min_shard_completed,
+            m.imbalance_ratio()
+        );
+        for s in &m.shards {
+            println!(
+                "  shard {:<2} routed/completed = {} / {} (p99 {:.1} s)",
+                s.shard, s.routed, s.metrics.completed, s.metrics.p99_latency_s
+            );
+        }
+        if dense_backend_selected(args) {
+            let (hits, misses) = dense_cache_stats();
+            println!("  dense cache hits/misses = {hits} / {misses}");
+        }
+        return;
+    }
+
+    let coord = Coordinator::start(shard_cfg, tapes.iter().cloned(), Arc::from(policy));
     let stats = drive_closed_loop(
         &coord,
         &tapes,
@@ -347,6 +412,10 @@ fn cmd_serve(args: &Args) {
     println!("  mean end-to-end latency = {:.1} s", m.mean_latency_s);
     println!("  p50 / p99 latency       = {:.1} / {:.1} s", m.p50_latency_s, m.p99_latency_s);
     println!("  mean schedule compute   = {:.4} s/batch", m.mean_sched_s_per_batch);
+    if dense_backend_selected(args) {
+        let (hits, misses) = dense_cache_stats();
+        println!("  dense cache hits/misses = {hits} / {misses}");
+    }
 }
 
 /// Virtual-time workload replay: a timestamped request stream (trace,
@@ -357,16 +426,38 @@ fn cmd_serve(args: &Args) {
 fn cmd_replay(args: &Args) {
     args.reject_unknown(&[
         "arrivals", "rate", "duration", "policy", "drives", "seed", "mode", "cap", "data",
-        "tapes", "backend", "window-ms", "max-batch", "backlog", "out",
+        "tapes", "backend", "window-ms", "max-batch", "backlog", "out", "shards", "vnodes",
+        "trace-file", "smoke",
     ]);
-    let kind =
+    let mut kind =
         args.get_choice_or("arrivals", &["poisson", "bursty", "diurnal", "trace"], "poisson");
-    let rate = args.get_parsed_or("rate", 50.0f64);
-    let duration = args.get_parsed_or("duration", 60.0f64);
+    // --trace-file only makes sense for trace arrivals: imply them when
+    // --arrivals was left to default, reject the contradiction otherwise
+    // (silently replaying synthetic load instead of the operator's log
+    // would produce a valid-looking report of the wrong workload).
+    if args.get("trace-file").is_some() && kind != "trace" {
+        if args.get("arrivals").is_some() {
+            eprintln!("error: --trace-file requires --arrivals trace (got --arrivals {kind})");
+            std::process::exit(2);
+        }
+        kind = "trace".to_string();
+    }
+    // --smoke: the fast deterministic CI preset — 2 virtual seconds at
+    // 100 rps over 48 generated tapes — any of which an explicit flag
+    // overrides.
+    let smoke = args.has("smoke");
+    let rate = args.get_parsed_or("rate", if smoke { 100.0f64 } else { 50.0f64 });
+    let mut duration = args.get_parsed_or("duration", if smoke { 2.0f64 } else { 60.0f64 });
     let n_drives = args.get_parsed_or("drives", 4usize);
     let seed = args.get_parsed_or("seed", 1u64);
+    let n_shards = args.get_parsed_or("shards", 1usize);
+    let vnodes = args.get_parsed_or("vnodes", 64usize);
     if rate <= 0.0 || duration <= 0.0 || n_drives == 0 {
         eprintln!("error: --rate, --duration and --drives must be positive");
+        std::process::exit(2);
+    }
+    if n_shards == 0 || vnodes == 0 {
+        eprintln!("error: --shards and --vnodes must be positive");
         std::process::exit(2);
     }
     if args.get_parsed_or("backlog", 1usize) == 0 {
@@ -395,6 +486,8 @@ fn cmd_replay(args: &Args) {
         drive: DriveParams::default(),
         mode,
         retry_backoff_s: 0.01,
+        n_shards,
+        vnodes,
     };
 
     // Policies: comma-separated list; `--backend` selects the SimpleDP
@@ -427,7 +520,39 @@ fn cmd_replay(args: &Args) {
     // The catalog and a factory producing the identical arrival stream for
     // every policy (fresh model, same seed ⇒ same stream).
     let (catalog, make_model): (Vec<Tape>, Box<dyn Fn() -> Box<dyn ArrivalModel>>) =
-        if kind == "trace" {
+        if kind == "trace" && args.get("trace-file").is_some() {
+            // Replay an operator-supplied on-disk log (the trace format
+            // specified in rust/README.md) against the configured catalog.
+            let path = args.get("trace-file").unwrap();
+            let records = read_trace_file(Path::new(path)).unwrap_or_else(|e| {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            });
+            let ds = dataset_from(args);
+            let catalog: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
+            let (proto, skipped) = TraceArrivals::from_records(&records, &catalog);
+            if proto.remaining() == 0 {
+                eprintln!(
+                    "error: no record of {path} matches the catalog \
+                     ({} parsed, {skipped} skipped: unknown tape or file id)",
+                    records.len()
+                );
+                std::process::exit(1);
+            }
+            eprintln!(
+                "trace file {path}: {} records → {} requests ({} skipped)",
+                records.len(),
+                proto.remaining(),
+                skipped
+            );
+            // The report's `duration_s` echoes the replayed window: for a
+            // file trace that is the trace's own horizon, not the
+            // synthetic-arrivals default (an explicit --duration wins).
+            if args.get("duration").is_none() && proto.horizon_s() > 0.0 {
+                duration = proto.horizon_s();
+            }
+            (catalog, Box::new(move || Box::new(proto.clone()) as Box<dyn ArrivalModel>))
+        } else if kind == "trace" {
             // Synthesize a raw activity log over synthetic tape catalogs and
             // replay it through the Appendix-C filters — the full
             // `dataset::rawlog` path, timestamps included.
@@ -453,7 +578,18 @@ fn cmd_replay(args: &Args) {
             );
             (catalog, Box::new(move || Box::new(proto.clone()) as Box<dyn ArrivalModel>))
         } else {
-            let ds = dataset_from(args);
+            // --smoke shrinks the default catalog (48 tapes instead of
+            // 169) so the preset runs in seconds; explicit --data/--tapes
+            // win.
+            let ds = if smoke && args.get("data").is_none() && args.get("tapes").is_none() {
+                generate_dataset(&GeneratorConfig {
+                    n_tapes: 48,
+                    seed: args.get_parsed_or("seed", GeneratorConfig::default().seed),
+                    ..Default::default()
+                })
+            } else {
+                dataset_from(args)
+            };
             let catalog: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
             let mix = RequestMix::new(&catalog);
             (
@@ -485,7 +621,14 @@ fn cmd_replay(args: &Args) {
             report.batches,
             outcome.stats.sched_wall_s
         );
+        if n_shards > 1 {
+            eprint!("{}", shard_summary(&report));
+        }
         reports.push(report);
+    }
+    if dense_backend_selected(args) {
+        let (hits, misses) = dense_cache_stats();
+        eprintln!("dense cache hits/misses: {hits} / {misses}");
     }
 
     eprint!("{}", qos_comparison(&reports));

@@ -20,9 +20,9 @@
 //! and are seeded through [`crate::util::rng::Rng`], so the same seed and
 //! configuration always yield the identical stream.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
-use crate::dataset::rawlog::{LogLine, OpKind, TapeCatalog};
+use crate::dataset::rawlog::{LogLine, OpKind, TapeCatalog, TraceRecord};
 use crate::model::Tape;
 use crate::util::rng::Rng;
 
@@ -304,9 +304,52 @@ impl TraceArrivals {
         catalogs.values().map(|c| c.tape.clone()).collect()
     }
 
+    /// Build from operator-supplied on-disk trace records
+    /// ([`crate::dataset::rawlog::parse_trace`]), resolved against
+    /// `catalog` by tape name. Records naming unknown tapes or
+    /// out-of-range file ids are skipped (returned as the second element
+    /// — the same tolerance the raw-log pipeline applies to foreign
+    /// lines). Arrivals sort stably by timestamp, so near-sorted real
+    /// logs replay in log order.
+    pub fn from_records(records: &[TraceRecord], catalog: &[Tape]) -> (TraceArrivals, usize) {
+        let index: HashMap<&str, usize> =
+            catalog.iter().enumerate().map(|(i, t)| (t.name.as_str(), i)).collect();
+        let mut events = Vec::new();
+        let mut skipped = 0usize;
+        for rec in records {
+            let Some(&tape) = index.get(rec.tape.as_str()) else {
+                skipped += 1;
+                continue;
+            };
+            if rec.file_id >= catalog[tape].n_files() {
+                skipped += 1;
+                continue;
+            }
+            events.push(Arrival {
+                at_s: rec.timestamp_ns as f64 / 1e9,
+                tape,
+                file: rec.file_id,
+            });
+        }
+        events.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        let model = TraceArrivals {
+            name: format!("trace-file({} reads)", events.len()),
+            events,
+            pos: 0,
+        };
+        (model, skipped)
+    }
+
     /// Number of arrivals not yet consumed.
     pub fn remaining(&self) -> usize {
         self.events.len() - self.pos
+    }
+
+    /// The trace's time horizon: the last arrival's timestamp, seconds
+    /// (0 for an empty trace). Events are kept time-sorted, so this is
+    /// O(1) — reports echo it as the replayed window.
+    pub fn horizon_s(&self) -> f64 {
+        self.events.last().map(|a| a.at_s).unwrap_or(0.0)
     }
 }
 
@@ -404,6 +447,39 @@ mod tests {
             "mid-window {mid}/{} not peaked",
             a.len()
         );
+    }
+
+    #[test]
+    fn trace_records_resolve_against_the_catalog() {
+        use crate::dataset::rawlog::TraceRecord;
+        let catalog = tapes(); // A: 40 files, B: 80, C: 5
+        let rec = |ns: u64, tape: &str, file: usize| TraceRecord {
+            timestamp_ns: ns,
+            tape: tape.into(),
+            file_id: file,
+        };
+        let records = vec![
+            rec(2_000_000_000, "B", 79),
+            rec(1_000_000_000, "A", 0), // out of order: sorted on build
+            rec(500_000_000, "NOPE", 0), // unknown tape: skipped
+            rec(500_000_000, "C", 5),   // file out of range: skipped
+            rec(1_000_000_000, "C", 4),
+        ];
+        let (mut model, skipped) = TraceArrivals::from_records(&records, &catalog);
+        assert_eq!(skipped, 2);
+        assert_eq!(model.remaining(), 3);
+        assert!(model.name().contains("3 reads"));
+        assert!((model.horizon_s() - 2.0).abs() < 1e-12, "horizon = last timestamp");
+        assert_eq!(TraceArrivals::from_records(&[], &catalog).0.horizon_s(), 0.0);
+        let arrivals = drain(&mut model);
+        check_stream(&arrivals, 2.0, &[40, 80, 5]);
+        assert_eq!(arrivals[0], Arrival { at_s: 1.0, tape: 0, file: 0 });
+        assert_eq!(arrivals[1], Arrival { at_s: 1.0, tape: 2, file: 4 });
+        assert_eq!(arrivals[2], Arrival { at_s: 2.0, tape: 1, file: 79 });
+        // Stable sort: equal timestamps keep record order.
+        let (again, _) = TraceArrivals::from_records(&records, &catalog);
+        let mut again = again;
+        assert_eq!(arrivals, drain(&mut again), "deterministic across builds");
     }
 
     #[test]

@@ -17,6 +17,32 @@ use crate::model::Tape;
 
 use super::arrivals::ArrivalModel;
 
+/// Anything the closed-loop driver can feed: a single-library
+/// [`Coordinator`] or the multi-library [`crate::cluster::Cluster`] — both
+/// expose the same submit contract (including `Busy` backpressure) and an
+/// in-flight estimate from their metrics.
+pub trait RequestSink {
+    /// Submit one request under the coordinator's `submit` contract.
+    fn submit_request(&self, req: ReadRequest) -> Result<(), SubmitError>;
+
+    /// Requests accepted but not yet served, per the sink's own metrics.
+    fn in_flight(&self) -> u64;
+}
+
+impl RequestSink for Coordinator {
+    fn submit_request(&self, req: ReadRequest) -> Result<(), SubmitError> {
+        self.submit(req)
+    }
+
+    fn in_flight(&self) -> u64 {
+        // Shed requests (accepted, then dropped at dispatch because their
+        // tape was deregistered) will never complete — leaving them out
+        // would wedge any caller gating on the in-flight level.
+        let m = self.metrics();
+        m.submitted.saturating_sub(m.completed + m.shed)
+    }
+}
+
 /// What the driver observed while feeding the coordinator.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct LiveDriveStats {
@@ -29,13 +55,14 @@ pub struct LiveDriveStats {
     pub dropped: u64,
 }
 
-/// Feed up to `limit` arrivals from `model` into `coord`, keeping at most
-/// `max_in_flight` requests outstanding (observed through the metrics
-/// counters) and retrying `Busy` after `retry_backoff`. `tapes` maps the
-/// model's tape indices to catalog names — pass the same slice the model's
+/// Feed up to `limit` arrivals from `model` into `sink` (a coordinator or
+/// a cluster), keeping at most `max_in_flight` requests outstanding
+/// (observed through the sink's metrics) and retrying `Busy` after
+/// `retry_backoff`. `tapes` maps the model's tape indices to catalog
+/// names — pass the same slice the model's
 /// [`super::arrivals::RequestMix`] was built from.
-pub fn drive_closed_loop(
-    coord: &Coordinator,
+pub fn drive_closed_loop<S: RequestSink + ?Sized>(
+    sink: &S,
     tapes: &[Tape],
     model: &mut dyn ArrivalModel,
     max_in_flight: u64,
@@ -48,11 +75,7 @@ pub fn drive_closed_loop(
     while id < limit {
         let Some(a) = model.next_arrival() else { break };
         // Gate on the in-flight level before submitting.
-        loop {
-            let m = coord.metrics();
-            if m.submitted.saturating_sub(m.completed) < max_in_flight {
-                break;
-            }
+        while sink.in_flight() >= max_in_flight {
             std::thread::sleep(retry_backoff);
         }
         loop {
@@ -61,7 +84,7 @@ pub fn drive_closed_loop(
                 tape: tapes[a.tape].name.clone(),
                 file_index: a.file,
             };
-            match coord.submit(req) {
+            match sink.submit_request(req) {
                 Ok(()) => {
                     stats.submitted += 1;
                     break;

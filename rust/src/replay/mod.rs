@@ -21,9 +21,14 @@
 //!
 //! Everything runs at CPU speed on one thread, deterministically: the same
 //! seed and configuration produce a byte-identical completion log and JSON
-//! report. The wall-clock sibling ([`driver`]) feeds the *real* threaded
-//! coordinator from the same arrival models — demos and backpressure tests
-//! share that code path.
+//! report. With `ReplayConfig::n_shards > 1` the engine mirrors the
+//! multi-library [`crate::cluster`] layer in virtual time — one batcher
+//! and one drive pool per shard behind the consistent-hash ring — and the
+//! [`QosReport`] gains a per-shard percentile breakdown next to the
+//! fleet-wide ladder. The wall-clock sibling ([`driver`]) feeds the *real*
+//! threaded coordinator (or a whole [`crate::cluster::Cluster`], via
+//! [`RequestSink`]) from the same arrival models — demos and backpressure
+//! tests share that code path.
 
 pub mod arrivals;
 pub mod clock;
@@ -37,12 +42,13 @@ pub use arrivals::{
     TraceArrivals,
 };
 pub use clock::{EventQueue, VirtualClock};
-pub use driver::{drive_closed_loop, LiveDriveStats};
+pub use driver::{drive_closed_loop, LiveDriveStats, RequestSink};
 pub use engine::{
     simulate, LoopMode, ReplayCompletion, ReplayConfig, ReplayOutcome, ReplayStats,
+    ShardOutcome,
 };
 pub use histogram::LatencyHistogram;
-pub use report::{reports_json, LatencyStats, QosReport};
+pub use report::{reports_json, LatencyStats, QosReport, ShardQos};
 
 use crate::model::Tape;
 use crate::sched::Scheduler;

@@ -9,7 +9,7 @@
 //! subsystem. Wall-clock measurements (scheduler compute) deliberately
 //! never enter the JSON; they go to stderr diagnostics instead.
 
-use super::engine::{LoopMode, ReplayConfig, ReplayOutcome};
+use super::engine::{LoopMode, ReplayConfig, ReplayOutcome, ShardOutcome};
 use super::histogram::LatencyHistogram;
 
 /// Percentile ladder of one distribution, seconds.
@@ -43,6 +43,77 @@ impl LatencyStats {
     }
 }
 
+/// One shard's QoS breakdown inside a [`QosReport`]: the same counters
+/// and percentile ladders, restricted to the requests that shard served.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardQos {
+    pub shard: usize,
+    /// Catalog tapes the ring routed to this shard.
+    pub tapes: usize,
+    /// Fraction of the ring's key space this shard owns.
+    pub ring_share: f64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub busy_rejections: u64,
+    pub retries: u64,
+    pub batches: u64,
+    /// Virtual time of this shard's last completion, seconds.
+    pub makespan_s: f64,
+    /// Mean fraction of this shard's drive pool busy over its makespan.
+    pub drive_utilization: f64,
+    pub latency: LatencyStats,
+    pub service: LatencyStats,
+}
+
+impl ShardQos {
+    fn from_outcome(s: &ShardOutcome, n_drives: usize) -> ShardQos {
+        let st = &s.stats;
+        ShardQos {
+            shard: s.shard,
+            tapes: s.n_tapes,
+            ring_share: s.ring_share,
+            submitted: st.submitted,
+            completed: st.completed,
+            shed: st.shed,
+            busy_rejections: st.busy_rejections,
+            retries: st.retries,
+            batches: st.batches,
+            makespan_s: st.makespan_us as f64 / 1e6,
+            drive_utilization: if st.makespan_us > 0 {
+                (st.busy_drive_us as f64 / (n_drives as f64 * st.makespan_us as f64))
+                    .min(1.0)
+            } else {
+                0.0
+            },
+            latency: LatencyStats::from_histogram(&s.latency),
+            service: LatencyStats::from_histogram(&s.service),
+        }
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"shard\":{},\"tapes\":{},\"ring_share\":{:.6},\"submitted\":{},\
+             \"completed\":{},\"shed\":{},\"busy_rejections\":{},\"retries\":{},\
+             \"batches\":{},\"makespan_s\":{:.6},\"drive_utilization\":{:.6},\
+             \"latency\":{},\"service\":{}}}",
+            self.shard,
+            self.tapes,
+            self.ring_share,
+            self.submitted,
+            self.completed,
+            self.shed,
+            self.busy_rejections,
+            self.retries,
+            self.batches,
+            self.makespan_s,
+            self.drive_utilization,
+            self.latency.json(),
+            self.service.json(),
+        )
+    }
+}
+
 /// The quality-of-service report of one replay.
 #[derive(Debug, Clone, PartialEq)]
 pub struct QosReport {
@@ -51,7 +122,12 @@ pub struct QosReport {
     pub seed: u64,
     /// `"open"` or `"closed(cap)"`.
     pub mode: String,
+    /// Drive pool size **per shard**.
     pub n_drives: usize,
+    /// Number of library shards behind the consistent-hash router.
+    pub n_shards: usize,
+    /// Virtual nodes per shard on the ring.
+    pub vnodes: usize,
     /// Configured arrival horizon, seconds.
     pub duration_s: f64,
     pub submitted: u64,
@@ -65,12 +141,14 @@ pub struct QosReport {
     /// Completions per virtual second over the makespan.
     pub throughput_rps: f64,
     pub mean_batch_size: f64,
-    /// Mean fraction of the drive pool busy over the makespan.
+    /// Mean fraction of the fleet's drive pool busy over the makespan.
     pub drive_utilization: f64,
-    /// End-to-end latency (queueing + mount + in-tape).
+    /// End-to-end latency (queueing + mount + in-tape), fleet-wide.
     pub latency: LatencyStats,
     /// Mount + in-tape service time (the paper's objective, shifted).
     pub service: LatencyStats,
+    /// Per-shard breakdown (one entry per shard, ascending).
+    pub shards: Vec<ShardQos>,
 }
 
 impl QosReport {
@@ -84,6 +162,7 @@ impl QosReport {
     ) -> QosReport {
         let s = &outcome.stats;
         let makespan_s = s.makespan_us as f64 / 1e6;
+        let fleet_drives = cfg.n_shards * cfg.n_drives;
         QosReport {
             policy: policy.to_string(),
             arrivals: arrivals.to_string(),
@@ -93,6 +172,8 @@ impl QosReport {
                 LoopMode::Closed { max_in_flight } => format!("closed({max_in_flight})"),
             },
             n_drives: cfg.n_drives,
+            n_shards: cfg.n_shards,
+            vnodes: cfg.vnodes,
             duration_s,
             submitted: s.submitted,
             completed: s.completed,
@@ -108,29 +189,40 @@ impl QosReport {
             },
             mean_batch_size: s.completed as f64 / s.batches.max(1) as f64,
             drive_utilization: if s.makespan_us > 0 {
-                (s.busy_drive_us as f64 / (cfg.n_drives as f64 * s.makespan_us as f64))
+                (s.busy_drive_us as f64 / (fleet_drives as f64 * s.makespan_us as f64))
                     .min(1.0)
             } else {
                 0.0
             },
             latency: LatencyStats::from_histogram(&outcome.latency),
             service: LatencyStats::from_histogram(&outcome.service),
+            shards: outcome
+                .per_shard
+                .iter()
+                .map(|sh| ShardQos::from_outcome(sh, cfg.n_drives))
+                .collect(),
         }
     }
 
     /// Deterministic single-object JSON (stable key order, `%.6f` floats).
+    /// The fleet-wide `latency`/`service` objects are rendered exactly as
+    /// in the single-library report — sharding adds keys, it never
+    /// perturbs the fleet percentile bytes.
     pub fn to_json(&self) -> String {
-        format!(
+        let mut out = format!(
             "{{\"policy\":\"{}\",\"arrivals\":\"{}\",\"seed\":{},\"mode\":\"{}\",\
-             \"drives\":{},\"duration_s\":{:.6},\"submitted\":{},\"completed\":{},\
+             \"drives\":{},\"shards\":{},\"vnodes\":{},\"duration_s\":{:.6},\
+             \"submitted\":{},\"completed\":{},\
              \"shed\":{},\"busy_rejections\":{},\"retries\":{},\"batches\":{},\
              \"makespan_s\":{:.6},\"throughput_rps\":{:.6},\"mean_batch_size\":{:.6},\
-             \"drive_utilization\":{:.6},\"latency\":{},\"service\":{}}}",
+             \"drive_utilization\":{:.6},\"latency\":{},\"service\":{}",
             esc(&self.policy),
             esc(&self.arrivals),
             self.seed,
             esc(&self.mode),
             self.n_drives,
+            self.n_shards,
+            self.vnodes,
             self.duration_s,
             self.submitted,
             self.completed,
@@ -144,7 +236,16 @@ impl QosReport {
             self.drive_utilization,
             self.latency.json(),
             self.service.json(),
-        )
+        );
+        out.push_str(",\"per_shard\":[");
+        for (i, s) in self.shards.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&s.json());
+        }
+        out.push_str("]}");
+        out
     }
 }
 
@@ -197,6 +298,15 @@ mod tests {
         QosReport::new("GS", &model.name(), seed, 8.0, &cfg, &outcome)
     }
 
+    fn sharded_report(seed: u64, n_shards: usize) -> QosReport {
+        let catalog: Vec<Tape> =
+            (0..16).map(|i| Tape::from_sizes(format!("T{i:02}"), &[1_000; 40])).collect();
+        let cfg = ReplayConfig { n_shards, vnodes: 64, ..ReplayConfig::default() };
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 30.0, 8.0, seed);
+        let outcome = simulate(&cfg, &catalog, &Gs, &mut model);
+        QosReport::new("GS", &model.name(), seed, 8.0, &cfg, &outcome)
+    }
+
     #[test]
     fn report_fields_are_consistent() {
         let r = sample_report(5);
@@ -244,5 +354,47 @@ mod tests {
         assert_eq!(esc("plain"), "plain");
         assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
         assert_eq!(esc("x\ny"), "x\\u000ay");
+    }
+
+    #[test]
+    fn single_shard_report_keeps_the_fleet_percentile_bytes() {
+        // The acceptance contract of the sharding refactor: with one
+        // shard, the fleet `latency`/`service` JSON objects are rendered
+        // byte-for-byte from the same histograms the single-library
+        // engine produced.
+        let r = sample_report(7);
+        assert_eq!(r.n_shards, 1);
+        assert_eq!(r.shards.len(), 1);
+        let s = &r.shards[0];
+        assert_eq!(s.completed, r.completed);
+        assert_eq!(s.latency, r.latency, "one shard IS the fleet");
+        assert_eq!(s.latency.json(), r.latency.json());
+        let doc = r.to_json();
+        assert!(doc.contains("\"shards\":1"));
+        assert!(doc.contains("\"per_shard\":[{\"shard\":0,"));
+    }
+
+    #[test]
+    fn sharded_report_breaks_down_per_shard() {
+        let a = sharded_report(3, 4);
+        let b = sharded_report(3, 4);
+        assert_eq!(a.to_json(), b.to_json(), "sharded JSON stays byte-identical");
+        assert_eq!(a.shards.len(), 4);
+        assert_eq!(a.shards.iter().map(|s| s.completed).sum::<u64>(), a.completed);
+        assert_eq!(a.shards.iter().map(|s| s.tapes).sum::<usize>(), 16);
+        let share: f64 = a.shards.iter().map(|s| s.ring_share).sum();
+        assert!((share - 1.0).abs() < 1e-9);
+        for s in &a.shards {
+            if s.completed > 0 {
+                let l = &s.latency;
+                assert!(l.p50_s <= l.p95_s && l.p95_s <= l.p99_s && l.p99_s <= l.p999_s);
+                assert!(s.drive_utilization > 0.0 && s.drive_utilization <= 1.0);
+            }
+        }
+        // Balanced braces/brackets with the nested shard array present.
+        let doc = reports_json(&[a]);
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count());
+        assert!(doc.contains("\"ring_share\":"));
     }
 }

@@ -12,17 +12,94 @@
 //! dispatches on hot tapes reuse the Θ(k·n) buffers instead of allocating
 //! them anew per call; cost-only queries additionally skip the choice
 //! table entirely.
+//!
+//! ## Result cache
+//!
+//! Hot tapes frequently see *identical* batches back to back (the same
+//! popular files re-requested inside one window shape), and the dense
+//! wavefront is Θ(k²·n) per evaluation. A small per-thread memo keyed on
+//! the instance — tape geometry, `U`, and the full requested-file multiset
+//! — lets repeated identical batches skip the wavefront entirely. The key
+//! is a 128-bit fingerprint (two independent FNV-1a streams over every
+//! `(ℓ, r, x)` plus `m` and `U`, each finished with `fmix64`): a false
+//! collision needs ~2⁶⁴ distinct batches on one thread (birthday bound),
+//! far beyond any replay, and the cache is cleared wholesale at
+//! [`CACHE_CAP`] entries so memory stays bounded. Process-wide hit/miss
+//! counters are exported via [`dense_cache_stats`] for the serving
+//! metrics.
 
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::model::{Cost, Instance};
 use crate::sched::simpledp_dense::{dense_cost_into, dense_solve_into, DenseScratch};
 use crate::sched::Schedule;
+use crate::util::hash::{fmix64, FxHashMap};
 
 use super::SimpleDpBackend;
 
+/// Entries per thread-local result cache before it is cleared wholesale.
+const CACHE_CAP: usize = 1024;
+
+static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide dense result-cache counters: `(hits, misses)`, summed over
+/// every thread since process start. A hit means a dispatched batch
+/// skipped the Θ(k²·n) wavefront entirely.
+pub fn dense_cache_stats() -> (u64, u64) {
+    (CACHE_HITS.load(Ordering::Relaxed), CACHE_MISSES.load(Ordering::Relaxed))
+}
+
+/// 128-bit instance fingerprint (plus the exact `k`/`n` as a free sanity
+/// dimension). See the module docs for the collision argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct InstKey {
+    h1: u64,
+    h2: u64,
+    k: usize,
+    n: u64,
+}
+
+fn fingerprint(inst: &Instance) -> InstKey {
+    let mut h1: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h2: u64 = 0x6c62_272e_07bb_0142;
+    let mut eat = |v: u64| {
+        h1 = (h1 ^ v).wrapping_mul(0x0000_0100_0000_01b3);
+        h2 = (h2 ^ v.rotate_left(32)).wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    eat(inst.tape_len());
+    eat(inst.u());
+    for f in inst.files() {
+        eat(f.l);
+        eat(f.r);
+        eat(f.x);
+    }
+    InstKey { h1: fmix64(h1), h2: fmix64(h2), k: inst.k(), n: inst.n() }
+}
+
+#[derive(Debug, Clone)]
+struct CacheEntry {
+    cost: Cost,
+    /// `None` until a schedule is first requested (cost-only queries stay
+    /// cheap: no choice table, no reconstruction).
+    schedule: Option<Schedule>,
+}
+
 thread_local! {
     static SCRATCH: RefCell<DenseScratch> = RefCell::new(DenseScratch::default());
+    static CACHE: RefCell<FxHashMap<InstKey, CacheEntry>> =
+        RefCell::new(FxHashMap::default());
+}
+
+fn cache_insert(key: InstKey, entry: CacheEntry) {
+    CACHE.with(|c| {
+        let mut c = c.borrow_mut();
+        if c.len() >= CACHE_CAP {
+            c.clear();
+        }
+        c.insert(key, entry);
+    });
 }
 
 /// Pure-Rust dense SimpleDP backend (the default).
@@ -35,11 +112,31 @@ impl SimpleDpBackend for DenseBackend {
     }
 
     fn opt_cost(&self, inst: &Instance) -> Cost {
-        SCRATCH.with(|s| dense_cost_into(inst, &mut s.borrow_mut()))
+        let key = fingerprint(inst);
+        if let Some(cost) = CACHE.with(|c| c.borrow().get(&key).map(|e| e.cost)) {
+            CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+            return cost;
+        }
+        CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+        let cost = SCRATCH.with(|s| dense_cost_into(inst, &mut s.borrow_mut()));
+        cache_insert(key, CacheEntry { cost, schedule: None });
+        cost
     }
 
     fn opt_schedule(&self, inst: &Instance) -> Schedule {
-        SCRATCH.with(|s| dense_solve_into(inst, &mut s.borrow_mut()).1)
+        let key = fingerprint(inst);
+        if let Some(sched) =
+            CACHE.with(|c| c.borrow().get(&key).and_then(|e| e.schedule.clone()))
+        {
+            CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+            return sched;
+        }
+        // A cost-only entry upgrades here (the wavefront re-runs with the
+        // choice table — still counted as a miss).
+        CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+        let (cost, sched) = SCRATCH.with(|s| dense_solve_into(inst, &mut s.borrow_mut()));
+        cache_insert(key, CacheEntry { cost, schedule: Some(sched.clone()) });
+        sched
     }
 
     fn accelerates(&self, _inst: &Instance) -> bool {
@@ -85,5 +182,57 @@ mod tests {
         // The policy adapter must agree with the sparse scheduler's cost.
         let sparse = evaluate(&inst, &SimpleDp.schedule(&inst)).cost;
         assert_eq!(b.opt_cost(&inst), sparse);
+    }
+
+    #[test]
+    fn result_cache_hits_on_repeated_batches() {
+        // A distinctive instance (not reused by other tests on this
+        // thread: each #[test] runs on its own thread, so the
+        // thread-local cache starts empty; the global counters are shared
+        // and only ever increase, so deltas are asserted with ≥).
+        let inst = Instance::new(
+            977,
+            13,
+            vec![
+                ReqFile { l: 3, r: 41, x: 2 },
+                ReqFile { l: 100, r: 177, x: 5 },
+                ReqFile { l: 300, r: 301, x: 1 },
+                ReqFile { l: 640, r: 900, x: 3 },
+            ],
+        )
+        .unwrap();
+        let b = DenseBackend;
+        let (h0, m0) = dense_cache_stats();
+        let c1 = b.opt_cost(&inst);
+        let (_, m1) = dense_cache_stats();
+        assert!(m1 > m0, "first evaluation must miss");
+        let c2 = b.opt_cost(&inst);
+        let (h2, _) = dense_cache_stats();
+        assert!(h2 > h0, "identical batch must hit");
+        assert_eq!(c1, c2);
+        // A cost-only entry upgrades to a full entry on schedule demand…
+        let s1 = b.opt_schedule(&inst);
+        let (h3, m3) = dense_cache_stats();
+        assert!(m3 > m1, "schedule after cost-only is a (counted) miss");
+        // …after which the schedule is served from cache.
+        let s2 = b.opt_schedule(&inst);
+        let (h4, _) = dense_cache_stats();
+        assert!(h4 > h3);
+        assert_eq!(s1, s2);
+        assert_eq!(evaluate(&inst, &s1).cost, c1, "cached results stay exact");
+        assert_eq!(c1, SimpleDp::cost(&inst));
+        // A different multiset must not hit the same entry.
+        let other = Instance::new(
+            977,
+            13,
+            vec![
+                ReqFile { l: 3, r: 41, x: 3 }, // multiplicity differs
+                ReqFile { l: 100, r: 177, x: 5 },
+                ReqFile { l: 300, r: 301, x: 1 },
+                ReqFile { l: 640, r: 900, x: 3 },
+            ],
+        )
+        .unwrap();
+        assert_eq!(b.opt_cost(&other), SimpleDp::cost(&other));
     }
 }

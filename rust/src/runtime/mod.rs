@@ -21,7 +21,7 @@ mod engine;
 #[cfg(feature = "xla")]
 mod xla_simpledp;
 
-pub use dense::DenseBackend;
+pub use dense::{dense_cache_stats, DenseBackend};
 #[cfg(feature = "xla")]
 pub use engine::{Engine, RuntimeError};
 #[cfg(feature = "xla")]

@@ -56,6 +56,34 @@ pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
 pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
 pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
 
+/// The murmur3 64-bit finalizer: a full-avalanche bijection on `u64`.
+///
+/// Used wherever a *stable* well-mixed hash is needed (consistent-hash
+/// ring points, instance fingerprints): unlike `DefaultHasher`, the output
+/// is fixed across processes, runs, and platforms, which is what makes
+/// cluster routing byte-deterministic.
+#[inline]
+pub fn fmix64(mut h: u64) -> u64 {
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    h ^ (h >> 33)
+}
+
+/// Stable, well-distributed 64-bit hash of a byte string: FNV-1a over the
+/// bytes followed by [`fmix64`]. Deterministic across runs and platforms
+/// (no per-process seeding), so anything keyed on it — shard routing in
+/// particular — reproduces byte-for-byte.
+pub fn stable_hash64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    fmix64(h)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +117,28 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 16 * 16 * 64);
+    }
+
+    #[test]
+    fn stable_hash_is_stable_and_spreads() {
+        // Stability: pin concrete output values (computed independently
+        // from the FNV-1a + fmix64 definition) — a refactor that silently
+        // changes the function fails loudly here rather than remapping
+        // every tape in every deployed ring.
+        assert_eq!(stable_hash64(b"TAPE001"), 0xc2a5_b31a_f521_e84b);
+        assert_eq!(stable_hash64(b"shard0:vnode0"), 0x8eaf_1e54_fd6d_0585);
+        assert_ne!(stable_hash64(b"TAPE001"), stable_hash64(b"TAPE002"));
+        // Spread: hashing many similar keys must not collide.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000 {
+            seen.insert(stable_hash64(format!("TAPE{i:05}").as_bytes()));
+        }
+        assert_eq!(seen.len(), 10_000);
+        // fmix64 is a bijection: distinct inputs stay distinct.
+        let mut out = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            out.insert(fmix64(i));
+        }
+        assert_eq!(out.len(), 10_000);
     }
 }

@@ -1,0 +1,238 @@
+//! Integration tests for the multi-library cluster layer: consistent-hash
+//! ring stability (bounded key movement, byte-deterministic routing), the
+//! live sharded cluster behind the closed-loop driver, and end-to-end
+//! byte-stability of sharded replay QoS JSON.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tapesched::cluster::{Cluster, ClusterConfig, HashRing};
+use tapesched::coordinator::{BatcherConfig, CoordinatorConfig};
+use tapesched::model::Tape;
+use tapesched::replay::{
+    drive_closed_loop, reports_json, run_replay, PoissonArrivals, ReplayConfig, RequestMix,
+};
+use tapesched::sched::scheduler_by_name;
+use tapesched::sim::DriveParams;
+
+fn tape_names(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("IN2P3-TAPE-{i:05}")).collect()
+}
+
+/// Adding one shard to an N-shard ring must (a) move every remapped key
+/// *to* the new shard — the defining consistent-hashing property, exact,
+/// not statistical — and (b) move roughly `keys/(N+1)` keys, the bounded-
+/// movement contract (vnodes keep the variance small; the bound below is
+/// ~1.5× the expectation, many standard deviations of slack at 256
+/// vnodes).
+#[test]
+fn adding_a_shard_moves_a_bounded_fraction_to_the_newcomer() {
+    let keys = tape_names(10_000);
+    let n_shards = 4;
+    let mut ring = HashRing::new(n_shards, 256);
+    let before: Vec<usize> = keys.iter().map(|k| ring.route(k)).collect();
+    let new_id = ring.add_shard();
+    let after: Vec<usize> = keys.iter().map(|k| ring.route(k)).collect();
+
+    let mut moved = 0;
+    for (b, a) in before.iter().zip(&after) {
+        if b != a {
+            assert_eq!(*a, new_id, "a remapped key must move to the new shard");
+            moved += 1;
+        }
+    }
+    assert!(moved > 0, "the new shard must take over some keys");
+    let expected = keys.len() / (n_shards + 1);
+    let bound = expected + expected / 2; // (keys/(N+1)) · 1.5
+    assert!(
+        moved <= bound,
+        "moved {moved} keys, bound {bound} (expected ≈{expected})"
+    );
+}
+
+/// Removing a shard must remap exactly the keys it owned, nothing else.
+#[test]
+fn removing_a_shard_only_remaps_its_own_keys() {
+    let keys = tape_names(5_000);
+    let mut ring = HashRing::new(5, 128);
+    let victim = 2;
+    let before: Vec<usize> = keys.iter().map(|k| ring.route(k)).collect();
+    assert!(ring.remove_shard(victim));
+    let after: Vec<usize> = keys.iter().map(|k| ring.route(k)).collect();
+    for (i, (b, a)) in before.iter().zip(&after).enumerate() {
+        if *b == victim {
+            assert_ne!(*a, victim, "key {i} still routes to the removed shard");
+        } else {
+            assert_eq!(b, a, "key {i} moved although its shard survived");
+        }
+    }
+}
+
+/// Routing is byte-deterministic: two independently constructed rings with
+/// the same shape — and the same ring after an add/remove round trip of an
+/// *unrelated* shard — route every key identically.
+#[test]
+fn routing_is_byte_deterministic_across_runs() {
+    let keys = tape_names(2_000);
+    let a = HashRing::new(6, 64);
+    let b = HashRing::new(6, 64);
+    let routes: Vec<usize> = keys.iter().map(|k| a.route(k)).collect();
+    assert_eq!(routes, keys.iter().map(|k| b.route(k)).collect::<Vec<_>>());
+
+    // Membership round trip: removing a shard and re-adding one disturbs
+    // only arcs belonging to the membership change, deterministically.
+    let mut c = HashRing::new(6, 64);
+    let before: Vec<usize> = keys.iter().map(|k| c.route(k)).collect();
+    c.remove_shard(3);
+    let id = c.add_shard();
+    assert_eq!(id, 6);
+    let after: Vec<usize> = keys.iter().map(|k| c.route(k)).collect();
+    for (b, a) in before.iter().zip(&after) {
+        if *b != 3 && *a != id {
+            assert_eq!(b, a, "an uninvolved key moved across the round trip");
+        }
+    }
+}
+
+/// The live cluster serves a closed-loop workload end to end through the
+/// same driver the single coordinator uses (`RequestSink`), with per-shard
+/// metrics that reconcile at the rollup.
+#[test]
+fn live_cluster_serves_closed_loop_workload() {
+    let tapes: Vec<Tape> = (0..32)
+        .map(|i| Tape::from_sizes(format!("TAPE{i:03}"), &[1_000; 30]))
+        .collect();
+    let cluster = Cluster::start(
+        ClusterConfig {
+            n_shards: 4,
+            vnodes: 64,
+            shard: CoordinatorConfig {
+                n_drives: 2,
+                batcher: BatcherConfig {
+                    window: Duration::from_millis(2),
+                    max_batch: 64,
+                    ..BatcherConfig::default()
+                },
+                drive: DriveParams {
+                    mount_s: 0.5,
+                    unmount_s: 0.2,
+                    bytes_per_s: 1e9,
+                    uturn_s: 0.01,
+                },
+            },
+        },
+        tapes.clone(),
+        Arc::new(tapesched::sched::Gs),
+    );
+    let mut model =
+        PoissonArrivals::new(RequestMix::new(&tapes), 200.0, f64::INFINITY, 11);
+    let stats = drive_closed_loop(
+        &cluster,
+        &tapes,
+        &mut model,
+        64,
+        Duration::from_millis(1),
+        400,
+    );
+    assert_eq!(stats.submitted, 400);
+    assert_eq!(stats.dropped, 0);
+    let (completions, m) = cluster.finish();
+    assert_eq!(completions.len(), 400);
+    assert_eq!(m.completed, 400);
+    assert_eq!(m.routed_total, 400 + stats.busy_retries);
+    assert_eq!(m.shards.len(), 4);
+    assert_eq!(m.shards.iter().map(|s| s.metrics.completed).sum::<u64>(), 400);
+    assert!(m.imbalance_ratio() >= 1.0);
+}
+
+/// Acceptance gate: a sharded replay's QoS JSON is byte-stable for a fixed
+/// seed, per-shard sections reconcile with the fleet, and every shard that
+/// owns tapes appears in the report.
+#[test]
+fn sharded_replay_qos_json_is_byte_stable() {
+    let catalog: Vec<Tape> = (0..24)
+        .map(|i| Tape::from_sizes(format!("TAPE{i:03}"), &[2_000; 40]))
+        .collect();
+    let cfg = ReplayConfig {
+        n_drives: 2,
+        n_shards: 4,
+        vnodes: 64,
+        batcher: BatcherConfig {
+            window: Duration::from_millis(100),
+            max_batch: 128,
+            ..BatcherConfig::default()
+        },
+        drive: DriveParams {
+            mount_s: 2.0,
+            unmount_s: 1.0,
+            bytes_per_s: 1e9,
+            uturn_s: 0.1,
+        },
+        ..ReplayConfig::default()
+    };
+    let run = || {
+        let policy = scheduler_by_name("SimpleDP").unwrap();
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 50.0, 10.0, 7);
+        run_replay(&cfg, &catalog, policy.as_ref(), &mut model, 7, 10.0)
+    };
+    let (ra, oa) = run();
+    let (rb, ob) = run();
+    assert!(ra.completed > 300, "expected ~500 requests, got {}", ra.completed);
+    assert_eq!(oa.completions, ob.completions);
+    assert_eq!(ra, rb);
+    assert_eq!(
+        reports_json(&[ra.clone()]),
+        reports_json(&[rb]),
+        "sharded QoS JSON must be byte-identical for a fixed seed"
+    );
+    // Structure: 4 shard entries reconciling with the fleet counters.
+    assert_eq!(ra.shards.len(), 4);
+    assert_eq!(ra.shards.iter().map(|s| s.completed).sum::<u64>(), ra.completed);
+    assert_eq!(ra.shards.iter().map(|s| s.tapes).sum::<usize>(), 24);
+    for s in &ra.shards {
+        if s.tapes == 0 {
+            assert_eq!(s.completed, 0, "a tapeless shard cannot serve");
+        }
+        if s.completed > 0 {
+            assert!(s.latency.p50_s <= s.latency.p999_s);
+        }
+    }
+}
+
+/// `--shards 1` reproduces the single-library replay exactly: the fleet
+/// percentile objects in the JSON are byte-identical to a config that
+/// never mentions sharding (the default), for the same seed.
+#[test]
+fn one_shard_reproduces_the_single_library_replay() {
+    let catalog: Vec<Tape> = (0..8)
+        .map(|i| Tape::from_sizes(format!("TAPE{i:03}"), &[2_000; 40]))
+        .collect();
+    let base = ReplayConfig {
+        n_drives: 3,
+        batcher: BatcherConfig {
+            window: Duration::from_millis(100),
+            max_batch: 128,
+            ..BatcherConfig::default()
+        },
+        drive: DriveParams {
+            mount_s: 2.0,
+            unmount_s: 1.0,
+            bytes_per_s: 1e9,
+            uturn_s: 0.1,
+        },
+        ..ReplayConfig::default()
+    };
+    assert_eq!(base.n_shards, 1, "default config is the single-library replay");
+    let explicit = ReplayConfig { n_shards: 1, vnodes: 64, ..base.clone() };
+    let run = |cfg: &ReplayConfig| {
+        let policy = scheduler_by_name("GS").unwrap();
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 40.0, 8.0, 13);
+        run_replay(cfg, &catalog, policy.as_ref(), &mut model, 13, 8.0)
+    };
+    let (ra, oa) = run(&base);
+    let (rb, ob) = run(&explicit);
+    assert_eq!(oa.completions, ob.completions, "identical completion logs");
+    assert_eq!(ra.latency, rb.latency, "identical fleet percentiles");
+    assert_eq!(ra.service, rb.service);
+    assert_eq!(reports_json(&[ra]), reports_json(&[rb]), "byte-identical JSON");
+}

@@ -43,6 +43,7 @@ fn fast_cfg(mode: LoopMode) -> ReplayConfig {
         },
         mode,
         retry_backoff_s: 0.02,
+        ..ReplayConfig::default()
     }
 }
 

@@ -21,6 +21,19 @@ cargo test -q
 cargo bench --no-run
 cargo build --examples
 
+# Lint gate: clippy with -D warnings (advisory unless CLIPPY_STRICT=1,
+# mirroring the fmt gate — offline toolchains may ship without clippy).
+if cargo clippy --version >/dev/null 2>&1; then
+    if ! cargo clippy -q -- -D warnings; then
+        echo "ci: clippy findings detected (run \`cargo clippy\` to inspect)" >&2
+        if [ "${CLIPPY_STRICT:-0}" = "1" ]; then
+            exit 1
+        fi
+    fi
+else
+    echo "ci: clippy unavailable; skipping lint gate" >&2
+fi
+
 # Replay gate: a seeded 2-second virtual replay must emit a parseable,
 # non-empty QoS report with a sane percentile ladder per policy.
 ./target/release/tapesched replay --arrivals poisson --rate 50 --duration 2 \
@@ -36,6 +49,31 @@ for r in reports:
     lat = r["latency"]
     assert 0 <= lat["p50_s"] <= lat["p95_s"] <= lat["p99_s"] <= lat["p999_s"], lat
 print(f"ci: replay smoke OK ({len(reports)} policies)")
+EOF
+
+# Sharded replay gate: the per-shard QoS JSON must parse, every shard must
+# have served requests, and every percentile ladder (fleet + per shard)
+# must be monotone.
+./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+    --out /tmp/replay_shard_ci.json
+python3 - /tmp/replay_shard_ci.json <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+reports = doc["reports"]
+assert reports, "no QoS reports emitted"
+def ladder_ok(lat):
+    return 0 <= lat["p50_s"] <= lat["p95_s"] <= lat["p99_s"] <= lat["p999_s"]
+for r in reports:
+    assert r["shards"] == 4, r["shards"]
+    shards = r["per_shard"]
+    assert len(shards) == 4, f"expected 4 shard sections, got {len(shards)}"
+    assert sum(s["completed"] for s in shards) == r["completed"]
+    for s in shards:
+        assert s["completed"] > 0, f"shard {s['shard']} served no requests"
+        assert ladder_ok(s["latency"]), (s["shard"], s["latency"])
+    assert ladder_ok(r["latency"]), r["latency"]
+print(f"ci: shard smoke OK (4 shards, {reports[0]['completed']} requests)")
 EOF
 
 echo "ci: all gates green"
