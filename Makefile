@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test benches bench-smoke replay-smoke shard-smoke examples fmt fmt-check artifacts ci clean
+.PHONY: verify build test benches bench-smoke replay-smoke shard-smoke arm-smoke examples fmt fmt-check artifacts ci clean
 
 verify: ## tier-1 gate: release build + full test suite
 	$(CARGO) build --release
@@ -46,6 +46,27 @@ shard-smoke: build
 	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
 		--out results/shard-smoke.json
 	@echo "shard-smoke: results/shard-smoke.json"
+
+# Mount-pipeline gate: (a) `--arms 0 --affinity none` must be byte-identical
+# to the same replay without the flags — the legacy fixed mount-cost path —
+# and (b) one robot arm with LRU affinity on the bursty workload must show
+# remount hits, an arm-dominated tail (arm-wait p99 ≥ drive-wait p99), and a
+# strictly worse latency p99.9 than the unconstrained robot (the assertion
+# script lives in scripts/ci.sh; this target reproduces the artifacts).
+arm-smoke: build
+	mkdir -p results
+	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+		--out results/arm-legacy-default.json
+	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+		--arms 0 --affinity none --out results/arm-legacy-flags.json
+	cmp results/arm-legacy-default.json results/arm-legacy-flags.json
+	./target/release/tapesched replay --arrivals bursty --rate 0.1 --duration 600 \
+		--tapes 4 --drives 128 --max-batch 1 --seed 7 \
+		--out results/arm-base.json
+	./target/release/tapesched replay --arrivals bursty --rate 0.1 --duration 600 \
+		--tapes 4 --drives 128 --max-batch 1 --seed 7 \
+		--arms 1 --affinity lru --out results/arm-smoke.json
+	@echo "arm-smoke: results/arm-smoke.json (legacy bytes verified via cmp)"
 
 examples:
 	$(CARGO) build --examples

@@ -63,6 +63,7 @@ fn main() {
                     ..BatcherConfig::default()
                 },
                 drive: DriveParams::default(),
+                ..CoordinatorConfig::default()
             },
             ds.tapes.iter().map(|t| t.tape.clone()),
             Arc::from(policy),

@@ -92,6 +92,7 @@ fn main() {
                     ..BatcherConfig::default()
                 },
                 drive: DriveParams::default(),
+                ..CoordinatorConfig::default()
             },
             ds.tapes.iter().take(n_tapes).map(|t| t.tape.clone()),
             Arc::from(scheduler_by_name("SimpleDP").unwrap()),

@@ -73,6 +73,7 @@ fn main() {
                             ..BatcherConfig::default()
                         },
                         drive: DriveParams::default(),
+                        ..CoordinatorConfig::default()
                     },
                     ds.tapes.iter().map(|t| t.tape.clone()),
                     Arc::from(scheduler_by_name(policy_name).unwrap()),

@@ -13,7 +13,7 @@ use tapesched::replay::{
     RequestMix,
 };
 use tapesched::sched::scheduler_by_name;
-use tapesched::sim::DriveParams;
+use tapesched::sim::{Affinity, DriveParams};
 
 fn main() {
     let smoke = smoke_requested();
@@ -79,6 +79,44 @@ fn main() {
             out.stats.completed,
             s,
             out.stats.completed as f64 / s.max(1e-9),
+        );
+    }
+
+    // Mount pipeline: the same offered load with the robot-arm pool
+    // bounded and LRU drive affinity on — measures the event-driven
+    // pipeline's replay overhead and surfaces the remount economics.
+    {
+        let pipe_cfg = ReplayConfig {
+            drive: DriveParams { n_arms: 2, ..DriveParams::default() },
+            affinity: Affinity::Lru,
+            ..cfg.clone()
+        };
+        let policy = scheduler_by_name("SimpleDP").unwrap();
+        let mut model = PoissonArrivals::new(mix.clone(), rate, duration, 7);
+        let wall = Instant::now();
+        let out = simulate(&pipe_cfg, &catalog, policy.as_ref(), &mut model);
+        let s = wall.elapsed().as_secs_f64();
+        assert!(out.stats.completed > 0, "pipeline replay must serve requests");
+        assert_eq!(
+            out.stats.remount_hits + out.stats.remount_misses,
+            out.stats.batches,
+            "every batch must be classified hit or miss"
+        );
+        suite.record(BenchResult {
+            name: "replay/mount_pipeline_2arms_lru/SimpleDP".to_string(),
+            iters: 1,
+            median: s,
+            mean: s,
+            p10: s,
+            p90: s,
+        });
+        println!(
+            "    → pipeline: {} requests, {} remount hits / {} misses, arm-wait p99 {:.1}s in {:.3} wall s",
+            out.stats.completed,
+            out.stats.remount_hits,
+            out.stats.remount_misses,
+            out.arm_wait.quantile(99.0),
+            s,
         );
     }
 

@@ -8,5 +8,7 @@ pub mod report;
 pub mod svg;
 
 pub use profile::{performance_profile, ProfileCurve, ProfilePoint};
-pub use report::{qos_comparison, run_evaluation, shard_summary, EvalRecord, EvalTable};
+pub use report::{
+    mount_summary, qos_comparison, run_evaluation, shard_summary, EvalRecord, EvalTable,
+};
 pub use svg::trajectory_svg;

@@ -235,6 +235,40 @@ pub fn shard_summary(r: &QosReport) -> String {
     out
 }
 
+/// Mount-pipeline summary for a replay run with the arm pool and/or drive
+/// affinity active: remount economics plus the three pipeline wait
+/// ladders (per-op arm wait, per-batch mount-pipeline latency, per-batch
+/// free-drive wait). Rendered on stderr next to the QoS table — these are
+/// exactly the components the fixed mount-cost model hides, and the ones
+/// that dominate p99.9 on a contended library.
+pub fn mount_summary(r: &QosReport) -> String {
+    let total = r.remount_hits + r.remount_misses;
+    let hit_pct = if total > 0 {
+        r.remount_hits as f64 / total as f64 * 100.0
+    } else {
+        0.0
+    };
+    let mut out = format!(
+        "mount pipeline: arms={} affinity={} | remounts hit/miss = {}/{} ({:.1}% hit)\n",
+        if r.arms == 0 { "∞".to_string() } else { r.arms.to_string() },
+        r.affinity,
+        r.remount_hits,
+        r.remount_misses,
+        hit_pct,
+    );
+    for (name, l) in [
+        ("arm wait", &r.arm_wait),
+        ("mount wait", &r.mount_wait),
+        ("drive wait", &r.drive_wait),
+    ] {
+        out.push_str(&format!(
+            "  {name:<10} p50/p99/p99.9 = {:>8.1} / {:>8.1} / {:>8.1} s (max {:.1})\n",
+            l.p50_s, l.p99_s, l.p999_s, l.max_s,
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -354,6 +388,30 @@ mod tests {
         assert!(lines[0].contains("share%"));
         assert!(lines.last().unwrap().starts_with("imbalance:"));
         assert!(lines.last().unwrap().contains("ring spread"));
+    }
+
+    #[test]
+    fn mount_summary_renders_pipeline_lines() {
+        use crate::model::Tape;
+        use crate::replay::{run_replay, PoissonArrivals, ReplayConfig, RequestMix};
+        use crate::sim::{Affinity, DriveParams};
+        let catalog = vec![Tape::from_sizes("T0", &[1_000; 30])];
+        let cfg = ReplayConfig {
+            drive: DriveParams { n_arms: 1, ..DriveParams::default() },
+            affinity: Affinity::Lru,
+            ..ReplayConfig::default()
+        };
+        let p = crate::sched::scheduler_by_name("GS").unwrap();
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 5.0, 5.0, 3);
+        let (r, _) = run_replay(&cfg, &catalog, p.as_ref(), &mut model, 3, 5.0);
+        assert!(r.pipeline);
+        let table = mount_summary(&r);
+        assert!(table.starts_with("mount pipeline: arms=1 affinity=lru"));
+        assert!(table.contains("% hit)"));
+        for name in ["arm wait", "mount wait", "drive wait"] {
+            assert!(table.contains(name), "missing {name}:\n{table}");
+        }
+        assert_eq!(table.lines().count(), 4, "header + three ladders:\n{table}");
     }
 
     #[test]

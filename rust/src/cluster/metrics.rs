@@ -36,6 +36,10 @@ pub struct ClusterMetricsSnapshot {
     /// see `MetricsSnapshot::shed`).
     pub shed: u64,
     pub batches: u64,
+    /// Batches served fleet-wide without a mount (drive affinity).
+    pub remount_hits: u64,
+    /// Batches that paid a mount fleet-wide.
+    pub remount_misses: u64,
     /// Completion-weighted mean end-to-end latency, seconds.
     pub mean_latency_s: f64,
     /// Completion-weighted mean in-tape service time, seconds.
@@ -72,6 +76,8 @@ pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
         rejected: 0,
         shed: 0,
         batches: 0,
+        remount_hits: 0,
+        remount_misses: 0,
         mean_latency_s: 0.0,
         mean_service_s: 0.0,
         max_shard_completed: 0,
@@ -85,6 +91,8 @@ pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
         snap.rejected += s.metrics.rejected;
         snap.shed += s.metrics.shed;
         snap.batches += s.metrics.batches;
+        snap.remount_hits += s.metrics.remount_hits;
+        snap.remount_misses += s.metrics.remount_misses;
         lat_sum += s.metrics.mean_latency_s * s.metrics.completed as f64;
         svc_sum += s.metrics.mean_service_s * s.metrics.completed as f64;
         snap.max_shard_completed = snap.max_shard_completed.max(s.metrics.completed);
@@ -112,6 +120,8 @@ mod tests {
             rejected,
             shed: 0,
             batches: completed / 2,
+            remount_hits: completed / 4,
+            remount_misses: completed / 2 - completed / 4,
             mean_latency_s: lat,
             mean_service_s: svc,
             mean_sched_s_per_batch: 0.0,
@@ -133,6 +143,9 @@ mod tests {
         assert_eq!(snap.submitted, 40);
         assert_eq!(snap.completed, 40);
         assert_eq!(snap.rejected, 12);
+        // Remount counters add like every other counter: (7+2) + (5+3).
+        assert_eq!(snap.remount_hits, 30 / 4 + 10 / 4);
+        assert_eq!(snap.remount_misses, (15 - 7) + (5 - 2));
         // Weighted means: (30·4 + 10·1)/40 = 3.25; (30·2 + 10·0.5)/40.
         assert!((snap.mean_latency_s - 3.25).abs() < 1e-12);
         assert!((snap.mean_service_s - 1.625).abs() < 1e-12);

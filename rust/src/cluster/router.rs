@@ -7,6 +7,13 @@
 //! counter, and delegates — so every per-shard contract (validation,
 //! `SubmitError::Busy` backpressure, drain-on-finish) holds unchanged at
 //! the cluster level, per shard.
+//!
+//! Routing is two-stage: the ring picks the **library** (stage 1), then
+//! inside the shard the coordinator's placement stage picks the **drive**
+//! (stage 2) — under [`crate::sim::Affinity::Lru`] preferring a drive that
+//! already holds the batch's tape, so a remount hit skips the mount
+//! entirely. Per-shard `remount_hits`/`remount_misses` roll up in the
+//! cluster [`ClusterMetricsSnapshot`] like every other counter.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -226,7 +233,7 @@ mod tests {
     use super::*;
     use crate::coordinator::BatcherConfig;
     use crate::sched::Gs;
-    use crate::sim::DriveParams;
+    use crate::sim::{Affinity, DriveParams};
     use std::time::Duration;
 
     fn catalog(n: usize) -> Vec<Tape> {
@@ -249,7 +256,9 @@ mod tests {
                     unmount_s: 0.5,
                     bytes_per_s: 1e6,
                     uturn_s: 0.001,
+                    n_arms: 0,
                 },
+                affinity: Affinity::None,
             },
         }
     }
@@ -289,6 +298,38 @@ mod tests {
         // The routing counter still ticked: routing happens before
         // validation, exactly like a front-end proxy.
         assert_eq!(m.routed_total, 1);
+    }
+
+    #[test]
+    fn lru_affinity_remount_counters_roll_up() {
+        // One tape, one drive per shard: wherever the ring homes the tape,
+        // its four cap-split batches serialize through one drive — the
+        // first mounts, the rest are remount hits. Deterministic.
+        let mut config = cfg(2);
+        config.shard.n_drives = 1;
+        config.shard.affinity = Affinity::Lru;
+        config.shard.batcher.window = Duration::from_secs(3600);
+        config.shard.batcher.max_batch = 4;
+        let tapes = catalog(1);
+        let cluster = Cluster::start(config, tapes.clone(), Arc::new(Gs));
+        for i in 0..16u64 {
+            let req = ReadRequest {
+                id: i,
+                tape: tapes[0].name.clone(),
+                file_index: (i % 20) as usize,
+            };
+            assert!(cluster.submit(req).is_ok());
+        }
+        let (completions, m) = cluster.finish();
+        assert_eq!(completions.len(), 16);
+        assert_eq!(m.batches, 4);
+        assert_eq!(m.remount_misses, 1, "only the first batch mounts");
+        assert_eq!(m.remount_hits, 3);
+        assert_eq!(
+            m.remount_hits,
+            m.shards.iter().map(|s| s.metrics.remount_hits).sum::<u64>(),
+            "the rollup is the per-shard sum"
+        );
     }
 
     #[test]

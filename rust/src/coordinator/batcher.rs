@@ -70,6 +70,12 @@ pub struct Batch {
     pub by_file: Vec<(usize, Vec<u64>)>,
     /// When the batch was opened (its first request's enqueue time).
     pub opened_at: Instant,
+    /// When the batch first became dispatchable: the size-cap close time,
+    /// the window expiry, or (under forced drain) the pop itself. The gap
+    /// between this and the actual dispatch is the batch's *drive wait* —
+    /// time spent queueing for a free drive, a first-class latency
+    /// component of the mount pipeline.
+    pub ready_at: Instant,
 }
 
 impl Batch {
@@ -86,6 +92,10 @@ impl Batch {
 
     /// Map the ground-truth outcome of this batch's schedule back to per
     /// request `(id, mount-inclusive service seconds)` pairs.
+    /// `mount_charge_s` is the mount-pipeline latency this batch actually
+    /// paid — `drive.mount_s` in the legacy fixed-cost model, `0` on a
+    /// drive-affinity remount hit, `unmount_s + mount_s` on an eviction
+    /// (see [`crate::sim::DriveParams::mount_charge_s`]).
     ///
     /// This is the single home of a load-bearing invariant: the instance
     /// built from [`Batch::multiplicities`] has its files in *this batch's
@@ -97,10 +107,30 @@ impl Batch {
         &'a self,
         out: &'a SimOutcome,
         drive: DriveParams,
+        mount_charge_s: f64,
     ) -> impl Iterator<Item = (u64, f64)> + 'a {
         self.by_file.iter().enumerate().flat_map(move |(i, (_file, ids))| {
-            let service_s = drive.to_seconds(out.service[i]) + drive.mount_s;
+            let service_s = drive.to_seconds(out.service[i]) + mount_charge_s;
             ids.iter().map(move |&id| (id, service_s))
+        })
+    }
+
+    /// Integer-µs sibling of [`Batch::request_service_times`] for the
+    /// replay engine's event-driven mount pipeline: `mount_delay_us` is
+    /// the measured virtual pipeline latency (arm waits + robot ops) from
+    /// dispatch to execution start. Same `by_file[i] ↔ out.service[i]`
+    /// invariant; the in-tape component uses the engine's `secs_to_us`
+    /// rounding so completions stay on the deterministic µs grid.
+    pub fn request_service_times_us<'a>(
+        &'a self,
+        out: &'a SimOutcome,
+        drive: DriveParams,
+        mount_delay_us: u64,
+    ) -> impl Iterator<Item = (u64, u64)> + 'a {
+        self.by_file.iter().enumerate().flat_map(move |(i, (_file, ids))| {
+            let in_tape_us = crate::util::secs_to_us(drive.to_seconds(out.service[i]));
+            let service_us = mount_delay_us + in_tape_us;
+            ids.iter().map(move |&id| (id, service_us))
         })
     }
 }
@@ -143,10 +173,10 @@ impl Batcher {
         }
     }
 
-    fn seal(tape: String, b: OpenBatch) -> Batch {
+    fn seal(tape: String, b: OpenBatch, ready_at: Instant) -> Batch {
         let mut by_file: Vec<(usize, Vec<u64>)> = b.by_file.into_iter().collect();
         by_file.sort();
-        Batch { tape, by_file, opened_at: b.opened_at }
+        Batch { tape, by_file, opened_at: b.opened_at, ready_at }
     }
 
     /// Add one request. When the tape's open batch reaches the size cap it
@@ -181,7 +211,9 @@ impl Batcher {
         if entry.n >= self.cfg.max_batch {
             let b = self.open.remove(tape).unwrap();
             self.fifo.retain(|t| t != tape);
-            self.closed.push_back(Self::seal(tape.to_string(), b));
+            // The size cap closes the batch right now: dispatchable from
+            // this instant.
+            self.closed.push_back(Self::seal(tape.to_string(), b, now));
             PushOutcome::Ready
         } else {
             PushOutcome::Accepted
@@ -215,7 +247,10 @@ impl Batcher {
         let b = self.open.remove(&tape).unwrap();
         self.dispatched += b.n as u64;
         Self::debit_backlog(&mut self.backlog, &tape, b.n as u64);
-        Some(Self::seal(tape, b))
+        // Dispatchable since its window expired — or, when force-popped
+        // before that (drain / idle drive), since right now.
+        let ready_at = (b.opened_at + self.cfg.window).min(now);
+        Some(Self::seal(tape, b, ready_at))
     }
 
     /// Requests currently queued for `tape` (open + cap-closed batches).
@@ -383,6 +418,25 @@ mod tests {
             b.next_deadline(),
             Some(t0 + Duration::from_millis(5) + window)
         );
+    }
+
+    #[test]
+    fn ready_at_marks_when_a_batch_became_dispatchable() {
+        let mut b = Batcher::new(cfg(100, 2));
+        let t0 = Instant::now();
+        // Size-cap close: dispatchable the instant the cap is hit.
+        b.push("A", 0, 1, t0);
+        assert!(b.push("A", 1, 2, t0 + Duration::from_millis(3)).ready());
+        let batch = b.pop_ready(t0 + Duration::from_millis(50), false).unwrap();
+        assert_eq!(batch.ready_at, t0 + Duration::from_millis(3));
+        // Window pop: ready at the window expiry even when popped later.
+        b.push("B", 0, 3, t0);
+        let batch = b.pop_ready(t0 + Duration::from_millis(250), false).unwrap();
+        assert_eq!(batch.ready_at, t0 + Duration::from_millis(100));
+        // Forced pop before the window (drain / idle drive): ready now.
+        b.push("C", 0, 4, t0);
+        let batch = b.pop_ready(t0 + Duration::from_millis(10), true).unwrap();
+        assert_eq!(batch.ready_at, t0 + Duration::from_millis(10));
     }
 
     #[test]

@@ -15,6 +15,11 @@ pub struct SharedMetrics {
     /// `rejected`, which never entered the system.
     shed: AtomicU64,
     batches: AtomicU64,
+    /// Batches that landed on a drive already holding their tape (the
+    /// mount was skipped entirely — drive affinity).
+    remount_hits: AtomicU64,
+    /// Batches that needed a fresh mount (empty drive or LRU eviction).
+    remount_misses: AtomicU64,
     /// Sum of end-to-end request latencies, in µs.
     latency_sum_us: AtomicU64,
     /// Sum of in-tape service times, in µs.
@@ -37,6 +42,10 @@ pub struct MetricsSnapshot {
     /// in-flight accounting is `submitted − completed − shed`.
     pub shed: u64,
     pub batches: u64,
+    /// Batches served without a mount (drive already held the tape).
+    pub remount_hits: u64,
+    /// Batches that paid a mount (empty drive or eviction).
+    pub remount_misses: u64,
     pub mean_latency_s: f64,
     pub mean_service_s: f64,
     pub mean_sched_s_per_batch: f64,
@@ -66,6 +75,16 @@ impl SharedMetrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.sched_sum_us
             .fetch_add((sched_s * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Record a batch landing on a drive that already held its tape.
+    pub fn on_remount_hit(&self) {
+        self.remount_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a batch that needed a fresh mount.
+    pub fn on_remount_miss(&self) {
+        self.remount_misses.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one served request: end-to-end latency + in-tape service (s).
@@ -105,6 +124,8 @@ impl SharedMetrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             batches,
+            remount_hits: self.remount_hits.load(Ordering::Relaxed),
+            remount_misses: self.remount_misses.load(Ordering::Relaxed),
             mean_latency_s: self.latency_sum_us.load(Ordering::Relaxed) as f64
                 / 1e6
                 / completed.max(1) as f64,
@@ -131,6 +152,9 @@ mod tests {
         m.on_reject(2);
         m.on_shed(1);
         m.on_batch(0.5);
+        m.on_remount_hit();
+        m.on_remount_miss();
+        m.on_remount_miss();
         m.on_complete(2.0, 1.0);
         m.on_complete(4.0, 3.0);
         let s = m.snapshot();
@@ -139,6 +163,8 @@ mod tests {
         assert_eq!(s.shed, 1);
         assert_eq!(s.completed, 2);
         assert_eq!(s.batches, 1);
+        assert_eq!(s.remount_hits, 1);
+        assert_eq!(s.remount_misses, 2);
         assert!((s.mean_latency_s - 3.0).abs() < 1e-3);
         assert!((s.mean_service_s - 2.0).abs() < 1e-3);
         assert!((s.mean_sched_s_per_batch - 0.5).abs() < 1e-3);

@@ -5,6 +5,19 @@
 //! right tool anyway). One worker thread models one tape drive: batches
 //! for distinct tapes run concurrently up to the drive count, batches for
 //! the same tape serialize through the batcher (one open batch per tape).
+//!
+//! **Drive placement** is a second routing stage after the batcher: the
+//! dispatcher picks *which* drive a batch lands on through a shared drive
+//! table. Under [`Affinity::Lru`] a tape stays mounted after its batch
+//! (lazy unmount), a batch for a loaded idle drive is a *remount hit*
+//! (mount charge skipped, `remount_hits` metric), and when no empty drive
+//! is free the least-recently-used loaded drive is evicted (charging
+//! `unmount_s + mount_s`). Under [`Affinity::None`] every batch pays the
+//! paper's fixed `mount_s` — the legacy model, byte-compatible with the
+//! previous single-channel dispatcher. Robot-arm *contention* (mounts
+//! queueing on a small arm pool) is a virtual-time phenomenon and lives in
+//! the replay engine; the live path mirrors the placement policy and the
+//! hit/miss accounting so both report the same remount economics.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -18,7 +31,7 @@ use super::metrics::{MetricsSnapshot, SharedMetrics};
 use crate::model::{Instance, Tape};
 use crate::runtime::{BackendPolicy, SimpleDpBackend};
 use crate::sched::Scheduler;
-use crate::sim::{evaluate, DriveParams};
+use crate::sim::{evaluate, pick_drive_slot, Affinity, DriveParams, MountPlan};
 
 /// A client read request for one file on one tape.
 #[derive(Debug, Clone)]
@@ -75,6 +88,10 @@ pub struct CoordinatorConfig {
     pub n_drives: usize,
     pub batcher: BatcherConfig,
     pub drive: DriveParams,
+    /// Drive-placement policy: [`Affinity::Lru`] keeps tapes mounted and
+    /// routes batches to drives already holding them; [`Affinity::None`]
+    /// is the legacy fixed mount-cost model.
+    pub affinity: Affinity,
 }
 
 impl Default for CoordinatorConfig {
@@ -83,6 +100,7 @@ impl Default for CoordinatorConfig {
             n_drives: 4,
             batcher: BatcherConfig::default(),
             drive: DriveParams::default(),
+            affinity: Affinity::None,
         }
     }
 }
@@ -95,6 +113,46 @@ struct Shared {
     metrics: SharedMetrics,
     completions: Mutex<Vec<Completion>>,
     stopping: AtomicBool,
+    /// The drive table: which tape each drive holds and whether it is
+    /// busy. The dispatcher picks a slot under this lock; workers release
+    /// their slot and signal `drive_freed` when a batch finishes.
+    drives: Mutex<DriveSlots>,
+    drive_freed: Condvar,
+}
+
+/// One physical drive's placement state.
+#[derive(Debug, Clone)]
+struct DriveSlot {
+    /// Tape currently threaded in the drive (None = empty). Under
+    /// `Affinity::Lru` this survives between batches (lazy unmount).
+    loaded: Option<String>,
+    busy: bool,
+    /// Monotone dispatch tick of the drive's last batch (LRU eviction).
+    last_used: u64,
+}
+
+#[derive(Debug)]
+struct DriveSlots {
+    slots: Vec<DriveSlot>,
+    tick: u64,
+}
+
+/// Pick the drive a batch for `tape` lands on, and the mount work that
+/// implies, through the one shared preference the replay engine also uses
+/// ([`pick_drive_slot`] in `sim::library`: hit, then empty, then LRU
+/// eviction). `None` when every drive is busy.
+fn pick_slot(slots: &[DriveSlot], tape: &str, affinity: Affinity) -> Option<(usize, MountPlan)> {
+    pick_drive_slot(
+        affinity,
+        slots.iter().map(|s| {
+            (
+                !s.busy,
+                s.loaded.as_deref() == Some(tape),
+                s.loaded.is_none(),
+                s.last_used,
+            )
+        }),
+    )
 }
 
 /// The running service. Create with [`Coordinator::start`], feed with
@@ -109,6 +167,9 @@ pub struct Coordinator {
 struct Job {
     batch: Batch,
     instance: Instance,
+    /// Mount-pipeline latency this batch pays (0 on a remount hit; see
+    /// [`DriveParams::mount_charge_s`]).
+    mount_charge_s: f64,
 }
 
 impl Coordinator {
@@ -118,6 +179,7 @@ impl Coordinator {
         catalog: impl IntoIterator<Item = Tape>,
         policy: Arc<dyn Scheduler + Send + Sync>,
     ) -> Coordinator {
+        assert!(cfg.n_drives > 0, "a coordinator needs at least one drive");
         let shared = Arc::new(Shared {
             batcher: Mutex::new(Batcher::new(cfg.batcher)),
             wakeup: Condvar::new(),
@@ -128,25 +190,35 @@ impl Coordinator {
             metrics: SharedMetrics::default(),
             completions: Mutex::new(Vec::new()),
             stopping: AtomicBool::new(false),
+            drives: Mutex::new(DriveSlots {
+                slots: vec![
+                    DriveSlot { loaded: None, busy: false, last_used: 0 };
+                    cfg.n_drives
+                ],
+                tick: 0,
+            }),
+            drive_freed: Condvar::new(),
         });
 
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-
+        // One channel per drive worker: the dispatcher routes each batch
+        // to the specific drive the placement stage chose.
+        let mut txs = Vec::with_capacity(cfg.n_drives);
         let workers = (0..cfg.n_drives)
-            .map(|_| {
+            .map(|i| {
+                let (tx, rx) = channel::<Job>();
+                txs.push(tx);
                 let shared = Arc::clone(&shared);
-                let rx = Arc::clone(&rx);
                 let drive = cfg.drive;
                 let policy = Arc::clone(&policy);
-                std::thread::spawn(move || worker_loop(shared, rx, drive, policy))
+                std::thread::spawn(move || worker_loop(shared, i, rx, drive, policy))
             })
             .collect();
 
         let dispatcher = {
             let shared = Arc::clone(&shared);
             let drive = cfg.drive;
-            std::thread::spawn(move || dispatcher_loop(shared, tx, drive))
+            let affinity = cfg.affinity;
+            std::thread::spawn(move || dispatcher_loop(shared, txs, drive, affinity))
         };
 
         Coordinator { cfg, shared, dispatcher: Some(dispatcher), workers }
@@ -256,7 +328,12 @@ impl Coordinator {
     }
 }
 
-fn dispatcher_loop(shared: Arc<Shared>, tx: Sender<Job>, drive: DriveParams) {
+fn dispatcher_loop(
+    shared: Arc<Shared>,
+    txs: Vec<Sender<Job>>,
+    drive: DriveParams,
+    affinity: Affinity,
+) {
     loop {
         let stopping = shared.stopping.load(Ordering::SeqCst);
         let batch = {
@@ -306,22 +383,56 @@ fn dispatcher_loop(shared: Arc<Shared>, tx: Sender<Job>, drive: DriveParams) {
                     }
                 }
             };
-            if tx.send(Job { batch, instance }).is_err() {
-                break; // workers gone
+            // Placement stage: wait for a free drive and pick which one
+            // the batch lands on (affinity-first). Workers signal
+            // `drive_freed` after every batch, so this cannot wedge while
+            // any drive is still serving.
+            let (drive_idx, plan) = {
+                let mut table = shared.drives.lock().unwrap();
+                loop {
+                    if let Some((i, plan)) = pick_slot(&table.slots, &batch.tape, affinity) {
+                        table.tick += 1;
+                        let tick = table.tick;
+                        let slot = &mut table.slots[i];
+                        slot.busy = true;
+                        slot.last_used = tick;
+                        slot.loaded = match affinity {
+                            Affinity::Lru => Some(batch.tape.clone()),
+                            Affinity::None => None,
+                        };
+                        break (i, plan);
+                    }
+                    table = shared.drive_freed.wait(table).unwrap();
+                }
+            };
+            // Remount accounting only when the placement policy can
+            // produce hits — parity with the replay engine, whose legacy
+            // (no-affinity, no-arms) path keeps both counters at zero.
+            if affinity == Affinity::Lru {
+                if plan == MountPlan::Hit {
+                    shared.metrics.on_remount_hit();
+                } else {
+                    shared.metrics.on_remount_miss();
+                }
+            }
+            let mount_charge_s = drive.mount_charge_s(plan);
+            if txs[drive_idx].send(Job { batch, instance, mount_charge_s }).is_err() {
+                break; // worker gone
             }
         }
     }
-    drop(tx); // closes the channel; workers drain and exit
+    drop(txs); // closes every channel; workers drain and exit
 }
 
 fn worker_loop(
     shared: Arc<Shared>,
-    rx: Arc<Mutex<Receiver<Job>>>,
+    drive_idx: usize,
+    rx: Receiver<Job>,
     drive: DriveParams,
     policy: Arc<dyn Scheduler + Send + Sync>,
 ) {
     loop {
-        let job = match rx.lock().unwrap().recv() {
+        let job = match rx.recv() {
             Ok(j) => j,
             Err(_) => break, // dispatcher closed the channel
         };
@@ -334,21 +445,29 @@ fn worker_loop(
         let done_wall = Instant::now();
 
         // Map per-file service times back to request ids through the one
-        // shared accounting path (`Batch::request_service_times`).
-        let mut submit = shared.submit_times.lock().unwrap();
-        let mut completions = shared.completions.lock().unwrap();
-        for (id, service_s) in job.batch.request_service_times(&out, drive) {
-            let t_submit = submit.remove(&id).unwrap_or(job.batch.opened_at);
-            let queue_s = done_wall.duration_since(t_submit).as_secs_f64();
-            let latency_s = queue_s + service_s;
-            shared.metrics.on_complete(latency_s, service_s);
-            completions.push(Completion {
-                request_id: id,
-                tape: job.batch.tape.clone(),
-                latency_s,
-                service_s,
-            });
+        // shared accounting path (`Batch::request_service_times`), with
+        // the mount charge the placement stage determined (0 on a hit).
+        {
+            let mut submit = shared.submit_times.lock().unwrap();
+            let mut completions = shared.completions.lock().unwrap();
+            for (id, service_s) in
+                job.batch.request_service_times(&out, drive, job.mount_charge_s)
+            {
+                let t_submit = submit.remove(&id).unwrap_or(job.batch.opened_at);
+                let queue_s = done_wall.duration_since(t_submit).as_secs_f64();
+                let latency_s = queue_s + service_s;
+                shared.metrics.on_complete(latency_s, service_s);
+                completions.push(Completion {
+                    request_id: id,
+                    tape: job.batch.tape.clone(),
+                    latency_s,
+                    service_s,
+                });
+            }
         }
+        // Release the drive and wake the placement stage.
+        shared.drives.lock().unwrap().slots[drive_idx].busy = false;
+        shared.drive_freed.notify_all();
     }
 }
 
@@ -378,7 +497,9 @@ mod tests {
                 unmount_s: 0.5,
                 bytes_per_s: 1e6,
                 uturn_s: 0.001,
+                n_arms: 0,
             },
+            affinity: Affinity::None,
         }
     }
 
@@ -571,6 +692,55 @@ mod tests {
         assert_eq!(m.submitted, 8);
         assert_eq!(m.completed, 8);
         assert_eq!(m.rejected, 12);
+    }
+
+    #[test]
+    fn lru_affinity_scores_remount_hits_and_skips_the_mount() {
+        // One tape, one drive, size-cap-split batches: under LRU affinity
+        // only the first batch mounts; every later batch finds the tape
+        // already threaded in drive 0. Deterministic regardless of thread
+        // timing — there is exactly one drive and one tape.
+        let run = |affinity: Affinity| {
+            let mut config = cfg();
+            config.n_drives = 1;
+            config.batcher.window = Duration::from_secs(3600);
+            config.batcher.max_batch = 4;
+            config.affinity = affinity;
+            let c = Coordinator::start(
+                config,
+                vec![Tape::from_sizes("TAPE001", &[1_000; 50])],
+                Arc::new(Gs),
+            );
+            for i in 0..16u64 {
+                assert!(c
+                    .submit(ReadRequest {
+                        id: i,
+                        tape: "TAPE001".into(),
+                        file_index: (i % 50) as usize,
+                    })
+                    .is_ok());
+            }
+            c.finish()
+        };
+        let (done_lru, m_lru) = run(Affinity::Lru);
+        assert_eq!(m_lru.completed, 16);
+        assert_eq!(m_lru.batches, 4, "cap 4 splits 16 requests into 4 batches");
+        assert_eq!(m_lru.remount_misses, 1, "only the first batch mounts");
+        assert_eq!(m_lru.remount_hits, 3, "every later batch is a remount hit");
+
+        let (done_none, m_none) = run(Affinity::None);
+        // No affinity = the legacy model: no remount accounting at all
+        // (parity with the replay engine's legacy path).
+        assert_eq!(m_none.remount_hits, 0);
+        assert_eq!(m_none.remount_misses, 0);
+        // Skipped mounts show up in the in-tape+mount service component.
+        assert!(
+            m_lru.mean_service_s < m_none.mean_service_s,
+            "LRU {} must beat None {}",
+            m_lru.mean_service_s,
+            m_none.mean_service_s
+        );
+        assert_eq!(done_lru.len(), done_none.len());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use tapesched::analysis::{qos_comparison, report::run_evaluation, shard_summary};
+use tapesched::analysis::{mount_summary, qos_comparison, report::run_evaluation, shard_summary};
 use tapesched::cli::Args;
 use tapesched::cluster::{Cluster, ClusterConfig};
 use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
@@ -32,7 +32,7 @@ use tapesched::replay::{
 };
 use tapesched::runtime::{backend_by_name, dense_cache_stats, BackendPolicy};
 use tapesched::sched::{paper_schedulers, scheduler_by_name, Scheduler};
-use tapesched::sim::{evaluate, DriveParams};
+use tapesched::sim::{evaluate, Affinity, DriveParams};
 use tapesched::util::rng::Rng;
 
 fn main() {
@@ -76,12 +76,13 @@ COMMANDS:
   draw            --out FILE.svg [--tape NAME] [--algo NAME] [--u N] [--backend dense|xla]
   serve           [--policy NAME] [--drives N] [--requests N] [--seed N]
                   [--cap N] [--backlog N] [--backend dense|xla]
-                  [--shards N] [--vnodes K]
+                  [--shards N] [--vnodes K] [--affinity none|lru]
   replay          [--arrivals poisson|bursty|diurnal|trace] [--rate R]
                   [--duration S] [--policy NAME[,NAME…]] [--drives N] [--seed N]
                   [--mode open|closed] [--cap N] [--window-ms N] [--max-batch N]
                   [--backlog N] [--data DIR] [--tapes N] [--out FILE.json]
                   [--backend dense|xla] [--shards N] [--vnodes K]
+                  [--arms N] [--affinity none|lru]
                   [--trace-file PATH] [--smoke]
   help
 
@@ -94,7 +95,13 @@ QoS JSON document — p50/p95/p99/p99.9 latencies per policy — to stdout (or
 --shards N (serve, replay) shards the catalog over N libraries behind a
 consistent-hash router (--vnodes points per shard); the replay report then
 carries a per-shard QoS breakdown next to the fleet-wide one, with --drives
-drives per shard. --trace-file replays an on-disk timestamped log
+drives per shard. --arms N (replay) bounds each shard's robot-arm pool —
+every mount/unmount occupies an arm, queueing when all are busy — and
+--affinity lru (serve, replay) keeps tapes mounted so repeat batches skip
+the mount (remount hits, LRU eviction); either flag adds arm-wait /
+mount-wait / drive-wait ladders and remount counters to the QoS report,
+while the default --arms 0 --affinity none reproduces the legacy replay
+byte for byte. --trace-file replays an on-disk timestamped log
 (`timestamp_ns<TAB>tape<TAB>file_id`, see rust/README.md). --smoke is the
 fast deterministic CI preset (2 virtual seconds at 100 rps over 48 tapes
 unless overridden)."
@@ -316,7 +323,7 @@ fn cmd_draw(args: &Args) {
 fn cmd_serve(args: &Args) {
     args.reject_unknown(&[
         "policy", "drives", "requests", "seed", "tapes", "data", "backend", "cap", "backlog",
-        "shards", "vnodes",
+        "shards", "vnodes", "affinity",
     ]);
     let policy = resolve_policy(args, "policy", "SimpleDP");
     let policy_name = policy.name();
@@ -334,6 +341,8 @@ fn cmd_serve(args: &Args) {
         eprintln!("error: --shards and --vnodes must be positive");
         std::process::exit(2);
     }
+    let affinity = Affinity::from_name(&args.get_choice_or("affinity", &["none", "lru"], "none"))
+        .expect("choice already validated");
     let shard_cfg = CoordinatorConfig {
         n_drives,
         batcher: BatcherConfig {
@@ -342,6 +351,7 @@ fn cmd_serve(args: &Args) {
             ..BatcherConfig::default()
         },
         drive: DriveParams::default(),
+        affinity,
     };
     let ds = dataset_from(args);
     let tapes: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
@@ -382,6 +392,12 @@ fn cmd_serve(args: &Args) {
             m.min_shard_completed,
             m.imbalance_ratio()
         );
+        if affinity == Affinity::Lru {
+            println!(
+                "  remount hits / misses   = {} / {}",
+                m.remount_hits, m.remount_misses
+            );
+        }
         for s in &m.shards {
             println!(
                 "  shard {:<2} routed/completed = {} / {} (p99 {:.1} s)",
@@ -412,6 +428,9 @@ fn cmd_serve(args: &Args) {
     println!("  mean end-to-end latency = {:.1} s", m.mean_latency_s);
     println!("  p50 / p99 latency       = {:.1} / {:.1} s", m.p50_latency_s, m.p99_latency_s);
     println!("  mean schedule compute   = {:.4} s/batch", m.mean_sched_s_per_batch);
+    if affinity == Affinity::Lru {
+        println!("  remount hits / misses   = {} / {}", m.remount_hits, m.remount_misses);
+    }
     if dense_backend_selected(args) {
         let (hits, misses) = dense_cache_stats();
         println!("  dense cache hits/misses = {hits} / {misses}");
@@ -427,7 +446,7 @@ fn cmd_replay(args: &Args) {
     args.reject_unknown(&[
         "arrivals", "rate", "duration", "policy", "drives", "seed", "mode", "cap", "data",
         "tapes", "backend", "window-ms", "max-batch", "backlog", "out", "shards", "vnodes",
-        "trace-file", "smoke",
+        "arms", "affinity", "trace-file", "smoke",
     ]);
     let mut kind =
         args.get_choice_or("arrivals", &["poisson", "bursty", "diurnal", "trace"], "poisson");
@@ -475,6 +494,9 @@ fn cmd_replay(args: &Args) {
         }
         _ => LoopMode::Open,
     };
+    let n_arms = args.get_parsed_or("arms", 0usize);
+    let affinity = Affinity::from_name(&args.get_choice_or("affinity", &["none", "lru"], "none"))
+        .expect("choice already validated");
     let cfg = ReplayConfig {
         n_drives,
         batcher: BatcherConfig {
@@ -483,11 +505,12 @@ fn cmd_replay(args: &Args) {
             max_tape_backlog: args
                 .get_parsed_or("backlog", BatcherConfig::default().max_tape_backlog),
         },
-        drive: DriveParams::default(),
+        drive: DriveParams { n_arms, ..DriveParams::default() },
         mode,
         retry_backoff_s: 0.01,
         n_shards,
         vnodes,
+        affinity,
     };
 
     // Policies: comma-separated list; `--backend` selects the SimpleDP
@@ -623,6 +646,9 @@ fn cmd_replay(args: &Args) {
         );
         if n_shards > 1 {
             eprint!("{}", shard_summary(&report));
+        }
+        if report.pipeline {
+            eprint!("{}", mount_summary(&report));
         }
         reports.push(report);
     }

@@ -13,11 +13,10 @@
 use std::collections::BinaryHeap;
 use std::time::{Duration, Instant};
 
-/// Convert seconds to virtual microseconds (the engine's time unit).
-#[inline]
-pub fn secs_to_us(s: f64) -> u64 {
-    (s.max(0.0) * 1e6).round() as u64
-}
+/// Convert seconds to virtual microseconds (the engine's time unit) —
+/// the crate-wide µs-grid rounding rule, re-exported from
+/// [`crate::util::secs_to_us`] so every consumer shares one definition.
+pub use crate::util::secs_to_us;
 
 /// Convert virtual microseconds back to seconds.
 #[inline]
@@ -106,6 +105,14 @@ impl<E> Ord for Entry<E> {
         // Reversed: BinaryHeap is a max-heap, the earliest (time, seq) must
         // surface first. The sequence number breaks time ties FIFO, which
         // is what makes the whole replay deterministic.
+        //
+        // This tie-break is load-bearing and pinned: open-loop sheds,
+        // closed-loop `Retry`s, `BatchTimer`s and drive releases routinely
+        // collide on the same virtual microsecond (backoffs and windows
+        // share a grid), and FIFO-by-insertion is the only order that is
+        // identical across runs. See the engine's
+        // `colliding_events_tie_break_fifo_and_stay_deterministic` test
+        // and the drain invariants in `engine::simulate`.
         (other.t_us, other.seq).cmp(&(self.t_us, self.seq))
     }
 }

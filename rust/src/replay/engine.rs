@@ -36,7 +36,7 @@ use crate::cluster::HashRing;
 use crate::coordinator::{Batch, Batcher, BatcherConfig, PushOutcome};
 use crate::model::{Instance, Tape};
 use crate::sched::Scheduler;
-use crate::sim::{evaluate, DriveParams};
+use crate::sim::{evaluate, pick_drive_slot, Affinity, DriveParams, MountPlan, SimOutcome};
 
 use super::arrivals::{Arrival, ArrivalModel};
 use super::clock::{secs_to_us, EventQueue, VirtualClock};
@@ -68,6 +68,15 @@ pub struct ReplayConfig {
     pub n_shards: usize,
     /// Virtual nodes per shard on the consistent-hash ring.
     pub vnodes: usize,
+    /// Drive-placement policy inside a shard. With [`Affinity::Lru`] the
+    /// mount pipeline is modeled end-to-end: tapes stay threaded after
+    /// their batch, a batch landing on a drive that still holds its tape
+    /// skips the mount (a *remount hit*), and the least-recently-used
+    /// loaded drive is evicted (unmount + mount through the arm pool)
+    /// when no empty drive is free. [`Affinity::None`] with
+    /// `drive.n_arms == 0` is the legacy fixed mount-cost model — that
+    /// configuration reproduces the pre-pipeline replay byte for byte.
+    pub affinity: Affinity,
 }
 
 impl Default for ReplayConfig {
@@ -80,7 +89,18 @@ impl Default for ReplayConfig {
             retry_backoff_s: 0.01,
             n_shards: 1,
             vnodes: 64,
+            affinity: Affinity::None,
         }
+    }
+}
+
+impl ReplayConfig {
+    /// Whether the event-driven mount pipeline is active: any robot-arm
+    /// bound (`drive.n_arms > 0`) or drive affinity turns it on. When
+    /// inactive the engine runs the legacy fixed mount-cost path, byte
+    /// identical to the pre-pipeline replay.
+    pub fn pipeline_active(&self) -> bool {
+        self.drive.n_arms > 0 || self.affinity == Affinity::Lru
     }
 }
 
@@ -128,6 +148,12 @@ pub struct ReplayStats {
     pub makespan_us: u64,
     /// Total virtual drive-busy time across the pool (µs).
     pub busy_drive_us: u64,
+    /// Batches that landed on a drive still holding their tape (the mount
+    /// was skipped entirely — drive affinity). 0 on the legacy path.
+    pub remount_hits: u64,
+    /// Batches that paid a fresh mount (every batch on the legacy path
+    /// counts here once the pipeline is active; 0 when it is not).
+    pub remount_misses: u64,
     /// Wall-clock seconds spent inside `Scheduler::schedule` — a real
     /// measurement of policy compute, NOT part of the deterministic report.
     pub sched_wall_s: f64,
@@ -150,6 +176,16 @@ pub struct ShardOutcome {
     pub latency: LatencyHistogram,
     /// Mount + in-tape service-time distribution of this shard's requests.
     pub service: LatencyHistogram,
+    /// Per-arm-op wait for a free robot arm (one sample per mount/unmount;
+    /// all zero when the pipeline is inactive or arms are unconstrained).
+    pub arm_wait: LatencyHistogram,
+    /// Per-batch mount-pipeline latency: dispatch → execution start (arm
+    /// waits + robot ops; 0 on a remount hit). Empty on the legacy path.
+    pub mount_wait: LatencyHistogram,
+    /// Per-batch wait between becoming dispatchable and landing on a
+    /// drive (recorded on both paths; serialized only when the pipeline
+    /// is active).
+    pub drive_wait: LatencyHistogram,
 }
 
 /// Everything a replay produces.
@@ -162,6 +198,12 @@ pub struct ReplayOutcome {
     pub latency: LatencyHistogram,
     /// Mount + in-tape service-time distribution.
     pub service: LatencyHistogram,
+    /// Fleet-wide robot-arm wait distribution (see [`ShardOutcome`]).
+    pub arm_wait: LatencyHistogram,
+    /// Fleet-wide mount-pipeline latency distribution, per batch.
+    pub mount_wait: LatencyHistogram,
+    /// Fleet-wide dispatchable→dispatched wait distribution, per batch.
+    pub drive_wait: LatencyHistogram,
     /// Per-shard breakdown (`n_shards` entries; one entry mirroring the
     /// fleet totals in the single-library case).
     pub per_shard: Vec<ShardOutcome>,
@@ -173,22 +215,90 @@ enum Ev {
     /// Re-check a shard's batch windows (scheduled for that batcher's next
     /// deadline).
     BatchTimer(usize),
-    /// A drive of this shard finished its batch (mount + span + unmount).
-    DriveFree(usize),
+    /// Legacy path: this drive finished its whole busy period (mount +
+    /// span + unmount rolled into one).
+    DriveFree { shard: usize, drive: usize },
+    /// Pipeline path: one robot-arm operation (mount or unmount) of this
+    /// drive's current cycle finished; the arm frees and the next queued
+    /// op (FIFO) starts.
+    ArmOpDone { shard: usize, drive: usize },
+    /// Pipeline path: the drive's head finished executing its batch's
+    /// schedule (the tape stays threaded under LRU affinity; under
+    /// `Affinity::None` a trailing unmount follows through the arm pool).
+    ExecDone { shard: usize, drive: usize },
     /// One request completed: closed-loop in-flight slot release.
     Slot,
+}
+
+/// A batch that has a drive but is still waiting on robot-arm work before
+/// its head can start executing.
+#[derive(Debug)]
+struct PendingExec {
+    batch: Batch,
+    out: SimOutcome,
+    /// Virtual dispatch time (µs) — the mount pipeline is measured from
+    /// here.
+    t0_us: u64,
+}
+
+/// The mount-pipeline state machine of one simulated drive.
+#[derive(Debug)]
+enum DriveStage {
+    Idle,
+    /// Waiting on arm ops before execution; `unmount_first` marks that the
+    /// evict-unmount has not finished yet (a mount op follows it).
+    Mounting { pending: PendingExec, unmount_first: bool },
+    /// The head is executing the schedule.
+    Executing,
+    /// Trailing unmount through the arm pool (`Affinity::None` only).
+    Unloading,
+}
+
+/// One simulated drive of a shard.
+#[derive(Debug)]
+struct DriveSim {
+    /// Catalog tape index currently threaded (survives between batches
+    /// under LRU affinity — the lazy unmount).
+    loaded: Option<usize>,
+    stage: DriveStage,
+    /// Dispatch tick of the drive's last batch (LRU eviction order).
+    last_used: u64,
+    /// Virtual time the current busy cycle began (µs).
+    cycle_start_us: u64,
+}
+
+/// One queued robot-arm operation (FIFO behind the busy arms).
+struct QueuedArmOp {
+    drive: usize,
+    dur_us: u64,
+    enqueued_us: u64,
+}
+
+/// A shard's robot-arm pool: `n_arms == 0` is unconstrained (ops start
+/// immediately), otherwise at most `n_arms` ops run at once and the rest
+/// queue FIFO.
+struct ArmPool {
+    n_arms: usize,
+    busy: usize,
+    queue: VecDeque<QueuedArmOp>,
 }
 
 /// Per-shard live state: the real batcher plus that library's drive pool.
 struct ShardState {
     batcher: Batcher,
-    free_drives: usize,
+    drives: Vec<DriveSim>,
+    /// Count of drives in `DriveStage::Idle` (dispatch gate).
+    n_free: usize,
+    arms: ArmPool,
     next_timer_us: Option<u64>,
     n_tapes: usize,
     ring_share: f64,
     stats: ReplayStats,
     latency: LatencyHistogram,
     service: LatencyHistogram,
+    arm_wait: LatencyHistogram,
+    mount_wait: LatencyHistogram,
+    drive_wait: LatencyHistogram,
 }
 
 struct Engine<'a> {
@@ -202,6 +312,11 @@ struct Engine<'a> {
     clock: VirtualClock,
     events: EventQueue<Ev>,
     shards: Vec<ShardState>,
+    /// Whether the event-driven mount pipeline is on (cached
+    /// `cfg.pipeline_active()`).
+    pipeline: bool,
+    /// Monotone dispatch counter feeding `DriveSim::last_used` (LRU).
+    tick: u64,
     /// id → (arrived, accepted) virtual µs for accepted-but-unserved
     /// requests.
     pending: HashMap<u64, (u64, u64)>,
@@ -214,6 +329,9 @@ struct Engine<'a> {
     completions: Vec<ReplayCompletion>,
     latency: LatencyHistogram,
     service: LatencyHistogram,
+    arm_wait: LatencyHistogram,
+    mount_wait: LatencyHistogram,
+    drive_wait: LatencyHistogram,
 }
 
 /// Run `model` against `catalog` under `policy`: the whole replay, at CPU
@@ -243,16 +361,33 @@ pub fn simulate(
     let shards: Vec<ShardState> = (0..cfg.n_shards)
         .map(|s| ShardState {
             batcher: Batcher::new(cfg.batcher),
-            free_drives: cfg.n_drives,
+            drives: (0..cfg.n_drives)
+                .map(|_| DriveSim {
+                    loaded: None,
+                    stage: DriveStage::Idle,
+                    last_used: 0,
+                    cycle_start_us: 0,
+                })
+                .collect(),
+            n_free: cfg.n_drives,
+            arms: ArmPool {
+                n_arms: cfg.drive.n_arms,
+                busy: 0,
+                queue: VecDeque::new(),
+            },
             next_timer_us: None,
             n_tapes: tape_shard.iter().filter(|&&owner| owner == s).count(),
             ring_share: spread[s],
             stats: ReplayStats::default(),
             latency: LatencyHistogram::new(),
             service: LatencyHistogram::new(),
+            arm_wait: LatencyHistogram::new(),
+            mount_wait: LatencyHistogram::new(),
+            drive_wait: LatencyHistogram::new(),
         })
         .collect();
     let mut eng = Engine {
+        pipeline: cfg.pipeline_active(),
         cfg,
         catalog,
         tape_index: catalog
@@ -265,6 +400,7 @@ pub fn simulate(
         clock: VirtualClock::new(),
         events: EventQueue::new(),
         shards,
+        tick: 0,
         pending: HashMap::new(),
         client_queue: VecDeque::new(),
         in_flight: 0,
@@ -274,6 +410,9 @@ pub fn simulate(
         completions: Vec::new(),
         latency: LatencyHistogram::new(),
         service: LatencyHistogram::new(),
+        arm_wait: LatencyHistogram::new(),
+        mount_wait: LatencyHistogram::new(),
+        drive_wait: LatencyHistogram::new(),
     };
 
     eng.pull_arrival(model);
@@ -315,8 +454,16 @@ pub fn simulate(
                 }
                 Some(shard)
             }
-            Ev::DriveFree(shard) => {
-                eng.shards[shard].free_drives += 1;
+            Ev::DriveFree { shard, drive } => {
+                eng.release_drive(shard, drive);
+                Some(shard)
+            }
+            Ev::ArmOpDone { shard, drive } => {
+                eng.on_arm_op_done(shard, drive);
+                Some(shard)
+            }
+            Ev::ExecDone { shard, drive } => {
+                eng.on_exec_done(shard, drive);
                 Some(shard)
             }
             Ev::Slot => eng.on_slot_free(),
@@ -334,15 +481,45 @@ pub fn simulate(
         }
     }
 
+    // Drain invariants — hard asserts, not debug: the tie-broken event
+    // order (FIFO sequence numbers on time ties) is what makes these hold
+    // deterministically, so a violation is a replay-engine bug, never a
+    // workload property.
     for (i, shard) in eng.shards.iter().enumerate() {
-        debug_assert_eq!(
+        assert_eq!(
             shard.batcher.pending(),
             0,
             "replay drained with work queued on shard {i}"
         );
+        assert_eq!(
+            shard.n_free,
+            eng.cfg.n_drives,
+            "shard {i} drained with a drive still in its mount pipeline"
+        );
+        assert!(
+            shard.arms.busy == 0 && shard.arms.queue.is_empty(),
+            "shard {i} drained with robot-arm work outstanding"
+        );
+        assert_eq!(
+            shard.stats.submitted, shard.stats.completed,
+            "shard {i}: accepted requests must all complete at drain"
+        );
     }
-    debug_assert!(eng.pending.is_empty(), "unserved submitted requests");
-    debug_assert!(eng.client_queue.is_empty(), "stranded client-side requests");
+    assert!(eng.pending.is_empty(), "unserved submitted requests");
+    assert!(eng.client_queue.is_empty(), "stranded client-side requests");
+    // The in-flight identity `submitted − completed − shed` over the whole
+    // run: every id handed out was either accepted (and completed) or
+    // shed; nothing is in flight once the queue drains.
+    assert_eq!(
+        eng.stats.submitted, eng.stats.completed,
+        "in-flight invariant: submitted − completed must be 0 at drain"
+    );
+    assert_eq!(
+        eng.next_id,
+        eng.stats.submitted + eng.stats.shed,
+        "every request id is accounted as completed or shed"
+    );
+    assert_eq!(eng.in_flight, 0, "in-flight level must drain to zero");
     eng.completions.sort_by_key(|c| (c.done_us, c.id));
     let per_shard = eng
         .shards
@@ -355,6 +532,9 @@ pub fn simulate(
             stats: s.stats,
             latency: s.latency,
             service: s.service,
+            arm_wait: s.arm_wait,
+            mount_wait: s.mount_wait,
+            drive_wait: s.drive_wait,
         })
         .collect();
     ReplayOutcome {
@@ -362,6 +542,9 @@ pub fn simulate(
         completions: eng.completions,
         latency: eng.latency,
         service: eng.service,
+        arm_wait: eng.arm_wait,
+        mount_wait: eng.mount_wait,
+        drive_wait: eng.drive_wait,
         per_shard,
     }
 }
@@ -441,7 +624,7 @@ impl<'a> Engine<'a> {
     /// dispatch without waiting out their window — the coordinator's
     /// drain semantics.
     fn dispatch_ready(&mut self, shard: usize) {
-        while self.shards[shard].free_drives > 0 {
+        while self.shards[shard].n_free > 0 {
             let draining = self.arrivals_done && self.client_queue.is_empty();
             let now = self.clock.now_instant();
             let Some(batch) = self.shards[shard].batcher.pop_ready(now, draining) else {
@@ -453,9 +636,9 @@ impl<'a> Engine<'a> {
 
     /// Wake one shard's dispatcher at its batcher's next window expiry.
     /// Only needed while that shard has a free drive — otherwise its next
-    /// `DriveFree` re-checks.
+    /// drive release re-checks.
     fn schedule_timer(&mut self, shard: usize) {
-        if self.shards[shard].free_drives == 0 {
+        if self.shards[shard].n_free == 0 {
             return;
         }
         let Some(deadline) = self.shards[shard].batcher.next_deadline() else { return };
@@ -470,12 +653,25 @@ impl<'a> Engine<'a> {
         }
     }
 
+    /// Dispatch one popped batch: placement (which drive), then either the
+    /// legacy fixed mount-cost accounting or the event-driven mount
+    /// pipeline. The legacy branch is byte-for-byte the pre-pipeline
+    /// engine — same event pushes in the same order with the same
+    /// timestamps — which is what keeps `--arms 0 --affinity none`
+    /// reports byte-identical (regression-gated in ci.sh).
     fn dispatch(&mut self, shard: usize, batch: Batch) {
-        self.shards[shard].free_drives -= 1;
+        let t_us = self.clock.now_us();
         self.stats.batches += 1;
         self.shards[shard].stats.batches += 1;
-        let t_us = self.clock.now_us();
-        let tape = &self.catalog[self.tape_index[&batch.tape]];
+        // Dispatchable→dispatched wait (a free-drive wait): recorded on
+        // both paths, serialized only when the pipeline is active.
+        let ready_us = self.clock.us_of(batch.ready_at).min(t_us);
+        let dw_us = t_us - ready_us;
+        self.drive_wait.record_us(dw_us);
+        self.shards[shard].drive_wait.record_us(dw_us);
+
+        let tape_idx = self.tape_index[&batch.tape];
+        let tape = &self.catalog[tape_idx];
         let inst = Instance::from_tape(tape, &batch.multiplicities(), self.cfg.drive.uturn_bytes())
             .expect("replayed requests are validated against the catalog");
 
@@ -486,43 +682,253 @@ impl<'a> Engine<'a> {
         self.shards[shard].stats.sched_wall_s += wall_s;
         let out = evaluate(&inst, &sched);
 
-        // Per-request accounting through the same shared mapping the
-        // coordinator drive worker uses (`Batch::request_service_times`).
-        let drive = self.cfg.drive;
-        for (id, service_s) in batch.request_service_times(&out, drive) {
-            let service_us = secs_to_us(service_s);
-            let done_us = t_us + service_us;
-            let (arrived_us, submitted_us) =
-                self.pending.remove(&id).expect("completion for unsubmitted id");
-            let latency_us = done_us - arrived_us;
-            self.latency.record_us(latency_us);
-            self.service.record_us(service_us);
-            self.stats.completed += 1;
-            self.stats.makespan_us = self.stats.makespan_us.max(done_us);
-            let sh = &mut self.shards[shard];
-            sh.latency.record_us(latency_us);
-            sh.service.record_us(service_us);
-            sh.stats.completed += 1;
-            sh.stats.makespan_us = sh.stats.makespan_us.max(done_us);
-            self.completions.push(ReplayCompletion {
-                id,
-                tape: batch.tape.clone(),
-                arrived_us,
-                submitted_us,
-                done_us,
-                latency_us,
-                service_us,
-            });
-            self.events.push(done_us, Ev::Slot);
+        // Placement: which drive, and what mount work that implies.
+        let (drive_idx, plan) = self.pick_drive(shard, tape_idx);
+        self.tick += 1;
+        {
+            let d = &mut self.shards[shard].drives[drive_idx];
+            d.last_used = self.tick;
+            d.cycle_start_us = t_us;
+            d.loaded = match self.cfg.affinity {
+                Affinity::Lru => Some(tape_idx),
+                Affinity::None => None,
+            };
+        }
+        self.shards[shard].n_free -= 1;
+
+        if !self.pipeline {
+            // Legacy fixed mount-cost path (plan is always `Mount` here:
+            // no affinity, so drives never stay loaded).
+            self.exec_batch(shard, drive_idx, &batch, &out, t_us, t_us);
+            let busy_s = self.cfg.drive.mount_s
+                + self.cfg.drive.to_seconds(out.finish)
+                + self.cfg.drive.unmount_s;
+            let busy_us = secs_to_us(busy_s);
+            self.stats.busy_drive_us += busy_us;
+            self.shards[shard].stats.busy_drive_us += busy_us;
+            self.shards[shard].drives[drive_idx].stage = DriveStage::Executing;
+            self.events
+                .push(t_us + busy_us, Ev::DriveFree { shard, drive: drive_idx });
+            return;
         }
 
-        let busy_s = self.cfg.drive.mount_s
-            + self.cfg.drive.to_seconds(out.finish)
-            + self.cfg.drive.unmount_s;
-        let busy_us = secs_to_us(busy_s);
+        // Event-driven mount pipeline.
+        if plan == MountPlan::Hit {
+            self.stats.remount_hits += 1;
+            self.shards[shard].stats.remount_hits += 1;
+        } else {
+            self.stats.remount_misses += 1;
+            self.shards[shard].stats.remount_misses += 1;
+        }
+        let pending = PendingExec { batch, out, t0_us: t_us };
+        match plan {
+            MountPlan::Hit => self.start_exec(shard, drive_idx, pending),
+            MountPlan::Mount => {
+                self.shards[shard].drives[drive_idx].stage =
+                    DriveStage::Mounting { pending, unmount_first: false };
+                self.request_arm(shard, drive_idx, self.cfg.drive.mount_us());
+            }
+            MountPlan::EvictMount => {
+                self.shards[shard].drives[drive_idx].stage =
+                    DriveStage::Mounting { pending, unmount_first: true };
+                self.request_arm(shard, drive_idx, self.cfg.drive.unmount_us());
+            }
+        }
+    }
+
+    /// Choose the drive a batch for `tape_idx` lands on, through the one
+    /// shared preference ([`pick_drive_slot`] in `sim::library`): hit,
+    /// then empty, then LRU eviction — deterministic lowest-index ties.
+    fn pick_drive(&self, shard: usize, tape_idx: usize) -> (usize, MountPlan) {
+        pick_drive_slot(
+            self.cfg.affinity,
+            self.shards[shard].drives.iter().map(|d| {
+                (
+                    matches!(d.stage, DriveStage::Idle),
+                    d.loaded == Some(tape_idx),
+                    d.loaded.is_none(),
+                    d.last_used,
+                )
+            }),
+        )
+        .expect("dispatch_ready gates on a free drive")
+    }
+
+    /// Start (or queue) one robot-arm operation for `drive`. Unconstrained
+    /// pools (`n_arms == 0`) start every op immediately with zero wait.
+    fn request_arm(&mut self, shard: usize, drive: usize, dur_us: u64) {
+        let now = self.clock.now_us();
+        let pool = &mut self.shards[shard].arms;
+        if pool.n_arms == 0 || pool.busy < pool.n_arms {
+            if pool.n_arms > 0 {
+                pool.busy += 1;
+            }
+            self.arm_wait.record_us(0);
+            self.shards[shard].arm_wait.record_us(0);
+            self.events.push(now + dur_us, Ev::ArmOpDone { shard, drive });
+        } else {
+            pool.queue.push_back(QueuedArmOp { drive, dur_us, enqueued_us: now });
+        }
+    }
+
+    /// One arm op finished: free the arm, start the next queued op (FIFO),
+    /// then advance the owning drive's pipeline stage.
+    fn on_arm_op_done(&mut self, shard: usize, drive: usize) {
+        let now = self.clock.now_us();
+        let next = {
+            let pool = &mut self.shards[shard].arms;
+            if pool.n_arms > 0 {
+                pool.busy -= 1;
+                pool.queue.pop_front().map(|op| {
+                    pool.busy += 1;
+                    op
+                })
+            } else {
+                None
+            }
+        };
+        if let Some(op) = next {
+            let wait = now - op.enqueued_us;
+            self.arm_wait.record_us(wait);
+            self.shards[shard].arm_wait.record_us(wait);
+            self.events
+                .push(now + op.dur_us, Ev::ArmOpDone { shard, drive: op.drive });
+        }
+        let stage = std::mem::replace(
+            &mut self.shards[shard].drives[drive].stage,
+            DriveStage::Idle,
+        );
+        match stage {
+            DriveStage::Mounting { pending, unmount_first: true } => {
+                // Evict-unmount done; the mount follows through the pool.
+                self.shards[shard].drives[drive].stage =
+                    DriveStage::Mounting { pending, unmount_first: false };
+                self.request_arm(shard, drive, self.cfg.drive.mount_us());
+            }
+            DriveStage::Mounting { pending, unmount_first: false } => {
+                self.start_exec(shard, drive, pending);
+            }
+            DriveStage::Unloading => {
+                // Trailing unmount finished: the drive is free again.
+                self.finish_cycle(shard, drive);
+            }
+            other => unreachable!(
+                "arm op completed for shard {shard} drive {drive} in stage {other:?}"
+            ),
+        }
+    }
+
+    /// The drive's mount pipeline is clear: record the pipeline latency,
+    /// account every request of the batch, and run the schedule span.
+    fn start_exec(&mut self, shard: usize, drive: usize, pending: PendingExec) {
+        let now = self.clock.now_us();
+        let PendingExec { batch, out, t0_us } = pending;
+        let mount_delay_us = now - t0_us;
+        self.mount_wait.record_us(mount_delay_us);
+        self.shards[shard].mount_wait.record_us(mount_delay_us);
+        self.shards[shard].drives[drive].stage = DriveStage::Executing;
+        self.exec_batch(shard, drive, &batch, &out, t0_us, now);
+        let span_us = secs_to_us(self.cfg.drive.to_seconds(out.finish));
+        self.events.push(now + span_us, Ev::ExecDone { shard, drive });
+    }
+
+    /// The head finished its schedule: under LRU affinity the tape stays
+    /// threaded and the drive frees immediately (lazy unmount); otherwise
+    /// the trailing unmount goes through the arm pool first.
+    fn on_exec_done(&mut self, shard: usize, drive: usize) {
+        match self.cfg.affinity {
+            Affinity::Lru => self.finish_cycle(shard, drive),
+            Affinity::None => {
+                self.shards[shard].drives[drive].stage = DriveStage::Unloading;
+                self.request_arm(shard, drive, self.cfg.drive.unmount_us());
+            }
+        }
+    }
+
+    /// End of a pipeline drive cycle: account the busy span and free the
+    /// drive.
+    fn finish_cycle(&mut self, shard: usize, drive: usize) {
+        let now = self.clock.now_us();
+        let busy_us = now - self.shards[shard].drives[drive].cycle_start_us;
         self.stats.busy_drive_us += busy_us;
         self.shards[shard].stats.busy_drive_us += busy_us;
-        self.events.push(t_us + busy_us, Ev::DriveFree(shard));
+        self.release_drive(shard, drive);
+    }
+
+    /// Mark a drive idle again (both paths).
+    fn release_drive(&mut self, shard: usize, drive: usize) {
+        self.shards[shard].drives[drive].stage = DriveStage::Idle;
+        self.shards[shard].n_free += 1;
+    }
+
+    /// Account every request of a batch: completions at
+    /// `exec_start + in-tape service`, with the mount component measured
+    /// as `exec_start − dispatch` (the legacy path passes
+    /// `exec_start == dispatch` and folds its fixed `mount_s` into the
+    /// f64 service computation below, preserving its historical rounding
+    /// byte for byte).
+    fn exec_batch(
+        &mut self,
+        shard: usize,
+        _drive: usize,
+        batch: &Batch,
+        out: &SimOutcome,
+        t0_us: u64,
+        exec_start_us: u64,
+    ) {
+        let drive = self.cfg.drive;
+        if !self.pipeline {
+            // Per-request accounting through the same shared mapping the
+            // coordinator drive worker uses (`Batch::request_service_times`)
+            // — the legacy f64 sum `to_seconds(service) + mount_s`, rounded
+            // once, exactly as before the pipeline existed.
+            for (id, service_s) in batch.request_service_times(out, drive, drive.mount_s) {
+                let service_us = secs_to_us(service_s);
+                self.record_completion(shard, &batch.tape, id, service_us, t0_us + service_us);
+            }
+        } else {
+            // Pipeline accounting: the measured mount delay (arm waits +
+            // robot ops, 0 on a remount hit) plus the in-tape component on
+            // the µs grid (`Batch::request_service_times_us`).
+            let mount_delay_us = exec_start_us - t0_us;
+            for (id, service_us) in batch.request_service_times_us(out, drive, mount_delay_us) {
+                self.record_completion(shard, &batch.tape, id, service_us, t0_us + service_us);
+            }
+        }
+    }
+
+    /// Record one served request on the fleet and shard ledgers, emit its
+    /// completion-log entry, and release its closed-loop slot.
+    fn record_completion(
+        &mut self,
+        shard: usize,
+        tape: &str,
+        id: u64,
+        service_us: u64,
+        done_us: u64,
+    ) {
+        let (arrived_us, submitted_us) =
+            self.pending.remove(&id).expect("completion for unsubmitted id");
+        let latency_us = done_us - arrived_us;
+        self.latency.record_us(latency_us);
+        self.service.record_us(service_us);
+        self.stats.completed += 1;
+        self.stats.makespan_us = self.stats.makespan_us.max(done_us);
+        let sh = &mut self.shards[shard];
+        sh.latency.record_us(latency_us);
+        sh.service.record_us(service_us);
+        sh.stats.completed += 1;
+        sh.stats.makespan_us = sh.stats.makespan_us.max(done_us);
+        self.completions.push(ReplayCompletion {
+            id,
+            tape: tape.to_string(),
+            arrived_us,
+            submitted_us,
+            done_us,
+            latency_us,
+            service_us,
+        });
+        self.events.push(done_us, Ev::Slot);
     }
 }
 
@@ -542,7 +948,13 @@ mod tests {
     }
 
     fn fast_drive() -> DriveParams {
-        DriveParams { mount_s: 1.0, unmount_s: 0.5, bytes_per_s: 1e6, uturn_s: 0.001 }
+        DriveParams {
+            mount_s: 1.0,
+            unmount_s: 0.5,
+            bytes_per_s: 1e6,
+            uturn_s: 0.001,
+            n_arms: 0,
+        }
     }
 
     fn cfg(mode: LoopMode) -> ReplayConfig {
@@ -755,6 +1167,217 @@ mod tests {
         let active = a.per_shard.iter().filter(|s| s.stats.completed > 0).count();
         assert!(active >= 2, "only {active} shard(s) served anything");
         assert_eq!(a.stats.completed, a.stats.submitted);
+    }
+
+    #[test]
+    fn legacy_path_stays_clean_of_pipeline_artifacts() {
+        // The default configuration (no arms, no affinity) is the legacy
+        // fixed mount-cost model: no remount accounting, no mount-pipeline
+        // samples — the byte-compatibility surface of the pipeline change.
+        let config = cfg(LoopMode::Open);
+        assert!(!config.pipeline_active());
+        let mut model = poisson(40.0, 10.0, 9);
+        let out = simulate(&config, &catalog(), &SimpleDp, &mut model);
+        assert_eq!(out.stats.remount_hits, 0);
+        assert_eq!(out.stats.remount_misses, 0);
+        assert_eq!(out.mount_wait.count(), 0, "no pipeline, no mount-wait samples");
+        assert_eq!(out.arm_wait.count(), 0);
+        // Drive waits are recorded on both paths: one sample per batch.
+        assert_eq!(out.drive_wait.count(), out.stats.batches);
+        assert_eq!(out.per_shard[0].drive_wait, out.drive_wait);
+    }
+
+    #[test]
+    fn lru_affinity_hits_skip_the_mount() {
+        // One tape, one drive, cap-split batches (the cap pins batch
+        // composition regardless of placement policy): under LRU affinity
+        // only the first batch mounts; the rest land on the loaded drive.
+        let catalog = vec![Tape::from_sizes("HOT", &[1_000; 50])];
+        let run = |affinity: Affinity| {
+            let mut config = cfg(LoopMode::Open);
+            config.n_drives = 1;
+            config.batcher.window = Duration::from_secs(3600);
+            config.batcher.max_batch = 4;
+            config.affinity = affinity;
+            let mut model =
+                PoissonArrivals::new(RequestMix::new(&catalog), 40.0, 2.0, 11);
+            simulate(&config, &catalog, &Gs, &mut model)
+        };
+        let lru = run(Affinity::Lru);
+        assert!(lru.stats.batches >= 4, "cap 4 must split the burst");
+        assert_eq!(lru.stats.remount_misses, 1, "only the first batch mounts");
+        assert_eq!(
+            lru.stats.remount_hits,
+            lru.stats.batches - 1,
+            "every later batch lands on the loaded drive"
+        );
+        assert_eq!(lru.mount_wait.count(), lru.stats.batches);
+        // A remount hit's pipeline latency is zero; a miss pays mount_s.
+        assert_eq!(lru.mount_wait.quantile(50.0), 0.0);
+        assert!((lru.mount_wait.max_s() - 1.0).abs() < 1e-6);
+
+        let none = run(Affinity::None);
+        // Affinity off + no arms = the legacy path: no remount accounting.
+        assert_eq!(none.stats.remount_hits, 0);
+        assert_eq!(none.stats.remount_misses, 0);
+        assert_eq!(none.stats.completed, lru.stats.completed);
+        // Skipped mounts show up per request: same batch composition, so
+        // the mean service strictly drops under affinity.
+        assert!(
+            lru.service.mean_s() < none.service.mean_s(),
+            "LRU {} must beat None {}",
+            lru.service.mean_s(),
+            none.service.mean_s()
+        );
+        // And the pipeline run stays deterministic.
+        let again = run(Affinity::Lru);
+        assert_eq!(lru.completions, again.completions);
+        assert_eq!(lru.latency, again.latency);
+        assert_eq!(lru.arm_wait, again.arm_wait);
+    }
+
+    #[test]
+    fn single_arm_serializes_mounts_and_raises_the_tail() {
+        // Sixteen drives but one robot arm, with mount costs dominating
+        // the in-tape spans and a load the drives handle comfortably
+        // (~50% utilization unconstrained): the armed run's serialized
+        // mount work (≥16 parked batches × 7.5 s of robot ops) exceeds
+        // the whole unconstrained makespan — so its drain *must* stretch
+        // and its tail *must* rise, no matter how the batcher coalesces
+        // under the backlog.
+        let run = |n_arms: usize| {
+            let mut config = cfg(LoopMode::Open);
+            config.n_drives = 16;
+            config.drive = DriveParams {
+                mount_s: 5.0,
+                unmount_s: 2.5,
+                bytes_per_s: 1e6,
+                uturn_s: 0.001,
+                n_arms,
+            };
+            let mut model = poisson(1.0, 30.0, 21);
+            simulate(&config, &catalog(), &Gs, &mut model)
+        };
+        let free = run(0);
+        let armed = run(1);
+        assert_eq!(free.stats.completed, armed.stats.completed, "nothing is lost");
+        assert!(armed.arm_wait.count() > 0, "arm ops must be recorded");
+        assert!(armed.arm_wait.max_s() > 0.0, "some op must have queued");
+        assert!(
+            armed.latency.quantile(99.9) > free.latency.quantile(99.9),
+            "1 arm p99.9 {} must exceed unconstrained p99.9 {}",
+            armed.latency.quantile(99.9),
+            free.latency.quantile(99.9)
+        );
+        assert!(
+            armed.stats.makespan_us > free.stats.makespan_us,
+            "the serialized mounts must stretch the drain"
+        );
+        assert_eq!(
+            armed.stats.remount_hits + armed.stats.remount_misses,
+            armed.stats.batches,
+            "every batch is classified hit or miss"
+        );
+        assert_eq!(armed.stats.remount_hits, 0, "no affinity, no hits");
+        // Determinism of the event-driven pipeline.
+        let again = run(1);
+        assert_eq!(armed.completions, again.completions);
+        assert_eq!(armed.arm_wait, again.arm_wait);
+        assert_eq!(armed.mount_wait, again.mount_wait);
+    }
+
+    #[test]
+    fn sharded_pipeline_reconciles_per_shard() {
+        let catalog: Vec<Tape> = (0..12)
+            .map(|i| Tape::from_sizes(format!("TAPE{i:03}"), &[1_000; 40]))
+            .collect();
+        let mut config = cfg(LoopMode::Open);
+        config.n_shards = 4;
+        config.n_drives = 2;
+        config.drive.n_arms = 1;
+        config.affinity = Affinity::Lru;
+        let run = || {
+            let mut model =
+                PoissonArrivals::new(RequestMix::new(&catalog), 60.0, 5.0, 5);
+            simulate(&config, &catalog, &Gs, &mut model)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.completions, b.completions, "sharded pipeline is deterministic");
+        let sum = |f: fn(&ReplayStats) -> u64| -> u64 {
+            a.per_shard.iter().map(|s| f(&s.stats)).sum()
+        };
+        assert_eq!(sum(|s| s.remount_hits), a.stats.remount_hits);
+        assert_eq!(sum(|s| s.remount_misses), a.stats.remount_misses);
+        assert_eq!(a.stats.remount_hits + a.stats.remount_misses, a.stats.batches);
+        assert_eq!(
+            a.per_shard.iter().map(|s| s.arm_wait.count()).sum::<u64>(),
+            a.arm_wait.count()
+        );
+        assert_eq!(
+            a.per_shard.iter().map(|s| s.mount_wait.count()).sum::<u64>(),
+            a.mount_wait.count()
+        );
+        assert_eq!(a.mount_wait.count(), a.stats.batches, "one sample per batch");
+        assert_eq!(a.stats.completed, a.stats.submitted);
+    }
+
+    /// A scripted stream that lands `Retry`, `BatchTimer` and `DriveFree`
+    /// events on identical virtual timestamps: the EventQueue's FIFO
+    /// sequence tie-break is what keeps the replay byte-deterministic.
+    struct ScriptArrivals(std::collections::VecDeque<Arrival>);
+
+    impl ArrivalModel for ScriptArrivals {
+        fn name(&self) -> String {
+            "script".into()
+        }
+
+        fn next_arrival(&mut self) -> Option<Arrival> {
+            self.0.pop_front()
+        }
+    }
+
+    #[test]
+    fn colliding_events_tie_break_fifo_and_stay_deterministic() {
+        // Geometry chosen so collisions are exact: window 100 ms and
+        // retry backoff 100 ms put the first Retry on the BatchTimer's
+        // timestamp; a 5 s drive busy period (1 mount + 3 span + 1
+        // unmount) puts later Retries exactly on DriveFree timestamps.
+        let catalog = vec![Tape::from_sizes("T", &[1_000_000; 2])];
+        let mut config = cfg(LoopMode::Closed { max_in_flight: 8 });
+        config.n_drives = 1;
+        config.batcher.max_tape_backlog = 1;
+        config.batcher.window = Duration::from_millis(100);
+        config.retry_backoff_s = 0.1;
+        config.drive = DriveParams {
+            mount_s: 1.0,
+            unmount_s: 1.0,
+            bytes_per_s: 1e6,
+            uturn_s: 0.0,
+            n_arms: 0,
+        };
+        let run = || {
+            let script: Vec<Arrival> = (0..4)
+                .map(|i| Arrival { at_s: 0.0, tape: 0, file: (i % 2) as usize })
+                .collect();
+            let mut model = ScriptArrivals(script.into_iter().collect());
+            simulate(&config, &catalog, &Gs, &mut model)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.completions, b.completions, "collisions must not reorder");
+        assert_eq!(a.stats.completed, 4);
+        assert_eq!(a.stats.submitted, 4);
+        assert_eq!(a.stats.shed, 0);
+        assert_eq!(
+            a.stats.retries, a.stats.busy_rejections,
+            "every Busy schedules exactly one retry"
+        );
+        assert!(a.stats.busy_rejections > 10, "the backlog bound must bounce retries");
+        // Backlog 1 serializes the tape: one request per batch.
+        assert_eq!(a.stats.batches, 4);
+        // The drain asserts inside `simulate` already checked the
+        // submitted − completed − shed in-flight identity.
     }
 
     #[test]

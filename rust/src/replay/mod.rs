@@ -25,7 +25,14 @@
 //! multi-library [`crate::cluster`] layer in virtual time — one batcher
 //! and one drive pool per shard behind the consistent-hash ring — and the
 //! [`QosReport`] gains a per-shard percentile breakdown next to the
-//! fleet-wide ladder. The wall-clock sibling ([`driver`]) feeds the *real*
+//! fleet-wide ladder. With `DriveParams::n_arms > 0` and/or
+//! [`crate::sim::Affinity::Lru`] the **mount pipeline** is modeled
+//! end-to-end: every mount/unmount occupies a robot arm (queueing FIFO
+//! when the per-shard pool is exhausted), tapes stay threaded under LRU
+//! affinity so repeat batches skip the mount, and the report gains
+//! arm-wait / mount-wait / drive-wait ladders plus remount hit/miss
+//! counters. `--arms 0 --affinity none` (the default) reproduces the
+//! legacy fixed mount-cost replay byte for byte. The wall-clock sibling ([`driver`]) feeds the *real*
 //! threaded coordinator (or a whole [`crate::cluster::Cluster`], via
 //! [`RequestSink`]) from the same arrival models — demos and backpressure
 //! tests share that code path.

@@ -58,16 +58,29 @@ pub struct ShardQos {
     pub busy_rejections: u64,
     pub retries: u64,
     pub batches: u64,
+    /// Batches served without a mount (drive affinity; pipeline only).
+    pub remount_hits: u64,
+    /// Batches that paid a mount (pipeline only).
+    pub remount_misses: u64,
     /// Virtual time of this shard's last completion, seconds.
     pub makespan_s: f64,
     /// Mean fraction of this shard's drive pool busy over its makespan.
     pub drive_utilization: f64,
     pub latency: LatencyStats,
     pub service: LatencyStats,
+    /// Robot-arm wait ladder, per arm op (pipeline only).
+    pub arm_wait: LatencyStats,
+    /// Mount-pipeline latency ladder, per batch (pipeline only).
+    pub mount_wait: LatencyStats,
+    /// Free-drive wait ladder, per batch (pipeline only).
+    pub drive_wait: LatencyStats,
+    /// Whether the mount pipeline was active — gates the extra keys so a
+    /// legacy report's bytes never change.
+    pipeline: bool,
 }
 
 impl ShardQos {
-    fn from_outcome(s: &ShardOutcome, n_drives: usize) -> ShardQos {
+    fn from_outcome(s: &ShardOutcome, n_drives: usize, pipeline: bool) -> ShardQos {
         let st = &s.stats;
         ShardQos {
             shard: s.shard,
@@ -79,6 +92,8 @@ impl ShardQos {
             busy_rejections: st.busy_rejections,
             retries: st.retries,
             batches: st.batches,
+            remount_hits: st.remount_hits,
+            remount_misses: st.remount_misses,
             makespan_s: st.makespan_us as f64 / 1e6,
             drive_utilization: if st.makespan_us > 0 {
                 (st.busy_drive_us as f64 / (n_drives as f64 * st.makespan_us as f64))
@@ -88,15 +103,19 @@ impl ShardQos {
             },
             latency: LatencyStats::from_histogram(&s.latency),
             service: LatencyStats::from_histogram(&s.service),
+            arm_wait: LatencyStats::from_histogram(&s.arm_wait),
+            mount_wait: LatencyStats::from_histogram(&s.mount_wait),
+            drive_wait: LatencyStats::from_histogram(&s.drive_wait),
+            pipeline,
         }
     }
 
     fn json(&self) -> String {
-        format!(
+        let mut out = format!(
             "{{\"shard\":{},\"tapes\":{},\"ring_share\":{:.6},\"submitted\":{},\
              \"completed\":{},\"shed\":{},\"busy_rejections\":{},\"retries\":{},\
              \"batches\":{},\"makespan_s\":{:.6},\"drive_utilization\":{:.6},\
-             \"latency\":{},\"service\":{}}}",
+             \"latency\":{},\"service\":{}",
             self.shard,
             self.tapes,
             self.ring_share,
@@ -110,7 +129,20 @@ impl ShardQos {
             self.drive_utilization,
             self.latency.json(),
             self.service.json(),
-        )
+        );
+        if self.pipeline {
+            out.push_str(&format!(
+                ",\"remount_hits\":{},\"remount_misses\":{},\"arm_wait\":{},\
+                 \"mount_wait\":{},\"drive_wait\":{}",
+                self.remount_hits,
+                self.remount_misses,
+                self.arm_wait.json(),
+                self.mount_wait.json(),
+                self.drive_wait.json(),
+            ));
+        }
+        out.push('}');
+        out
     }
 }
 
@@ -128,6 +160,14 @@ pub struct QosReport {
     pub n_shards: usize,
     /// Virtual nodes per shard on the ring.
     pub vnodes: usize,
+    /// Robot arms per shard (0 = unconstrained legacy robot).
+    pub arms: usize,
+    /// Drive-placement policy name (`"none"` / `"lru"`).
+    pub affinity: String,
+    /// Whether the mount pipeline was modeled. Gates every pipeline key in
+    /// the JSON, so a legacy replay's report stays byte-identical to the
+    /// pre-pipeline format.
+    pub pipeline: bool,
     /// Configured arrival horizon, seconds.
     pub duration_s: f64,
     pub submitted: u64,
@@ -147,6 +187,16 @@ pub struct QosReport {
     pub latency: LatencyStats,
     /// Mount + in-tape service time (the paper's objective, shifted).
     pub service: LatencyStats,
+    /// Batches served without a mount, fleet-wide (pipeline only).
+    pub remount_hits: u64,
+    /// Batches that paid a mount, fleet-wide (pipeline only).
+    pub remount_misses: u64,
+    /// Robot-arm wait ladder, per arm op (pipeline only).
+    pub arm_wait: LatencyStats,
+    /// Mount-pipeline latency ladder, per batch (pipeline only).
+    pub mount_wait: LatencyStats,
+    /// Free-drive wait ladder, per batch (pipeline only).
+    pub drive_wait: LatencyStats,
     /// Per-shard breakdown (one entry per shard, ascending).
     pub shards: Vec<ShardQos>,
 }
@@ -163,6 +213,7 @@ impl QosReport {
         let s = &outcome.stats;
         let makespan_s = s.makespan_us as f64 / 1e6;
         let fleet_drives = cfg.n_shards * cfg.n_drives;
+        let pipeline = cfg.pipeline_active();
         QosReport {
             policy: policy.to_string(),
             arrivals: arrivals.to_string(),
@@ -174,6 +225,9 @@ impl QosReport {
             n_drives: cfg.n_drives,
             n_shards: cfg.n_shards,
             vnodes: cfg.vnodes,
+            arms: cfg.drive.n_arms,
+            affinity: cfg.affinity.name().to_string(),
+            pipeline,
             duration_s,
             submitted: s.submitted,
             completed: s.completed,
@@ -196,10 +250,15 @@ impl QosReport {
             },
             latency: LatencyStats::from_histogram(&outcome.latency),
             service: LatencyStats::from_histogram(&outcome.service),
+            remount_hits: s.remount_hits,
+            remount_misses: s.remount_misses,
+            arm_wait: LatencyStats::from_histogram(&outcome.arm_wait),
+            mount_wait: LatencyStats::from_histogram(&outcome.mount_wait),
+            drive_wait: LatencyStats::from_histogram(&outcome.drive_wait),
             shards: outcome
                 .per_shard
                 .iter()
-                .map(|sh| ShardQos::from_outcome(sh, cfg.n_drives))
+                .map(|sh| ShardQos::from_outcome(sh, cfg.n_drives, pipeline))
                 .collect(),
         }
     }
@@ -207,7 +266,11 @@ impl QosReport {
     /// Deterministic single-object JSON (stable key order, `%.6f` floats).
     /// The fleet-wide `latency`/`service` objects are rendered exactly as
     /// in the single-library report — sharding adds keys, it never
-    /// perturbs the fleet percentile bytes.
+    /// perturbs the fleet percentile bytes. Likewise the mount pipeline:
+    /// its keys (`arms`, `affinity`, `remount_*`, `arm_wait`,
+    /// `mount_wait`, `drive_wait`) appear **only** when the pipeline was
+    /// active, so an `--arms 0 --affinity none` replay emits the exact
+    /// pre-pipeline document (regression-gated in ci.sh).
     pub fn to_json(&self) -> String {
         let mut out = format!(
             "{{\"policy\":\"{}\",\"arrivals\":\"{}\",\"seed\":{},\"mode\":\"{}\",\
@@ -237,6 +300,20 @@ impl QosReport {
             self.latency.json(),
             self.service.json(),
         );
+        if self.pipeline {
+            out.push_str(&format!(
+                ",\"arms\":{},\"affinity\":\"{}\",\"remount_hits\":{},\
+                 \"remount_misses\":{},\"arm_wait\":{},\"mount_wait\":{},\
+                 \"drive_wait\":{}",
+                self.arms,
+                esc(&self.affinity),
+                self.remount_hits,
+                self.remount_misses,
+                self.arm_wait.json(),
+                self.mount_wait.json(),
+                self.drive_wait.json(),
+            ));
+        }
         out.push_str(",\"per_shard\":[");
         for (i, s) in self.shards.iter().enumerate() {
             if i > 0 {
@@ -286,6 +363,7 @@ mod tests {
     use crate::replay::arrivals::{PoissonArrivals, RequestMix};
     use crate::replay::engine::simulate;
     use crate::sched::Gs;
+    use crate::sim::{Affinity, DriveParams};
 
     fn sample_report(seed: u64) -> QosReport {
         let catalog = vec![
@@ -372,6 +450,72 @@ mod tests {
         let doc = r.to_json();
         assert!(doc.contains("\"shards\":1"));
         assert!(doc.contains("\"per_shard\":[{\"shard\":0,"));
+    }
+
+    fn pipeline_report(seed: u64) -> QosReport {
+        // One tape: every batch after the first few mounts lands on a
+        // drive already holding it, so remount hits are structural, not a
+        // seed accident.
+        let catalog = vec![Tape::from_sizes("T0", &[1_000; 40])];
+        let cfg = ReplayConfig {
+            drive: DriveParams { n_arms: 1, ..DriveParams::default() },
+            affinity: Affinity::Lru,
+            ..ReplayConfig::default()
+        };
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 5.0, 8.0, seed);
+        let outcome = simulate(&cfg, &catalog, &Gs, &mut model);
+        QosReport::new("GS", &model.name(), seed, 8.0, &cfg, &outcome)
+    }
+
+    #[test]
+    fn legacy_json_never_grows_pipeline_keys() {
+        // The byte-compatibility contract: a replay with no arms and no
+        // affinity emits the exact pre-pipeline document — none of the
+        // mount-pipeline keys may appear, at the fleet or shard level.
+        let doc = sample_report(7).to_json();
+        for key in [
+            "\"arms\":",
+            "\"affinity\":",
+            "\"remount_hits\":",
+            "\"remount_misses\":",
+            "\"arm_wait\":",
+            "\"mount_wait\":",
+            "\"drive_wait\":",
+        ] {
+            assert!(!doc.contains(key), "legacy report leaked {key}: {doc}");
+        }
+        // And the legacy key order is intact around the splice point.
+        assert!(doc.contains("},\"per_shard\":[{\"shard\":0,"));
+    }
+
+    #[test]
+    fn pipeline_json_carries_the_mount_sections() {
+        let a = pipeline_report(7);
+        let b = pipeline_report(7);
+        assert_eq!(a.to_json(), b.to_json(), "pipeline JSON stays byte-identical");
+        assert!(a.pipeline);
+        let doc = a.to_json();
+        for key in [
+            "\"arms\":1",
+            "\"affinity\":\"lru\"",
+            "\"remount_hits\":",
+            "\"remount_misses\":",
+            "\"arm_wait\":{\"mean_s\":",
+            "\"mount_wait\":{\"mean_s\":",
+            "\"drive_wait\":{\"mean_s\":",
+        ] {
+            assert!(doc.contains(key), "missing {key} in {doc}");
+        }
+        // The shard sections carry the same breakdown.
+        let shard_part = doc.split("\"per_shard\":[").nth(1).unwrap();
+        assert!(shard_part.contains("\"remount_hits\":"));
+        assert!(shard_part.contains("\"arm_wait\":"));
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count());
+        // Counters reconcile: hits + misses = batches.
+        assert_eq!(a.remount_hits + a.remount_misses, a.batches);
+        assert!(a.remount_hits > 0, "one tape over four drives must re-hit");
+        assert!(a.remount_misses <= 4, "at most one mount per (empty) drive");
     }
 
     #[test]

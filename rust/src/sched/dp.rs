@@ -94,6 +94,13 @@ impl Dp {
 /// `cost_from(x_pos) = cost_from(m) − n·(m − x_pos)` and the argmin is
 /// preserved. [`Scheduler::schedule`] therefore returns the optimal detour
 /// list for a head starting at `x_pos`.
+///
+/// One exception to the identity: at `x_pos ≤ ℓ(f₁)` the *empty* schedule
+/// is a cold start — the head never reverses, so its final sweep saves the
+/// U-turn ([`crate::sim::evaluate_from`]'s cold-start semantics), which
+/// the from-`m` framing cannot express. Both [`DpFromStart::optimal_cost`]
+/// and [`Scheduler::schedule`] compare that cold sweep against the DP
+/// argmin and prefer it when strictly cheaper.
 #[derive(Debug, Clone, Copy)]
 pub struct DpFromStart {
     pub x_pos: u64,
@@ -105,10 +112,22 @@ impl Scheduler for DpFromStart {
     }
 
     fn schedule(&self, inst: &Instance) -> Schedule {
-        DpSolver::new(inst, usize::MAX)
+        if self.x_pos < inst.l(0) {
+            // No detour is executable (every ℓ(a) lies right of the head):
+            // the only schedule is the cold rightward sweep.
+            return Vec::new();
+        }
+        let (cost_from_m, sched) = DpSolver::new(inst, usize::MAX)
             .with_max_start(self.x_pos)
-            .solve()
-            .1
+            .solve();
+        if self.x_pos == inst.l(0) {
+            let delta = inst.tape_len() as Cost - self.x_pos as Cost;
+            let from_x = cost_from_m - inst.n() as Cost * delta;
+            if self.cold_sweep_cost(inst) < from_x {
+                return Vec::new();
+            }
+        }
+        sched
     }
 }
 
@@ -117,11 +136,27 @@ impl DpFromStart {
     /// r(f₁)` so every file remains servable without moving right first;
     /// costs are measured from t = 0 at `x_pos`).
     pub fn optimal_cost(&self, inst: &Instance) -> Cost {
+        if self.x_pos < inst.l(0) {
+            return self.cold_sweep_cost(inst);
+        }
         let (cost_from_m, _) = DpSolver::new(inst, usize::MAX)
             .with_max_start(self.x_pos)
             .solve();
         let delta = inst.tape_len() as Cost - self.x_pos as Cost;
-        cost_from_m - inst.n() as Cost * delta
+        let from_x = cost_from_m - inst.n() as Cost * delta;
+        if self.x_pos == inst.l(0) {
+            return from_x.min(self.cold_sweep_cost(inst));
+        }
+        from_x
+    }
+
+    /// Cost of the empty schedule under the cold-start semantics: the head
+    /// at `x_pos ≤ ℓ(f₁)` sweeps right with no reversal, so each file is
+    /// served at `r(f) − x_pos` with no U-turn charge.
+    fn cold_sweep_cost(&self, inst: &Instance) -> Cost {
+        (0..inst.k())
+            .map(|f| inst.x(f) as Cost * (inst.r(f) as Cost - self.x_pos as Cost))
+            .sum()
     }
 }
 
@@ -450,6 +485,28 @@ mod tests {
             );
             assert_eq!(solver.optimal_cost(&i), best);
         }
+    }
+
+    #[test]
+    fn from_start_cold_boundary_prefers_the_sweep() {
+        use crate::sim::evaluate_from;
+        // Head exactly at ℓ(f₁): the empty schedule is a cold start — the
+        // head never reverses, so it saves the U-turn (fixed semantics) —
+        // while any detour pays two. With a large U the cold sweep wins
+        // and the solver must both return and predict it.
+        let i = inst(50, &[(10, 20, 1), (30, 40, 1)], 100);
+        let solver = DpFromStart { x_pos: 10 };
+        let sched = solver.schedule(&i);
+        let cost = evaluate_from(&i, &sched, 10).cost;
+        assert_eq!(solver.optimal_cost(&i), cost, "predicted vs simulated");
+        // Exhaustive over the valid laminar lists (only f0 starts ≤ 10).
+        let mut best = Cost::MAX;
+        for ds in [vec![], vec![Detour::atomic(0)], vec![Detour::new(0, 1)]] {
+            best = best.min(evaluate_from(&i, &ds, 10).cost);
+        }
+        assert_eq!(cost, best);
+        assert!(sched.is_empty(), "cold sweep beats every detour at U=50");
+        assert_eq!(cost, (20 - 10) + (40 - 10));
     }
 
     #[test]

@@ -9,7 +9,10 @@
 //! - After all explicit detours, the implicit final detour: the head moves
 //!   left to the leftmost unserved file (if any), U-turns (+U), and sweeps
 //!   right, serving every remaining file. Movement after the last service
-//!   does not count toward anything.
+//!   does not count toward anything. The U-turn is the reversal cost, so a
+//!   head that has **never** reversed — no detours executed and already at
+//!   or left of every unserved file (only reachable through
+//!   [`evaluate_from`]'s arbitrary start) — sweeps right without paying U.
 //! - A file is served when it has been traversed left-to-right entirely; the
 //!   service time of its `x(f)` requests is the instant its right end is
 //!   passed. Cost = `Σ_f x(f) · t(f)`.
@@ -51,6 +54,12 @@ pub fn evaluate(inst: &Instance, detours: &[Detour]) -> SimOutcome {
 /// [`evaluate`] with an arbitrary head starting position (the paper's
 /// conclusion extension). Every detour must start at or left of `start`
 /// (a head starting at `start` can never meet a righter detour).
+///
+/// Cold-start semantics: the head at `start` has no momentum. If no detour
+/// is executed and `start` is at or left of the leftmost requested file,
+/// the final sweep proceeds rightward with **no** U-turn charge — the head
+/// never reverses. (From the right tape end this case cannot arise: every
+/// file lies strictly left of `m`.)
 pub fn evaluate_from(inst: &Instance, detours: &[Detour], start: u64) -> SimOutcome {
     let k = inst.k();
     for d in detours {
@@ -100,14 +109,23 @@ pub fn evaluate_from(inst: &Instance, detours: &[Detour], start: u64) -> SimOutc
 
     // Implicit final detour: serve whatever remains.
     if let Some(fmin) = (0..k).find(|&f| !served[f]) {
-        let start = pos.min(inst.l(fmin) as Cost);
-        t += pos - start; // move further left if needed (no cost if start==pos)
-        t += u;
-        uturns += 1;
+        let sweep_from = pos.min(inst.l(fmin) as Cost);
+        t += pos - sweep_from; // move further left if needed (free if sweep_from==pos)
+        // The U-turn is the *reversal* cost (§3): it is paid only when the
+        // head actually reverses — either a prior detour left it travelling
+        // leftward, or it must first move left of its current position to
+        // reach the leftmost unserved file. A cold start (no detours
+        // executed, head already at or left of every unserved file) sweeps
+        // right directly and pays nothing; charging `u` there over-counted
+        // `uturns` and cost relative to the paper's U-turn model.
+        if uturns > 0 || sweep_from < pos {
+            t += u;
+            uturns += 1;
+        }
         for f in 0..k {
             if !served[f] {
                 served[f] = true;
-                service[f] = t + (inst.r(f) as Cost - start);
+                service[f] = t + (inst.r(f) as Cost - sweep_from);
             }
         }
     }
@@ -208,6 +226,49 @@ mod tests {
         // f1 pays 1 U-turn, f0 pays 3.
         assert_eq!(c9.service[1] - c0.service[1], 9);
         assert_eq!(c9.service[0] - c0.service[0], 27);
+    }
+
+    #[test]
+    fn cold_start_left_of_files_pays_no_uturn() {
+        // Regression: the implicit final sweep used to charge U even when
+        // the head had never reversed. A head starting at 0 (left of every
+        // file) with no detours sweeps right directly: 0 U-turns, and every
+        // service time is exactly the right endpoint minus the start.
+        let i = inst(7, &[(10, 20, 1), (50, 60, 2)], 100);
+        let out = evaluate_from(&i, &[], 0);
+        assert_eq!(out.uturns, 0, "cold start must not reverse");
+        assert_eq!(out.service, vec![20, 60]);
+        assert_eq!(out.cost, 20 + 2 * 60);
+
+        // Starting exactly at the leftmost file's left edge is still cold.
+        let out = evaluate_from(&i, &[], 10);
+        assert_eq!(out.uturns, 0);
+        assert_eq!(out.service, vec![20 - 10, 60 - 10]);
+    }
+
+    #[test]
+    fn start_right_of_leftmost_file_still_pays_the_uturn() {
+        // One step right of ℓ(f₀): the head must travel left then reverse,
+        // so the U-turn is charged exactly as before.
+        let i = inst(7, &[(10, 20, 1), (50, 60, 2)], 100);
+        let out = evaluate_from(&i, &[], 11);
+        assert_eq!(out.uturns, 1);
+        // 11 → 10 (t=1), U (8), serve f0 at 8+10=18, f1 at 8+50=58.
+        assert_eq!(out.service, vec![18, 58]);
+    }
+
+    #[test]
+    fn cold_start_exemption_needs_a_virgin_head() {
+        // After a detour the head returns moving left: even if it now sits
+        // at or left of the remaining files, the final sweep reverses and
+        // pays U. (Detour on f0 leaves the head at ℓ(f0)=10 < ℓ(f1)=50.)
+        let i = inst(5, &[(10, 20, 1), (50, 60, 2)], 100);
+        let out = evaluate_from(&i, &[Detour::atomic(0)], 100);
+        assert_eq!(out.uturns, 3, "the final sweep still reverses");
+        // And the default right-end entry point is untouched by the fix.
+        let plain = evaluate(&i, &[]);
+        assert_eq!(plain.uturns, 1);
+        assert_eq!(plain.service, vec![105, 145]);
     }
 
     #[test]

@@ -34,6 +34,11 @@ pub struct DriveParams {
     /// Seconds per U-turn (the mechanical deceleration of §3). Used to
     /// derive the byte-unit penalty `U` fed into the schedulers.
     pub uturn_s: f64,
+    /// Robot arms in the library's mount pipeline. Every mount and unmount
+    /// occupies one arm for `mount_s`/`unmount_s` and queues when all arms
+    /// are busy. `0` models an unconstrained robot — the legacy fixed
+    /// mount-cost model, in which mounts never contend.
+    pub n_arms: usize,
 }
 
 impl Default for DriveParams {
@@ -43,20 +48,135 @@ impl Default for DriveParams {
             unmount_s: 40.0,
             bytes_per_s: 200e9, // 20 TB end-to-end in ~100 s
             uturn_s: 2.0,
+            n_arms: 0,
         }
     }
 }
 
 impl DriveParams {
-    /// U-turn penalty expressed in tape bytes (the unit of the model).
+    /// U-turn penalty expressed in tape bytes (the unit of the model),
+    /// rounded to the nearest byte. Saturates explicitly at `u64::MAX`
+    /// (and clamps NaN/negative products to 0) so a pathological
+    /// `bytes_per_s` cannot wrap the penalty fed to the schedulers.
     pub fn uturn_bytes(&self) -> u64 {
-        (self.uturn_s * self.bytes_per_s) as u64
+        let b = (self.uturn_s * self.bytes_per_s).round();
+        if !(b > 0.0) {
+            // NaN or non-positive: no penalty.
+            0
+        } else if b >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            b as u64
+        }
     }
 
     /// Convert a tape-unit (bytes) duration to seconds.
     pub fn to_seconds(&self, tape_units: i128) -> f64 {
         tape_units as f64 / self.bytes_per_s
     }
+
+    /// Mount duration in the virtual-time unit (µs), on the shared
+    /// µs grid ([`crate::util::secs_to_us`]).
+    pub fn mount_us(&self) -> u64 {
+        crate::util::secs_to_us(self.mount_s)
+    }
+
+    /// Unmount duration in virtual µs (see [`DriveParams::mount_us`]).
+    pub fn unmount_us(&self) -> u64 {
+        crate::util::secs_to_us(self.unmount_s)
+    }
+
+    /// Mount-cost charge (seconds of added request latency) for one way a
+    /// batch can land on a drive — the shared accounting used by the live
+    /// coordinator and the replay engine's legacy (arm-less) path.
+    pub fn mount_charge_s(&self, plan: MountPlan) -> f64 {
+        match plan {
+            MountPlan::Hit => 0.0,
+            MountPlan::Mount => self.mount_s,
+            MountPlan::EvictMount => self.unmount_s + self.mount_s,
+        }
+    }
+}
+
+/// Drive-placement policy of a dispatcher: what happens to a tape after
+/// its batch finishes, and which drive the next batch for it lands on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Affinity {
+    /// Unmount after every batch; every dispatch pays a fresh mount (the
+    /// paper's fixed mount-cost model).
+    #[default]
+    None,
+    /// Keep the tape in the drive after its batch (lazy unmount). The
+    /// dispatcher prefers an idle drive already holding the batch's tape —
+    /// a *remount hit* skips the mount entirely — and evicts the
+    /// least-recently-used loaded drive when no empty drive is free.
+    Lru,
+}
+
+impl Affinity {
+    /// Parse a CLI name (`"none"` / `"lru"`, case-insensitive).
+    pub fn from_name(s: &str) -> Option<Affinity> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(Affinity::None),
+            "lru" => Some(Affinity::Lru),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (reports, CLI round-trip).
+    pub fn name(self) -> &'static str {
+        match self {
+            Affinity::None => "none",
+            Affinity::Lru => "lru",
+        }
+    }
+}
+
+/// How a dispatched batch lands on its chosen drive: the mount work the
+/// robot pipeline must perform before the head can execute the schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MountPlan {
+    /// The drive already holds the tape: no robot work at all.
+    Hit,
+    /// Empty drive: one mount through an arm.
+    Mount,
+    /// A loaded drive is evicted: unmount, then mount, both through arms.
+    EvictMount,
+}
+
+/// The **single home** of the drive-placement preference, shared by the
+/// live coordinator's dispatcher and the replay engine so their remount
+/// economics can never drift apart: among free drives, pick the first one
+/// already holding the batch's tape (remount hit, LRU affinity only),
+/// else the lowest-index empty one, else the least-recently-used loaded
+/// one (eviction; index breaks `last_used` ties). `drives` yields one
+/// `(free, holds_tape, empty, last_used)` view per drive, in drive-index
+/// order. Returns `None` when every drive is busy.
+pub fn pick_drive_slot(
+    affinity: Affinity,
+    drives: impl IntoIterator<Item = (bool, bool, bool, u64)>,
+) -> Option<(usize, MountPlan)> {
+    let mut first_empty: Option<usize> = None;
+    let mut lru: Option<(u64, usize)> = None;
+    for (i, (free, holds_tape, empty, last_used)) in drives.into_iter().enumerate() {
+        if !free {
+            continue;
+        }
+        if affinity == Affinity::Lru && holds_tape {
+            return Some((i, MountPlan::Hit));
+        }
+        if empty {
+            if first_empty.is_none() {
+                first_empty = Some(i);
+            }
+        } else if lru.map_or(true, |(t, _)| last_used < t) {
+            lru = Some((last_used, i));
+        }
+    }
+    if let Some(i) = first_empty {
+        return Some((i, MountPlan::Mount));
+    }
+    lru.map(|(_, i)| (i, MountPlan::EvictMount))
 }
 
 /// One tape job to be scheduled on a drive.
@@ -76,6 +196,9 @@ pub struct TapeJobResult {
     pub tape_name: String,
     /// Time the job waited for a free drive (s).
     pub drive_wait_s: f64,
+    /// Time the mount waited for a free robot arm (s; 0 when
+    /// `DriveParams::n_arms == 0`, the unconstrained robot).
+    pub arm_wait_s: f64,
     /// Mount latency paid (s).
     pub mount_s: f64,
     /// Mean *in-tape* service time over the job's requests (s) — the
@@ -101,6 +224,8 @@ pub struct LibraryMetrics {
     pub mean_latency_s: f64,
     /// Request-weighted mean in-tape service time (s).
     pub mean_service_s: f64,
+    /// Request-weighted mean robot-arm wait before the mount (s).
+    pub mean_arm_wait_s: f64,
     /// Time the last job completes (s).
     pub makespan_s: f64,
     /// Mean drive utilization over the makespan (0..=1).
@@ -130,6 +255,11 @@ impl<'a> LibrarySim<'a> {
         let to_bits = |s: f64| (s.max(0.0) * 1e6) as u64; // µs ticks
         let from_bits = |b: u64| b as f64 / 1e6;
 
+        // Robot arms: each entry is the µs tick the arm frees. Mounts are
+        // granted in job (arrival) order — an analytic approximation; the
+        // replay engine models the exact event order, unmounts included.
+        let mut arms: Vec<u64> = vec![0; self.params.n_arms];
+
         let mut results = Vec::with_capacity(jobs.len());
         let mut busy_total = 0.0;
         for job in &jobs {
@@ -137,23 +267,35 @@ impl<'a> LibrarySim<'a> {
             let start = from_bits(free_at).max(job.arrival_s);
             let wait = start - job.arrival_s;
 
+            // The mount serializes through the arm pool (free when
+            // n_arms == 0: the legacy unconstrained robot).
+            let arm_wait = if arms.is_empty() {
+                0.0
+            } else {
+                let i = (0..arms.len()).min_by_key(|&i| arms[i]).unwrap();
+                let begin = arms[i].max(to_bits(start));
+                arms[i] = begin + to_bits(self.params.mount_s);
+                from_bits(begin - to_bits(start))
+            };
+
             // Compute the schedule and in-tape service times.
             let sched = self.policy.schedule(&job.instance);
             let out = evaluate(&job.instance, &sched);
             let mean_service =
                 self.params.to_seconds(out.cost) / job.instance.n() as f64;
             let span = self.params.to_seconds(out.finish);
-            let busy = self.params.mount_s + span + self.params.unmount_s;
-            let done = start + self.params.mount_s + span;
+            let busy = arm_wait + self.params.mount_s + span + self.params.unmount_s;
+            let done = start + arm_wait + self.params.mount_s + span;
 
             busy_total += busy;
             drives.push(std::cmp::Reverse(to_bits(start + busy)));
             results.push(TapeJobResult {
                 tape_name: job.tape_name.clone(),
                 drive_wait_s: wait,
+                arm_wait_s: arm_wait,
                 mount_s: self.params.mount_s,
                 mean_service_s: mean_service,
-                mean_latency_s: wait + self.params.mount_s + mean_service,
+                mean_latency_s: wait + arm_wait + self.params.mount_s + mean_service,
                 drive_busy_s: busy,
                 n_requests: job.instance.n(),
                 done_s: done,
@@ -174,6 +316,7 @@ impl<'a> LibrarySim<'a> {
             requests,
             mean_latency_s: wsum(&|r| r.mean_latency_s),
             mean_service_s: wsum(&|r| r.mean_service_s),
+            mean_arm_wait_s: wsum(&|r| r.arm_wait_s),
             makespan_s: makespan,
             drive_utilization: if makespan > 0.0 {
                 (busy_total / self.n_drives as f64 / makespan).min(1.0)
@@ -205,7 +348,13 @@ mod tests {
     }
 
     fn params() -> DriveParams {
-        DriveParams { mount_s: 10.0, unmount_s: 5.0, bytes_per_s: 1e6, uturn_s: 1.0 }
+        DriveParams {
+            mount_s: 10.0,
+            unmount_s: 5.0,
+            bytes_per_s: 1e6,
+            uturn_s: 1.0,
+            n_arms: 0,
+        }
     }
 
     #[test]
@@ -255,5 +404,95 @@ mod tests {
         let p = params();
         assert_eq!(p.uturn_bytes(), 1_000_000);
         assert!((p.to_seconds(2_000_000) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uturn_bytes_rounds_and_saturates() {
+        // Regression: the penalty used to truncate (0.9999… → 0) and a
+        // pathological bytes_per_s could wrap through the f64→u64 cast.
+        let p = |uturn_s: f64, bytes_per_s: f64| DriveParams {
+            uturn_s,
+            bytes_per_s,
+            ..DriveParams::default()
+        };
+        assert_eq!(p(0.0015, 1e6).uturn_bytes(), 1_500);
+        assert_eq!(p(0.9999, 1.0).uturn_bytes(), 1, "rounds, not truncates");
+        assert_eq!(p(0.4, 1.0).uturn_bytes(), 0);
+        assert_eq!(p(2.0, f64::MAX).uturn_bytes(), u64::MAX, "saturates high");
+        assert_eq!(p(1.0, f64::INFINITY).uturn_bytes(), u64::MAX);
+        assert_eq!(p(-1.0, 1e9).uturn_bytes(), 0, "negative clamps to zero");
+        assert_eq!(p(f64::NAN, 1e9).uturn_bytes(), 0, "NaN clamps to zero");
+    }
+
+    #[test]
+    fn mount_charge_helpers_are_consistent() {
+        let p = params();
+        assert_eq!(p.mount_us(), 10_000_000);
+        assert_eq!(p.unmount_us(), 5_000_000);
+        assert_eq!(p.mount_charge_s(MountPlan::Hit), 0.0);
+        assert_eq!(p.mount_charge_s(MountPlan::Mount), p.mount_s);
+        assert_eq!(p.mount_charge_s(MountPlan::EvictMount), p.unmount_s + p.mount_s);
+        assert_eq!(Affinity::from_name("LRU"), Some(Affinity::Lru));
+        assert_eq!(Affinity::from_name("none"), Some(Affinity::None));
+        assert_eq!(Affinity::from_name("fifo"), None);
+        assert_eq!(Affinity::Lru.name(), "lru");
+        assert_eq!(Affinity::default(), Affinity::None);
+    }
+
+    #[test]
+    fn pick_drive_slot_preference_order() {
+        use MountPlan::*;
+        // Views: (free, holds_tape, empty, last_used), in drive order.
+        let drives = [
+            (true, false, true, 5),  // 0: free empty
+            (true, true, false, 1),  // 1: free, holds the batch's tape
+            (false, true, false, 0), // 2: busy with the tape — ineligible
+            (true, false, false, 3), // 3: free, loaded with another tape
+        ];
+        // LRU affinity: the loaded idle drive wins even though an empty
+        // drive has a lower index.
+        assert_eq!(pick_drive_slot(Affinity::Lru, drives), Some((1, Hit)));
+        // No affinity: holds_tape is ignored, the first empty drive wins.
+        assert_eq!(pick_drive_slot(Affinity::None, drives), Some((0, Mount)));
+        // No empty drive: LRU eviction by (last_used, index).
+        let loaded = [
+            (true, false, false, 7),
+            (false, false, false, 1),
+            (true, false, false, 3),
+            (true, false, false, 3),
+        ];
+        assert_eq!(pick_drive_slot(Affinity::Lru, loaded), Some((2, EvictMount)));
+        // Every drive busy: nothing to pick.
+        assert_eq!(pick_drive_slot(Affinity::Lru, [(false, true, false, 0)]), None);
+    }
+
+    #[test]
+    fn single_arm_serializes_concurrent_mounts() {
+        // Two free drives but one robot arm: both jobs get a drive at t=0,
+        // yet B's mount queues behind A's for exactly mount_s.
+        let mut p = params();
+        p.n_arms = 1;
+        let sim = LibrarySim::new(p, 2, &NoDetour);
+        let (res, m) = sim.run(vec![job("A", 0.0, 0), job("B", 0.0, 0)]);
+        assert_eq!(res[0].drive_wait_s, 0.0);
+        assert_eq!(res[1].drive_wait_s, 0.0, "drives are not the bottleneck");
+        assert_eq!(res[0].arm_wait_s, 0.0);
+        assert!(
+            (res[1].arm_wait_s - p.mount_s).abs() < 1e-6,
+            "B's mount queues behind A's: waited {}",
+            res[1].arm_wait_s
+        );
+        assert!(m.mean_arm_wait_s > 0.0);
+        assert!(
+            (res[1].mean_latency_s - (res[0].mean_latency_s + p.mount_s)).abs() < 1e-6,
+            "the arm wait shows up in end-to-end latency"
+        );
+
+        // n_arms == 0 (unconstrained robot): byte-for-byte the old model.
+        let sim0 = LibrarySim::new(params(), 2, &NoDetour);
+        let (res0, m0) = sim0.run(vec![job("A", 0.0, 0), job("B", 0.0, 0)]);
+        assert!(res0.iter().all(|r| r.arm_wait_s == 0.0));
+        assert_eq!(m0.mean_arm_wait_s, 0.0);
+        assert!(m0.mean_latency_s < m.mean_latency_s);
     }
 }

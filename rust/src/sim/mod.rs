@@ -6,12 +6,18 @@
 //! against it. [`trajectory`] is a second, deliberately naive implementation
 //! (explicit polyline walk) used to cross-check `head` in tests.
 //!
-//! [`library`] simulates the robotic tape library (drive pool, mount/unmount
-//! latencies) that the coordinator drives in the end-to-end example.
+//! [`library`] simulates the robotic tape library (drive pool, robot-arm
+//! mount pipeline, mount/unmount latencies) that the coordinator drives in
+//! the end-to-end example, and hosts the shared mount-pipeline vocabulary
+//! ([`Affinity`], [`MountPlan`], the [`DriveParams`] cost helpers) used by
+//! the live coordinator and the replay engine.
 
 pub mod head;
 pub mod library;
 pub mod trajectory;
 
 pub use head::{evaluate, evaluate_from, SimOutcome};
-pub use library::{DriveParams, LibraryMetrics, LibrarySim, TapeJob, TapeJobResult};
+pub use library::{
+    pick_drive_slot, Affinity, DriveParams, LibraryMetrics, LibrarySim, MountPlan, TapeJob,
+    TapeJobResult,
+};

@@ -4,3 +4,14 @@
 pub mod hash;
 pub mod rng;
 pub mod stats;
+
+/// Convert seconds to the virtual-time unit (integer µs, rounded to
+/// nearest, negatives clamped to zero). This is the **one** µs-grid
+/// rounding rule — shared by the replay clock, the drive mount-cost
+/// helpers, and the batcher's µs service accounting. Byte-deterministic
+/// replays depend on these call sites never diverging, so they all
+/// delegate here.
+#[inline]
+pub fn secs_to_us(s: f64) -> u64 {
+    (s.max(0.0) * 1e6).round() as u64
+}

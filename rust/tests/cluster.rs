@@ -118,7 +118,9 @@ fn live_cluster_serves_closed_loop_workload() {
                     unmount_s: 0.2,
                     bytes_per_s: 1e9,
                     uturn_s: 0.01,
+                    n_arms: 0,
                 },
+                ..CoordinatorConfig::default()
             },
         },
         tapes.clone(),
@@ -167,6 +169,7 @@ fn sharded_replay_qos_json_is_byte_stable() {
             unmount_s: 1.0,
             bytes_per_s: 1e9,
             uturn_s: 0.1,
+            n_arms: 0,
         },
         ..ReplayConfig::default()
     };
@@ -219,6 +222,7 @@ fn one_shard_reproduces_the_single_library_replay() {
             unmount_s: 1.0,
             bytes_per_s: 1e9,
             uturn_s: 0.1,
+            n_arms: 0,
         },
         ..ReplayConfig::default()
     };

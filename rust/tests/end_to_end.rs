@@ -87,6 +87,7 @@ fn coordinator_full_stack_improves_with_better_policy() {
                     ..BatcherConfig::default()
                 },
                 drive: DriveParams::default(),
+                ..CoordinatorConfig::default()
             },
             ds.tapes.iter().map(|t| t.tape.clone()),
             Arc::from(scheduler_by_name(policy).unwrap()),

@@ -249,7 +249,16 @@ fn from_start_extension_invariants() {
         let from_x = evaluate_from(inst, &sched, x_pos).cost;
         let from_m = evaluate(inst, &sched).cost;
         let delta = (inst.tape_len() - x_pos) as i128 * inst.n() as i128;
-        assert_eq!(from_x, from_m - delta, "cost identity");
+        if sched.is_empty() && x_pos <= inst.l(0) {
+            // Cold-start corner (fixed U-turn semantics): the empty
+            // schedule from a head already at/left of every file never
+            // reverses. Skipping the turn removes `u` from every one of
+            // the n request service times, so the saving is n·u.
+            let saved = inst.n() as i128 * inst.u() as i128;
+            assert_eq!(from_x, from_m - delta - saved, "cold identity");
+        } else {
+            assert_eq!(from_x, from_m - delta, "cost identity");
+        }
         assert_eq!(solver.optimal_cost(inst), from_x);
         // Restricting the start can never help.
         let unrestricted = evaluate(inst, &Dp.schedule(inst)).cost;

@@ -13,7 +13,7 @@ use tapesched::replay::{
     RequestMix,
 };
 use tapesched::sched::scheduler_by_name;
-use tapesched::sim::DriveParams;
+use tapesched::sim::{Affinity, DriveParams};
 use tapesched::util::stats::percentile_sorted;
 
 fn small_catalog(n_tapes: usize) -> Vec<Tape> {
@@ -40,6 +40,7 @@ fn fast_cfg(mode: LoopMode) -> ReplayConfig {
             unmount_s: 1.0,
             bytes_per_s: 1e9,
             uturn_s: 0.1,
+            n_arms: 0,
         },
         mode,
         retry_backoff_s: 0.02,
@@ -135,6 +136,46 @@ fn closed_loop_replay_exercises_busy_retry() {
     assert_eq!(outcome.completions.len() as u64, report.completed);
 }
 
+/// The mount pipeline end to end: a replay with a bounded arm pool and
+/// LRU affinity stays byte-deterministic, reconciles its remount
+/// accounting, and serializes the new QoS sections.
+#[test]
+fn mount_pipeline_replay_is_deterministic_and_reconciles() {
+    let catalog = small_catalog(6);
+    let mut cfg = fast_cfg(LoopMode::Open);
+    cfg.drive.n_arms = 1;
+    cfg.affinity = Affinity::Lru;
+    assert!(cfg.pipeline_active());
+    let run = || {
+        let policy = scheduler_by_name("GS").unwrap();
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 10.0, 10.0, 7);
+        run_replay(&cfg, &catalog, policy.as_ref(), &mut model, 7, 10.0)
+    };
+    let (ra, oa) = run();
+    let (rb, ob) = run();
+    assert_eq!(oa.completions, ob.completions, "pipeline replay must stay deterministic");
+    assert_eq!(
+        reports_json(&[ra.clone()]),
+        reports_json(&[rb]),
+        "pipeline QoS JSON must be byte-identical for a fixed seed"
+    );
+    assert!(ra.pipeline);
+    assert_eq!(ra.completed, ra.submitted, "drain invariant");
+    assert_eq!(ra.remount_hits + ra.remount_misses, ra.batches);
+    assert_eq!(oa.mount_wait.count(), ra.batches, "one pipeline sample per batch");
+    let doc = reports_json(&[ra]);
+    for key in [
+        "\"arms\":1",
+        "\"affinity\":\"lru\"",
+        "\"remount_hits\":",
+        "\"arm_wait\":",
+        "\"mount_wait\":",
+        "\"drive_wait\":",
+    ] {
+        assert!(doc.contains(key), "missing {key} in pipeline JSON");
+    }
+}
+
 /// The live (wall-clock) side of the same contract: a real coordinator
 /// with a tight backlog bound pushes `Busy` back to the closed-loop
 /// driver, which retries until every request lands.
@@ -153,6 +194,7 @@ fn live_coordinator_busy_retry_roundtrip() {
                 max_tape_backlog: 8,
             },
             drive: DriveParams::default(),
+            ..CoordinatorConfig::default()
         },
         tapes.clone(),
         Arc::new(tapesched::sched::Gs),

@@ -76,4 +76,56 @@ for r in reports:
 print(f"ci: shard smoke OK (4 shards, {reports[0]['completed']} requests)")
 EOF
 
+# Mount-pipeline gates.
+# (a) Byte-compatibility: `--arms 0 --affinity none` IS the legacy fixed
+#     mount-cost path — its JSON must be byte-identical to the same replay
+#     with the flags omitted (the PR 3 report format, whose key set the
+#     report layer only extends when the pipeline is active), and it must
+#     not leak any pipeline key.
+./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+    --out /tmp/replay_arm_default.json
+./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+    --arms 0 --affinity none --out /tmp/replay_arm_flags.json
+cmp /tmp/replay_arm_default.json /tmp/replay_arm_flags.json
+python3 - /tmp/replay_arm_default.json <<'EOF'
+import json, sys
+r = json.load(open(sys.argv[1]))["reports"][0]
+for key in ("arms", "affinity", "remount_hits", "arm_wait", "mount_wait", "drive_wait"):
+    assert key not in r, f"legacy report leaked pipeline key {key}"
+    assert key not in r["per_shard"][0], f"legacy shard section leaked {key}"
+print("ci: arm gate (a) OK — legacy path byte-stable, no pipeline keys")
+EOF
+
+# (b) Fidelity: one robot arm + LRU affinity on the bursty workload. The
+#     geometry is chosen so the assertions are structural, not tuned:
+#     128 drives exceed the total batch count (--max-batch 1 pins one
+#     request per batch), so no batch ever waits for a drive, while the
+#     serialized mount work (~60 batches x 60 s) exceeds the 600 s arrival
+#     window, so mounts MUST queue on the single arm. Hence: remount hits
+#     once tapes stay threaded, arm-wait p99 >= drive-wait p99 (= 0), and
+#     a strictly worse latency p99.9 than the unconstrained robot.
+./target/release/tapesched replay --arrivals bursty --rate 0.1 --duration 600 \
+    --tapes 4 --drives 128 --max-batch 1 --seed 7 --out /tmp/replay_arm0.json
+./target/release/tapesched replay --arrivals bursty --rate 0.1 --duration 600 \
+    --tapes 4 --drives 128 --max-batch 1 --seed 7 \
+    --arms 1 --affinity lru --out /tmp/replay_arm1.json
+python3 - /tmp/replay_arm0.json /tmp/replay_arm1.json <<'EOF'
+import json, sys
+base = json.load(open(sys.argv[1]))["reports"][0]
+armed = json.load(open(sys.argv[2]))["reports"][0]
+assert "arm_wait" not in base, "unconstrained baseline must stay legacy"
+assert armed["arms"] == 1 and armed["affinity"] == "lru", (armed["arms"], armed["affinity"])
+assert armed["remount_hits"] > 0, "LRU affinity must score remount hits"
+assert armed["remount_hits"] + armed["remount_misses"] == armed["batches"]
+assert armed["arm_wait"]["max_s"] > 0, "the single arm must queue some op"
+assert armed["arm_wait"]["p99_s"] >= armed["drive_wait"]["p99_s"], (
+    armed["arm_wait"]["p99_s"], armed["drive_wait"]["p99_s"])
+assert armed["latency"]["p999_s"] > base["latency"]["p999_s"], (
+    armed["latency"]["p999_s"], base["latency"]["p999_s"])
+assert armed["completed"] == base["completed"], "no request may be lost"
+print(f"ci: arm gate (b) OK — {armed['remount_hits']} hits, "
+      f"arm p99 {armed['arm_wait']['p99_s']:.1f}s, "
+      f"p99.9 {base['latency']['p999_s']:.1f}s -> {armed['latency']['p999_s']:.1f}s")
+EOF
+
 echo "ci: all gates green"
