@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test benches bench-smoke replay-smoke shard-smoke arm-smoke examples fmt fmt-check artifacts ci clean
+.PHONY: verify build test benches bench-smoke replay-smoke shard-smoke arm-smoke exclusivity-smoke examples fmt fmt-check artifacts ci clean
 
 verify: ## tier-1 gate: release build + full test suite
 	$(CARGO) build --release
@@ -56,17 +56,32 @@ shard-smoke: build
 arm-smoke: build
 	mkdir -p results
 	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
-		--out results/arm-legacy-default.json
+		--exclusive-tapes off --out results/arm-legacy-default.json
 	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
-		--arms 0 --affinity none --out results/arm-legacy-flags.json
+		--exclusive-tapes off --arms 0 --affinity none --out results/arm-legacy-flags.json
 	cmp results/arm-legacy-default.json results/arm-legacy-flags.json
 	./target/release/tapesched replay --arrivals bursty --rate 0.1 --duration 600 \
-		--tapes 4 --drives 128 --max-batch 1 --seed 7 \
+		--tapes 4 --drives 128 --max-batch 1 --seed 7 --exclusive-tapes off \
 		--out results/arm-base.json
 	./target/release/tapesched replay --arrivals bursty --rate 0.1 --duration 600 \
-		--tapes 4 --drives 128 --max-batch 1 --seed 7 \
+		--tapes 4 --drives 128 --max-batch 1 --seed 7 --exclusive-tapes off \
 		--arms 1 --affinity lru --out results/arm-smoke.json
 	@echo "arm-smoke: results/arm-smoke.json (legacy bytes verified via cmp)"
+
+# Cartridge-exclusivity gate: a hot-tape workload (one tape, 8 drives,
+# singleton batches) run with the single-cartridge constraint on vs off —
+# the exclusive run must show nonzero cartridge_wait and a strictly worse
+# p99.9 (the assertion script lives in scripts/ci.sh; this target
+# reproduces the artifacts).
+exclusivity-smoke: build
+	mkdir -p results
+	./target/release/tapesched replay --arrivals poisson --rate 2 --duration 30 \
+		--tapes 1 --drives 8 --max-batch 1 --seed 7 --exclusive-tapes off \
+		--out results/exclusivity-base.json
+	./target/release/tapesched replay --arrivals poisson --rate 2 --duration 30 \
+		--tapes 1 --drives 8 --max-batch 1 --seed 7 \
+		--out results/exclusivity-smoke.json
+	@echo "exclusivity-smoke: results/exclusivity-smoke.json (vs exclusivity-base.json)"
 
 examples:
 	$(CARGO) build --examples

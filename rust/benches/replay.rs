@@ -82,6 +82,55 @@ fn main() {
         );
     }
 
+    // Cartridge exclusivity: a hot-tape workload (every request on one
+    // tape, singleton batches over 8 drives) with the single-cartridge
+    // constraint on vs off — measures the resource-layer overhead and the
+    // head-of-line serialization it surfaces.
+    {
+        let hot: Vec<Tape> = vec![Tape::from_sizes("HOT", &[1_000; 64])];
+        let hot_mix = RequestMix::new(&hot);
+        for (name, exclusive) in [("exclusive_on", true), ("exclusive_off", false)] {
+            let xcfg = ReplayConfig {
+                exclusive_tapes: exclusive,
+                batcher: BatcherConfig {
+                    window: std::time::Duration::from_millis(100),
+                    max_batch: 1,
+                    ..BatcherConfig::default()
+                },
+                ..cfg.clone()
+            };
+            let policy = scheduler_by_name("SimpleDP").unwrap();
+            let mut model = PoissonArrivals::new(hot_mix.clone(), rate, duration, 7);
+            let wall = Instant::now();
+            let out = simulate(&xcfg, &hot, policy.as_ref(), &mut model);
+            let s = wall.elapsed().as_secs_f64();
+            assert!(out.stats.completed > 0, "exclusivity replay must serve requests");
+            if exclusive {
+                assert!(
+                    out.stats.cartridge_parks > 0,
+                    "hot singleton batches must collide on the cartridge"
+                );
+            } else {
+                assert_eq!(out.stats.cartridge_parks, 0);
+            }
+            suite.record(BenchResult {
+                name: format!("replay/{name}_hot_tape/SimpleDP"),
+                iters: 1,
+                median: s,
+                mean: s,
+                p10: s,
+                p90: s,
+            });
+            println!(
+                "    → {name}: {} requests, {} parks, cart-wait p99 {:.1}s in {:.3} wall s",
+                out.stats.completed,
+                out.stats.cartridge_parks,
+                out.cartridge_wait.quantile(99.0),
+                s,
+            );
+        }
+    }
+
     // Mount pipeline: the same offered load with the robot-arm pool
     // bounded and LRU drive affinity on — measures the event-driven
     // pipeline's replay overhead and surfaces the remount economics.

@@ -269,6 +269,24 @@ pub fn mount_summary(r: &QosReport) -> String {
     out
 }
 
+/// Cartridge-exclusivity summary for a replay run with `--exclusive-tapes
+/// on`: how many batches parked on a cartridge waitlist (their tape was
+/// threaded or mid-mount in another drive) and the per-batch wait ladder.
+/// This is the head-of-line component the pre-exclusivity model hid by
+/// mounting "copies" of a hot tape in several drives at once.
+pub fn cartridge_summary(r: &QosReport) -> String {
+    let mut out = format!(
+        "cartridge exclusivity: {} of {} batches parked on a cartridge waitlist\n",
+        r.cartridge_parks, r.batches,
+    );
+    let l = &r.cartridge_wait;
+    out.push_str(&format!(
+        "  cart wait   p50/p99/p99.9 = {:>8.1} / {:>8.1} / {:>8.1} s (max {:.1})\n",
+        l.p50_s, l.p99_s, l.p999_s, l.max_s,
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -412,6 +430,30 @@ mod tests {
             assert!(table.contains(name), "missing {name}:\n{table}");
         }
         assert_eq!(table.lines().count(), 4, "header + three ladders:\n{table}");
+    }
+
+    #[test]
+    fn cartridge_summary_renders_the_exclusivity_lines() {
+        use crate::model::Tape;
+        use crate::replay::{run_replay, PoissonArrivals, ReplayConfig, RequestMix};
+        use crate::coordinator::BatcherConfig;
+        let catalog = vec![Tape::from_sizes("HOT", &[1_000; 30])];
+        let cfg = ReplayConfig {
+            n_drives: 8,
+            batcher: BatcherConfig { max_batch: 1, ..BatcherConfig::default() },
+            ..ReplayConfig::default()
+        };
+        assert!(cfg.exclusive_tapes, "exclusivity is the default");
+        let p = crate::sched::scheduler_by_name("GS").unwrap();
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 10.0, 3.0, 3);
+        let (r, _) = run_replay(&cfg, &catalog, p.as_ref(), &mut model, 3, 3.0);
+        assert!(r.exclusive);
+        assert!(r.cartridge_parks > 0, "hot singleton batches must park");
+        let table = cartridge_summary(&r);
+        assert!(table.starts_with("cartridge exclusivity:"));
+        assert!(table.contains("parked on a cartridge waitlist"));
+        assert!(table.contains("cart wait"));
+        assert_eq!(table.lines().count(), 2, "header + ladder:\n{table}");
     }
 
     #[test]

@@ -40,6 +40,17 @@ pub struct ClusterMetricsSnapshot {
     pub remount_hits: u64,
     /// Batches that paid a mount fleet-wide.
     pub remount_misses: u64,
+    /// Batches that waited on a cartridge waitlist fleet-wide (per-tape
+    /// mount exclusivity).
+    pub cartridge_parks: u64,
+    /// Park-weighted mean / fleet-worst cartridge wait, seconds.
+    pub mean_cartridge_wait_s: f64,
+    pub max_cartridge_wait_s: f64,
+    /// Robot-arm reservations fleet-wide.
+    pub arm_ops: u64,
+    /// Op-weighted mean / fleet-worst arm wait, seconds.
+    pub mean_arm_wait_s: f64,
+    pub max_arm_wait_s: f64,
     /// Completion-weighted mean end-to-end latency, seconds.
     pub mean_latency_s: f64,
     /// Completion-weighted mean in-tape service time, seconds.
@@ -78,12 +89,19 @@ pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
         batches: 0,
         remount_hits: 0,
         remount_misses: 0,
+        cartridge_parks: 0,
+        mean_cartridge_wait_s: 0.0,
+        max_cartridge_wait_s: 0.0,
+        arm_ops: 0,
+        mean_arm_wait_s: 0.0,
+        max_arm_wait_s: 0.0,
         mean_latency_s: 0.0,
         mean_service_s: 0.0,
         max_shard_completed: 0,
         min_shard_completed: u64::MAX,
     };
     let (mut lat_sum, mut svc_sum) = (0.0f64, 0.0f64);
+    let (mut cart_sum, mut arm_sum) = (0.0f64, 0.0f64);
     for s in &shards {
         snap.routed_total += s.routed;
         snap.submitted += s.metrics.submitted;
@@ -93,6 +111,13 @@ pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
         snap.batches += s.metrics.batches;
         snap.remount_hits += s.metrics.remount_hits;
         snap.remount_misses += s.metrics.remount_misses;
+        snap.cartridge_parks += s.metrics.cartridge_parks;
+        cart_sum += s.metrics.mean_cartridge_wait_s * s.metrics.cartridge_parks as f64;
+        snap.max_cartridge_wait_s =
+            snap.max_cartridge_wait_s.max(s.metrics.max_cartridge_wait_s);
+        snap.arm_ops += s.metrics.arm_ops;
+        arm_sum += s.metrics.mean_arm_wait_s * s.metrics.arm_ops as f64;
+        snap.max_arm_wait_s = snap.max_arm_wait_s.max(s.metrics.max_arm_wait_s);
         lat_sum += s.metrics.mean_latency_s * s.metrics.completed as f64;
         svc_sum += s.metrics.mean_service_s * s.metrics.completed as f64;
         snap.max_shard_completed = snap.max_shard_completed.max(s.metrics.completed);
@@ -104,6 +129,12 @@ pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
     if snap.completed > 0 {
         snap.mean_latency_s = lat_sum / snap.completed as f64;
         snap.mean_service_s = svc_sum / snap.completed as f64;
+    }
+    if snap.cartridge_parks > 0 {
+        snap.mean_cartridge_wait_s = cart_sum / snap.cartridge_parks as f64;
+    }
+    if snap.arm_ops > 0 {
+        snap.mean_arm_wait_s = arm_sum / snap.arm_ops as f64;
     }
     snap.shards = shards;
     snap
@@ -122,6 +153,12 @@ mod tests {
             batches: completed / 2,
             remount_hits: completed / 4,
             remount_misses: completed / 2 - completed / 4,
+            cartridge_parks: completed / 10,
+            mean_cartridge_wait_s: 2.0,
+            max_cartridge_wait_s: lat,
+            arm_ops: completed / 5,
+            mean_arm_wait_s: 0.5,
+            max_arm_wait_s: svc,
             mean_latency_s: lat,
             mean_service_s: svc,
             mean_sched_s_per_batch: 0.0,
@@ -146,6 +183,14 @@ mod tests {
         // Remount counters add like every other counter: (7+2) + (5+3).
         assert_eq!(snap.remount_hits, 30 / 4 + 10 / 4);
         assert_eq!(snap.remount_misses, (15 - 7) + (5 - 2));
+        // Resource-wait rollups: counts add, means weight by their own
+        // denominators, maxes take the fleet worst.
+        assert_eq!(snap.cartridge_parks, 3 + 1);
+        assert!((snap.mean_cartridge_wait_s - 2.0).abs() < 1e-12);
+        assert!((snap.max_cartridge_wait_s - 4.0).abs() < 1e-12);
+        assert_eq!(snap.arm_ops, 6 + 2);
+        assert!((snap.mean_arm_wait_s - 0.5).abs() < 1e-12);
+        assert!((snap.max_arm_wait_s - 2.0).abs() < 1e-12);
         // Weighted means: (30·4 + 10·1)/40 = 3.25; (30·2 + 10·0.5)/40.
         assert!((snap.mean_latency_s - 3.25).abs() < 1e-12);
         assert!((snap.mean_service_s - 1.625).abs() < 1e-12);

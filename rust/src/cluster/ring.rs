@@ -21,10 +21,19 @@
 //! - **Stable shard ids** — ids are assigned by a monotone counter and
 //!   survive unrelated add/remove operations, so per-shard metrics can be
 //!   tracked across membership changes.
+//! - **Capacity weighting** — a shard may own a *multiple* of the base
+//!   vnode count ([`HashRing::new_weighted`] /
+//!   [`HashRing::add_shard_weighted`]): a library with `w×` the drives
+//!   gets `w×` the points and so, in expectation, `w×` the key space.
+//!   Weight-1 construction is bit-identical to the unweighted ring (the
+//!   vnode labels are shared), so homogeneous routing never changes.
+
+use std::collections::BTreeMap;
 
 use crate::util::hash::stable_hash64;
 
-/// A consistent-hash ring: `vnodes` points per shard on the `u64` circle.
+/// A consistent-hash ring: `vnodes · weight` points per shard on the
+/// `u64` circle.
 #[derive(Debug, Clone)]
 pub struct HashRing {
     vnodes: usize,
@@ -33,6 +42,8 @@ pub struct HashRing {
     points: Vec<(u64, usize)>,
     /// Live shard ids, in id order (ids are assigned monotonically).
     shard_ids: Vec<usize>,
+    /// Vnode count per live shard (`vnodes · weight` at add time).
+    shard_vnodes: BTreeMap<usize, usize>,
     next_shard: usize,
 }
 
@@ -40,30 +51,63 @@ impl HashRing {
     /// A fresh ring with shards `0..n_shards`, each owning `vnodes` points.
     pub fn new(n_shards: usize, vnodes: usize) -> HashRing {
         assert!(n_shards > 0, "a ring needs at least one shard");
-        assert!(vnodes > 0, "a shard needs at least one virtual node");
-        let mut ring = HashRing {
-            vnodes,
-            points: Vec::with_capacity(n_shards * vnodes),
-            shard_ids: Vec::with_capacity(n_shards),
-            next_shard: 0,
-        };
+        let mut ring = HashRing::empty(vnodes);
         for _ in 0..n_shards {
             ring.add_shard();
         }
         ring
     }
 
+    /// A capacity-weighted ring: shard `i` owns `vnodes · weights[i]`
+    /// points, so key space follows capacity (e.g. pass each library's
+    /// drive count). `new_weighted(&[1; n], v)` routes identically to
+    /// `new(n, v)`.
+    pub fn new_weighted(weights: &[usize], vnodes: usize) -> HashRing {
+        assert!(!weights.is_empty(), "a ring needs at least one shard");
+        let mut ring = HashRing::empty(vnodes);
+        for &w in weights {
+            ring.add_shard_weighted(w);
+        }
+        ring
+    }
+
+    fn empty(vnodes: usize) -> HashRing {
+        assert!(vnodes > 0, "a shard needs at least one virtual node");
+        HashRing {
+            vnodes,
+            points: Vec::new(),
+            shard_ids: Vec::new(),
+            shard_vnodes: BTreeMap::new(),
+            next_shard: 0,
+        }
+    }
+
     /// Add one shard; returns its id. Only keys landing on the new shard's
     /// arcs move — everything else keeps its owner (bounded key movement).
     pub fn add_shard(&mut self) -> usize {
+        self.add_shard_weighted(1)
+    }
+
+    /// Add one shard with `weight × vnodes` points (capacity weighting);
+    /// returns its id. Weight 1 is exactly [`HashRing::add_shard`].
+    pub fn add_shard_weighted(&mut self, weight: usize) -> usize {
+        assert!(weight > 0, "a shard needs a positive capacity weight");
         let id = self.next_shard;
         self.next_shard += 1;
         self.shard_ids.push(id);
-        for v in 0..self.vnodes {
-            let entry = (stable_hash64(format!("shard{id}:vnode{v}").as_bytes()), id);
-            let pos = self.points.partition_point(|&p| p < entry);
-            self.points.insert(pos, entry);
+        let n_points = self.vnodes * weight;
+        self.shard_vnodes.insert(id, n_points);
+        // Append-then-sort rather than per-point sorted inserts: weighting
+        // multiplies the point count by the drive count, and P sorted
+        // inserts are O(P²) in memmoves. One sort yields the identical
+        // ring — points are unique `(hash, id)` pairs, so the order is
+        // exactly the old insert-before-first-≥ order.
+        self.points.reserve(n_points);
+        for v in 0..n_points {
+            self.points
+                .push((stable_hash64(format!("shard{id}:vnode{v}").as_bytes()), id));
         }
+        self.points.sort_unstable();
         id
     }
 
@@ -76,6 +120,7 @@ impl HashRing {
         };
         assert!(self.shard_ids.len() > 1, "cannot remove the last shard");
         self.shard_ids.remove(pos);
+        self.shard_vnodes.remove(&id);
         self.points.retain(|&(_, s)| s != id);
         true
     }
@@ -98,9 +143,15 @@ impl HashRing {
         self.shard_ids.len()
     }
 
-    /// Virtual nodes per shard.
+    /// Base virtual-node count (a weight-1 shard's point count).
     pub fn vnodes_per_shard(&self) -> usize {
         self.vnodes
+    }
+
+    /// Ring points shard `id` currently owns (`vnodes · weight`), or 0
+    /// for a dead shard.
+    pub fn vnodes_of(&self, id: usize) -> usize {
+        self.shard_vnodes.get(&id).copied().unwrap_or(0)
     }
 
     /// Fraction of the `u64` key space owned per live shard, aligned with
@@ -171,6 +222,64 @@ mod tests {
         for (i, s) in spread.iter().enumerate() {
             assert!(*s > 0.0, "shard {i} owns nothing");
         }
+    }
+
+    #[test]
+    fn weight_one_weighted_ring_routes_like_the_unweighted_ring() {
+        let a = HashRing::new(4, 64);
+        let b = HashRing::new_weighted(&[1, 1, 1, 1], 64);
+        for i in 0..2_000 {
+            let key = format!("TAPE{i:04}");
+            assert_eq!(a.route(&key), b.route(&key), "weight 1 must not move keys");
+        }
+        assert_eq!(a.spread(), b.spread());
+    }
+
+    #[test]
+    fn capacity_weights_scale_key_space_ownership() {
+        // Weights 1 : 8 (64 vs 512 points): the heavy shard must own the
+        // bulk of the circle, and routing must follow.
+        let ring = HashRing::new_weighted(&[1, 8], 64);
+        assert_eq!(ring.vnodes_of(0), 64);
+        assert_eq!(ring.vnodes_of(1), 512);
+        let spread = ring.spread();
+        assert!((spread.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(
+            spread[1] > 2.0 * spread[0],
+            "weight 8 owns {:.3} vs weight 1's {:.3}",
+            spread[1],
+            spread[0]
+        );
+        let mut counts = [0usize; 2];
+        for i in 0..5_000 {
+            counts[ring.route(&format!("TAPE{i:05}"))] += 1;
+        }
+        assert!(
+            counts[1] > 2 * counts[0],
+            "routing must follow capacity: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn weighted_membership_changes_keep_bounded_movement() {
+        let keys: Vec<String> = (0..3_000).map(|i| format!("K{i}")).collect();
+        let mut ring = HashRing::new_weighted(&[2, 4], 32);
+        let before: Vec<usize> = keys.iter().map(|k| ring.route(k)).collect();
+        let id = ring.add_shard_weighted(3);
+        assert_eq!(id, 2);
+        assert_eq!(ring.vnodes_of(id), 96);
+        let after: Vec<usize> = keys.iter().map(|k| ring.route(k)).collect();
+        for (i, (b, a)) in before.iter().zip(&after).enumerate() {
+            assert!(
+                a == b || *a == id,
+                "key {i} moved between surviving shards ({b} → {a})"
+            );
+        }
+        // Removing the newcomer restores the original routing exactly.
+        assert!(ring.remove_shard(id));
+        assert_eq!(ring.vnodes_of(id), 0);
+        let restored: Vec<usize> = keys.iter().map(|k| ring.route(k)).collect();
+        assert_eq!(before, restored);
     }
 
     #[test]

@@ -29,21 +29,34 @@ use crate::sched::Scheduler;
 use super::metrics::{rollup, ClusterMetricsSnapshot, ShardLoad};
 use super::ring::HashRing;
 
-/// Cluster configuration: the ring shape plus one per-shard coordinator
-/// configuration (every library gets the same drive pool and batcher).
+/// Cluster configuration: the ring shape plus the per-shard coordinator
+/// configuration — one `shard` template for homogeneous fleets, or one
+/// entry per library in `shard_configs` for heterogeneous ones.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
     /// Number of library shards.
     pub n_shards: usize,
-    /// Virtual nodes per shard on the consistent-hash ring.
+    /// Base virtual nodes per shard on the consistent-hash ring.
     pub vnodes: usize,
-    /// Configuration applied to every shard's coordinator.
+    /// Configuration applied to every shard's coordinator (homogeneous
+    /// fleets; also the template `add_shard` uses for newcomers).
     pub shard: CoordinatorConfig,
+    /// Heterogeneous fleets: one configuration per shard (length must be
+    /// `n_shards`; empty = homogeneous, every shard uses `shard`). The
+    /// ring is then **capacity-weighted** — each shard's vnode count is
+    /// proportional to its drive count, so a library with more drives
+    /// owns proportionally more tapes.
+    pub shard_configs: Vec<CoordinatorConfig>,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        ClusterConfig { n_shards: 4, vnodes: 64, shard: CoordinatorConfig::default() }
+        ClusterConfig {
+            n_shards: 4,
+            vnodes: 64,
+            shard: CoordinatorConfig::default(),
+            shard_configs: Vec::new(),
+        }
     }
 }
 
@@ -55,6 +68,12 @@ pub struct Cluster {
     /// Shard id → running coordinator (BTreeMap: ids stay sorted and
     /// stable across add/remove).
     shards: BTreeMap<usize, Coordinator>,
+    /// Shard id → the configuration that shard runs (heterogeneous
+    /// fleets; mirrors `cfg.shard` everywhere otherwise).
+    configs: BTreeMap<usize, CoordinatorConfig>,
+    /// Whether the ring is capacity-weighted by drive count (set when the
+    /// cluster started heterogeneous).
+    weighted: bool,
     /// Shard id → submissions routed there (accepted or rejected).
     routed: BTreeMap<usize, AtomicU64>,
     /// Master catalog, for re-registering tapes on membership changes.
@@ -64,7 +83,9 @@ pub struct Cluster {
 
 impl Cluster {
     /// Start `cfg.n_shards` coordinators, partitioning `catalog` across
-    /// them by consistent-hashing each tape's name.
+    /// them by consistent-hashing each tape's name. With per-shard
+    /// configurations (`cfg.shard_configs`) the ring is capacity-weighted
+    /// by drive count.
     pub fn start(
         cfg: ClusterConfig,
         catalog: impl IntoIterator<Item = Tape>,
@@ -72,7 +93,21 @@ impl Cluster {
     ) -> Cluster {
         assert!(cfg.n_shards > 0, "a cluster needs at least one shard");
         assert!(cfg.vnodes > 0, "a shard needs at least one virtual node");
-        let ring = HashRing::new(cfg.n_shards, cfg.vnodes);
+        let weighted = !cfg.shard_configs.is_empty();
+        if weighted {
+            assert_eq!(
+                cfg.shard_configs.len(),
+                cfg.n_shards,
+                "per-shard configs must cover every shard"
+            );
+        }
+        let ring = if weighted {
+            let weights: Vec<usize> =
+                cfg.shard_configs.iter().map(|c| c.n_drives).collect();
+            HashRing::new_weighted(&weights, cfg.vnodes)
+        } else {
+            HashRing::new(cfg.n_shards, cfg.vnodes)
+        };
         let catalog: HashMap<String, Tape> =
             catalog.into_iter().map(|t| (t.name.clone(), t)).collect();
         let mut per_shard: BTreeMap<usize, Vec<Tape>> =
@@ -80,15 +115,23 @@ impl Cluster {
         for tape in catalog.values() {
             per_shard.get_mut(&ring.route(&tape.name)).unwrap().push(tape.clone());
         }
+        let configs: BTreeMap<usize, CoordinatorConfig> = ring
+            .shard_ids()
+            .iter()
+            .map(|&s| {
+                let c = if weighted { cfg.shard_configs[s].clone() } else { cfg.shard.clone() };
+                (s, c)
+            })
+            .collect();
         let shards = per_shard
             .into_iter()
             .map(|(id, tapes)| {
-                (id, Coordinator::start(cfg.shard.clone(), tapes, Arc::clone(&policy)))
+                (id, Coordinator::start(configs[&id].clone(), tapes, Arc::clone(&policy)))
             })
             .collect();
         let routed =
             ring.shard_ids().iter().map(|&s| (s, AtomicU64::new(0))).collect();
-        Cluster { cfg, ring, shards, routed, catalog, policy }
+        Cluster { cfg, ring, shards, configs, weighted, routed, catalog, policy }
     }
 
     /// Submit one read request: route by tape name, delegate to the owning
@@ -123,7 +166,13 @@ impl Cluster {
             .keys()
             .map(|name| (name.clone(), self.ring.route(name)))
             .collect();
-        let id = self.ring.add_shard();
+        // A weighted cluster weights the newcomer like its peers: by the
+        // drive count of the template config it will run.
+        let id = if self.weighted {
+            self.ring.add_shard_weighted(self.cfg.shard.n_drives)
+        } else {
+            self.ring.add_shard()
+        };
         let coord = Coordinator::start(
             self.cfg.shard.clone(),
             std::iter::empty::<Tape>(),
@@ -138,6 +187,7 @@ impl Cluster {
             }
         }
         self.shards.insert(id, coord);
+        self.configs.insert(id, self.cfg.shard.clone());
         self.routed.insert(id, AtomicU64::new(0));
         (id, moved)
     }
@@ -159,6 +209,7 @@ impl Cluster {
             .collect();
         let coord = self.shards.remove(&id).unwrap();
         self.ring.remove_shard(id);
+        self.configs.remove(&id);
         self.routed.remove(&id);
         let drained = coord.finish();
         // Hand only those tapes to the shards now owning their arcs —
@@ -180,9 +231,15 @@ impl Cluster {
         self.shards.len()
     }
 
-    /// Total drive workers across the cluster.
+    /// Total drive workers across the cluster (summed per shard — shards
+    /// may differ in a heterogeneous fleet).
     pub fn n_drives(&self) -> usize {
-        self.shards.len() * self.cfg.shard.n_drives
+        self.configs.values().map(|c| c.n_drives).sum()
+    }
+
+    /// The configuration shard `id` runs, if live.
+    pub fn shard_config(&self, id: usize) -> Option<&CoordinatorConfig> {
+        self.configs.get(&id)
     }
 
     /// Current rollup of every shard's metrics plus routing counters.
@@ -259,7 +316,9 @@ mod tests {
                     n_arms: 0,
                 },
                 affinity: Affinity::None,
+                exclusive_tapes: true,
             },
+            shard_configs: Vec::new(),
         }
     }
 
@@ -330,6 +389,50 @@ mod tests {
             m.shards.iter().map(|s| s.metrics.remount_hits).sum::<u64>(),
             "the rollup is the per-shard sum"
         );
+    }
+
+    #[test]
+    fn heterogeneous_shards_run_their_own_configs_on_a_weighted_ring() {
+        // Shard 0: 1 drive; shard 1: 6 drives. The ring weights vnodes by
+        // drive count, so the big library owns most of the catalog, and
+        // n_drives() sums the actual per-shard pools.
+        let mut config = cfg(2);
+        let mut small = config.shard.clone();
+        small.n_drives = 1;
+        let mut big = config.shard.clone();
+        big.n_drives = 6;
+        config.shard_configs = vec![small, big];
+        let tapes = catalog(48);
+        let cluster = Cluster::start(config, tapes.clone(), Arc::new(Gs));
+        assert_eq!(cluster.n_shards(), 2);
+        assert_eq!(cluster.n_drives(), 7, "1 + 6 drives, not 2 × template");
+        assert_eq!(cluster.shard_config(0).unwrap().n_drives, 1);
+        assert_eq!(cluster.shard_config(1).unwrap().n_drives, 6);
+        assert_eq!(cluster.ring().vnodes_of(0), 64);
+        assert_eq!(cluster.ring().vnodes_of(1), 6 * 64);
+        let spread = cluster.ring().spread();
+        assert!(
+            spread[1] > spread[0],
+            "6× the drives must own more key space: {spread:?}"
+        );
+        // Every tape routes and serves wherever it landed.
+        for (i, tape) in tapes.iter().enumerate() {
+            let req =
+                ReadRequest { id: i as u64, tape: tape.name.clone(), file_index: 0 };
+            assert!(cluster.submit(req).is_ok(), "tape {} unroutable", tape.name);
+        }
+        let (completions, m) = cluster.finish();
+        assert_eq!(completions.len(), 48);
+        assert_eq!(m.completed, 48);
+        assert_eq!(m.shards.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "per-shard configs must cover every shard")]
+    fn mismatched_shard_config_count_is_rejected() {
+        let mut config = cfg(3);
+        config.shard_configs = vec![config.shard.clone()];
+        Cluster::start(config, catalog(4), Arc::new(Gs));
     }
 
     #[test]

@@ -20,6 +20,16 @@ pub struct SharedMetrics {
     remount_hits: AtomicU64,
     /// Batches that needed a fresh mount (empty drive or LRU eviction).
     remount_misses: AtomicU64,
+    /// Batches that waited on a cartridge waitlist (per-tape mount
+    /// exclusivity), with their total and worst wait in µs.
+    cartridge_parks: AtomicU64,
+    cartridge_wait_sum_us: AtomicU64,
+    cartridge_wait_max_us: AtomicU64,
+    /// Robot-arm reservations made (mount/unmount ops through the arm
+    /// timeline), with their total and worst wait in µs.
+    arm_ops: AtomicU64,
+    arm_wait_sum_us: AtomicU64,
+    arm_wait_max_us: AtomicU64,
     /// Sum of end-to-end request latencies, in µs.
     latency_sum_us: AtomicU64,
     /// Sum of in-tape service times, in µs.
@@ -46,6 +56,18 @@ pub struct MetricsSnapshot {
     pub remount_hits: u64,
     /// Batches that paid a mount (empty drive or eviction).
     pub remount_misses: u64,
+    /// Batches that waited on a cartridge waitlist (per-tape mount
+    /// exclusivity: one cartridge, one drive).
+    pub cartridge_parks: u64,
+    /// Mean / worst cartridge wait over those batches, seconds.
+    pub mean_cartridge_wait_s: f64,
+    pub max_cartridge_wait_s: f64,
+    /// Robot-arm reservations (mount/unmount ops; 0 with an unconstrained
+    /// robot).
+    pub arm_ops: u64,
+    /// Mean / worst wait for a free arm over those ops, seconds.
+    pub mean_arm_wait_s: f64,
+    pub max_arm_wait_s: f64,
     pub mean_latency_s: f64,
     pub mean_service_s: f64,
     pub mean_sched_s_per_batch: f64,
@@ -87,6 +109,22 @@ impl SharedMetrics {
         self.remount_misses.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one batch leaving a cartridge waitlist after `wait_s`.
+    pub fn on_cartridge_wait(&self, wait_s: f64) {
+        let us = (wait_s.max(0.0) * 1e6) as u64;
+        self.cartridge_parks.fetch_add(1, Ordering::Relaxed);
+        self.cartridge_wait_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.cartridge_wait_max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Record one robot-arm reservation that waited `wait_s` for an arm.
+    pub fn on_arm_wait(&self, wait_s: f64) {
+        let us = (wait_s.max(0.0) * 1e6) as u64;
+        self.arm_ops.fetch_add(1, Ordering::Relaxed);
+        self.arm_wait_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.arm_wait_max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
     /// Record one served request: end-to-end latency + in-tape service (s).
     pub fn on_complete(&self, latency_s: f64, service_s: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
@@ -118,6 +156,8 @@ impl SharedMetrics {
                 crate::util::stats::percentile_sorted(&lat, p)
             }
         };
+        let cartridge_parks = self.cartridge_parks.load(Ordering::Relaxed);
+        let arm_ops = self.arm_ops.load(Ordering::Relaxed);
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
@@ -126,6 +166,19 @@ impl SharedMetrics {
             batches,
             remount_hits: self.remount_hits.load(Ordering::Relaxed),
             remount_misses: self.remount_misses.load(Ordering::Relaxed),
+            cartridge_parks,
+            mean_cartridge_wait_s: self.cartridge_wait_sum_us.load(Ordering::Relaxed)
+                as f64
+                / 1e6
+                / cartridge_parks.max(1) as f64,
+            max_cartridge_wait_s: self.cartridge_wait_max_us.load(Ordering::Relaxed)
+                as f64
+                / 1e6,
+            arm_ops,
+            mean_arm_wait_s: self.arm_wait_sum_us.load(Ordering::Relaxed) as f64
+                / 1e6
+                / arm_ops.max(1) as f64,
+            max_arm_wait_s: self.arm_wait_max_us.load(Ordering::Relaxed) as f64 / 1e6,
             mean_latency_s: self.latency_sum_us.load(Ordering::Relaxed) as f64
                 / 1e6
                 / completed.max(1) as f64,
@@ -155,6 +208,9 @@ mod tests {
         m.on_remount_hit();
         m.on_remount_miss();
         m.on_remount_miss();
+        m.on_cartridge_wait(2.0);
+        m.on_cartridge_wait(4.0);
+        m.on_arm_wait(0.5);
         m.on_complete(2.0, 1.0);
         m.on_complete(4.0, 3.0);
         let s = m.snapshot();
@@ -165,6 +221,12 @@ mod tests {
         assert_eq!(s.batches, 1);
         assert_eq!(s.remount_hits, 1);
         assert_eq!(s.remount_misses, 2);
+        assert_eq!(s.cartridge_parks, 2);
+        assert!((s.mean_cartridge_wait_s - 3.0).abs() < 1e-3);
+        assert!((s.max_cartridge_wait_s - 4.0).abs() < 1e-3);
+        assert_eq!(s.arm_ops, 1);
+        assert!((s.mean_arm_wait_s - 0.5).abs() < 1e-3);
+        assert!((s.max_arm_wait_s - 0.5).abs() < 1e-3);
         assert!((s.mean_latency_s - 3.0).abs() < 1e-3);
         assert!((s.mean_service_s - 2.0).abs() < 1e-3);
         assert!((s.mean_sched_s_per_batch - 0.5).abs() < 1e-3);

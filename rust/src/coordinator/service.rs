@@ -7,31 +7,47 @@
 //! the same tape serialize through the batcher (one open batch per tape).
 //!
 //! **Drive placement** is a second routing stage after the batcher: the
-//! dispatcher picks *which* drive a batch lands on through a shared drive
-//! table. Under [`Affinity::Lru`] a tape stays mounted after its batch
-//! (lazy unmount), a batch for a loaded idle drive is a *remount hit*
-//! (mount charge skipped, `remount_hits` metric), and when no empty drive
-//! is free the least-recently-used loaded drive is evicted (charging
+//! dispatcher picks *which* drive a batch lands on through the shared
+//! resource layer ([`crate::resources`] — the same [`DrivePool`] state
+//! machine the replay engine steps in virtual time). Under
+//! [`Affinity::Lru`] a tape stays mounted after its batch (lazy unmount),
+//! a batch for a loaded idle drive is a *remount hit* (mount charge
+//! skipped, `remount_hits` metric), and when no empty drive is free the
+//! least-recently-used loaded drive is evicted (charging
 //! `unmount_s + mount_s`). Under [`Affinity::None`] every batch pays the
-//! paper's fixed `mount_s` — the legacy model, byte-compatible with the
-//! previous single-channel dispatcher. Robot-arm *contention* (mounts
-//! queueing on a small arm pool) is a virtual-time phenomenon and lives in
-//! the replay engine; the live path mirrors the placement policy and the
-//! hit/miss accounting so both report the same remount economics.
+//! paper's fixed `mount_s` — the legacy model.
+//!
+//! **Cartridge exclusivity** (`exclusive_tapes`, default on): a physical
+//! cartridge exists once, so the dispatcher consults the shared
+//! [`CartridgeLedger`] before placement — a batch whose tape is in use in
+//! another drive parks on that cartridge's FIFO waitlist instead of
+//! mounting a second copy, and dispatches when the worker serving the
+//! tape frees it. The park → dispatch interval is the `cartridge_wait`
+//! metric (`cartridge_parks`, mean/max wait in [`MetricsSnapshot`]).
+//!
+//! **Robot arms**: with `DriveParams::n_arms > 0` every mount/unmount
+//! reserves an interval on the shared [`ArmTimeline`] (wall-clock µs,
+//! anchored at service start); the drive worker *sleeps to the
+//! reservation edge* — so arm contention shows up in real end-to-end
+//! latency — and then charges the op durations exactly as before. The
+//! exact event-ordered arm pool remains a virtual-time phenomenon of the
+//! replay engine; this is its wall-clock charge model, sharing the same
+//! reservation arithmetic as the analytic [`crate::sim::LibrarySim`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::batcher::{Batch, Batcher, BatcherConfig, PushOutcome};
 use super::metrics::{MetricsSnapshot, SharedMetrics};
 use crate::model::{Instance, Tape};
+use crate::resources::{ArmTimeline, CartridgeLedger, DrivePool, DriveStage};
 use crate::runtime::{BackendPolicy, SimpleDpBackend};
 use crate::sched::Scheduler;
-use crate::sim::{evaluate, pick_drive_slot, Affinity, DriveParams, MountPlan};
+use crate::sim::{evaluate, Affinity, DriveParams, MountPlan};
 
 /// A client read request for one file on one tape.
 #[derive(Debug, Clone)]
@@ -92,6 +108,11 @@ pub struct CoordinatorConfig {
     /// routes batches to drives already holding them; [`Affinity::None`]
     /// is the legacy fixed mount-cost model.
     pub affinity: Affinity,
+    /// Per-tape mount exclusivity (default on): one cartridge, one drive.
+    /// Batches whose tape is in use elsewhere park on a per-cartridge
+    /// waitlist until the cartridge frees; `false` restores the old
+    /// any-drive placement (a hot tape could be "mounted" twice).
+    pub exclusive_tapes: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -101,8 +122,26 @@ impl Default for CoordinatorConfig {
             batcher: BatcherConfig::default(),
             drive: DriveParams::default(),
             affinity: Affinity::None,
+            exclusive_tapes: true,
         }
     }
+}
+
+/// A batch parked by the dispatcher because its cartridge was in use.
+struct ParkedBatch {
+    batch: Batch,
+    parked_at: Instant,
+}
+
+/// The coordinator's share of the physical resource layer, under one lock
+/// (drive table + cartridge ledger must transition together). The
+/// dispatcher claims drives and cartridges here; workers release them and
+/// signal `resource_freed`.
+struct Resources {
+    drives: DrivePool<String, ()>,
+    ledger: CartridgeLedger<String, ParkedBatch>,
+    /// Monotone dispatch tick feeding the drives' LRU order.
+    tick: u64,
 }
 
 struct Shared {
@@ -113,46 +152,19 @@ struct Shared {
     metrics: SharedMetrics,
     completions: Mutex<Vec<Completion>>,
     stopping: AtomicBool,
-    /// The drive table: which tape each drive holds and whether it is
-    /// busy. The dispatcher picks a slot under this lock; workers release
-    /// their slot and signal `drive_freed` when a batch finishes.
-    drives: Mutex<DriveSlots>,
-    drive_freed: Condvar,
+    resources: Mutex<Resources>,
+    resource_freed: Condvar,
+    /// The virtual arm timeline (wall-µs grid anchored at `arm_origin`):
+    /// mounts/unmounts reserve intervals, workers sleep to the edge.
+    arms: Mutex<ArmTimeline>,
+    arm_origin: Instant,
 }
 
-/// One physical drive's placement state.
-#[derive(Debug, Clone)]
-struct DriveSlot {
-    /// Tape currently threaded in the drive (None = empty). Under
-    /// `Affinity::Lru` this survives between batches (lazy unmount).
-    loaded: Option<String>,
-    busy: bool,
-    /// Monotone dispatch tick of the drive's last batch (LRU eviction).
-    last_used: u64,
-}
-
-#[derive(Debug)]
-struct DriveSlots {
-    slots: Vec<DriveSlot>,
-    tick: u64,
-}
-
-/// Pick the drive a batch for `tape` lands on, and the mount work that
-/// implies, through the one shared preference the replay engine also uses
-/// ([`pick_drive_slot`] in `sim::library`: hit, then empty, then LRU
-/// eviction). `None` when every drive is busy.
-fn pick_slot(slots: &[DriveSlot], tape: &str, affinity: Affinity) -> Option<(usize, MountPlan)> {
-    pick_drive_slot(
-        affinity,
-        slots.iter().map(|s| {
-            (
-                !s.busy,
-                s.loaded.as_deref() == Some(tape),
-                s.loaded.is_none(),
-                s.last_used,
-            )
-        }),
-    )
+impl Shared {
+    /// Wall-clock µs since service start — the arm timeline's grid.
+    fn wall_us(&self) -> u64 {
+        self.arm_origin.elapsed().as_micros() as u64
+    }
 }
 
 /// The running service. Create with [`Coordinator::start`], feed with
@@ -170,6 +182,9 @@ struct Job {
     /// Mount-pipeline latency this batch pays (0 on a remount hit; see
     /// [`DriveParams::mount_charge_s`]).
     mount_charge_s: f64,
+    /// How the batch landed on its drive — drives the worker's robot-arm
+    /// reservation (hits need no arm).
+    plan: MountPlan,
 }
 
 impl Coordinator {
@@ -190,14 +205,14 @@ impl Coordinator {
             metrics: SharedMetrics::default(),
             completions: Mutex::new(Vec::new()),
             stopping: AtomicBool::new(false),
-            drives: Mutex::new(DriveSlots {
-                slots: vec![
-                    DriveSlot { loaded: None, busy: false, last_used: 0 };
-                    cfg.n_drives
-                ],
+            resources: Mutex::new(Resources {
+                drives: DrivePool::new(cfg.n_drives),
+                ledger: CartridgeLedger::new(),
                 tick: 0,
             }),
-            drive_freed: Condvar::new(),
+            resource_freed: Condvar::new(),
+            arms: Mutex::new(ArmTimeline::new(cfg.drive.n_arms)),
+            arm_origin: Instant::now(),
         });
 
         // One channel per drive worker: the dispatcher routes each batch
@@ -208,17 +223,16 @@ impl Coordinator {
                 let (tx, rx) = channel::<Job>();
                 txs.push(tx);
                 let shared = Arc::clone(&shared);
-                let drive = cfg.drive;
+                let worker_cfg = cfg.clone();
                 let policy = Arc::clone(&policy);
-                std::thread::spawn(move || worker_loop(shared, i, rx, drive, policy))
+                std::thread::spawn(move || worker_loop(shared, i, rx, worker_cfg, policy))
             })
             .collect();
 
         let dispatcher = {
             let shared = Arc::clone(&shared);
-            let drive = cfg.drive;
-            let affinity = cfg.affinity;
-            std::thread::spawn(move || dispatcher_loop(shared, txs, drive, affinity))
+            let dispatcher_cfg = cfg.clone();
+            std::thread::spawn(move || dispatcher_loop(shared, txs, dispatcher_cfg))
         };
 
         Coordinator { cfg, shared, dispatcher: Some(dispatcher), workers }
@@ -328,95 +342,74 @@ impl Coordinator {
     }
 }
 
-fn dispatcher_loop(
-    shared: Arc<Shared>,
-    txs: Vec<Sender<Job>>,
-    drive: DriveParams,
-    affinity: Affinity,
-) {
+fn dispatcher_loop(shared: Arc<Shared>, txs: Vec<Sender<Job>>, cfg: CoordinatorConfig) {
+    let exclusive = cfg.exclusive_tapes;
     loop {
         let stopping = shared.stopping.load(Ordering::SeqCst);
+        // Stage 0: a parked batch whose cartridge has freed goes first
+        // (FIFO by free time — it was popped from the batcher earlier).
+        if exclusive {
+            let unparked = shared.resources.lock().unwrap().ledger.pop_ready();
+            if let Some((_tape, parked)) = unparked {
+                shared
+                    .metrics
+                    .on_cartridge_wait(parked.parked_at.elapsed().as_secs_f64());
+                if !place_and_send(&shared, &txs, &cfg, parked.batch) {
+                    break; // worker gone
+                }
+                continue;
+            }
+        }
         let batch = {
             let mut b = shared.batcher.lock().unwrap();
             match b.pop_ready(Instant::now(), stopping) {
                 Some(batch) => Some(batch),
-                None if stopping && b.pending() == 0 => break,
+                None if stopping && b.pending() == 0 => {
+                    drop(b);
+                    // Parked batches still wait on their cartridge: keep
+                    // looping until the serving workers free them,
+                    // blocking on the wakeup workers notify on every
+                    // release (the timeout bounds a lost-notify race
+                    // between the waiter check and the wait).
+                    if !exclusive || shared.resources.lock().unwrap().ledger.no_waiters() {
+                        break;
+                    }
+                    let guard = shared.batcher.lock().unwrap();
+                    let _ = shared
+                        .wakeup
+                        .wait_timeout(guard, Duration::from_millis(5))
+                        .unwrap();
+                    None
+                }
                 None => {
-                    // Sleep until the oldest batch's window or a notify.
+                    // Sleep until the oldest batch's window or a notify
+                    // (workers notify on every release, so parked batches
+                    // are re-checked promptly).
                     let deadline = b.next_deadline();
                     let wait = deadline
                         .map(|d| d.saturating_duration_since(Instant::now()))
-                        .unwrap_or(std::time::Duration::from_millis(20));
+                        .unwrap_or(Duration::from_millis(20));
                     let (_b, _timeout) = shared
                         .wakeup
-                        .wait_timeout(b, wait.min(std::time::Duration::from_millis(50)))
+                        .wait_timeout(b, wait.min(Duration::from_millis(50)))
                         .unwrap();
                     None
                 }
             }
         };
         if let Some(batch) = batch {
-            let instance = {
-                let catalog = shared.catalog.lock().unwrap();
-                match catalog.get(&batch.tape) {
-                    Some(tape) => {
-                        Instance::from_tape(tape, &batch.multiplicities(), drive.uturn_bytes())
-                            .expect("batch requests validated at submit")
-                    }
-                    None => {
-                        // The tape was deregistered between a submit's
-                        // validation and its push (rehoming race): shed
-                        // the batch rather than panicking on the missing
-                        // entry. `on_shed` (not `on_reject`) keeps the
-                        // in-flight accounting honest — these requests
-                        // were accepted but will never complete.
-                        drop(catalog);
-                        let n = batch.n_requests() as u64;
-                        let mut submit = shared.submit_times.lock().unwrap();
-                        for (_, ids) in &batch.by_file {
-                            for id in ids {
-                                submit.remove(id);
-                            }
-                        }
-                        shared.metrics.on_shed(n);
-                        continue;
-                    }
-                }
-            };
-            // Placement stage: wait for a free drive and pick which one
-            // the batch lands on (affinity-first). Workers signal
-            // `drive_freed` after every batch, so this cannot wedge while
-            // any drive is still serving.
-            let (drive_idx, plan) = {
-                let mut table = shared.drives.lock().unwrap();
-                loop {
-                    if let Some((i, plan)) = pick_slot(&table.slots, &batch.tape, affinity) {
-                        table.tick += 1;
-                        let tick = table.tick;
-                        let slot = &mut table.slots[i];
-                        slot.busy = true;
-                        slot.last_used = tick;
-                        slot.loaded = match affinity {
-                            Affinity::Lru => Some(batch.tape.clone()),
-                            Affinity::None => None,
-                        };
-                        break (i, plan);
-                    }
-                    table = shared.drive_freed.wait(table).unwrap();
-                }
-            };
-            // Remount accounting only when the placement policy can
-            // produce hits — parity with the replay engine, whose legacy
-            // (no-affinity, no-arms) path keeps both counters at zero.
-            if affinity == Affinity::Lru {
-                if plan == MountPlan::Hit {
-                    shared.metrics.on_remount_hit();
-                } else {
-                    shared.metrics.on_remount_miss();
+            // Exclusivity gate: a batch whose cartridge is in use in
+            // another drive (or already has earlier batches waiting)
+            // parks FIFO until the cartridge frees.
+            if exclusive {
+                let mut res = shared.resources.lock().unwrap();
+                if !res.ledger.available(&batch.tape) {
+                    let tape = batch.tape.clone();
+                    res.ledger.park(tape, ParkedBatch { batch, parked_at: Instant::now() });
+                    continue;
                 }
             }
-            let mount_charge_s = drive.mount_charge_s(plan);
-            if txs[drive_idx].send(Job { batch, instance, mount_charge_s }).is_err() {
+            if !place_and_send(&shared, &txs, &cfg, batch) {
                 break; // worker gone
             }
         }
@@ -424,18 +417,129 @@ fn dispatcher_loop(
     drop(txs); // closes every channel; workers drain and exit
 }
 
+/// Build the batch's LTSP instance, place it on a drive through the
+/// shared resource layer, and hand it to that drive's worker. Returns
+/// `false` when the worker channel closed (service tearing down); a shed
+/// batch (tape deregistered mid-flight) returns `true` so the dispatcher
+/// keeps going.
+fn place_and_send(
+    shared: &Shared,
+    txs: &[Sender<Job>],
+    cfg: &CoordinatorConfig,
+    batch: Batch,
+) -> bool {
+    let instance = {
+        let catalog = shared.catalog.lock().unwrap();
+        match catalog.get(&batch.tape) {
+            Some(tape) => {
+                Instance::from_tape(tape, &batch.multiplicities(), cfg.drive.uturn_bytes())
+                    .expect("batch requests validated at submit")
+            }
+            None => {
+                // The tape was deregistered between a submit's validation
+                // and its push (rehoming race): shed the batch rather
+                // than panicking on the missing entry. `on_shed` (not
+                // `on_reject`) keeps the in-flight accounting honest —
+                // these requests were accepted but will never complete.
+                drop(catalog);
+                let n = batch.n_requests() as u64;
+                {
+                    let mut submit = shared.submit_times.lock().unwrap();
+                    for (_, ids) in &batch.by_file {
+                        for id in ids {
+                            submit.remove(id);
+                        }
+                    }
+                }
+                shared.metrics.on_shed(n);
+                // A shed batch never acquires its cartridge, so it will
+                // never release it either: re-arm any remaining waiters
+                // or they would wedge the drain.
+                if cfg.exclusive_tapes {
+                    shared.resources.lock().unwrap().ledger.renote(&batch.tape);
+                }
+                return true;
+            }
+        }
+    };
+    // Placement stage: wait for a free drive and pick which one the
+    // batch lands on (affinity-first), claiming the cartridge in the
+    // same critical section. Workers signal `resource_freed` after every
+    // batch, so this cannot wedge while any drive is still serving.
+    let (drive_idx, plan) = {
+        let mut res = shared.resources.lock().unwrap();
+        loop {
+            if let Some((i, plan)) = res.drives.pick(cfg.affinity, &batch.tape) {
+                res.tick += 1;
+                let tick = res.tick;
+                if cfg.exclusive_tapes {
+                    if plan == MountPlan::EvictMount {
+                        // The live path has no timed unmount: the evicted
+                        // cartridge returns to its shelf immediately
+                        // (waiters for it become dispatchable).
+                        if let Some(evicted) = res.drives.drive(i).loaded.clone() {
+                            res.ledger.release_unthreaded(&evicted);
+                        }
+                    }
+                    res.ledger.acquire(&batch.tape, i);
+                }
+                let loaded = match cfg.affinity {
+                    Affinity::Lru => Some(batch.tape.clone()),
+                    Affinity::None => None,
+                };
+                res.drives.begin_cycle(i, loaded, tick, 0);
+                res.drives.set_stage(i, DriveStage::Executing);
+                break (i, plan);
+            }
+            res = shared.resource_freed.wait(res).unwrap();
+        }
+    };
+    // Remount accounting only when the placement policy can produce hits
+    // — parity with the replay engine, whose legacy (no-affinity,
+    // no-arms) path keeps both counters at zero.
+    if cfg.affinity == Affinity::Lru {
+        if plan == MountPlan::Hit {
+            shared.metrics.on_remount_hit();
+        } else {
+            shared.metrics.on_remount_miss();
+        }
+    }
+    let mount_charge_s = cfg.drive.mount_charge_s(plan);
+    txs[drive_idx].send(Job { batch, instance, mount_charge_s, plan }).is_ok()
+}
+
 fn worker_loop(
     shared: Arc<Shared>,
     drive_idx: usize,
     rx: Receiver<Job>,
-    drive: DriveParams,
+    cfg: CoordinatorConfig,
     policy: Arc<dyn Scheduler + Send + Sync>,
 ) {
+    let drive = cfg.drive;
     loop {
         let job = match rx.recv() {
             Ok(j) => j,
             Err(_) => break, // dispatcher closed the channel
         };
+        // Robot-arm timeline: the batch's mount work reserves an interval
+        // on the earliest-free arm (an eviction's unmount+mount ride the
+        // same arm back-to-back) and the worker sleeps to the reservation
+        // edge, so arm contention appears in measured wall latency. The
+        // op durations themselves stay a charge (`mount_charge_s`), not a
+        // sleep — exactly the pre-arm accounting.
+        if drive.n_arms > 0 && job.plan != MountPlan::Hit {
+            let dur_us = match job.plan {
+                MountPlan::Mount => drive.mount_us(),
+                MountPlan::EvictMount => drive.unmount_us() + drive.mount_us(),
+                MountPlan::Hit => 0,
+            };
+            let now_us = shared.wall_us();
+            let r = shared.arms.lock().unwrap().reserve(now_us, dur_us);
+            shared.metrics.on_arm_wait(r.wait_us as f64 / 1e6);
+            if r.wait_us > 0 {
+                std::thread::sleep(Duration::from_micros(r.wait_us));
+            }
+        }
         let policy_t0 = Instant::now();
         let schedule = policy.schedule(&job.instance);
         let sched_s = policy_t0.elapsed().as_secs_f64();
@@ -465,9 +569,21 @@ fn worker_loop(
                 });
             }
         }
-        // Release the drive and wake the placement stage.
-        shared.drives.lock().unwrap().slots[drive_idx].busy = false;
-        shared.drive_freed.notify_all();
+        // Release the drive and the cartridge, and wake the placement
+        // stage (and the dispatcher's batcher sleep, so parked batches
+        // are re-checked promptly).
+        {
+            let mut res = shared.resources.lock().unwrap();
+            if cfg.exclusive_tapes {
+                match cfg.affinity {
+                    Affinity::Lru => res.ledger.release_threaded(&job.batch.tape),
+                    Affinity::None => res.ledger.release_unthreaded(&job.batch.tape),
+                }
+            }
+            res.drives.release(drive_idx);
+        }
+        shared.resource_freed.notify_all();
+        shared.wakeup.notify_all();
     }
 }
 
@@ -500,6 +616,7 @@ mod tests {
                 n_arms: 0,
             },
             affinity: Affinity::None,
+            exclusive_tapes: true,
         }
     }
 
@@ -741,6 +858,99 @@ mod tests {
             m_none.mean_service_s
         );
         assert_eq!(done_lru.len(), done_none.len());
+    }
+
+    /// A policy that holds its drive for a fixed wall interval before
+    /// delegating — makes live resource contention deterministic.
+    struct SlowPolicy(Duration);
+
+    impl crate::sched::Scheduler for SlowPolicy {
+        fn name(&self) -> String {
+            "SlowGS".into()
+        }
+
+        fn schedule(&self, inst: &crate::model::Instance) -> crate::sched::Schedule {
+            std::thread::sleep(self.0);
+            Gs.schedule(inst)
+        }
+    }
+
+    #[test]
+    fn exclusivity_pins_a_hot_tape_to_one_drive() {
+        // Three drives, one tape, cap-split batches, LRU affinity. Without
+        // exclusivity a batch arriving while drive 0 is busy mounts a
+        // second "copy" of the cartridge into an empty drive (a remount
+        // miss); with it, every batch after the first waits for — and
+        // lands on — the one drive that physically holds the tape.
+        let mut config = cfg();
+        config.batcher.window = Duration::from_secs(3600);
+        config.batcher.max_batch = 4;
+        config.affinity = Affinity::Lru;
+        assert!(config.exclusive_tapes, "exclusivity is the default");
+        let c = Coordinator::start(
+            config,
+            vec![Tape::from_sizes("TAPE001", &[1_000; 50])],
+            Arc::new(SlowPolicy(Duration::from_millis(200))),
+        );
+        for i in 0..16u64 {
+            assert!(c
+                .submit(ReadRequest {
+                    id: i,
+                    tape: "TAPE001".into(),
+                    file_index: (i % 50) as usize,
+                })
+                .is_ok());
+        }
+        let (completions, m) = c.finish();
+        assert_eq!(completions.len(), 16);
+        assert_eq!(m.batches, 4, "cap 4 splits 16 requests into 4 batches");
+        assert_eq!(m.remount_misses, 1, "one cartridge, one mount");
+        assert_eq!(m.remount_hits, 3, "every later batch lands on the holder");
+        // The 200 ms the policy holds the drive means a later batch only
+        // avoids parking if the dispatcher stalls that long before its
+        // pop — all three dodging it is not a realistic schedule. (Exact
+        // counts stay timing-dependent, so assert the floor, not 3.)
+        assert!(
+            (1..=3).contains(&m.cartridge_parks),
+            "batches 2..4 must wait for the cartridge (parks = {})",
+            m.cartridge_parks
+        );
+        assert!(m.mean_cartridge_wait_s > 0.0);
+        assert!(m.max_cartridge_wait_s >= m.mean_cartridge_wait_s);
+    }
+
+    #[test]
+    fn arm_timeline_serializes_live_mounts() {
+        // Two tapes on two drives but one robot arm, with the mount span
+        // dominating dispatch skew: both batches place immediately, yet
+        // the second mount's reservation starts after the first ends —
+        // the worker sleeps to the edge and the wait lands in metrics.
+        let mut config = cfg();
+        config.n_drives = 2;
+        config.batcher.window = Duration::from_secs(3600);
+        config.drive.mount_s = 0.2;
+        config.drive.n_arms = 1;
+        let c = Coordinator::start(config.clone(), catalog(), Arc::new(Gs));
+        assert!(c.submit(ReadRequest { id: 1, tape: "TAPE001".into(), file_index: 0 }).is_ok());
+        assert!(c.submit(ReadRequest { id: 2, tape: "TAPE002".into(), file_index: 0 }).is_ok());
+        let (completions, m) = c.finish();
+        assert_eq!(completions.len(), 2);
+        assert_eq!(m.arm_ops, 2, "both mounts reserve the arm");
+        assert!(
+            m.max_arm_wait_s > 0.05,
+            "the second mount must queue behind the first (waited {})",
+            m.max_arm_wait_s
+        );
+        assert!(m.mean_arm_wait_s > 0.0);
+
+        // Unconstrained robot: no reservations, no arm metrics.
+        let mut free = config;
+        free.drive.n_arms = 0;
+        let c = Coordinator::start(free, catalog(), Arc::new(Gs));
+        assert!(c.submit(ReadRequest { id: 1, tape: "TAPE001".into(), file_index: 0 }).is_ok());
+        let (_, m) = c.finish();
+        assert_eq!(m.arm_ops, 0);
+        assert_eq!(m.max_arm_wait_s, 0.0);
     }
 
     #[test]

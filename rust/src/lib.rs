@@ -32,6 +32,9 @@
 //! - [`model`] — tapes, requests, instances, exact cost arithmetic.
 //! - [`sched`] — the paper's nine algorithms behind one [`sched::Scheduler`] trait.
 //! - [`sim`] — head-trajectory ground truth + robotic library simulator.
+//! - [`resources`] — the shared tape/drive/arm resource layer: cartridge
+//!   exclusivity ledger, drive-pool state machine, robot-arm pool and
+//!   timeline — one source of truth under both serving paths.
 //! - [`coordinator`] — multi-threaded request-serving service (one library).
 //! - [`cluster`] — multi-library sharding: consistent-hash routing over N
 //!   coordinators, per-shard backpressure, cluster metrics rollup.
@@ -51,6 +54,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod model;
 pub mod replay;
+pub mod resources;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

@@ -17,7 +17,9 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use tapesched::analysis::{mount_summary, qos_comparison, report::run_evaluation, shard_summary};
+use tapesched::analysis::{
+    cartridge_summary, mount_summary, qos_comparison, report::run_evaluation, shard_summary,
+};
 use tapesched::cli::Args;
 use tapesched::cluster::{Cluster, ClusterConfig};
 use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
@@ -77,12 +79,13 @@ COMMANDS:
   serve           [--policy NAME] [--drives N] [--requests N] [--seed N]
                   [--cap N] [--backlog N] [--backend dense|xla]
                   [--shards N] [--vnodes K] [--affinity none|lru]
+                  [--arms N] [--exclusive-tapes on|off]
   replay          [--arrivals poisson|bursty|diurnal|trace] [--rate R]
                   [--duration S] [--policy NAME[,NAME…]] [--drives N] [--seed N]
                   [--mode open|closed] [--cap N] [--window-ms N] [--max-batch N]
                   [--backlog N] [--data DIR] [--tapes N] [--out FILE.json]
                   [--backend dense|xla] [--shards N] [--vnodes K]
-                  [--arms N] [--affinity none|lru]
+                  [--arms N] [--affinity none|lru] [--exclusive-tapes on|off]
                   [--trace-file PATH] [--smoke]
   help
 
@@ -99,9 +102,16 @@ drives per shard. --arms N (replay) bounds each shard's robot-arm pool —
 every mount/unmount occupies an arm, queueing when all are busy — and
 --affinity lru (serve, replay) keeps tapes mounted so repeat batches skip
 the mount (remount hits, LRU eviction); either flag adds arm-wait /
-mount-wait / drive-wait ladders and remount counters to the QoS report,
-while the default --arms 0 --affinity none reproduces the legacy replay
-byte for byte. --trace-file replays an on-disk timestamped log
+mount-wait / drive-wait ladders and remount counters to the QoS report.
+--exclusive-tapes on (the default) enforces the single-cartridge
+constraint — a tape can be threaded in one drive at a time, batches whose
+tape is busy elsewhere park on a per-cartridge waitlist, and the report
+gains cartridge_parks + a cartridge_wait ladder (fleet-wide and per
+shard); --exclusive-tapes off with --arms 0 --affinity none reproduces
+the legacy replay byte for byte. For serve, --arms N bounds the live
+robot: each mount/unmount reserves an interval on a wall-clock arm
+timeline, workers sleep to the reservation edge, and arm-wait /
+cartridge-wait surface in the metrics. --trace-file replays an on-disk timestamped log
 (`timestamp_ns<TAB>tape<TAB>file_id`, see rust/README.md). --smoke is the
 fast deterministic CI preset (2 virtual seconds at 100 rps over 48 tapes
 unless overridden)."
@@ -323,7 +333,7 @@ fn cmd_draw(args: &Args) {
 fn cmd_serve(args: &Args) {
     args.reject_unknown(&[
         "policy", "drives", "requests", "seed", "tapes", "data", "backend", "cap", "backlog",
-        "shards", "vnodes", "affinity",
+        "shards", "vnodes", "affinity", "arms", "exclusive-tapes",
     ]);
     let policy = resolve_policy(args, "policy", "SimpleDP");
     let policy_name = policy.name();
@@ -343,6 +353,9 @@ fn cmd_serve(args: &Args) {
     }
     let affinity = Affinity::from_name(&args.get_choice_or("affinity", &["none", "lru"], "none"))
         .expect("choice already validated");
+    let n_arms = args.get_parsed_or("arms", 0usize);
+    let exclusive_tapes =
+        args.get_choice_or("exclusive-tapes", &["on", "off"], "on") == "on";
     let shard_cfg = CoordinatorConfig {
         n_drives,
         batcher: BatcherConfig {
@@ -350,8 +363,9 @@ fn cmd_serve(args: &Args) {
                 .get_parsed_or("backlog", BatcherConfig::default().max_tape_backlog),
             ..BatcherConfig::default()
         },
-        drive: DriveParams::default(),
+        drive: DriveParams { n_arms, ..DriveParams::default() },
         affinity,
+        exclusive_tapes,
     };
     let ds = dataset_from(args);
     let tapes: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
@@ -398,6 +412,18 @@ fn cmd_serve(args: &Args) {
                 m.remount_hits, m.remount_misses
             );
         }
+        if exclusive_tapes {
+            println!(
+                "  cartridge parks         = {} (mean wait {:.3} s, max {:.3} s)",
+                m.cartridge_parks, m.mean_cartridge_wait_s, m.max_cartridge_wait_s
+            );
+        }
+        if n_arms > 0 {
+            println!(
+                "  arm ops / mean wait     = {} / {:.3} s (max {:.3} s)",
+                m.arm_ops, m.mean_arm_wait_s, m.max_arm_wait_s
+            );
+        }
         for s in &m.shards {
             println!(
                 "  shard {:<2} routed/completed = {} / {} (p99 {:.1} s)",
@@ -431,6 +457,18 @@ fn cmd_serve(args: &Args) {
     if affinity == Affinity::Lru {
         println!("  remount hits / misses   = {} / {}", m.remount_hits, m.remount_misses);
     }
+    if exclusive_tapes {
+        println!(
+            "  cartridge parks         = {} (mean wait {:.3} s, max {:.3} s)",
+            m.cartridge_parks, m.mean_cartridge_wait_s, m.max_cartridge_wait_s
+        );
+    }
+    if n_arms > 0 {
+        println!(
+            "  arm ops / mean wait     = {} / {:.3} s (max {:.3} s)",
+            m.arm_ops, m.mean_arm_wait_s, m.max_arm_wait_s
+        );
+    }
     if dense_backend_selected(args) {
         let (hits, misses) = dense_cache_stats();
         println!("  dense cache hits/misses = {hits} / {misses}");
@@ -446,7 +484,7 @@ fn cmd_replay(args: &Args) {
     args.reject_unknown(&[
         "arrivals", "rate", "duration", "policy", "drives", "seed", "mode", "cap", "data",
         "tapes", "backend", "window-ms", "max-batch", "backlog", "out", "shards", "vnodes",
-        "arms", "affinity", "trace-file", "smoke",
+        "arms", "affinity", "exclusive-tapes", "trace-file", "smoke",
     ]);
     let mut kind =
         args.get_choice_or("arrivals", &["poisson", "bursty", "diurnal", "trace"], "poisson");
@@ -497,6 +535,8 @@ fn cmd_replay(args: &Args) {
     let n_arms = args.get_parsed_or("arms", 0usize);
     let affinity = Affinity::from_name(&args.get_choice_or("affinity", &["none", "lru"], "none"))
         .expect("choice already validated");
+    let exclusive_tapes =
+        args.get_choice_or("exclusive-tapes", &["on", "off"], "on") == "on";
     let cfg = ReplayConfig {
         n_drives,
         batcher: BatcherConfig {
@@ -511,6 +551,7 @@ fn cmd_replay(args: &Args) {
         n_shards,
         vnodes,
         affinity,
+        exclusive_tapes,
     };
 
     // Policies: comma-separated list; `--backend` selects the SimpleDP
@@ -649,6 +690,9 @@ fn cmd_replay(args: &Args) {
         }
         if report.pipeline {
             eprint!("{}", mount_summary(&report));
+        }
+        if report.exclusive {
+            eprint!("{}", cartridge_summary(&report));
         }
         reports.push(report);
     }

@@ -128,6 +128,7 @@ mod tests {
                     ..BatcherConfig::default()
                 },
                 drive: DriveParams::default(),
+                ..CoordinatorConfig::default()
             },
             tapes.clone(),
             Arc::new(Gs),

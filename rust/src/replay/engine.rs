@@ -28,6 +28,16 @@
 //!   requests; later arrivals queue client-side, and `Busy` rejections
 //!   retry after a virtual backoff (the retry path the coordinator's
 //!   backpressure contract promises callers).
+//!
+//! The physical state the engine steps — drive stage machines, robot-arm
+//! pools, the cartridge-exclusivity ledger — lives in [`crate::resources`]
+//! (shared with the live coordinator); this module is the event
+//! orchestration over it. With `ReplayConfig::exclusive_tapes` (the
+//! default) a batch whose tape is threaded or mid-mount in another drive
+//! parks on that cartridge's FIFO waitlist instead of mounting a second
+//! copy; the park → dispatch interval is the `cartridge_wait` QoS
+//! component. `--exclusive-tapes off` restores the pre-exclusivity
+//! accounting byte for byte.
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
@@ -35,8 +45,9 @@ use std::time::Instant;
 use crate::cluster::HashRing;
 use crate::coordinator::{Batch, Batcher, BatcherConfig, PushOutcome};
 use crate::model::{Instance, Tape};
+use crate::resources::{ArmPool, CartridgeLedger, DrivePool, DriveStage};
 use crate::sched::Scheduler;
-use crate::sim::{evaluate, pick_drive_slot, Affinity, DriveParams, MountPlan, SimOutcome};
+use crate::sim::{evaluate, Affinity, DriveParams, MountPlan, SimOutcome};
 
 use super::arrivals::{Arrival, ArrivalModel};
 use super::clock::{secs_to_us, EventQueue, VirtualClock};
@@ -77,6 +88,13 @@ pub struct ReplayConfig {
     /// `drive.n_arms == 0` is the legacy fixed mount-cost model — that
     /// configuration reproduces the pre-pipeline replay byte for byte.
     pub affinity: Affinity,
+    /// Per-tape mount exclusivity (the default): a cartridge exists once,
+    /// so a batch whose tape is in use in another drive parks on a
+    /// per-cartridge waitlist ([`crate::resources::CartridgeLedger`])
+    /// until the cartridge frees, surfacing the `cartridge_wait` QoS
+    /// component. `false` restores the pre-exclusivity model — a hot tape
+    /// may be "mounted" in several drives at once — byte for byte.
+    pub exclusive_tapes: bool,
 }
 
 impl Default for ReplayConfig {
@@ -90,6 +108,7 @@ impl Default for ReplayConfig {
             n_shards: 1,
             vnodes: 64,
             affinity: Affinity::None,
+            exclusive_tapes: true,
         }
     }
 }
@@ -154,6 +173,9 @@ pub struct ReplayStats {
     /// Batches that paid a fresh mount (every batch on the legacy path
     /// counts here once the pipeline is active; 0 when it is not).
     pub remount_misses: u64,
+    /// Batches parked on a cartridge waitlist because their tape was in
+    /// use in another drive (exclusive-tapes mode only; 0 when off).
+    pub cartridge_parks: u64,
     /// Wall-clock seconds spent inside `Scheduler::schedule` — a real
     /// measurement of policy compute, NOT part of the deterministic report.
     pub sched_wall_s: f64,
@@ -184,8 +206,13 @@ pub struct ShardOutcome {
     pub mount_wait: LatencyHistogram,
     /// Per-batch wait between becoming dispatchable and landing on a
     /// drive (recorded on both paths; serialized only when the pipeline
-    /// is active).
+    /// is active). In exclusive-tapes mode a parked batch's cartridge
+    /// wait is carved out of this, so the two components never overlap.
     pub drive_wait: LatencyHistogram,
+    /// Per-batch wait for the tape cartridge itself (0 for batches that
+    /// never parked). One sample per batch in exclusive-tapes mode; empty
+    /// when exclusivity is off.
+    pub cartridge_wait: LatencyHistogram,
 }
 
 /// Everything a replay produces.
@@ -204,6 +231,9 @@ pub struct ReplayOutcome {
     pub mount_wait: LatencyHistogram,
     /// Fleet-wide dispatchable→dispatched wait distribution, per batch.
     pub drive_wait: LatencyHistogram,
+    /// Fleet-wide cartridge-wait distribution, per batch (see
+    /// [`ShardOutcome::cartridge_wait`]).
+    pub cartridge_wait: LatencyHistogram,
     /// Per-shard breakdown (`n_shards` entries; one entry mirroring the
     /// fleet totals in the single-library case).
     pub per_shard: Vec<ShardOutcome>,
@@ -231,7 +261,8 @@ enum Ev {
 }
 
 /// A batch that has a drive but is still waiting on robot-arm work before
-/// its head can start executing.
+/// its head can start executing (the payload the drive's
+/// [`DriveStage::Mounting`] stage carries).
 #[derive(Debug)]
 struct PendingExec {
     batch: Batch,
@@ -239,57 +270,31 @@ struct PendingExec {
     /// Virtual dispatch time (µs) — the mount pipeline is measured from
     /// here.
     t0_us: u64,
+    /// Catalog tape index the dispatch evicted from this drive, released
+    /// back to the shelf (cartridge ledger) when the evict-unmount
+    /// completes. Only tracked in exclusive-tapes mode.
+    evicted_tape: Option<usize>,
 }
 
-/// The mount-pipeline state machine of one simulated drive.
+/// A batch parked on a cartridge waitlist: its tape was in use in another
+/// drive at dispatch time.
 #[derive(Debug)]
-enum DriveStage {
-    Idle,
-    /// Waiting on arm ops before execution; `unmount_first` marks that the
-    /// evict-unmount has not finished yet (a mount op follows it).
-    Mounting { pending: PendingExec, unmount_first: bool },
-    /// The head is executing the schedule.
-    Executing,
-    /// Trailing unmount through the arm pool (`Affinity::None` only).
-    Unloading,
+struct ParkedBatch {
+    batch: Batch,
+    /// Virtual time the batch parked (µs) — the cartridge wait is
+    /// measured from here.
+    parked_at_us: u64,
 }
 
-/// One simulated drive of a shard.
-#[derive(Debug)]
-struct DriveSim {
-    /// Catalog tape index currently threaded (survives between batches
-    /// under LRU affinity — the lazy unmount).
-    loaded: Option<usize>,
-    stage: DriveStage,
-    /// Dispatch tick of the drive's last batch (LRU eviction order).
-    last_used: u64,
-    /// Virtual time the current busy cycle began (µs).
-    cycle_start_us: u64,
-}
-
-/// One queued robot-arm operation (FIFO behind the busy arms).
-struct QueuedArmOp {
-    drive: usize,
-    dur_us: u64,
-    enqueued_us: u64,
-}
-
-/// A shard's robot-arm pool: `n_arms == 0` is unconstrained (ops start
-/// immediately), otherwise at most `n_arms` ops run at once and the rest
-/// queue FIFO.
-struct ArmPool {
-    n_arms: usize,
-    busy: usize,
-    queue: VecDeque<QueuedArmOp>,
-}
-
-/// Per-shard live state: the real batcher plus that library's drive pool.
+/// Per-shard live state: the real batcher plus that library's share of
+/// the resource layer (drives, arms, cartridge ledger).
 struct ShardState {
     batcher: Batcher,
-    drives: Vec<DriveSim>,
-    /// Count of drives in `DriveStage::Idle` (dispatch gate).
-    n_free: usize,
+    drives: DrivePool<usize, PendingExec>,
     arms: ArmPool,
+    /// Cartridge exclusivity state, keyed by catalog tape index. Only
+    /// consulted in exclusive-tapes mode.
+    ledger: CartridgeLedger<usize, ParkedBatch>,
     next_timer_us: Option<u64>,
     n_tapes: usize,
     ring_share: f64,
@@ -299,6 +304,7 @@ struct ShardState {
     arm_wait: LatencyHistogram,
     mount_wait: LatencyHistogram,
     drive_wait: LatencyHistogram,
+    cartridge_wait: LatencyHistogram,
 }
 
 struct Engine<'a> {
@@ -315,7 +321,10 @@ struct Engine<'a> {
     /// Whether the event-driven mount pipeline is on (cached
     /// `cfg.pipeline_active()`).
     pipeline: bool,
-    /// Monotone dispatch counter feeding `DriveSim::last_used` (LRU).
+    /// Whether per-tape mount exclusivity is enforced (cached
+    /// `cfg.exclusive_tapes`).
+    exclusive: bool,
+    /// Monotone dispatch counter feeding the drives' `last_used` (LRU).
     tick: u64,
     /// id → (arrived, accepted) virtual µs for accepted-but-unserved
     /// requests.
@@ -332,6 +341,7 @@ struct Engine<'a> {
     arm_wait: LatencyHistogram,
     mount_wait: LatencyHistogram,
     drive_wait: LatencyHistogram,
+    cartridge_wait: LatencyHistogram,
 }
 
 /// Run `model` against `catalog` under `policy`: the whole replay, at CPU
@@ -361,20 +371,9 @@ pub fn simulate(
     let shards: Vec<ShardState> = (0..cfg.n_shards)
         .map(|s| ShardState {
             batcher: Batcher::new(cfg.batcher),
-            drives: (0..cfg.n_drives)
-                .map(|_| DriveSim {
-                    loaded: None,
-                    stage: DriveStage::Idle,
-                    last_used: 0,
-                    cycle_start_us: 0,
-                })
-                .collect(),
-            n_free: cfg.n_drives,
-            arms: ArmPool {
-                n_arms: cfg.drive.n_arms,
-                busy: 0,
-                queue: VecDeque::new(),
-            },
+            drives: DrivePool::new(cfg.n_drives),
+            arms: ArmPool::new(cfg.drive.n_arms),
+            ledger: CartridgeLedger::new(),
             next_timer_us: None,
             n_tapes: tape_shard.iter().filter(|&&owner| owner == s).count(),
             ring_share: spread[s],
@@ -384,10 +383,12 @@ pub fn simulate(
             arm_wait: LatencyHistogram::new(),
             mount_wait: LatencyHistogram::new(),
             drive_wait: LatencyHistogram::new(),
+            cartridge_wait: LatencyHistogram::new(),
         })
         .collect();
     let mut eng = Engine {
         pipeline: cfg.pipeline_active(),
+        exclusive: cfg.exclusive_tapes,
         cfg,
         catalog,
         tape_index: catalog
@@ -413,6 +414,7 @@ pub fn simulate(
         arm_wait: LatencyHistogram::new(),
         mount_wait: LatencyHistogram::new(),
         drive_wait: LatencyHistogram::new(),
+        cartridge_wait: LatencyHistogram::new(),
     };
 
     eng.pull_arrival(model);
@@ -492,13 +494,17 @@ pub fn simulate(
             "replay drained with work queued on shard {i}"
         );
         assert_eq!(
-            shard.n_free,
+            shard.drives.n_free(),
             eng.cfg.n_drives,
             "shard {i} drained with a drive still in its mount pipeline"
         );
         assert!(
-            shard.arms.busy == 0 && shard.arms.queue.is_empty(),
+            shard.arms.idle(),
             "shard {i} drained with robot-arm work outstanding"
+        );
+        assert!(
+            shard.ledger.no_waiters(),
+            "shard {i} drained with batches parked on a cartridge waitlist"
         );
         assert_eq!(
             shard.stats.submitted, shard.stats.completed,
@@ -535,6 +541,7 @@ pub fn simulate(
             arm_wait: s.arm_wait,
             mount_wait: s.mount_wait,
             drive_wait: s.drive_wait,
+            cartridge_wait: s.cartridge_wait,
         })
         .collect();
     ReplayOutcome {
@@ -545,6 +552,7 @@ pub fn simulate(
         arm_wait: eng.arm_wait,
         mount_wait: eng.mount_wait,
         drive_wait: eng.drive_wait,
+        cartridge_wait: eng.cartridge_wait,
         per_shard,
     }
 }
@@ -619,18 +627,44 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Feed one shard's ready batches to its free drives. Once arrivals
-    /// are exhausted and no request waits client-side, open batches
-    /// dispatch without waiting out their window — the coordinator's
-    /// drain semantics.
+    /// Feed one shard's ready batches to its free drives. Batches parked
+    /// on a cartridge waitlist whose cartridge has since freed go first
+    /// (FIFO by free time — they were popped from the batcher earlier);
+    /// then the batcher's queue, parking any batch whose tape is in use
+    /// elsewhere. Once arrivals are exhausted and no request waits
+    /// client-side, open batches dispatch without waiting out their
+    /// window — the coordinator's drain semantics.
     fn dispatch_ready(&mut self, shard: usize) {
-        while self.shards[shard].n_free > 0 {
+        if self.exclusive {
+            while self.shards[shard].drives.n_free() > 0 {
+                let Some((_tape, parked)) = self.shards[shard].ledger.pop_ready() else {
+                    break;
+                };
+                self.dispatch(shard, parked.batch, Some(parked.parked_at_us));
+            }
+        }
+        while self.shards[shard].drives.n_free() > 0 {
             let draining = self.arrivals_done && self.client_queue.is_empty();
             let now = self.clock.now_instant();
             let Some(batch) = self.shards[shard].batcher.pop_ready(now, draining) else {
                 break;
             };
-            self.dispatch(shard, batch);
+            if self.exclusive {
+                let tape_idx = self.tape_index[&batch.tape];
+                if !self.shards[shard].ledger.available(&tape_idx) {
+                    // The cartridge is threaded or mid-mount in another
+                    // drive (or earlier batches already wait for it):
+                    // park FIFO until it frees.
+                    self.stats.cartridge_parks += 1;
+                    self.shards[shard].stats.cartridge_parks += 1;
+                    let parked_at_us = self.clock.now_us();
+                    self.shards[shard]
+                        .ledger
+                        .park(tape_idx, ParkedBatch { batch, parked_at_us });
+                    continue;
+                }
+            }
+            self.dispatch(shard, batch, None);
         }
     }
 
@@ -638,7 +672,7 @@ impl<'a> Engine<'a> {
     /// Only needed while that shard has a free drive — otherwise its next
     /// drive release re-checks.
     fn schedule_timer(&mut self, shard: usize) {
-        if self.shards[shard].n_free == 0 {
+        if self.shards[shard].drives.n_free() == 0 {
             return;
         }
         let Some(deadline) = self.shards[shard].batcher.next_deadline() else { return };
@@ -653,20 +687,31 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Dispatch one popped batch: placement (which drive), then either the
-    /// legacy fixed mount-cost accounting or the event-driven mount
-    /// pipeline. The legacy branch is byte-for-byte the pre-pipeline
-    /// engine — same event pushes in the same order with the same
-    /// timestamps — which is what keeps `--arms 0 --affinity none`
-    /// reports byte-identical (regression-gated in ci.sh).
-    fn dispatch(&mut self, shard: usize, batch: Batch) {
+    /// Dispatch one popped (or unparked) batch: placement (which drive),
+    /// then either the legacy fixed mount-cost accounting or the
+    /// event-driven mount pipeline. The legacy branch is byte-for-byte
+    /// the pre-pipeline engine — same event pushes in the same order with
+    /// the same timestamps — which is what keeps `--arms 0 --affinity
+    /// none` reports byte-identical (regression-gated in ci.sh).
+    /// `parked_at_us` is set when the batch waited on a cartridge
+    /// waitlist (exclusive-tapes mode; the wait is recorded per batch).
+    fn dispatch(&mut self, shard: usize, batch: Batch, parked_at_us: Option<u64>) {
         let t_us = self.clock.now_us();
         self.stats.batches += 1;
         self.shards[shard].stats.batches += 1;
         // Dispatchable→dispatched wait (a free-drive wait): recorded on
-        // both paths, serialized only when the pipeline is active.
+        // both paths, serialized only when the pipeline is active. The
+        // cartridge wait of a parked batch (park → dispatch) is carved
+        // *out* of it so the two components never overlap — a parked
+        // batch's drive_wait is dispatchable → park (it parked the moment
+        // a drive was free for it), and cartridge_wait covers the rest.
         let ready_us = self.clock.us_of(batch.ready_at).min(t_us);
-        let dw_us = t_us - ready_us;
+        let cw_us = if self.exclusive {
+            parked_at_us.map_or(0, |p| t_us - p)
+        } else {
+            0
+        };
+        let dw_us = t_us - ready_us - cw_us;
         self.drive_wait.record_us(dw_us);
         self.shards[shard].drive_wait.record_us(dw_us);
 
@@ -683,18 +728,44 @@ impl<'a> Engine<'a> {
         let out = evaluate(&inst, &sched);
 
         // Placement: which drive, and what mount work that implies.
-        let (drive_idx, plan) = self.pick_drive(shard, tape_idx);
+        let (drive_idx, plan) = self
+            .shards[shard]
+            .drives
+            .pick(self.cfg.affinity, &tape_idx)
+            .expect("dispatch_ready gates on a free drive");
         self.tick += 1;
-        {
-            let d = &mut self.shards[shard].drives[drive_idx];
-            d.last_used = self.tick;
-            d.cycle_start_us = t_us;
-            d.loaded = match self.cfg.affinity {
-                Affinity::Lru => Some(tape_idx),
-                Affinity::None => None,
-            };
+        // Exclusive-tapes bookkeeping: the cartridge this dispatch evicts
+        // (released at evict-unmount completion), the acquisition of the
+        // batch's own cartridge, and the per-batch cartridge-wait sample.
+        let evicted_tape = if plan == MountPlan::EvictMount {
+            self.shards[shard].drives.drive(drive_idx).loaded
+        } else {
+            None
+        };
+        // Under exclusivity the drive remembers its tape on every path so
+        // the release paths know which cartridge to free; without it the
+        // legacy `Affinity::None` behavior (never loaded) is preserved
+        // byte for byte.
+        let loaded = if self.cfg.affinity == Affinity::Lru || self.exclusive {
+            Some(tape_idx)
+        } else {
+            None
+        };
+        self.shards[shard].drives.begin_cycle(drive_idx, loaded, self.tick, t_us);
+        if self.exclusive {
+            self.cartridge_wait.record_us(cw_us);
+            self.shards[shard].cartridge_wait.record_us(cw_us);
+            if let Some(ev) = evicted_tape {
+                self.shards[shard].ledger.begin_evict(&ev);
+            }
+            self.shards[shard].ledger.acquire(&tape_idx, drive_idx);
+            // The invariant the ledger exists for, cross-checked against
+            // the drive pool itself in debug builds (tests run the full
+            // scan; release replays rely on the ledger's own panic).
+            if cfg!(debug_assertions) {
+                self.shards[shard].drives.assert_exclusive(&tape_idx, drive_idx);
+            }
         }
-        self.shards[shard].n_free -= 1;
 
         if !self.pipeline {
             // Legacy fixed mount-cost path (plan is always `Mount` here:
@@ -706,7 +777,7 @@ impl<'a> Engine<'a> {
             let busy_us = secs_to_us(busy_s);
             self.stats.busy_drive_us += busy_us;
             self.shards[shard].stats.busy_drive_us += busy_us;
-            self.shards[shard].drives[drive_idx].stage = DriveStage::Executing;
+            self.shards[shard].drives.set_stage(drive_idx, DriveStage::Executing);
             self.events
                 .push(t_us + busy_us, Ev::DriveFree { shard, drive: drive_idx });
             return;
@@ -720,54 +791,34 @@ impl<'a> Engine<'a> {
             self.stats.remount_misses += 1;
             self.shards[shard].stats.remount_misses += 1;
         }
-        let pending = PendingExec { batch, out, t0_us: t_us };
+        let pending = PendingExec { batch, out, t0_us: t_us, evicted_tape };
         match plan {
             MountPlan::Hit => self.start_exec(shard, drive_idx, pending),
             MountPlan::Mount => {
-                self.shards[shard].drives[drive_idx].stage =
-                    DriveStage::Mounting { pending, unmount_first: false };
+                self.shards[shard].drives.set_stage(
+                    drive_idx,
+                    DriveStage::Mounting { pending, unmount_first: false },
+                );
                 self.request_arm(shard, drive_idx, self.cfg.drive.mount_us());
             }
             MountPlan::EvictMount => {
-                self.shards[shard].drives[drive_idx].stage =
-                    DriveStage::Mounting { pending, unmount_first: true };
+                self.shards[shard].drives.set_stage(
+                    drive_idx,
+                    DriveStage::Mounting { pending, unmount_first: true },
+                );
                 self.request_arm(shard, drive_idx, self.cfg.drive.unmount_us());
             }
         }
-    }
-
-    /// Choose the drive a batch for `tape_idx` lands on, through the one
-    /// shared preference ([`pick_drive_slot`] in `sim::library`): hit,
-    /// then empty, then LRU eviction — deterministic lowest-index ties.
-    fn pick_drive(&self, shard: usize, tape_idx: usize) -> (usize, MountPlan) {
-        pick_drive_slot(
-            self.cfg.affinity,
-            self.shards[shard].drives.iter().map(|d| {
-                (
-                    matches!(d.stage, DriveStage::Idle),
-                    d.loaded == Some(tape_idx),
-                    d.loaded.is_none(),
-                    d.last_used,
-                )
-            }),
-        )
-        .expect("dispatch_ready gates on a free drive")
     }
 
     /// Start (or queue) one robot-arm operation for `drive`. Unconstrained
     /// pools (`n_arms == 0`) start every op immediately with zero wait.
     fn request_arm(&mut self, shard: usize, drive: usize, dur_us: u64) {
         let now = self.clock.now_us();
-        let pool = &mut self.shards[shard].arms;
-        if pool.n_arms == 0 || pool.busy < pool.n_arms {
-            if pool.n_arms > 0 {
-                pool.busy += 1;
-            }
-            self.arm_wait.record_us(0);
-            self.shards[shard].arm_wait.record_us(0);
-            self.events.push(now + dur_us, Ev::ArmOpDone { shard, drive });
-        } else {
-            pool.queue.push_back(QueuedArmOp { drive, dur_us, enqueued_us: now });
+        if let Some(op) = self.shards[shard].arms.request(drive, dur_us, now) {
+            self.arm_wait.record_us(op.wait_us);
+            self.shards[shard].arm_wait.record_us(op.wait_us);
+            self.events.push(now + op.dur_us, Ev::ArmOpDone { shard, drive: op.drive });
         }
     }
 
@@ -775,34 +826,27 @@ impl<'a> Engine<'a> {
     /// then advance the owning drive's pipeline stage.
     fn on_arm_op_done(&mut self, shard: usize, drive: usize) {
         let now = self.clock.now_us();
-        let next = {
-            let pool = &mut self.shards[shard].arms;
-            if pool.n_arms > 0 {
-                pool.busy -= 1;
-                pool.queue.pop_front().map(|op| {
-                    pool.busy += 1;
-                    op
-                })
-            } else {
-                None
-            }
-        };
-        if let Some(op) = next {
-            let wait = now - op.enqueued_us;
-            self.arm_wait.record_us(wait);
-            self.shards[shard].arm_wait.record_us(wait);
+        if let Some(op) = self.shards[shard].arms.op_done(now) {
+            self.arm_wait.record_us(op.wait_us);
+            self.shards[shard].arm_wait.record_us(op.wait_us);
             self.events
                 .push(now + op.dur_us, Ev::ArmOpDone { shard, drive: op.drive });
         }
-        let stage = std::mem::replace(
-            &mut self.shards[shard].drives[drive].stage,
-            DriveStage::Idle,
-        );
+        let stage = self.shards[shard].drives.take_stage(drive);
         match stage {
-            DriveStage::Mounting { pending, unmount_first: true } => {
-                // Evict-unmount done; the mount follows through the pool.
-                self.shards[shard].drives[drive].stage =
-                    DriveStage::Mounting { pending, unmount_first: false };
+            DriveStage::Mounting { mut pending, unmount_first: true } => {
+                // Evict-unmount done: the evicted cartridge is back on its
+                // shelf (waiters for it become dispatchable) and the mount
+                // follows through the pool.
+                if self.exclusive {
+                    if let Some(ev) = pending.evicted_tape.take() {
+                        self.shards[shard].ledger.release_unthreaded(&ev);
+                    }
+                }
+                self.shards[shard].drives.set_stage(
+                    drive,
+                    DriveStage::Mounting { pending, unmount_first: false },
+                );
                 self.request_arm(shard, drive, self.cfg.drive.mount_us());
             }
             DriveStage::Mounting { pending, unmount_first: false } => {
@@ -822,11 +866,11 @@ impl<'a> Engine<'a> {
     /// account every request of the batch, and run the schedule span.
     fn start_exec(&mut self, shard: usize, drive: usize, pending: PendingExec) {
         let now = self.clock.now_us();
-        let PendingExec { batch, out, t0_us } = pending;
+        let PendingExec { batch, out, t0_us, .. } = pending;
         let mount_delay_us = now - t0_us;
         self.mount_wait.record_us(mount_delay_us);
         self.shards[shard].mount_wait.record_us(mount_delay_us);
-        self.shards[shard].drives[drive].stage = DriveStage::Executing;
+        self.shards[shard].drives.set_stage(drive, DriveStage::Executing);
         self.exec_batch(shard, drive, &batch, &out, t0_us, now);
         let span_us = secs_to_us(self.cfg.drive.to_seconds(out.finish));
         self.events.push(now + span_us, Ev::ExecDone { shard, drive });
@@ -839,7 +883,7 @@ impl<'a> Engine<'a> {
         match self.cfg.affinity {
             Affinity::Lru => self.finish_cycle(shard, drive),
             Affinity::None => {
-                self.shards[shard].drives[drive].stage = DriveStage::Unloading;
+                self.shards[shard].drives.set_stage(drive, DriveStage::Unloading);
                 self.request_arm(shard, drive, self.cfg.drive.unmount_us());
             }
         }
@@ -849,16 +893,29 @@ impl<'a> Engine<'a> {
     /// drive.
     fn finish_cycle(&mut self, shard: usize, drive: usize) {
         let now = self.clock.now_us();
-        let busy_us = now - self.shards[shard].drives[drive].cycle_start_us;
+        let busy_us = now - self.shards[shard].drives.drive(drive).cycle_start_us;
         self.stats.busy_drive_us += busy_us;
         self.shards[shard].stats.busy_drive_us += busy_us;
         self.release_drive(shard, drive);
     }
 
-    /// Mark a drive idle again (both paths).
+    /// Mark a drive idle again (both paths), handing its cartridge back
+    /// to the ledger in exclusive-tapes mode: under LRU affinity the tape
+    /// stays threaded (waiters dispatch as remount hits); otherwise it
+    /// returned to the shelf with the cycle's trailing unmount.
     fn release_drive(&mut self, shard: usize, drive: usize) {
-        self.shards[shard].drives[drive].stage = DriveStage::Idle;
-        self.shards[shard].n_free += 1;
+        if self.exclusive {
+            if let Some(tape_idx) = self.shards[shard].drives.drive(drive).loaded {
+                match self.cfg.affinity {
+                    Affinity::Lru => self.shards[shard].ledger.release_threaded(&tape_idx),
+                    Affinity::None => {
+                        self.shards[shard].ledger.release_unthreaded(&tape_idx);
+                        self.shards[shard].drives.drive_mut(drive).loaded = None;
+                    }
+                }
+            }
+        }
+        self.shards[shard].drives.release(drive);
     }
 
     /// Account every request of a batch: completions at
@@ -1185,6 +1242,122 @@ mod tests {
         // Drive waits are recorded on both paths: one sample per batch.
         assert_eq!(out.drive_wait.count(), out.stats.batches);
         assert_eq!(out.per_shard[0].drive_wait, out.drive_wait);
+        // Exclusivity (on by default) records one cartridge-wait sample
+        // per batch without touching the pipeline artifacts above.
+        assert_eq!(out.cartridge_wait.count(), out.stats.batches);
+        assert_eq!(out.per_shard[0].cartridge_wait, out.cartridge_wait);
+    }
+
+    #[test]
+    fn cartridge_exclusivity_serializes_a_hot_tape() {
+        // One hot tape, many drives, single-request batches: without the
+        // single-cartridge constraint every batch mounts its own "copy"
+        // and runs in parallel; with it they serialize through one drive
+        // cycle at a time — the head-of-line effect the ledger exists to
+        // surface.
+        let catalog = vec![Tape::from_sizes("HOT", &[1_000; 50])];
+        let run = |exclusive: bool| {
+            let mut config = cfg(LoopMode::Open);
+            config.exclusive_tapes = exclusive;
+            config.n_drives = 8;
+            config.batcher.max_batch = 1;
+            let mut model =
+                PoissonArrivals::new(RequestMix::new(&catalog), 10.0, 3.0, 11);
+            simulate(&config, &catalog, &Gs, &mut model)
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_eq!(on.stats.completed, off.stats.completed, "nothing may be lost");
+        assert_eq!(off.stats.cartridge_parks, 0, "off = the PR 4 model");
+        assert_eq!(off.cartridge_wait.count(), 0, "off records no samples");
+        assert!(
+            on.stats.cartridge_parks > 0,
+            "single-request batches on one tape must collide on the cartridge"
+        );
+        assert_eq!(on.cartridge_wait.count(), on.stats.batches);
+        assert!(on.cartridge_wait.max_s() > 0.0, "parked batches must wait");
+        assert!(
+            on.latency.quantile(99.9) > off.latency.quantile(99.9),
+            "exclusivity p99.9 {} must exceed the unconstrained {}",
+            on.latency.quantile(99.9),
+            off.latency.quantile(99.9)
+        );
+        assert!(
+            on.stats.makespan_us > off.stats.makespan_us,
+            "serialized cartridge cycles must stretch the drain"
+        );
+        // Deterministic, like every other replay path.
+        let again = run(true);
+        assert_eq!(on.completions, again.completions);
+        assert_eq!(on.cartridge_wait, again.cartridge_wait);
+        assert_eq!(on.stats.cartridge_parks, again.stats.cartridge_parks);
+    }
+
+    #[test]
+    fn exclusivity_without_contention_changes_nothing() {
+        // A single drive makes parking structurally impossible on the
+        // legacy path: batches pop only when the drive is free, and a
+        // free drive means every cartridge is back on its shelf (the
+        // DriveFree event releases it before the dispatch pass runs). The
+        // exclusive run must therefore reproduce the non-exclusive
+        // completion log and histograms exactly — its only trace is the
+        // all-zero cartridge_wait ladder.
+        let run = |exclusive: bool| {
+            let mut config = cfg(LoopMode::Open);
+            config.exclusive_tapes = exclusive;
+            config.n_drives = 1;
+            let mut model = poisson(20.0, 5.0, 3);
+            simulate(&config, &catalog(), &SimpleDp, &mut model)
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_eq!(on.stats.cartridge_parks, 0, "one drive cannot contend a cartridge");
+        assert_eq!(on.completions, off.completions);
+        assert_eq!(on.latency, off.latency);
+        assert_eq!(on.service, off.service);
+        assert_eq!(on.drive_wait, off.drive_wait, "no parks ⇒ identical drive waits");
+        assert_eq!(on.stats.makespan_us, off.stats.makespan_us);
+        assert_eq!(on.cartridge_wait.count(), on.stats.batches);
+        assert_eq!(off.cartridge_wait.count(), 0);
+    }
+
+    #[test]
+    fn exclusivity_composes_with_the_mount_pipeline() {
+        // LRU affinity + a bounded arm pool + exclusivity: hot batches
+        // park while their cartridge mounts, then land as remount hits on
+        // the holding drive; the ledger, pool, and pipeline reconcile.
+        let catalog = vec![
+            Tape::from_sizes("HOT", &[1_000; 50]),
+            Tape::from_sizes("WARM", &[2_000; 25]),
+        ];
+        let run = || {
+            let mut config = cfg(LoopMode::Open);
+            config.n_drives = 4;
+            config.batcher.max_batch = 2;
+            config.drive.n_arms = 1;
+            config.affinity = Affinity::Lru;
+            assert!(config.exclusive_tapes, "exclusivity is the default");
+            let mut model =
+                PoissonArrivals::new(RequestMix::new(&catalog), 20.0, 3.0, 7);
+            simulate(&config, &catalog, &Gs, &mut model)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.completions, b.completions, "pipeline + ledger stays deterministic");
+        assert_eq!(a.stats.completed, a.stats.submitted);
+        assert_eq!(a.stats.remount_hits + a.stats.remount_misses, a.stats.batches);
+        assert_eq!(a.mount_wait.count(), a.stats.batches);
+        assert_eq!(a.cartridge_wait.count(), a.stats.batches);
+        // With exclusivity a tape's batches can only land where it is
+        // threaded: every batch after a tape's first mount is a remount
+        // hit (no eviction pressure with 4 drives / 2 tapes), so misses
+        // are bounded by the tape count — never one per batch.
+        assert!(
+            (1..=2).contains(&a.stats.remount_misses),
+            "one mount per active tape, got {}",
+            a.stats.remount_misses
+        );
+        assert!(a.stats.cartridge_parks > 0, "hot batches must park while mounting");
     }
 
     #[test]
@@ -1244,9 +1417,11 @@ mod tests {
         // mount work (≥16 parked batches × 7.5 s of robot ops) exceeds
         // the whole unconstrained makespan — so its drain *must* stretch
         // and its tail *must* rise, no matter how the batcher coalesces
-        // under the backlog.
+        // under the backlog. (Exclusivity off: this pins the PR 4 arm
+        // geometry, where the two runs differ by the arm bound alone.)
         let run = |n_arms: usize| {
             let mut config = cfg(LoopMode::Open);
+            config.exclusive_tapes = false;
             config.n_drives = 16;
             config.drive = DriveParams {
                 mount_s: 5.0,

@@ -32,7 +32,13 @@
 //! affinity so repeat batches skip the mount, and the report gains
 //! arm-wait / mount-wait / drive-wait ladders plus remount hit/miss
 //! counters. `--arms 0 --affinity none` (the default) reproduces the
-//! legacy fixed mount-cost replay byte for byte. The wall-clock sibling ([`driver`]) feeds the *real*
+//! legacy fixed mount-cost replay byte for byte. The physical state the
+//! engine steps — drive stage machines, arm pools, and the per-tape
+//! mount-exclusivity ledger behind `--exclusive-tapes` (default on; a
+//! cartridge can be threaded in one drive at a time, and batches whose
+//! tape is busy elsewhere park on a per-cartridge waitlist, surfacing the
+//! `cartridge_wait` ladder) — lives in [`crate::resources`], shared with
+//! the live coordinator. The wall-clock sibling ([`driver`]) feeds the *real*
 //! threaded coordinator (or a whole [`crate::cluster::Cluster`], via
 //! [`RequestSink`]) from the same arrival models — demos and backpressure
 //! tests share that code path.

@@ -74,13 +74,21 @@ pub struct ShardQos {
     pub mount_wait: LatencyStats,
     /// Free-drive wait ladder, per batch (pipeline only).
     pub drive_wait: LatencyStats,
+    /// Batches parked on this shard's cartridge waitlists (exclusive
+    /// tapes only).
+    pub cartridge_parks: u64,
+    /// Cartridge-wait ladder, per batch (exclusive tapes only).
+    pub cartridge_wait: LatencyStats,
     /// Whether the mount pipeline was active — gates the extra keys so a
     /// legacy report's bytes never change.
     pipeline: bool,
+    /// Whether per-tape mount exclusivity was enforced — gates the
+    /// cartridge keys the same way.
+    exclusive: bool,
 }
 
 impl ShardQos {
-    fn from_outcome(s: &ShardOutcome, n_drives: usize, pipeline: bool) -> ShardQos {
+    fn from_outcome(s: &ShardOutcome, n_drives: usize, pipeline: bool, exclusive: bool) -> ShardQos {
         let st = &s.stats;
         ShardQos {
             shard: s.shard,
@@ -106,7 +114,10 @@ impl ShardQos {
             arm_wait: LatencyStats::from_histogram(&s.arm_wait),
             mount_wait: LatencyStats::from_histogram(&s.mount_wait),
             drive_wait: LatencyStats::from_histogram(&s.drive_wait),
+            cartridge_parks: st.cartridge_parks,
+            cartridge_wait: LatencyStats::from_histogram(&s.cartridge_wait),
             pipeline,
+            exclusive,
         }
     }
 
@@ -141,6 +152,13 @@ impl ShardQos {
                 self.drive_wait.json(),
             ));
         }
+        if self.exclusive {
+            out.push_str(&format!(
+                ",\"cartridge_parks\":{},\"cartridge_wait\":{}",
+                self.cartridge_parks,
+                self.cartridge_wait.json(),
+            ));
+        }
         out.push('}');
         out
     }
@@ -168,6 +186,10 @@ pub struct QosReport {
     /// the JSON, so a legacy replay's report stays byte-identical to the
     /// pre-pipeline format.
     pub pipeline: bool,
+    /// Whether per-tape mount exclusivity was enforced. Gates the
+    /// cartridge keys the same way: `--exclusive-tapes off` emits the
+    /// exact pre-exclusivity document.
+    pub exclusive: bool,
     /// Configured arrival horizon, seconds.
     pub duration_s: f64,
     pub submitted: u64,
@@ -197,6 +219,11 @@ pub struct QosReport {
     pub mount_wait: LatencyStats,
     /// Free-drive wait ladder, per batch (pipeline only).
     pub drive_wait: LatencyStats,
+    /// Batches parked on a cartridge waitlist fleet-wide (exclusive
+    /// tapes only).
+    pub cartridge_parks: u64,
+    /// Cartridge-wait ladder, per batch (exclusive tapes only).
+    pub cartridge_wait: LatencyStats,
     /// Per-shard breakdown (one entry per shard, ascending).
     pub shards: Vec<ShardQos>,
 }
@@ -214,6 +241,7 @@ impl QosReport {
         let makespan_s = s.makespan_us as f64 / 1e6;
         let fleet_drives = cfg.n_shards * cfg.n_drives;
         let pipeline = cfg.pipeline_active();
+        let exclusive = cfg.exclusive_tapes;
         QosReport {
             policy: policy.to_string(),
             arrivals: arrivals.to_string(),
@@ -228,6 +256,7 @@ impl QosReport {
             arms: cfg.drive.n_arms,
             affinity: cfg.affinity.name().to_string(),
             pipeline,
+            exclusive,
             duration_s,
             submitted: s.submitted,
             completed: s.completed,
@@ -255,10 +284,12 @@ impl QosReport {
             arm_wait: LatencyStats::from_histogram(&outcome.arm_wait),
             mount_wait: LatencyStats::from_histogram(&outcome.mount_wait),
             drive_wait: LatencyStats::from_histogram(&outcome.drive_wait),
+            cartridge_parks: s.cartridge_parks,
+            cartridge_wait: LatencyStats::from_histogram(&outcome.cartridge_wait),
             shards: outcome
                 .per_shard
                 .iter()
-                .map(|sh| ShardQos::from_outcome(sh, cfg.n_drives, pipeline))
+                .map(|sh| ShardQos::from_outcome(sh, cfg.n_drives, pipeline, exclusive))
                 .collect(),
         }
     }
@@ -269,8 +300,10 @@ impl QosReport {
     /// perturbs the fleet percentile bytes. Likewise the mount pipeline:
     /// its keys (`arms`, `affinity`, `remount_*`, `arm_wait`,
     /// `mount_wait`, `drive_wait`) appear **only** when the pipeline was
-    /// active, so an `--arms 0 --affinity none` replay emits the exact
-    /// pre-pipeline document (regression-gated in ci.sh).
+    /// active, and the cartridge-exclusivity keys (`exclusive_tapes`,
+    /// `cartridge_parks`, `cartridge_wait`) only when exclusivity was on,
+    /// so an `--exclusive-tapes off --arms 0 --affinity none` replay
+    /// emits the exact pre-pipeline document (regression-gated in ci.sh).
     pub fn to_json(&self) -> String {
         let mut out = format!(
             "{{\"policy\":\"{}\",\"arrivals\":\"{}\",\"seed\":{},\"mode\":\"{}\",\
@@ -312,6 +345,13 @@ impl QosReport {
                 self.arm_wait.json(),
                 self.mount_wait.json(),
                 self.drive_wait.json(),
+            ));
+        }
+        if self.exclusive {
+            out.push_str(&format!(
+                ",\"exclusive_tapes\":true,\"cartridge_parks\":{},\"cartridge_wait\":{}",
+                self.cartridge_parks,
+                self.cartridge_wait.json(),
             ));
         }
         out.push_str(",\"per_shard\":[");
@@ -467,12 +507,26 @@ mod tests {
         QosReport::new("GS", &model.name(), seed, 8.0, &cfg, &outcome)
     }
 
+    fn legacy_report(seed: u64) -> QosReport {
+        // `--exclusive-tapes off --arms 0 --affinity none`: the exact
+        // pre-pipeline, pre-exclusivity document.
+        let catalog = vec![
+            Tape::from_sizes("T0", &[1_000; 40]),
+            Tape::from_sizes("T1", &[500; 80]),
+        ];
+        let cfg = ReplayConfig { exclusive_tapes: false, ..ReplayConfig::default() };
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), 30.0, 8.0, seed);
+        let outcome = simulate(&cfg, &catalog, &Gs, &mut model);
+        QosReport::new("GS", &model.name(), seed, 8.0, &cfg, &outcome)
+    }
+
     #[test]
     fn legacy_json_never_grows_pipeline_keys() {
-        // The byte-compatibility contract: a replay with no arms and no
-        // affinity emits the exact pre-pipeline document — none of the
-        // mount-pipeline keys may appear, at the fleet or shard level.
-        let doc = sample_report(7).to_json();
+        // The byte-compatibility contract: a replay with no arms, no
+        // affinity, and exclusivity off emits the exact pre-pipeline
+        // document — none of the mount-pipeline or cartridge keys may
+        // appear, at the fleet or shard level.
+        let doc = legacy_report(7).to_json();
         for key in [
             "\"arms\":",
             "\"affinity\":",
@@ -481,11 +535,39 @@ mod tests {
             "\"arm_wait\":",
             "\"mount_wait\":",
             "\"drive_wait\":",
+            "\"exclusive_tapes\":",
+            "\"cartridge_parks\":",
+            "\"cartridge_wait\":",
         ] {
             assert!(!doc.contains(key), "legacy report leaked {key}: {doc}");
         }
         // And the legacy key order is intact around the splice point.
         assert!(doc.contains("},\"per_shard\":[{\"shard\":0,"));
+    }
+
+    #[test]
+    fn exclusive_json_carries_the_cartridge_sections() {
+        // The default configuration enforces exclusivity: the cartridge
+        // keys appear fleet-wide and per shard, deterministically, while
+        // the pipeline keys stay gated on the pipeline itself.
+        let a = sample_report(7);
+        let b = sample_report(7);
+        assert_eq!(a.to_json(), b.to_json(), "exclusive JSON stays byte-identical");
+        assert!(a.exclusive && !a.pipeline);
+        let doc = a.to_json();
+        for key in [
+            "\"exclusive_tapes\":true",
+            "\"cartridge_parks\":",
+            "\"cartridge_wait\":{\"mean_s\":",
+        ] {
+            assert!(doc.contains(key), "missing {key} in {doc}");
+        }
+        assert!(!doc.contains("\"arm_wait\":"), "no pipeline, no pipeline keys");
+        let shard_part = doc.split("\"per_shard\":[").nth(1).unwrap();
+        assert!(shard_part.contains("\"cartridge_parks\":"));
+        assert!(shard_part.contains("\"cartridge_wait\":"));
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count());
     }
 
     #[test]

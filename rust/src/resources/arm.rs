@@ -1,0 +1,201 @@
+//! Robot-arm state machines: the event-driven FIFO pool (replay) and the
+//! interval-reservation timeline (live coordinator, analytic library sim).
+//!
+//! Both model the same resource — a library's `n_arms` robot arms, each
+//! able to carry out one mount or unmount at a time — under two driving
+//! disciplines. `n_arms == 0` means an unconstrained robot in both: every
+//! op starts immediately with zero wait, which is the legacy fixed
+//! mount-cost model.
+
+use std::collections::VecDeque;
+
+/// One robot-arm operation that just started (or was granted from the
+/// queue): the caller schedules its completion `dur_us` from now and
+/// accounts `wait_us` of arm contention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArmStart {
+    /// The drive whose pipeline the op belongs to.
+    pub drive: usize,
+    /// Operation duration on the µs grid.
+    pub dur_us: u64,
+    /// Time the op spent queued behind busy arms (0 when it started
+    /// immediately).
+    pub wait_us: u64,
+}
+
+/// One queued robot-arm operation (FIFO behind the busy arms).
+#[derive(Debug)]
+struct QueuedArmOp {
+    drive: usize,
+    dur_us: u64,
+    enqueued_us: u64,
+}
+
+/// The event-driven arm pool: at most `n_arms` ops run at once, the rest
+/// queue FIFO. The caller drives it — [`ArmPool::request`] when an op
+/// wants to start, [`ArmPool::op_done`] when a running op's completion
+/// event fires — and schedules the completion events itself, so the pool
+/// runs identically under virtual and wall time.
+#[derive(Debug)]
+pub struct ArmPool {
+    n_arms: usize,
+    busy: usize,
+    queue: VecDeque<QueuedArmOp>,
+}
+
+impl ArmPool {
+    /// A pool of `n_arms` arms (`0` = unconstrained robot).
+    pub fn new(n_arms: usize) -> ArmPool {
+        ArmPool { n_arms, busy: 0, queue: VecDeque::new() }
+    }
+
+    /// Start (or queue) one op for `drive`. Returns the started op — with
+    /// zero wait — when an arm is free (always, for an unconstrained
+    /// pool); returns `None` when the op queued behind busy arms, in which
+    /// case a later [`ArmPool::op_done`] hands it back.
+    pub fn request(&mut self, drive: usize, dur_us: u64, now_us: u64) -> Option<ArmStart> {
+        if self.n_arms == 0 || self.busy < self.n_arms {
+            if self.n_arms > 0 {
+                self.busy += 1;
+            }
+            Some(ArmStart { drive, dur_us, wait_us: 0 })
+        } else {
+            self.queue.push_back(QueuedArmOp { drive, dur_us, enqueued_us: now_us });
+            None
+        }
+    }
+
+    /// One running op finished: free its arm and start the next queued op
+    /// (FIFO), whose measured wait is `now - enqueue time`.
+    pub fn op_done(&mut self, now_us: u64) -> Option<ArmStart> {
+        if self.n_arms == 0 {
+            return None;
+        }
+        self.busy -= 1;
+        self.queue.pop_front().map(|op| {
+            self.busy += 1;
+            ArmStart {
+                drive: op.drive,
+                dur_us: op.dur_us,
+                wait_us: now_us - op.enqueued_us,
+            }
+        })
+    }
+
+    /// No op running or queued (the drain invariant).
+    pub fn idle(&self) -> bool {
+        self.busy == 0 && self.queue.is_empty()
+    }
+}
+
+/// One granted arm interval on the timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArmReservation {
+    /// Arm index the interval landed on.
+    pub arm: usize,
+    /// When the op begins (≥ the requested `now_us`).
+    pub start_us: u64,
+    /// When the arm frees again (`start + dur`).
+    pub end_us: u64,
+    /// `start - now`: how long the caller must wait for the arm.
+    pub wait_us: u64,
+}
+
+/// The interval-reservation view of the arm pool: each arm is a
+/// monotonically advancing `free_at` edge, and an op reserves
+/// `[start, start + dur)` on the earliest-free arm. The live coordinator's
+/// workers sleep to `start` (the reservation edge) so arm contention shows
+/// up in wall-clock latency; [`crate::sim::LibrarySim`] uses the same
+/// arithmetic analytically. An empty timeline (`n_arms == 0`) is the
+/// unconstrained robot: every reservation starts immediately.
+#[derive(Debug, Clone)]
+pub struct ArmTimeline {
+    free_at_us: Vec<u64>,
+}
+
+impl ArmTimeline {
+    /// A timeline over `n_arms` arms (`0` = unconstrained).
+    pub fn new(n_arms: usize) -> ArmTimeline {
+        ArmTimeline { free_at_us: vec![0; n_arms] }
+    }
+
+    /// Whether the robot is unconstrained (no arm ever waits).
+    pub fn unconstrained(&self) -> bool {
+        self.free_at_us.is_empty()
+    }
+
+    /// Reserve `dur_us` starting no earlier than `now_us` on the
+    /// earliest-free arm (lowest index breaks ties).
+    pub fn reserve(&mut self, now_us: u64, dur_us: u64) -> ArmReservation {
+        if self.free_at_us.is_empty() {
+            return ArmReservation {
+                arm: 0,
+                start_us: now_us,
+                end_us: now_us + dur_us,
+                wait_us: 0,
+            };
+        }
+        let arm = (0..self.free_at_us.len())
+            .min_by_key(|&i| self.free_at_us[i])
+            .expect("non-empty timeline");
+        let start_us = self.free_at_us[arm].max(now_us);
+        self.free_at_us[arm] = start_us + dur_us;
+        ArmReservation { arm, start_us, end_us: start_us + dur_us, wait_us: start_us - now_us }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unconstrained_pool_starts_everything_immediately() {
+        let mut pool = ArmPool::new(0);
+        for i in 0..10 {
+            let op = pool.request(i, 1_000, i as u64).expect("no arm bound");
+            assert_eq!(op.wait_us, 0);
+            assert_eq!(op.drive, i);
+        }
+        assert!(pool.op_done(50).is_none(), "nothing queues without a bound");
+        assert!(pool.idle());
+    }
+
+    #[test]
+    fn bounded_pool_queues_fifo_and_measures_waits() {
+        let mut pool = ArmPool::new(1);
+        assert!(pool.request(0, 100, 0).is_some(), "first op starts");
+        assert!(pool.request(1, 200, 10).is_none(), "second queues");
+        assert!(pool.request(2, 300, 20).is_none(), "third queues");
+        assert!(!pool.idle());
+        // First completion grants the queue head with its measured wait.
+        let next = pool.op_done(100).expect("queued op granted");
+        assert_eq!((next.drive, next.dur_us, next.wait_us), (1, 200, 90));
+        let next = pool.op_done(300).expect("queue drains in FIFO order");
+        assert_eq!((next.drive, next.dur_us, next.wait_us), (2, 300, 280));
+        assert!(pool.op_done(600).is_none());
+        assert!(pool.idle());
+    }
+
+    #[test]
+    fn timeline_reserves_on_the_earliest_free_arm() {
+        let mut t = ArmTimeline::new(2);
+        let a = t.reserve(0, 100);
+        assert_eq!((a.arm, a.start_us, a.end_us, a.wait_us), (0, 0, 100, 0));
+        let b = t.reserve(0, 100);
+        assert_eq!((b.arm, b.start_us, b.wait_us), (1, 0, 0));
+        // Both arms busy until 100: the third op waits on arm 0.
+        let c = t.reserve(10, 50);
+        assert_eq!((c.arm, c.start_us, c.wait_us), (0, 100, 90));
+        // A late request after the arms freed starts immediately.
+        let d = t.reserve(1_000, 50);
+        assert_eq!((d.arm, d.start_us, d.wait_us), (1, 1_000, 0));
+    }
+
+    #[test]
+    fn empty_timeline_is_unconstrained() {
+        let mut t = ArmTimeline::new(0);
+        assert!(t.unconstrained());
+        let r = t.reserve(42, 100);
+        assert_eq!((r.start_us, r.end_us, r.wait_us), (42, 142, 0));
+    }
+}

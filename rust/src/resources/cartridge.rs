@@ -1,0 +1,291 @@
+//! The cartridge ledger: per-tape mount exclusivity.
+//!
+//! A physical cartridge exists once — it can be threaded in at most one
+//! drive at any instant. Before this ledger existed the serving stack
+//! quietly mounted "copies" of a hot tape in several drives at once, which
+//! hides exactly the head-of-line waiting the approximate-policy
+//! literature worries about. The ledger is the single authority both
+//! serving paths consult: the replay engine keys it by catalog tape index,
+//! the live coordinator by tape name, and each parks its own batch payload
+//! `W` on the per-cartridge waitlist.
+//!
+//! Lifecycle per cartridge:
+//!
+//! ```text
+//!             acquire(k, d)                 release_threaded(k)   (LRU)
+//!  unthreaded ───────────────▶ in use in d ───────────────────▶ idle in d
+//!      ▲                            │                               │
+//!      │     release_unthreaded(k)  │                 begin_evict / │
+//!      └────────────────────────────┴──────────────── acquire(k, d)─┘
+//! ```
+//!
+//! A dispatcher checks [`CartridgeLedger::available`] before placing a
+//! batch; unavailable batches go to [`CartridgeLedger::park`]. Every
+//! release hands freed cartridges with waiters to a FIFO ready queue the
+//! dispatcher drains via [`CartridgeLedger::pop_ready`] — the park → pop
+//! interval is the batch's `cartridge_wait`. The ledger never reads a
+//! clock; callers time the wait on their own grid (virtual or wall).
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct CartState {
+    drive: usize,
+    busy: bool,
+}
+
+/// Per-cartridge exclusivity state + FIFO waitlists. `K` is the tape key
+/// (catalog index in the replay engine, tape name in the live
+/// coordinator); `W` is whatever the caller parks (its batch plus a
+/// park timestamp).
+#[derive(Debug)]
+pub struct CartridgeLedger<K: Eq + Hash + Clone, W> {
+    /// Cartridges currently threaded (or being moved) — absent = shelved.
+    threaded: HashMap<K, CartState>,
+    /// Per-cartridge FIFO of batches waiting for the cartridge to free.
+    parked: HashMap<K, VecDeque<W>>,
+    /// Cartridges that freed while waiters were parked, FIFO by free time.
+    ready: VecDeque<K>,
+}
+
+impl<K: Eq + Hash + Clone, W> CartridgeLedger<K, W> {
+    pub fn new() -> CartridgeLedger<K, W> {
+        CartridgeLedger { threaded: HashMap::new(), parked: HashMap::new(), ready: VecDeque::new() }
+    }
+
+    /// May a *new* batch for `k` dispatch right now? `false` while the
+    /// cartridge is in use in any drive, or while earlier batches are
+    /// already parked waiting for it (FIFO fairness: latecomers queue
+    /// behind them).
+    pub fn available(&self, k: &K) -> bool {
+        if self.parked.get(k).map_or(false, |q| !q.is_empty()) {
+            return false;
+        }
+        self.threaded.get(k).map_or(true, |st| !st.busy)
+    }
+
+    /// Drive `drive` takes the cartridge: a fresh mount (or mount-after-
+    /// evict) on an unthreaded cartridge, or a remount hit on the drive
+    /// already holding it. Panics when the cartridge is busy or threaded
+    /// in a *different* drive — the exclusivity invariant this ledger
+    /// exists to enforce.
+    pub fn acquire(&mut self, k: &K, drive: usize) {
+        match self.threaded.get_mut(k) {
+            Some(st) => {
+                assert!(
+                    st.drive == drive && !st.busy,
+                    "cartridge exclusivity violated: acquiring a cartridge that is busy \
+                     or threaded in another drive"
+                );
+                st.busy = true;
+            }
+            None => {
+                self.threaded.insert(k.clone(), CartState { drive, busy: true });
+            }
+        }
+    }
+
+    /// An idle threaded cartridge is being evicted: the unmount owns it
+    /// until the caller reports [`CartridgeLedger::release_unthreaded`].
+    pub fn begin_evict(&mut self, k: &K) {
+        let st = self.threaded.get_mut(k).expect("evicting an unthreaded cartridge");
+        assert!(!st.busy, "evicting a cartridge still in use");
+        st.busy = true;
+    }
+
+    /// Queue a batch until the cartridge frees.
+    pub fn park(&mut self, k: K, w: W) {
+        self.parked.entry(k).or_default().push_back(w);
+    }
+
+    /// The cartridge's batch finished but the tape stays threaded (LRU
+    /// lazy unmount); waiters, if any, become dispatchable.
+    pub fn release_threaded(&mut self, k: &K) {
+        let st = self.threaded.get_mut(k).expect("releasing an unthreaded cartridge");
+        st.busy = false;
+        self.note_freed(k);
+    }
+
+    /// The cartridge returned to its shelf (trailing unmount done, legacy
+    /// fixed-cost cycle done, or evict-unmount done); waiters, if any,
+    /// become dispatchable.
+    pub fn release_unthreaded(&mut self, k: &K) {
+        self.threaded.remove(k).expect("releasing an unthreaded cartridge");
+        self.note_freed(k);
+    }
+
+    fn note_freed(&mut self, k: &K) {
+        if self.parked.get(k).map_or(false, |q| !q.is_empty()) {
+            self.ready.push_back(k.clone());
+        }
+    }
+
+    /// Next parked batch whose cartridge has freed, FIFO by free time. A
+    /// stale entry — the cartridge was re-claimed since it freed (live
+    /// path: an eviction can race the dispatcher) — is skipped; the next
+    /// release re-queues it.
+    pub fn pop_ready(&mut self) -> Option<(K, W)> {
+        while let Some(k) = self.ready.pop_front() {
+            if self.threaded.get(&k).map_or(false, |st| st.busy) {
+                continue;
+            }
+            if let Some(q) = self.parked.get_mut(&k) {
+                if let Some(w) = q.pop_front() {
+                    if q.is_empty() {
+                        self.parked.remove(&k);
+                    }
+                    return Some((k, w));
+                }
+            }
+        }
+        None
+    }
+
+    /// Re-arm the ready queue for `k`: a batch handed out by
+    /// [`CartridgeLedger::pop_ready`] was dropped *without* acquiring the
+    /// cartridge (e.g. shed because its tape was deregistered
+    /// mid-flight), so if waiters remain and the cartridge is free they
+    /// must become dispatchable again — otherwise they would wait for a
+    /// release that is never coming.
+    pub fn renote(&mut self, k: &K) {
+        if self.threaded.get(k).map_or(true, |st| !st.busy) {
+            self.note_freed(k);
+        }
+    }
+
+    /// Where the cartridge is threaded, if anywhere: `(drive, busy)`.
+    pub fn holder(&self, k: &K) -> Option<(usize, bool)> {
+        self.threaded.get(k).map(|st| (st.drive, st.busy))
+    }
+
+    /// Batches currently parked across all cartridges.
+    pub fn waiters(&self) -> usize {
+        self.parked.values().map(|q| q.len()).sum()
+    }
+
+    /// No batch parked anywhere (the drain invariant).
+    pub fn no_waiters(&self) -> bool {
+        self.ready.is_empty() && self.parked.values().all(|q| q.is_empty())
+    }
+}
+
+impl<K: Eq + Hash + Clone, W> Default for CartridgeLedger<K, W> {
+    fn default() -> Self {
+        CartridgeLedger::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_roundtrip_threaded_and_unthreaded() {
+        let mut l: CartridgeLedger<&str, u32> = CartridgeLedger::new();
+        assert!(l.available(&"A"));
+        l.acquire(&"A", 0);
+        assert!(!l.available(&"A"));
+        assert_eq!(l.holder(&"A"), Some((0, true)));
+        // LRU lazy unmount: idle but still threaded — and re-acquirable by
+        // the same drive (a remount hit).
+        l.release_threaded(&"A");
+        assert!(l.available(&"A"));
+        assert_eq!(l.holder(&"A"), Some((0, false)));
+        l.acquire(&"A", 0);
+        l.release_unthreaded(&"A");
+        assert_eq!(l.holder(&"A"), None);
+        assert!(l.no_waiters());
+    }
+
+    #[test]
+    #[should_panic(expected = "cartridge exclusivity violated")]
+    fn second_drive_cannot_take_a_busy_cartridge() {
+        let mut l: CartridgeLedger<&str, u32> = CartridgeLedger::new();
+        l.acquire(&"A", 0);
+        l.acquire(&"A", 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "cartridge exclusivity violated")]
+    fn another_drive_cannot_hit_an_idle_threaded_cartridge() {
+        let mut l: CartridgeLedger<&str, u32> = CartridgeLedger::new();
+        l.acquire(&"A", 0);
+        l.release_threaded(&"A");
+        l.acquire(&"A", 1);
+    }
+
+    #[test]
+    fn waiters_queue_fifo_and_drain_one_per_release() {
+        let mut l: CartridgeLedger<&str, u32> = CartridgeLedger::new();
+        l.acquire(&"A", 0);
+        l.park("A", 1);
+        l.park("A", 2);
+        assert!(!l.available(&"A"));
+        assert_eq!(l.waiters(), 2);
+        assert!(l.pop_ready().is_none(), "nothing freed yet");
+        // One release hands back exactly the FIFO head.
+        l.release_unthreaded(&"A");
+        assert_eq!(l.pop_ready(), Some(("A", 1)));
+        assert!(l.pop_ready().is_none(), "one release, one grant");
+        // The granted batch re-acquires; the next release frees waiter 2.
+        l.acquire(&"A", 1);
+        assert!(!l.available(&"A"), "a parked batch still outranks newcomers");
+        l.release_unthreaded(&"A");
+        assert_eq!(l.pop_ready(), Some(("A", 2)));
+        assert!(l.no_waiters());
+        assert!(l.available(&"A"));
+    }
+
+    #[test]
+    fn stale_ready_entries_are_skipped_and_requeued_by_the_next_release() {
+        let mut l: CartridgeLedger<&str, u32> = CartridgeLedger::new();
+        l.acquire(&"A", 0);
+        l.park("A", 1);
+        l.release_threaded(&"A"); // freed-with-waiters → ready
+        // An eviction re-claims the cartridge before the waiter dispatches.
+        l.begin_evict(&"A");
+        assert!(l.pop_ready().is_none(), "stale entry must not hand out a busy cartridge");
+        assert_eq!(l.waiters(), 1, "the waiter is still parked");
+        // The evict-unmount completes: the waiter becomes dispatchable.
+        l.release_unthreaded(&"A");
+        assert_eq!(l.pop_ready(), Some(("A", 1)));
+    }
+
+    #[test]
+    fn renote_rearms_waiters_after_a_dropped_grant() {
+        let mut l: CartridgeLedger<&str, u32> = CartridgeLedger::new();
+        l.acquire(&"A", 0);
+        l.park("A", 1);
+        l.park("A", 2);
+        l.release_unthreaded(&"A");
+        // The grant for waiter 1 is dropped (e.g. shed): without renote,
+        // waiter 2 would wait forever.
+        let (_, w) = l.pop_ready().unwrap();
+        assert_eq!(w, 1);
+        assert!(l.pop_ready().is_none());
+        l.renote(&"A");
+        assert_eq!(l.pop_ready(), Some(("A", 2)));
+        // Renote on a busy cartridge is a no-op (the release will re-arm).
+        l.acquire(&"A", 1);
+        l.park("A", 3);
+        l.renote(&"A");
+        assert!(l.pop_ready().is_none(), "busy cartridge must not grant");
+        l.release_unthreaded(&"A");
+        assert_eq!(l.pop_ready(), Some(("A", 3)));
+        assert!(l.no_waiters());
+    }
+
+    #[test]
+    fn independent_cartridges_do_not_interact() {
+        let mut l: CartridgeLedger<&str, u32> = CartridgeLedger::new();
+        l.acquire(&"A", 0);
+        assert!(l.available(&"B"));
+        l.acquire(&"B", 1);
+        l.park("A", 10);
+        l.release_unthreaded(&"B");
+        assert!(l.pop_ready().is_none(), "B freed with no waiters");
+        l.release_unthreaded(&"A");
+        assert_eq!(l.pop_ready(), Some(("A", 10)));
+    }
+}

@@ -1,0 +1,300 @@
+//! Drive placement and the per-drive mount-pipeline state machine.
+//!
+//! Hosts the shared placement vocabulary ([`Affinity`], [`MountPlan`],
+//! [`pick_drive_slot`]) and the [`DrivePool`] state machine both serving
+//! paths step: the replay engine with catalog tape *indices* and
+//! event-driven stage transitions, the live coordinator with tape *names*
+//! and worker threads. The pool is generic over the tape key `K` and the
+//! stage payload `P` (the replay engine parks its pending batch inside
+//! [`DriveStage::Mounting`]; the live path carries no payload).
+
+/// Drive-placement policy of a dispatcher: what happens to a tape after
+/// its batch finishes, and which drive the next batch for it lands on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Affinity {
+    /// Unmount after every batch; every dispatch pays a fresh mount (the
+    /// paper's fixed mount-cost model).
+    #[default]
+    None,
+    /// Keep the tape in the drive after its batch (lazy unmount). The
+    /// dispatcher prefers an idle drive already holding the batch's tape —
+    /// a *remount hit* skips the mount entirely — and evicts the
+    /// least-recently-used loaded drive when no empty drive is free.
+    Lru,
+}
+
+impl Affinity {
+    /// Parse a CLI name (`"none"` / `"lru"`, case-insensitive).
+    pub fn from_name(s: &str) -> Option<Affinity> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(Affinity::None),
+            "lru" => Some(Affinity::Lru),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (reports, CLI round-trip).
+    pub fn name(self) -> &'static str {
+        match self {
+            Affinity::None => "none",
+            Affinity::Lru => "lru",
+        }
+    }
+}
+
+/// How a dispatched batch lands on its chosen drive: the mount work the
+/// robot pipeline must perform before the head can execute the schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MountPlan {
+    /// The drive already holds the tape: no robot work at all.
+    Hit,
+    /// Empty drive: one mount through an arm.
+    Mount,
+    /// A loaded drive is evicted: unmount, then mount, both through arms.
+    EvictMount,
+}
+
+/// The **single home** of the drive-placement preference, shared by the
+/// live coordinator's dispatcher and the replay engine so their remount
+/// economics can never drift apart: among free drives, pick the first one
+/// already holding the batch's tape (remount hit, LRU affinity only),
+/// else the lowest-index empty one, else the least-recently-used loaded
+/// one (eviction; index breaks `last_used` ties). `drives` yields one
+/// `(free, holds_tape, empty, last_used)` view per drive, in drive-index
+/// order. Returns `None` when every drive is busy.
+pub fn pick_drive_slot(
+    affinity: Affinity,
+    drives: impl IntoIterator<Item = (bool, bool, bool, u64)>,
+) -> Option<(usize, MountPlan)> {
+    let mut first_empty: Option<usize> = None;
+    let mut lru: Option<(u64, usize)> = None;
+    for (i, (free, holds_tape, empty, last_used)) in drives.into_iter().enumerate() {
+        if !free {
+            continue;
+        }
+        if affinity == Affinity::Lru && holds_tape {
+            return Some((i, MountPlan::Hit));
+        }
+        if empty {
+            if first_empty.is_none() {
+                first_empty = Some(i);
+            }
+        } else if lru.map_or(true, |(t, _)| last_used < t) {
+            lru = Some((last_used, i));
+        }
+    }
+    if let Some(i) = first_empty {
+        return Some((i, MountPlan::Mount));
+    }
+    lru.map(|(_, i)| (i, MountPlan::EvictMount))
+}
+
+/// The mount-pipeline stage of one drive. The live coordinator only uses
+/// `Idle`/`Executing` (its mount work is charged, not event-stepped); the
+/// replay engine walks the full pipeline, parking the batch awaiting robot
+/// work in `Mounting`'s payload.
+#[derive(Debug)]
+pub enum DriveStage<P> {
+    Idle,
+    /// Waiting on arm ops before execution; `unmount_first` marks that the
+    /// evict-unmount has not finished yet (a mount op follows it).
+    Mounting { pending: P, unmount_first: bool },
+    /// The head is executing the schedule.
+    Executing,
+    /// Trailing unmount through the arm pool ([`Affinity::None`] only).
+    Unloading,
+}
+
+/// One drive's placement + pipeline state.
+#[derive(Debug)]
+pub struct Drive<K, P> {
+    /// Tape currently threaded (survives between batches under LRU
+    /// affinity — the lazy unmount).
+    pub loaded: Option<K>,
+    pub stage: DriveStage<P>,
+    /// Dispatch tick of the drive's last batch (LRU eviction order).
+    pub last_used: u64,
+    /// Time the current busy cycle began, on the caller's µs grid.
+    pub cycle_start_us: u64,
+}
+
+/// A library's drive pool: the stage machine per drive plus the free-drive
+/// gate dispatchers check before popping work.
+#[derive(Debug)]
+pub struct DrivePool<K, P> {
+    drives: Vec<Drive<K, P>>,
+    n_free: usize,
+}
+
+impl<K: PartialEq + Clone, P> DrivePool<K, P> {
+    /// `n` idle, empty drives.
+    pub fn new(n: usize) -> DrivePool<K, P> {
+        DrivePool {
+            drives: (0..n)
+                .map(|_| Drive {
+                    loaded: None,
+                    stage: DriveStage::Idle,
+                    last_used: 0,
+                    cycle_start_us: 0,
+                })
+                .collect(),
+            n_free: n,
+        }
+    }
+
+    pub fn n_drives(&self) -> usize {
+        self.drives.len()
+    }
+
+    /// Count of drives in [`DriveStage::Idle`] (the dispatch gate).
+    pub fn n_free(&self) -> usize {
+        self.n_free
+    }
+
+    pub fn drive(&self, i: usize) -> &Drive<K, P> {
+        &self.drives[i]
+    }
+
+    pub fn drive_mut(&mut self, i: usize) -> &mut Drive<K, P> {
+        &mut self.drives[i]
+    }
+
+    /// Choose the drive a batch for `tape` lands on, through the one
+    /// shared preference ([`pick_drive_slot`]): hit, then empty, then LRU
+    /// eviction — deterministic lowest-index ties.
+    pub fn pick(&self, affinity: Affinity, tape: &K) -> Option<(usize, MountPlan)> {
+        pick_drive_slot(
+            affinity,
+            self.drives.iter().map(|d| {
+                (
+                    matches!(d.stage, DriveStage::Idle),
+                    d.loaded.as_ref() == Some(tape),
+                    d.loaded.is_none(),
+                    d.last_used,
+                )
+            }),
+        )
+    }
+
+    /// Claim drive `i` for a new busy cycle: stamp its LRU tick and cycle
+    /// start, set what it holds, and take it out of the free pool. The
+    /// stage stays whatever the caller sets next (the claim itself leaves
+    /// it `Idle`-shaped so both the legacy one-event path and the staged
+    /// pipeline can follow).
+    pub fn begin_cycle(&mut self, i: usize, loaded: Option<K>, tick: u64, now_us: u64) {
+        let d = &mut self.drives[i];
+        debug_assert!(
+            matches!(d.stage, DriveStage::Idle),
+            "dispatching onto a busy drive"
+        );
+        d.last_used = tick;
+        d.cycle_start_us = now_us;
+        d.loaded = loaded;
+        self.n_free -= 1;
+    }
+
+    pub fn set_stage(&mut self, i: usize, stage: DriveStage<P>) {
+        self.drives[i].stage = stage;
+    }
+
+    /// Take the drive's stage out (leaving `Idle`) — the event-handler
+    /// pattern the replay engine steps transitions with.
+    pub fn take_stage(&mut self, i: usize) -> DriveStage<P> {
+        std::mem::replace(&mut self.drives[i].stage, DriveStage::Idle)
+    }
+
+    /// End the drive's busy cycle: back to `Idle` and the free pool.
+    /// `loaded` is untouched (LRU lazy unmount); callers clear it when the
+    /// cartridge actually returned to its shelf.
+    pub fn release(&mut self, i: usize) {
+        self.drives[i].stage = DriveStage::Idle;
+        self.n_free += 1;
+    }
+
+    /// The cartridge-exclusivity invariant over the pool: `tape` may be
+    /// loaded in `drive` and nowhere else. Panics on a violation.
+    pub fn assert_exclusive(&self, tape: &K, drive: usize) {
+        for (i, d) in self.drives.iter().enumerate() {
+            assert!(
+                i == drive || d.loaded.as_ref() != Some(tape),
+                "cartridge exclusivity violated: tape threaded in drives {i} and {drive}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_drive_slot_preference_order() {
+        use MountPlan::*;
+        // Views: (free, holds_tape, empty, last_used), in drive order.
+        let drives = [
+            (true, false, true, 5),  // 0: free empty
+            (true, true, false, 1),  // 1: free, holds the batch's tape
+            (false, true, false, 0), // 2: busy with the tape — ineligible
+            (true, false, false, 3), // 3: free, loaded with another tape
+        ];
+        // LRU affinity: the loaded idle drive wins even though an empty
+        // drive has a lower index.
+        assert_eq!(pick_drive_slot(Affinity::Lru, drives), Some((1, Hit)));
+        // No affinity: holds_tape is ignored, the first empty drive wins.
+        assert_eq!(pick_drive_slot(Affinity::None, drives), Some((0, Mount)));
+        // No empty drive: LRU eviction by (last_used, index).
+        let loaded = [
+            (true, false, false, 7),
+            (false, false, false, 1),
+            (true, false, false, 3),
+            (true, false, false, 3),
+        ];
+        assert_eq!(pick_drive_slot(Affinity::Lru, loaded), Some((2, EvictMount)));
+        // Every drive busy: nothing to pick.
+        assert_eq!(pick_drive_slot(Affinity::Lru, [(false, true, false, 0)]), None);
+    }
+
+    #[test]
+    fn pool_tracks_cycles_and_the_free_gate() {
+        let mut pool: DrivePool<usize, ()> = DrivePool::new(2);
+        assert_eq!(pool.n_drives(), 2);
+        assert_eq!(pool.n_free(), 2);
+        assert_eq!(pool.pick(Affinity::Lru, &7), Some((0, MountPlan::Mount)));
+        pool.begin_cycle(0, Some(7), 1, 100);
+        pool.set_stage(0, DriveStage::Executing);
+        assert_eq!(pool.n_free(), 1);
+        // The loaded busy drive is invisible to pick; the empty one wins.
+        assert_eq!(pool.pick(Affinity::Lru, &7), Some((1, MountPlan::Mount)));
+        pool.release(0);
+        assert_eq!(pool.n_free(), 2);
+        // After release the tape stays threaded: a remount hit under LRU.
+        assert_eq!(pool.pick(Affinity::Lru, &7), Some((0, MountPlan::Hit)));
+        assert_eq!(pool.drive(0).last_used, 1);
+        assert_eq!(pool.drive(0).cycle_start_us, 100);
+        pool.assert_exclusive(&7, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cartridge exclusivity violated")]
+    fn duplicate_threading_is_caught() {
+        let mut pool: DrivePool<usize, ()> = DrivePool::new(2);
+        pool.begin_cycle(0, Some(3), 1, 0);
+        pool.begin_cycle(1, Some(3), 2, 0);
+        pool.assert_exclusive(&3, 1);
+    }
+
+    #[test]
+    fn take_stage_leaves_idle() {
+        let mut pool: DrivePool<usize, u32> = DrivePool::new(1);
+        pool.begin_cycle(0, None, 1, 0);
+        pool.set_stage(0, DriveStage::Mounting { pending: 9, unmount_first: false });
+        match pool.take_stage(0) {
+            DriveStage::Mounting { pending, unmount_first } => {
+                assert_eq!(pending, 9);
+                assert!(!unmount_first);
+            }
+            other => panic!("unexpected stage {other:?}"),
+        }
+        assert!(matches!(pool.drive(0).stage, DriveStage::Idle));
+    }
+}

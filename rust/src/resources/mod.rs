@@ -1,0 +1,50 @@
+//! The shared physical-resource layer: tape cartridges, drives, robot arms.
+//!
+//! One library's physical state used to live in two divergent encodings —
+//! the replay engine's event-driven `ArmPool`/`DriveSim` state machines and
+//! the live coordinator's ad-hoc drive-slot table. This module is the
+//! **single source of truth** both serving paths now share:
+//!
+//! ```text
+//!            CartridgeLedger          DrivePool            ArmPool /
+//!            (one cartridge,          (stage machine       ArmTimeline
+//!             one drive)               per drive)          (robot arms)
+//!                  ▲                      ▲                    ▲
+//!        ┌─────────┴──────────┬───────────┴───────────┬────────┴───────┐
+//!        │ replay::engine     │ coordinator::service  │ sim::library   │
+//!        │ (VirtualClock µs)  │ (wall-clock Instants) │ (analytic)     │
+//!        └────────────────────┴───────────────────────┴────────────────┘
+//! ```
+//!
+//! **Time parameterization.** Every state machine here is *passive*: it
+//! never reads a clock. Callers pass the current time on the µs grid
+//! ([`crate::util::secs_to_us`]) — the replay engine passes its
+//! [`crate::replay::VirtualClock`] reading, the live coordinator passes
+//! `Instant`-anchored wall microseconds — so the identical transition
+//! logic runs under virtual and wall time. Waiting is likewise the
+//! caller's job: the replay engine schedules events at the returned
+//! timestamps, the live coordinator parks batches / sleeps workers to the
+//! returned reservation edges.
+//!
+//! **Cartridge exclusivity.** A physical cartridge can be threaded in at
+//! most one drive at a time; [`CartridgeLedger`] enforces it. A batch
+//! whose tape is in use elsewhere queues on a per-cartridge FIFO waitlist
+//! and is handed back (`pop_ready`) once the cartridge frees — the time it
+//! spends parked is the `cartridge_wait` QoS component surfaced fleet-wide
+//! and per shard.
+//!
+//! **Robot arms, two views.** [`ArmPool`] is the exact event-driven FIFO
+//! pool (mounts/unmounts occupy an arm, excess ops queue) the replay
+//! engine steps; [`ArmTimeline`] is the interval-reservation view of the
+//! same resource — each op reserves `[start, start+dur)` on the earliest
+//! free arm — used by the live coordinator (workers sleep to the
+//! reservation edge and charge the wait) and by the analytic
+//! [`crate::sim::LibrarySim`] model.
+
+pub mod arm;
+pub mod cartridge;
+pub mod drive;
+
+pub use arm::{ArmPool, ArmReservation, ArmStart, ArmTimeline};
+pub use cartridge::CartridgeLedger;
+pub use drive::{pick_drive_slot, Affinity, Drive, DrivePool, DriveStage, MountPlan};

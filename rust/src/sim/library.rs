@@ -14,8 +14,15 @@
 use std::collections::BinaryHeap;
 
 use crate::model::Instance;
+use crate::resources::ArmTimeline;
 use crate::sched::Scheduler;
 use crate::sim::evaluate;
+
+// The placement vocabulary historically lived here; it moved to the shared
+// resource layer (single source of truth for replay + live coordinator)
+// and is re-exported so `crate::sim::{Affinity, MountPlan, …}` callers
+// keep working.
+pub use crate::resources::{pick_drive_slot, Affinity, MountPlan};
 
 /// Physical drive / robot parameters.
 #[derive(Debug, Clone, Copy)]
@@ -98,87 +105,6 @@ impl DriveParams {
     }
 }
 
-/// Drive-placement policy of a dispatcher: what happens to a tape after
-/// its batch finishes, and which drive the next batch for it lands on.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum Affinity {
-    /// Unmount after every batch; every dispatch pays a fresh mount (the
-    /// paper's fixed mount-cost model).
-    #[default]
-    None,
-    /// Keep the tape in the drive after its batch (lazy unmount). The
-    /// dispatcher prefers an idle drive already holding the batch's tape —
-    /// a *remount hit* skips the mount entirely — and evicts the
-    /// least-recently-used loaded drive when no empty drive is free.
-    Lru,
-}
-
-impl Affinity {
-    /// Parse a CLI name (`"none"` / `"lru"`, case-insensitive).
-    pub fn from_name(s: &str) -> Option<Affinity> {
-        match s.to_ascii_lowercase().as_str() {
-            "none" => Some(Affinity::None),
-            "lru" => Some(Affinity::Lru),
-            _ => None,
-        }
-    }
-
-    /// Stable lowercase name (reports, CLI round-trip).
-    pub fn name(self) -> &'static str {
-        match self {
-            Affinity::None => "none",
-            Affinity::Lru => "lru",
-        }
-    }
-}
-
-/// How a dispatched batch lands on its chosen drive: the mount work the
-/// robot pipeline must perform before the head can execute the schedule.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum MountPlan {
-    /// The drive already holds the tape: no robot work at all.
-    Hit,
-    /// Empty drive: one mount through an arm.
-    Mount,
-    /// A loaded drive is evicted: unmount, then mount, both through arms.
-    EvictMount,
-}
-
-/// The **single home** of the drive-placement preference, shared by the
-/// live coordinator's dispatcher and the replay engine so their remount
-/// economics can never drift apart: among free drives, pick the first one
-/// already holding the batch's tape (remount hit, LRU affinity only),
-/// else the lowest-index empty one, else the least-recently-used loaded
-/// one (eviction; index breaks `last_used` ties). `drives` yields one
-/// `(free, holds_tape, empty, last_used)` view per drive, in drive-index
-/// order. Returns `None` when every drive is busy.
-pub fn pick_drive_slot(
-    affinity: Affinity,
-    drives: impl IntoIterator<Item = (bool, bool, bool, u64)>,
-) -> Option<(usize, MountPlan)> {
-    let mut first_empty: Option<usize> = None;
-    let mut lru: Option<(u64, usize)> = None;
-    for (i, (free, holds_tape, empty, last_used)) in drives.into_iter().enumerate() {
-        if !free {
-            continue;
-        }
-        if affinity == Affinity::Lru && holds_tape {
-            return Some((i, MountPlan::Hit));
-        }
-        if empty {
-            if first_empty.is_none() {
-                first_empty = Some(i);
-            }
-        } else if lru.map_or(true, |(t, _)| last_used < t) {
-            lru = Some((last_used, i));
-        }
-    }
-    if let Some(i) = first_empty {
-        return Some((i, MountPlan::Mount));
-    }
-    lru.map(|(_, i)| (i, MountPlan::EvictMount))
-}
-
 /// One tape job to be scheduled on a drive.
 #[derive(Debug, Clone)]
 pub struct TapeJob {
@@ -255,10 +181,11 @@ impl<'a> LibrarySim<'a> {
         let to_bits = |s: f64| (s.max(0.0) * 1e6) as u64; // µs ticks
         let from_bits = |b: u64| b as f64 / 1e6;
 
-        // Robot arms: each entry is the µs tick the arm frees. Mounts are
-        // granted in job (arrival) order — an analytic approximation; the
-        // replay engine models the exact event order, unmounts included.
-        let mut arms: Vec<u64> = vec![0; self.params.n_arms];
+        // Robot arms: the shared interval-reservation timeline
+        // ([`crate::resources::ArmTimeline`]). Mounts are granted in job
+        // (arrival) order — an analytic approximation; the replay engine
+        // models the exact event order, unmounts included.
+        let mut arms = ArmTimeline::new(self.params.n_arms);
 
         let mut results = Vec::with_capacity(jobs.len());
         let mut busy_total = 0.0;
@@ -267,16 +194,11 @@ impl<'a> LibrarySim<'a> {
             let start = from_bits(free_at).max(job.arrival_s);
             let wait = start - job.arrival_s;
 
-            // The mount serializes through the arm pool (free when
-            // n_arms == 0: the legacy unconstrained robot).
-            let arm_wait = if arms.is_empty() {
-                0.0
-            } else {
-                let i = (0..arms.len()).min_by_key(|&i| arms[i]).unwrap();
-                let begin = arms[i].max(to_bits(start));
-                arms[i] = begin + to_bits(self.params.mount_s);
-                from_bits(begin - to_bits(start))
-            };
+            // The mount serializes through the arm timeline (zero wait
+            // when n_arms == 0: the legacy unconstrained robot).
+            let arm_wait = from_bits(
+                arms.reserve(to_bits(start), to_bits(self.params.mount_s)).wait_us,
+            );
 
             // Compute the schedule and in-tape service times.
             let sched = self.policy.schedule(&job.instance);
@@ -437,33 +359,6 @@ mod tests {
         assert_eq!(Affinity::from_name("fifo"), None);
         assert_eq!(Affinity::Lru.name(), "lru");
         assert_eq!(Affinity::default(), Affinity::None);
-    }
-
-    #[test]
-    fn pick_drive_slot_preference_order() {
-        use MountPlan::*;
-        // Views: (free, holds_tape, empty, last_used), in drive order.
-        let drives = [
-            (true, false, true, 5),  // 0: free empty
-            (true, true, false, 1),  // 1: free, holds the batch's tape
-            (false, true, false, 0), // 2: busy with the tape — ineligible
-            (true, false, false, 3), // 3: free, loaded with another tape
-        ];
-        // LRU affinity: the loaded idle drive wins even though an empty
-        // drive has a lower index.
-        assert_eq!(pick_drive_slot(Affinity::Lru, drives), Some((1, Hit)));
-        // No affinity: holds_tape is ignored, the first empty drive wins.
-        assert_eq!(pick_drive_slot(Affinity::None, drives), Some((0, Mount)));
-        // No empty drive: LRU eviction by (last_used, index).
-        let loaded = [
-            (true, false, false, 7),
-            (false, false, false, 1),
-            (true, false, false, 3),
-            (true, false, false, 3),
-        ];
-        assert_eq!(pick_drive_slot(Affinity::Lru, loaded), Some((2, EvictMount)));
-        // Every drive busy: nothing to pick.
-        assert_eq!(pick_drive_slot(Affinity::Lru, [(false, true, false, 0)]), None);
     }
 
     #[test]

@@ -8,9 +8,11 @@
 //!
 //! [`library`] simulates the robotic tape library (drive pool, robot-arm
 //! mount pipeline, mount/unmount latencies) that the coordinator drives in
-//! the end-to-end example, and hosts the shared mount-pipeline vocabulary
-//! ([`Affinity`], [`MountPlan`], the [`DriveParams`] cost helpers) used by
-//! the live coordinator and the replay engine.
+//! the end-to-end example, and hosts the [`DriveParams`] cost helpers. The
+//! shared mount-pipeline vocabulary ([`Affinity`], [`MountPlan`],
+//! [`pick_drive_slot`]) lives in [`crate::resources`] — the single
+//! resource layer under the live coordinator and the replay engine — and
+//! is re-exported here for compatibility.
 
 pub mod head;
 pub mod library;

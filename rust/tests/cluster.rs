@@ -122,6 +122,7 @@ fn live_cluster_serves_closed_loop_workload() {
                 },
                 ..CoordinatorConfig::default()
             },
+            ..ClusterConfig::default()
         },
         tapes.clone(),
         Arc::new(tapesched::sched::Gs),

@@ -21,12 +21,13 @@ cargo test -q
 cargo bench --no-run
 cargo build --examples
 
-# Lint gate: clippy with -D warnings (advisory unless CLIPPY_STRICT=1,
-# mirroring the fmt gate — offline toolchains may ship without clippy).
+# Lint gate: clippy with -D warnings. Enforced by default (CLIPPY_STRICT=0
+# downgrades it to advisory for local iteration); skipped only when the
+# toolchain ships without clippy.
 if cargo clippy --version >/dev/null 2>&1; then
     if ! cargo clippy -q -- -D warnings; then
         echo "ci: clippy findings detected (run \`cargo clippy\` to inspect)" >&2
-        if [ "${CLIPPY_STRICT:-0}" = "1" ]; then
+        if [ "${CLIPPY_STRICT:-1}" = "1" ]; then
             exit 1
         fi
     fi
@@ -77,23 +78,38 @@ print(f"ci: shard smoke OK (4 shards, {reports[0]['completed']} requests)")
 EOF
 
 # Mount-pipeline gates.
-# (a) Byte-compatibility: `--arms 0 --affinity none` IS the legacy fixed
-#     mount-cost path — its JSON must be byte-identical to the same replay
-#     with the flags omitted (the PR 3 report format, whose key set the
-#     report layer only extends when the pipeline is active), and it must
-#     not leak any pipeline key.
+# (a) Byte-compatibility: explicit default flags must not move a byte —
+#     `--arms 0 --affinity none` against the flag-free default (both with
+#     exclusivity at its default), and `--exclusive-tapes off --arms 0
+#     --affinity none` IS the legacy fixed mount-cost path: its JSON must
+#     be byte-identical to the bare `--exclusive-tapes off` run (the PR 4
+#     report format, whose key set the report layer only extends when the
+#     pipeline / exclusivity are active) and must leak neither pipeline
+#     nor cartridge keys, while the exclusive default carries the new
+#     cartridge sections.
 ./target/release/tapesched replay --shards 4 --smoke --seed 7 \
     --out /tmp/replay_arm_default.json
 ./target/release/tapesched replay --shards 4 --smoke --seed 7 \
     --arms 0 --affinity none --out /tmp/replay_arm_flags.json
 cmp /tmp/replay_arm_default.json /tmp/replay_arm_flags.json
-python3 - /tmp/replay_arm_default.json <<'EOF'
+./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+    --exclusive-tapes off --out /tmp/replay_legacy_default.json
+./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+    --exclusive-tapes off --arms 0 --affinity none --out /tmp/replay_legacy_flags.json
+cmp /tmp/replay_legacy_default.json /tmp/replay_legacy_flags.json
+python3 - /tmp/replay_legacy_default.json /tmp/replay_arm_default.json <<'EOF'
 import json, sys
-r = json.load(open(sys.argv[1]))["reports"][0]
-for key in ("arms", "affinity", "remount_hits", "arm_wait", "mount_wait", "drive_wait"):
-    assert key not in r, f"legacy report leaked pipeline key {key}"
-    assert key not in r["per_shard"][0], f"legacy shard section leaked {key}"
-print("ci: arm gate (a) OK — legacy path byte-stable, no pipeline keys")
+legacy = json.load(open(sys.argv[1]))["reports"][0]
+for key in ("arms", "affinity", "remount_hits", "arm_wait", "mount_wait", "drive_wait",
+            "exclusive_tapes", "cartridge_parks", "cartridge_wait"):
+    assert key not in legacy, f"legacy report leaked key {key}"
+    assert key not in legacy["per_shard"][0], f"legacy shard section leaked {key}"
+exclusive = json.load(open(sys.argv[2]))["reports"][0]
+assert exclusive["exclusive_tapes"] is True, "default run must enforce exclusivity"
+assert "cartridge_wait" in exclusive and "cartridge_parks" in exclusive
+assert "cartridge_wait" in exclusive["per_shard"][0]
+assert "arm_wait" not in exclusive, "no pipeline keys without arms/affinity"
+print("ci: arm gate (a) OK — legacy path byte-stable, cartridge keys gated")
 EOF
 
 # (b) Fidelity: one robot arm + LRU affinity on the bursty workload. The
@@ -104,10 +120,13 @@ EOF
 #     window, so mounts MUST queue on the single arm. Hence: remount hits
 #     once tapes stay threaded, arm-wait p99 >= drive-wait p99 (= 0), and
 #     a strictly worse latency p99.9 than the unconstrained robot.
+#     (`--exclusive-tapes off` pins the PR 4 geometry: the two runs must
+#     differ by the arm bound alone, not by cartridge serialization.)
 ./target/release/tapesched replay --arrivals bursty --rate 0.1 --duration 600 \
-    --tapes 4 --drives 128 --max-batch 1 --seed 7 --out /tmp/replay_arm0.json
+    --tapes 4 --drives 128 --max-batch 1 --seed 7 --exclusive-tapes off \
+    --out /tmp/replay_arm0.json
 ./target/release/tapesched replay --arrivals bursty --rate 0.1 --duration 600 \
-    --tapes 4 --drives 128 --max-batch 1 --seed 7 \
+    --tapes 4 --drives 128 --max-batch 1 --seed 7 --exclusive-tapes off \
     --arms 1 --affinity lru --out /tmp/replay_arm1.json
 python3 - /tmp/replay_arm0.json /tmp/replay_arm1.json <<'EOF'
 import json, sys
@@ -126,6 +145,33 @@ assert armed["completed"] == base["completed"], "no request may be lost"
 print(f"ci: arm gate (b) OK — {armed['remount_hits']} hits, "
       f"arm p99 {armed['arm_wait']['p99_s']:.1f}s, "
       f"p99.9 {base['latency']['p999_s']:.1f}s -> {armed['latency']['p999_s']:.1f}s")
+EOF
+
+# Cartridge-exclusivity gate: a hot-tape workload (every request on one
+# tape, singleton batches over 8 drives) must show nonzero cartridge_wait
+# and a strictly worse latency p99.9 than the same run with
+# --exclusive-tapes off — the head-of-line effect the single-cartridge
+# constraint exists to surface. Same request count in both runs.
+./target/release/tapesched replay --arrivals poisson --rate 2 --duration 30 \
+    --tapes 1 --drives 8 --max-batch 1 --seed 7 --exclusive-tapes off \
+    --out /tmp/replay_excl_off.json
+./target/release/tapesched replay --arrivals poisson --rate 2 --duration 30 \
+    --tapes 1 --drives 8 --max-batch 1 --seed 7 \
+    --out /tmp/replay_excl_on.json
+python3 - /tmp/replay_excl_off.json /tmp/replay_excl_on.json <<'EOF'
+import json, sys
+off = json.load(open(sys.argv[1]))["reports"][0]
+on = json.load(open(sys.argv[2]))["reports"][0]
+assert "cartridge_wait" not in off, "exclusive-tapes off must stay legacy"
+assert on["exclusive_tapes"] is True
+assert on["cartridge_parks"] > 0, "the hot tape must park batches"
+assert on["cartridge_wait"]["max_s"] > 0, "parked batches must wait"
+assert on["latency"]["p999_s"] > off["latency"]["p999_s"], (
+    on["latency"]["p999_s"], off["latency"]["p999_s"])
+assert on["completed"] == off["completed"], "no request may be lost"
+print(f"ci: exclusivity gate OK — {on['cartridge_parks']} parks, "
+      f"cart wait max {on['cartridge_wait']['max_s']:.1f}s, "
+      f"p99.9 {off['latency']['p999_s']:.1f}s -> {on['latency']['p999_s']:.1f}s")
 EOF
 
 echo "ci: all gates green"
