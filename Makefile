@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test benches bench-smoke replay-smoke shard-smoke arm-smoke exclusivity-smoke examples fmt fmt-check artifacts ci clean
+.PHONY: verify build test benches bench-smoke bench-json replay-smoke shard-smoke arm-smoke exclusivity-smoke net-smoke examples fmt fmt-check artifacts ci clean
 
 verify: ## tier-1 gate: release build + full test suite
 	$(CARGO) build --release
@@ -26,8 +26,18 @@ bench-smoke:
 	$(CARGO) bench --bench algo_runtimes -- --smoke
 	$(CARGO) bench --bench coordinator -- --smoke
 	$(CARGO) bench --bench profiles -- --smoke
+	$(CARGO) bench --bench bench_json -- --smoke
 	$(CARGO) bench --bench replay -- --smoke
 	$(CARGO) bench --bench runtime_xla -- --smoke
+
+# Machine-readable benchmark summary: the four load-bearing throughput
+# numbers (dense wavefront ns/op, replay events/s, coordinator submits/s,
+# loopback RPC submits/s) as one JSON document. The bench binary runs
+# with the crate directory as its working directory, so the artifact
+# lands in rust/.
+bench-json:
+	$(CARGO) bench --bench bench_json
+	@echo "bench-json: rust/BENCH_replay.json"
 
 # Seeded 2-second virtual replay across two policies; the QoS JSON lands in
 # results/ (byte-identical for a fixed seed — diff two runs to check).
@@ -82,6 +92,21 @@ exclusivity-smoke: build
 		--tapes 1 --drives 8 --max-batch 1 --seed 7 \
 		--out results/exclusivity-smoke.json
 	@echo "exclusivity-smoke: results/exclusivity-smoke.json (vs exclusivity-base.json)"
+
+# Networked-cluster gate: the same seeded request stream through the
+# in-process Cluster and through a loopback coordinator/worker fleet must
+# agree on every virtual-time number (counters and tour costs identical;
+# only wall-clock latency — the RPC tax — may differ), and a worker cut
+# mid-stream must leave the fleet-wide drain invariant
+# `submitted = completed + shed` intact (the assertion script lives in
+# scripts/ci.sh; this target reproduces the artifacts).
+net-smoke: build
+	mkdir -p results
+	./target/release/tapesched rpc-tax --policy GS,SimpleDP --requests 240 \
+		--seed 7 --out results/rpc-tax.json
+	./target/release/tapesched rpc-tax --policy GS --requests 120 --seed 7 \
+		--kill-after 1 --out results/rpc-tax-kill.json
+	@echo "net-smoke: results/rpc-tax.json (vs rpc-tax-kill.json)"
 
 examples:
 	$(CARGO) build --examples

@@ -1,0 +1,194 @@
+//! Bench — machine-readable summary: one JSON document
+//! (`BENCH_replay.json`) carrying the four load-bearing throughput
+//! numbers of the stack, one per layer seam:
+//!
+//! - `dense_wavefront` — ns per uncached SimpleDP dense-table fill (the
+//!   algorithmic kernel; deliberately `simpledp_dense::dense_cost_into`,
+//!   NOT the runtime dense backend, whose per-thread memo cache would
+//!   turn this into a cache-hit benchmark).
+//! - `replay_events` — virtual-replay completions per wall second (the
+//!   measurement engine).
+//! - `coordinator_submits` — closed-loop submits per wall second into an
+//!   in-process `Coordinator` (the serving seam as a function call).
+//! - `loopback_rpc_submits` — the same closed loop through a
+//!   loopback-networked coordinator/worker fleet (the serving seam as a
+//!   framed TCP round trip; the ratio to the previous number is the RPC
+//!   tax in throughput terms).
+//!
+//! `make bench-json` runs this; `--smoke` (or `TAPESCHED_SMOKE=1`) keeps
+//! it to seconds.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tapesched::bench::{bench, smoke_requested, BenchConfig};
+use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use tapesched::dataset::{generate_dataset, GeneratorConfig};
+use tapesched::model::Tape;
+use tapesched::net::{CoordinatorServerConfig, LoopbackFleet};
+use tapesched::replay::{
+    drive_closed_loop, simulate, LoopMode, PoissonArrivals, ReplayConfig, RequestMix,
+};
+use tapesched::sched::simpledp_dense::{dense_cost_into, DenseScratch};
+use tapesched::sched::{scheduler_by_name, Gs};
+use tapesched::sim::{Affinity, DriveParams};
+
+struct Entry {
+    name: &'static str,
+    value: f64,
+    unit: &'static str,
+}
+
+/// One giant batching window flushed at drain: submit throughput then
+/// measures the submit/batcher path itself, and because the in-process
+/// and loopback runs share this config, their ratio isolates the wire.
+fn drain_flush_cfg(n_drives: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        n_drives,
+        batcher: BatcherConfig {
+            window: Duration::from_secs(3_600),
+            ..BatcherConfig::default()
+        },
+        drive: DriveParams::default(),
+        affinity: Affinity::None,
+        exclusive_tapes: false,
+    }
+}
+
+fn main() {
+    let smoke = smoke_requested();
+    let mut entries: Vec<Entry> = Vec::new();
+
+    let ds = if smoke {
+        generate_dataset(&GeneratorConfig {
+            n_tapes: 8,
+            nf: (40, 60.0, 70.0, 150),
+            nreq: (10, 25.0, 30.0, 60),
+            n: (20, 60.0, 70.0, 180),
+            ..Default::default()
+        })
+    } else {
+        generate_dataset(&GeneratorConfig { n_tapes: 16, ..Default::default() })
+    };
+    let catalog: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
+
+    // 1. The algorithmic kernel: one dense SimpleDP wavefront fill.
+    {
+        let u = ds.avg_segment_size();
+        let inst = ds.tapes[0].instance(u).expect("generated tape must yield an instance");
+        let mut scratch = DenseScratch::default();
+        let cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
+        let r = bench("dense_wavefront", &cfg, || dense_cost_into(&inst, &mut scratch));
+        let ns = r.median * 1e9;
+        println!("    → dense_wavefront: {ns:.0} ns/op ({} iters)", r.iters);
+        entries.push(Entry { name: "dense_wavefront", value: ns, unit: "ns/op" });
+    }
+
+    // 2. The measurement engine: virtual replay, completions per wall s.
+    {
+        let cfg = ReplayConfig {
+            n_drives: 8,
+            batcher: BatcherConfig {
+                window: Duration::from_millis(100),
+                max_batch: 256,
+                ..BatcherConfig::default()
+            },
+            drive: DriveParams::default(),
+            mode: LoopMode::Open,
+            retry_backoff_s: 0.01,
+            ..ReplayConfig::default()
+        };
+        let (rate, duration) = if smoke { (50.0, 2.0) } else { (100.0, 60.0) };
+        let policy = scheduler_by_name("SimpleDP").unwrap();
+        let mut model =
+            PoissonArrivals::new(RequestMix::new(&catalog), rate, duration, 7);
+        let wall = Instant::now();
+        let out = simulate(&cfg, &catalog, policy.as_ref(), &mut model);
+        let s = wall.elapsed().as_secs_f64().max(1e-9);
+        assert!(out.stats.completed > 0, "replay must serve requests");
+        let eps = out.stats.completed as f64 / s;
+        println!(
+            "    → replay_events: {:.0} events/s ({} completions in {s:.3} wall s)",
+            eps, out.stats.completed
+        );
+        entries.push(Entry { name: "replay_events", value: eps, unit: "events/s" });
+    }
+
+    // 3 + 4. The serving seam, in-process vs over the wire. Same config,
+    // same request count, same closed loop; the driver polls in-flight
+    // before every submit, so the loopback number pays two framed round
+    // trips per request (MetricsPull + Submit) — that is the seam's
+    // honest per-request cost, not an artifact.
+    let n_requests: u64 = if smoke { 200 } else { 5_000 };
+    {
+        let coord = Coordinator::start(drain_flush_cfg(4), catalog.clone(), Arc::new(Gs));
+        let mut model =
+            PoissonArrivals::new(RequestMix::new(&catalog), 1_000.0, f64::INFINITY, 7);
+        let wall = Instant::now();
+        let stats = drive_closed_loop(
+            &coord,
+            &catalog,
+            &mut model,
+            n_requests,
+            Duration::from_millis(1),
+            n_requests,
+        );
+        let s = wall.elapsed().as_secs_f64().max(1e-9);
+        assert_eq!(stats.submitted, n_requests);
+        let (_completions, m) = coord.finish();
+        assert_eq!(m.completed + m.shed, n_requests);
+        let sps = n_requests as f64 / s;
+        println!("    → coordinator_submits: {sps:.0} submits/s ({n_requests} in {s:.3} wall s)");
+        entries.push(Entry { name: "coordinator_submits", value: sps, unit: "submits/s" });
+    }
+    {
+        let fleet = LoopbackFleet::spawn(
+            CoordinatorServerConfig {
+                n_shards: 1,
+                vnodes: 64,
+                shard: drain_flush_cfg(4),
+                policy: "GS".to_string(),
+                kill: None,
+            },
+            catalog.clone(),
+        )
+        .expect("spawn loopback fleet");
+        let client = fleet.client().expect("connect loopback client");
+        let mut model =
+            PoissonArrivals::new(RequestMix::new(&catalog), 1_000.0, f64::INFINITY, 7);
+        let wall = Instant::now();
+        let stats = drive_closed_loop(
+            &client,
+            &catalog,
+            &mut model,
+            n_requests,
+            Duration::from_millis(1),
+            n_requests,
+        );
+        let s = wall.elapsed().as_secs_f64().max(1e-9);
+        assert_eq!(stats.submitted, n_requests);
+        let (_completions, m) = client.drain().expect("drain loopback fleet");
+        assert_eq!(m.completed + m.shed, n_requests);
+        let _ = fleet.join();
+        let sps = n_requests as f64 / s;
+        println!("    → loopback_rpc_submits: {sps:.0} submits/s ({n_requests} in {s:.3} wall s)");
+        entries.push(Entry { name: "loopback_rpc_submits", value: sps, unit: "submits/s" });
+    }
+
+    let body: Vec<String> = entries
+        .iter()
+        .map(|e| {
+            format!(
+                "    {{\"name\": \"{}\", \"value\": {:.6}, \"unit\": \"{}\"}}",
+                e.name, e.value, e.unit
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"schema\": \"tapesched-bench-v1\",\n  \"smoke\": {smoke},\n  \
+         \"benches\": [\n{}\n  ]\n}}\n",
+        body.join(",\n")
+    );
+    std::fs::write("BENCH_replay.json", &json).expect("write BENCH_replay.json");
+    println!("wrote BENCH_replay.json ({} benches)", entries.len());
+}

@@ -1,0 +1,292 @@
+//! The shard-addressing seam: one trait for "a shard that serves routed
+//! submits", whether it lives in this process or across a TCP connection.
+//!
+//! [`Cluster`](super::Cluster) predates this seam and keeps its concrete
+//! `Coordinator` map because live rebalancing (add/remove shard, tape
+//! rehoming) needs coordinator-specific operations. Everything the
+//! *networked* topology needs, though — route a submit by the consistent-
+//! hash ring, pull a [`MetricsSnapshot`], drain for completions — fits
+//! behind [`ShardBackend`], so the coordinator process (`net::server`)
+//! routes over a [`ShardSet`] whose backends are TCP worker handles, and
+//! tests can mix [`LocalShard`]s (a real in-process `Coordinator`) with
+//! remote ones without caring which is which.
+//!
+//! [`ShardSet`] implements [`RequestSink`], so the closed-loop driver
+//! (`replay::drive_closed_loop`) feeds a backend-agnostic fleet exactly
+//! like it feeds a single `Coordinator` or the in-process `Cluster`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{
+    Completion, Coordinator, MetricsSnapshot, ReadRequest, SubmitError,
+};
+use crate::model::Tape;
+use crate::replay::RequestSink;
+
+use super::metrics::ShardLoad;
+use super::ring::HashRing;
+
+/// One shard, local or remote: the minimal contract the routing layer
+/// needs. `drain` is terminal — the first call returns the shard's
+/// completions, later calls return an empty list with the final snapshot
+/// (so a `ShardSet` drain is safe even if a caller already drained one
+/// shard directly).
+pub trait ShardBackend: Send + Sync {
+    /// Submit under the coordinator's contract (including `Busy`
+    /// backpressure); [`SubmitError::ShardDown`] when the shard has no
+    /// live server behind it.
+    fn submit(&self, req: ReadRequest) -> Result<(), SubmitError>;
+
+    /// Current metrics snapshot (for a dead remote shard: the synthesized
+    /// accounting of its lost work).
+    fn metrics(&self) -> MetricsSnapshot;
+
+    /// Stop accepting, flush, and hand back completions + final metrics.
+    fn drain(&self) -> (Vec<Completion>, MetricsSnapshot);
+}
+
+enum LocalState {
+    Live(Coordinator),
+    Drained(MetricsSnapshot),
+}
+
+/// A [`ShardBackend`] wrapping an in-process [`Coordinator`] — the
+/// `Local(Coordinator)` arm of the seam, used by loopback tests and as
+/// the reference behavior remote shards must match.
+pub struct LocalShard {
+    state: Mutex<LocalState>,
+}
+
+impl LocalShard {
+    pub fn new(coordinator: Coordinator) -> LocalShard {
+        LocalShard { state: Mutex::new(LocalState::Live(coordinator)) }
+    }
+}
+
+impl ShardBackend for LocalShard {
+    fn submit(&self, req: ReadRequest) -> Result<(), SubmitError> {
+        match &*self.state.lock().unwrap() {
+            LocalState::Live(c) => c.submit(req),
+            LocalState::Drained(_) => Err(SubmitError::Stopping),
+        }
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        match &*self.state.lock().unwrap() {
+            LocalState::Live(c) => c.metrics(),
+            LocalState::Drained(m) => m.clone(),
+        }
+    }
+
+    fn drain(&self) -> (Vec<Completion>, MetricsSnapshot) {
+        let mut state = self.state.lock().unwrap();
+        // Swap in a placeholder snapshot first so a poisoned finish can't
+        // leave the state torn; replace it with the real one after.
+        match std::mem::replace(&mut *state, LocalState::Drained(MetricsSnapshot::default()))
+        {
+            LocalState::Live(c) => {
+                let (completions, m) = c.finish();
+                *state = LocalState::Drained(m.clone());
+                (completions, m)
+            }
+            LocalState::Drained(m) => {
+                *state = LocalState::Drained(m.clone());
+                (Vec::new(), m)
+            }
+        }
+    }
+}
+
+/// Split a catalog into per-shard partitions by ring routing — the same
+/// placement rule [`Cluster::start`](super::Cluster::start) applies, so a
+/// networked fleet and an in-process cluster over the same catalog and
+/// ring agree on which shard owns every tape.
+pub fn partition_catalog(
+    ring: &HashRing,
+    tapes: impl IntoIterator<Item = Tape>,
+) -> BTreeMap<usize, Vec<Tape>> {
+    let mut parts: BTreeMap<usize, Vec<Tape>> =
+        ring.shard_ids().iter().map(|&id| (id, Vec::new())).collect();
+    for tape in tapes {
+        let shard = ring.route(&tape.name);
+        parts.entry(shard).or_default().push(tape);
+    }
+    parts
+}
+
+/// The extracted routing layer: a consistent-hash ring over abstract
+/// [`ShardBackend`]s with per-shard routing counters. This is the shape
+/// the networked coordinator serves clients through.
+pub struct ShardSet {
+    ring: HashRing,
+    shards: BTreeMap<usize, Arc<dyn ShardBackend>>,
+    routed: BTreeMap<usize, AtomicU64>,
+}
+
+impl ShardSet {
+    /// An empty set over `ring`; attach one backend per ring shard id
+    /// with [`ShardSet::attach`] before submitting.
+    pub fn new(ring: HashRing) -> ShardSet {
+        ShardSet { ring, shards: BTreeMap::new(), routed: BTreeMap::new() }
+    }
+
+    /// Attach (or replace) the backend serving shard `id`. The routed
+    /// counter survives replacement — routing history belongs to the
+    /// shard, not to whichever process currently serves it.
+    pub fn attach(&mut self, id: usize, backend: Arc<dyn ShardBackend>) {
+        assert!(
+            self.ring.shard_ids().contains(&id),
+            "attaching backend for shard {id} not on the ring"
+        );
+        self.shards.insert(id, backend);
+        self.routed.entry(id).or_insert_with(|| AtomicU64::new(0));
+    }
+
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard a tape routes to.
+    pub fn route(&self, tape: &str) -> usize {
+        self.ring.route(tape)
+    }
+
+    /// Route a submit to its owning shard.
+    pub fn submit(&self, req: ReadRequest) -> Result<(), SubmitError> {
+        let id = self.ring.route(&req.tape);
+        let shard = self.shards.get(&id).expect("every ring shard has a backend");
+        self.routed[&id].fetch_add(1, Ordering::Relaxed);
+        shard.submit(req)
+    }
+
+    /// Per-shard loads (fresh snapshots), in shard-id order.
+    pub fn loads(&self) -> Vec<ShardLoad> {
+        self.shards
+            .iter()
+            .map(|(&id, shard)| ShardLoad {
+                shard: id,
+                routed: self.routed[&id].load(Ordering::Relaxed),
+                metrics: shard.metrics(),
+            })
+            .collect()
+    }
+
+    /// Drain every shard: completions merged and sorted by request id
+    /// (deterministic across shard interleavings), plus the final loads.
+    pub fn drain(&self) -> (Vec<Completion>, Vec<ShardLoad>) {
+        let mut completions = Vec::new();
+        let mut loads = Vec::new();
+        for (&id, shard) in &self.shards {
+            let (cs, m) = shard.drain();
+            completions.extend(cs);
+            loads.push(ShardLoad {
+                shard: id,
+                routed: self.routed[&id].load(Ordering::Relaxed),
+                metrics: m,
+            });
+        }
+        completions.sort_by_key(|c| c.request_id);
+        (completions, loads)
+    }
+}
+
+impl RequestSink for ShardSet {
+    fn submit_request(&self, req: ReadRequest) -> Result<(), SubmitError> {
+        self.submit(req)
+    }
+
+    fn in_flight(&self) -> u64 {
+        // Shed requests never complete; a dead shard's synthesized
+        // snapshot sheds everything it had accepted, so the fleet-wide
+        // in-flight level cannot wedge a gating caller.
+        self.shards
+            .values()
+            .map(|s| {
+                let m = s.metrics();
+                m.submitted.saturating_sub(m.completed + m.shed)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, CoordinatorConfig};
+    use crate::sched::Gs;
+    use std::time::Duration;
+
+    fn local_shard(tapes: &[Tape]) -> Arc<LocalShard> {
+        Arc::new(LocalShard::new(Coordinator::start(
+            CoordinatorConfig {
+                n_drives: 2,
+                batcher: BatcherConfig {
+                    window: Duration::from_millis(2),
+                    max_batch: 64,
+                    ..BatcherConfig::default()
+                },
+                ..CoordinatorConfig::default()
+            },
+            tapes.iter().cloned(),
+            Arc::new(Gs),
+        )))
+    }
+
+    #[test]
+    fn shard_set_routes_serves_and_drains_deterministically() {
+        let tapes: Vec<Tape> =
+            (0..6).map(|i| Tape::from_sizes(&format!("TAPE{i:03}"), &[1_000; 20])).collect();
+        let ring = HashRing::new(2, 64);
+        let parts = partition_catalog(&ring, tapes.iter().cloned());
+        assert_eq!(parts.keys().copied().collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(parts.values().map(|p| p.len()).sum::<usize>(), tapes.len());
+
+        let mut set = ShardSet::new(ring);
+        for (&id, part) in &parts {
+            set.attach(id, local_shard(part));
+        }
+        for (i, tape) in tapes.iter().cycle().take(60).enumerate() {
+            let req = ReadRequest {
+                id: i as u64,
+                tape: tape.name.clone(),
+                file_index: i % 20,
+            };
+            assert!(set.submit(req).is_ok());
+        }
+        let loads = set.loads();
+        assert_eq!(loads.len(), 2);
+        assert_eq!(loads.iter().map(|l| l.routed).sum::<u64>(), 60);
+        let (completions, final_loads) = set.drain();
+        assert_eq!(completions.len(), 60);
+        assert!(completions.windows(2).all(|w| w[0].request_id < w[1].request_id));
+        assert_eq!(final_loads.iter().map(|l| l.metrics.completed).sum::<u64>(), 60);
+        assert_eq!(set.in_flight(), 0);
+        // Terminal: draining again yields no completions, and submits are
+        // refused as stopping.
+        let (again, _) = set.drain();
+        assert!(again.is_empty());
+        assert_eq!(
+            set.submit(ReadRequest { id: 999, tape: tapes[0].name.clone(), file_index: 0 }),
+            Err(SubmitError::Stopping)
+        );
+    }
+
+    #[test]
+    fn partition_agrees_with_ring_routing() {
+        let ring = HashRing::new(3, 32);
+        let tapes: Vec<Tape> =
+            (0..20).map(|i| Tape::from_sizes(&format!("T{i}"), &[100])).collect();
+        let parts = partition_catalog(&ring, tapes.iter().cloned());
+        for (id, part) in &parts {
+            for t in part {
+                assert_eq!(ring.route(&t.name), *id);
+            }
+        }
+    }
+}

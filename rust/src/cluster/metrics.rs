@@ -76,6 +76,64 @@ impl ClusterMetricsSnapshot {
     }
 }
 
+/// Merge two [`MetricsSnapshot`]s of the *same* shard into one — the
+/// networked coordinator's tool for stitching a shard's history across
+/// worker eras (the carried accounting of a dead worker + whatever its
+/// replacement has served since; see `net::server`).
+///
+/// Counters add; means combine weighted by their own denominators
+/// (latency/service by `completed`, sched by `batches`, cartridge wait by
+/// `cartridge_parks`, arm wait by `arm_ops`); maxes take the worst side.
+/// Percentiles cannot be merged without the underlying samples, so the
+/// side with more completions keeps its ladder — a documented
+/// approximation, same reason [`rollup`] refuses to aggregate them
+/// fleet-wide.
+pub fn merge_snapshots(a: &MetricsSnapshot, b: &MetricsSnapshot) -> MetricsSnapshot {
+    let completed = a.completed + b.completed;
+    let batches = a.batches + b.batches;
+    let cartridge_parks = a.cartridge_parks + b.cartridge_parks;
+    let arm_ops = a.arm_ops + b.arm_ops;
+    let wmean = |ma: f64, wa: u64, mb: f64, wb: u64| -> f64 {
+        let w = wa + wb;
+        if w == 0 {
+            0.0
+        } else {
+            (ma * wa as f64 + mb * wb as f64) / w as f64
+        }
+    };
+    let pct_side = if b.completed > a.completed { b } else { a };
+    MetricsSnapshot {
+        submitted: a.submitted + b.submitted,
+        completed,
+        rejected: a.rejected + b.rejected,
+        shed: a.shed + b.shed,
+        batches,
+        remount_hits: a.remount_hits + b.remount_hits,
+        remount_misses: a.remount_misses + b.remount_misses,
+        cartridge_parks,
+        mean_cartridge_wait_s: wmean(
+            a.mean_cartridge_wait_s,
+            a.cartridge_parks,
+            b.mean_cartridge_wait_s,
+            b.cartridge_parks,
+        ),
+        max_cartridge_wait_s: a.max_cartridge_wait_s.max(b.max_cartridge_wait_s),
+        arm_ops,
+        mean_arm_wait_s: wmean(a.mean_arm_wait_s, a.arm_ops, b.mean_arm_wait_s, b.arm_ops),
+        max_arm_wait_s: a.max_arm_wait_s.max(b.max_arm_wait_s),
+        mean_latency_s: wmean(a.mean_latency_s, a.completed, b.mean_latency_s, b.completed),
+        mean_service_s: wmean(a.mean_service_s, a.completed, b.mean_service_s, b.completed),
+        mean_sched_s_per_batch: wmean(
+            a.mean_sched_s_per_batch,
+            a.batches,
+            b.mean_sched_s_per_batch,
+            b.batches,
+        ),
+        p50_latency_s: pct_side.p50_latency_s,
+        p99_latency_s: pct_side.p99_latency_s,
+    }
+}
+
 /// Roll per-shard loads up into one [`ClusterMetricsSnapshot`].
 pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
     shards.sort_by_key(|s| s.shard);
@@ -197,6 +255,27 @@ mod tests {
         assert_eq!(snap.max_shard_completed, 30);
         assert_eq!(snap.min_shard_completed, 10);
         assert!((snap.imbalance_ratio() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_counters_weights_means_and_keeps_the_bigger_ladder() {
+        let a = m(30, 30, 10, 4.0, 2.0);
+        let b = m(10, 10, 2, 1.0, 0.5);
+        let merged = merge_snapshots(&a, &b);
+        assert_eq!(merged.submitted, 40);
+        assert_eq!(merged.completed, 40);
+        assert_eq!(merged.rejected, 12);
+        assert_eq!(merged.batches, 15 + 5);
+        assert_eq!(merged.cartridge_parks, 3 + 1);
+        assert_eq!(merged.arm_ops, 6 + 2);
+        assert!((merged.mean_latency_s - 3.25).abs() < 1e-12);
+        assert!((merged.mean_service_s - 1.625).abs() < 1e-12);
+        assert!((merged.max_cartridge_wait_s - 4.0).abs() < 1e-12);
+        // `a` has more completions: its percentile ladder survives.
+        assert_eq!(merged.p50_latency_s, 4.0);
+        // Merging the zero snapshot is the identity.
+        assert_eq!(merge_snapshots(&a, &MetricsSnapshot::default()), a);
+        assert_eq!(merge_snapshots(&MetricsSnapshot::default(), &a), a);
     }
 
     #[test]

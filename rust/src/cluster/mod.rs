@@ -27,20 +27,26 @@
 //!
 //! - [`ring`] — the deterministic consistent-hash ring (virtual nodes,
 //!   bounded key movement on shard add/remove).
+//! - [`backend`] — the shard-addressing seam: [`ShardBackend`] abstracts
+//!   "a shard" so it can be an in-process coordinator ([`LocalShard`]) or
+//!   a TCP worker handle (`net::server`), routed over a [`ShardSet`].
 //! - [`router`] — [`Cluster`]: N independent coordinators, per-shard
 //!   `SubmitError::Busy` backpressure, live add/remove for rebalancing.
 //! - [`metrics`] — per-shard loads + routing counters rolled up into one
-//!   fleet snapshot.
+//!   fleet snapshot; [`merge_snapshots`] stitches one shard's history
+//!   across worker eras.
 //!
 //! The replay engine mirrors this layout in virtual time
 //! ([`crate::replay`] with `ReplayConfig::n_shards > 1`): one batcher and
 //! one simulated drive pool per shard behind the same ring, producing the
 //! per-shard QoS breakdown in [`crate::replay::QosReport`].
 
+pub mod backend;
 pub mod metrics;
 pub mod ring;
 pub mod router;
 
-pub use metrics::{rollup, ClusterMetricsSnapshot, ShardLoad};
+pub use backend::{partition_catalog, LocalShard, ShardBackend, ShardSet};
+pub use metrics::{merge_snapshots, rollup, ClusterMetricsSnapshot, ShardLoad};
 pub use ring::HashRing;
 pub use router::{Cluster, ClusterConfig};

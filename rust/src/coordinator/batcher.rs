@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 use crate::sim::{DriveParams, SimOutcome};
 
 /// Batching policy knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BatcherConfig {
     /// A batch is dispatchable once this much time passed since its first
     /// request (lets more requests for the same tape coalesce).

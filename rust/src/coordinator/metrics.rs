@@ -41,7 +41,11 @@ pub struct SharedMetrics {
 }
 
 /// Point-in-time snapshot of all metrics.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Default` is the all-zero snapshot — what a shard that never accepted
+/// a request reports. The networked coordinator synthesizes snapshots
+/// from it for dead workers (see `net::server`).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,

@@ -71,6 +71,13 @@ pub enum SubmitError {
     /// The request was shed; the caller may retry once the dispatcher
     /// drains the tape.
     Busy,
+    /// The shard that owns this tape has no live server behind it (a
+    /// networked worker died and has not rejoined). Unlike `Busy` this is
+    /// not retryable on a timescale the submitter controls: the request
+    /// was never accepted anywhere. Only the networked cluster paths
+    /// (`net::server`) produce this; an in-process `Coordinator` never
+    /// does.
+    ShardDown,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -80,6 +87,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::BadFileIndex => write!(f, "file index out of range"),
             SubmitError::Stopping => write!(f, "service is stopping"),
             SubmitError::Busy => write!(f, "tape backlog full, retry later"),
+            SubmitError::ShardDown => write!(f, "shard down, request not accepted"),
         }
     }
 }
@@ -87,7 +95,7 @@ impl std::fmt::Display for SubmitError {
 impl std::error::Error for SubmitError {}
 
 /// A served request with its measured latencies.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Completion {
     pub request_id: u64,
     pub tape: String,
@@ -98,7 +106,7 @@ pub struct Completion {
 }
 
 /// Coordinator configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CoordinatorConfig {
     /// Number of drive workers (48 in the IN2P3 library).
     pub n_drives: usize,
@@ -185,6 +193,12 @@ struct Job {
     /// How the batch landed on its drive — drives the worker's robot-arm
     /// reservation (hits need no arm).
     plan: MountPlan,
+    /// On an eviction with exclusive tapes: the cartridge the placement
+    /// stage began evicting. The worker holds it through the arm
+    /// reservation and releases it unthreaded once the arm op clears —
+    /// mirroring the replay engine, where the evict-unmount frees the
+    /// cartridge at the unmount-done event, not at placement.
+    evicted: Option<String>,
 }
 
 impl Coordinator {
@@ -466,19 +480,25 @@ fn place_and_send(
     // batch lands on (affinity-first), claiming the cartridge in the
     // same critical section. Workers signal `resource_freed` after every
     // batch, so this cannot wedge while any drive is still serving.
-    let (drive_idx, plan) = {
+    let (drive_idx, plan, evicted_hold) = {
         let mut res = shared.resources.lock().unwrap();
         loop {
             if let Some((i, plan)) = res.drives.pick(cfg.affinity, &batch.tape) {
                 res.tick += 1;
                 let tick = res.tick;
+                let mut evicted_hold = None;
                 if cfg.exclusive_tapes {
                     if plan == MountPlan::EvictMount {
-                        // The live path has no timed unmount: the evicted
-                        // cartridge returns to its shelf immediately
-                        // (waiters for it become dispatchable).
+                        // The evict-unmount owns the outgoing cartridge
+                        // until the worker's arm reservation clears
+                        // (`begin_evict` → the worker releases it
+                        // unthreaded) — the same event order as the
+                        // replay engine, so waiters for the evicted tape
+                        // cannot dispatch while its cartridge is still in
+                        // the robot's hands.
                         if let Some(evicted) = res.drives.drive(i).loaded.clone() {
-                            res.ledger.release_unthreaded(&evicted);
+                            res.ledger.begin_evict(&evicted);
+                            evicted_hold = Some(evicted);
                         }
                     }
                     res.ledger.acquire(&batch.tape, i);
@@ -489,7 +509,7 @@ fn place_and_send(
                 };
                 res.drives.begin_cycle(i, loaded, tick, 0);
                 res.drives.set_stage(i, DriveStage::Executing);
-                break (i, plan);
+                break (i, plan, evicted_hold);
             }
             res = shared.resource_freed.wait(res).unwrap();
         }
@@ -505,7 +525,9 @@ fn place_and_send(
         }
     }
     let mount_charge_s = cfg.drive.mount_charge_s(plan);
-    txs[drive_idx].send(Job { batch, instance, mount_charge_s, plan }).is_ok()
+    txs[drive_idx]
+        .send(Job { batch, instance, mount_charge_s, plan, evicted: evicted_hold })
+        .is_ok()
 }
 
 fn worker_loop(
@@ -517,7 +539,7 @@ fn worker_loop(
 ) {
     let drive = cfg.drive;
     loop {
-        let job = match rx.recv() {
+        let mut job = match rx.recv() {
             Ok(j) => j,
             Err(_) => break, // dispatcher closed the channel
         };
@@ -539,6 +561,16 @@ fn worker_loop(
             if r.wait_us > 0 {
                 std::thread::sleep(Duration::from_micros(r.wait_us));
             }
+        }
+        // The evict-unmount has cleared the robot: the outgoing cartridge
+        // returns to its shelf and its waiters become dispatchable. The
+        // unmount *duration* stays a charge (part of `mount_charge_s`),
+        // not a sleep — only the hold is timed, matching the replay
+        // engine's unmount-done event.
+        if let Some(evicted) = job.evicted.take() {
+            shared.resources.lock().unwrap().ledger.release_unthreaded(&evicted);
+            shared.resource_freed.notify_all();
+            shared.wakeup.notify_all();
         }
         let policy_t0 = Instant::now();
         let schedule = policy.schedule(&job.instance);
@@ -951,6 +983,50 @@ mod tests {
         let (_, m) = c.finish();
         assert_eq!(m.arm_ops, 0);
         assert_eq!(m.max_arm_wait_s, 0.0);
+    }
+
+    #[test]
+    fn evict_hold_parks_waiters_until_the_unmount_clears_the_robot() {
+        // One drive, one arm, alternating tapes, one request per batch.
+        // Batch 1 mounts TAPE001 (arm busy [0, 0.2s] as a reservation, no
+        // wait). Batch 2 (TAPE002) evicts TAPE001: the placement stage
+        // begins the evict, and the worker must wait ~0.2s for the arm —
+        // the evicted cartridge is in the robot's hands for that span.
+        // Batch 3 (TAPE001 again) pops microseconds later, finds its
+        // cartridge mid-evict, and parks: before the timed hold it would
+        // have dispatched instantly against a cartridge still physically
+        // in the drive.
+        let mut config = cfg();
+        config.n_drives = 1;
+        config.batcher.window = Duration::from_secs(3600);
+        config.batcher.max_batch = 1;
+        config.affinity = Affinity::Lru;
+        config.drive.mount_s = 0.2;
+        config.drive.unmount_s = 0.2;
+        config.drive.n_arms = 1;
+        let c = Coordinator::start(config, catalog(), Arc::new(Gs));
+        for (i, tape) in ["TAPE001", "TAPE002", "TAPE001"].iter().enumerate() {
+            assert!(c
+                .submit(ReadRequest {
+                    id: i as u64,
+                    tape: (*tape).into(),
+                    file_index: i,
+                })
+                .is_ok());
+        }
+        let (completions, m) = c.finish();
+        assert_eq!(completions.len(), 3, "the hold must never wedge the drain");
+        assert_eq!(m.completed, 3);
+        assert!(
+            m.cartridge_parks >= 1,
+            "the third batch must park behind the evict-unmount (parks = {})",
+            m.cartridge_parks
+        );
+        assert!(
+            m.max_cartridge_wait_s > 0.05,
+            "the parked batch's wait must cover the arm-queued unmount (waited {})",
+            m.max_cartridge_wait_s
+        );
     }
 
     #[test]

@@ -38,6 +38,9 @@
 //! - [`coordinator`] — multi-threaded request-serving service (one library).
 //! - [`cluster`] — multi-library sharding: consistent-hash routing over N
 //!   coordinators, per-shard backpressure, cluster metrics rollup.
+//! - [`net`] — the networked cluster: a dependency-free length-prefixed
+//!   binary protocol over `TcpStream`, the coordinator/worker processes
+//!   speaking it, and the `RequestSink` client that drives a remote fleet.
 //! - [`replay`] — virtual-time workload replay: arrival models, the
 //!   discrete-event engine, and QoS percentile reports.
 //! - [`runtime`] — pluggable SimpleDP backends: pure-Rust dense (default)
@@ -53,6 +56,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod dataset;
 pub mod model;
+pub mod net;
 pub mod replay;
 pub mod resources;
 pub mod runtime;

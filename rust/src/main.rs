@@ -9,10 +9,14 @@
 //! - `solve`          — run one algorithm on one tape of a dataset
 //! - `serve`          — run the coordinator serving demo (wall clock)
 //! - `replay`         — virtual-time workload replay with QoS JSON reports
+//! - `coordinator`    — networked fleet: listen for workers + clients (TCP)
+//! - `worker`         — networked fleet: serve one shard for a coordinator
+//! - `rpc-tax`        — in-process vs loopback-networked QoS comparison
 //!
 //! Run `tapesched <cmd> --help` equivalent: flags are documented below in
 //! each handler (and in README.md).
 
+use std::net::TcpListener;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
@@ -21,21 +25,24 @@ use tapesched::analysis::{
     cartridge_summary, mount_summary, qos_comparison, report::run_evaluation, shard_summary,
 };
 use tapesched::cli::Args;
-use tapesched::cluster::{Cluster, ClusterConfig};
-use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use tapesched::cluster::{Cluster, ClusterConfig, ClusterMetricsSnapshot, HashRing};
+use tapesched::coordinator::{BatcherConfig, Completion, Coordinator, CoordinatorConfig};
 use tapesched::dataset::{
     dataset_stats, generate_dataset, load_dataset, read_trace_file, synth_catalog,
     synth_raw_log, write_dataset, Dataset, GeneratorConfig,
 };
 use tapesched::model::{virtual_lb, Tape};
+use tapesched::net::{CoordinatorServerConfig, LoopbackFleet, RemoteCluster};
 use tapesched::replay::{
     drive_closed_loop, reports_json, run_replay, ArrivalModel, BurstyArrivals,
-    DiurnalArrivals, LoopMode, PoissonArrivals, ReplayConfig, RequestMix, TraceArrivals,
+    DiurnalArrivals, LiveDriveStats, LoopMode, PoissonArrivals, ReplayConfig, RequestMix,
+    TraceArrivals,
 };
 use tapesched::runtime::{backend_by_name, dense_cache_stats, BackendPolicy};
 use tapesched::sched::{paper_schedulers, scheduler_by_name, Scheduler};
 use tapesched::sim::{evaluate, Affinity, DriveParams};
 use tapesched::util::rng::Rng;
+use tapesched::util::stats::percentile_sorted;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -53,6 +60,9 @@ fn main() {
         "draw" => cmd_draw(&args),
         "serve" => cmd_serve(&args),
         "replay" => cmd_replay(&args),
+        "coordinator" => cmd_coordinator(&args),
+        "worker" => cmd_worker(&args),
+        "rpc-tax" => cmd_rpc_tax(&args),
         "help" | "--help" | "-h" => usage(),
         other => {
             eprintln!("error: unknown command `{other}`");
@@ -87,6 +97,15 @@ COMMANDS:
                   [--backend dense|xla] [--shards N] [--vnodes K]
                   [--arms N] [--affinity none|lru] [--exclusive-tapes on|off]
                   [--trace-file PATH] [--smoke]
+  coordinator     [--listen ADDR] [--shards N] [--policy NAME] [--drives N]
+                  [--seed N] [--tapes N] [--data DIR] [--vnodes K]
+                  [--window-ms N] [--max-batch N] [--backlog N]
+                  [--affinity none|lru] [--arms N] [--exclusive-tapes on|off]
+                  [--kill-shard I --kill-after M]
+  worker          --connect ADDR
+  rpc-tax         [--policy NAME[,NAME…]] [--shards N] [--drives N]
+                  [--vnodes K] [--requests N] [--seed N] [--tapes N]
+                  [--data DIR] [--out FILE.json] [--kill-after M]
   help
 
 Without --data, commands use the built-in calibrated generator (seed 0x12P32021).
@@ -111,7 +130,19 @@ shard); --exclusive-tapes off with --arms 0 --affinity none reproduces
 the legacy replay byte for byte. For serve, --arms N bounds the live
 robot: each mount/unmount reserves an interval on a wall-clock arm
 timeline, workers sleep to the reservation edge, and arm-wait /
-cartridge-wait surface in the metrics. --trace-file replays an on-disk timestamped log
+cartridge-wait surface in the metrics.
+`coordinator` + `worker` split the cluster across processes: the
+coordinator owns the ring and routes client submits to TCP workers, each
+worker runs one shard's real Coordinator over its ring partition of the
+catalog (wire format: rust/README.md). `serve --connect ADDR` / `replay
+--connect ADDR` drive such a fleet through the same closed-loop driver —
+launch the client with the coordinator's --seed/--tapes/--data so both
+sides derive the same catalog. `rpc-tax` runs one seeded stream through
+the in-process cluster AND a loopback-networked fleet: counters and tour
+costs must match bit for bit, the latency-ladder delta (p99.9) is the RPC
+tax; --kill-after M adds a worker-crash run that must keep the fleet-wide
+drain invariant (submitted = completed + shed).
+--trace-file replays an on-disk timestamped log
 (`timestamp_ns<TAB>tape<TAB>file_id`, see rust/README.md). --smoke is the
 fast deterministic CI preset (2 virtual seconds at 100 rps over 48 tapes
 unless overridden)."
@@ -333,8 +364,15 @@ fn cmd_draw(args: &Args) {
 fn cmd_serve(args: &Args) {
     args.reject_unknown(&[
         "policy", "drives", "requests", "seed", "tapes", "data", "backend", "cap", "backlog",
-        "shards", "vnodes", "affinity", "arms", "exclusive-tapes",
+        "shards", "vnodes", "affinity", "arms", "exclusive-tapes", "connect",
     ]);
+    // --connect ADDR: drive a *networked* fleet (`tapesched coordinator`
+    // elsewhere) instead of starting coordinators in-process; every other
+    // serving knob then lives on the coordinator's command line.
+    if let Some(addr) = args.get("connect") {
+        drive_remote(args, addr);
+        return;
+    }
     let policy = resolve_policy(args, "policy", "SimpleDP");
     let policy_name = policy.name();
     let n_drives = args.get_parsed_or("drives", 8usize);
@@ -379,7 +417,7 @@ fn cmd_serve(args: &Args) {
         // Multi-library cluster: one coordinator per shard behind the
         // consistent-hash router, same driver via the RequestSink trait.
         let cluster = Cluster::start(
-            ClusterConfig { n_shards, vnodes, shard: shard_cfg },
+            ClusterConfig { n_shards, vnodes, shard: shard_cfg, shard_configs: Vec::new() },
             tapes.iter().cloned(),
             Arc::from(policy),
         );
@@ -484,8 +522,15 @@ fn cmd_replay(args: &Args) {
     args.reject_unknown(&[
         "arrivals", "rate", "duration", "policy", "drives", "seed", "mode", "cap", "data",
         "tapes", "backend", "window-ms", "max-batch", "backlog", "out", "shards", "vnodes",
-        "arms", "affinity", "exclusive-tapes", "trace-file", "smoke",
+        "arms", "affinity", "exclusive-tapes", "trace-file", "smoke", "connect", "requests",
     ]);
+    // --connect ADDR: there is no virtual clock across a process boundary,
+    // so a networked replay degrades to the wall-clock closed-loop driver —
+    // the same seam `serve --connect` uses.
+    if let Some(addr) = args.get("connect") {
+        drive_remote(args, addr);
+        return;
+    }
     let mut kind =
         args.get_choice_or("arrivals", &["poisson", "bursty", "diurnal", "trace"], "poisson");
     // --trace-file only makes sense for trace arrivals: imply them when
@@ -710,6 +755,415 @@ fn cmd_replay(args: &Args) {
                 std::process::exit(1);
             });
             eprintln!("QoS report → {path}");
+        }
+        None => print!("{json}"),
+    }
+}
+
+/// Unwrap a networked-path result or exit with a message.
+fn net_ok<T>(r: std::io::Result<T>, what: &str) -> T {
+    r.unwrap_or_else(|e| {
+        eprintln!("error: {what}: {e}");
+        std::process::exit(1);
+    })
+}
+
+/// `tapesched coordinator`: the fleet's routing process. Owns the
+/// consistent-hash ring, waits for `--shards` workers to join (each is
+/// handed the policy, the shard configuration, and its ring partition of
+/// the catalog over the wire), then serves client submits until a client
+/// drains or shuts the fleet down. The catalog derives from
+/// `--seed/--tapes/--data` exactly as the in-process commands derive
+/// theirs, so clients launched with the same flags agree on every tape
+/// name.
+fn cmd_coordinator(args: &Args) {
+    args.reject_unknown(&[
+        "listen", "shards", "policy", "drives", "seed", "tapes", "data", "vnodes",
+        "window-ms", "max-batch", "backlog", "affinity", "arms", "exclusive-tapes",
+        "kill-shard", "kill-after",
+    ]);
+    let listen = args.get_or("listen", "127.0.0.1:7171");
+    let n_shards = args.get_parsed_or("shards", 2usize);
+    let vnodes = args.get_parsed_or("vnodes", 64usize);
+    let n_drives = args.get_parsed_or("drives", 4usize);
+    if n_shards == 0 || vnodes == 0 || n_drives == 0 {
+        eprintln!("error: --shards, --vnodes and --drives must be positive");
+        std::process::exit(2);
+    }
+    if args.get_parsed_or("backlog", 1usize) == 0 {
+        eprintln!("error: --backlog must be positive");
+        std::process::exit(2);
+    }
+    // Name only: the policy is *resolved* by each worker
+    // (`scheduler_by_name` on its side of the wire) — validating here
+    // catches the typo before a fleet assembles around it.
+    let policy = args.get_or("policy", "GS");
+    if scheduler_by_name(&policy).is_none() {
+        eprintln!("error: unknown algorithm {policy}");
+        std::process::exit(2);
+    }
+    let affinity = Affinity::from_name(&args.get_choice_or("affinity", &["none", "lru"], "none"))
+        .expect("choice already validated");
+    let shard = CoordinatorConfig {
+        n_drives,
+        batcher: BatcherConfig {
+            window: Duration::from_millis(args.get_parsed_or("window-ms", 100u64)),
+            max_batch: args.get_parsed_or("max-batch", 4096usize),
+            max_tape_backlog: args
+                .get_parsed_or("backlog", BatcherConfig::default().max_tape_backlog),
+        },
+        drive: DriveParams {
+            n_arms: args.get_parsed_or("arms", 0usize),
+            ..DriveParams::default()
+        },
+        affinity,
+        exclusive_tapes: args.get_choice_or("exclusive-tapes", &["on", "off"], "on") == "on",
+    };
+    // Fault injection for the robustness gate: cut shard I's connection
+    // right after its M-th accepted submit (one-shot; a rejoining worker
+    // is not re-killed).
+    let kill = (args.get("kill-shard").is_some() || args.get("kill-after").is_some()).then(|| {
+        (args.get_parsed_or("kill-shard", 0usize), args.get_parsed_or("kill-after", 1u64))
+    });
+    let ds = dataset_from(args);
+    let catalog: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
+    let listener = net_ok(TcpListener::bind(listen.as_str()), "cannot bind --listen address");
+    let addr = net_ok(listener.local_addr(), "cannot read bound address");
+    eprintln!(
+        "coordinator on {addr}: {n_shards} shards × {n_drives} drives, policy {policy}, {} tapes",
+        catalog.len()
+    );
+    net_ok(
+        tapesched::net::serve(
+            listener,
+            CoordinatorServerConfig { n_shards, vnodes, shard, policy, kill },
+            catalog,
+        ),
+        "coordinator failed",
+    );
+}
+
+/// `tapesched worker`: serve one shard for a networked coordinator. A
+/// worker brings nothing but compute — policy, configuration, and its
+/// slice of the catalog all arrive over the wire — so the replacement for
+/// a crashed worker is the same command line pointed at the same address.
+fn cmd_worker(args: &Args) {
+    args.reject_unknown(&["connect"]);
+    let Some(addr) = args.get("connect") else {
+        eprintln!("error: worker needs --connect ADDR");
+        std::process::exit(2);
+    };
+    eprintln!("worker connecting to {addr}");
+    net_ok(tapesched::net::run_worker(addr), "worker failed");
+}
+
+/// `serve --connect` / `replay --connect`: feed a networked fleet through
+/// the unchanged closed-loop driver via [`RemoteCluster`] (the
+/// `RequestSink` arm of the wire). The coordinator owns every serving knob
+/// — policy, drives, batching — so this side only generates load and
+/// prints the drained rollup. Launch with the coordinator's
+/// `--seed/--tapes/--data`: the request stream names tapes from the
+/// locally derived catalog, and names the fleet does not know are dropped
+/// as `UnknownTape`.
+fn drive_remote(args: &Args, addr: &str) {
+    let n_requests = args.get_parsed_or("requests", 5_000u64);
+    let cap = args.get_parsed_or("cap", 1_024u64);
+    let seed = args.get_parsed_or("seed", 1u64);
+    if cap == 0 || n_requests == 0 {
+        eprintln!("error: --cap and --requests must be positive");
+        std::process::exit(2);
+    }
+    let ds = dataset_from(args);
+    let tapes: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
+    let client = net_ok(RemoteCluster::connect(addr), "cannot connect to coordinator");
+    let mut model =
+        PoissonArrivals::new(RequestMix::new(&tapes), 1_000.0, f64::INFINITY, seed);
+    let stats = drive_closed_loop(
+        &client,
+        &tapes,
+        &mut model,
+        cap,
+        Duration::from_millis(1),
+        n_requests,
+    );
+    let (completions, m) = net_ok(client.drain(), "drain failed");
+    println!("remote fleet at {addr}: {} completions", completions.len());
+    println!("  accepted / dropped      = {} / {}", stats.submitted, stats.dropped);
+    println!("  busy retries / rejected = {} / {}", stats.busy_retries, m.rejected);
+    println!("  completed / shed        = {} / {}", m.completed, m.shed);
+    println!("  batches dispatched      = {}", m.batches);
+    println!("  mean in-tape service    = {:.1} s", m.mean_service_s);
+    println!("  mean end-to-end latency = {:.1} s", m.mean_latency_s);
+    println!(
+        "  shard load max/min      = {} / {} (ratio {:.2})",
+        m.max_shard_completed,
+        m.min_shard_completed,
+        m.imbalance_ratio()
+    );
+    for s in &m.shards {
+        println!(
+            "  shard {:<2} routed/completed = {} / {} (p99 {:.1} s)",
+            s.shard, s.routed, s.metrics.completed, s.metrics.p99_latency_s
+        );
+    }
+}
+
+/// One mode's digest in the `rpc-tax` report, computed client-side from
+/// the completion stream so both modes go through identical arithmetic.
+struct ModeDigest {
+    submitted: u64,
+    completed: u64,
+    shed: u64,
+    dropped: u64,
+    busy_retries: u64,
+    tour_cost_s: f64,
+    mean_latency_s: f64,
+    p50_latency_s: f64,
+    p99_latency_s: f64,
+    p999_latency_s: f64,
+}
+
+fn mode_digest(
+    stats: LiveDriveStats,
+    mut completions: Vec<Completion>,
+    m: &ClusterMetricsSnapshot,
+) -> ModeDigest {
+    // Tour cost = Σ service_s in request-id order. Pinning the summation
+    // order makes the float total a pure function of the request stream,
+    // so the in-process and loopback runs of the same stream must agree
+    // bit for bit — ci.sh compares the printed values.
+    completions.sort_by_key(|c| c.request_id);
+    let tour_cost_s: f64 = completions.iter().map(|c| c.service_s).sum();
+    let mut lats: Vec<f64> = completions.iter().map(|c| c.latency_s).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| if lats.is_empty() { 0.0 } else { percentile_sorted(&lats, p) };
+    ModeDigest {
+        submitted: m.submitted,
+        completed: m.completed,
+        shed: m.shed,
+        dropped: stats.dropped,
+        busy_retries: stats.busy_retries,
+        tour_cost_s,
+        mean_latency_s: if lats.is_empty() {
+            0.0
+        } else {
+            lats.iter().sum::<f64>() / lats.len() as f64
+        },
+        p50_latency_s: pct(50.0),
+        p99_latency_s: pct(99.0),
+        p999_latency_s: pct(99.9),
+    }
+}
+
+fn mode_json(d: &ModeDigest) -> String {
+    format!(
+        "{{\"submitted\": {}, \"completed\": {}, \"shed\": {}, \"dropped\": {}, \
+         \"busy_retries\": {}, \"tour_cost_s\": {:.6}, \"mean_latency_s\": {:.6}, \
+         \"p50_latency_s\": {:.6}, \"p99_latency_s\": {:.6}, \"p999_latency_s\": {:.6}}}",
+        d.submitted,
+        d.completed,
+        d.shed,
+        d.dropped,
+        d.busy_retries,
+        d.tour_cost_s,
+        d.mean_latency_s,
+        d.p50_latency_s,
+        d.p99_latency_s,
+        d.p999_latency_s
+    )
+}
+
+/// `tapesched rpc-tax`: what does the process boundary cost? The same
+/// seeded request stream is driven twice per policy — through the
+/// in-process [`Cluster`] (the seam is a function call) and through a
+/// loopback-networked coordinator/worker fleet (every submit a framed TCP
+/// round trip) — under one giant batching window flushed at drain, so
+/// both modes compose identical batches and the counters and tour costs
+/// must match bit for bit. What is *allowed* to differ is wall-clock
+/// latency: `p999_delta_s` is the RPC tax. `--kill-after M` appends a
+/// worker-crash run gated on the fleet-wide drain invariant
+/// `submitted = completed + shed`.
+fn cmd_rpc_tax(args: &Args) {
+    args.reject_unknown(&[
+        "policy", "shards", "drives", "vnodes", "requests", "seed", "tapes", "data", "out",
+        "kill-after",
+    ]);
+    let n_shards = args.get_parsed_or("shards", 2usize);
+    let n_drives = args.get_parsed_or("drives", 4usize);
+    let vnodes = args.get_parsed_or("vnodes", 64usize);
+    let n_requests = args.get_parsed_or("requests", 240u64);
+    let seed = args.get_parsed_or("seed", 1u64);
+    if n_shards == 0 || n_drives == 0 || vnodes == 0 || n_requests == 0 {
+        eprintln!("error: --shards, --drives, --vnodes and --requests must be positive");
+        std::process::exit(2);
+    }
+    let policy_list = args.get_or("policy", "GS");
+    let names: Vec<&str> =
+        policy_list.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
+    if names.is_empty() {
+        eprintln!("error: --policy needs at least one algorithm");
+        std::process::exit(2);
+    }
+    for n in &names {
+        if scheduler_by_name(n).is_none() {
+            eprintln!("error: unknown algorithm `{n}`");
+            std::process::exit(2);
+        }
+    }
+    // Small catalog by default (12 tapes): the measurement wants round
+    // trips, not tape-hours; --data/--tapes override as everywhere else.
+    let ds = if args.get("data").is_some() {
+        dataset_from(args)
+    } else {
+        generate_dataset(&GeneratorConfig {
+            n_tapes: args.get_parsed_or("tapes", 12usize),
+            seed: args.get_parsed_or("seed", GeneratorConfig::default().seed),
+            ..Default::default()
+        })
+    };
+    let catalog: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
+    // One giant window, flushed at drain, no affinity/arms/exclusivity:
+    // batch composition is then a pure function of the stream and the
+    // ring — identical across modes — and every QoS difference is the
+    // wire.
+    let shard_cfg = CoordinatorConfig {
+        n_drives,
+        batcher: BatcherConfig {
+            window: Duration::from_secs(3_600),
+            ..BatcherConfig::default()
+        },
+        drive: DriveParams::default(),
+        affinity: Affinity::None,
+        exclusive_tapes: false,
+    };
+    let fresh_model =
+        || PoissonArrivals::new(RequestMix::new(&catalog), 1_000.0, f64::INFINITY, seed);
+    let backoff = Duration::from_millis(1);
+
+    let mut sections = Vec::new();
+    for name in &names {
+        // In-process: the RequestSink seam stays a function call.
+        let policy = scheduler_by_name(name).expect("validated above");
+        let cluster = Cluster::start(
+            ClusterConfig {
+                n_shards,
+                vnodes,
+                shard: shard_cfg.clone(),
+                shard_configs: Vec::new(),
+            },
+            catalog.iter().cloned(),
+            Arc::from(policy),
+        );
+        let mut model = fresh_model();
+        let stats =
+            drive_closed_loop(&cluster, &catalog, &mut model, n_requests, backoff, n_requests);
+        let (completions, m) = cluster.finish();
+        let local = mode_digest(stats, completions, &m);
+
+        // Loopback-networked: same stream, every submit a framed TCP
+        // round trip through coordinator and worker (threads here, but
+        // the frames and handshakes are exactly the standalone
+        // subcommands').
+        let fleet = net_ok(
+            LoopbackFleet::spawn(
+                CoordinatorServerConfig {
+                    n_shards,
+                    vnodes,
+                    shard: shard_cfg.clone(),
+                    policy: name.to_string(),
+                    kill: None,
+                },
+                catalog.clone(),
+            ),
+            "cannot spawn loopback fleet",
+        );
+        let client = net_ok(fleet.client(), "cannot connect loopback client");
+        let mut model = fresh_model();
+        let stats =
+            drive_closed_loop(&client, &catalog, &mut model, n_requests, backoff, n_requests);
+        let (completions, m) = net_ok(client.drain(), "loopback drain failed");
+        let _ = fleet.join();
+        let remote = mode_digest(stats, completions, &m);
+
+        let delta = remote.p999_latency_s - local.p999_latency_s;
+        eprintln!(
+            "rpc-tax {name}: tour {:.6} s vs {:.6} s, p99.9 latency {:.6} s vs {:.6} s (delta {:+.6} s)",
+            local.tour_cost_s,
+            remote.tour_cost_s,
+            local.p999_latency_s,
+            remote.p999_latency_s,
+            delta
+        );
+        sections.push(format!(
+            "    {{\"policy\": \"{name}\", \"in_process\": {}, \"loopback\": {}, \"p999_delta_s\": {:.6}}}",
+            mode_json(&local),
+            mode_json(&remote),
+            delta
+        ));
+    }
+
+    // The robustness run: cut one worker mid-stream and check the
+    // fleet-wide drain invariant. The victim is the shard owning the
+    // stream's first arrival, so with --kill-after 1 the kill is
+    // guaranteed to fire (larger values need the victim to see that many
+    // submits before the drain).
+    let kill_json = args.get("kill-after").map(|_| {
+        let kill_after = args.get_parsed_or("kill-after", 1u64);
+        let ring = HashRing::new(n_shards, vnodes);
+        let mut probe = fresh_model();
+        let first = probe.next_arrival().expect("positive --requests implies an arrival");
+        let victim = ring.route(&catalog[first.tape].name);
+        let name = names[0];
+        let fleet = net_ok(
+            LoopbackFleet::spawn(
+                CoordinatorServerConfig {
+                    n_shards,
+                    vnodes,
+                    shard: shard_cfg.clone(),
+                    policy: name.to_string(),
+                    kill: Some((victim, kill_after)),
+                },
+                catalog.clone(),
+            ),
+            "cannot spawn loopback fleet",
+        );
+        let client = net_ok(fleet.client(), "cannot connect loopback client");
+        let mut model = fresh_model();
+        let stats =
+            drive_closed_loop(&client, &catalog, &mut model, n_requests, backoff, n_requests);
+        let (_completions, m) = net_ok(client.drain(), "loopback drain failed");
+        let _ = fleet.join();
+        let holds = m.submitted == m.completed + m.shed;
+        eprintln!(
+            "rpc-tax kill: shard {victim} cut after {kill_after} accepted — \
+             submitted {} = completed {} + shed {}: {}",
+            m.submitted,
+            m.completed,
+            m.shed,
+            if holds { "invariant holds" } else { "INVARIANT VIOLATED" }
+        );
+        format!(
+            "  \"kill_report\": {{\"policy\": \"{name}\", \"kill_shard\": {victim}, \
+             \"kill_after\": {kill_after}, \"submitted\": {}, \"completed\": {}, \
+             \"shed\": {}, \"dropped\": {}, \"drain_invariant_holds\": {}}},\n",
+            m.submitted, m.completed, m.shed, stats.dropped, holds
+        )
+    });
+
+    let json = format!(
+        "{{\n  \"schema\": \"tapesched-rpc-tax-v1\",\n  \"seed\": {seed},\n  \
+         \"shards\": {n_shards},\n  \"drives\": {n_drives},\n  \
+         \"requests\": {n_requests},\n{}  \"rpc_reports\": [\n{}\n  ]\n}}\n",
+        kill_json.unwrap_or_default(),
+        sections.join(",\n")
+    );
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &json).unwrap_or_else(|e| {
+                eprintln!("error writing {path}: {e}");
+                std::process::exit(1);
+            });
+            eprintln!("rpc-tax report → {path}");
         }
         None => print!("{json}"),
     }

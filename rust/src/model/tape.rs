@@ -23,7 +23,7 @@ impl FileExtent {
 ///
 /// Mirrors the dataset's `tapes/TAPEXXX.txt` description (segments with
 /// cumulative positions and sizes, indexed from 1 for the leftmost file).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Tape {
     /// Tape identifier (e.g. `TAPE042`).
     pub name: String,

@@ -1,0 +1,146 @@
+//! The client side of the wire: [`RemoteCluster`], a connection to a
+//! coordinator process that implements [`RequestSink`] — so the unchanged
+//! closed-loop driver (`replay::drive_closed_loop`) can feed a networked
+//! fleet exactly as it feeds an in-process `Coordinator` or `Cluster`.
+//!
+//! The protocol is strictly request/response on one connection, so the
+//! whole client is a `Mutex<TcpStream>` held across each pair. That is
+//! deliberate: the serve path measures the *RPC tax* of the seam (see
+//! `tapesched rpc-tax`), and a pipelined client would hide exactly the
+//! per-submit round-trip latency the measurement is after.
+
+use std::io;
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+use crate::cluster::{rollup, ClusterMetricsSnapshot, ShardLoad};
+use crate::coordinator::{Completion, ReadRequest, SubmitError};
+use crate::replay::RequestSink;
+
+use super::frame::{read_frame, write_frame};
+use super::wire::{self, Message, Role, SubmitOutcome, PROTOCOL_VERSION};
+
+/// A connected client handle on a networked fleet.
+pub struct RemoteCluster {
+    conn: Mutex<TcpStream>,
+}
+
+impl RemoteCluster {
+    /// Connect and handshake. Blocks until the coordinator accepts the
+    /// hello; the coordinator in turn blocks the first *request* until
+    /// its fleet is fully joined.
+    pub fn connect(addr: &str) -> io::Result<RemoteCluster> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        write_frame(
+            &mut stream,
+            &wire::encode(&Message::Hello { version: PROTOCOL_VERSION, role: Role::Client }),
+        )?;
+        match read_frame(&mut stream)? {
+            Some(payload) => match wire::decode(&payload)? {
+                Message::HelloAck { .. } => Ok(RemoteCluster { conn: Mutex::new(stream) }),
+                Message::Error { message } => {
+                    Err(io::Error::new(io::ErrorKind::ConnectionRefused, message))
+                }
+                other => Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("expected HelloAck, got {other:?}"),
+                )),
+            },
+            None => Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "coordinator closed during handshake",
+            )),
+        }
+    }
+
+    /// One request/response round trip. The connection lock is held
+    /// across the pair so concurrent callers cannot interleave frames.
+    fn call(&self, msg: &Message) -> io::Result<Message> {
+        let mut conn = self.conn.lock().unwrap();
+        write_frame(&mut *conn, &wire::encode(msg))?;
+        match read_frame(&mut *conn)? {
+            Some(payload) => Ok(wire::decode(&payload)?),
+            None => Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "coordinator closed mid-request",
+            )),
+        }
+    }
+
+    /// Submit one read request to the fleet (routed by the coordinator).
+    pub fn submit(&self, req: &ReadRequest) -> io::Result<Result<(), SubmitError>> {
+        let reply = self.call(&Message::Submit {
+            id: req.id,
+            tape: req.tape.clone(),
+            file_index: req.file_index as u64,
+        })?;
+        match reply {
+            Message::SubmitResult { outcome } => Ok(outcome.into_submit()),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected SubmitResult, got {other:?}"),
+            )),
+        }
+    }
+
+    /// Per-shard loads, fresh from the fleet.
+    pub fn loads(&self) -> io::Result<Vec<ShardLoad>> {
+        match self.call(&Message::MetricsPull)? {
+            Message::MetricsReply { loads } => Ok(loads),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected MetricsReply, got {other:?}"),
+            )),
+        }
+    }
+
+    /// Fleet rollup (client-side arithmetic over [`RemoteCluster::loads`]).
+    pub fn metrics(&self) -> io::Result<ClusterMetricsSnapshot> {
+        Ok(rollup(self.loads()?))
+    }
+
+    /// Drain the whole fleet: completions (sorted by request id by the
+    /// coordinator) plus the final rollup. Consumes the handle — the
+    /// coordinator stops serving after a drain.
+    pub fn drain(self) -> io::Result<(Vec<Completion>, ClusterMetricsSnapshot)> {
+        match self.call(&Message::Drain)? {
+            Message::DrainResult { completions, loads } => {
+                Ok((completions, rollup(loads)))
+            }
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected DrainResult, got {other:?}"),
+            )),
+        }
+    }
+
+    /// Tell the coordinator to shut the fleet down without draining.
+    pub fn shutdown(self) -> io::Result<()> {
+        let mut conn = self.conn.lock().unwrap();
+        write_frame(&mut *conn, &wire::encode(&Message::Shutdown))?;
+        Ok(())
+    }
+}
+
+impl RequestSink for RemoteCluster {
+    /// I/O failures surface as [`SubmitError::Stopping`]: the driver
+    /// treats it as non-retryable and counts the request dropped, which
+    /// is the honest reading of a dead coordinator connection.
+    fn submit_request(&self, req: ReadRequest) -> Result<(), SubmitError> {
+        match self.submit(&req) {
+            Ok(r) => r,
+            Err(_) => Err(SubmitError::Stopping),
+        }
+    }
+
+    /// Fleet-wide `submitted − completed − shed`. An I/O failure reports
+    /// 0 in-flight rather than wedging the driver's admission gate
+    /// against a connection that will never answer again.
+    fn in_flight(&self) -> u64 {
+        match self.metrics() {
+            Ok(m) => m.submitted.saturating_sub(m.completed + m.shed),
+            Err(_) => 0,
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Length-prefixed frame codec — the lowest wire layer.
+//!
+//! Every message on a coordinator/worker/client connection travels as one
+//! *frame*: a 4-byte big-endian payload length followed by exactly that
+//! many payload bytes (the first of which is the message tag, see
+//! [`super::wire`]). The codec is deliberately dumb: no compression, no
+//! checksums (TCP provides integrity), no partial frames — which keeps the
+//! format byte-auditable with nothing but `xxd`.
+//!
+//! ```text
+//!   ┌──────────────┬───────────────────────────────┐
+//!   │ len: u32 BE  │ payload: len bytes (tag + body)│
+//!   └──────────────┴───────────────────────────────┘
+//! ```
+//!
+//! A length prefix above [`MAX_FRAME`] is rejected before any payload is
+//! read — a peer speaking a different protocol (or garbage) cannot make us
+//! allocate gigabytes. EOF exactly *between* frames is a clean close
+//! ([`read_frame`] returns `Ok(None)`); EOF inside a header or payload is
+//! [`FrameError::Truncated`].
+
+use std::io::{Read, Write};
+
+/// Upper bound on a frame's payload size (16 MiB). Catalog assignments for
+/// very large fleets dominate frame sizes; 16 MiB covers hundreds of
+/// thousands of file extents while still rejecting nonsense prefixes.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Why a frame could not be read or written.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Underlying transport error.
+    Io(std::io::Error),
+    /// The length prefix (read) or payload (write) exceeds [`MAX_FRAME`].
+    Oversized { len: usize },
+    /// The stream ended inside a header or payload.
+    Truncated,
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame i/o error: {e}"),
+            FrameError::Oversized { len } => {
+                write!(f, "frame of {len} bytes exceeds the {MAX_FRAME}-byte cap")
+            }
+            FrameError::Truncated => write!(f, "stream ended mid-frame"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<FrameError> for std::io::Error {
+    fn from(e: FrameError) -> std::io::Error {
+        match e {
+            FrameError::Io(io) => io,
+            other => std::io::Error::new(std::io::ErrorKind::InvalidData, other.to_string()),
+        }
+    }
+}
+
+/// Write one frame: length prefix + payload, then flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<(), FrameError> {
+    if payload.len() > MAX_FRAME {
+        return Err(FrameError::Oversized { len: payload.len() });
+    }
+    let len = (payload.len() as u32).to_be_bytes();
+    w.write_all(&len).map_err(FrameError::Io)?;
+    w.write_all(payload).map_err(FrameError::Io)?;
+    w.flush().map_err(FrameError::Io)
+}
+
+/// Read exactly `buf.len()` bytes. `eof_ok` permits a clean EOF *before
+/// the first byte* (returns `Ok(false)`); EOF after any byte was read is
+/// always [`FrameError::Truncated`].
+fn read_exactly<R: Read>(r: &mut R, buf: &mut [u8], eof_ok: bool) -> Result<bool, FrameError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 && eof_ok {
+                    return Ok(false);
+                }
+                return Err(FrameError::Truncated);
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame's payload. `Ok(None)` is a clean close: the peer shut
+/// the stream down exactly at a frame boundary.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut header = [0u8; 4];
+    if !read_exactly(r, &mut header, true)? {
+        return Ok(None);
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > MAX_FRAME {
+        return Err(FrameError::Oversized { len });
+    }
+    let mut payload = vec![0u8; len];
+    read_exactly(r, &mut payload, false)?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_round_trip_back_to_back() {
+        let payloads: Vec<Vec<u8>> =
+            vec![vec![], vec![7], vec![0xAB; 1_000], (0..=255u8).collect()];
+        let mut wire = Vec::new();
+        for p in &payloads {
+            write_frame(&mut wire, p).unwrap();
+        }
+        let mut r = Cursor::new(wire);
+        for p in &payloads {
+            assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some(p.as_slice()));
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF at the boundary");
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_be_bytes());
+        wire.extend_from_slice(b"junk");
+        match read_frame(&mut Cursor::new(wire)) {
+            Err(FrameError::Oversized { len }) => assert_eq!(len, u32::MAX as usize),
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_payload_is_rejected_on_write() {
+        let mut sink = Vec::new();
+        let big = vec![0u8; MAX_FRAME + 1];
+        assert!(matches!(
+            write_frame(&mut sink, &big),
+            Err(FrameError::Oversized { .. })
+        ));
+        assert!(sink.is_empty(), "nothing may hit the wire");
+    }
+
+    #[test]
+    fn truncated_header_and_payload_are_distinguished_from_clean_eof() {
+        // EOF inside the 4-byte header.
+        assert!(matches!(
+            read_frame(&mut Cursor::new(vec![0u8, 0])),
+            Err(FrameError::Truncated)
+        ));
+        // EOF inside the payload: header promises 8 bytes, 3 arrive.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&8u32.to_be_bytes());
+        wire.extend_from_slice(&[1, 2, 3]);
+        assert!(matches!(
+            read_frame(&mut Cursor::new(wire)),
+            Err(FrameError::Truncated)
+        ));
+        // The empty stream is a clean close, not an error.
+        assert!(read_frame(&mut Cursor::new(Vec::new())).unwrap().is_none());
+    }
+}

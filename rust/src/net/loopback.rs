@@ -1,0 +1,72 @@
+//! Loopback integration mode: a whole coordinator/worker fleet in one
+//! process over `127.0.0.1`, each process boundary a real TCP connection.
+//!
+//! This is how the RPC tax is measured (`tapesched rpc-tax`) and how the
+//! networked paths are integration-tested without multi-process
+//! orchestration: the frames, handshakes, and failure paths are exactly
+//! the ones the standalone `coordinator`/`worker` subcommands run —
+//! only the thread/process boundary differs.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener};
+use std::thread::JoinHandle;
+
+use crate::model::Tape;
+
+use super::client::RemoteCluster;
+use super::server::{serve, CoordinatorServerConfig};
+use super::worker::run_worker;
+
+/// A coordinator thread plus its worker threads, bound on an ephemeral
+/// loopback port.
+pub struct LoopbackFleet {
+    addr: SocketAddr,
+    server: JoinHandle<io::Result<()>>,
+    workers: Vec<JoinHandle<io::Result<()>>>,
+}
+
+impl LoopbackFleet {
+    /// Bind `127.0.0.1:0`, start the coordinator server thread, and spawn
+    /// `cfg.n_shards` worker threads against it. Returns as soon as the
+    /// threads are launched — the first client *request* blocks until
+    /// every worker has joined (fleet readiness is the server's job).
+    pub fn spawn(cfg: CoordinatorServerConfig, catalog: Vec<Tape>) -> io::Result<LoopbackFleet> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let n_workers = cfg.n_shards;
+        let server = std::thread::spawn(move || serve(listener, cfg, catalog));
+        let workers = (0..n_workers).map(|_| Self::spawn_worker(addr)).collect();
+        Ok(LoopbackFleet { addr, server, workers })
+    }
+
+    /// The fleet's address (connect clients or replacement workers here).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connect a client handle to the fleet.
+    pub fn client(&self) -> io::Result<RemoteCluster> {
+        RemoteCluster::connect(&self.addr.to_string())
+    }
+
+    /// Spawn one worker thread against `addr` — also the rejoin path: a
+    /// replacement worker for a killed shard is just another worker
+    /// connecting (the server hands it the dead shard's id).
+    pub fn spawn_worker(addr: SocketAddr) -> JoinHandle<io::Result<()>> {
+        std::thread::spawn(move || run_worker(&addr.to_string()))
+    }
+
+    /// Join every thread after the fleet was drained or shut down.
+    /// Worker threads that were deliberately killed report their I/O
+    /// error; that is expected, so per-thread results are returned rather
+    /// than unwrapped.
+    pub fn join(self) -> (io::Result<()>, Vec<io::Result<()>>) {
+        let server = self.server.join().expect("coordinator server panicked");
+        let workers = self
+            .workers
+            .into_iter()
+            .map(|w| w.join().expect("worker thread panicked"))
+            .collect();
+        (server, workers)
+    }
+}

@@ -1,0 +1,46 @@
+//! The networked cluster: coordinator/worker processes speaking a
+//! hand-rolled, dependency-free binary protocol over `std::net`.
+//!
+//! The in-process [`Cluster`](crate::cluster::Cluster) bounds a fleet at
+//! one machine's threads; this subsystem splits it across processes
+//! behind the same two seams the rest of the crate already routes
+//! through — [`RequestSink`](crate::replay::RequestSink) on the client
+//! side and [`ShardBackend`](crate::cluster::ShardBackend) on the
+//! routing side — so the closed-loop driver, the QoS reporting, and the
+//! consistent-hash placement are unchanged whether a shard is a local
+//! `Coordinator` or a TCP worker.
+//!
+//! Layer map (wire to CLI):
+//!
+//! - [`frame`] — length-prefixed frames over any `Read`/`Write`: `u32` BE
+//!   payload length (capped), then the payload. Clean-close vs truncation
+//!   is explicit.
+//! - [`wire`] — tagged messages and their exact binary schema
+//!   (handshake, submit, metrics, drain), `f64` as IEEE-754 bits so QoS
+//!   numbers cross the wire without rounding.
+//! - [`server`] — the coordinator process: ring + routing over
+//!   `WorkerShard` backends, fleet readiness, dead-worker shed
+//!   accounting, worker rejoin.
+//! - [`worker`] — the worker process: one shard's `Coordinator` behind a
+//!   connection.
+//! - [`client`] — [`RemoteCluster`]: the `RequestSink` a driver plugs
+//!   into.
+//! - [`loopback`] — the whole fleet on `127.0.0.1` in one process, for
+//!   integration tests and the RPC-tax measurement.
+//!
+//! The byte-level format is specified in `rust/README.md` (“Wire
+//! format”).
+
+pub mod client;
+pub mod frame;
+pub mod loopback;
+pub mod server;
+pub mod wire;
+pub mod worker;
+
+pub use client::RemoteCluster;
+pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME};
+pub use loopback::LoopbackFleet;
+pub use server::{serve, CoordinatorServerConfig};
+pub use wire::{Message, Role, SubmitOutcome, WireError, PROTOCOL_VERSION};
+pub use worker::{run_worker, run_worker_on};

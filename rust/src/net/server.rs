@@ -1,0 +1,522 @@
+//! The coordinator process: owns the consistent-hash ring, routes client
+//! submits to TCP workers, and keeps the fleet's accounting exact across
+//! worker deaths.
+//!
+//! ```text
+//!   clients ──Submit──▶ ┌──────────────────────────────┐
+//!                       │ serve(): ShardSet over        │
+//!                       │ WorkerShard backends (ring)   │
+//!                       └──┬──────────┬──────────┬──────┘
+//!                          ▼          ▼          ▼
+//!                     worker 0    worker 1    worker 2     (TCP, one
+//!                     Coordinator Coordinator Coordinator   shard each)
+//! ```
+//!
+//! Each connected worker is wrapped in a [`WorkerShard`] — the remote arm
+//! of the [`ShardBackend`] seam — and attached to a [`ShardSet`], so the
+//! routing layer is byte-identical to the in-process one: same ring, same
+//! per-shard routed counters, same rollup.
+//!
+//! ## Dead workers and the drain invariant
+//!
+//! The per-shard connection lock is held across each request/response
+//! pair, so the coordinator always knows exactly how many submits the
+//! worker *accepted* this era (`accepted_era`). When the connection dies,
+//! the shard's lost work is synthesized into a carried snapshot:
+//! `submitted := accepted_era`, `completed := last pulled completed`,
+//! `shed := accepted_era − completed` — every accepted-but-unserved
+//! request is shed through the same accounting the in-process dispatcher
+//! uses for deregistered tapes, so the fleet-wide drain invariant
+//! `submitted − completed − shed == 0` holds with workers dying
+//! mid-replay. Submits routed to a dead shard fail with
+//! [`SubmitError::ShardDown`] (not `Busy`: there is nothing to retry
+//! against) until a replacement worker connects, takes over the dead
+//! shard id and its catalog partition, and starts a fresh era;
+//! [`merge_snapshots`] stitches the eras back into one shard history.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Duration;
+
+use crate::cluster::{
+    merge_snapshots, partition_catalog, HashRing, ShardBackend, ShardSet,
+};
+use crate::coordinator::{
+    Completion, CoordinatorConfig, MetricsSnapshot, ReadRequest, SubmitError,
+};
+use crate::model::Tape;
+
+use super::frame::{read_frame, write_frame};
+use super::wire::{self, Message, Role, SubmitOutcome, PROTOCOL_VERSION};
+
+/// Configuration for [`serve`] — the `tapesched coordinator` subcommand.
+#[derive(Debug, Clone)]
+pub struct CoordinatorServerConfig {
+    /// Ring size; the fleet is ready once this many workers have joined.
+    pub n_shards: usize,
+    /// Virtual nodes per shard on the ring.
+    pub vnodes: usize,
+    /// Per-shard coordinator configuration, shipped to every worker.
+    pub shard: CoordinatorConfig,
+    /// Scheduler policy name (resolved by the worker via
+    /// `sched::scheduler_by_name`).
+    pub policy: String,
+    /// Fault injection for the robustness gate: cut shard `.0`'s
+    /// connection right after it accepts its `.1`-th submit. One-shot — a
+    /// rejoining worker is not re-killed.
+    pub kill: Option<(usize, u64)>,
+}
+
+fn send(stream: &mut TcpStream, msg: &Message) -> io::Result<()> {
+    write_frame(stream, &wire::encode(msg)).map_err(io::Error::from)
+}
+
+fn recv(stream: &mut TcpStream) -> io::Result<Option<Message>> {
+    match read_frame(stream) {
+        Ok(None) => Ok(None),
+        Ok(Some(payload)) => Ok(Some(wire::decode(&payload)?)),
+        Err(e) => Err(e.into()),
+    }
+}
+
+struct WorkerState {
+    /// Live connection; `None` while the shard has no worker.
+    conn: Option<TcpStream>,
+    /// A worker handshake for this shard is in progress (blocks a second
+    /// joiner from grabbing the same id).
+    joining: bool,
+    /// The shard has had a live worker at least once (fleet readiness
+    /// counts dead-but-created shards — their accounting is carried).
+    ever_live: bool,
+    /// Terminal: the shard was drained; submits fail with `Stopping`.
+    drained: bool,
+    /// Submits the *current* worker accepted, counted on this side of the
+    /// wire — the ground truth for shed synthesis when it dies.
+    accepted_era: u64,
+    /// Most recent snapshot pulled from the current worker.
+    last: Option<MetricsSnapshot>,
+    /// Merged accounting of all dead eras (see [`merge_snapshots`]).
+    carry: Option<MetricsSnapshot>,
+    /// One-shot kill trigger (fault injection), armed on the target shard.
+    kill_after: Option<u64>,
+}
+
+/// The remote arm of the [`ShardBackend`] seam: one shard served by a TCP
+/// worker. The state lock is held across each request/response pair, so
+/// request/reply frames can never interleave on the connection.
+struct WorkerShard {
+    shard: usize,
+    state: Mutex<WorkerState>,
+}
+
+impl WorkerShard {
+    fn new(shard: usize, kill_after: Option<u64>) -> WorkerShard {
+        WorkerShard {
+            shard,
+            state: Mutex::new(WorkerState {
+                conn: None,
+                joining: false,
+                ever_live: false,
+                drained: false,
+                accepted_era: 0,
+                last: None,
+                carry: None,
+                kill_after,
+            }),
+        }
+    }
+
+    /// The worker is gone: fold the era's accounting into the carry.
+    /// Everything it accepted but had not completed at the last pull is
+    /// shed — the drain invariant stays exact fleet-wide.
+    fn die(st: &mut WorkerState) {
+        st.conn = None;
+        let mut synth = st.last.take().unwrap_or_default();
+        synth.submitted = st.accepted_era;
+        synth.shed = st.accepted_era.saturating_sub(synth.completed);
+        st.carry = Some(match st.carry.take() {
+            Some(c) => merge_snapshots(&c, &synth),
+            None => synth,
+        });
+        st.accepted_era = 0;
+    }
+
+    fn carry_or_default(st: &WorkerState) -> MetricsSnapshot {
+        st.carry.clone().unwrap_or_default()
+    }
+
+    fn round_trip(conn: &mut TcpStream, msg: &Message) -> io::Result<Message> {
+        send(conn, msg)?;
+        match recv(conn)? {
+            Some(reply) => Ok(reply),
+            None => Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "worker closed mid-request",
+            )),
+        }
+    }
+}
+
+impl ShardBackend for WorkerShard {
+    fn submit(&self, req: ReadRequest) -> Result<(), SubmitError> {
+        let mut st = self.state.lock().unwrap();
+        if st.drained {
+            return Err(SubmitError::Stopping);
+        }
+        if st.conn.is_none() {
+            return Err(SubmitError::ShardDown);
+        }
+        let msg = Message::Submit {
+            id: req.id,
+            tape: req.tape,
+            file_index: req.file_index as u64,
+        };
+        let reply = WorkerShard::round_trip(st.conn.as_mut().unwrap(), &msg);
+        let outcome = match reply {
+            Ok(Message::SubmitResult { outcome }) => outcome,
+            Ok(_) | Err(_) => {
+                WorkerShard::die(&mut st);
+                return Err(SubmitError::ShardDown);
+            }
+        };
+        if outcome == SubmitOutcome::Accepted {
+            st.accepted_era += 1;
+            if st.kill_after.map_or(false, |n| st.accepted_era >= n) {
+                // Fault injection: the request was accepted, then the
+                // worker "crashes" — the shed synthesis must cover it.
+                st.kill_after = None;
+                if let Some(c) = &st.conn {
+                    c.shutdown(Shutdown::Both).ok();
+                }
+                WorkerShard::die(&mut st);
+            }
+        }
+        outcome.into_submit()
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        let mut st = self.state.lock().unwrap();
+        if st.drained || st.conn.is_none() {
+            return WorkerShard::carry_or_default(&st);
+        }
+        let reply = WorkerShard::round_trip(st.conn.as_mut().unwrap(), &Message::MetricsPull);
+        match reply {
+            Ok(Message::MetricsReply { loads }) => {
+                let m = loads
+                    .into_iter()
+                    .find(|l| l.shard == self.shard)
+                    .map(|l| l.metrics)
+                    .unwrap_or_default();
+                st.last = Some(m.clone());
+                match &st.carry {
+                    Some(c) => merge_snapshots(c, &m),
+                    None => m,
+                }
+            }
+            Ok(_) | Err(_) => {
+                WorkerShard::die(&mut st);
+                WorkerShard::carry_or_default(&st)
+            }
+        }
+    }
+
+    fn drain(&self) -> (Vec<Completion>, MetricsSnapshot) {
+        let mut st = self.state.lock().unwrap();
+        if st.drained {
+            return (Vec::new(), WorkerShard::carry_or_default(&st));
+        }
+        st.drained = true;
+        if st.conn.is_none() {
+            // Already died: the carry IS the shard's final accounting.
+            return (Vec::new(), WorkerShard::carry_or_default(&st));
+        }
+        let reply = WorkerShard::round_trip(st.conn.as_mut().unwrap(), &Message::Drain);
+        match reply {
+            Ok(Message::DrainResult { completions, loads }) => {
+                let fin = loads
+                    .into_iter()
+                    .find(|l| l.shard == self.shard)
+                    .map(|l| l.metrics)
+                    .unwrap_or_default();
+                let merged = match &st.carry {
+                    Some(c) => merge_snapshots(c, &fin),
+                    None => fin,
+                };
+                st.carry = Some(merged.clone());
+                if let Some(conn) = st.conn.as_mut() {
+                    send(conn, &Message::Shutdown).ok();
+                }
+                st.conn = None;
+                st.last = None;
+                st.accepted_era = 0;
+                (completions, merged)
+            }
+            Ok(_) | Err(_) => {
+                WorkerShard::die(&mut st);
+                (Vec::new(), WorkerShard::carry_or_default(&st))
+            }
+        }
+    }
+}
+
+struct ServerState {
+    set: RwLock<ShardSet>,
+    members: Mutex<BTreeMap<usize, Arc<WorkerShard>>>,
+    fleet_ready: Condvar,
+    done: AtomicBool,
+    partitions: BTreeMap<usize, Vec<Tape>>,
+    shard_cfg: CoordinatorConfig,
+    policy: String,
+    n_shards: usize,
+    kill: Option<(usize, u64)>,
+}
+
+impl ServerState {
+    /// All `n_shards` have been live at least once (a shard whose worker
+    /// died still counts: its accounting is carried and submits to it
+    /// report `ShardDown` rather than wedging the fleet).
+    fn fleet_ready(members: &BTreeMap<usize, Arc<WorkerShard>>, n_shards: usize) -> bool {
+        members.len() == n_shards
+            && members.values().all(|w| w.state.lock().unwrap().ever_live)
+    }
+
+    fn wait_fleet_ready(&self) {
+        let mut members = self.members.lock().unwrap();
+        while !ServerState::fleet_ready(&members, self.n_shards)
+            && !self.done.load(Ordering::SeqCst)
+        {
+            let (guard, _) = self
+                .fleet_ready
+                .wait_timeout(members, Duration::from_millis(50))
+                .unwrap();
+            members = guard;
+        }
+    }
+}
+
+/// Serve a fleet on `listener` until a client drains or shuts it down.
+/// This is `tapesched coordinator --listen ADDR --shards N`: bind first,
+/// then call `serve` — workers and clients may connect in any order
+/// (clients block until all `n_shards` workers have joined).
+pub fn serve(
+    listener: TcpListener,
+    cfg: CoordinatorServerConfig,
+    catalog: Vec<Tape>,
+) -> io::Result<()> {
+    assert!(cfg.n_shards > 0, "a fleet needs at least one shard");
+    let ring = HashRing::new(cfg.n_shards, cfg.vnodes);
+    let partitions = partition_catalog(&ring, catalog);
+    let state = Arc::new(ServerState {
+        set: RwLock::new(ShardSet::new(ring)),
+        members: Mutex::new(BTreeMap::new()),
+        fleet_ready: Condvar::new(),
+        done: AtomicBool::new(false),
+        partitions,
+        shard_cfg: cfg.shard,
+        policy: cfg.policy,
+        n_shards: cfg.n_shards,
+        kill: cfg.kill,
+    });
+    // Poll accept so the loop can observe `done` (set by the draining
+    // client's handler thread) without a self-connection trick.
+    listener.set_nonblocking(true)?;
+    while !state.done.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let state = Arc::clone(&state);
+                // Handler threads are detached: they exit on client EOF,
+                // and the drain handler replies before flagging `done`.
+                std::thread::spawn(move || {
+                    let _ = handle_connection(state, stream);
+                });
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+fn handle_connection(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true).ok();
+    match recv(&mut stream)? {
+        Some(Message::Hello { version, role }) => {
+            if version != PROTOCOL_VERSION {
+                send(
+                    &mut stream,
+                    &Message::Error {
+                        message: format!(
+                            "protocol version mismatch: coordinator speaks \
+                             {PROTOCOL_VERSION}, peer speaks {version}"
+                        ),
+                    },
+                )?;
+                return Ok(());
+            }
+            match role {
+                Role::Worker => handle_worker(state, stream),
+                Role::Client => handle_client(state, stream),
+            }
+        }
+        other => {
+            send(
+                &mut stream,
+                &Message::Error {
+                    message: format!("expected Hello, got {other:?}"),
+                },
+            )?;
+            Ok(())
+        }
+    }
+}
+
+/// Assign the joining worker a shard — the lowest id that never had a
+/// worker, else the lowest whose worker died (a rejoin: it inherits the
+/// dead shard's id, catalog partition, and carried accounting) — then run
+/// the handshake and mark the shard live.
+fn handle_worker(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<()> {
+    let (id, shard_arc, fresh) = {
+        let mut members = state.members.lock().unwrap();
+        let mut pick = None;
+        for id in 0..state.n_shards {
+            match members.get(&id) {
+                None => {
+                    pick = Some(id);
+                    break;
+                }
+                Some(ws) => {
+                    let mut st = ws.state.lock().unwrap();
+                    if st.conn.is_none() && !st.drained && !st.joining {
+                        st.joining = true;
+                        pick = Some(id);
+                        break;
+                    }
+                }
+            }
+        }
+        let Some(id) = pick else {
+            send(
+                &mut stream,
+                &Message::Error { message: "no shard available for a worker".into() },
+            )?;
+            return Ok(());
+        };
+        match members.get(&id) {
+            Some(ws) => (id, Arc::clone(ws), false),
+            None => {
+                let kill_after =
+                    state.kill.and_then(|(s, n)| (s == id).then_some(n));
+                let ws = Arc::new(WorkerShard::new(id, kill_after));
+                ws.state.lock().unwrap().joining = true;
+                members.insert(id, Arc::clone(&ws));
+                (id, ws, true)
+            }
+        }
+    };
+    if fresh {
+        state.set.write().unwrap().attach(id, Arc::clone(&shard_arc) as Arc<dyn ShardBackend>);
+    }
+    let handshake = (|| -> io::Result<()> {
+        send(
+            &mut stream,
+            &Message::HelloAck { version: PROTOCOL_VERSION, shard: id as u32 },
+        )?;
+        send(
+            &mut stream,
+            &Message::Assign {
+                shard: id as u32,
+                policy: state.policy.clone(),
+                config: state.shard_cfg.clone(),
+                catalog: state.partitions.get(&id).cloned().unwrap_or_default(),
+            },
+        )?;
+        match recv(&mut stream)? {
+            Some(Message::AssignAck { shard }) if shard == id as u32 => Ok(()),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected AssignAck for shard {id}, got {other:?}"),
+            )),
+        }
+    })();
+    {
+        let mut st = shard_arc.state.lock().unwrap();
+        st.joining = false;
+        if handshake.is_ok() {
+            st.conn = Some(stream);
+            st.ever_live = true;
+        }
+    }
+    // Wake clients blocked on fleet readiness (the members mutex is the
+    // condvar's companion; notify without it is fine — waiters re-check).
+    state.fleet_ready.notify_all();
+    handshake
+}
+
+fn handle_client(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<()> {
+    send(
+        &mut stream,
+        &Message::HelloAck { version: PROTOCOL_VERSION, shard: u32::MAX },
+    )?;
+    // Block until every shard has a worker: the ShardSet routes over all
+    // of them, and a half-joined fleet would misreport ShardDown.
+    state.wait_fleet_ready();
+    loop {
+        match recv(&mut stream)? {
+            None => return Ok(()),
+            Some(Message::Submit { id, tape, file_index }) => {
+                let result = state.set.read().unwrap().submit(ReadRequest {
+                    id,
+                    tape,
+                    file_index: file_index as usize,
+                });
+                send(
+                    &mut stream,
+                    &Message::SubmitResult {
+                        outcome: SubmitOutcome::from_submit(&result),
+                    },
+                )?;
+            }
+            Some(Message::MetricsPull) => {
+                let loads = state.set.read().unwrap().loads();
+                send(&mut stream, &Message::MetricsReply { loads })?;
+            }
+            Some(Message::Drain) => {
+                let (completions, loads) = state.set.read().unwrap().drain();
+                send(&mut stream, &Message::DrainResult { completions, loads })?;
+                // Reply first, then stop the accept loop: the frame is in
+                // the socket before the process can exit.
+                state.done.store(true, Ordering::SeqCst);
+                return Ok(());
+            }
+            Some(Message::Shutdown) => {
+                // Abandon without draining: tell live workers to exit.
+                let members = state.members.lock().unwrap();
+                for ws in members.values() {
+                    let mut st = ws.state.lock().unwrap();
+                    if let Some(conn) = st.conn.as_mut() {
+                        send(conn, &Message::Shutdown).ok();
+                    }
+                    st.conn = None;
+                }
+                drop(members);
+                state.done.store(true, Ordering::SeqCst);
+                return Ok(());
+            }
+            Some(other) => {
+                send(
+                    &mut stream,
+                    &Message::Error {
+                        message: format!("coordinator cannot serve {other:?}"),
+                    },
+                )?;
+                return Ok(());
+            }
+        }
+    }
+}

@@ -1,0 +1,695 @@
+//! Message layer: tags, bodies, and their explicit serialization.
+//!
+//! Every frame payload is `tag: u8` followed by the tag's body, encoded
+//! with four primitives only — `u8`, big-endian fixed-width integers,
+//! `f64` as its IEEE-754 bit pattern (`to_bits`, so values round-trip
+//! *exactly*: the loopback-parity gate compares tour costs bit for bit),
+//! and length-prefixed UTF-8 strings (`u32` BE length + bytes). No
+//! varints, no optional fields: decode either consumes the body exactly or
+//! fails. The full format is specified in `rust/README.md`.
+//!
+//! The conversation (see [`super::server`]):
+//!
+//! ```text
+//!   any peer   → Hello{version, role}        (first frame on a connection)
+//!   coordinator→ HelloAck{version, shard}    (or Error + close on mismatch)
+//!   coordinator→ Assign{shard, policy, config, catalog}   (workers only)
+//!   worker     → AssignAck{shard}
+//!   client     → Submit / MetricsPull / Drain / Shutdown
+//!   coordinator→ SubmitResult / MetricsReply / DrainResult
+//! ```
+
+use crate::cluster::ShardLoad;
+use crate::coordinator::{
+    BatcherConfig, Completion, CoordinatorConfig, MetricsSnapshot, SubmitError,
+};
+use crate::model::{FileExtent, Tape};
+use crate::sim::{Affinity, DriveParams};
+
+/// Bumped on any incompatible change to the frame or message format. The
+/// handshake rejects a peer with a different version outright — there is
+/// no negotiation, the fleet is deployed as one unit.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Decode failure: the payload did not match its tag's schema.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The body ended before the schema was satisfied.
+    Truncated,
+    /// Unknown message tag.
+    BadTag(u8),
+    /// An enum byte outside its domain (`what` names the field).
+    BadEnum { what: &'static str, value: u8 },
+    /// A string body was not UTF-8.
+    BadUtf8,
+    /// Bytes remained after the schema was satisfied.
+    TrailingBytes(usize),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "message body truncated"),
+            WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::BadEnum { what, value } => {
+                write!(f, "bad {what} discriminant {value}")
+            }
+            WireError::BadUtf8 => write!(f, "string field is not UTF-8"),
+            WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after message"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<WireError> for std::io::Error {
+    fn from(e: WireError) -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+    }
+}
+
+/// Who is on the far end of a fresh connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Submits requests and pulls metrics (a [`super::client::RemoteCluster`]).
+    Client,
+    /// Runs a shard's `Coordinator` and serves routed submits.
+    Worker,
+}
+
+/// Wire form of `Result<(), SubmitError>` plus the one condition only the
+/// networked coordinator can produce: the routed shard is down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    Accepted,
+    UnknownTape,
+    BadFileIndex,
+    Stopping,
+    Busy,
+    /// The shard this tape routes to has no live worker; the request was
+    /// never accepted (non-retryable until a replacement worker rejoins).
+    ShardDown,
+}
+
+impl SubmitOutcome {
+    pub fn from_submit(r: &Result<(), SubmitError>) -> SubmitOutcome {
+        match r {
+            Ok(()) => SubmitOutcome::Accepted,
+            Err(SubmitError::UnknownTape) => SubmitOutcome::UnknownTape,
+            Err(SubmitError::BadFileIndex) => SubmitOutcome::BadFileIndex,
+            Err(SubmitError::Stopping) => SubmitOutcome::Stopping,
+            Err(SubmitError::Busy) => SubmitOutcome::Busy,
+            Err(SubmitError::ShardDown) => SubmitOutcome::ShardDown,
+        }
+    }
+
+    pub fn into_submit(self) -> Result<(), SubmitError> {
+        match self {
+            SubmitOutcome::Accepted => Ok(()),
+            SubmitOutcome::UnknownTape => Err(SubmitError::UnknownTape),
+            SubmitOutcome::BadFileIndex => Err(SubmitError::BadFileIndex),
+            SubmitOutcome::Stopping => Err(SubmitError::Stopping),
+            SubmitOutcome::Busy => Err(SubmitError::Busy),
+            SubmitOutcome::ShardDown => Err(SubmitError::ShardDown),
+        }
+    }
+}
+
+/// Every message that can cross a connection. One frame = one message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    Hello { version: u16, role: Role },
+    /// `shard` is the assigned shard id for a worker, `u32::MAX` for a
+    /// client (clients have no shard identity).
+    HelloAck { version: u16, shard: u32 },
+    /// Hand a worker its shard: the coordinator-wide policy name, the
+    /// shard's `CoordinatorConfig`, and its ring partition of the catalog.
+    Assign { shard: u32, policy: String, config: CoordinatorConfig, catalog: Vec<Tape> },
+    AssignAck { shard: u32 },
+    Submit { id: u64, tape: String, file_index: u64 },
+    SubmitResult { outcome: SubmitOutcome },
+    MetricsPull,
+    /// Per-shard loads. A worker replies with exactly one entry (its own
+    /// shard, `routed = 0` — the coordinator owns routing counts); the
+    /// coordinator replies to clients with the whole fleet.
+    MetricsReply { loads: Vec<ShardLoad> },
+    Drain,
+    DrainResult { completions: Vec<Completion>, loads: Vec<ShardLoad> },
+    Shutdown,
+    /// Handshake or protocol failure; the sender closes after this.
+    Error { message: String },
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_ASSIGN: u8 = 3;
+const TAG_ASSIGN_ACK: u8 = 4;
+const TAG_SUBMIT: u8 = 5;
+const TAG_SUBMIT_RESULT: u8 = 6;
+const TAG_METRICS_PULL: u8 = 7;
+const TAG_METRICS_REPLY: u8 = 8;
+const TAG_DRAIN: u8 = 9;
+const TAG_DRAIN_RESULT: u8 = 10;
+const TAG_SHUTDOWN: u8 = 11;
+const TAG_ERROR: u8 = 12;
+
+// ---- encode primitives ------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    put_u8(out, v as u8);
+}
+
+// ---- decode primitives ------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    fn bool(&mut self, what: &'static str) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(WireError::BadEnum { what, value: v }),
+        }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+// ---- composite fields -------------------------------------------------
+
+fn put_tape(out: &mut Vec<u8>, t: &Tape) {
+    put_str(out, &t.name);
+    put_u32(out, t.files.len() as u32);
+    for f in &t.files {
+        put_u64(out, f.left);
+        put_u64(out, f.size);
+    }
+}
+
+fn get_tape(r: &mut Reader) -> Result<Tape, WireError> {
+    let name = r.str()?;
+    let n = r.u32()? as usize;
+    let mut files = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let left = r.u64()?;
+        let size = r.u64()?;
+        files.push(FileExtent { left, size });
+    }
+    Ok(Tape { name, files })
+}
+
+fn put_config(out: &mut Vec<u8>, c: &CoordinatorConfig) {
+    put_u32(out, c.n_drives as u32);
+    put_u64(out, c.batcher.window.as_nanos() as u64);
+    put_u32(out, c.batcher.max_batch as u32);
+    put_u64(out, c.batcher.max_tape_backlog as u64);
+    put_f64(out, c.drive.mount_s);
+    put_f64(out, c.drive.unmount_s);
+    put_f64(out, c.drive.bytes_per_s);
+    put_f64(out, c.drive.uturn_s);
+    put_u32(out, c.drive.n_arms as u32);
+    put_u8(out, match c.affinity {
+        Affinity::None => 0,
+        Affinity::Lru => 1,
+    });
+    put_bool(out, c.exclusive_tapes);
+}
+
+fn get_config(r: &mut Reader) -> Result<CoordinatorConfig, WireError> {
+    let n_drives = r.u32()? as usize;
+    let window = std::time::Duration::from_nanos(r.u64()?);
+    let max_batch = r.u32()? as usize;
+    let max_tape_backlog = r.u64()? as usize;
+    let mount_s = r.f64()?;
+    let unmount_s = r.f64()?;
+    let bytes_per_s = r.f64()?;
+    let uturn_s = r.f64()?;
+    let n_arms = r.u32()? as usize;
+    let affinity = match r.u8()? {
+        0 => Affinity::None,
+        1 => Affinity::Lru,
+        v => return Err(WireError::BadEnum { what: "affinity", value: v }),
+    };
+    let exclusive_tapes = r.bool("exclusive_tapes")?;
+    Ok(CoordinatorConfig {
+        n_drives,
+        batcher: BatcherConfig { window, max_batch, max_tape_backlog },
+        drive: DriveParams { mount_s, unmount_s, bytes_per_s, uturn_s, n_arms },
+        affinity,
+        exclusive_tapes,
+    })
+}
+
+/// [`MetricsSnapshot`] in exact declaration order — extend *in place* when
+/// the snapshot grows (and bump [`PROTOCOL_VERSION`]).
+fn put_snapshot(out: &mut Vec<u8>, m: &MetricsSnapshot) {
+    put_u64(out, m.submitted);
+    put_u64(out, m.completed);
+    put_u64(out, m.rejected);
+    put_u64(out, m.shed);
+    put_u64(out, m.batches);
+    put_u64(out, m.remount_hits);
+    put_u64(out, m.remount_misses);
+    put_u64(out, m.cartridge_parks);
+    put_f64(out, m.mean_cartridge_wait_s);
+    put_f64(out, m.max_cartridge_wait_s);
+    put_u64(out, m.arm_ops);
+    put_f64(out, m.mean_arm_wait_s);
+    put_f64(out, m.max_arm_wait_s);
+    put_f64(out, m.mean_latency_s);
+    put_f64(out, m.mean_service_s);
+    put_f64(out, m.mean_sched_s_per_batch);
+    put_f64(out, m.p50_latency_s);
+    put_f64(out, m.p99_latency_s);
+}
+
+fn get_snapshot(r: &mut Reader) -> Result<MetricsSnapshot, WireError> {
+    Ok(MetricsSnapshot {
+        submitted: r.u64()?,
+        completed: r.u64()?,
+        rejected: r.u64()?,
+        shed: r.u64()?,
+        batches: r.u64()?,
+        remount_hits: r.u64()?,
+        remount_misses: r.u64()?,
+        cartridge_parks: r.u64()?,
+        mean_cartridge_wait_s: r.f64()?,
+        max_cartridge_wait_s: r.f64()?,
+        arm_ops: r.u64()?,
+        mean_arm_wait_s: r.f64()?,
+        max_arm_wait_s: r.f64()?,
+        mean_latency_s: r.f64()?,
+        mean_service_s: r.f64()?,
+        mean_sched_s_per_batch: r.f64()?,
+        p50_latency_s: r.f64()?,
+        p99_latency_s: r.f64()?,
+    })
+}
+
+fn put_loads(out: &mut Vec<u8>, loads: &[ShardLoad]) {
+    put_u32(out, loads.len() as u32);
+    for l in loads {
+        put_u32(out, l.shard as u32);
+        put_u64(out, l.routed);
+        put_snapshot(out, &l.metrics);
+    }
+}
+
+fn get_loads(r: &mut Reader) -> Result<Vec<ShardLoad>, WireError> {
+    let n = r.u32()? as usize;
+    let mut loads = Vec::with_capacity(n.min(1 << 12));
+    for _ in 0..n {
+        let shard = r.u32()? as usize;
+        let routed = r.u64()?;
+        let metrics = get_snapshot(r)?;
+        loads.push(ShardLoad { shard, routed, metrics });
+    }
+    Ok(loads)
+}
+
+fn put_completions(out: &mut Vec<u8>, cs: &[Completion]) {
+    put_u32(out, cs.len() as u32);
+    for c in cs {
+        put_u64(out, c.request_id);
+        put_str(out, &c.tape);
+        put_f64(out, c.latency_s);
+        put_f64(out, c.service_s);
+    }
+}
+
+fn get_completions(r: &mut Reader) -> Result<Vec<Completion>, WireError> {
+    let n = r.u32()? as usize;
+    let mut cs = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let request_id = r.u64()?;
+        let tape = r.str()?;
+        let latency_s = r.f64()?;
+        let service_s = r.f64()?;
+        cs.push(Completion { request_id, tape, latency_s, service_s });
+    }
+    Ok(cs)
+}
+
+// ---- message codec ----------------------------------------------------
+
+/// Encode a message into a frame payload (tag + body).
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut out = Vec::new();
+    match msg {
+        Message::Hello { version, role } => {
+            put_u8(&mut out, TAG_HELLO);
+            put_u16(&mut out, *version);
+            put_u8(&mut out, match role {
+                Role::Client => 0,
+                Role::Worker => 1,
+            });
+        }
+        Message::HelloAck { version, shard } => {
+            put_u8(&mut out, TAG_HELLO_ACK);
+            put_u16(&mut out, *version);
+            put_u32(&mut out, *shard);
+        }
+        Message::Assign { shard, policy, config, catalog } => {
+            put_u8(&mut out, TAG_ASSIGN);
+            put_u32(&mut out, *shard);
+            put_str(&mut out, policy);
+            put_config(&mut out, config);
+            put_u32(&mut out, catalog.len() as u32);
+            for t in catalog {
+                put_tape(&mut out, t);
+            }
+        }
+        Message::AssignAck { shard } => {
+            put_u8(&mut out, TAG_ASSIGN_ACK);
+            put_u32(&mut out, *shard);
+        }
+        Message::Submit { id, tape, file_index } => {
+            put_u8(&mut out, TAG_SUBMIT);
+            put_u64(&mut out, *id);
+            put_str(&mut out, tape);
+            put_u64(&mut out, *file_index);
+        }
+        Message::SubmitResult { outcome } => {
+            put_u8(&mut out, TAG_SUBMIT_RESULT);
+            put_u8(&mut out, match outcome {
+                SubmitOutcome::Accepted => 0,
+                SubmitOutcome::UnknownTape => 1,
+                SubmitOutcome::BadFileIndex => 2,
+                SubmitOutcome::Stopping => 3,
+                SubmitOutcome::Busy => 4,
+                SubmitOutcome::ShardDown => 5,
+            });
+        }
+        Message::MetricsPull => put_u8(&mut out, TAG_METRICS_PULL),
+        Message::MetricsReply { loads } => {
+            put_u8(&mut out, TAG_METRICS_REPLY);
+            put_loads(&mut out, loads);
+        }
+        Message::Drain => put_u8(&mut out, TAG_DRAIN),
+        Message::DrainResult { completions, loads } => {
+            put_u8(&mut out, TAG_DRAIN_RESULT);
+            put_completions(&mut out, completions);
+            put_loads(&mut out, loads);
+        }
+        Message::Shutdown => put_u8(&mut out, TAG_SHUTDOWN),
+        Message::Error { message } => {
+            put_u8(&mut out, TAG_ERROR);
+            put_str(&mut out, message);
+        }
+    }
+    out
+}
+
+/// Decode a frame payload. The whole payload must be consumed.
+pub fn decode(payload: &[u8]) -> Result<Message, WireError> {
+    let mut r = Reader::new(payload);
+    let tag = r.u8()?;
+    let msg = match tag {
+        TAG_HELLO => {
+            let version = r.u16()?;
+            let role = match r.u8()? {
+                0 => Role::Client,
+                1 => Role::Worker,
+                v => return Err(WireError::BadEnum { what: "role", value: v }),
+            };
+            Message::Hello { version, role }
+        }
+        TAG_HELLO_ACK => Message::HelloAck { version: r.u16()?, shard: r.u32()? },
+        TAG_ASSIGN => {
+            let shard = r.u32()?;
+            let policy = r.str()?;
+            let config = get_config(&mut r)?;
+            let n = r.u32()? as usize;
+            let mut catalog = Vec::with_capacity(n.min(1 << 12));
+            for _ in 0..n {
+                catalog.push(get_tape(&mut r)?);
+            }
+            Message::Assign { shard, policy, config, catalog }
+        }
+        TAG_ASSIGN_ACK => Message::AssignAck { shard: r.u32()? },
+        TAG_SUBMIT => {
+            Message::Submit { id: r.u64()?, tape: r.str()?, file_index: r.u64()? }
+        }
+        TAG_SUBMIT_RESULT => {
+            let outcome = match r.u8()? {
+                0 => SubmitOutcome::Accepted,
+                1 => SubmitOutcome::UnknownTape,
+                2 => SubmitOutcome::BadFileIndex,
+                3 => SubmitOutcome::Stopping,
+                4 => SubmitOutcome::Busy,
+                5 => SubmitOutcome::ShardDown,
+                v => return Err(WireError::BadEnum { what: "submit outcome", value: v }),
+            };
+            Message::SubmitResult { outcome }
+        }
+        TAG_METRICS_PULL => Message::MetricsPull,
+        TAG_METRICS_REPLY => Message::MetricsReply { loads: get_loads(&mut r)? },
+        TAG_DRAIN => Message::Drain,
+        TAG_DRAIN_RESULT => {
+            let completions = get_completions(&mut r)?;
+            let loads = get_loads(&mut r)?;
+            Message::DrainResult { completions, loads }
+        }
+        TAG_SHUTDOWN => Message::Shutdown,
+        TAG_ERROR => Message::Error { message: r.str()? },
+        other => return Err(WireError::BadTag(other)),
+    };
+    if r.remaining() > 0 {
+        return Err(WireError::TrailingBytes(r.remaining()));
+    }
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: 101,
+            completed: 88,
+            rejected: 3,
+            shed: 13,
+            batches: 21,
+            remount_hits: 5,
+            remount_misses: 16,
+            cartridge_parks: 2,
+            mean_cartridge_wait_s: 0.125,
+            max_cartridge_wait_s: 1.5,
+            arm_ops: 17,
+            mean_arm_wait_s: 0.03125,
+            max_arm_wait_s: 2.25,
+            mean_latency_s: 61.0625,
+            mean_service_s: 12.5,
+            mean_sched_s_per_batch: 0.0009765625,
+            p50_latency_s: 55.5,
+            p99_latency_s: 120.75,
+        }
+    }
+
+    fn sample_messages() -> Vec<Message> {
+        let config = CoordinatorConfig {
+            n_drives: 6,
+            batcher: BatcherConfig {
+                window: Duration::from_millis(250),
+                max_batch: 512,
+                max_tape_backlog: 1 << 14,
+            },
+            drive: DriveParams {
+                mount_s: 60.0,
+                unmount_s: 40.0,
+                bytes_per_s: 2e11,
+                uturn_s: 2.0,
+                n_arms: 3,
+            },
+            affinity: Affinity::Lru,
+            exclusive_tapes: true,
+        };
+        let catalog = vec![
+            Tape::from_sizes("TAPE000", &[1_000, 2_000, 3_000]),
+            Tape::from_sizes("TAPE001", &[500; 8]),
+            Tape { name: "EMPTY".into(), files: Vec::new() },
+        ];
+        vec![
+            Message::Hello { version: PROTOCOL_VERSION, role: Role::Client },
+            Message::Hello { version: PROTOCOL_VERSION, role: Role::Worker },
+            Message::HelloAck { version: PROTOCOL_VERSION, shard: u32::MAX },
+            Message::Assign { shard: 2, policy: "SimpleDP".into(), config, catalog },
+            Message::AssignAck { shard: 2 },
+            Message::Submit { id: u64::MAX - 7, tape: "TAPE001".into(), file_index: 3 },
+            Message::SubmitResult { outcome: SubmitOutcome::Accepted },
+            Message::SubmitResult { outcome: SubmitOutcome::Busy },
+            Message::SubmitResult { outcome: SubmitOutcome::ShardDown },
+            Message::MetricsPull,
+            Message::MetricsReply {
+                loads: vec![
+                    ShardLoad { shard: 0, routed: 40, metrics: sample_snapshot() },
+                    ShardLoad { shard: 3, routed: 61, metrics: sample_snapshot() },
+                ],
+            },
+            Message::Drain,
+            Message::DrainResult {
+                completions: vec![
+                    Completion {
+                        request_id: 9,
+                        tape: "TAPE000".into(),
+                        latency_s: 61.0625,
+                        service_s: 12.03125,
+                    },
+                    Completion {
+                        request_id: 10,
+                        tape: "TAPE001".into(),
+                        latency_s: 0.5,
+                        service_s: 0.25,
+                    },
+                ],
+                loads: vec![ShardLoad { shard: 1, routed: 2, metrics: sample_snapshot() }],
+            },
+            Message::Shutdown,
+            Message::Error { message: "protocol version mismatch".into() },
+        ]
+    }
+
+    #[test]
+    fn every_message_round_trips_exactly() {
+        for msg in sample_messages() {
+            let bytes = encode(&msg);
+            let back = decode(&bytes).unwrap_or_else(|e| panic!("{msg:?}: {e}"));
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn f64_fields_round_trip_bit_for_bit() {
+        // Values with no short decimal form: the bit-pattern encoding must
+        // reproduce them exactly (the loopback-parity gate depends on it).
+        let vals = [std::f64::consts::PI, 1.0 / 3.0, f64::MIN_POSITIVE, 1e300, -0.0];
+        for &v in &vals {
+            let msg = Message::DrainResult {
+                completions: vec![Completion {
+                    request_id: 1,
+                    tape: "T".into(),
+                    latency_s: v,
+                    service_s: -v,
+                }],
+                loads: Vec::new(),
+            };
+            match decode(&encode(&msg)).unwrap() {
+                Message::DrainResult { completions, .. } => {
+                    assert_eq!(completions[0].latency_s.to_bits(), v.to_bits());
+                    assert_eq!(completions[0].service_s.to_bits(), (-v).to_bits());
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_bodies_are_rejected() {
+        for msg in sample_messages() {
+            let bytes = encode(&msg);
+            // Chopping any suffix (including the whole body) must fail,
+            // never panic and never mis-decode.
+            for cut in 0..bytes.len() {
+                assert!(
+                    decode(&bytes[..cut]).is_err(),
+                    "{msg:?} decoded from a {cut}-byte prefix"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_and_bad_tags_are_rejected() {
+        let mut bytes = encode(&Message::MetricsPull);
+        bytes.push(0);
+        assert_eq!(decode(&bytes), Err(WireError::TrailingBytes(1)));
+        assert_eq!(decode(&[200]), Err(WireError::BadTag(200)));
+        assert_eq!(decode(&[]), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn bad_enum_discriminants_are_rejected() {
+        // Hello with role byte 9.
+        let mut bytes = encode(&Message::Hello {
+            version: PROTOCOL_VERSION,
+            role: Role::Client,
+        });
+        *bytes.last_mut().unwrap() = 9;
+        assert_eq!(decode(&bytes), Err(WireError::BadEnum { what: "role", value: 9 }));
+        // SubmitResult with outcome byte 77.
+        let mut bytes = encode(&Message::SubmitResult { outcome: SubmitOutcome::Accepted });
+        *bytes.last_mut().unwrap() = 77;
+        assert!(matches!(decode(&bytes), Err(WireError::BadEnum { .. })));
+    }
+}

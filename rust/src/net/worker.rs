@@ -1,0 +1,158 @@
+//! The worker process: one shard's [`Coordinator`] behind a TCP
+//! connection.
+//!
+//! A worker is deliberately thin — it owns no routing, no ring, no fleet
+//! state. It connects to the coordinator process, introduces itself
+//! (`Hello{role: Worker}`), receives its shard assignment (policy name,
+//! [`CoordinatorConfig`], and its ring partition of the catalog), starts a
+//! real in-process `Coordinator` over that partition, and then answers the
+//! coordinator's requests one frame at a time until `Drain`/`Shutdown` or
+//! the connection dies. Because requests arrive over a single connection
+//! and the worker replies in order, the protocol needs no request ids —
+//! the coordinator holds the per-shard connection lock across each
+//! request/response pair (see `net::server`).
+//!
+//! A worker that loses its connection simply exits after discarding its
+//! coordinator; the server side synthesizes the shed accounting for
+//! whatever it had accepted (the drain invariant `submitted − completed −
+//! shed` is kept by the *coordinator*, not by the dying worker).
+
+use std::io;
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use crate::cluster::ShardLoad;
+use crate::coordinator::{Coordinator, ReadRequest, SubmitError};
+use crate::sched::scheduler_by_name;
+
+use super::frame::{read_frame, write_frame};
+use super::wire::{self, Message, Role, SubmitOutcome, PROTOCOL_VERSION};
+
+fn send(stream: &mut TcpStream, msg: &Message) -> io::Result<()> {
+    write_frame(stream, &wire::encode(msg)).map_err(io::Error::from)
+}
+
+/// Read the next message; `Ok(None)` on a clean close at a frame boundary.
+fn recv(stream: &mut TcpStream) -> io::Result<Option<Message>> {
+    match read_frame(stream) {
+        Ok(None) => Ok(None),
+        Ok(Some(payload)) => Ok(Some(wire::decode(&payload)?)),
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// Connect to a coordinator at `addr` and serve a shard until drained,
+/// shut down, or disconnected. This is `tapesched worker --connect ADDR`.
+pub fn run_worker(addr: &str) -> io::Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    run_worker_on(stream)
+}
+
+/// Serve a shard over an already-connected stream (loopback tests connect
+/// the stream themselves).
+pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
+    stream.set_nodelay(true).ok();
+    send(&mut stream, &Message::Hello { version: PROTOCOL_VERSION, role: Role::Worker })?;
+    let shard = match recv(&mut stream)? {
+        Some(Message::HelloAck { shard, .. }) => shard,
+        Some(Message::Error { message }) => {
+            return Err(io::Error::new(io::ErrorKind::ConnectionRefused, message))
+        }
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected HelloAck, got {other:?}"),
+            ))
+        }
+    };
+    let (policy_name, config, catalog) = match recv(&mut stream)? {
+        Some(Message::Assign { shard: s, policy, config, catalog }) if s == shard => {
+            (policy, config, catalog)
+        }
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected Assign for shard {shard}, got {other:?}"),
+            ))
+        }
+    };
+    let policy = scheduler_by_name(&policy_name).ok_or_else(|| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("coordinator assigned unknown policy {policy_name:?}"),
+        )
+    })?;
+    let mut coordinator = Some(Coordinator::start(config, catalog, Arc::from(policy)));
+    send(&mut stream, &Message::AssignAck { shard })?;
+
+    loop {
+        let msg = match recv(&mut stream) {
+            Ok(Some(msg)) => msg,
+            // Clean close or a dead coordinator: discard un-drained work —
+            // the server side sheds this shard's accepted batches.
+            Ok(None) | Err(_) => {
+                if let Some(c) = coordinator.take() {
+                    let _ = c.finish();
+                }
+                return Ok(());
+            }
+        };
+        match msg {
+            Message::Submit { id, tape, file_index } => {
+                let result = match &coordinator {
+                    Some(c) => c.submit(ReadRequest {
+                        id,
+                        tape,
+                        file_index: file_index as usize,
+                    }),
+                    None => Err(SubmitError::Stopping),
+                };
+                send(
+                    &mut stream,
+                    &Message::SubmitResult { outcome: SubmitOutcome::from_submit(&result) },
+                )?;
+            }
+            Message::MetricsPull => {
+                let metrics = match &coordinator {
+                    Some(c) => c.metrics(),
+                    None => Default::default(),
+                };
+                // One entry, own shard, routed = 0: the coordinator owns
+                // routing counts, a worker only knows what it served.
+                send(
+                    &mut stream,
+                    &Message::MetricsReply {
+                        loads: vec![ShardLoad { shard: shard as usize, routed: 0, metrics }],
+                    },
+                )?;
+            }
+            Message::Drain => {
+                let (completions, metrics) = match coordinator.take() {
+                    Some(c) => c.finish(),
+                    None => (Vec::new(), Default::default()),
+                };
+                send(
+                    &mut stream,
+                    &Message::DrainResult {
+                        completions,
+                        loads: vec![ShardLoad { shard: shard as usize, routed: 0, metrics }],
+                    },
+                )?;
+            }
+            Message::Shutdown => {
+                if let Some(c) = coordinator.take() {
+                    let _ = c.finish();
+                }
+                return Ok(());
+            }
+            other => {
+                send(
+                    &mut stream,
+                    &Message::Error {
+                        message: format!("worker cannot serve {other:?}"),
+                    },
+                )?;
+            }
+        }
+    }
+}

@@ -25,7 +25,7 @@ use crate::sim::evaluate;
 pub use crate::resources::{pick_drive_slot, Affinity, MountPlan};
 
 /// Physical drive / robot parameters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DriveParams {
     /// Robot fetch + load + thread time until the tape is readable (s).
     pub mount_s: f64,

@@ -1,0 +1,269 @@
+//! Integration tests for the networked coordinator/worker fleet: loopback
+//! parity with the in-process cluster (same stream, bit-identical virtual
+//! numbers), the dead-worker shed accounting and its drain invariant,
+//! worker rejoin, and the protocol-version handshake refusal.
+
+use std::collections::BTreeSet;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tapesched::cluster::{Cluster, ClusterConfig, HashRing};
+use tapesched::coordinator::{BatcherConfig, CoordinatorConfig, ReadRequest, SubmitError};
+use tapesched::model::Tape;
+use tapesched::net::{
+    read_frame, wire, write_frame, CoordinatorServerConfig, LoopbackFleet, Message, Role,
+    PROTOCOL_VERSION,
+};
+use tapesched::replay::{drive_closed_loop, PoissonArrivals, RequestMix};
+use tapesched::sim::{Affinity, DriveParams};
+
+fn catalog(n: usize) -> Vec<Tape> {
+    (0..n).map(|i| Tape::from_sizes(format!("TAPE{i:03}"), &[1_000; 20])).collect()
+}
+
+/// A catalog guaranteed to span both shards of a 2-shard ring (the kill
+/// and rejoin tests need a surviving shard with work of its own).
+fn two_shard_catalog() -> (Vec<Tape>, HashRing) {
+    let ring = HashRing::new(2, 64);
+    let mut tapes = Vec::new();
+    for i in 0.. {
+        tapes.push(Tape::from_sizes(format!("TAPE{i:03}"), &[1_000; 20]));
+        let covered: BTreeSet<usize> = tapes.iter().map(|t| ring.route(&t.name)).collect();
+        if tapes.len() >= 8 && covered.len() == 2 {
+            break;
+        }
+    }
+    (tapes, ring)
+}
+
+/// One giant batching window flushed at drain, no affinity/arms/
+/// exclusivity: batch composition is then a pure function of the request
+/// stream and the ring, so an in-process and a networked run of the same
+/// stream must agree on every virtual-time number.
+fn drain_flush_cfg(n_drives: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        n_drives,
+        batcher: BatcherConfig {
+            window: Duration::from_secs(3_600),
+            ..BatcherConfig::default()
+        },
+        drive: DriveParams::default(),
+        affinity: Affinity::None,
+        exclusive_tapes: false,
+    }
+}
+
+fn server_cfg(n_shards: usize, kill: Option<(usize, u64)>) -> CoordinatorServerConfig {
+    CoordinatorServerConfig {
+        n_shards,
+        vnodes: 64,
+        shard: drain_flush_cfg(2),
+        policy: "GS".to_string(),
+        kill,
+    }
+}
+
+/// The tentpole's parity contract: the same seeded request stream through
+/// the in-process `Cluster` and through a loopback coordinator/worker
+/// fleet yields identical counters and — request by request — identical
+/// in-tape service times, down to the f64 bits (the wire ships IEEE-754
+/// bits, not decimal). Only wall-clock latency may differ; that
+/// difference is the RPC tax `tapesched rpc-tax` measures.
+#[test]
+fn loopback_fleet_matches_the_in_process_cluster_bit_for_bit() {
+    let tapes = catalog(8);
+    let n_requests = 120u64;
+
+    let cluster = Cluster::start(
+        ClusterConfig {
+            n_shards: 2,
+            vnodes: 64,
+            shard: drain_flush_cfg(2),
+            shard_configs: Vec::new(),
+        },
+        tapes.iter().cloned(),
+        Arc::new(tapesched::sched::Gs),
+    );
+    let mut model = PoissonArrivals::new(RequestMix::new(&tapes), 500.0, f64::INFINITY, 42);
+    let stats = drive_closed_loop(
+        &cluster,
+        &tapes,
+        &mut model,
+        n_requests,
+        Duration::from_millis(1),
+        n_requests,
+    );
+    assert_eq!(stats.submitted, n_requests);
+    assert_eq!(stats.dropped, 0);
+    let (mut local, local_m) = cluster.finish();
+
+    let fleet = LoopbackFleet::spawn(server_cfg(2, None), tapes.clone()).expect("spawn fleet");
+    let client = fleet.client().expect("connect client");
+    let mut model = PoissonArrivals::new(RequestMix::new(&tapes), 500.0, f64::INFINITY, 42);
+    let stats = drive_closed_loop(
+        &client,
+        &tapes,
+        &mut model,
+        n_requests,
+        Duration::from_millis(1),
+        n_requests,
+    );
+    assert_eq!(stats.submitted, n_requests);
+    assert_eq!(stats.dropped, 0);
+    let (remote, remote_m) = client.drain().expect("drain fleet");
+    let (server, workers) = fleet.join();
+    server.expect("server exits cleanly");
+    for w in workers {
+        w.expect("worker exits cleanly");
+    }
+
+    assert_eq!(local_m.submitted, remote_m.submitted);
+    assert_eq!(local_m.completed, remote_m.completed);
+    assert_eq!(local_m.shed, remote_m.shed);
+    assert_eq!(local_m.batches, remote_m.batches);
+    assert_eq!(local.len(), remote.len());
+    local.sort_by_key(|c| c.request_id);
+    // The fleet drain is already sorted by request id; sorting the local
+    // side too makes the comparison order-insensitive.
+    for (l, r) in local.iter().zip(&remote) {
+        assert_eq!(l.request_id, r.request_id);
+        assert_eq!(l.tape, r.tape);
+        assert_eq!(
+            l.service_s.to_bits(),
+            r.service_s.to_bits(),
+            "service time must cross the wire exactly (request {})",
+            l.request_id
+        );
+    }
+}
+
+/// A worker cut mid-stream: its accepted-but-unserved work is shed
+/// through the coordinator's synthesized accounting, later submits to the
+/// dead shard fail with `ShardDown` (not `Busy`), the surviving shard
+/// keeps serving, and the fleet-wide drain invariant
+/// `submitted = completed + shed` holds.
+#[test]
+fn a_killed_worker_is_shed_and_the_drain_invariant_holds() {
+    let (tapes, ring) = two_shard_catalog();
+    let victim = ring.route(&tapes[0].name);
+    let fleet =
+        LoopbackFleet::spawn(server_cfg(2, Some((victim, 1))), tapes.clone()).expect("spawn fleet");
+    let client = fleet.client().expect("connect client");
+
+    // First submit routes to the victim, is accepted — and the kill fires
+    // before the reply returns, so the death is visible immediately.
+    let accepted = client
+        .submit(&ReadRequest { id: 0, tape: tapes[0].name.clone(), file_index: 0 })
+        .expect("round trip");
+    assert_eq!(accepted, Ok(()));
+    let down = client
+        .submit(&ReadRequest { id: 1, tape: tapes[0].name.clone(), file_index: 1 })
+        .expect("round trip");
+    assert_eq!(down, Err(SubmitError::ShardDown));
+
+    let mut accepted_elsewhere = 0u64;
+    for (i, tape) in tapes.iter().enumerate() {
+        if ring.route(&tape.name) == victim {
+            continue;
+        }
+        let r = client
+            .submit(&ReadRequest { id: 2 + i as u64, tape: tape.name.clone(), file_index: 0 })
+            .expect("round trip");
+        assert_eq!(r, Ok(()), "the surviving shard must keep serving");
+        accepted_elsewhere += 1;
+    }
+    assert!(accepted_elsewhere > 0, "the catalog must span both shards");
+
+    let (completions, m) = client.drain().expect("drain fleet");
+    assert_eq!(m.submitted, 1 + accepted_elsewhere);
+    assert_eq!(m.shed, 1, "the victim's lost request is shed, not forgotten");
+    assert_eq!(m.completed, accepted_elsewhere);
+    assert_eq!(m.submitted, m.completed + m.shed);
+    assert_eq!(completions.len() as u64, accepted_elsewhere);
+    let _ = fleet.join();
+}
+
+/// A replacement worker is just another joiner: the coordinator hands it
+/// the dead shard's id and catalog partition, the shard serves again (the
+/// kill trigger is one-shot), and the drained accounting stitches both
+/// eras together — era 1's loss shed, era 2's work completed.
+#[test]
+fn a_replacement_worker_takes_over_the_dead_shard_and_resumes() {
+    let (tapes, ring) = two_shard_catalog();
+    let victim_tape = tapes[0].name.clone();
+    let victim = ring.route(&victim_tape);
+    let fleet =
+        LoopbackFleet::spawn(server_cfg(2, Some((victim, 1))), tapes.clone()).expect("spawn fleet");
+    let client = fleet.client().expect("connect client");
+
+    let first = client
+        .submit(&ReadRequest { id: 0, tape: victim_tape.clone(), file_index: 0 })
+        .expect("round trip");
+    assert_eq!(first, Ok(()));
+    let down = client
+        .submit(&ReadRequest { id: 1, tape: victim_tape.clone(), file_index: 1 })
+        .expect("round trip");
+    assert_eq!(down, Err(SubmitError::ShardDown));
+
+    let replacement = LoopbackFleet::spawn_worker(fleet.addr());
+    let mut resumed = false;
+    for _ in 0..500 {
+        let r = client
+            .submit(&ReadRequest { id: 2, tape: victim_tape.clone(), file_index: 2 })
+            .expect("round trip");
+        match r {
+            Ok(()) => {
+                resumed = true;
+                break;
+            }
+            Err(SubmitError::ShardDown) => std::thread::sleep(Duration::from_millis(10)),
+            Err(e) => panic!("unexpected submit error: {e:?}"),
+        }
+    }
+    assert!(resumed, "the replacement worker never took the shard over");
+
+    let (completions, m) = client.drain().expect("drain fleet");
+    assert_eq!(m.submitted, 2);
+    assert_eq!(m.shed, 1, "era 1's lost request stays shed across the rejoin");
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.submitted, m.completed + m.shed);
+    assert_eq!(completions.len(), 1);
+    assert_eq!(completions[0].request_id, 2);
+    let _ = fleet.join();
+    replacement.join().expect("replacement thread panicked").expect("replacement exits cleanly");
+}
+
+/// A peer speaking the wrong protocol version is refused with an explicit
+/// `Error` frame naming both versions, then disconnected — and the fleet
+/// keeps serving well-versed clients afterwards.
+#[test]
+fn a_version_mismatched_peer_is_refused_at_the_handshake() {
+    let tapes = catalog(4);
+    let fleet = LoopbackFleet::spawn(server_cfg(1, None), tapes).expect("spawn fleet");
+
+    let mut raw = TcpStream::connect(fleet.addr()).expect("connect raw");
+    write_frame(
+        &mut raw,
+        &wire::encode(&Message::Hello { version: PROTOCOL_VERSION + 1, role: Role::Client }),
+    )
+    .expect("send mismatched hello");
+    let payload =
+        read_frame(&mut raw).expect("read refusal").expect("server must reply before closing");
+    match wire::decode(&payload).expect("decode refusal") {
+        Message::Error { message } => {
+            assert!(
+                message.contains("protocol version mismatch"),
+                "unhelpful refusal: {message}"
+            );
+        }
+        other => panic!("expected an Error frame, got {other:?}"),
+    }
+    assert!(read_frame(&mut raw).expect("clean close").is_none());
+
+    let client = fleet.client().expect("a well-versed client still connects");
+    let (completions, m) = client.drain().expect("drain fleet");
+    assert!(completions.is_empty());
+    assert_eq!(m.submitted, 0);
+    let _ = fleet.join();
+}

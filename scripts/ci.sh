@@ -174,4 +174,60 @@ print(f"ci: exclusivity gate OK — {on['cartridge_parks']} parks, "
       f"p99.9 {off['latency']['p999_s']:.1f}s -> {on['latency']['p999_s']:.1f}s")
 EOF
 
+# Networked-cluster gate (a) — loopback parity: the same seeded request
+# stream through the in-process Cluster and through a loopback
+# coordinator/worker fleet (every submit a framed TCP round trip) must
+# agree on every virtual-time number: counters identical, tour costs
+# identical (the wire ships IEEE-754 bits, and both modes sum service
+# times in request-id order, so even the printed floats must match
+# exactly). Only wall-clock latency — the RPC tax — may differ.
+./target/release/tapesched rpc-tax --policy GS,SimpleDP --requests 240 \
+    --seed 7 --out /tmp/rpc_tax_ci.json
+python3 - /tmp/rpc_tax_ci.json <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["schema"] == "tapesched-rpc-tax-v1", doc.get("schema")
+assert "kill_report" not in doc, "no kill was requested"
+reports = doc["rpc_reports"]
+assert len(reports) == 2, f"expected 2 policies, got {len(reports)}"
+for r in reports:
+    ip, lb = r["in_process"], r["loopback"]
+    assert ip["submitted"] == lb["submitted"] == doc["requests"], (
+        r["policy"], ip["submitted"], lb["submitted"])
+    assert ip["completed"] == lb["completed"] == doc["requests"], (
+        r["policy"], ip["completed"], lb["completed"])
+    assert ip["shed"] == lb["shed"] == 0, (r["policy"], ip["shed"], lb["shed"])
+    assert ip["dropped"] == lb["dropped"] == 0, (r["policy"], ip["dropped"], lb["dropped"])
+    assert ip["tour_cost_s"] == lb["tour_cost_s"], (
+        f"policy {r['policy']}: tour cost moved across the wire "
+        f"({ip['tour_cost_s']} vs {lb['tour_cost_s']})")
+    for d in (ip, lb):
+        assert 0 <= d["p50_latency_s"] <= d["p99_latency_s"] <= d["p999_latency_s"], d
+    assert isinstance(r["p999_delta_s"], float), r["p999_delta_s"]
+print(f"ci: net parity gate OK ({len(reports)} policies, "
+      f"tour {reports[0]['in_process']['tour_cost_s']:.1f}s both modes)")
+EOF
+
+# Networked-cluster gate (b) — worker crash: one worker is cut after its
+# first accepted request. That request must be shed (not forgotten),
+# later submits to the dead shard must be dropped by the driver (the
+# coordinator answers ShardDown, a non-retryable refusal — not Busy),
+# every arrival must be accounted accepted-or-dropped, and the
+# fleet-wide drain invariant `submitted = completed + shed` must hold.
+./target/release/tapesched rpc-tax --policy GS --requests 120 --seed 7 \
+    --kill-after 1 --out /tmp/rpc_tax_kill_ci.json
+python3 - /tmp/rpc_tax_kill_ci.json <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+k = doc["kill_report"]
+assert k["drain_invariant_holds"] is True, k
+assert k["shed"] >= 1, "the killed worker's accepted request must be shed"
+assert k["submitted"] == k["completed"] + k["shed"], (
+    k["submitted"], k["completed"], k["shed"])
+assert k["submitted"] + k["dropped"] == doc["requests"], (
+    k["submitted"], k["dropped"], doc["requests"])
+print(f"ci: net kill gate OK — shard {k['kill_shard']} cut, "
+      f"{k['shed']} shed, {k['dropped']} dropped, invariant holds")
+EOF
+
 echo "ci: all gates green"
