@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test benches bench-smoke bench-json replay-smoke shard-smoke arm-smoke exclusivity-smoke net-smoke examples fmt fmt-check artifacts ci clean
+.PHONY: verify build test benches bench-smoke bench-json replay-smoke shard-smoke arm-smoke exclusivity-smoke net-smoke obs-smoke examples fmt fmt-check artifacts ci clean
 
 verify: ## tier-1 gate: release build + full test suite
 	$(CARGO) build --release
@@ -107,6 +107,24 @@ net-smoke: build
 	./target/release/tapesched rpc-tax --policy GS --requests 120 --seed 7 \
 		--kill-after 1 --out results/rpc-tax-kill.json
 	@echo "net-smoke: results/rpc-tax.json (vs rpc-tax-kill.json)"
+
+# Observability gate: a traced replay must emit a span stream whose
+# request chains check out (`spans --check` renders the per-stage
+# breakdown), tracing must not move a byte of the QoS JSON, and the
+# push-metrics rpc-tax run must beat the pull-mode closed loop on
+# submits/s (the assertion script lives in scripts/ci.sh; this target
+# reproduces the artifacts).
+obs-smoke: build
+	mkdir -p results
+	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+		--out results/obs-replay-plain.json
+	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+		--trace-out results/obs-trace.jsonl --out results/obs-replay.json
+	cmp results/obs-replay-plain.json results/obs-replay.json
+	./target/release/tapesched spans --in results/obs-trace.jsonl --check
+	./target/release/tapesched rpc-tax --policy GS --requests 240 --seed 7 \
+		--push-metrics --out results/rpc-tax-push.json
+	@echo "obs-smoke: results/obs-trace.jsonl (chains checked), results/rpc-tax-push.json"
 
 examples:
 	$(CARGO) build --examples

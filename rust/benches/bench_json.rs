@@ -14,6 +14,10 @@
 //!   loopback-networked coordinator/worker fleet (the serving seam as a
 //!   framed TCP round trip; the ratio to the previous number is the RPC
 //!   tax in throughput terms).
+//! - `trace_overhead` — percent slowdown of the virtual replay when the
+//!   request-lifecycle `TraceRecorder` is attached (the observability
+//!   tax; near zero by design, since recording is nine ring-buffer
+//!   writes per completion).
 //!
 //! `make bench-json` runs this; `--smoke` (or `TAPESCHED_SMOKE=1`) keeps
 //! it to seconds.
@@ -26,8 +30,10 @@ use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
 use tapesched::dataset::{generate_dataset, GeneratorConfig};
 use tapesched::model::Tape;
 use tapesched::net::{CoordinatorServerConfig, LoopbackFleet};
+use tapesched::obs::{Stage, TraceRecorder, DEFAULT_TRACE_CAP};
 use tapesched::replay::{
-    drive_closed_loop, simulate, LoopMode, PoissonArrivals, ReplayConfig, RequestMix,
+    drive_closed_loop, simulate, simulate_traced, LoopMode, PoissonArrivals, ReplayConfig,
+    RequestMix,
 };
 use tapesched::sched::simpledp_dense::{dense_cost_into, DenseScratch};
 use tapesched::sched::{scheduler_by_name, Gs};
@@ -112,6 +118,23 @@ fn main() {
             eps, out.stats.completed
         );
         entries.push(Entry { name: "replay_events", value: eps, unit: "events/s" });
+
+        // 2b. The observability tax: the identical replay with the span
+        // recorder attached. The recorder is a pure observer, so the
+        // outcome must match and the slowdown should be noise-level.
+        let rec = TraceRecorder::new(DEFAULT_TRACE_CAP);
+        let mut model = PoissonArrivals::new(RequestMix::new(&catalog), rate, duration, 7);
+        let wall = Instant::now();
+        let traced = simulate_traced(&cfg, &catalog, policy.as_ref(), &mut model, Some(&rec));
+        let s_traced = wall.elapsed().as_secs_f64().max(1e-9);
+        assert_eq!(traced.stats.completed, out.stats.completed, "tracing perturbed the replay");
+        assert_eq!(rec.len() as u64, Stage::CHAIN.len() as u64 * traced.stats.completed);
+        let eps_traced = traced.stats.completed as f64 / s_traced;
+        let overhead_pct = (eps / eps_traced - 1.0) * 100.0;
+        println!(
+            "    → trace_overhead: {overhead_pct:.2} % ({eps_traced:.0} traced vs {eps:.0} plain events/s)"
+        );
+        entries.push(Entry { name: "trace_overhead", value: overhead_pct, unit: "percent" });
     }
 
     // 3 + 4. The serving seam, in-process vs over the wire. Same config,
@@ -149,6 +172,8 @@ fn main() {
                 shard: drain_flush_cfg(4),
                 policy: "GS".to_string(),
                 kill: None,
+                push_ms: 0,
+                metrics_listen: None,
             },
             catalog.clone(),
         )
@@ -185,7 +210,7 @@ fn main() {
         })
         .collect();
     let json = format!(
-        "{{\n  \"schema\": \"tapesched-bench-v1\",\n  \"smoke\": {smoke},\n  \
+        "{{\n  \"schema\": \"tapesched-bench-v2\",\n  \"smoke\": {smoke},\n  \
          \"benches\": [\n{}\n  ]\n}}\n",
         body.join(",\n")
     );

@@ -76,6 +76,24 @@ impl ClusterMetricsSnapshot {
     }
 }
 
+/// Weighted mean of per-group means: `Σ meanᵢ·wᵢ / Σ wᵢ`, defined as 0.0
+/// — never NaN — when the total weight is zero. Every mean in
+/// [`merge_snapshots`] and [`rollup`] combines through this one helper,
+/// so an idle fleet (all shards zero completions/parks/ops) reports zero
+/// means and downstream JSON stays finite.
+pub fn weighted_mean(parts: impl IntoIterator<Item = (f64, u64)>) -> f64 {
+    let (mut sum, mut total) = (0.0f64, 0u64);
+    for (mean, w) in parts {
+        sum += mean * w as f64;
+        total += w;
+    }
+    if total == 0 {
+        0.0
+    } else {
+        sum / total as f64
+    }
+}
+
 /// Merge two [`MetricsSnapshot`]s of the *same* shard into one — the
 /// networked coordinator's tool for stitching a shard's history across
 /// worker eras (the carried accounting of a dead worker + whatever its
@@ -93,14 +111,7 @@ pub fn merge_snapshots(a: &MetricsSnapshot, b: &MetricsSnapshot) -> MetricsSnaps
     let batches = a.batches + b.batches;
     let cartridge_parks = a.cartridge_parks + b.cartridge_parks;
     let arm_ops = a.arm_ops + b.arm_ops;
-    let wmean = |ma: f64, wa: u64, mb: f64, wb: u64| -> f64 {
-        let w = wa + wb;
-        if w == 0 {
-            0.0
-        } else {
-            (ma * wa as f64 + mb * wb as f64) / w as f64
-        }
-    };
+    let wmean = |ma: f64, wa: u64, mb: f64, wb: u64| weighted_mean([(ma, wa), (mb, wb)]);
     let pct_side = if b.completed > a.completed { b } else { a };
     MetricsSnapshot {
         submitted: a.submitted + b.submitted,
@@ -158,8 +169,6 @@ pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
         max_shard_completed: 0,
         min_shard_completed: u64::MAX,
     };
-    let (mut lat_sum, mut svc_sum) = (0.0f64, 0.0f64);
-    let (mut cart_sum, mut arm_sum) = (0.0f64, 0.0f64);
     for s in &shards {
         snap.routed_total += s.routed;
         snap.submitted += s.metrics.submitted;
@@ -170,30 +179,25 @@ pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
         snap.remount_hits += s.metrics.remount_hits;
         snap.remount_misses += s.metrics.remount_misses;
         snap.cartridge_parks += s.metrics.cartridge_parks;
-        cart_sum += s.metrics.mean_cartridge_wait_s * s.metrics.cartridge_parks as f64;
         snap.max_cartridge_wait_s =
             snap.max_cartridge_wait_s.max(s.metrics.max_cartridge_wait_s);
         snap.arm_ops += s.metrics.arm_ops;
-        arm_sum += s.metrics.mean_arm_wait_s * s.metrics.arm_ops as f64;
         snap.max_arm_wait_s = snap.max_arm_wait_s.max(s.metrics.max_arm_wait_s);
-        lat_sum += s.metrics.mean_latency_s * s.metrics.completed as f64;
-        svc_sum += s.metrics.mean_service_s * s.metrics.completed as f64;
         snap.max_shard_completed = snap.max_shard_completed.max(s.metrics.completed);
         snap.min_shard_completed = snap.min_shard_completed.min(s.metrics.completed);
     }
     if shards.is_empty() {
         snap.min_shard_completed = 0;
     }
-    if snap.completed > 0 {
-        snap.mean_latency_s = lat_sum / snap.completed as f64;
-        snap.mean_service_s = svc_sum / snap.completed as f64;
-    }
-    if snap.cartridge_parks > 0 {
-        snap.mean_cartridge_wait_s = cart_sum / snap.cartridge_parks as f64;
-    }
-    if snap.arm_ops > 0 {
-        snap.mean_arm_wait_s = arm_sum / snap.arm_ops as f64;
-    }
+    snap.mean_latency_s =
+        weighted_mean(shards.iter().map(|s| (s.metrics.mean_latency_s, s.metrics.completed)));
+    snap.mean_service_s =
+        weighted_mean(shards.iter().map(|s| (s.metrics.mean_service_s, s.metrics.completed)));
+    snap.mean_cartridge_wait_s = weighted_mean(
+        shards.iter().map(|s| (s.metrics.mean_cartridge_wait_s, s.metrics.cartridge_parks)),
+    );
+    snap.mean_arm_wait_s =
+        weighted_mean(shards.iter().map(|s| (s.metrics.mean_arm_wait_s, s.metrics.arm_ops)));
     snap.shards = shards;
     snap
 }
@@ -291,5 +295,69 @@ mod tests {
         ]);
         assert_eq!(idle.min_shard_completed, 0);
         assert_eq!(idle.imbalance_ratio(), f64::INFINITY);
+    }
+
+    #[test]
+    fn empty_rollup_means_are_zero_not_nan() {
+        let empty = rollup(Vec::new());
+        for mean in [
+            empty.mean_latency_s,
+            empty.mean_service_s,
+            empty.mean_cartridge_wait_s,
+            empty.mean_arm_wait_s,
+        ] {
+            assert_eq!(mean, 0.0, "zero-weight means must be exactly 0.0, never NaN");
+        }
+    }
+
+    #[test]
+    fn single_shard_rollup_is_the_identity_on_means() {
+        let only = m(20, 20, 3, 3.5, 1.25);
+        let snap = rollup(vec![ShardLoad { shard: 2, routed: 23, metrics: only.clone() }]);
+        assert!((snap.mean_latency_s - only.mean_latency_s).abs() < 1e-12);
+        assert!((snap.mean_service_s - only.mean_service_s).abs() < 1e-12);
+        assert!((snap.mean_cartridge_wait_s - only.mean_cartridge_wait_s).abs() < 1e-12);
+        assert!((snap.mean_arm_wait_s - only.mean_arm_wait_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_weight_shards_never_pollute_the_weighted_means() {
+        // A shard with zero completions but a garbage (nonzero) mean —
+        // e.g. a synthesized dead-era snapshot — must contribute nothing:
+        // its weight is zero, so the fleet means are the busy shard's.
+        let mut ghost = m(4, 0, 0, 0.0, 0.0);
+        ghost.mean_latency_s = 99.0;
+        ghost.mean_service_s = 99.0;
+        ghost.mean_cartridge_wait_s = 99.0;
+        ghost.mean_arm_wait_s = 99.0;
+        let busy = m(10, 10, 0, 2.0, 1.0);
+        let snap = rollup(vec![
+            ShardLoad { shard: 0, routed: 4, metrics: ghost.clone() },
+            ShardLoad { shard: 1, routed: 10, metrics: busy.clone() },
+        ]);
+        assert!((snap.mean_latency_s - 2.0).abs() < 1e-12);
+        assert!((snap.mean_service_s - 1.0).abs() < 1e-12);
+        assert!((snap.mean_cartridge_wait_s - busy.mean_cartridge_wait_s).abs() < 1e-12);
+        assert!((snap.mean_arm_wait_s - busy.mean_arm_wait_s).abs() < 1e-12);
+
+        // All shards zero-weight: 0.0 across the board, never NaN.
+        let all_idle = rollup(vec![
+            ShardLoad { shard: 0, routed: 0, metrics: m(0, 0, 0, 0.0, 0.0) },
+            ShardLoad { shard: 1, routed: 0, metrics: m(0, 0, 0, 0.0, 0.0) },
+        ]);
+        assert_eq!(all_idle.mean_latency_s, 0.0);
+        assert_eq!(all_idle.mean_cartridge_wait_s, 0.0);
+        // And merge shares the same helper, so the same holds pairwise.
+        let merged = merge_snapshots(&MetricsSnapshot::default(), &MetricsSnapshot::default());
+        assert_eq!(merged.mean_latency_s, 0.0);
+        assert!(!merged.mean_sched_s_per_batch.is_nan());
+    }
+
+    #[test]
+    fn weighted_mean_handles_empty_and_partial_weights() {
+        assert_eq!(weighted_mean([]), 0.0);
+        assert_eq!(weighted_mean([(5.0, 0)]), 0.0);
+        assert!((weighted_mean([(4.0, 30), (1.0, 10)]) - 3.25).abs() < 1e-12);
+        assert!((weighted_mean([(7.0, 0), (2.0, 8)]) - 2.0).abs() < 1e-12);
     }
 }

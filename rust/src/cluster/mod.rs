@@ -47,6 +47,6 @@ pub mod ring;
 pub mod router;
 
 pub use backend::{partition_catalog, LocalShard, ShardBackend, ShardSet};
-pub use metrics::{merge_snapshots, rollup, ClusterMetricsSnapshot, ShardLoad};
+pub use metrics::{merge_snapshots, rollup, weighted_mean, ClusterMetricsSnapshot, ShardLoad};
 pub use ring::HashRing;
 pub use router::{Cluster, ClusterConfig};

@@ -3,6 +3,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::replay::LatencyHistogram;
+
 /// Shared metrics handle (cheaply clonable via `Arc` at the service layer).
 #[derive(Debug, Default)]
 pub struct SharedMetrics {
@@ -38,6 +40,11 @@ pub struct SharedMetrics {
     sched_sum_us: AtomicU64,
     /// Reservoir of end-to-end latencies (seconds) for percentiles.
     reservoir: Mutex<Vec<f64>>,
+    /// Log-bucketed end-to-end latency histogram — the source of the
+    /// `tapesched_latency_seconds_bucket{le=…}` exposition lines. Fed by
+    /// the same `on_complete` call as everything else, so a scrape and a
+    /// drain report can never disagree on what completed.
+    latency_hist: Mutex<LatencyHistogram>,
 }
 
 /// Point-in-time snapshot of all metrics.
@@ -136,6 +143,7 @@ impl SharedMetrics {
             .fetch_add((latency_s * 1e6) as u64, Ordering::Relaxed);
         self.service_sum_us
             .fetch_add((service_s * 1e6) as u64, Ordering::Relaxed);
+        self.latency_hist.lock().unwrap().record_seconds(latency_s);
         let mut r = self.reservoir.lock().unwrap();
         if r.len() < RESERVOIR_CAP {
             r.push(latency_s);
@@ -146,6 +154,13 @@ impl SharedMetrics {
                 % RESERVOIR_CAP;
             r[i] = latency_s;
         }
+    }
+
+    /// Read the live latency histogram under its lock — how the
+    /// exposition layer renders `…_bucket{le=…}` lines without copying
+    /// the histogram per scrape.
+    pub fn with_latency_hist<R>(&self, f: impl FnOnce(&LatencyHistogram) -> R) -> R {
+        f(&self.latency_hist.lock().unwrap())
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -243,6 +258,18 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.mean_latency_s, 0.0);
         assert_eq!(s.p99_latency_s, 0.0);
+    }
+
+    #[test]
+    fn completions_feed_the_latency_histogram() {
+        let m = SharedMetrics::default();
+        m.on_complete(0.5, 0.1);
+        m.on_complete(2.0, 0.1);
+        m.with_latency_hist(|h| {
+            assert_eq!(h.count(), 2);
+            assert_eq!(h.count_le_us(1_000_000), 1, "only the 0.5 s sample fits under 1 s");
+            assert!((h.sum_seconds() - 2.5).abs() < 1e-6);
+        });
     }
 
     #[test]

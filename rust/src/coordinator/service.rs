@@ -44,6 +44,7 @@ use std::time::{Duration, Instant};
 use super::batcher::{Batch, Batcher, BatcherConfig, PushOutcome};
 use super::metrics::{MetricsSnapshot, SharedMetrics};
 use crate::model::{Instance, Tape};
+use crate::obs::{write_counter, write_gauge, write_type, Registry, TraceRecorder};
 use crate::resources::{ArmTimeline, CartridgeLedger, DrivePool, DriveStage};
 use crate::runtime::{BackendPolicy, SimpleDpBackend};
 use crate::sched::Scheduler;
@@ -166,6 +167,13 @@ struct Shared {
     /// mounts/unmounts reserve intervals, workers sleep to the edge.
     arms: Mutex<ArmTimeline>,
     arm_origin: Instant,
+    /// Request-lifecycle trace sink: when set, every completion emits one
+    /// span per pipeline stage, on the wall-µs grid of `arm_origin`
+    /// (`--trace-out`). `None` keeps the hot path free of span work.
+    trace: Option<Arc<TraceRecorder>>,
+    /// Shard id stamped on every span and exposition label (0 for a
+    /// standalone coordinator).
+    shard: u32,
 }
 
 impl Shared {
@@ -199,6 +207,14 @@ struct Job {
     /// mirroring the replay engine, where the evict-unmount frees the
     /// cartridge at the unmount-done event, not at placement.
     evicted: Option<String>,
+    /// When the batch left the batcher (window close, cap split, or
+    /// drain flush) — the end of its `batch_seal` span.
+    sealed_at: Instant,
+    /// When it became placeable: `sealed_at` unless the batch parked on
+    /// its cartridge first (the gap is its `cartridge_wait` span).
+    unparked_at: Instant,
+    /// When the placement stage claimed its drive.
+    placed_at: Instant,
 }
 
 impl Coordinator {
@@ -207,6 +223,21 @@ impl Coordinator {
         cfg: CoordinatorConfig,
         catalog: impl IntoIterator<Item = Tape>,
         policy: Arc<dyn Scheduler + Send + Sync>,
+    ) -> Coordinator {
+        Coordinator::start_traced(cfg, catalog, policy, None, 0)
+    }
+
+    /// [`Coordinator::start`] with a request-lifecycle trace sink: every
+    /// completion records one span per pipeline stage (submit → … →
+    /// complete) into `trace`, stamped with `shard`, on a wall-clock µs
+    /// grid anchored at service start. The recorder is a pure observer —
+    /// serving behavior is identical with it on or off.
+    pub fn start_traced(
+        cfg: CoordinatorConfig,
+        catalog: impl IntoIterator<Item = Tape>,
+        policy: Arc<dyn Scheduler + Send + Sync>,
+        trace: Option<Arc<TraceRecorder>>,
+        shard: u32,
     ) -> Coordinator {
         assert!(cfg.n_drives > 0, "a coordinator needs at least one drive");
         let shared = Arc::new(Shared {
@@ -227,6 +258,8 @@ impl Coordinator {
             resource_freed: Condvar::new(),
             arms: Mutex::new(ArmTimeline::new(cfg.drive.n_arms)),
             arm_origin: Instant::now(),
+            trace,
+            shard,
         });
 
         // One channel per drive worker: the dispatcher routes each batch
@@ -340,6 +373,58 @@ impl Coordinator {
         self.cfg.n_drives
     }
 
+    /// Register this coordinator's metrics on a scrape [`Registry`]
+    /// (`--metrics-listen`). The closures render the *live*
+    /// [`SharedMetrics`] — the same atomics the drain report reads — so
+    /// the scrape and the report can never disagree.
+    pub fn register_exposition(&self, reg: &Registry) {
+        const LE_BOUNDS_S: [f64; 7] = [0.001, 0.01, 0.1, 1.0, 10.0, 60.0, 600.0];
+        let shared = Arc::clone(&self.shared);
+        let shard = self.shared.shard.to_string();
+        reg.register(move |buf| {
+            let m = shared.metrics.snapshot();
+            let labels: &[(&str, &str)] = &[("shard", &shard)];
+            for (name, v) in [
+                ("tapesched_submitted_total", m.submitted),
+                ("tapesched_completed_total", m.completed),
+                ("tapesched_rejected_total", m.rejected),
+                ("tapesched_shed_total", m.shed),
+                ("tapesched_batches_total", m.batches),
+            ] {
+                write_type(buf, name, "counter");
+                write_counter(buf, name, labels, v);
+            }
+            write_type(buf, "tapesched_in_flight", "gauge");
+            write_counter(
+                buf,
+                "tapesched_in_flight",
+                labels,
+                m.submitted.saturating_sub(m.completed + m.shed),
+            );
+            for (name, v) in [
+                ("tapesched_mean_latency_seconds", m.mean_latency_s),
+                ("tapesched_p50_latency_seconds", m.p50_latency_s),
+                ("tapesched_p99_latency_seconds", m.p99_latency_s),
+            ] {
+                write_type(buf, name, "gauge");
+                write_gauge(buf, name, labels, v);
+            }
+            write_type(buf, "tapesched_latency_seconds", "histogram");
+            shared.metrics.with_latency_hist(|h| {
+                for le in LE_BOUNDS_S {
+                    let le_s = format!("{le}");
+                    let lb: &[(&str, &str)] = &[("shard", &shard), ("le", &le_s)];
+                    let cum = h.count_le_us((le * 1e6).round() as u64);
+                    write_counter(buf, "tapesched_latency_seconds_bucket", lb, cum);
+                }
+                let inf: &[(&str, &str)] = &[("shard", &shard), ("le", "+Inf")];
+                write_counter(buf, "tapesched_latency_seconds_bucket", inf, h.count());
+                write_gauge(buf, "tapesched_latency_seconds_sum", labels, h.sum_seconds());
+                write_counter(buf, "tapesched_latency_seconds_count", labels, h.count());
+            });
+        });
+    }
+
     /// Drain: stop accepting, flush all open batches, join every thread,
     /// return all completions + the final metrics snapshot.
     pub fn finish(mut self) -> (Vec<Completion>, MetricsSnapshot) {
@@ -365,10 +450,12 @@ fn dispatcher_loop(shared: Arc<Shared>, txs: Vec<Sender<Job>>, cfg: CoordinatorC
         if exclusive {
             let unparked = shared.resources.lock().unwrap().ledger.pop_ready();
             if let Some((_tape, parked)) = unparked {
-                shared
-                    .metrics
-                    .on_cartridge_wait(parked.parked_at.elapsed().as_secs_f64());
-                if !place_and_send(&shared, &txs, &cfg, parked.batch) {
+                let unparked_at = Instant::now();
+                shared.metrics.on_cartridge_wait(
+                    unparked_at.duration_since(parked.parked_at).as_secs_f64(),
+                );
+                if !place_and_send(&shared, &txs, &cfg, parked.batch, parked.parked_at, unparked_at)
+                {
                     break; // worker gone
                 }
                 continue;
@@ -412,6 +499,7 @@ fn dispatcher_loop(shared: Arc<Shared>, txs: Vec<Sender<Job>>, cfg: CoordinatorC
             }
         };
         if let Some(batch) = batch {
+            let sealed_at = Instant::now();
             // Exclusivity gate: a batch whose cartridge is in use in
             // another drive (or already has earlier batches waiting)
             // parks FIFO until the cartridge frees.
@@ -419,11 +507,11 @@ fn dispatcher_loop(shared: Arc<Shared>, txs: Vec<Sender<Job>>, cfg: CoordinatorC
                 let mut res = shared.resources.lock().unwrap();
                 if !res.ledger.available(&batch.tape) {
                     let tape = batch.tape.clone();
-                    res.ledger.park(tape, ParkedBatch { batch, parked_at: Instant::now() });
+                    res.ledger.park(tape, ParkedBatch { batch, parked_at: sealed_at });
                     continue;
                 }
             }
-            if !place_and_send(&shared, &txs, &cfg, batch) {
+            if !place_and_send(&shared, &txs, &cfg, batch, sealed_at, sealed_at) {
                 break; // worker gone
             }
         }
@@ -441,6 +529,8 @@ fn place_and_send(
     txs: &[Sender<Job>],
     cfg: &CoordinatorConfig,
     batch: Batch,
+    sealed_at: Instant,
+    unparked_at: Instant,
 ) -> bool {
     let instance = {
         let catalog = shared.catalog.lock().unwrap();
@@ -526,7 +616,16 @@ fn place_and_send(
     }
     let mount_charge_s = cfg.drive.mount_charge_s(plan);
     txs[drive_idx]
-        .send(Job { batch, instance, mount_charge_s, plan, evicted: evicted_hold })
+        .send(Job {
+            batch,
+            instance,
+            mount_charge_s,
+            plan,
+            evicted: evicted_hold,
+            sealed_at,
+            unparked_at,
+            placed_at: Instant::now(),
+        })
         .is_ok()
 }
 
@@ -549,6 +648,7 @@ fn worker_loop(
         // edge, so arm contention appears in measured wall latency. The
         // op durations themselves stay a charge (`mount_charge_s`), not a
         // sleep — exactly the pre-arm accounting.
+        let mut arm_wait_us = 0u64;
         if drive.n_arms > 0 && job.plan != MountPlan::Hit {
             let dur_us = match job.plan {
                 MountPlan::Mount => drive.mount_us(),
@@ -558,6 +658,7 @@ fn worker_loop(
             let now_us = shared.wall_us();
             let r = shared.arms.lock().unwrap().reserve(now_us, dur_us);
             shared.metrics.on_arm_wait(r.wait_us as f64 / 1e6);
+            arm_wait_us = r.wait_us;
             if r.wait_us > 0 {
                 std::thread::sleep(Duration::from_micros(r.wait_us));
             }
@@ -586,6 +687,20 @@ fn worker_loop(
         {
             let mut submit = shared.submit_times.lock().unwrap();
             let mut completions = shared.completions.lock().unwrap();
+            // Span boundaries on the wall-µs grid of `arm_origin`. The
+            // dispatcher does drive placement *after* any cartridge park,
+            // so the measured waits are re-laid in the canonical stage
+            // order (drive_wait, then cartridge_wait) with their true
+            // durations: drive_wait = placed − unparked, cartridge_wait =
+            // unparked − sealed. `exec` runs to the per-request completion
+            // instant (submit + latency), so the chain tiles the measured
+            // latency exactly.
+            let us =
+                |t: Instant| t.saturating_duration_since(shared.arm_origin).as_micros() as u64;
+            let sealed = us(job.sealed_at);
+            let placed = us(job.placed_at);
+            let drive_got = sealed + placed.saturating_sub(us(job.unparked_at));
+            let arm_got = placed + arm_wait_us;
             for (id, service_s) in
                 job.batch.request_service_times(&out, drive, job.mount_charge_s)
             {
@@ -593,6 +708,20 @@ fn worker_loop(
                 let queue_s = done_wall.duration_since(t_submit).as_secs_f64();
                 let latency_s = queue_s + service_s;
                 shared.metrics.on_complete(latency_s, service_s);
+                if let Some(tr) = &shared.trace {
+                    let arrived = us(t_submit);
+                    let done = arrived + (latency_s * 1e6).round() as u64;
+                    tr.record_chain(
+                        id,
+                        shared.shard,
+                        drive_idx as u32,
+                        &job.batch.tape,
+                        [
+                            arrived, arrived, arrived, sealed, drive_got, placed, arm_got,
+                            arm_got, done, done,
+                        ],
+                    );
+                }
                 completions.push(Completion {
                     request_id: id,
                     tape: job.batch.tape.clone(),
@@ -1027,6 +1156,46 @@ mod tests {
             "the parked batch's wait must cover the arm-queued unmount (waited {})",
             m.max_cartridge_wait_s
         );
+    }
+
+    #[test]
+    fn live_tracing_emits_full_chains_and_the_scrape_matches_the_drain() {
+        use crate::obs::{check_chains, parse_jsonl};
+        let trace = Arc::new(TraceRecorder::new(1 << 14));
+        let c = Coordinator::start_traced(
+            cfg(),
+            catalog(),
+            Arc::new(SimpleDp),
+            Some(Arc::clone(&trace)),
+            3,
+        );
+        let reg = Registry::new();
+        c.register_exposition(&reg);
+        for i in 0..60u64 {
+            let tape = if i % 3 == 0 { "TAPE001" } else { "TAPE002" };
+            assert!(c
+                .submit(ReadRequest { id: i, tape: tape.into(), file_index: (i % 50) as usize })
+                .is_ok());
+        }
+        let (completions, m) = c.finish();
+        assert_eq!(m.completed, 60);
+        // One full canonical chain per completion, on the wall-µs grid.
+        let mut buf = Vec::new();
+        trace.write_jsonl(&mut buf).unwrap();
+        let parsed = parse_jsonl(std::str::from_utf8(&buf).unwrap());
+        assert_eq!(check_chains(&parsed), Ok(60));
+        assert!(parsed.iter().all(|s| s.shard == 3), "spans carry the shard id");
+        // The scrape renders the same atomics the drain snapshot read.
+        let page = reg.render();
+        assert!(page.contains("tapesched_submitted_total{shard=\"3\"} 60"), "{page}");
+        assert!(page.contains("tapesched_completed_total{shard=\"3\"} 60"), "{page}");
+        assert!(page.contains("tapesched_in_flight{shard=\"3\"} 0"), "{page}");
+        assert!(
+            page.contains("tapesched_latency_seconds_bucket{shard=\"3\",le=\"+Inf\"} 60"),
+            "{page}"
+        );
+        assert!(page.contains("tapesched_latency_seconds_count{shard=\"3\"} 60"), "{page}");
+        assert_eq!(completions.len(), 60);
     }
 
     #[test]

@@ -41,6 +41,9 @@
 //! - [`net`] — the networked cluster: a dependency-free length-prefixed
 //!   binary protocol over `TcpStream`, the coordinator/worker processes
 //!   speaking it, and the `RequestSink` client that drives a remote fleet.
+//! - [`obs`] — observability: the request-lifecycle span recorder shared
+//!   by the replay engine and the live coordinator, span analysis
+//!   (`tapesched spans`), and the Prometheus-style exposition endpoint.
 //! - [`replay`] — virtual-time workload replay: arrival models, the
 //!   discrete-event engine, and QoS percentile reports.
 //! - [`runtime`] — pluggable SimpleDP backends: pure-Rust dense (default)
@@ -57,6 +60,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod replay;
 pub mod resources;
 pub mod runtime;

@@ -12,6 +12,7 @@
 //! - `coordinator`    — networked fleet: listen for workers + clients (TCP)
 //! - `worker`         — networked fleet: serve one shard for a coordinator
 //! - `rpc-tax`        — in-process vs loopback-networked QoS comparison
+//! - `spans`          — per-stage latency breakdown of a `--trace-out` dump
 //!
 //! Run `tapesched <cmd> --help` equivalent: flags are documented below in
 //! each handler (and in README.md).
@@ -33,8 +34,12 @@ use tapesched::dataset::{
 };
 use tapesched::model::{virtual_lb, Tape};
 use tapesched::net::{CoordinatorServerConfig, LoopbackFleet, RemoteCluster};
+use tapesched::obs::{
+    breakdown, check_chains, parse_jsonl, render_breakdown, ExpositionServer, Registry,
+    TraceRecorder, DEFAULT_TRACE_CAP,
+};
 use tapesched::replay::{
-    drive_closed_loop, reports_json, run_replay, ArrivalModel, BurstyArrivals,
+    drive_closed_loop, reports_json, run_replay_traced, ArrivalModel, BurstyArrivals,
     DiurnalArrivals, LiveDriveStats, LoopMode, PoissonArrivals, ReplayConfig, RequestMix,
     TraceArrivals,
 };
@@ -63,6 +68,7 @@ fn main() {
         "coordinator" => cmd_coordinator(&args),
         "worker" => cmd_worker(&args),
         "rpc-tax" => cmd_rpc_tax(&args),
+        "spans" => cmd_spans(&args),
         "help" | "--help" | "-h" => usage(),
         other => {
             eprintln!("error: unknown command `{other}`");
@@ -90,6 +96,8 @@ COMMANDS:
                   [--cap N] [--backlog N] [--backend dense|xla]
                   [--shards N] [--vnodes K] [--affinity none|lru]
                   [--arms N] [--exclusive-tapes on|off]
+                  [--trace-out FILE.jsonl] [--trace-cap N]
+                  [--metrics-listen ADDR] [--metrics-linger-ms N]
   replay          [--arrivals poisson|bursty|diurnal|trace] [--rate R]
                   [--duration S] [--policy NAME[,NAME…]] [--drives N] [--seed N]
                   [--mode open|closed] [--cap N] [--window-ms N] [--max-batch N]
@@ -97,15 +105,19 @@ COMMANDS:
                   [--backend dense|xla] [--shards N] [--vnodes K]
                   [--arms N] [--affinity none|lru] [--exclusive-tapes on|off]
                   [--trace-file PATH] [--smoke]
+                  [--trace-out FILE.jsonl] [--trace-cap N]
   coordinator     [--listen ADDR] [--shards N] [--policy NAME] [--drives N]
                   [--seed N] [--tapes N] [--data DIR] [--vnodes K]
                   [--window-ms N] [--max-batch N] [--backlog N]
                   [--affinity none|lru] [--arms N] [--exclusive-tapes on|off]
                   [--kill-shard I --kill-after M]
+                  [--push-ms N] [--metrics-listen ADDR]
   worker          --connect ADDR
   rpc-tax         [--policy NAME[,NAME…]] [--shards N] [--drives N]
                   [--vnodes K] [--requests N] [--seed N] [--tapes N]
                   [--data DIR] [--out FILE.json] [--kill-after M]
+                  [--push-metrics] [--push-ms N]
+  spans           --in FILE.jsonl [--check]
   help
 
 Without --data, commands use the built-in calibrated generator (seed 0x12P32021).
@@ -145,7 +157,27 @@ drain invariant (submitted = completed + shed).
 --trace-file replays an on-disk timestamped log
 (`timestamp_ns<TAB>tape<TAB>file_id`, see rust/README.md). --smoke is the
 fast deterministic CI preset (2 virtual seconds at 100 rps over 48 tapes
-unless overridden)."
+unless overridden).
+Observability: --trace-out FILE.jsonl (serve, replay) records one span per
+pipeline stage per completed request — submit, route, batch_seal,
+drive_wait, cartridge_wait, arm_wait, mount, exec, complete — into a
+fixed-capacity ring buffer (--trace-cap spans, default 2^20) and dumps it
+as JSONL at drain; the recorder is a pure observer, so a traced replay's
+QoS JSON is byte-identical to an untraced one. `spans --in FILE.jsonl`
+renders the per-stage latency breakdown (--check additionally verifies
+every request carries one full monotone chain). --metrics-listen ADDR
+(serve, coordinator) serves a Prometheus text-format scrape page
+(`tapesched_submitted_total`, `tapesched_latency_seconds_bucket{le=…}`,
+per-shard labels) over HTTP/1.0, rendered from the same counters the
+drain report prints; serve's --metrics-linger-ms keeps the page up that
+long after the drain so scrapers can read the final numbers.
+--push-ms N (coordinator) has every worker push a metrics snapshot to the
+coordinator on that interval (wire tags 13–14) instead of being polled;
+clients connected with the push-fed gauge then track in-flight locally
+and skip one MetricsPull round trip per submit. `rpc-tax --push-metrics`
+measures exactly that recovery: the loopback closed loop runs once in
+pull mode and once in push mode, and the report gains a push_report
+section with both submits/s figures."
     );
 }
 
@@ -364,12 +396,20 @@ fn cmd_draw(args: &Args) {
 fn cmd_serve(args: &Args) {
     args.reject_unknown(&[
         "policy", "drives", "requests", "seed", "tapes", "data", "backend", "cap", "backlog",
-        "shards", "vnodes", "affinity", "arms", "exclusive-tapes", "connect",
+        "shards", "vnodes", "affinity", "arms", "exclusive-tapes", "connect", "trace-out",
+        "trace-cap", "metrics-listen", "metrics-linger-ms",
     ]);
     // --connect ADDR: drive a *networked* fleet (`tapesched coordinator`
     // elsewhere) instead of starting coordinators in-process; every other
     // serving knob then lives on the coordinator's command line.
     if let Some(addr) = args.get("connect") {
+        if args.get("trace-out").is_some() || args.get("metrics-listen").is_some() {
+            eprintln!(
+                "error: --trace-out/--metrics-listen instrument the in-process service; \
+                 with --connect they belong on the coordinator's command line"
+            );
+            std::process::exit(2);
+        }
         drive_remote(args, addr);
         return;
     }
@@ -405,6 +445,15 @@ fn cmd_serve(args: &Args) {
         affinity,
         exclusive_tapes,
     };
+    // Lifecycle tracing and the scrape endpoint instrument one live
+    // coordinator; the sharded demo routes through `Cluster`, which owns
+    // its shards internally — keep the combination an explicit error
+    // rather than silently tracing nothing.
+    if n_shards > 1 && (args.get("trace-out").is_some() || args.get("metrics-listen").is_some())
+    {
+        eprintln!("error: --trace-out/--metrics-listen require --shards 1");
+        std::process::exit(2);
+    }
     let ds = dataset_from(args);
     let tapes: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
     // The same arrival models and closed-loop driver the replay engine
@@ -475,7 +524,27 @@ fn cmd_serve(args: &Args) {
         return;
     }
 
-    let coord = Coordinator::start(shard_cfg, tapes.iter().cloned(), Arc::from(policy));
+    let trace = args
+        .get("trace-out")
+        .map(|_| Arc::new(TraceRecorder::new(args.get_parsed_or("trace-cap", DEFAULT_TRACE_CAP))));
+    let coord = Coordinator::start_traced(
+        shard_cfg,
+        tapes.iter().cloned(),
+        Arc::from(policy),
+        trace.clone(),
+        0,
+    );
+    // The scrape endpoint renders the coordinator's live SharedMetrics —
+    // the registry closure holds the shared state, so the page keeps
+    // serving the final numbers through the post-drain linger window.
+    let exposition = args.get("metrics-listen").map(|listen| {
+        let registry = Arc::new(Registry::new());
+        coord.register_exposition(&registry);
+        let server =
+            net_ok(ExpositionServer::bind(listen, registry), "cannot bind --metrics-listen");
+        eprintln!("metrics exposition on http://{}/metrics", server.addr());
+        server
+    });
     let stats = drive_closed_loop(
         &coord,
         &tapes,
@@ -511,6 +580,40 @@ fn cmd_serve(args: &Args) {
         let (hits, misses) = dense_cache_stats();
         println!("  dense cache hits/misses = {hits} / {misses}");
     }
+    if let (Some(path), Some(trace)) = (args.get("trace-out"), &trace) {
+        write_trace(path, trace);
+    }
+    // Hold the scrape page open after the drain so an external scraper
+    // can read the final counters (ci.sh's obs gate does exactly this).
+    if let Some(server) = exposition {
+        let linger_ms = args.get_parsed_or("metrics-linger-ms", 0u64);
+        if linger_ms > 0 {
+            std::thread::sleep(Duration::from_millis(linger_ms));
+        }
+        server.stop();
+    }
+}
+
+/// Dump a trace recorder as JSONL, reporting span count and any
+/// ring-buffer overwrites.
+fn write_trace(path: &str, trace: &TraceRecorder) {
+    use std::io::Write;
+    let file = std::fs::File::create(path).unwrap_or_else(|e| {
+        eprintln!("error creating {path}: {e}");
+        std::process::exit(1);
+    });
+    let mut w = std::io::BufWriter::new(file);
+    let n = trace.write_jsonl(&mut w).and_then(|n| w.flush().map(|()| n)).unwrap_or_else(|e| {
+        eprintln!("error writing {path}: {e}");
+        std::process::exit(1);
+    });
+    if trace.dropped() > 0 {
+        eprintln!(
+            "trace: ring overwrote {} spans — raise --trace-cap for a full record",
+            trace.dropped()
+        );
+    }
+    eprintln!("trace: {n} spans → {path}");
 }
 
 /// Virtual-time workload replay: a timestamped request stream (trace,
@@ -523,6 +626,7 @@ fn cmd_replay(args: &Args) {
         "arrivals", "rate", "duration", "policy", "drives", "seed", "mode", "cap", "data",
         "tapes", "backend", "window-ms", "max-batch", "backlog", "out", "shards", "vnodes",
         "arms", "affinity", "exclusive-tapes", "trace-file", "smoke", "connect", "requests",
+        "trace-out", "trace-cap",
     ]);
     // --connect ADDR: there is no virtual clock across a process boundary,
     // so a networked replay degrades to the wall-clock closed-loop driver —
@@ -717,11 +821,29 @@ fn cmd_replay(args: &Args) {
             )
         };
 
+    // Request-lifecycle tracing: ids restart at 0 for every policy's
+    // replay, so a shared dump would interleave chains — one policy per
+    // trace file keeps `spans --check` meaningful.
+    let trace = args.get("trace-out").map(|_| {
+        if policies.len() > 1 {
+            eprintln!("error: --trace-out records a single replay; use one --policy entry");
+            std::process::exit(2);
+        }
+        TraceRecorder::new(args.get_parsed_or("trace-cap", DEFAULT_TRACE_CAP))
+    });
+
     let mut reports = Vec::new();
     for policy in &policies {
         let mut model = make_model();
-        let (report, outcome) =
-            run_replay(&cfg, &catalog, policy.as_ref(), model.as_mut(), seed, duration);
+        let (report, outcome) = run_replay_traced(
+            &cfg,
+            &catalog,
+            policy.as_ref(),
+            model.as_mut(),
+            seed,
+            duration,
+            trace.as_ref(),
+        );
         eprintln!(
             "replay {}: {} completed over {:.1} virtual s ({} batches, {:.3} wall s of schedule compute)",
             report.policy,
@@ -744,6 +866,9 @@ fn cmd_replay(args: &Args) {
     if dense_backend_selected(args) {
         let (hits, misses) = dense_cache_stats();
         eprintln!("dense cache hits/misses: {hits} / {misses}");
+    }
+    if let (Some(path), Some(trace)) = (args.get("trace-out"), &trace) {
+        write_trace(path, trace);
     }
 
     eprint!("{}", qos_comparison(&reports));
@@ -780,7 +905,7 @@ fn cmd_coordinator(args: &Args) {
     args.reject_unknown(&[
         "listen", "shards", "policy", "drives", "seed", "tapes", "data", "vnodes",
         "window-ms", "max-batch", "backlog", "affinity", "arms", "exclusive-tapes",
-        "kill-shard", "kill-after",
+        "kill-shard", "kill-after", "push-ms", "metrics-listen",
     ]);
     let listen = args.get_or("listen", "127.0.0.1:7171");
     let n_shards = args.get_parsed_or("shards", 2usize);
@@ -825,6 +950,11 @@ fn cmd_coordinator(args: &Args) {
     let kill = (args.get("kill-shard").is_some() || args.get("kill-after").is_some()).then(|| {
         (args.get_parsed_or("kill-shard", 0usize), args.get_parsed_or("kill-after", 1u64))
     });
+    // --push-ms N > 0: workers push MetricsSnapshot deltas on this
+    // interval (wire tags 13–14) and push-subscribed clients stop paying
+    // a MetricsPull round trip per submit; 0 keeps the pull-only wire.
+    let push_ms = args.get_parsed_or("push-ms", 0u64);
+    let metrics_listen = args.get("metrics-listen").map(str::to_string);
     let ds = dataset_from(args);
     let catalog: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
     let listener = net_ok(TcpListener::bind(listen.as_str()), "cannot bind --listen address");
@@ -836,7 +966,15 @@ fn cmd_coordinator(args: &Args) {
     net_ok(
         tapesched::net::serve(
             listener,
-            CoordinatorServerConfig { n_shards, vnodes, shard, policy, kill },
+            CoordinatorServerConfig {
+                n_shards,
+                vnodes,
+                shard,
+                policy,
+                kill,
+                push_ms,
+                metrics_listen,
+            },
             catalog,
         ),
         "coordinator failed",
@@ -986,7 +1124,7 @@ fn mode_json(d: &ModeDigest) -> String {
 fn cmd_rpc_tax(args: &Args) {
     args.reject_unknown(&[
         "policy", "shards", "drives", "vnodes", "requests", "seed", "tapes", "data", "out",
-        "kill-after",
+        "kill-after", "push-metrics", "push-ms",
     ]);
     let n_shards = args.get_parsed_or("shards", 2usize);
     let n_drives = args.get_parsed_or("drives", 4usize);
@@ -1072,6 +1210,8 @@ fn cmd_rpc_tax(args: &Args) {
                     shard: shard_cfg.clone(),
                     policy: name.to_string(),
                     kill: None,
+                    push_ms: 0,
+                    metrics_listen: None,
                 },
                 catalog.clone(),
             ),
@@ -1122,6 +1262,8 @@ fn cmd_rpc_tax(args: &Args) {
                     shard: shard_cfg.clone(),
                     policy: name.to_string(),
                     kill: Some((victim, kill_after)),
+                    push_ms: 0,
+                    metrics_listen: None,
                 },
                 catalog.clone(),
             ),
@@ -1150,11 +1292,77 @@ fn cmd_rpc_tax(args: &Args) {
         )
     });
 
+    // The telemetry-tax run: the closed-loop driver reads `in_flight()`
+    // once per arrival, so pull-mode pays two round trips per request
+    // (MetricsPull + Submit) where push-mode pays one (the gauge is fed by
+    // the coordinator's MetricsPush stream and read locally). Paired runs
+    // over the same stream make the recovered submit throughput visible.
+    let push_json = if args.has("push-metrics") {
+        let name = names[0];
+        let push_ms = args.get_parsed_or("push-ms", 5u64);
+        let timed_run = |push_ms: u64| {
+            let fleet = net_ok(
+                LoopbackFleet::spawn(
+                    CoordinatorServerConfig {
+                        n_shards,
+                        vnodes,
+                        shard: shard_cfg.clone(),
+                        policy: name.to_string(),
+                        kill: None,
+                        push_ms,
+                        metrics_listen: None,
+                    },
+                    catalog.clone(),
+                ),
+                "cannot spawn loopback fleet",
+            );
+            let client = if push_ms > 0 {
+                net_ok(fleet.client_push(), "cannot connect push-fed loopback client")
+            } else {
+                net_ok(fleet.client(), "cannot connect loopback client")
+            };
+            let mut model = fresh_model();
+            let t0 = std::time::Instant::now();
+            drive_closed_loop(&client, &catalog, &mut model, n_requests, backoff, n_requests);
+            let wall_s = t0.elapsed().as_secs_f64();
+            let (_completions, m) = net_ok(client.drain(), "loopback drain failed");
+            let _ = fleet.join();
+            (wall_s, m)
+        };
+        let (pull_wall_s, pull_m) = timed_run(0);
+        let (push_wall_s, push_m) = timed_run(push_ms);
+        if pull_m.completed != push_m.completed {
+            eprintln!(
+                "error: push/pull runs diverged ({} vs {} completions) — \
+                 the gauge must not change what gets scheduled",
+                pull_m.completed, push_m.completed
+            );
+            std::process::exit(1);
+        }
+        let pull_rate = n_requests as f64 / pull_wall_s;
+        let push_rate = n_requests as f64 / push_wall_s;
+        eprintln!(
+            "rpc-tax push-metrics {name}: pull {pull_rate:.0} submits/s \
+             ({pull_wall_s:.3} s) vs push {push_rate:.0} submits/s \
+             ({push_wall_s:.3} s) — {:.2}x",
+            push_rate / pull_rate
+        );
+        format!(
+            "  \"push_report\": {{\"policy\": \"{name}\", \"push_ms\": {push_ms}, \
+             \"requests\": {n_requests}, \"pull_wall_s\": {pull_wall_s:.6}, \
+             \"pull_submits_per_s\": {pull_rate:.3}, \"push_wall_s\": {push_wall_s:.6}, \
+             \"push_submits_per_s\": {push_rate:.3}}},\n"
+        )
+    } else {
+        String::new()
+    };
+
     let json = format!(
         "{{\n  \"schema\": \"tapesched-rpc-tax-v1\",\n  \"seed\": {seed},\n  \
          \"shards\": {n_shards},\n  \"drives\": {n_drives},\n  \
-         \"requests\": {n_requests},\n{}  \"rpc_reports\": [\n{}\n  ]\n}}\n",
+         \"requests\": {n_requests},\n{}{}  \"rpc_reports\": [\n{}\n  ]\n}}\n",
         kill_json.unwrap_or_default(),
+        push_json,
         sections.join(",\n")
     );
     match args.get("out") {
@@ -1167,4 +1375,33 @@ fn cmd_rpc_tax(args: &Args) {
         }
         None => print!("{json}"),
     }
+}
+
+/// `tapesched spans` — render a per-stage latency breakdown of a
+/// `--trace-out` JSONL dump, optionally verifying chain integrity first.
+fn cmd_spans(args: &Args) {
+    args.reject_unknown(&["in", "check"]);
+    let path = args.get("in").unwrap_or_else(|| {
+        eprintln!("error: spans needs --in FILE (a --trace-out JSONL dump)");
+        std::process::exit(2);
+    });
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("error reading {path}: {e}");
+        std::process::exit(1);
+    });
+    let spans = parse_jsonl(&text);
+    if spans.is_empty() {
+        eprintln!("error: {path} holds no parsable spans");
+        std::process::exit(1);
+    }
+    if args.has("check") {
+        match check_chains(&spans) {
+            Ok(n) => eprintln!("spans: {n} complete request chains, all monotone and contiguous"),
+            Err(e) => {
+                eprintln!("spans: chain check FAILED: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    print!("{}", render_breakdown(&breakdown(&spans)));
 }

@@ -8,10 +8,22 @@
 //! deliberate: the serve path measures the *RPC tax* of the seam (see
 //! `tapesched rpc-tax`), and a pipelined client would hide exactly the
 //! per-submit round-trip latency the measurement is after.
+//!
+//! [`RemoteCluster::connect_push`] opens a *second* connection with
+//! `Role::MetricsSubscriber` on which the coordinator streams advisory
+//! fleet loads. A background reader folds them into a [`PushGauge`], and
+//! `in_flight()` then answers from two atomics instead of a
+//! `MetricsPull` round trip per admission check — that is the half of the
+//! RPC tax `tapesched rpc-tax --push-metrics` recovers. The gauge is
+//! deliberately conservative: `accepted` counts this client's accepted
+//! submits synchronously, `done` lags by at most one push interval, so
+//! the gauge can overestimate in-flight (briefly throttling the driver)
+//! but never underestimate it past the admission limit.
 
 use std::io;
 use std::net::TcpStream;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::cluster::{rollup, ClusterMetricsSnapshot, ShardLoad};
 use crate::coordinator::{Completion, ReadRequest, SubmitError};
@@ -20,9 +32,23 @@ use crate::replay::RequestSink;
 use super::frame::{read_frame, write_frame};
 use super::wire::{self, Message, Role, SubmitOutcome, PROTOCOL_VERSION};
 
+/// The push-fed in-flight gauge: `accepted − done`, both monotone.
+#[derive(Default)]
+struct PushGauge {
+    /// Accepted submits, counted synchronously on this client.
+    accepted: AtomicU64,
+    /// Fleet-wide `completed + shed` from the latest push.
+    done: AtomicU64,
+    /// At least one push has arrived; before that, fall back to pull so
+    /// an early admission check is not answered from a zeroed gauge.
+    seen: AtomicBool,
+}
+
 /// A connected client handle on a networked fleet.
 pub struct RemoteCluster {
     conn: Mutex<TcpStream>,
+    /// Present only on [`RemoteCluster::connect_push`] handles.
+    gauge: Option<Arc<PushGauge>>,
 }
 
 impl RemoteCluster {
@@ -38,7 +64,9 @@ impl RemoteCluster {
         )?;
         match read_frame(&mut stream)? {
             Some(payload) => match wire::decode(&payload)? {
-                Message::HelloAck { .. } => Ok(RemoteCluster { conn: Mutex::new(stream) }),
+                Message::HelloAck { .. } => {
+                    Ok(RemoteCluster { conn: Mutex::new(stream), gauge: None })
+                }
                 Message::Error { message } => {
                     Err(io::Error::new(io::ErrorKind::ConnectionRefused, message))
                 }
@@ -52,6 +80,53 @@ impl RemoteCluster {
                 "coordinator closed during handshake",
             )),
         }
+    }
+
+    /// Connect like [`RemoteCluster::connect`], then open the telemetry
+    /// subscription: a second connection on which the coordinator pushes
+    /// advisory fleet loads (the fleet must run with `push_ms > 0` for
+    /// those to carry live numbers). `in_flight()` on this handle reads
+    /// the push-fed gauge instead of doing a `MetricsPull` round trip.
+    pub fn connect_push(addr: &str) -> io::Result<RemoteCluster> {
+        let mut client = RemoteCluster::connect(addr)?;
+        let mut sub = TcpStream::connect(addr)?;
+        sub.set_nodelay(true).ok();
+        write_frame(
+            &mut sub,
+            &wire::encode(&Message::Hello {
+                version: PROTOCOL_VERSION,
+                role: Role::MetricsSubscriber,
+            }),
+        )?;
+        match read_frame(&mut sub)? {
+            Some(payload) => match wire::decode(&payload)? {
+                Message::HelloAck { .. } => {}
+                Message::Error { message } => {
+                    return Err(io::Error::new(io::ErrorKind::ConnectionRefused, message))
+                }
+                other => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("expected HelloAck, got {other:?}"),
+                    ))
+                }
+            },
+            None => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "coordinator closed during subscriber handshake",
+                ))
+            }
+        }
+        let gauge = Arc::new(PushGauge::default());
+        let sink = Arc::clone(&gauge);
+        // Detached: exits on EOF when the coordinator stops pushing
+        // (fleet drained) or the connection dies.
+        std::thread::spawn(move || {
+            let _ = subscriber_loop(sub, &sink);
+        });
+        client.gauge = Some(gauge);
+        Ok(client)
     }
 
     /// One request/response round trip. The connection lock is held
@@ -76,7 +151,15 @@ impl RemoteCluster {
             file_index: req.file_index as u64,
         })?;
         match reply {
-            Message::SubmitResult { outcome } => Ok(outcome.into_submit()),
+            Message::SubmitResult { outcome } => {
+                let result = outcome.into_submit();
+                if result.is_ok() {
+                    if let Some(g) = &self.gauge {
+                        g.accepted.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Ok(result)
+            }
             other => Err(io::Error::new(
                 io::ErrorKind::InvalidData,
                 format!("expected SubmitResult, got {other:?}"),
@@ -134,13 +217,47 @@ impl RequestSink for RemoteCluster {
         }
     }
 
-    /// Fleet-wide `submitted − completed − shed`. An I/O failure reports
-    /// 0 in-flight rather than wedging the driver's admission gate
-    /// against a connection that will never answer again.
+    /// Fleet-wide `submitted − completed − shed`. On a push handle the
+    /// answer comes from the locally-maintained gauge (no round trip);
+    /// before the first push, and always on a plain handle, it is a
+    /// `MetricsPull`. An I/O failure reports 0 in-flight rather than
+    /// wedging the driver's admission gate against a connection that will
+    /// never answer again.
     fn in_flight(&self) -> u64 {
+        if let Some(g) = &self.gauge {
+            if g.seen.load(Ordering::Acquire) {
+                let accepted = g.accepted.load(Ordering::Relaxed);
+                let done = g.done.load(Ordering::Relaxed);
+                return accepted.saturating_sub(done);
+            }
+        }
         match self.metrics() {
             Ok(m) => m.submitted.saturating_sub(m.completed + m.shed),
             Err(_) => 0,
+        }
+    }
+}
+
+/// Drain the subscriber stream: each push replaces `done` with the
+/// fleet-wide `completed + shed` sum and is acked. Returns on EOF or any
+/// protocol surprise — the gauge then freezes and `in_flight` keeps
+/// answering from its last state (the driver is already past admission
+/// by the time a fleet stops pushing).
+fn subscriber_loop(mut sub: TcpStream, gauge: &PushGauge) -> io::Result<()> {
+    loop {
+        match read_frame(&mut sub)? {
+            None => return Ok(()),
+            Some(payload) => match wire::decode(&payload)? {
+                Message::MetricsPush { loads } => {
+                    let done: u64 =
+                        loads.iter().map(|l| l.metrics.completed + l.metrics.shed).sum();
+                    gauge.done.store(done, Ordering::Relaxed);
+                    gauge.seen.store(true, Ordering::Release);
+                    write_frame(&mut sub, &wire::encode(&Message::MetricsPushAck))?;
+                }
+                Message::Shutdown => return Ok(()),
+                _ => return Ok(()),
+            },
         }
     }
 }

@@ -49,6 +49,12 @@ impl LoopbackFleet {
         RemoteCluster::connect(&self.addr.to_string())
     }
 
+    /// Connect a client handle with the push-fed in-flight gauge (only
+    /// meaningful when the fleet runs with `push_ms > 0`).
+    pub fn client_push(&self) -> io::Result<RemoteCluster> {
+        RemoteCluster::connect_push(&self.addr.to_string())
+    }
+
     /// Spawn one worker thread against `addr` — also the rejoin path: a
     /// replacement worker for a killed shard is just another worker
     /// connecting (the server hands it the dead shard's id).

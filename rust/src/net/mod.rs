@@ -20,11 +20,12 @@
 //!   numbers cross the wire without rounding.
 //! - [`server`] — the coordinator process: ring + routing over
 //!   `WorkerShard` backends, fleet readiness, dead-worker shed
-//!   accounting, worker rejoin.
+//!   accounting, worker rejoin, advisory push-telemetry state and the
+//!   `--metrics-listen` exposition page.
 //! - [`worker`] — the worker process: one shard's `Coordinator` behind a
-//!   connection.
+//!   connection, plus the optional telemetry pusher side channel.
 //! - [`client`] — [`RemoteCluster`]: the `RequestSink` a driver plugs
-//!   into.
+//!   into; `connect_push` adds the push-fed in-flight gauge.
 //! - [`loopback`] — the whole fleet on `127.0.0.1` in one process, for
 //!   integration tests and the RPC-tax measurement.
 //!

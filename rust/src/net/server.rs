@@ -33,6 +33,20 @@
 //! against) until a replacement worker connects, takes over the dead
 //! shard id and its catalog partition, and starts a fresh era;
 //! [`merge_snapshots`] stitches the eras back into one shard history.
+//!
+//! ## Push telemetry is advisory, drains are authoritative
+//!
+//! With `push_ms > 0` every worker opens a second connection
+//! ([`Role::MetricsPusher`]) and streams `MetricsPush` snapshots on that
+//! interval. Those land in `WorkerState::pushed` and feed exactly three
+//! read-only consumers: the `--metrics-listen` exposition page, the
+//! [`Role::MetricsSubscriber`] stream (which lets clients keep an
+//! `in_flight` gauge without a `MetricsPull` round trip per submit), and
+//! nothing else. The drain path, the shed synthesis in
+//! [`fold_dead_era`], and the parity-critical rollups never read a pushed
+//! snapshot — so a stale push from a dying worker's telemetry thread can
+//! at worst make a scrape momentarily optimistic, never corrupt the
+//! drain invariant. Pushes for a shard with no live worker are ignored.
 
 use std::collections::BTreeMap;
 use std::io;
@@ -48,6 +62,7 @@ use crate::coordinator::{
     Completion, CoordinatorConfig, MetricsSnapshot, ReadRequest, SubmitError,
 };
 use crate::model::Tape;
+use crate::obs::{write_counter, write_gauge, write_type, ExpositionServer, Registry};
 
 use super::frame::{read_frame, write_frame};
 use super::wire::{self, Message, Role, SubmitOutcome, PROTOCOL_VERSION};
@@ -68,6 +83,13 @@ pub struct CoordinatorServerConfig {
     /// connection right after it accepts its `.1`-th submit. One-shot — a
     /// rejoining worker is not re-killed.
     pub kill: Option<(usize, u64)>,
+    /// Telemetry push interval shipped to every worker in `Assign`.
+    /// `0` disables push telemetry (workers open no pusher connection,
+    /// clients fall back to `MetricsPull`).
+    pub push_ms: u64,
+    /// Bind a Prometheus-style exposition endpoint here (e.g.
+    /// `127.0.0.1:9187`). `None` disables the scrape surface.
+    pub metrics_listen: Option<String>,
 }
 
 fn send(stream: &mut TcpStream, msg: &Message) -> io::Result<()> {
@@ -98,10 +120,36 @@ struct WorkerState {
     accepted_era: u64,
     /// Most recent snapshot pulled from the current worker.
     last: Option<MetricsSnapshot>,
+    /// Most recent snapshot *pushed* by the current worker's telemetry
+    /// connection. Advisory only: read by the exposition page and the
+    /// subscriber stream, never by drain or shed accounting.
+    pushed: Option<MetricsSnapshot>,
     /// Merged accounting of all dead eras (see [`merge_snapshots`]).
     carry: Option<MetricsSnapshot>,
     /// One-shot kill trigger (fault injection), armed on the target shard.
     kill_after: Option<u64>,
+}
+
+/// Fold a dead era into the shard's carried accounting — the pure core of
+/// [`WorkerShard::die`]. `last` is the freshest snapshot *pulled* from the
+/// worker before it died; `accepted_era` is this side's count of submits
+/// the worker accepted. Everything accepted but not seen completed is
+/// shed, so the result always satisfies `submitted == completed + shed`
+/// (completions the worker finished after the last pull are lost with the
+/// connection — they never reached a client, so counting them shed is the
+/// honest ledger).
+fn fold_dead_era(
+    carry: Option<MetricsSnapshot>,
+    last: Option<MetricsSnapshot>,
+    accepted_era: u64,
+) -> MetricsSnapshot {
+    let mut synth = last.unwrap_or_default();
+    synth.submitted = accepted_era;
+    synth.shed = accepted_era.saturating_sub(synth.completed);
+    match carry {
+        Some(c) => merge_snapshots(&c, &synth),
+        None => synth,
+    }
 }
 
 /// The remote arm of the [`ShardBackend`] seam: one shard served by a TCP
@@ -123,6 +171,7 @@ impl WorkerShard {
                 drained: false,
                 accepted_era: 0,
                 last: None,
+                pushed: None,
                 carry: None,
                 kill_after,
             }),
@@ -134,18 +183,27 @@ impl WorkerShard {
     /// shed — the drain invariant stays exact fleet-wide.
     fn die(st: &mut WorkerState) {
         st.conn = None;
-        let mut synth = st.last.take().unwrap_or_default();
-        synth.submitted = st.accepted_era;
-        synth.shed = st.accepted_era.saturating_sub(synth.completed);
-        st.carry = Some(match st.carry.take() {
-            Some(c) => merge_snapshots(&c, &synth),
-            None => synth,
-        });
+        st.pushed = None;
+        let last = st.last.take();
+        st.carry = Some(fold_dead_era(st.carry.take(), last, st.accepted_era));
         st.accepted_era = 0;
     }
 
     fn carry_or_default(st: &WorkerState) -> MetricsSnapshot {
         st.carry.clone().unwrap_or_default()
+    }
+
+    /// Best current guess at the shard's accounting *without a worker
+    /// round trip*: carried history merged with the freshest era snapshot
+    /// on hand (a push if the worker pushes, else the last pull).
+    /// Advisory — feeds the exposition page and the subscriber stream
+    /// only; drains re-pull the authoritative numbers.
+    fn advisory(st: &WorkerState) -> MetricsSnapshot {
+        let era = st.pushed.clone().or_else(|| st.last.clone()).unwrap_or_default();
+        match &st.carry {
+            Some(c) => merge_snapshots(c, &era),
+            None => era,
+        }
     }
 
     fn round_trip(conn: &mut TcpStream, msg: &Message) -> io::Result<Message> {
@@ -251,6 +309,7 @@ impl ShardBackend for WorkerShard {
                 }
                 st.conn = None;
                 st.last = None;
+                st.pushed = None;
                 st.accepted_era = 0;
                 (completions, merged)
             }
@@ -272,6 +331,7 @@ struct ServerState {
     policy: String,
     n_shards: usize,
     kill: Option<(usize, u64)>,
+    push_ms: u64,
 }
 
 impl ServerState {
@@ -309,6 +369,7 @@ pub fn serve(
     assert!(cfg.n_shards > 0, "a fleet needs at least one shard");
     let ring = HashRing::new(cfg.n_shards, cfg.vnodes);
     let partitions = partition_catalog(&ring, catalog);
+    let metrics_listen = cfg.metrics_listen.clone();
     let state = Arc::new(ServerState {
         set: RwLock::new(ShardSet::new(ring)),
         members: Mutex::new(BTreeMap::new()),
@@ -319,7 +380,19 @@ pub fn serve(
         policy: cfg.policy,
         n_shards: cfg.n_shards,
         kill: cfg.kill,
+        push_ms: cfg.push_ms,
     });
+    // The scrape endpoint renders the advisory per-shard accounting at
+    // scrape time — no copied values. Dropped (stopped + joined) when
+    // serve returns.
+    let _exposition = match &metrics_listen {
+        Some(addr) => {
+            let registry = Arc::new(Registry::new());
+            register_fleet_exposition(&state, &registry);
+            Some(ExpositionServer::bind(addr, registry)?)
+        }
+        None => None,
+    };
     // Poll accept so the loop can observe `done` (set by the draining
     // client's handler thread) without a self-connection trick.
     listener.set_nonblocking(true)?;
@@ -362,6 +435,8 @@ fn handle_connection(state: Arc<ServerState>, mut stream: TcpStream) -> io::Resu
             match role {
                 Role::Worker => handle_worker(state, stream),
                 Role::Client => handle_client(state, stream),
+                Role::MetricsPusher => handle_pusher(state, stream),
+                Role::MetricsSubscriber => handle_subscriber(state, stream),
             }
         }
         other => {
@@ -434,6 +509,7 @@ fn handle_worker(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<(
                 policy: state.policy.clone(),
                 config: state.shard_cfg.clone(),
                 catalog: state.partitions.get(&id).cloned().unwrap_or_default(),
+                push_ms: state.push_ms,
             },
         )?;
         match recv(&mut stream)? {
@@ -518,5 +594,242 @@ fn handle_client(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<(
                 return Ok(());
             }
         }
+    }
+}
+
+/// A worker's telemetry side-connection: absorb each pushed snapshot into
+/// the owning shard's advisory state and ack it. The worker is the sole
+/// initiator here — the main worker connection stays strictly
+/// request/response, so pushes can never interleave with an in-flight
+/// submit round trip. Pushes for a shard whose worker is gone or drained
+/// are dropped: a dying worker's last push must not resurrect accounting
+/// that [`WorkerShard::die`] already folded.
+fn handle_pusher(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<()> {
+    send(
+        &mut stream,
+        &Message::HelloAck { version: PROTOCOL_VERSION, shard: u32::MAX },
+    )?;
+    loop {
+        match recv(&mut stream)? {
+            None | Some(Message::Shutdown) => return Ok(()),
+            Some(Message::MetricsPush { loads }) => {
+                {
+                    let members = state.members.lock().unwrap();
+                    for load in loads {
+                        if let Some(ws) = members.get(&load.shard) {
+                            let mut st = ws.state.lock().unwrap();
+                            if st.conn.is_some() && !st.drained {
+                                st.pushed = Some(load.metrics);
+                            }
+                        }
+                    }
+                }
+                send(&mut stream, &Message::MetricsPushAck)?;
+            }
+            Some(other) => {
+                send(
+                    &mut stream,
+                    &Message::Error {
+                        message: format!("pusher connection cannot serve {other:?}"),
+                    },
+                )?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Advisory per-shard loads, composed entirely from state already on this
+/// side of the wire — zero worker round trips (that is the whole point of
+/// the push path). `routed` is reported as 0: the subscriber stream and
+/// the scrape page consume the metrics sums, not the router counters.
+fn advisory_loads(state: &ServerState) -> Vec<crate::cluster::ShardLoad> {
+    let members = state.members.lock().unwrap();
+    members
+        .iter()
+        .map(|(id, ws)| crate::cluster::ShardLoad {
+            shard: *id,
+            routed: 0,
+            metrics: WorkerShard::advisory(&ws.state.lock().unwrap()),
+        })
+        .collect()
+}
+
+/// A client's telemetry side-connection: the *server* initiates here,
+/// pushing advisory fleet loads on the configured interval; the client
+/// acks each push. Exits when the fleet is done or the client hangs up.
+fn handle_subscriber(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<()> {
+    send(
+        &mut stream,
+        &Message::HelloAck { version: PROTOCOL_VERSION, shard: u32::MAX },
+    )?;
+    let interval = Duration::from_millis(if state.push_ms > 0 { state.push_ms } else { 100 });
+    while !state.done.load(Ordering::SeqCst) {
+        let loads = advisory_loads(&state);
+        send(&mut stream, &Message::MetricsPush { loads })?;
+        match recv(&mut stream)? {
+            Some(Message::MetricsPushAck) => {}
+            _ => return Ok(()),
+        }
+        std::thread::sleep(interval);
+    }
+    Ok(())
+}
+
+/// Register the fleet's scrape page: per-shard counters and latency
+/// gauges rendered from the advisory accounting at scrape time. No value
+/// is copied into the registry — a scrape and a drain report read the
+/// same state, so they cannot diverge further than one push interval.
+fn register_fleet_exposition(state: &Arc<ServerState>, registry: &Registry) {
+    let state = Arc::clone(state);
+    registry.register(move |buf| {
+        let members = state.members.lock().unwrap();
+        let shards: Vec<(usize, bool, MetricsSnapshot)> = members
+            .iter()
+            .map(|(id, ws)| {
+                let st = ws.state.lock().unwrap();
+                (*id, st.conn.is_some(), WorkerShard::advisory(&st))
+            })
+            .collect();
+        drop(members);
+        write_type(buf, "tapesched_shards", "gauge");
+        write_counter(buf, "tapesched_shards", &[], shards.len() as u64);
+        let counters: [(&str, fn(&MetricsSnapshot) -> u64); 5] = [
+            ("tapesched_submitted_total", |m| m.submitted),
+            ("tapesched_completed_total", |m| m.completed),
+            ("tapesched_rejected_total", |m| m.rejected),
+            ("tapesched_shed_total", |m| m.shed),
+            ("tapesched_batches_total", |m| m.batches),
+        ];
+        for (name, get) in counters {
+            write_type(buf, name, "counter");
+            for (id, _, m) in &shards {
+                let label = id.to_string();
+                write_counter(buf, name, &[("shard", &label)], get(m));
+            }
+        }
+        write_type(buf, "tapesched_worker_up", "gauge");
+        for (id, up, _) in &shards {
+            let label = id.to_string();
+            write_counter(buf, "tapesched_worker_up", &[("shard", &label)], u64::from(*up));
+        }
+        write_type(buf, "tapesched_in_flight", "gauge");
+        for (id, _, m) in &shards {
+            let label = id.to_string();
+            let in_flight = m.submitted.saturating_sub(m.completed + m.shed);
+            write_counter(buf, "tapesched_in_flight", &[("shard", &label)], in_flight);
+        }
+        let gauges: [(&str, fn(&MetricsSnapshot) -> f64); 3] = [
+            ("tapesched_mean_latency_seconds", |m| m.mean_latency_s),
+            ("tapesched_p50_latency_seconds", |m| m.p50_latency_s),
+            ("tapesched_p99_latency_seconds", |m| m.p99_latency_s),
+        ];
+        for (name, get) in gauges {
+            write_type(buf, name, "gauge");
+            for (id, _, m) in &shards {
+                let label = id.to_string();
+                write_gauge(buf, name, &[("shard", &label)], get(m));
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shorthand: a snapshot whose drain-critical counters are set and
+    /// whose means are nonzero, as a pulled-worker snapshot would be.
+    fn snap(submitted: u64, completed: u64, shed: u64, mean: f64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted,
+            completed,
+            shed,
+            mean_latency_s: mean,
+            ..MetricsSnapshot::default()
+        }
+    }
+
+    fn invariant(m: &MetricsSnapshot) {
+        assert_eq!(
+            m.submitted,
+            m.completed + m.shed,
+            "drain invariant: submitted ({}) == completed ({}) + shed ({})",
+            m.submitted,
+            m.completed,
+            m.shed
+        );
+    }
+
+    #[test]
+    fn fold_dead_era_sheds_everything_unreported() {
+        // Era accepted 10 submits; last pull saw 6 complete. The other 4
+        // are shed regardless of what the worker did after that pull.
+        let folded = fold_dead_era(None, Some(snap(10, 6, 0, 1.0)), 10);
+        assert_eq!(folded.submitted, 10);
+        assert_eq!(folded.completed, 6);
+        assert_eq!(folded.shed, 4);
+        invariant(&folded);
+    }
+
+    #[test]
+    fn fold_dead_era_with_no_pull_sheds_the_whole_era() {
+        // Worker died before any MetricsPull: everything accepted is shed.
+        let folded = fold_dead_era(None, None, 7);
+        assert_eq!(folded.submitted, 7);
+        assert_eq!(folded.completed, 0);
+        assert_eq!(folded.shed, 7);
+        invariant(&folded);
+    }
+
+    #[test]
+    fn kill_rejoin_second_kill_keeps_the_invariant() {
+        // Era 1: accepted 10, last pull saw 6 completed → 4 shed.
+        let carry = fold_dead_era(None, Some(snap(10, 6, 0, 2.0)), 10);
+        invariant(&carry);
+
+        // Rejoin: era 2 runs and dies too — accepted 5, pull saw 5 done.
+        let carry = fold_dead_era(Some(carry), Some(snap(5, 5, 0, 1.0)), 5);
+        assert_eq!(carry.submitted, 15);
+        assert_eq!(carry.completed, 11);
+        assert_eq!(carry.shed, 4);
+        invariant(&carry);
+
+        // Second rejoin dies with nothing pulled: 3 accepted, all shed.
+        let carry = fold_dead_era(Some(carry), None, 3);
+        assert_eq!(carry.submitted, 18);
+        assert_eq!(carry.completed, 11);
+        assert_eq!(carry.shed, 7);
+        invariant(&carry);
+    }
+
+    #[test]
+    fn shed_then_complete_late_stays_consistent() {
+        // The edge: the worker completed 8 of 10 by the time it died, but
+        // the last pull only saw 5. The 3 late completions are lost with
+        // the connection — they must be shed, not double-counted, and the
+        // invariant must hold on the numbers the fleet actually reports.
+        let last_pull = snap(10, 5, 0, 1.5);
+        let folded = fold_dead_era(None, Some(last_pull), 10);
+        assert_eq!(folded.completed, 5, "late completions never reach a client");
+        assert_eq!(folded.shed, 5);
+        invariant(&folded);
+
+        // A replacement era then completes cleanly; the stitched history
+        // still balances.
+        let total = fold_dead_era(Some(folded), Some(snap(20, 20, 0, 0.5)), 20);
+        assert_eq!(total.submitted, 30);
+        assert_eq!(total.completed, 25);
+        assert_eq!(total.shed, 5);
+        invariant(&total);
+    }
+
+    #[test]
+    fn fold_weights_latency_means_by_completions() {
+        // 6 completions at mean 2.0 then 6 more at mean 1.0 → 1.5.
+        let a = fold_dead_era(None, Some(snap(6, 6, 0, 2.0)), 6);
+        let b = fold_dead_era(Some(a), Some(snap(6, 6, 0, 1.0)), 6);
+        assert!((b.mean_latency_s - 1.5).abs() < 1e-9, "got {}", b.mean_latency_s);
+        invariant(&b);
     }
 }

@@ -13,10 +13,21 @@
 //! ```text
 //!   any peer   → Hello{version, role}        (first frame on a connection)
 //!   coordinator→ HelloAck{version, shard}    (or Error + close on mismatch)
-//!   coordinator→ Assign{shard, policy, config, catalog}   (workers only)
+//!   coordinator→ Assign{shard, policy, config, catalog, push_ms}  (workers)
 //!   worker     → AssignAck{shard}
 //!   client     → Submit / MetricsPull / Drain / Shutdown
 //!   coordinator→ SubmitResult / MetricsReply / DrainResult
+//! ```
+//!
+//! Every connection has exactly **one initiator**. The two telemetry
+//! roles added in protocol version 2 keep that rule by opening their own
+//! connections instead of interleaving frames on an existing one:
+//!
+//! ```text
+//!   pusher     → Hello{role: MetricsPusher}, then
+//!                MetricsPush{loads} ⇄ MetricsPushAck   (worker initiates)
+//!   subscriber → Hello{role: MetricsSubscriber}, then
+//!                MetricsPush{loads} ⇄ MetricsPushAck   (server initiates)
 //! ```
 
 use crate::cluster::ShardLoad;
@@ -28,8 +39,10 @@ use crate::sim::{Affinity, DriveParams};
 
 /// Bumped on any incompatible change to the frame or message format. The
 /// handshake rejects a peer with a different version outright — there is
-/// no negotiation, the fleet is deployed as one unit.
-pub const PROTOCOL_VERSION: u16 = 1;
+/// no negotiation, the fleet is deployed as one unit. Version 2 added
+/// the push-telemetry roles, `MetricsPush`/`MetricsPushAck` (tags
+/// 13–14), and `Assign::push_ms`.
+pub const PROTOCOL_VERSION: u16 = 2;
 
 /// Decode failure: the payload did not match its tag's schema.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -75,6 +88,14 @@ pub enum Role {
     Client,
     /// Runs a shard's `Coordinator` and serves routed submits.
     Worker,
+    /// A worker's telemetry side-connection: pushes that worker's
+    /// `MetricsSnapshot` to the coordinator on the assigned interval.
+    /// The pusher is the only initiator on its connection.
+    MetricsPusher,
+    /// A client's telemetry side-connection: the *coordinator* initiates
+    /// here, pushing fleet loads on a timer so the client can maintain
+    /// its in-flight gauge without a `MetricsPull` round trip per submit.
+    MetricsSubscriber,
 }
 
 /// Wire form of `Result<(), SubmitError>` plus the one condition only the
@@ -123,8 +144,16 @@ pub enum Message {
     /// client (clients have no shard identity).
     HelloAck { version: u16, shard: u32 },
     /// Hand a worker its shard: the coordinator-wide policy name, the
-    /// shard's `CoordinatorConfig`, and its ring partition of the catalog.
-    Assign { shard: u32, policy: String, config: CoordinatorConfig, catalog: Vec<Tape> },
+    /// shard's `CoordinatorConfig`, its ring partition of the catalog,
+    /// and the telemetry push interval in ms (0 = the worker opens no
+    /// pusher connection).
+    Assign {
+        shard: u32,
+        policy: String,
+        config: CoordinatorConfig,
+        catalog: Vec<Tape>,
+        push_ms: u64,
+    },
     AssignAck { shard: u32 },
     Submit { id: u64, tape: String, file_index: u64 },
     SubmitResult { outcome: SubmitOutcome },
@@ -138,6 +167,12 @@ pub enum Message {
     Shutdown,
     /// Handshake or protocol failure; the sender closes after this.
     Error { message: String },
+    /// Push-based telemetry (protocol v2): a worker's pusher connection
+    /// carries one entry (its own shard); the coordinator's subscriber
+    /// pushes carry the whole fleet. Advisory only — drain accounting
+    /// stays on the pull/drain path.
+    MetricsPush { loads: Vec<ShardLoad> },
+    MetricsPushAck,
 }
 
 const TAG_HELLO: u8 = 1;
@@ -152,6 +187,8 @@ const TAG_DRAIN: u8 = 9;
 const TAG_DRAIN_RESULT: u8 = 10;
 const TAG_SHUTDOWN: u8 = 11;
 const TAG_ERROR: u8 = 12;
+const TAG_METRICS_PUSH: u8 = 13;
+const TAG_METRICS_PUSH_ACK: u8 = 14;
 
 // ---- encode primitives ------------------------------------------------
 
@@ -411,6 +448,8 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             put_u8(&mut out, match role {
                 Role::Client => 0,
                 Role::Worker => 1,
+                Role::MetricsPusher => 2,
+                Role::MetricsSubscriber => 3,
             });
         }
         Message::HelloAck { version, shard } => {
@@ -418,7 +457,7 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             put_u16(&mut out, *version);
             put_u32(&mut out, *shard);
         }
-        Message::Assign { shard, policy, config, catalog } => {
+        Message::Assign { shard, policy, config, catalog, push_ms } => {
             put_u8(&mut out, TAG_ASSIGN);
             put_u32(&mut out, *shard);
             put_str(&mut out, policy);
@@ -427,6 +466,7 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             for t in catalog {
                 put_tape(&mut out, t);
             }
+            put_u64(&mut out, *push_ms);
         }
         Message::AssignAck { shard } => {
             put_u8(&mut out, TAG_ASSIGN_ACK);
@@ -465,6 +505,11 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             put_u8(&mut out, TAG_ERROR);
             put_str(&mut out, message);
         }
+        Message::MetricsPush { loads } => {
+            put_u8(&mut out, TAG_METRICS_PUSH);
+            put_loads(&mut out, loads);
+        }
+        Message::MetricsPushAck => put_u8(&mut out, TAG_METRICS_PUSH_ACK),
     }
     out
 }
@@ -479,6 +524,8 @@ pub fn decode(payload: &[u8]) -> Result<Message, WireError> {
             let role = match r.u8()? {
                 0 => Role::Client,
                 1 => Role::Worker,
+                2 => Role::MetricsPusher,
+                3 => Role::MetricsSubscriber,
                 v => return Err(WireError::BadEnum { what: "role", value: v }),
             };
             Message::Hello { version, role }
@@ -493,7 +540,8 @@ pub fn decode(payload: &[u8]) -> Result<Message, WireError> {
             for _ in 0..n {
                 catalog.push(get_tape(&mut r)?);
             }
-            Message::Assign { shard, policy, config, catalog }
+            let push_ms = r.u64()?;
+            Message::Assign { shard, policy, config, catalog, push_ms }
         }
         TAG_ASSIGN_ACK => Message::AssignAck { shard: r.u32()? },
         TAG_SUBMIT => {
@@ -521,6 +569,8 @@ pub fn decode(payload: &[u8]) -> Result<Message, WireError> {
         }
         TAG_SHUTDOWN => Message::Shutdown,
         TAG_ERROR => Message::Error { message: r.str()? },
+        TAG_METRICS_PUSH => Message::MetricsPush { loads: get_loads(&mut r)? },
+        TAG_METRICS_PUSH_ACK => Message::MetricsPushAck,
         other => return Err(WireError::BadTag(other)),
     };
     if r.remaining() > 0 {
@@ -583,8 +633,16 @@ mod tests {
         vec![
             Message::Hello { version: PROTOCOL_VERSION, role: Role::Client },
             Message::Hello { version: PROTOCOL_VERSION, role: Role::Worker },
+            Message::Hello { version: PROTOCOL_VERSION, role: Role::MetricsPusher },
+            Message::Hello { version: PROTOCOL_VERSION, role: Role::MetricsSubscriber },
             Message::HelloAck { version: PROTOCOL_VERSION, shard: u32::MAX },
-            Message::Assign { shard: 2, policy: "SimpleDP".into(), config, catalog },
+            Message::Assign {
+                shard: 2,
+                policy: "SimpleDP".into(),
+                config,
+                catalog,
+                push_ms: 250,
+            },
             Message::AssignAck { shard: 2 },
             Message::Submit { id: u64::MAX - 7, tape: "TAPE001".into(), file_index: 3 },
             Message::SubmitResult { outcome: SubmitOutcome::Accepted },
@@ -617,6 +675,11 @@ mod tests {
             },
             Message::Shutdown,
             Message::Error { message: "protocol version mismatch".into() },
+            Message::MetricsPush {
+                loads: vec![ShardLoad { shard: 2, routed: 0, metrics: sample_snapshot() }],
+            },
+            Message::MetricsPush { loads: Vec::new() },
+            Message::MetricsPushAck,
         ]
     }
 

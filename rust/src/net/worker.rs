@@ -16,10 +16,23 @@
 //! coordinator; the server side synthesizes the shed accounting for
 //! whatever it had accepted (the drain invariant `submitted − completed −
 //! shed` is kept by the *coordinator*, not by the dying worker).
+//!
+//! When the assignment carries `push_ms > 0`, the worker also opens a
+//! *second* connection back to the same coordinator address with
+//! `Role::MetricsPusher` and streams its metrics snapshot on that
+//! interval. The push conversation lives entirely on that side channel —
+//! the main connection stays strictly one-initiator request/response, so
+//! a push can never interleave with an in-flight submit round trip.
+//! Telemetry is best-effort: if the pusher cannot connect or its
+//! connection dies, the worker keeps serving and the coordinator falls
+//! back to pull accounting.
 
 use std::io;
 use std::net::TcpStream;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::cluster::ShardLoad;
 use crate::coordinator::{Coordinator, ReadRequest, SubmitError};
@@ -65,9 +78,9 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
             ))
         }
     };
-    let (policy_name, config, catalog) = match recv(&mut stream)? {
-        Some(Message::Assign { shard: s, policy, config, catalog }) if s == shard => {
-            (policy, config, catalog)
+    let (policy_name, config, catalog, push_ms) = match recv(&mut stream)? {
+        Some(Message::Assign { shard: s, policy, config, catalog, push_ms }) if s == shard => {
+            (policy, config, catalog, push_ms)
         }
         other => {
             return Err(io::Error::new(
@@ -82,8 +95,26 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
             format!("coordinator assigned unknown policy {policy_name:?}"),
         )
     })?;
-    let mut coordinator = Some(Coordinator::start(config, catalog, Arc::from(policy)));
+    // The pusher thread snapshots metrics concurrently with the serving
+    // loop, so the coordinator lives behind a mutex; `None` after drain.
+    let coordinator: Arc<Mutex<Option<Coordinator>>> =
+        Arc::new(Mutex::new(Some(Coordinator::start(config, catalog, Arc::from(policy)))));
     send(&mut stream, &Message::AssignAck { shard })?;
+
+    let pusher = if push_ms > 0 {
+        stream
+            .peer_addr()
+            .ok()
+            .map(|addr| spawn_pusher(addr.to_string(), shard, push_ms, Arc::clone(&coordinator)))
+    } else {
+        None
+    };
+    let stop_pusher = |pusher: Option<(Arc<AtomicBool>, JoinHandle<()>)>| {
+        if let Some((stop, handle)) = pusher {
+            stop.store(true, Ordering::SeqCst);
+            let _ = handle.join();
+        }
+    };
 
     loop {
         let msg = match recv(&mut stream) {
@@ -91,15 +122,16 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
             // Clean close or a dead coordinator: discard un-drained work —
             // the server side sheds this shard's accepted batches.
             Ok(None) | Err(_) => {
-                if let Some(c) = coordinator.take() {
+                if let Some(c) = coordinator.lock().unwrap().take() {
                     let _ = c.finish();
                 }
+                stop_pusher(pusher);
                 return Ok(());
             }
         };
         match msg {
             Message::Submit { id, tape, file_index } => {
-                let result = match &coordinator {
+                let result = match &*coordinator.lock().unwrap() {
                     Some(c) => c.submit(ReadRequest {
                         id,
                         tape,
@@ -113,7 +145,7 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
                 )?;
             }
             Message::MetricsPull => {
-                let metrics = match &coordinator {
+                let metrics = match &*coordinator.lock().unwrap() {
                     Some(c) => c.metrics(),
                     None => Default::default(),
                 };
@@ -127,7 +159,7 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
                 )?;
             }
             Message::Drain => {
-                let (completions, metrics) = match coordinator.take() {
+                let (completions, metrics) = match coordinator.lock().unwrap().take() {
                     Some(c) => c.finish(),
                     None => (Vec::new(), Default::default()),
                 };
@@ -138,11 +170,16 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
                         loads: vec![ShardLoad { shard: shard as usize, routed: 0, metrics }],
                     },
                 )?;
+                // Drained: nothing left to push. Stop the telemetry thread
+                // but keep answering the main connection until Shutdown.
+                stop_pusher(pusher);
+                return serve_drained(stream, shard);
             }
             Message::Shutdown => {
-                if let Some(c) = coordinator.take() {
+                if let Some(c) = coordinator.lock().unwrap().take() {
                     let _ = c.finish();
                 }
+                stop_pusher(pusher);
                 return Ok(());
             }
             other => {
@@ -153,6 +190,98 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
                     },
                 )?;
             }
+        }
+    }
+}
+
+/// After a drain the worker keeps the main connection alive (the
+/// coordinator sends `Shutdown` once the fleet report is assembled), but
+/// every request answers from the empty state.
+fn serve_drained(mut stream: TcpStream, shard: u32) -> io::Result<()> {
+    loop {
+        match recv(&mut stream) {
+            Ok(None) | Err(_) | Ok(Some(Message::Shutdown)) => return Ok(()),
+            Ok(Some(Message::Submit { .. })) => {
+                send(&mut stream, &Message::SubmitResult { outcome: SubmitOutcome::Stopping })?;
+            }
+            Ok(Some(Message::MetricsPull)) => {
+                send(
+                    &mut stream,
+                    &Message::MetricsReply {
+                        loads: vec![ShardLoad {
+                            shard: shard as usize,
+                            routed: 0,
+                            metrics: Default::default(),
+                        }],
+                    },
+                )?;
+            }
+            Ok(Some(other)) => {
+                send(
+                    &mut stream,
+                    &Message::Error { message: format!("worker is drained; cannot serve {other:?}") },
+                )?;
+            }
+        }
+    }
+}
+
+/// Open the telemetry side channel and stream metrics snapshots every
+/// `push_ms` until stopped or the coordinator is drained. Best-effort by
+/// design — any failure ends telemetry, never the worker.
+fn spawn_pusher(
+    addr: String,
+    shard: u32,
+    push_ms: u64,
+    coordinator: Arc<Mutex<Option<Coordinator>>>,
+) -> (Arc<AtomicBool>, JoinHandle<()>) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = Arc::clone(&stop);
+    let handle = std::thread::spawn(move || {
+        let _ = push_loop(&addr, shard, push_ms, &coordinator, &stop_flag);
+    });
+    (stop, handle)
+}
+
+fn push_loop(
+    addr: &str,
+    shard: u32,
+    push_ms: u64,
+    coordinator: &Mutex<Option<Coordinator>>,
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    let mut conn = TcpStream::connect(addr)?;
+    conn.set_nodelay(true).ok();
+    send(&mut conn, &Message::Hello { version: PROTOCOL_VERSION, role: Role::MetricsPusher })?;
+    match recv(&mut conn)? {
+        Some(Message::HelloAck { .. }) => {}
+        _ => return Ok(()),
+    }
+    loop {
+        // Sleep in short slices so a stop request is honored promptly
+        // even with a long push interval.
+        let mut slept = 0;
+        while slept < push_ms {
+            if stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            let slice = (push_ms - slept).min(20);
+            std::thread::sleep(Duration::from_millis(slice));
+            slept += slice;
+        }
+        let metrics = match &*coordinator.lock().unwrap() {
+            Some(c) => c.metrics(),
+            None => return Ok(()), // drained under us
+        };
+        send(
+            &mut conn,
+            &Message::MetricsPush {
+                loads: vec![ShardLoad { shard: shard as usize, routed: 0, metrics }],
+            },
+        )?;
+        match recv(&mut conn)? {
+            Some(Message::MetricsPushAck) => {}
+            _ => return Ok(()),
         }
     }
 }

@@ -1,0 +1,272 @@
+//! Prometheus-style exposition: a [`Registry`] of render closures and a
+//! hand-rolled HTTP/1.0 plaintext endpoint ([`ExpositionServer`]).
+//!
+//! The registry holds no metric *values* — only closures that render the
+//! live source of truth (`SharedMetrics`, the networked coordinator's
+//! per-shard accounting) at scrape time. There is deliberately no second
+//! copy of any counter: whatever the drain report says, the scrape says,
+//! because both read the same atomics.
+//!
+//! The HTTP server is the smallest thing that `curl` and a Prometheus
+//! scraper both accept: read one request, answer
+//! `HTTP/1.0 200 OK` with `Content-Type: text/plain; version=0.0.4` and
+//! an exact `Content-Length`, close. No keep-alive, no routing — every
+//! path serves the metrics page.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+type Source = Box<dyn Fn(&mut String) + Send + Sync>;
+
+/// A set of exposition sources rendered in registration order.
+#[derive(Default)]
+pub struct Registry {
+    sources: Mutex<Vec<Source>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register a render closure. It is called at every scrape with the
+    /// page buffer; it must append complete exposition lines.
+    pub fn register<F>(&self, f: F)
+    where
+        F: Fn(&mut String) + Send + Sync + 'static,
+    {
+        self.sources.lock().unwrap().push(Box::new(f));
+    }
+
+    /// Render the whole page (the body of a scrape response).
+    pub fn render(&self) -> String {
+        let mut buf = String::new();
+        for f in self.sources.lock().unwrap().iter() {
+            f(&mut buf);
+        }
+        buf
+    }
+}
+
+fn write_labels(buf: &mut String, labels: &[(&str, &str)]) {
+    if labels.is_empty() {
+        return;
+    }
+    buf.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            buf.push(',');
+        }
+        buf.push_str(k);
+        buf.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '"' => buf.push_str("\\\""),
+                '\\' => buf.push_str("\\\\"),
+                '\n' => buf.push_str("\\n"),
+                c => buf.push(c),
+            }
+        }
+        buf.push('"');
+    }
+    buf.push('}');
+}
+
+/// Append one integer-valued sample line (`name{labels} value`).
+pub fn write_counter(buf: &mut String, name: &str, labels: &[(&str, &str)], value: u64) {
+    buf.push_str(name);
+    write_labels(buf, labels);
+    buf.push(' ');
+    buf.push_str(&value.to_string());
+    buf.push('\n');
+}
+
+/// Append one float-valued sample line. Non-finite values render as the
+/// exposition format's `+Inf`/`-Inf`/`NaN`.
+pub fn write_gauge(buf: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    buf.push_str(name);
+    write_labels(buf, labels);
+    buf.push(' ');
+    if value.is_nan() {
+        buf.push_str("NaN");
+    } else if value == f64::INFINITY {
+        buf.push_str("+Inf");
+    } else if value == f64::NEG_INFINITY {
+        buf.push_str("-Inf");
+    } else {
+        buf.push_str(&format!("{value}"));
+    }
+    buf.push('\n');
+}
+
+/// Append a `# TYPE` header for a metric family.
+pub fn write_type(buf: &mut String, name: &str, kind: &str) {
+    buf.push_str("# TYPE ");
+    buf.push_str(name);
+    buf.push(' ');
+    buf.push_str(kind);
+    buf.push('\n');
+}
+
+/// A background scrape endpoint bound to one address. Dropping (or
+/// calling [`ExpositionServer::stop`]) stops the accept loop and joins
+/// the thread.
+pub struct ExpositionServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ExpositionServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9187`, or port 0 for ephemeral) and
+    /// serve `registry` until stopped.
+    pub fn bind(addr: &str, registry: Arc<Registry>) -> io::Result<ExpositionServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            while !stop_flag.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // Scrapes are tiny; serve inline so a stop is
+                        // never racing detached handler threads.
+                        let _ = serve_scrape(stream, &registry);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(ExpositionServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the server thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ExpositionServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_scrape(mut stream: TcpStream, registry: &Registry) -> io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(500))).ok();
+    // Read until the blank line ending the request head (or the client
+    // stops sending). The request itself is ignored: every path is the
+    // metrics page.
+    let mut head = Vec::new();
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&chunk[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8 * 1024 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let body = registry.render();
+    let response = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn sample_lines_render_labels_and_values() {
+        let mut buf = String::new();
+        write_type(&mut buf, "tapesched_submitted_total", "counter");
+        write_counter(&mut buf, "tapesched_submitted_total", &[("shard", "0")], 42);
+        write_gauge(&mut buf, "tapesched_mean_latency_seconds", &[], 1.5);
+        write_gauge(&mut buf, "tapesched_odd", &[("q", "a\"b")], f64::INFINITY);
+        assert_eq!(
+            buf,
+            "# TYPE tapesched_submitted_total counter\n\
+             tapesched_submitted_total{shard=\"0\"} 42\n\
+             tapesched_mean_latency_seconds 1.5\n\
+             tapesched_odd{q=\"a\\\"b\"} +Inf\n"
+        );
+    }
+
+    #[test]
+    fn registry_renders_sources_in_registration_order() {
+        let reg = Registry::new();
+        let counter = Arc::new(AtomicU64::new(7));
+        let c = Arc::clone(&counter);
+        reg.register(move |buf| {
+            write_counter(buf, "a_total", &[], c.load(Ordering::Relaxed));
+        });
+        reg.register(|buf| buf.push_str("b_gauge 1\n"));
+        assert_eq!(reg.render(), "a_total 7\nb_gauge 1\n");
+        counter.store(9, Ordering::Relaxed);
+        assert_eq!(reg.render(), "a_total 9\nb_gauge 1\n", "live source, no cached copy");
+    }
+
+    #[test]
+    fn the_endpoint_answers_a_scrape_and_stops_cleanly() {
+        let reg = Arc::new(Registry::new());
+        reg.register(|buf| buf.push_str("tapesched_up 1\n"));
+        let server = ExpositionServer::bind("127.0.0.1:0", Arc::clone(&reg))
+            .expect("bind ephemeral endpoint");
+        let addr = server.addr();
+
+        let mut conn = TcpStream::connect(addr).expect("connect scraper");
+        conn.write_all(b"GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+        let mut response = String::new();
+        conn.read_to_string(&mut response).expect("read scrape");
+        assert!(response.starts_with("HTTP/1.0 200 OK\r\n"), "got: {response}");
+        assert!(response.contains("Content-Type: text/plain; version=0.0.4"));
+        let body = response.split("\r\n\r\n").nth(1).expect("body");
+        assert_eq!(body, "tapesched_up 1\n");
+        let head = response.split("\r\n\r\n").next().unwrap();
+        assert!(head.contains(&format!("Content-Length: {}", body.len())));
+
+        server.stop();
+        // The listener is gone after stop: a fresh connect must fail (or
+        // connect and then see an immediate close on some platforms — so
+        // only assert the success path no longer serves).
+        if let Ok(mut late) = TcpStream::connect(addr) {
+            late.write_all(b"GET / HTTP/1.0\r\n\r\n").ok();
+            let mut s = String::new();
+            let n = late.read_to_string(&mut s).unwrap_or(0);
+            assert_eq!(n, 0, "stopped endpoint must not serve");
+        }
+    }
+}

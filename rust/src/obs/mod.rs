@@ -1,0 +1,34 @@
+//! Observability: request-lifecycle tracing, span analysis, and a
+//! Prometheus-style exposition surface. Dependency-free, like the rest
+//! of the crate.
+//!
+//! Three pillars, one per module:
+//!
+//! - [`trace`] — the span recorder: a fixed-capacity ring buffer of
+//!   `Span { request_id, stage, t_start_us, t_end_us, shard, drive,
+//!   tape }`, filled by the replay engine (virtual µs) and the live
+//!   coordinator (wall µs) through the same nine-stage chain, dumped as
+//!   newline-delimited JSON by `replay --trace-out` / `serve
+//!   --trace-out`.
+//! - [`spans`] — the reader: parse a JSONL trace back in, render the
+//!   per-stage latency breakdown (`tapesched spans`), and validate chain
+//!   integrity for the ci obs gate (no gaps, no overlaps, monotone).
+//! - [`expo`] — the scrape surface: a [`Registry`] of render closures
+//!   over the *live* metrics (never a copied value, so exposition and
+//!   drain reports cannot diverge) behind a hand-rolled HTTP/1.0
+//!   plaintext endpoint in Prometheus text exposition format
+//!   (`serve --metrics-listen` / `coordinator --metrics-listen`).
+//!
+//! The push-based fleet telemetry that feeds the networked coordinator's
+//! exposition (wire tags 13–14) lives in [`crate::net`]; this module
+//! only renders what that layer accounts.
+
+pub mod expo;
+pub mod spans;
+pub mod trace;
+
+pub use expo::{write_counter, write_gauge, write_type, ExpositionServer, Registry};
+pub use spans::{
+    breakdown, check_chains, parse_jsonl, render_breakdown, ParsedSpan, StageRow,
+};
+pub use trace::{clamp_boundaries, Span, Stage, TraceRecorder, DEFAULT_TRACE_CAP};

@@ -1,0 +1,264 @@
+//! Span analysis: parse `--trace-out` JSONL back in, render a per-stage
+//! latency breakdown, and validate chain integrity (the ci obs gate).
+//!
+//! The parser is a tolerant, hand-rolled field extractor — it reads
+//! exactly the flat one-object-per-line format [`super::trace`] writes,
+//! skips lines it cannot parse (a truncated tail from a killed run must
+//! not poison the analysis), and needs no JSON dependency.
+
+use std::collections::BTreeMap;
+
+use super::trace::Stage;
+use crate::util::stats::percentile_sorted;
+
+/// A span read back from a JSONL trace. `stage` stays a string so
+/// foreign or future stage names still parse (the chain checker is where
+/// strictness lives).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedSpan {
+    pub request_id: u64,
+    pub stage: String,
+    pub t_start_us: u64,
+    pub t_end_us: u64,
+    pub shard: u32,
+    pub drive: u32,
+    pub tape: String,
+}
+
+fn num_field(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = line[start..].trim_start();
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    if end == 0 {
+        return None;
+    }
+    rest[..end].parse().ok()
+}
+
+fn str_field(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = line[start..].trim_start().strip_prefix('"')?;
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => return Some(out),
+            '\\' => match chars.next()? {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                'u' => {
+                    let hex: String = chars.by_ref().take(4).collect();
+                    let code = u32::from_str_radix(&hex, 16).ok()?;
+                    out.push(char::from_u32(code)?);
+                }
+                other => out.push(other),
+            },
+            c => out.push(c),
+        }
+    }
+    None
+}
+
+/// Parse one JSONL line; `None` if any required field is missing.
+pub fn parse_line(line: &str) -> Option<ParsedSpan> {
+    let line = line.trim();
+    if line.is_empty() {
+        return None;
+    }
+    Some(ParsedSpan {
+        request_id: num_field(line, "request_id")?,
+        stage: str_field(line, "stage")?,
+        t_start_us: num_field(line, "t_start_us")?,
+        t_end_us: num_field(line, "t_end_us")?,
+        shard: num_field(line, "shard")? as u32,
+        drive: num_field(line, "drive")? as u32,
+        tape: str_field(line, "tape")?,
+    })
+}
+
+/// Parse a whole trace file, skipping blank and malformed lines.
+pub fn parse_jsonl(text: &str) -> Vec<ParsedSpan> {
+    text.lines().filter_map(parse_line).collect()
+}
+
+/// One row of the per-stage latency breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageRow {
+    pub stage: String,
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub max_us: u64,
+    /// This stage's share of total traced time, percent.
+    pub share_pct: f64,
+}
+
+/// Aggregate spans into per-stage rows, canonical chain order first, any
+/// unknown stage names appended alphabetically.
+pub fn breakdown(spans: &[ParsedSpan]) -> Vec<StageRow> {
+    let mut by_stage: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for s in spans {
+        by_stage.entry(s.stage.as_str()).or_default().push((s.t_end_us - s.t_start_us) as f64);
+    }
+    let grand_total: f64 = by_stage.values().flatten().sum();
+    let mut order: Vec<&str> = Stage::CHAIN
+        .iter()
+        .map(|s| s.as_str())
+        .filter(|name| by_stage.contains_key(name))
+        .collect();
+    for name in by_stage.keys() {
+        if Stage::parse(name).is_none() {
+            order.push(*name);
+        }
+    }
+    order
+        .into_iter()
+        .map(|name| {
+            let mut durs = by_stage[name].clone();
+            durs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let count = durs.len() as u64;
+            let sum: f64 = durs.iter().sum();
+            StageRow {
+                stage: name.to_string(),
+                count,
+                mean_us: sum / count as f64,
+                p50_us: percentile_sorted(&durs, 50.0),
+                p99_us: percentile_sorted(&durs, 99.0),
+                p999_us: percentile_sorted(&durs, 99.9),
+                max_us: *durs.last().unwrap() as u64,
+                share_pct: if grand_total > 0.0 { 100.0 * sum / grand_total } else { 0.0 },
+            }
+        })
+        .collect()
+}
+
+/// Render the breakdown as an aligned plaintext table.
+pub fn render_breakdown(rows: &[StageRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<15} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12} {:>7}\n",
+        "stage", "count", "mean_us", "p50_us", "p99_us", "p99.9_us", "max_us", "share"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<15} {:>10} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12} {:>6.1}%\n",
+            r.stage, r.count, r.mean_us, r.p50_us, r.p99_us, r.p999_us, r.max_us, r.share_pct
+        ));
+    }
+    out
+}
+
+/// Validate chain integrity: every request with spans must have exactly
+/// one span per canonical stage, in [`Stage::CHAIN`] order, contiguous
+/// (each stage starts where the previous ended) and monotone. Returns
+/// the number of complete chains, or the first violation.
+pub fn check_chains(spans: &[ParsedSpan]) -> Result<usize, String> {
+    let mut by_request: BTreeMap<u64, Vec<&ParsedSpan>> = BTreeMap::new();
+    for s in spans {
+        by_request.entry(s.request_id).or_default().push(s);
+    }
+    for (id, chain) in &by_request {
+        if chain.len() != Stage::CHAIN.len() {
+            return Err(format!(
+                "request {id}: {} spans, expected {} (one per stage)",
+                chain.len(),
+                Stage::CHAIN.len()
+            ));
+        }
+        for (i, span) in chain.iter().enumerate() {
+            let want = Stage::CHAIN[i].as_str();
+            if span.stage != want {
+                return Err(format!(
+                    "request {id}: stage {i} is {:?}, expected {want:?}",
+                    span.stage
+                ));
+            }
+            if span.t_end_us < span.t_start_us {
+                return Err(format!(
+                    "request {id}: stage {want} runs backwards ({} → {})",
+                    span.t_start_us, span.t_end_us
+                ));
+            }
+            if i > 0 && span.t_start_us != chain[i - 1].t_end_us {
+                return Err(format!(
+                    "request {id}: gap/overlap before {want} \
+                     (previous ended {}, this starts {})",
+                    chain[i - 1].t_end_us, span.t_start_us
+                ));
+            }
+        }
+    }
+    Ok(by_request.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceRecorder;
+
+    fn traced_text() -> String {
+        let rec = TraceRecorder::new(64);
+        rec.record_chain(1, 0, 0, "TAPE000", [0, 2, 2, 10, 10, 12, 15, 20, 40, 40]);
+        rec.record_chain(2, 1, 3, "TAPE001", [5, 5, 5, 11, 14, 14, 14, 22, 50, 50]);
+        let mut buf = Vec::new();
+        rec.write_jsonl(&mut buf).unwrap();
+        String::from_utf8(buf).unwrap()
+    }
+
+    #[test]
+    fn writer_output_parses_back_and_checks_clean() {
+        let spans = parse_jsonl(&traced_text());
+        assert_eq!(spans.len(), 18);
+        assert_eq!(spans[0].request_id, 1);
+        assert_eq!(spans[0].stage, "submit");
+        assert_eq!(spans[9].tape, "TAPE001");
+        assert_eq!(check_chains(&spans), Ok(2));
+    }
+
+    #[test]
+    fn malformed_lines_are_skipped_not_fatal() {
+        let text = format!("garbage\n{}{{\"request_id\":9}}\n", traced_text());
+        let spans = parse_jsonl(&text);
+        assert_eq!(spans.len(), 18, "only well-formed spans survive");
+    }
+
+    #[test]
+    fn gaps_and_wrong_order_are_rejected() {
+        let mut spans = parse_jsonl(&traced_text());
+        // Introduce a gap: request 1's exec starts 1µs late.
+        let exec = spans.iter_mut().find(|s| s.request_id == 1 && s.stage == "exec").unwrap();
+        exec.t_start_us += 1;
+        let err = check_chains(&spans).unwrap_err();
+        assert!(err.contains("request 1"), "{err}");
+        assert!(err.contains("gap/overlap"), "{err}");
+
+        let mut spans = parse_jsonl(&traced_text());
+        spans.retain(|s| !(s.request_id == 2 && s.stage == "mount"));
+        let err = check_chains(&spans).unwrap_err();
+        assert!(err.contains("request 2"), "{err}");
+    }
+
+    #[test]
+    fn breakdown_orders_stages_and_shares_sum_to_100() {
+        let spans = parse_jsonl(&traced_text());
+        let rows = breakdown(&spans);
+        assert_eq!(rows.first().unwrap().stage, "submit");
+        assert_eq!(rows.last().unwrap().stage, "complete");
+        let share: f64 = rows.iter().map(|r| r.share_pct).sum();
+        assert!((share - 100.0).abs() < 1e-6, "shares sum to {share}");
+        let exec = rows.iter().find(|r| r.stage == "exec").unwrap();
+        assert_eq!(exec.count, 2);
+        // Request 1 exec: 40−20 = 20; request 2 exec: 50−22 = 28.
+        assert!((exec.mean_us - 24.0).abs() < 1e-9);
+        assert_eq!(exec.max_us, 28);
+        let table = render_breakdown(&rows);
+        assert!(table.contains("exec"));
+        assert!(table.contains("share"));
+    }
+}

@@ -1,0 +1,357 @@
+//! Request-lifecycle tracing: a fixed-capacity ring-buffer span recorder.
+//!
+//! Every request that crosses the stack traverses the same nine stages —
+//! submit → route → batch-seal → drive-wait → cartridge-wait → arm-wait →
+//! mount → exec → complete — whether it runs through the virtual-time
+//! replay engine (stage times in virtual µs) or the live coordinator
+//! (wall µs since service start). Both emitters record one [`Span`] per
+//! stage through the same [`TraceRecorder`], so the `tapesched spans`
+//! breakdown and the ci chain gate read one format regardless of source.
+//!
+//! The recorder is deliberately cheap: a single mutex around a
+//! pre-sized ring. Emitters record a whole request's chain in one lock
+//! acquisition ([`TraceRecorder::record_chain`]), and when the ring is
+//! full the oldest spans are overwritten (`dropped` counts them) rather
+//! than growing memory or blocking the hot path. Tracing that is *off*
+//! costs nothing at all — every instrumentation site is gated on an
+//! `Option` that is `None` by default, and the default replay path stays
+//! byte-identical with the recorder absent.
+//!
+//! ## Chain construction
+//!
+//! A chain is built from **10 boundary timestamps** (9 contiguous
+//! stages). Raw boundaries are not always monotone — a replay request can
+//! join a batch after its window already expired, so its submit time may
+//! exceed the batch's seal time — so [`clamp_boundaries`] applies a
+//! prefix-max before spans are cut: every stage keeps its true share of
+//! the request's life where the measurements are ordered, and degenerates
+//! to a zero-length span where they are not. After clamping, the stage
+//! durations of a chain sum exactly to `boundary[9] − boundary[0]`.
+
+use std::io::{self, Write};
+use std::sync::Mutex;
+
+/// Default ring capacity for `--trace-out` runs (spans, not requests: a
+/// full chain is 9 spans, so this holds the last ~116k requests).
+pub const DEFAULT_TRACE_CAP: usize = 1 << 20;
+
+/// One stage of a request's life. The order of [`Stage::CHAIN`] is the
+/// canonical chain order every complete request traverses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Arrival → accepted by the submit path.
+    Submit,
+    /// Accepted → routed to its shard.
+    Route,
+    /// Routed → the request's batch was sealed (window expiry or size
+    /// cap) and became dispatchable.
+    BatchSeal,
+    /// Sealed → a drive was claimed for the batch.
+    DriveWait,
+    /// Waiting for the physical cartridge (per-tape mount exclusivity).
+    CartridgeWait,
+    /// Waiting for a robot arm to pick the cartridge up.
+    ArmWait,
+    /// The mount operation itself (zero-length on a remount hit, and on
+    /// the live path where the mount is a charge, not a wall sleep).
+    Mount,
+    /// In-drive execution: scheduling plus the in-tape tour.
+    Exec,
+    /// Served → completion recorded.
+    Complete,
+}
+
+impl Stage {
+    /// The canonical chain order (index i spans boundaries i → i+1).
+    pub const CHAIN: [Stage; 9] = [
+        Stage::Submit,
+        Stage::Route,
+        Stage::BatchSeal,
+        Stage::DriveWait,
+        Stage::CartridgeWait,
+        Stage::ArmWait,
+        Stage::Mount,
+        Stage::Exec,
+        Stage::Complete,
+    ];
+
+    /// Stable wire name (the `stage` field of a JSONL span).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Submit => "submit",
+            Stage::Route => "route",
+            Stage::BatchSeal => "batch_seal",
+            Stage::DriveWait => "drive_wait",
+            Stage::CartridgeWait => "cartridge_wait",
+            Stage::ArmWait => "arm_wait",
+            Stage::Mount => "mount",
+            Stage::Exec => "exec",
+            Stage::Complete => "complete",
+        }
+    }
+
+    /// Inverse of [`Stage::as_str`].
+    pub fn parse(s: &str) -> Option<Stage> {
+        Stage::CHAIN.iter().copied().find(|st| st.as_str() == s)
+    }
+}
+
+/// One recorded stage interval of one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub request_id: u64,
+    pub stage: Stage,
+    /// Stage entry, µs on the emitter's clock (virtual µs in replay, wall
+    /// µs since service start in the live coordinator).
+    pub t_start_us: u64,
+    /// Stage exit, same clock. Always ≥ `t_start_us`.
+    pub t_end_us: u64,
+    pub shard: u32,
+    pub drive: u32,
+    pub tape: String,
+}
+
+struct Ring {
+    buf: Vec<Span>,
+    /// Next overwrite position once the buffer is full.
+    head: usize,
+    /// Spans overwritten because the ring was full.
+    dropped: u64,
+}
+
+/// The span sink: a fixed-capacity ring under one mutex.
+pub struct TraceRecorder {
+    cap: usize,
+    ring: Mutex<Ring>,
+}
+
+impl TraceRecorder {
+    /// A recorder holding at most `cap` spans (oldest overwritten first).
+    pub fn new(cap: usize) -> TraceRecorder {
+        let cap = cap.max(1);
+        TraceRecorder {
+            cap,
+            ring: Mutex::new(Ring { buf: Vec::new(), head: 0, dropped: 0 }),
+        }
+    }
+
+    /// Record capacity in spans.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    fn push_locked(ring: &mut Ring, cap: usize, span: Span) {
+        if ring.buf.len() < cap {
+            ring.buf.push(span);
+        } else {
+            ring.buf[ring.head] = span;
+            ring.head = (ring.head + 1) % cap;
+            ring.dropped += 1;
+        }
+    }
+
+    /// Record one span.
+    pub fn record(&self, span: Span) {
+        let mut ring = self.ring.lock().unwrap();
+        TraceRecorder::push_locked(&mut ring, self.cap, span);
+    }
+
+    /// Record a request's whole chain in one lock acquisition: 10
+    /// boundary timestamps → 9 contiguous spans in [`Stage::CHAIN`]
+    /// order, with [`clamp_boundaries`] applied first.
+    pub fn record_chain(
+        &self,
+        request_id: u64,
+        shard: u32,
+        drive: u32,
+        tape: &str,
+        boundaries: [u64; 10],
+    ) {
+        let b = clamp_boundaries(boundaries);
+        let mut ring = self.ring.lock().unwrap();
+        for (i, stage) in Stage::CHAIN.iter().enumerate() {
+            TraceRecorder::push_locked(
+                &mut ring,
+                self.cap,
+                Span {
+                    request_id,
+                    stage: *stage,
+                    t_start_us: b[i],
+                    t_end_us: b[i + 1],
+                    shard,
+                    drive,
+                    tape: tape.to_string(),
+                },
+            );
+        }
+    }
+
+    /// Spans currently held.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().unwrap().dropped
+    }
+
+    /// A copy of the held spans in insertion order (oldest first).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let ring = self.ring.lock().unwrap();
+        let mut out = Vec::with_capacity(ring.buf.len());
+        out.extend_from_slice(&ring.buf[ring.head..]);
+        out.extend_from_slice(&ring.buf[..ring.head]);
+        out
+    }
+
+    /// Write the held spans as newline-delimited JSON (insertion order).
+    /// Returns the number of spans written.
+    pub fn write_jsonl<W: Write>(&self, w: &mut W) -> io::Result<usize> {
+        let spans = self.snapshot();
+        let mut line = String::new();
+        for span in &spans {
+            line.clear();
+            span_json(&mut line, span);
+            line.push('\n');
+            w.write_all(line.as_bytes())?;
+        }
+        Ok(spans.len())
+    }
+}
+
+/// Prefix-max over the 10 chain boundaries: measurements that arrive out
+/// of order (e.g. a request submitted after its batch's window already
+/// expired) collapse the affected stage to zero length instead of
+/// producing a negative span.
+pub fn clamp_boundaries(mut b: [u64; 10]) -> [u64; 10] {
+    for i in 1..b.len() {
+        if b[i] < b[i - 1] {
+            b[i] = b[i - 1];
+        }
+    }
+    b
+}
+
+/// One span as a single-line JSON object (the `--trace-out` format).
+fn span_json(out: &mut String, s: &Span) {
+    out.push_str("{\"request_id\":");
+    out.push_str(&s.request_id.to_string());
+    out.push_str(",\"stage\":\"");
+    out.push_str(s.stage.as_str());
+    out.push_str("\",\"t_start_us\":");
+    out.push_str(&s.t_start_us.to_string());
+    out.push_str(",\"t_end_us\":");
+    out.push_str(&s.t_end_us.to_string());
+    out.push_str(",\"shard\":");
+    out.push_str(&s.shard.to_string());
+    out.push_str(",\"drive\":");
+    out.push_str(&s.drive.to_string());
+    out.push_str(",\"tape\":\"");
+    for c in s.tape.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push_str("\"}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_round_trip() {
+        for stage in Stage::CHAIN {
+            assert_eq!(Stage::parse(stage.as_str()), Some(stage));
+        }
+        assert_eq!(Stage::parse("nope"), None);
+    }
+
+    #[test]
+    fn clamping_is_prefix_max_and_preserves_the_total() {
+        let raw = [5, 3, 3, 10, 8, 12, 12, 12, 20, 20];
+        let b = clamp_boundaries(raw);
+        for i in 1..b.len() {
+            assert!(b[i] >= b[i - 1]);
+        }
+        // The chain still starts at the first boundary and ends at the
+        // running max — stage durations sum to b[9] − b[0].
+        assert_eq!(b[0], 5);
+        assert_eq!(b[9], 20);
+        let total: u64 = (0..9).map(|i| b[i + 1] - b[i]).sum();
+        assert_eq!(total, b[9] - b[0]);
+    }
+
+    #[test]
+    fn record_chain_emits_nine_contiguous_spans() {
+        let rec = TraceRecorder::new(64);
+        rec.record_chain(7, 1, 2, "TAPE001", [0, 1, 1, 4, 6, 6, 9, 12, 30, 30]);
+        let spans = rec.snapshot();
+        assert_eq!(spans.len(), 9);
+        for (i, s) in spans.iter().enumerate() {
+            assert_eq!(s.request_id, 7);
+            assert_eq!(s.shard, 1);
+            assert_eq!(s.drive, 2);
+            assert_eq!(s.tape, "TAPE001");
+            assert_eq!(s.stage, Stage::CHAIN[i]);
+            assert!(s.t_end_us >= s.t_start_us);
+            if i > 0 {
+                assert_eq!(s.t_start_us, spans[i - 1].t_end_us, "chain gap at {i}");
+            }
+        }
+        assert_eq!(spans[0].t_start_us, 0);
+        assert_eq!(spans[8].t_end_us, 30);
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn the_ring_overwrites_oldest_and_counts_drops() {
+        let rec = TraceRecorder::new(4);
+        for id in 0..10u64 {
+            rec.record(Span {
+                request_id: id,
+                stage: Stage::Submit,
+                t_start_us: id,
+                t_end_us: id + 1,
+                shard: 0,
+                drive: 0,
+                tape: "T".into(),
+            });
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 6);
+        let ids: Vec<u64> = rec.snapshot().iter().map(|s| s.request_id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "oldest-first insertion order");
+    }
+
+    #[test]
+    fn jsonl_lines_are_stable_and_escaped() {
+        let rec = TraceRecorder::new(4);
+        rec.record(Span {
+            request_id: 3,
+            stage: Stage::ArmWait,
+            t_start_us: 10,
+            t_end_us: 25,
+            shard: 2,
+            drive: 1,
+            tape: "TA\"PE".into(),
+        });
+        let mut out = Vec::new();
+        let n = rec.write_jsonl(&mut out).unwrap();
+        assert_eq!(n, 1);
+        let line = String::from_utf8(out).unwrap();
+        assert_eq!(
+            line,
+            "{\"request_id\":3,\"stage\":\"arm_wait\",\"t_start_us\":10,\
+             \"t_end_us\":25,\"shard\":2,\"drive\":1,\"tape\":\"TA\\\"PE\"}\n"
+        );
+    }
+}

@@ -45,6 +45,7 @@ use std::time::Instant;
 use crate::cluster::HashRing;
 use crate::coordinator::{Batch, Batcher, BatcherConfig, PushOutcome};
 use crate::model::{Instance, Tape};
+use crate::obs::TraceRecorder;
 use crate::resources::{ArmPool, CartridgeLedger, DrivePool, DriveStage};
 use crate::sched::Scheduler;
 use crate::sim::{evaluate, Affinity, DriveParams, MountPlan, SimOutcome};
@@ -274,6 +275,11 @@ struct PendingExec {
     /// back to the shelf (cartridge ledger) when the evict-unmount
     /// completes. Only tracked in exclusive-tapes mode.
     evicted_tape: Option<usize>,
+    /// Span-chain boundaries carried from dispatch (see `exec_batch`):
+    /// when the batch sealed, and its drive/cartridge wait components.
+    ready_us: u64,
+    dw_us: u64,
+    cw_us: u64,
 }
 
 /// A batch parked on a cartridge waitlist: its tape was in use in another
@@ -305,6 +311,10 @@ struct ShardState {
     mount_wait: LatencyHistogram,
     drive_wait: LatencyHistogram,
     cartridge_wait: LatencyHistogram,
+    /// Robot-arm wait (µs) accumulated by each drive's *current* cycle —
+    /// the `arm_wait` span component. Reset at dispatch so a trailing
+    /// unmount's wait never pollutes the next cycle's chain.
+    arm_accum: Vec<u64>,
 }
 
 struct Engine<'a> {
@@ -342,6 +352,10 @@ struct Engine<'a> {
     mount_wait: LatencyHistogram,
     drive_wait: LatencyHistogram,
     cartridge_wait: LatencyHistogram,
+    /// Span recorder, when the caller asked for request-lifecycle traces.
+    /// `None` costs nothing on the hot path (one branch per completion),
+    /// which is what keeps the default replay byte-identical.
+    trace: Option<&'a TraceRecorder>,
 }
 
 /// Run `model` against `catalog` under `policy`: the whole replay, at CPU
@@ -352,6 +366,20 @@ pub fn simulate(
     catalog: &[Tape],
     policy: &dyn Scheduler,
     model: &mut dyn ArrivalModel,
+) -> ReplayOutcome {
+    simulate_traced(cfg, catalog, policy, model, None)
+}
+
+/// [`simulate`] with an optional request-lifecycle span recorder: every
+/// completed request emits its full nine-stage chain (submit → … →
+/// complete, virtual µs) into `trace`. `trace: None` is exactly
+/// `simulate` — same events, same outcome, byte for byte.
+pub fn simulate_traced(
+    cfg: &ReplayConfig,
+    catalog: &[Tape],
+    policy: &dyn Scheduler,
+    model: &mut dyn ArrivalModel,
+    trace: Option<&TraceRecorder>,
 ) -> ReplayOutcome {
     assert!(cfg.n_drives > 0, "replay needs at least one drive per shard");
     assert!(cfg.n_shards > 0, "replay needs at least one shard");
@@ -384,6 +412,7 @@ pub fn simulate(
             mount_wait: LatencyHistogram::new(),
             drive_wait: LatencyHistogram::new(),
             cartridge_wait: LatencyHistogram::new(),
+            arm_accum: vec![0; cfg.n_drives],
         })
         .collect();
     let mut eng = Engine {
@@ -415,6 +444,7 @@ pub fn simulate(
         mount_wait: LatencyHistogram::new(),
         drive_wait: LatencyHistogram::new(),
         cartridge_wait: LatencyHistogram::new(),
+        trace,
     };
 
     eng.pull_arrival(model);
@@ -734,6 +764,10 @@ impl<'a> Engine<'a> {
             .pick(self.cfg.affinity, &tape_idx)
             .expect("dispatch_ready gates on a free drive");
         self.tick += 1;
+        // A fresh cycle starts: whatever arm wait the drive's previous
+        // cycle accumulated (trailing unmount included) is not this
+        // batch's wait.
+        self.shards[shard].arm_accum[drive_idx] = 0;
         // Exclusive-tapes bookkeeping: the cartridge this dispatch evicts
         // (released at evict-unmount completion), the acquisition of the
         // batch's own cartridge, and the per-batch cartridge-wait sample.
@@ -770,7 +804,7 @@ impl<'a> Engine<'a> {
         if !self.pipeline {
             // Legacy fixed mount-cost path (plan is always `Mount` here:
             // no affinity, so drives never stay loaded).
-            self.exec_batch(shard, drive_idx, &batch, &out, t_us, t_us);
+            self.exec_batch(shard, drive_idx, &batch, &out, t_us, t_us, ready_us, dw_us, cw_us);
             let busy_s = self.cfg.drive.mount_s
                 + self.cfg.drive.to_seconds(out.finish)
                 + self.cfg.drive.unmount_s;
@@ -791,7 +825,7 @@ impl<'a> Engine<'a> {
             self.stats.remount_misses += 1;
             self.shards[shard].stats.remount_misses += 1;
         }
-        let pending = PendingExec { batch, out, t0_us: t_us, evicted_tape };
+        let pending = PendingExec { batch, out, t0_us: t_us, evicted_tape, ready_us, dw_us, cw_us };
         match plan {
             MountPlan::Hit => self.start_exec(shard, drive_idx, pending),
             MountPlan::Mount => {
@@ -818,6 +852,7 @@ impl<'a> Engine<'a> {
         if let Some(op) = self.shards[shard].arms.request(drive, dur_us, now) {
             self.arm_wait.record_us(op.wait_us);
             self.shards[shard].arm_wait.record_us(op.wait_us);
+            self.shards[shard].arm_accum[op.drive] += op.wait_us;
             self.events.push(now + op.dur_us, Ev::ArmOpDone { shard, drive: op.drive });
         }
     }
@@ -829,6 +864,7 @@ impl<'a> Engine<'a> {
         if let Some(op) = self.shards[shard].arms.op_done(now) {
             self.arm_wait.record_us(op.wait_us);
             self.shards[shard].arm_wait.record_us(op.wait_us);
+            self.shards[shard].arm_accum[op.drive] += op.wait_us;
             self.events
                 .push(now + op.dur_us, Ev::ArmOpDone { shard, drive: op.drive });
         }
@@ -866,12 +902,12 @@ impl<'a> Engine<'a> {
     /// account every request of the batch, and run the schedule span.
     fn start_exec(&mut self, shard: usize, drive: usize, pending: PendingExec) {
         let now = self.clock.now_us();
-        let PendingExec { batch, out, t0_us, .. } = pending;
+        let PendingExec { batch, out, t0_us, ready_us, dw_us, cw_us, .. } = pending;
         let mount_delay_us = now - t0_us;
         self.mount_wait.record_us(mount_delay_us);
         self.shards[shard].mount_wait.record_us(mount_delay_us);
         self.shards[shard].drives.set_stage(drive, DriveStage::Executing);
-        self.exec_batch(shard, drive, &batch, &out, t0_us, now);
+        self.exec_batch(shard, drive, &batch, &out, t0_us, now, ready_us, dw_us, cw_us);
         let span_us = secs_to_us(self.cfg.drive.to_seconds(out.finish));
         self.events.push(now + span_us, Ev::ExecDone { shard, drive });
     }
@@ -924,16 +960,28 @@ impl<'a> Engine<'a> {
     /// `exec_start == dispatch` and folds its fixed `mount_s` into the
     /// f64 service computation below, preserving its historical rounding
     /// byte for byte).
+    #[allow(clippy::too_many_arguments)]
     fn exec_batch(
         &mut self,
         shard: usize,
-        _drive: usize,
+        drive_idx: usize,
         batch: &Batch,
         out: &SimOutcome,
         t0_us: u64,
         exec_start_us: u64,
+        ready_us: u64,
+        dw_us: u64,
+        // The cartridge wait is implied by the boundaries (`t0_us` is the
+        // cartridge-grant instant); the explicit value is accepted for
+        // call-site symmetry with `ready_us`/`dw_us`.
+        _cw_us: u64,
     ) {
         let drive = self.cfg.drive;
+        // Robot-arm wait accumulated by this drive's cycle so far — the
+        // `arm_wait` span component (zeroed at dispatch, so it covers only
+        // the mount-side waits of *this* batch, not the previous cycle's
+        // trailing unmount).
+        let arm_us = self.shards[shard].arm_accum[drive_idx];
         if !self.pipeline {
             // Per-request accounting through the same shared mapping the
             // coordinator drive worker uses (`Batch::request_service_times`)
@@ -941,7 +989,29 @@ impl<'a> Engine<'a> {
             // once, exactly as before the pipeline existed.
             for (id, service_s) in batch.request_service_times(out, drive, drive.mount_s) {
                 let service_us = secs_to_us(service_s);
-                self.record_completion(shard, &batch.tape, id, service_us, t0_us + service_us);
+                let done_us = t0_us + service_us;
+                let (arrived_us, submitted_us) =
+                    self.record_completion(shard, &batch.tape, id, service_us, done_us);
+                if let Some(tr) = self.trace {
+                    tr.record_chain(
+                        id,
+                        shard as u32,
+                        drive_idx as u32,
+                        &batch.tape,
+                        [
+                            arrived_us,
+                            submitted_us,
+                            submitted_us,
+                            ready_us,
+                            ready_us + dw_us,
+                            t0_us,
+                            t0_us + arm_us,
+                            exec_start_us,
+                            done_us,
+                            done_us,
+                        ],
+                    );
+                }
             }
         } else {
             // Pipeline accounting: the measured mount delay (arm waits +
@@ -949,13 +1019,37 @@ impl<'a> Engine<'a> {
             // the µs grid (`Batch::request_service_times_us`).
             let mount_delay_us = exec_start_us - t0_us;
             for (id, service_us) in batch.request_service_times_us(out, drive, mount_delay_us) {
-                self.record_completion(shard, &batch.tape, id, service_us, t0_us + service_us);
+                let done_us = t0_us + service_us;
+                let (arrived_us, submitted_us) =
+                    self.record_completion(shard, &batch.tape, id, service_us, done_us);
+                if let Some(tr) = self.trace {
+                    tr.record_chain(
+                        id,
+                        shard as u32,
+                        drive_idx as u32,
+                        &batch.tape,
+                        [
+                            arrived_us,
+                            submitted_us,
+                            submitted_us,
+                            ready_us,
+                            ready_us + dw_us,
+                            t0_us,
+                            t0_us + arm_us,
+                            exec_start_us,
+                            done_us,
+                            done_us,
+                        ],
+                    );
+                }
             }
         }
     }
 
     /// Record one served request on the fleet and shard ledgers, emit its
-    /// completion-log entry, and release its closed-loop slot.
+    /// completion-log entry, and release its closed-loop slot. Returns the
+    /// request's `(arrived_us, submitted_us)` pair so the caller can stamp
+    /// its trace chain without a second `pending` lookup.
     fn record_completion(
         &mut self,
         shard: usize,
@@ -963,7 +1057,7 @@ impl<'a> Engine<'a> {
         id: u64,
         service_us: u64,
         done_us: u64,
-    ) {
+    ) -> (u64, u64) {
         let (arrived_us, submitted_us) =
             self.pending.remove(&id).expect("completion for unsubmitted id");
         let latency_us = done_us - arrived_us;
@@ -986,6 +1080,7 @@ impl<'a> Engine<'a> {
             service_us,
         });
         self.events.push(done_us, Ev::Slot);
+        (arrived_us, submitted_us)
     }
 }
 
@@ -1358,6 +1453,53 @@ mod tests {
             a.stats.remount_misses
         );
         assert!(a.stats.cartridge_parks > 0, "hot batches must park while mounting");
+    }
+
+    #[test]
+    fn tracing_emits_full_chains_without_perturbing_the_replay() {
+        use crate::obs::{check_chains, parse_jsonl, Stage, TraceRecorder};
+        use std::collections::BTreeMap;
+        // The full pipeline — LRU affinity, a contended arm pool,
+        // exclusivity — so every stage of the taxonomy can be non-zero.
+        let catalog = vec![
+            Tape::from_sizes("HOT", &[1_000; 50]),
+            Tape::from_sizes("WARM", &[2_000; 25]),
+        ];
+        let run = |trace: Option<&TraceRecorder>| {
+            let mut config = cfg(LoopMode::Open);
+            config.n_drives = 4;
+            config.batcher.max_batch = 2;
+            config.drive.n_arms = 1;
+            config.affinity = Affinity::Lru;
+            let mut model =
+                PoissonArrivals::new(RequestMix::new(&catalog), 20.0, 3.0, 7);
+            simulate_traced(&config, &catalog, &Gs, &mut model, trace)
+        };
+        let rec = TraceRecorder::new(1 << 16);
+        let traced = run(Some(&rec));
+        let plain = run(None);
+        // The recorder is a pure observer: the outcome is byte-identical.
+        assert_eq!(traced.completions, plain.completions);
+        assert_eq!(traced.latency, plain.latency);
+        assert_eq!(traced.stats.makespan_us, plain.stats.makespan_us);
+        // One full chain per completion, and it survives the JSONL
+        // round-trip the `spans` subcommand consumes.
+        let completed = traced.stats.completed as usize;
+        assert_eq!(rec.len(), Stage::CHAIN.len() * completed);
+        assert_eq!(rec.dropped(), 0);
+        let mut buf = Vec::new();
+        rec.write_jsonl(&mut buf).unwrap();
+        let parsed = parse_jsonl(std::str::from_utf8(&buf).unwrap());
+        assert_eq!(check_chains(&parsed), Ok(completed));
+        // Stage durations tile the measured latency exactly: the chain is
+        // contiguous from arrival to completion.
+        let mut span_sum: BTreeMap<u64, u64> = BTreeMap::new();
+        for s in &parsed {
+            *span_sum.entry(s.request_id).or_default() += s.t_end_us - s.t_start_us;
+        }
+        for c in &traced.completions {
+            assert_eq!(span_sum[&c.id], c.latency_us, "request {}", c.id);
+        }
     }
 
     #[test]

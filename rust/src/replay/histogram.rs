@@ -93,6 +93,29 @@ impl LatencyHistogram {
         self.max_us as f64 / 1e6
     }
 
+    /// Samples ≤ `bound_us` — the cumulative count behind one
+    /// `…_bucket{le="…"}` line of a Prometheus histogram exposition.
+    /// Bucketed, so the answer is the count of samples whose *bucket*
+    /// fits entirely under the bound: conservative the same way the
+    /// quantiles are (a sample is never reported under a bound it might
+    /// exceed).
+    pub fn count_le_us(&self, bound_us: u64) -> u64 {
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if bucket_high_us(i) > bound_us {
+                break;
+            }
+            cum += c;
+        }
+        cum
+    }
+
+    /// Exact sum of all recorded samples, seconds (the `…_sum` line of a
+    /// histogram exposition).
+    pub fn sum_seconds(&self) -> f64 {
+        self.sum_us as f64 / 1e6
+    }
+
     /// Quantile `p` ∈ [0, 100] in seconds: the high edge of the bucket
     /// holding the ⌈p/100·n⌉-th smallest sample (≤ 1/64 relative error),
     /// clamped to the exact maximum. 0 when empty.
@@ -249,6 +272,34 @@ mod tests {
         assert_eq!(h.quantile(50.0), 0.0);
         assert_eq!(h.mean_s(), 0.0);
         assert_eq!(h.max_s(), 0.0);
+        assert_eq!(h.count_le_us(u64::MAX), 0);
+        assert_eq!(h.sum_seconds(), 0.0);
+    }
+
+    #[test]
+    fn cumulative_bucket_counts_are_monotone_and_conservative() {
+        let mut h = LatencyHistogram::new();
+        for v in [10u64, 100, 1_000, 10_000, 100_000, 1_000_000] {
+            h.record_us(v);
+        }
+        // Values below SUB are exact; 10 is counted at le=10.
+        assert_eq!(h.count_le_us(9), 0);
+        assert_eq!(h.count_le_us(10), 1);
+        // Bucketed values count only once their whole bucket fits: never
+        // under a bound the sample might exceed.
+        assert!(h.count_le_us(1_000) >= 2);
+        assert!(h.count_le_us(999) <= 2);
+        // The ladder is monotone and tops out at the total.
+        let bounds = [0u64, 10, 100, 1_000, 10_000, 100_000, 1_000_000, u64::MAX];
+        let mut last = 0;
+        for b in bounds {
+            let c = h.count_le_us(b);
+            assert!(c >= last, "le={b}: {c} < {last}");
+            last = c;
+        }
+        assert_eq!(h.count_le_us(u64::MAX), 6);
+        let want = (10 + 100 + 1_000 + 10_000 + 100_000 + 1_000_000) as f64 / 1e6;
+        assert!((h.sum_seconds() - want).abs() < 1e-12);
     }
 
     #[test]

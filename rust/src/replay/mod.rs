@@ -57,8 +57,8 @@ pub use arrivals::{
 pub use clock::{EventQueue, VirtualClock};
 pub use driver::{drive_closed_loop, LiveDriveStats, RequestSink};
 pub use engine::{
-    simulate, LoopMode, ReplayCompletion, ReplayConfig, ReplayOutcome, ReplayStats,
-    ShardOutcome,
+    simulate, simulate_traced, LoopMode, ReplayCompletion, ReplayConfig, ReplayOutcome,
+    ReplayStats, ShardOutcome,
 };
 pub use histogram::LatencyHistogram;
 pub use report::{reports_json, LatencyStats, QosReport, ShardQos};
@@ -78,9 +78,27 @@ pub fn run_replay(
     seed: u64,
     duration_s: f64,
 ) -> (QosReport, ReplayOutcome) {
+    run_replay_traced(cfg, catalog, policy, model, seed, duration_s, None)
+}
+
+/// [`run_replay`] with an optional request-lifecycle trace sink: when
+/// `trace` is `Some`, the engine records one span per pipeline stage per
+/// completion into the recorder (`--trace-out` dumps it as JSONL). The
+/// recorder is a pure observer — the report and outcome are byte-identical
+/// to an untraced run.
+#[allow(clippy::too_many_arguments)]
+pub fn run_replay_traced(
+    cfg: &ReplayConfig,
+    catalog: &[Tape],
+    policy: &dyn Scheduler,
+    model: &mut dyn ArrivalModel,
+    seed: u64,
+    duration_s: f64,
+    trace: Option<&crate::obs::TraceRecorder>,
+) -> (QosReport, ReplayOutcome) {
     let policy_name = policy.name();
     let arrivals_name = model.name();
-    let outcome = engine::simulate(cfg, catalog, policy, model);
+    let outcome = engine::simulate_traced(cfg, catalog, policy, model, trace);
     let report = QosReport::new(&policy_name, &arrivals_name, seed, duration_s, cfg, &outcome);
     (report, outcome)
 }

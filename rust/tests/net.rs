@@ -61,6 +61,8 @@ fn server_cfg(n_shards: usize, kill: Option<(usize, u64)>) -> CoordinatorServerC
         shard: drain_flush_cfg(2),
         policy: "GS".to_string(),
         kill,
+        push_ms: 0,
+        metrics_listen: None,
     }
 }
 
@@ -133,6 +135,63 @@ fn loopback_fleet_matches_the_in_process_cluster_bit_for_bit() {
             l.service_s.to_bits(),
             r.service_s.to_bits(),
             "service time must cross the wire exactly (request {})",
+            l.request_id
+        );
+    }
+}
+
+/// Pushed telemetry is advisory: a fleet pushing metrics snapshots
+/// (`push_ms > 0`) driven through a push-fed client gauge must schedule
+/// exactly the same work as a pull-mode run of the same stream — the
+/// gauge changes who answers `in_flight()`, never what is submitted,
+/// batched, or served.
+#[test]
+fn a_push_fed_client_schedules_the_same_work_as_a_pull_mode_run() {
+    let tapes = catalog(8);
+    let n_requests = 80u64;
+
+    let run = |push: bool| {
+        let mut cfg = server_cfg(2, None);
+        if push {
+            cfg.push_ms = 2;
+        }
+        let fleet = LoopbackFleet::spawn(cfg, tapes.clone()).expect("spawn fleet");
+        let client = if push {
+            fleet.client_push().expect("connect push-fed client")
+        } else {
+            fleet.client().expect("connect client")
+        };
+        let mut model = PoissonArrivals::new(RequestMix::new(&tapes), 500.0, f64::INFINITY, 9);
+        let stats = drive_closed_loop(
+            &client,
+            &tapes,
+            &mut model,
+            n_requests,
+            Duration::from_millis(1),
+            n_requests,
+        );
+        assert_eq!(stats.submitted, n_requests);
+        assert_eq!(stats.dropped, 0);
+        let (completions, m) = client.drain().expect("drain fleet");
+        let _ = fleet.join();
+        (completions, m)
+    };
+
+    let (pull_c, pull_m) = run(false);
+    let (push_c, push_m) = run(true);
+
+    assert_eq!(pull_m.submitted, push_m.submitted);
+    assert_eq!(pull_m.completed, push_m.completed);
+    assert_eq!(pull_m.shed, push_m.shed);
+    assert_eq!(pull_m.batches, push_m.batches);
+    assert_eq!(push_m.submitted, push_m.completed + push_m.shed);
+    assert_eq!(pull_c.len(), push_c.len());
+    for (l, r) in pull_c.iter().zip(&push_c) {
+        assert_eq!(l.request_id, r.request_id);
+        assert_eq!(
+            l.service_s.to_bits(),
+            r.service_s.to_bits(),
+            "pushed telemetry must not perturb service times (request {})",
             l.request_id
         );
     }

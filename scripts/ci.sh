@@ -230,4 +230,84 @@ print(f"ci: net kill gate OK — shard {k['kill_shard']} cut, "
       f"{k['shed']} shed, {k['dropped']} dropped, invariant holds")
 EOF
 
+# Observability gate (a) — request-lifecycle tracing: a traced replay
+# must dump a span stream whose chains check out (nine contiguous,
+# monotone spans per completed request), and the spans subcommand must
+# render every stage of the pipeline taxonomy in its breakdown.
+./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+    --trace-out /tmp/obs_trace_ci.jsonl --out /tmp/replay_traced_ci.json
+./target/release/tapesched spans --in /tmp/obs_trace_ci.jsonl --check \
+    > /tmp/obs_spans_ci.txt
+python3 - /tmp/obs_spans_ci.txt <<'EOF'
+import sys
+text = open(sys.argv[1]).read()
+for stage in ("submit", "route", "batch_seal", "drive_wait", "cartridge_wait",
+              "arm_wait", "mount", "exec", "complete"):
+    assert stage in text, f"breakdown missing stage {stage}:\n{text}"
+print("ci: obs trace gate OK (all nine stages rendered)")
+EOF
+
+# Observability gate (b) — observer purity: the recorder must be a pure
+# observer, so the traced run's QoS JSON must be byte-identical to the
+# untraced default run of the same flags (reuses the arm gate artifact).
+cmp /tmp/replay_arm_default.json /tmp/replay_traced_ci.json
+echo "ci: obs purity gate OK (tracing moved no byte of the QoS JSON)"
+
+# Observability gate (c) — the scrape endpoint: a served run exposing
+# /metrics must publish Prometheus text whose counters land exactly on
+# the request count once the drain finishes (the linger window holds the
+# final page open for the scraper).
+./target/release/tapesched serve --requests 400 --seed 7 \
+    --metrics-listen 127.0.0.1:0 --metrics-linger-ms 8000 \
+    > /tmp/obs_serve_ci.out 2> /tmp/obs_serve_ci.err &
+SERVE_PID=$!
+python3 - /tmp/obs_serve_ci.err 400 <<'EOF'
+import re, sys, time, urllib.request
+errpath, want = sys.argv[1], int(sys.argv[2])
+deadline = time.time() + 60
+url = None
+while time.time() < deadline and url is None:
+    m = re.search(r"metrics exposition on (http://\S+)", open(errpath).read())
+    if m:
+        url = m.group(1)
+    else:
+        time.sleep(0.1)
+assert url, "serve never announced its exposition endpoint"
+page = None
+while time.time() < deadline:
+    try:
+        page = urllib.request.urlopen(url, timeout=5).read().decode()
+        if f'tapesched_completed_total{{shard="0"}} {want}' in page:
+            break
+    except OSError:
+        pass
+    time.sleep(0.2)
+assert page is not None, "scrape never succeeded"
+assert f'tapesched_submitted_total{{shard="0"}} {want}' in page, page
+assert f'tapesched_completed_total{{shard="0"}} {want}' in page, page
+assert '# TYPE tapesched_latency_seconds histogram' in page, page
+assert f'tapesched_latency_seconds_bucket{{shard="0",le="+Inf"}} {want}' in page, page
+assert f'tapesched_latency_seconds_count{{shard="0"}} {want}' in page, page
+print(f"ci: obs scrape gate OK ({want} requests visible at {url})")
+EOF
+wait "$SERVE_PID"
+
+# Observability gate (d) — push-based telemetry: the closed-loop driver
+# pays two round trips per request in pull mode (MetricsPull + Submit)
+# and one in push mode (the gauge is fed by the coordinator's push
+# stream), so push-mode submit throughput must be strictly higher.
+./target/release/tapesched rpc-tax --policy GS --requests 240 --seed 7 \
+    --push-metrics --out /tmp/rpc_tax_push_ci.json
+python3 - /tmp/rpc_tax_push_ci.json <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+p = doc["push_report"]
+assert p["pull_submits_per_s"] > 0 and p["push_submits_per_s"] > 0, p
+assert p["push_submits_per_s"] > p["pull_submits_per_s"], (
+    f"push must beat pull: {p['push_submits_per_s']} vs {p['pull_submits_per_s']}")
+print(f"ci: obs push gate OK — pull {p['pull_submits_per_s']:.0f} -> "
+      f"push {p['push_submits_per_s']:.0f} submits/s "
+      f"({p['push_submits_per_s'] / p['pull_submits_per_s']:.2f}x)")
+EOF
+
 echo "ci: all gates green"
