@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test benches bench-smoke bench-json replay-smoke shard-smoke arm-smoke exclusivity-smoke net-smoke obs-smoke examples fmt fmt-check artifacts ci clean
+.PHONY: verify build test benches bench-smoke bench-json replay-smoke shard-smoke arm-smoke exclusivity-smoke net-smoke obs-smoke perf-smoke examples fmt fmt-check artifacts ci clean
 
 verify: ## tier-1 gate: release build + full test suite
 	$(CARGO) build --release
@@ -125,6 +125,19 @@ obs-smoke: build
 	./target/release/tapesched rpc-tax --policy GS --requests 240 --seed 7 \
 		--push-metrics --out results/rpc-tax-push.json
 	@echo "obs-smoke: results/obs-trace.jsonl (chains checked), results/rpc-tax-push.json"
+
+# Raw-speed gate: the same sharded smoke replay single-threaded and over
+# 4 worker threads — the parallel merge contract is byte-identity, checked
+# with cmp (the incremental-DP property gate lives in scripts/ci.sh; this
+# target reproduces the determinism artifacts).
+perf-smoke: build
+	mkdir -p results
+	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+		--threads 1 --out results/perf-threads1.json
+	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+		--threads 4 --out results/perf-threads4.json
+	cmp results/perf-threads1.json results/perf-threads4.json
+	@echo "perf-smoke: results/perf-threads4.json (byte-identical to 1 thread)"
 
 examples:
 	$(CARGO) build --examples

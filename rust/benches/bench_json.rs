@@ -6,8 +6,15 @@
 //!   algorithmic kernel; deliberately `simpledp_dense::dense_cost_into`,
 //!   NOT the runtime dense backend, whose per-thread memo cache would
 //!   turn this into a cache-hit benchmark).
+//! - `dense_incremental` — ns per solve over a grow-by-one-file request
+//!   sequence served by the incremental re-solve table (each append
+//!   extends the dense wavefront instead of refilling it; every step is
+//!   asserted bit-equal to `dense_cost_into`).
 //! - `replay_events` — virtual-replay completions per wall second (the
 //!   measurement engine).
+//! - `parallel_replay` — speedup (×) of the same open-loop sharded replay
+//!   fanned out over 4 worker threads via `simulate_parallel`; the merged
+//!   outcome is asserted identical to the single-threaded one.
 //! - `coordinator_submits` — closed-loop submits per wall second into an
 //!   in-process `Coordinator` (the serving seam as a function call).
 //! - `loopback_rpc_submits` — the same closed loop through a
@@ -31,10 +38,12 @@ use tapesched::dataset::{generate_dataset, GeneratorConfig};
 use tapesched::model::Tape;
 use tapesched::net::{CoordinatorServerConfig, LoopbackFleet};
 use tapesched::obs::{Stage, TraceRecorder, DEFAULT_TRACE_CAP};
+use tapesched::model::Instance;
 use tapesched::replay::{
-    drive_closed_loop, simulate, simulate_traced, LoopMode, PoissonArrivals, ReplayConfig,
-    RequestMix,
+    drive_closed_loop, simulate, simulate_parallel, simulate_traced, ArrivalModel, LoopMode,
+    PoissonArrivals, ReplayConfig, RequestMix,
 };
+use tapesched::runtime::IncrementalTable;
 use tapesched::sched::simpledp_dense::{dense_cost_into, DenseScratch};
 use tapesched::sched::{scheduler_by_name, Gs};
 use tapesched::sim::{Affinity, DriveParams};
@@ -90,6 +99,49 @@ fn main() {
         entries.push(Entry { name: "dense_wavefront", value: ns, unit: "ns/op" });
     }
 
+    // 1b. The incremental re-solve table: a request set growing by one
+    // file per step, each append extending the dense wavefront in place.
+    {
+        let u = ds.avg_segment_size();
+        let td = ds
+            .tapes
+            .iter()
+            .max_by_key(|t| t.n_req())
+            .expect("generated dataset is non-empty");
+        let steps: Vec<Instance> = (1..=td.n_req())
+            .map(|k| {
+                Instance::from_tape(&td.tape, &td.requests[..k], u)
+                    .expect("request prefix must yield an instance")
+            })
+            .collect();
+        // Correctness before timing: every grow step bit-equal to the
+        // dense kernel.
+        let mut table = IncrementalTable::new();
+        let mut scratch = DenseScratch::default();
+        for inst in &steps {
+            let (cost, _) = table.opt_cost(inst);
+            assert_eq!(
+                cost,
+                dense_cost_into(inst, &mut scratch),
+                "incremental re-solve diverged from the dense kernel"
+            );
+        }
+        let rounds = if smoke { 20 } else { 200 };
+        let wall = Instant::now();
+        for _ in 0..rounds {
+            let mut table = IncrementalTable::new();
+            for inst in &steps {
+                std::hint::black_box(table.opt_cost(inst).0);
+            }
+        }
+        let ns = wall.elapsed().as_secs_f64() * 1e9 / (rounds * steps.len()) as f64;
+        println!(
+            "    → dense_incremental: {ns:.0} ns/op ({} grow steps × {rounds} rounds)",
+            steps.len()
+        );
+        entries.push(Entry { name: "dense_incremental", value: ns, unit: "ns/op" });
+    }
+
     // 2. The measurement engine: virtual replay, completions per wall s.
     {
         let cfg = ReplayConfig {
@@ -135,6 +187,55 @@ fn main() {
             "    → trace_overhead: {overhead_pct:.2} % ({eps_traced:.0} traced vs {eps:.0} plain events/s)"
         );
         entries.push(Entry { name: "trace_overhead", value: overhead_pct, unit: "percent" });
+    }
+
+    // 2c. Parallel sharded replay: the same open-loop replay fanned out
+    // over 4 worker threads and merged back. The merge contract is
+    // byte-identity, so the outcome comparison is an assert, not a
+    // statistic; the entry's value is the wall-clock speedup.
+    {
+        let cfg = ReplayConfig {
+            n_drives: 4,
+            batcher: BatcherConfig {
+                window: Duration::from_millis(100),
+                max_batch: 256,
+                ..BatcherConfig::default()
+            },
+            drive: DriveParams::default(),
+            mode: LoopMode::Open,
+            retry_backoff_s: 0.01,
+            n_shards: 8,
+            vnodes: 64,
+            ..ReplayConfig::default()
+        };
+        let (rate, duration) = if smoke { (80.0, 2.0) } else { (150.0, 60.0) };
+        let policy = scheduler_by_name("SimpleDP").unwrap();
+        let make_model = || -> Box<dyn ArrivalModel> {
+            Box::new(PoissonArrivals::new(RequestMix::new(&catalog), rate, duration, 11))
+        };
+        let wall = Instant::now();
+        let single = {
+            let mut model = make_model();
+            simulate(&cfg, &catalog, policy.as_ref(), model.as_mut())
+        };
+        let s_single = wall.elapsed().as_secs_f64().max(1e-9);
+        let wall = Instant::now();
+        let parallel = simulate_parallel(&cfg, &catalog, policy.as_ref(), &make_model, 4);
+        let s_parallel = wall.elapsed().as_secs_f64().max(1e-9);
+        assert!(single.stats.completed > 0, "parallel bench replay must serve requests");
+        assert_eq!(parallel.stats.submitted, single.stats.submitted);
+        assert_eq!(parallel.stats.completed, single.stats.completed);
+        assert_eq!(parallel.stats.makespan_us, single.stats.makespan_us);
+        assert_eq!(
+            parallel.completions, single.completions,
+            "parallel merge diverged from the single-threaded replay"
+        );
+        let speedup = s_single / s_parallel;
+        println!(
+            "    → parallel_replay: {speedup:.2} x \
+             (1 thread {s_single:.3} s vs 4 threads {s_parallel:.3} s)"
+        );
+        entries.push(Entry { name: "parallel_replay", value: speedup, unit: "x" });
     }
 
     // 3 + 4. The serving seam, in-process vs over the wire. Same config,
@@ -210,7 +311,7 @@ fn main() {
         })
         .collect();
     let json = format!(
-        "{{\n  \"schema\": \"tapesched-bench-v2\",\n  \"smoke\": {smoke},\n  \
+        "{{\n  \"schema\": \"tapesched-bench-v3\",\n  \"smoke\": {smoke},\n  \
          \"benches\": [\n{}\n  ]\n}}\n",
         body.join(",\n")
     );

@@ -137,7 +137,15 @@ impl Batch {
 
 #[derive(Debug)]
 struct OpenBatch {
-    by_file: HashMap<usize, Vec<u64>>,
+    /// `(file index, request ids)` in first-touch order. Batches are small
+    /// (bounded by `max_batch`, typically a few dozen live files), so a
+    /// linear scan on push beats hashing — and keeping the insertion
+    /// sequence lets us track sortedness as we go.
+    by_file: Vec<(usize, Vec<u64>)>,
+    /// True while `by_file` is ascending in file index. Real request
+    /// streams batch mostly-sequential reads, so this usually survives to
+    /// seal time and the sort there is skipped entirely.
+    sorted: bool,
     n: usize,
     opened_at: Instant,
 }
@@ -174,8 +182,15 @@ impl Batcher {
     }
 
     fn seal(tape: String, b: OpenBatch, ready_at: Instant) -> Batch {
-        let mut by_file: Vec<(usize, Vec<u64>)> = b.by_file.into_iter().collect();
-        by_file.sort();
+        let mut by_file = b.by_file;
+        // File indices are unique within a batch, so sorting by key alone
+        // is deterministic; `sorted` means the push path already proved the
+        // order and the O(m log m) pass (plus its swaps of id vectors) is
+        // pure waste.
+        if !b.sorted {
+            by_file.sort_by_key(|&(file, _)| file);
+        }
+        debug_assert!(by_file.windows(2).all(|w| w[0].0 < w[1].0));
         Batch { tape, by_file, opened_at: b.opened_at, ready_at }
     }
 
@@ -204,9 +219,22 @@ impl Batcher {
         }
         let entry = self.open.entry(tape.to_string()).or_insert_with(|| {
             self.fifo.push_back(tape.to_string());
-            OpenBatch { by_file: HashMap::new(), n: 0, opened_at: now }
+            OpenBatch { by_file: Vec::new(), sorted: true, n: 0, opened_at: now }
         });
-        entry.by_file.entry(file_index).or_default().push(request_id);
+        if let Some((_, ids)) =
+            entry.by_file.iter_mut().find(|(f, _)| *f == file_index)
+        {
+            // Repeat read of an already-batched file: multiplicity bump,
+            // order untouched.
+            ids.push(request_id);
+        } else {
+            if let Some(&(last, _)) = entry.by_file.last() {
+                if file_index < last {
+                    entry.sorted = false;
+                }
+            }
+            entry.by_file.push((file_index, vec![request_id]));
+        }
         entry.n += 1;
         if entry.n >= self.cfg.max_batch {
             let b = self.open.remove(tape).unwrap();
@@ -383,6 +411,53 @@ mod tests {
         b.push("A", 9, 3, t0);
         let batch = b.pop_ready(t0, false).unwrap();
         assert_eq!(batch.multiplicities(), vec![(2, 1), (9, 2)]);
+    }
+
+    #[test]
+    fn seal_order_is_identical_with_and_without_the_sort_fast_path() {
+        // Pin the sealed-batch contract the scheduler relies on: files
+        // strictly ascending, ids within a file in push order — whether the
+        // pushes arrived pre-sorted (sort skipped) or scrambled (sort
+        // taken). A regression in the sortedness tracking would surface
+        // here as a misordered `by_file`.
+        let t0 = Instant::now();
+
+        // Ascending pushes: the fast path. Repeat files must not disturb it.
+        let mut b = Batcher::new(cfg(0, 100));
+        b.push("A", 1, 10, t0);
+        b.push("A", 4, 11, t0);
+        b.push("A", 1, 12, t0);
+        b.push("A", 4, 13, t0);
+        b.push("A", 9, 14, t0);
+        let fast = b.pop_ready(t0, false).unwrap();
+        assert_eq!(
+            fast.by_file,
+            vec![(1, vec![10, 12]), (4, vec![11, 13]), (9, vec![14])]
+        );
+
+        // Same requests, scrambled arrival order: the sort path must land
+        // on the same sealed shape (ids keep *their* push order, which here
+        // differs per file).
+        let mut b = Batcher::new(cfg(0, 100));
+        b.push("A", 9, 14, t0);
+        b.push("A", 4, 13, t0);
+        b.push("A", 1, 12, t0);
+        b.push("A", 4, 11, t0);
+        b.push("A", 1, 10, t0);
+        let slow = b.pop_ready(t0, false).unwrap();
+        assert_eq!(
+            slow.by_file,
+            vec![(1, vec![12, 10]), (4, vec![13, 11]), (9, vec![14])]
+        );
+
+        // An equal file index is NOT a sort violation — only a strictly
+        // descending step is.
+        let mut b = Batcher::new(cfg(0, 100));
+        b.push("A", 3, 1, t0);
+        b.push("A", 3, 2, t0);
+        b.push("A", 5, 3, t0);
+        let batch = b.pop_ready(t0, false).unwrap();
+        assert_eq!(batch.by_file, vec![(3, vec![1, 2]), (5, vec![3])]);
     }
 
     #[test]

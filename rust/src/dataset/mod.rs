@@ -15,8 +15,9 @@ pub mod stats;
 pub use generator::{generate_dataset, GeneratorConfig};
 pub use loader::{load_dataset, load_tape, write_dataset, LoadError};
 pub use rawlog::{
-    filter_raw_log, parse_trace, read_trace_file, synth_catalog, synth_raw_log,
-    trace_to_string, FilterStats, LogLine, OpKind, TraceRecord,
+    filter_raw_log, open_trace_file, parse_trace, parse_trace_line, read_trace_file,
+    synth_catalog, synth_raw_log, trace_to_string, FilterStats, LogLine, OpKind, TraceReader,
+    TraceRecord,
 };
 pub use stats::{dataset_stats, DatasetStats, ScatterPoint};
 

@@ -176,6 +176,39 @@ pub struct TraceRecord {
     pub file_id: usize,
 }
 
+/// Parse one line of the on-disk trace format (`line_no` is 1-based, for
+/// error messages). `Ok(None)` means the line carries no record — blank
+/// or a `#` comment. Leading/trailing whitespace is trimmed, which also
+/// makes CRLF line endings transparent. This is the one grammar shared by
+/// the eager [`parse_trace`] and the streaming [`TraceReader`], so the
+/// two paths cannot drift.
+pub fn parse_trace_line(raw: &str, line_no: usize) -> Result<Option<TraceRecord>, String> {
+    let line = raw.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let fields: Vec<&str> = line.split('\t').collect();
+    if fields.len() != 3 {
+        return Err(format!(
+            "trace line {line_no}: expected `timestamp_ns<TAB>tape<TAB>file_id`, got {} field(s)",
+            fields.len()
+        ));
+    }
+    let timestamp_ns: u64 = fields[0]
+        .trim()
+        .parse()
+        .map_err(|_| format!("trace line {line_no}: bad timestamp_ns `{}`", fields[0]))?;
+    let tape = fields[1].trim();
+    if tape.is_empty() {
+        return Err(format!("trace line {line_no}: empty tape name"));
+    }
+    let file_id: usize = fields[2]
+        .trim()
+        .parse()
+        .map_err(|_| format!("trace line {line_no}: bad file_id `{}`", fields[2]))?;
+    Ok(Some(TraceRecord { timestamp_ns, tape: tape.to_string(), file_id }))
+}
+
 /// Parse the on-disk trace format: one `timestamp_ns<TAB>tape<TAB>file_id`
 /// record per line; blank lines and `#` comments are skipped. Errors carry
 /// the 1-based line number. Records are returned in file order (the
@@ -184,39 +217,90 @@ pub struct TraceRecord {
 pub fn parse_trace(text: &str) -> Result<Vec<TraceRecord>, String> {
     let mut records = Vec::new();
     for (i, raw) in text.lines().enumerate() {
-        let line = raw.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
+        if let Some(rec) = parse_trace_line(raw, i + 1)? {
+            records.push(rec);
         }
-        let fields: Vec<&str> = line.split('\t').collect();
-        if fields.len() != 3 {
-            return Err(format!(
-                "trace line {}: expected `timestamp_ns<TAB>tape<TAB>file_id`, got {} field(s)",
-                i + 1,
-                fields.len()
-            ));
-        }
-        let timestamp_ns: u64 = fields[0].trim().parse().map_err(|_| {
-            format!("trace line {}: bad timestamp_ns `{}`", i + 1, fields[0])
-        })?;
-        let tape = fields[1].trim();
-        if tape.is_empty() {
-            return Err(format!("trace line {}: empty tape name", i + 1));
-        }
-        let file_id: usize = fields[2]
-            .trim()
-            .parse()
-            .map_err(|_| format!("trace line {}: bad file_id `{}`", i + 1, fields[2]))?;
-        records.push(TraceRecord { timestamp_ns, tape: tape.to_string(), file_id });
     }
     Ok(records)
 }
 
-/// Read and parse a trace file ([`parse_trace`] over its contents).
-pub fn read_trace_file(path: &std::path::Path) -> Result<Vec<TraceRecord>, String> {
-    let text = std::fs::read_to_string(path)
+/// Streaming trace reader: a buffered line iterator yielding
+/// [`TraceRecord`]s one at a time, holding one line of text in memory
+/// regardless of trace size — the O(window) ingestion path a 10⁸-request
+/// replay needs (the eager [`read_trace_file`] holds the whole record
+/// vector). A final line without a trailing newline still parses; after
+/// the first error (or EOF) the iterator latches done and yields nothing
+/// further.
+pub struct TraceReader<R: std::io::BufRead> {
+    src: R,
+    buf: String,
+    line_no: usize,
+    skipped: usize,
+    done: bool,
+}
+
+impl<R: std::io::BufRead> TraceReader<R> {
+    pub fn new(src: R) -> TraceReader<R> {
+        TraceReader { src, buf: String::new(), line_no: 0, skipped: 0, done: false }
+    }
+
+    /// Blank and comment lines skipped so far.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    /// 1-based number of the last line read (0 before the first).
+    pub fn line_no(&self) -> usize {
+        self.line_no
+    }
+}
+
+impl<R: std::io::BufRead> Iterator for TraceReader<R> {
+    type Item = Result<TraceRecord, String>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        while !self.done {
+            self.buf.clear();
+            match self.src.read_line(&mut self.buf) {
+                Ok(0) => self.done = true,
+                Ok(_) => {
+                    self.line_no += 1;
+                    match parse_trace_line(&self.buf, self.line_no) {
+                        Ok(Some(rec)) => return Some(Ok(rec)),
+                        Ok(None) => self.skipped += 1,
+                        Err(e) => {
+                            self.done = true;
+                            return Some(Err(e));
+                        }
+                    }
+                }
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(format!(
+                        "trace line {}: read error: {e}",
+                        self.line_no + 1
+                    )));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Open `path` as a streaming [`TraceReader`] — the constant-memory
+/// ingestion point ([`read_trace_file`] is the collecting shim over it).
+pub fn open_trace_file(
+    path: &std::path::Path,
+) -> Result<TraceReader<std::io::BufReader<std::fs::File>>, String> {
+    let file = std::fs::File::open(path)
         .map_err(|e| format!("cannot read trace file {}: {e}", path.display()))?;
-    parse_trace(&text)
+    Ok(TraceReader::new(std::io::BufReader::new(file)))
+}
+
+/// Read and parse a whole trace file (a thin collector over
+/// [`open_trace_file`], kept for callers that want the full record set).
+pub fn read_trace_file(path: &std::path::Path) -> Result<Vec<TraceRecord>, String> {
+    open_trace_file(path)?.collect()
 }
 
 /// Render records back into the on-disk trace format (round-trips through
@@ -371,6 +455,85 @@ mod tests {
         assert!(e.contains("file_id"), "{e}");
         let e = parse_trace("0\t \t1\n").unwrap_err();
         assert!(e.contains("empty tape"), "{e}");
+    }
+
+    #[test]
+    fn streaming_reader_matches_parse_trace() {
+        // The parity the streaming pipeline rests on: same records, same
+        // skip accounting, same errors as the eager parser, on the same
+        // bytes.
+        let text = "# comment line\n\
+                    \n\
+                    0\tTAPE001\t3\n\
+                    \t\n\
+                    1500000000\tTAPE002\t0\n\
+                    # trailing comment\n\
+                    1500000000\tTAPE001\t17\n";
+        let eager = parse_trace(text).expect("valid trace");
+        let mut reader = TraceReader::new(text.as_bytes());
+        let streamed: Vec<TraceRecord> =
+            reader.by_ref().collect::<Result<_, _>>().expect("valid trace");
+        assert_eq!(streamed, eager);
+        assert_eq!(reader.skipped(), 4, "2 comments + 2 blank-ish lines");
+        assert_eq!(reader.line_no(), 7, "every line was visited");
+
+        // Error parity, byte for byte, and the done-latch after an error.
+        let bad = "0\tT1\t0\nnope\tT1\t2\n10\tT1\t1\n";
+        let eager_err = parse_trace(bad).unwrap_err();
+        let mut reader = TraceReader::new(bad.as_bytes());
+        assert_eq!(reader.next(), Some(Ok(TraceRecord {
+            timestamp_ns: 0,
+            tape: "T1".into(),
+            file_id: 0,
+        })));
+        assert_eq!(reader.next(), Some(Err(eager_err)));
+        assert_eq!(reader.next(), None, "the reader latches done after an error");
+        assert_eq!(reader.next(), None);
+    }
+
+    #[test]
+    fn streaming_reader_handles_truncated_final_line() {
+        // No trailing newline: the last record must still come through.
+        let text = "0\tT1\t1\n5\tT2\t2";
+        let records: Vec<TraceRecord> =
+            TraceReader::new(text.as_bytes()).collect::<Result<_, _>>().unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[1], TraceRecord { timestamp_ns: 5, tape: "T2".into(), file_id: 2 });
+        // A truncated *malformed* final line still errors with its number.
+        let e: Result<Vec<TraceRecord>, String> =
+            TraceReader::new("0\tT1\t1\n5\tT2".as_bytes()).collect();
+        assert!(e.unwrap_err().contains("line 2"), "truncated line keeps its number");
+    }
+
+    #[test]
+    fn streaming_reader_tolerates_crlf() {
+        let text = "# comment\r\n0\tT1\t1\r\n5\tT2\t2\r\n";
+        let mut reader = TraceReader::new(text.as_bytes());
+        let records: Vec<TraceRecord> =
+            reader.by_ref().collect::<Result<_, _>>().unwrap();
+        assert_eq!(records, parse_trace(text).unwrap(), "CRLF parity with the eager path");
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[1].file_id, 2);
+        assert_eq!(reader.skipped(), 1);
+    }
+
+    #[test]
+    fn read_trace_file_streams_and_round_trips() {
+        let dir = std::env::temp_dir().join("tapesched-rawlog-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream-roundtrip.trace");
+        let records = vec![
+            TraceRecord { timestamp_ns: 0, tape: "A".into(), file_id: 1 },
+            TraceRecord { timestamp_ns: 7, tape: "B".into(), file_id: 0 },
+        ];
+        std::fs::write(&path, trace_to_string(&records)).unwrap();
+        assert_eq!(read_trace_file(&path).unwrap(), records);
+        let streamed: Vec<TraceRecord> =
+            open_trace_file(&path).unwrap().collect::<Result<_, _>>().unwrap();
+        assert_eq!(streamed, records);
+        let missing = read_trace_file(&dir.join("nope.trace")).unwrap_err();
+        assert!(missing.contains("cannot read trace file"), "{missing}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -29,8 +29,8 @@ use tapesched::cli::Args;
 use tapesched::cluster::{Cluster, ClusterConfig, ClusterMetricsSnapshot, HashRing};
 use tapesched::coordinator::{BatcherConfig, Completion, Coordinator, CoordinatorConfig};
 use tapesched::dataset::{
-    dataset_stats, generate_dataset, load_dataset, read_trace_file, synth_catalog,
-    synth_raw_log, write_dataset, Dataset, GeneratorConfig,
+    dataset_stats, generate_dataset, load_dataset, open_trace_file, read_trace_file,
+    synth_catalog, synth_raw_log, write_dataset, Dataset, GeneratorConfig,
 };
 use tapesched::model::{virtual_lb, Tape};
 use tapesched::net::{CoordinatorServerConfig, LoopbackFleet, RemoteCluster};
@@ -39,9 +39,10 @@ use tapesched::obs::{
     TraceRecorder, DEFAULT_TRACE_CAP,
 };
 use tapesched::replay::{
-    drive_closed_loop, reports_json, run_replay_traced, ArrivalModel, BurstyArrivals,
-    DiurnalArrivals, LiveDriveStats, LoopMode, PoissonArrivals, ReplayConfig, RequestMix,
-    TraceArrivals,
+    drive_closed_loop, reports_json, run_replay_parallel, run_replay_traced,
+    run_replay_with_arena, scan_trace, ArrivalModel, BurstyArrivals, DiurnalArrivals,
+    LiveDriveStats, LoopMode, PoissonArrivals, ReplayArena, ReplayConfig, RequestMix,
+    StreamingTraceArrivals, TraceArrivals, DEFAULT_TRACE_WINDOW,
 };
 use tapesched::runtime::{backend_by_name, dense_cache_stats, BackendPolicy};
 use tapesched::sched::{paper_schedulers, scheduler_by_name, Scheduler};
@@ -90,10 +91,12 @@ COMMANDS:
   figures         --experiment fig14|fig15|fig16|timing|all
                   [--data DIR] [--out DIR] [--max-k N] [--algos a,b,…]
   adversarial     [--z N]
-  solve           --tape NAME --algo NAME [--data DIR] [--u N] [--backend dense|xla]
-  draw            --out FILE.svg [--tape NAME] [--algo NAME] [--u N] [--backend dense|xla]
+  solve           --tape NAME --algo NAME [--data DIR] [--u N]
+                  [--backend dense|incremental|xla]
+  draw            --out FILE.svg [--tape NAME] [--algo NAME] [--u N]
+                  [--backend dense|incremental|xla]
   serve           [--policy NAME] [--drives N] [--requests N] [--seed N]
-                  [--cap N] [--backlog N] [--backend dense|xla]
+                  [--cap N] [--backlog N] [--backend dense|incremental|xla]
                   [--shards N] [--vnodes K] [--affinity none|lru]
                   [--arms N] [--exclusive-tapes on|off]
                   [--trace-out FILE.jsonl] [--trace-cap N]
@@ -102,9 +105,9 @@ COMMANDS:
                   [--duration S] [--policy NAME[,NAME…]] [--drives N] [--seed N]
                   [--mode open|closed] [--cap N] [--window-ms N] [--max-batch N]
                   [--backlog N] [--data DIR] [--tapes N] [--out FILE.json]
-                  [--backend dense|xla] [--shards N] [--vnodes K]
+                  [--backend dense|incremental|xla] [--shards N] [--vnodes K]
                   [--arms N] [--affinity none|lru] [--exclusive-tapes on|off]
-                  [--trace-file PATH] [--smoke]
+                  [--trace-file PATH] [--smoke] [--threads N]
                   [--trace-out FILE.jsonl] [--trace-cap N]
   coordinator     [--listen ADDR] [--shards N] [--policy NAME] [--drives N]
                   [--seed N] [--tapes N] [--data DIR] [--vnodes K]
@@ -122,10 +125,16 @@ COMMANDS:
 
 Without --data, commands use the built-in calibrated generator (seed 0x12P32021).
 --backend picks the SimpleDP evaluation backend (dense = pure Rust, the
-default; xla = the PJRT engine, requires building with --features xla).
+default; incremental = dense plus a re-solve table that extends on
+one-file appends instead of recomputing; xla = the PJRT engine, requires
+building with --features xla).
 `replay` runs in virtual time (deterministic for a fixed seed) and prints a
 QoS JSON document — p50/p95/p99/p99.9 latencies per policy — to stdout (or
---out); the human-readable comparison table goes to stderr.
+--out); the human-readable comparison table goes to stderr. --threads N
+fans the shards of an open-loop replay out over N worker threads; the
+merged report is byte-identical to the single-threaded one (open-loop
+only — the closed-loop in-flight cap couples shards — and incompatible
+with --trace-out, which records a single engine's span stream).
 --shards N (serve, replay) shards the catalog over N libraries behind a
 consistent-hash router (--vnodes points per shard); the replay report then
 carries a per-shard QoS breakdown next to the fleet-wide one, with --drives
@@ -215,7 +224,8 @@ fn dense_backend_selected(args: &Args) -> bool {
 fn resolve_policy(args: &Args, flag: &str, default_name: &str) -> Box<dyn Scheduler + Send + Sync> {
     let name = args.get_or(flag, default_name);
     if args.get("backend").is_some() {
-        let backend_name = args.get_choice_or("backend", &["dense", "xla"], "dense");
+        let backend_name =
+            args.get_choice_or("backend", &["dense", "incremental", "xla"], "dense");
         if !name.eq_ignore_ascii_case("simpledp") {
             eprintln!(
                 "error: --backend selects a SimpleDP backend; it cannot combine with --{flag} {name}"
@@ -626,7 +636,7 @@ fn cmd_replay(args: &Args) {
         "arrivals", "rate", "duration", "policy", "drives", "seed", "mode", "cap", "data",
         "tapes", "backend", "window-ms", "max-batch", "backlog", "out", "shards", "vnodes",
         "arms", "affinity", "exclusive-tapes", "trace-file", "smoke", "connect", "requests",
-        "trace-out", "trace-cap",
+        "trace-out", "trace-cap", "threads",
     ]);
     // --connect ADDR: there is no virtual clock across a process boundary,
     // so a networked replay degrades to the wall-clock closed-loop driver —
@@ -681,6 +691,31 @@ fn cmd_replay(args: &Args) {
         }
         _ => LoopMode::Open,
     };
+    // --threads N: fan the shards out over worker threads. The merge is
+    // byte-identical, but only open-loop replays decompose (the closed-loop
+    // in-flight cap couples shards), and the span recorder assumes a single
+    // engine's id sequence — reject both combinations up front rather than
+    // panicking deep in the engine.
+    let threads = args.get_parsed_or("threads", 1usize);
+    if threads == 0 {
+        eprintln!("error: --threads must be positive");
+        std::process::exit(2);
+    }
+    if threads > 1 {
+        if matches!(mode, LoopMode::Closed { .. }) {
+            eprintln!(
+                "error: --threads {threads} requires --mode open \
+                 (the closed-loop in-flight cap couples shards)"
+            );
+            std::process::exit(2);
+        }
+        if args.get("trace-out").is_some() {
+            eprintln!(
+                "error: --trace-out records a single-threaded replay; drop --threads"
+            );
+            std::process::exit(2);
+        }
+    }
     let n_arms = args.get_parsed_or("arms", 0usize);
     let affinity = Affinity::from_name(&args.get_choice_or("affinity", &["none", "lru"], "none"))
         .expect("choice already validated");
@@ -732,39 +767,78 @@ fn cmd_replay(args: &Args) {
 
     // The catalog and a factory producing the identical arrival stream for
     // every policy (fresh model, same seed ⇒ same stream).
-    let (catalog, make_model): (Vec<Tape>, Box<dyn Fn() -> Box<dyn ArrivalModel>>) =
+    let (catalog, make_model): (Vec<Tape>, Box<dyn Fn() -> Box<dyn ArrivalModel> + Sync>) =
         if kind == "trace" && args.get("trace-file").is_some() {
             // Replay an operator-supplied on-disk log (the trace format
             // specified in rust/README.md) against the configured catalog.
-            let path = args.get("trace-file").unwrap();
-            let records = read_trace_file(Path::new(path)).unwrap_or_else(|e| {
+            // Two passes, both streaming in O(window) memory: a dry-run
+            // scan validates the file, counts the resolvable requests, and
+            // finds the horizon; then each policy's replay re-reads the
+            // file through a fresh StreamingTraceArrivals — the trace is
+            // never materialized as a Vec, so multi-GB logs replay flat.
+            let path = args.get("trace-file").unwrap().to_string();
+            let ds = dataset_from(args);
+            let catalog: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
+            let reader = open_trace_file(Path::new(&path)).unwrap_or_else(|e| {
                 eprintln!("error: {e}");
                 std::process::exit(1);
             });
-            let ds = dataset_from(args);
-            let catalog: Vec<Tape> = ds.tapes.iter().map(|t| t.tape.clone()).collect();
-            let (proto, skipped) = TraceArrivals::from_records(&records, &catalog);
-            if proto.remaining() == 0 {
+            let scan = scan_trace(reader, &catalog, DEFAULT_TRACE_WINDOW).unwrap_or_else(|e| {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            });
+            if scan.events == 0 {
                 eprintln!(
                     "error: no record of {path} matches the catalog \
-                     ({} parsed, {skipped} skipped: unknown tape or file id)",
-                    records.len()
+                     ({} skipped: unknown tape or file id)",
+                    scan.skipped
                 );
                 std::process::exit(1);
             }
             eprintln!(
-                "trace file {path}: {} records → {} requests ({} skipped)",
-                records.len(),
-                proto.remaining(),
-                skipped
+                "trace file {path}: {} requests ({} skipped)",
+                scan.events, scan.skipped
             );
             // The report's `duration_s` echoes the replayed window: for a
             // file trace that is the trace's own horizon, not the
             // synthetic-arrivals default (an explicit --duration wins).
-            if args.get("duration").is_none() && proto.horizon_s() > 0.0 {
-                duration = proto.horizon_s();
+            if args.get("duration").is_none() && scan.horizon_s > 0.0 {
+                duration = scan.horizon_s;
             }
-            (catalog, Box::new(move || Box::new(proto.clone()) as Box<dyn ArrivalModel>))
+            if scan.within_window {
+                // Name matches the eager path's `trace-file(N reads)` so
+                // reports are byte-identical either way.
+                let name = format!("trace-file({} reads)", scan.events);
+                let cat = catalog.clone();
+                (
+                    catalog,
+                    Box::new(move || -> Box<dyn ArrivalModel> {
+                        let reader = open_trace_file(Path::new(&path))
+                            .expect("trace file readable moments ago at scan time");
+                        Box::new(StreamingTraceArrivals::new(
+                            name.clone(),
+                            reader,
+                            &cat,
+                            DEFAULT_TRACE_WINDOW,
+                        ))
+                    }),
+                )
+            } else {
+                // A record is displaced further than the reorder window:
+                // the streaming heap cannot reproduce the eager sort, so
+                // fall back to the whole-file path rather than replay a
+                // different order.
+                eprintln!(
+                    "trace file {path}: reorder exceeds the {DEFAULT_TRACE_WINDOW}-record \
+                     window — falling back to eager (whole-file) replay"
+                );
+                let records = read_trace_file(Path::new(&path)).unwrap_or_else(|e| {
+                    eprintln!("error: {e}");
+                    std::process::exit(1);
+                });
+                let (proto, _skipped) = TraceArrivals::from_records(&records, &catalog);
+                (catalog, Box::new(move || Box::new(proto.clone()) as Box<dyn ArrivalModel>))
+            }
         } else if kind == "trace" {
             // Synthesize a raw activity log over synthetic tape catalogs and
             // replay it through the Appendix-C filters — the full
@@ -833,17 +907,45 @@ fn cmd_replay(args: &Args) {
     });
 
     let mut reports = Vec::new();
+    // One arena shared across the policy sweep: the event queue, histogram
+    // pool, and completion log are recycled between policies instead of
+    // reallocated. Parallel runs merge per-worker outcomes and traced runs
+    // record spans, so both manage their own buffers.
+    let mut arena = ReplayArena::new();
     for policy in &policies {
-        let mut model = make_model();
-        let (report, outcome) = run_replay_traced(
-            &cfg,
-            &catalog,
-            policy.as_ref(),
-            model.as_mut(),
-            seed,
-            duration,
-            trace.as_ref(),
-        );
+        let (report, outcome) = if threads > 1 {
+            run_replay_parallel(
+                &cfg,
+                &catalog,
+                policy.as_ref(),
+                &*make_model,
+                seed,
+                duration,
+                threads,
+            )
+        } else if trace.is_some() {
+            let mut model = make_model();
+            run_replay_traced(
+                &cfg,
+                &catalog,
+                policy.as_ref(),
+                model.as_mut(),
+                seed,
+                duration,
+                trace.as_ref(),
+            )
+        } else {
+            let mut model = make_model();
+            run_replay_with_arena(
+                &cfg,
+                &catalog,
+                policy.as_ref(),
+                model.as_mut(),
+                seed,
+                duration,
+                &mut arena,
+            )
+        };
         eprintln!(
             "replay {}: {} completed over {:.1} virtual s ({} batches, {:.3} wall s of schedule compute)",
             report.policy,
@@ -860,6 +962,9 @@ fn cmd_replay(args: &Args) {
         }
         if report.exclusive {
             eprint!("{}", cartridge_summary(&report));
+        }
+        if threads == 1 && trace.is_none() {
+            arena.recycle(outcome);
         }
         reports.push(report);
     }

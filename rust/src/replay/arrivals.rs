@@ -20,7 +20,8 @@
 //! and are seeded through [`crate::util::rng::Rng`], so the same seed and
 //! configuration always yield the identical stream.
 
-use std::collections::{BTreeMap, HashMap};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 
 use crate::dataset::rawlog::{LogLine, OpKind, TapeCatalog, TraceRecord};
 use crate::model::Tape;
@@ -365,6 +366,184 @@ impl ArrivalModel for TraceArrivals {
     }
 }
 
+/// Default reorder window for [`StreamingTraceArrivals`]: real logs are
+/// near-sorted (rotation interleaves a bounded number of lines), so 64Ki
+/// pending records absorbs any realistic displacement while bounding
+/// memory to O(window) regardless of trace length.
+pub const DEFAULT_TRACE_WINDOW: usize = 1 << 16;
+
+/// Streaming counterpart of [`TraceArrivals::from_records`]: consumes a
+/// fallible [`TraceRecord`] iterator (e.g. a
+/// [`crate::dataset::rawlog::TraceReader`]) incrementally, holding at
+/// most `window` pending records in a min-heap instead of the whole
+/// trace in a sorted vector. Within that reorder window the emitted
+/// stream is *identical* to the eager path — same skips (unknown tape /
+/// out-of-range file), same timestamp order, same stable tie-break by
+/// record position (the heap key `(timestamp bits, sequence)` reproduces
+/// the stable sort exactly; non-negative f64 timestamps order by their
+/// IEEE bit patterns). A record displaced further than the window, or a
+/// malformed line surfaced by the source iterator, is reported through
+/// [`StreamingTraceArrivals::try_next`] — replay drivers are expected to
+/// pre-validate with [`scan_trace`] (itself streaming) so the
+/// [`ArrivalModel`] path can treat both as unreachable.
+pub struct StreamingTraceArrivals<I: Iterator<Item = Result<TraceRecord, String>>> {
+    name: String,
+    src: I,
+    /// Catalog tape name → index (owned, so the model can be boxed
+    /// `'static` for policy factories).
+    index: HashMap<String, usize>,
+    files_per_tape: Vec<usize>,
+    /// Pending records, keyed `(at_s.to_bits(), seq, tape, file)`.
+    heap: BinaryHeap<Reverse<(u64, u64, usize, usize)>>,
+    window: usize,
+    seq: u64,
+    skipped: usize,
+    last_bits: u64,
+    exhausted: bool,
+}
+
+impl<I: Iterator<Item = Result<TraceRecord, String>>> StreamingTraceArrivals<I> {
+    /// `name` is the report label (use the [`scan_trace`] event count to
+    /// reproduce the eager `trace-file(N reads)` label); `window` is the
+    /// reorder bound in records (≥ 1; see [`DEFAULT_TRACE_WINDOW`]).
+    pub fn new(
+        name: impl Into<String>,
+        src: I,
+        catalog: &[Tape],
+        window: usize,
+    ) -> StreamingTraceArrivals<I> {
+        StreamingTraceArrivals {
+            name: name.into(),
+            src,
+            index: catalog
+                .iter()
+                .enumerate()
+                .map(|(i, t)| (t.name.clone(), i))
+                .collect(),
+            files_per_tape: catalog.iter().map(|t| t.n_files()).collect(),
+            heap: BinaryHeap::new(),
+            window: window.max(1),
+            seq: 0,
+            skipped: 0,
+            last_bits: 0,
+            exhausted: false,
+        }
+    }
+
+    /// Records skipped so far (unknown tape or out-of-range file id) —
+    /// matches the eager path's skip count once the stream is drained.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    /// Refill the reorder heap to `window` pending records and pop the
+    /// earliest, without the monotonicity check (shared by
+    /// [`StreamingTraceArrivals::try_next`] and [`scan_trace`]).
+    fn pull_pop(&mut self) -> Result<Option<(u64, usize, usize)>, String> {
+        while !self.exhausted && self.heap.len() < self.window {
+            match self.src.next() {
+                None => self.exhausted = true,
+                Some(Err(e)) => {
+                    self.exhausted = true;
+                    return Err(e);
+                }
+                Some(Ok(rec)) => {
+                    let Some(&tape) = self.index.get(rec.tape.as_str()) else {
+                        self.skipped += 1;
+                        continue;
+                    };
+                    if rec.file_id >= self.files_per_tape[tape] {
+                        self.skipped += 1;
+                        continue;
+                    }
+                    let at_s = rec.timestamp_ns as f64 / 1e9;
+                    let seq = self.seq;
+                    self.seq += 1;
+                    self.heap.push(Reverse((at_s.to_bits(), seq, tape, rec.file_id)));
+                }
+            }
+        }
+        Ok(self.heap.pop().map(|Reverse((bits, _, tape, file))| (bits, tape, file)))
+    }
+
+    /// Next arrival, `Ok(None)` at end of stream. `Err` on a malformed
+    /// source line or a record displaced beyond the reorder window.
+    pub fn try_next(&mut self) -> Result<Option<Arrival>, String> {
+        let Some((bits, tape, file)) = self.pull_pop()? else {
+            return Ok(None);
+        };
+        if bits < self.last_bits {
+            return Err(format!(
+                "trace reorder exceeds the {}-record window: a {:.6}s record surfaced after \
+                 {:.6}s was already replayed (sort the trace or raise the window)",
+                self.window,
+                f64::from_bits(bits),
+                f64::from_bits(self.last_bits),
+            ));
+        }
+        self.last_bits = bits;
+        Ok(Some(Arrival { at_s: f64::from_bits(bits), tape, file }))
+    }
+}
+
+impl<I: Iterator<Item = Result<TraceRecord, String>>> ArrivalModel
+    for StreamingTraceArrivals<I>
+{
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    /// Panics on a malformed line or an out-of-window record — drivers
+    /// pre-validate the trace with [`scan_trace`], which reports both
+    /// conditions cleanly before any replay state exists.
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        self.try_next().unwrap_or_else(|e| panic!("{e}"))
+    }
+}
+
+/// What one streaming pass over a trace establishes (see [`scan_trace`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceScan {
+    /// Records that resolve against the catalog (the eager path's
+    /// `trace-file(N reads)` count).
+    pub events: usize,
+    /// Records skipped: unknown tape or out-of-range file id.
+    pub skipped: usize,
+    /// Largest resolved timestamp, seconds (0 for an empty trace) — the
+    /// eager path's `horizon_s`.
+    pub horizon_s: f64,
+    /// Whether every record sorts correctly within the reorder window —
+    /// when `false`, a [`StreamingTraceArrivals`] replay with this window
+    /// would diverge from the eager order (drivers fall back to eager).
+    pub within_window: bool,
+}
+
+/// Streaming dry-run over a trace: resolve every record against
+/// `catalog` in O(window) memory, counting events and skips, finding the
+/// horizon, and checking that no record is displaced beyond the reorder
+/// window. `Err` only on malformed input (the error a
+/// [`crate::dataset::rawlog::TraceReader`] source surfaces, with its
+/// 1-based line number).
+pub fn scan_trace<I>(src: I, catalog: &[Tape], window: usize) -> Result<TraceScan, String>
+where
+    I: Iterator<Item = Result<TraceRecord, String>>,
+{
+    let mut s = StreamingTraceArrivals::new("", src, catalog, window);
+    let mut scan = TraceScan { events: 0, skipped: 0, horizon_s: 0.0, within_window: true };
+    let mut last_bits = 0u64;
+    while let Some((bits, _, _)) = s.pull_pop()? {
+        if bits < last_bits {
+            scan.within_window = false;
+        } else {
+            last_bits = bits;
+        }
+        scan.events += 1;
+        scan.horizon_s = scan.horizon_s.max(f64::from_bits(bits));
+    }
+    scan.skipped = s.skipped();
+    Ok(scan)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -480,6 +659,142 @@ mod tests {
         let (again, _) = TraceArrivals::from_records(&records, &catalog);
         let mut again = again;
         assert_eq!(arrivals, drain(&mut again), "deterministic across builds");
+    }
+
+    fn rec(ns: u64, tape: &str, file: usize) -> TraceRecord {
+        TraceRecord { timestamp_ns: ns, tape: tape.into(), file_id: file }
+    }
+
+    #[test]
+    fn streaming_trace_matches_the_eager_path() {
+        // Same records as the eager-resolution test, plus more ties and
+        // interleaving: the streaming model must emit the identical
+        // stream — order, tie-break, and skip accounting.
+        let catalog = tapes(); // A: 40 files, B: 80, C: 5
+        let records = vec![
+            rec(2_000_000_000, "B", 79),
+            rec(1_000_000_000, "A", 0),
+            rec(500_000_000, "NOPE", 0),  // unknown tape: skipped
+            rec(500_000_000, "C", 5),     // file out of range: skipped
+            rec(1_000_000_000, "C", 4),   // ties with the A record above
+            rec(1_000_000_000, "A", 7),   // and a second tie
+            rec(250_000_000, "B", 0),
+        ];
+        let (mut eager, eager_skipped) = TraceArrivals::from_records(&records, &catalog);
+        let expected = drain(&mut eager);
+        // The 250ms record arrives last of 5 resolved records, so any
+        // window holding all 5 sorts it correctly…
+        for window in [5, 64, DEFAULT_TRACE_WINDOW] {
+            let src = records.iter().cloned().map(Ok);
+            let mut streaming =
+                StreamingTraceArrivals::new("trace-file(5 reads)", src, &catalog, window);
+            let mut got = Vec::new();
+            while let Some(a) = streaming.try_next().expect("in-window trace") {
+                got.push(a);
+            }
+            assert_eq!(got, expected, "window {window}");
+            assert_eq!(streaming.skipped(), eager_skipped, "window {window}");
+            assert_eq!(streaming.name(), "trace-file(5 reads)");
+        }
+        // …and any smaller window must refuse (reorder error), never
+        // silently emit a different order.
+        for window in [1, 2, 4] {
+            let src = records.iter().cloned().map(Ok);
+            let mut streaming = StreamingTraceArrivals::new("t", src, &catalog, window);
+            let err = loop {
+                match streaming.try_next() {
+                    Ok(Some(_)) => {}
+                    Ok(None) => panic!("window {window} cannot sort this trace"),
+                    Err(e) => break e,
+                }
+            };
+            assert!(err.contains("reorder exceeds"), "window {window}: {err}");
+        }
+    }
+
+    #[test]
+    fn streaming_trace_reports_out_of_window_reorder() {
+        let catalog = tapes();
+        // The 1ns record arrives 3 records late; window 2 already
+        // replayed 2.0s when it surfaces.
+        let records =
+            vec![rec(2_000_000_000, "A", 0), rec(3_000_000_000, "A", 1), rec(4_000_000_000, "A", 2), rec(1, "A", 3)];
+        let src = records.iter().cloned().map(Ok);
+        let mut s = StreamingTraceArrivals::new("t", src, &catalog, 2);
+        let mut err = None;
+        for _ in 0..records.len() {
+            match s.try_next() {
+                Ok(_) => {}
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        let err = err.expect("displacement beyond the window must surface");
+        assert!(err.contains("reorder exceeds the 2-record window"), "{err}");
+
+        // scan_trace flags the same trace without erroring…
+        let scan = scan_trace(records.iter().cloned().map(Ok), &catalog, 2).unwrap();
+        assert!(!scan.within_window);
+        assert_eq!(scan.events, 4);
+        // …and clears it once the window covers the displacement.
+        let scan = scan_trace(records.iter().cloned().map(Ok), &catalog, 4).unwrap();
+        assert!(scan.within_window);
+        assert!((scan.horizon_s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scan_trace_reports_counts_horizon_and_errors() {
+        let catalog = tapes();
+        let records = vec![
+            rec(2_000_000_000, "B", 79),
+            rec(500_000_000, "NOPE", 0),
+            rec(500_000_000, "C", 5),
+            rec(1_000_000_000, "C", 4),
+        ];
+        let scan =
+            scan_trace(records.iter().cloned().map(Ok), &catalog, DEFAULT_TRACE_WINDOW).unwrap();
+        assert_eq!(
+            scan,
+            TraceScan { events: 2, skipped: 2, horizon_s: 2.0, within_window: true }
+        );
+        // A malformed source line propagates with its message.
+        let src = vec![Ok(rec(0, "A", 0)), Err("trace line 2: bad timestamp_ns `x`".into())];
+        let e = scan_trace(src.into_iter(), &catalog, 8).unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        // Empty traces scan clean.
+        let empty = scan_trace(std::iter::empty(), &catalog, 8).unwrap();
+        assert_eq!(empty.events, 0);
+        assert_eq!(empty.horizon_s, 0.0);
+    }
+
+    #[test]
+    fn streaming_trace_replays_a_trace_reader_end_to_end() {
+        // TraceReader → StreamingTraceArrivals: the full streaming
+        // ingestion stack against the eager read-parse-resolve stack.
+        use crate::dataset::rawlog::{parse_trace, TraceReader};
+        let text = "# synthetic\n\
+                    250000000\tB\t0\n\
+                    1000000000\tA\t0\n\
+                    1000000000\tC\t4\n\
+                    2000000000\tB\t79\n\
+                    500000000\tZZZ\t1\n";
+        let catalog = tapes();
+        let eager_records = parse_trace(text).unwrap();
+        let (mut eager, skipped) = TraceArrivals::from_records(&eager_records, &catalog);
+        let mut streaming = StreamingTraceArrivals::new(
+            eager.name(),
+            TraceReader::new(text.as_bytes()),
+            &catalog,
+            DEFAULT_TRACE_WINDOW,
+        );
+        let mut got = Vec::new();
+        while let Some(a) = streaming.try_next().unwrap() {
+            got.push(a);
+        }
+        assert_eq!(got, drain(&mut eager));
+        assert_eq!(streaming.skipped(), skipped);
     }
 
     #[test]

@@ -144,6 +144,22 @@ impl<E> EventQueue<E> {
         self.heap.len()
     }
 
+    /// Reset for reuse, keeping the heap's allocation. The sequence
+    /// counter restarts at 0 so a recycled queue breaks time ties in
+    /// exactly the order a fresh queue would — reuse must never perturb
+    /// the FIFO tie-break the replay's determinism rests on. A drained
+    /// replay leaves the queue empty; anything else is an engine bug,
+    /// checked in debug builds.
+    pub fn recycle(&mut self) {
+        debug_assert!(
+            self.heap.is_empty(),
+            "recycling an EventQueue with {} event(s) still scheduled",
+            self.heap.len()
+        );
+        self.heap.clear();
+        self.seq = 0;
+    }
+
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -172,6 +188,22 @@ mod tests {
         assert_eq!(q.pop(), Some((20, "b")));
         assert_eq!(q.pop(), Some((30, "c")));
         assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn recycled_queue_restarts_the_fifo_tie_break() {
+        let mut q = EventQueue::new();
+        q.push(10, "a");
+        q.push(10, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((10, "b")));
+        q.recycle();
+        // Same pushes after recycling pop in the same order: seq restarted.
+        q.push(5, "x");
+        q.push(5, "y");
+        assert_eq!(q.pop(), Some((5, "x")));
+        assert_eq!(q.pop(), Some((5, "y")));
         assert!(q.is_empty());
     }
 

@@ -19,6 +19,15 @@
 //! routes to shard 0 and the engine is the single-library replay,
 //! unchanged — same event order, same completion log, same percentiles.
 //!
+//! **Parallel mode** ([`simulate_parallel`]) exploits that shards are
+//! independent between routing decisions: each of `N` worker threads
+//! replays the *same* arrival stream against the shards it owns
+//! (`shard % N`), counting foreign arrivals as phantoms so request ids
+//! and event-queue positions stay aligned, and the per-worker outcomes
+//! merge into a [`ReplayOutcome`] byte-identical to the single-threaded
+//! one (ci-gated). Open loop only — the closed-loop in-flight cap couples
+//! shards through global state.
+//!
 //! Two driver disciplines:
 //!
 //! - **Open loop** — arrivals submit at their trace time regardless of
@@ -261,6 +270,64 @@ enum Ev {
     Slot,
 }
 
+/// Reusable replay buffers for multi-policy runs. The event queue's heap,
+/// the fleet and per-shard histograms, and the completion log are the
+/// engine's only allocations that scale with the workload, and a
+/// multi-policy `replay` run used to rebuild every one of them per
+/// policy. Run through [`simulate_with_arena`], report the outcome, then
+/// hand it back with [`ReplayArena::recycle`] so the next policy reuses
+/// the buffers. Reuse is invisible in the output: recycled histograms are
+/// cleared to fresh-state equality and the recycled event queue restarts
+/// its FIFO tie-break counter (and debug-asserts it drained empty).
+#[derive(Default)]
+pub struct ReplayArena {
+    events: EventQueue<Ev>,
+    histograms: Vec<LatencyHistogram>,
+    completions: Vec<ReplayCompletion>,
+}
+
+impl ReplayArena {
+    pub fn new() -> ReplayArena {
+        ReplayArena::default()
+    }
+
+    /// Number of histograms currently pooled (diagnostics and tests).
+    pub fn pooled_histograms(&self) -> usize {
+        self.histograms.len()
+    }
+
+    /// Reclaim a reported outcome's buffers for the next run.
+    pub fn recycle(&mut self, outcome: ReplayOutcome) {
+        let ReplayOutcome {
+            stats: _,
+            mut completions,
+            latency,
+            service,
+            arm_wait,
+            mount_wait,
+            drive_wait,
+            cartridge_wait,
+            per_shard,
+        } = outcome;
+        completions.clear();
+        if completions.capacity() > self.completions.capacity() {
+            self.completions = completions;
+        }
+        for mut h in [latency, service, arm_wait, mount_wait, drive_wait, cartridge_wait] {
+            h.clear();
+            self.histograms.push(h);
+        }
+        for s in per_shard {
+            for mut h in
+                [s.latency, s.service, s.arm_wait, s.mount_wait, s.drive_wait, s.cartridge_wait]
+            {
+                h.clear();
+                self.histograms.push(h);
+            }
+        }
+    }
+}
+
 /// A batch that has a drive but is still waiting on robot-arm work before
 /// its head can start executing (the payload the drive's
 /// [`DriveStage::Mounting`] stage carries).
@@ -344,6 +411,13 @@ struct Engine<'a> {
     in_flight: usize,
     arrivals_done: bool,
     next_id: u64,
+    /// Per-shard ownership mask (all-true outside [`simulate_parallel`]):
+    /// an arrival routed to an unowned shard still consumes its request
+    /// id — keeping ids and event-queue positions aligned with the
+    /// single-threaded run — but is otherwise dropped as a phantom.
+    owned: Vec<bool>,
+    /// Arrivals dropped because another worker owns their shard.
+    phantoms: u64,
     stats: ReplayStats,
     completions: Vec<ReplayCompletion>,
     latency: LatencyHistogram,
@@ -367,7 +441,7 @@ pub fn simulate(
     policy: &dyn Scheduler,
     model: &mut dyn ArrivalModel,
 ) -> ReplayOutcome {
-    simulate_traced(cfg, catalog, policy, model, None)
+    simulate_impl(cfg, catalog, policy, model, None, None, None)
 }
 
 /// [`simulate`] with an optional request-lifecycle span recorder: every
@@ -381,6 +455,158 @@ pub fn simulate_traced(
     model: &mut dyn ArrivalModel,
     trace: Option<&TraceRecorder>,
 ) -> ReplayOutcome {
+    simulate_impl(cfg, catalog, policy, model, trace, None, None)
+}
+
+/// [`simulate`] reusing a [`ReplayArena`]'s buffers instead of
+/// allocating fresh ones — for multi-policy runs over the same workload.
+/// The outcome is byte-identical to [`simulate`]'s (test-pinned); feed it
+/// back via [`ReplayArena::recycle`] once reported.
+pub fn simulate_with_arena(
+    cfg: &ReplayConfig,
+    catalog: &[Tape],
+    policy: &dyn Scheduler,
+    model: &mut dyn ArrivalModel,
+    arena: &mut ReplayArena,
+) -> ReplayOutcome {
+    simulate_impl(cfg, catalog, policy, model, None, None, Some(arena))
+}
+
+/// Fan a sharded open-loop replay out over `threads` OS threads — one
+/// worker per shard group (`shard % threads == worker`) — and merge the
+/// per-worker outcomes deterministically. Every worker replays the *same*
+/// arrival stream from its own `make_model()` instance (the factory must
+/// yield identical streams: a seeded synthetic model or a shared trace),
+/// serving the requests of its own shards and dropping the rest as
+/// phantoms, which keeps request ids, event-queue positions, and each
+/// shard's FIFO tie-break order exactly as in the single-threaded run.
+/// The merged [`ReplayOutcome`] is therefore identical to [`simulate`]'s
+/// — same completion log, histograms, and per-shard breakdown; only the
+/// wall-clock `sched_wall_s` diagnostic differs (it sums real compute
+/// across workers) — and the `--threads 4` vs `--threads 1` QoS `cmp`
+/// gate in ci.sh pins the reports byte for byte.
+///
+/// Open loop only: the closed-loop in-flight cap and client queue couple
+/// shards through global state, so masking shards would change behavior.
+/// `threads` is clamped to `[1, n_shards]`; a clamp to 1 runs plain
+/// [`simulate`].
+pub fn simulate_parallel(
+    cfg: &ReplayConfig,
+    catalog: &[Tape],
+    policy: &(dyn Scheduler + Sync),
+    make_model: &(dyn Fn() -> Box<dyn ArrivalModel> + Sync),
+    threads: usize,
+) -> ReplayOutcome {
+    assert!(
+        matches!(cfg.mode, LoopMode::Open),
+        "parallel replay requires open-loop mode (the closed-loop in-flight cap couples shards)"
+    );
+    let threads = threads.clamp(1, cfg.n_shards.max(1));
+    if threads == 1 {
+        return simulate(cfg, catalog, policy, make_model().as_mut());
+    }
+    let mut slots: Vec<Option<ReplayOutcome>> = Vec::new();
+    slots.resize_with(threads, || None);
+    std::thread::scope(|scope| {
+        for (w, slot) in slots.iter_mut().enumerate() {
+            scope.spawn(move || {
+                let owned: Vec<bool> =
+                    (0..cfg.n_shards).map(|s| s % threads == w).collect();
+                let mut model = make_model();
+                *slot = Some(simulate_impl(
+                    cfg,
+                    catalog,
+                    policy,
+                    model.as_mut(),
+                    None,
+                    Some(&owned),
+                    None,
+                ));
+            });
+        }
+    });
+    merge_outcomes(cfg, threads, slots.into_iter().map(Option::unwrap).collect())
+}
+
+/// Deterministically merge the per-worker outcomes of a parallel replay.
+/// Completion keys `(done_us, id)` are globally unique, so concatenating
+/// and sorting reproduces the single-threaded log exactly; the integer
+/// counters and histograms sum exactly because every fleet-level
+/// increment in the engine pairs with a shard-level one and each shard
+/// lives in exactly one worker.
+fn merge_outcomes(
+    cfg: &ReplayConfig,
+    threads: usize,
+    workers: Vec<ReplayOutcome>,
+) -> ReplayOutcome {
+    let mut stats = ReplayStats::default();
+    let mut completions: Vec<ReplayCompletion> =
+        Vec::with_capacity(workers.iter().map(|w| w.completions.len()).sum());
+    let mut latency = LatencyHistogram::new();
+    let mut service = LatencyHistogram::new();
+    let mut arm_wait = LatencyHistogram::new();
+    let mut mount_wait = LatencyHistogram::new();
+    let mut drive_wait = LatencyHistogram::new();
+    let mut cartridge_wait = LatencyHistogram::new();
+    let mut per_shard: Vec<Option<ShardOutcome>> = Vec::new();
+    per_shard.resize_with(cfg.n_shards, || None);
+    for (w, out) in workers.into_iter().enumerate() {
+        let s = out.stats;
+        stats.submitted += s.submitted;
+        stats.completed += s.completed;
+        stats.shed += s.shed;
+        stats.busy_rejections += s.busy_rejections;
+        stats.retries += s.retries;
+        stats.batches += s.batches;
+        stats.makespan_us = stats.makespan_us.max(s.makespan_us);
+        stats.busy_drive_us += s.busy_drive_us;
+        stats.remount_hits += s.remount_hits;
+        stats.remount_misses += s.remount_misses;
+        stats.cartridge_parks += s.cartridge_parks;
+        stats.sched_wall_s += s.sched_wall_s;
+        completions.extend(out.completions);
+        latency.merge(&out.latency);
+        service.merge(&out.service);
+        arm_wait.merge(&out.arm_wait);
+        mount_wait.merge(&out.mount_wait);
+        drive_wait.merge(&out.drive_wait);
+        cartridge_wait.merge(&out.cartridge_wait);
+        for sh in out.per_shard {
+            if sh.shard % threads == w {
+                per_shard[sh.shard] = Some(sh);
+            }
+        }
+    }
+    completions.sort_by_key(|c| (c.done_us, c.id));
+    ReplayOutcome {
+        stats,
+        completions,
+        latency,
+        service,
+        arm_wait,
+        mount_wait,
+        drive_wait,
+        cartridge_wait,
+        per_shard: per_shard
+            .into_iter()
+            .map(|s| s.expect("every shard has exactly one owning worker"))
+            .collect(),
+    }
+}
+
+/// The one replay implementation behind [`simulate`], [`simulate_traced`],
+/// [`simulate_with_arena`] and [`simulate_parallel`]'s workers. `owned`
+/// masks which shards this run serves (`None` = all); `arena` supplies
+/// recycled buffers (`None` = allocate fresh).
+fn simulate_impl(
+    cfg: &ReplayConfig,
+    catalog: &[Tape],
+    policy: &dyn Scheduler,
+    model: &mut dyn ArrivalModel,
+    trace: Option<&TraceRecorder>,
+    owned: Option<&[bool]>,
+    arena: Option<&mut ReplayArena>,
+) -> ReplayOutcome {
     assert!(cfg.n_drives > 0, "replay needs at least one drive per shard");
     assert!(cfg.n_shards > 0, "replay needs at least one shard");
     assert!(cfg.vnodes > 0, "the ring needs at least one virtual node per shard");
@@ -391,13 +617,37 @@ pub fn simulate_traced(
     if let LoopMode::Closed { max_in_flight } = cfg.mode {
         assert!(max_in_flight > 0, "closed loop needs a positive in-flight cap");
     }
+    if let Some(o) = owned {
+        assert_eq!(o.len(), cfg.n_shards, "ownership mask must cover every shard");
+        assert!(
+            matches!(cfg.mode, LoopMode::Open),
+            "shard-masked (parallel) replay is open-loop only"
+        );
+    }
+    // Recycled buffers, when the caller keeps a ReplayArena across
+    // policies; fresh allocations otherwise. Pooled histograms are
+    // cleared at recycle time and the pooled event queue restarts its
+    // FIFO sequence counter, so both behave exactly like fresh ones.
+    let mut arena = arena;
+    let (events, mut hist_pool, completions) = match arena.as_deref_mut() {
+        Some(a) => (
+            std::mem::take(&mut a.events),
+            std::mem::take(&mut a.histograms),
+            std::mem::take(&mut a.completions),
+        ),
+        None => (EventQueue::new(), Vec::new(), Vec::new()),
+    };
+    fn take_hist(pool: &mut Vec<LatencyHistogram>) -> LatencyHistogram {
+        pool.pop().unwrap_or_else(LatencyHistogram::new)
+    }
     // Partition the catalog over the ring once; routing is fixed for the
     // whole replay (fresh ring ⇒ shard ids are exactly 0..n_shards).
     let ring = HashRing::new(cfg.n_shards, cfg.vnodes);
     let spread = ring.spread();
     let tape_shard: Vec<usize> = catalog.iter().map(|t| ring.route(&t.name)).collect();
-    let shards: Vec<ShardState> = (0..cfg.n_shards)
-        .map(|s| ShardState {
+    let mut shards: Vec<ShardState> = Vec::with_capacity(cfg.n_shards);
+    for s in 0..cfg.n_shards {
+        shards.push(ShardState {
             batcher: Batcher::new(cfg.batcher),
             drives: DrivePool::new(cfg.n_drives),
             arms: ArmPool::new(cfg.drive.n_arms),
@@ -406,15 +656,15 @@ pub fn simulate_traced(
             n_tapes: tape_shard.iter().filter(|&&owner| owner == s).count(),
             ring_share: spread[s],
             stats: ReplayStats::default(),
-            latency: LatencyHistogram::new(),
-            service: LatencyHistogram::new(),
-            arm_wait: LatencyHistogram::new(),
-            mount_wait: LatencyHistogram::new(),
-            drive_wait: LatencyHistogram::new(),
-            cartridge_wait: LatencyHistogram::new(),
+            latency: take_hist(&mut hist_pool),
+            service: take_hist(&mut hist_pool),
+            arm_wait: take_hist(&mut hist_pool),
+            mount_wait: take_hist(&mut hist_pool),
+            drive_wait: take_hist(&mut hist_pool),
+            cartridge_wait: take_hist(&mut hist_pool),
             arm_accum: vec![0; cfg.n_drives],
-        })
-        .collect();
+        });
+    }
     let mut eng = Engine {
         pipeline: cfg.pipeline_active(),
         exclusive: cfg.exclusive_tapes,
@@ -428,7 +678,7 @@ pub fn simulate_traced(
         tape_shard,
         policy,
         clock: VirtualClock::new(),
-        events: EventQueue::new(),
+        events,
         shards,
         tick: 0,
         pending: HashMap::new(),
@@ -436,14 +686,16 @@ pub fn simulate_traced(
         in_flight: 0,
         arrivals_done: false,
         next_id: 0,
+        owned: owned.map(<[bool]>::to_vec).unwrap_or_else(|| vec![true; cfg.n_shards]),
+        phantoms: 0,
         stats: ReplayStats::default(),
-        completions: Vec::new(),
-        latency: LatencyHistogram::new(),
-        service: LatencyHistogram::new(),
-        arm_wait: LatencyHistogram::new(),
-        mount_wait: LatencyHistogram::new(),
-        drive_wait: LatencyHistogram::new(),
-        cartridge_wait: LatencyHistogram::new(),
+        completions,
+        latency: take_hist(&mut hist_pool),
+        service: take_hist(&mut hist_pool),
+        arm_wait: take_hist(&mut hist_pool),
+        mount_wait: take_hist(&mut hist_pool),
+        drive_wait: take_hist(&mut hist_pool),
+        cartridge_wait: take_hist(&mut hist_pool),
         trace,
     };
 
@@ -469,9 +721,20 @@ pub fn simulate_traced(
                 let id = eng.next_id;
                 eng.next_id += 1;
                 let shard = eng.tape_shard[a.tape];
-                eng.on_request(id, a.tape, a.file);
-                eng.pull_arrival(model);
-                Some(shard)
+                if eng.owned[shard] {
+                    eng.on_request(id, a.tape, a.file);
+                    eng.pull_arrival(model);
+                    Some(shard)
+                } else {
+                    // Parallel-replay phantom: another worker owns this
+                    // shard. The id is consumed and the next arrival is
+                    // pulled from *this* pop all the same, so ids, queue
+                    // positions and the FIFO tie-break stay aligned with
+                    // the single-threaded run.
+                    eng.phantoms += 1;
+                    eng.pull_arrival(model);
+                    None
+                }
             }
             Ev::Retry { id, tape, file, arrived_us } => {
                 eng.stats.retries += 1;
@@ -552,11 +815,19 @@ pub fn simulate_traced(
     );
     assert_eq!(
         eng.next_id,
-        eng.stats.submitted + eng.stats.shed,
-        "every request id is accounted as completed or shed"
+        eng.stats.submitted + eng.stats.shed + eng.phantoms,
+        "every request id is accounted as completed, shed, or phantom"
     );
     assert_eq!(eng.in_flight, 0, "in-flight level must drain to zero");
     eng.completions.sort_by_key(|c| (c.done_us, c.id));
+    if let Some(a) = arena {
+        // Hand the drained queue's allocation back for the next policy
+        // (recycle debug-asserts it really is empty and restarts the FIFO
+        // sequence counter).
+        let mut q = eng.events;
+        q.recycle();
+        a.events = q;
+    }
     let per_shard = eng
         .shards
         .into_iter()
@@ -1319,6 +1590,133 @@ mod tests {
         let active = a.per_shard.iter().filter(|s| s.stats.completed > 0).count();
         assert!(active >= 2, "only {active} shard(s) served anything");
         assert_eq!(a.stats.completed, a.stats.submitted);
+    }
+
+    /// Field-by-field equality of the deterministic parts of two
+    /// outcomes — everything the QoS report serializes (`sched_wall_s`,
+    /// the wall-clock diagnostic, is deliberately excluded).
+    fn assert_outcomes_identical(a: &ReplayOutcome, b: &ReplayOutcome, ctx: &str) {
+        let same_stats = |x: &ReplayStats, y: &ReplayStats, where_: &str| {
+            assert_eq!(x.submitted, y.submitted, "{where_}: submitted");
+            assert_eq!(x.completed, y.completed, "{where_}: completed");
+            assert_eq!(x.shed, y.shed, "{where_}: shed");
+            assert_eq!(x.busy_rejections, y.busy_rejections, "{where_}: busy_rejections");
+            assert_eq!(x.retries, y.retries, "{where_}: retries");
+            assert_eq!(x.batches, y.batches, "{where_}: batches");
+            assert_eq!(x.makespan_us, y.makespan_us, "{where_}: makespan_us");
+            assert_eq!(x.busy_drive_us, y.busy_drive_us, "{where_}: busy_drive_us");
+            assert_eq!(x.remount_hits, y.remount_hits, "{where_}: remount_hits");
+            assert_eq!(x.remount_misses, y.remount_misses, "{where_}: remount_misses");
+            assert_eq!(x.cartridge_parks, y.cartridge_parks, "{where_}: cartridge_parks");
+        };
+        assert_eq!(a.completions, b.completions, "{ctx}: completion log");
+        same_stats(&a.stats, &b.stats, ctx);
+        assert_eq!(a.latency, b.latency, "{ctx}: latency");
+        assert_eq!(a.service, b.service, "{ctx}: service");
+        assert_eq!(a.arm_wait, b.arm_wait, "{ctx}: arm_wait");
+        assert_eq!(a.mount_wait, b.mount_wait, "{ctx}: mount_wait");
+        assert_eq!(a.drive_wait, b.drive_wait, "{ctx}: drive_wait");
+        assert_eq!(a.cartridge_wait, b.cartridge_wait, "{ctx}: cartridge_wait");
+        assert_eq!(a.per_shard.len(), b.per_shard.len(), "{ctx}: shard count");
+        for (x, y) in a.per_shard.iter().zip(&b.per_shard) {
+            let w = format!("{ctx}: shard {}", x.shard);
+            assert_eq!(x.shard, y.shard, "{w}: id");
+            assert_eq!(x.n_tapes, y.n_tapes, "{w}: n_tapes");
+            assert_eq!(x.ring_share, y.ring_share, "{w}: ring_share");
+            same_stats(&x.stats, &y.stats, &w);
+            assert_eq!(x.latency, y.latency, "{w}: latency");
+            assert_eq!(x.service, y.service, "{w}: service");
+            assert_eq!(x.arm_wait, y.arm_wait, "{w}: arm_wait");
+            assert_eq!(x.mount_wait, y.mount_wait, "{w}: mount_wait");
+            assert_eq!(x.drive_wait, y.drive_wait, "{w}: drive_wait");
+            assert_eq!(x.cartridge_wait, y.cartridge_wait, "{w}: cartridge_wait");
+        }
+    }
+
+    #[test]
+    fn parallel_replay_is_byte_identical_to_single_threaded() {
+        // 24 tapes over 4 shards, enough traffic that several shards
+        // shed, batch, and complete work — then every thread count must
+        // reproduce the single-threaded outcome exactly, down to each
+        // histogram bucket and per-shard counter.
+        let catalog: Vec<Tape> = (0..24)
+            .map(|i| Tape::from_sizes(format!("TAPE{i:03}"), &[1_000; 40]))
+            .collect();
+        let mut config = cfg(LoopMode::Open);
+        config.n_shards = 4;
+        config.vnodes = 64;
+        let make_model = || -> Box<dyn ArrivalModel> {
+            Box::new(PoissonArrivals::new(RequestMix::new(&catalog), 60.0, 10.0, 5))
+        };
+        let single = simulate(&config, &catalog, &Gs, make_model().as_mut());
+        assert!(single.stats.completed > 300, "workload too small to be probative");
+        for threads in [2, 3, 4, 9] {
+            let par = simulate_parallel(&config, &catalog, &Gs, &make_model, threads);
+            assert_outcomes_identical(&single, &par, &format!("threads={threads}"));
+        }
+    }
+
+    #[test]
+    fn parallel_replay_exercises_the_pipeline_and_exclusivity_paths() {
+        // Same identity under the mount pipeline (LRU affinity + a
+        // constrained arm pool) where remount hits, arm waits, and
+        // cartridge parks are all live.
+        let catalog: Vec<Tape> = (0..12)
+            .map(|i| Tape::from_sizes(format!("TAPE{i:03}"), &[1_000; 40]))
+            .collect();
+        let mut config = cfg(LoopMode::Open);
+        config.n_shards = 3;
+        config.drive.n_arms = 1;
+        config.affinity = Affinity::Lru;
+        let make_model = || -> Box<dyn ArrivalModel> {
+            Box::new(PoissonArrivals::new(RequestMix::new(&catalog), 50.0, 8.0, 11))
+        };
+        let single = simulate(&config, &catalog, &SimpleDp, make_model().as_mut());
+        assert!(
+            single.stats.remount_hits > 0 && single.stats.remount_misses > 0,
+            "pipeline paths not exercised"
+        );
+        let par = simulate_parallel(&config, &catalog, &SimpleDp, &make_model, 3);
+        assert_outcomes_identical(&single, &par, "pipeline threads=3");
+    }
+
+    #[test]
+    #[should_panic(expected = "open-loop")]
+    fn parallel_replay_rejects_closed_loop() {
+        let catalog = catalog();
+        let make_model = || -> Box<dyn ArrivalModel> { Box::new(poisson(10.0, 1.0, 1)) };
+        let mut config = cfg(LoopMode::Closed { max_in_flight: 4 });
+        config.n_shards = 2;
+        simulate_parallel(&config, &catalog, &Gs, &make_model, 2);
+    }
+
+    #[test]
+    fn arena_reuse_across_policies_is_invisible() {
+        // A multi-policy run through one arena must reproduce the
+        // fresh-buffer outcomes byte for byte, while actually recycling
+        // (the second run draws its histograms from the pool).
+        let mut config = cfg(LoopMode::Open);
+        config.n_shards = 2;
+        let run_fresh = |policy: &dyn Scheduler| {
+            let mut model = poisson(40.0, 6.0, 21);
+            simulate(&config, &catalog(), policy, &mut model)
+        };
+        let fresh_gs = run_fresh(&Gs);
+        let fresh_sdp = run_fresh(&SimpleDp);
+        let mut arena = ReplayArena::new();
+        let mut model = poisson(40.0, 6.0, 21);
+        let pooled_gs = simulate_with_arena(&config, &catalog(), &Gs, &mut model, &mut arena);
+        assert_outcomes_identical(&fresh_gs, &pooled_gs, "arena first run");
+        arena.recycle(pooled_gs);
+        // Fleet + 2 shards × 6 histograms each are now pooled.
+        assert_eq!(arena.pooled_histograms(), 18);
+        let mut model = poisson(40.0, 6.0, 21);
+        let pooled_sdp =
+            simulate_with_arena(&config, &catalog(), &SimpleDp, &mut model, &mut arena);
+        assert_eq!(arena.pooled_histograms(), 0, "the run must draw from the pool");
+        assert_outcomes_identical(&fresh_sdp, &pooled_sdp, "arena second run");
+        arena.recycle(pooled_sdp);
+        assert_eq!(arena.pooled_histograms(), 18);
     }
 
     #[test]

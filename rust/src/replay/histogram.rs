@@ -116,6 +116,31 @@ impl LatencyHistogram {
         self.sum_us as f64 / 1e6
     }
 
+    /// Merge another histogram into this one. The grid is fixed and all
+    /// fields are integer sums (or a max), so merging per-shard
+    /// histograms recorded on disjoint sample sets yields exactly the
+    /// histogram an interleaved single recorder would have produced —
+    /// the property the parallel replay's byte-identity leans on.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Reset to the empty state in place, keeping the bucket allocation.
+    /// A cleared histogram is `==` a fresh one (the grid is fixed-size),
+    /// which is what lets the replay arena reuse buffers across policies
+    /// without perturbing any report.
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+        self.sum_us = 0;
+        self.max_us = 0;
+    }
+
     /// Quantile `p` ∈ [0, 100] in seconds: the high edge of the bucket
     /// holding the ⌈p/100·n⌉-th smallest sample (≤ 1/64 relative error),
     /// clamped to the exact maximum. 0 when empty.
@@ -300,6 +325,28 @@ mod tests {
         assert_eq!(h.count_le_us(u64::MAX), 6);
         let want = (10 + 100 + 1_000 + 10_000 + 100_000 + 1_000_000) as f64 / 1e6;
         assert!((h.sum_seconds() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_interleaved_recording_and_clear_restores_fresh() {
+        let mut rng = Rng::new(0xBEEF);
+        let (mut a, mut b, mut whole) =
+            (LatencyHistogram::new(), LatencyHistogram::new(), LatencyHistogram::new());
+        for i in 0..10_000u64 {
+            let v = (rng.lognormal(2.0, 1.5) * 1e6) as u64;
+            whole.record_us(v);
+            if i % 2 == 0 { a.record_us(v) } else { b.record_us(v) };
+        }
+        a.merge(&b);
+        assert_eq!(a, whole, "merge of disjoint halves = interleaved recording");
+        // Merging an empty histogram is the identity.
+        a.merge(&LatencyHistogram::new());
+        assert_eq!(a, whole);
+        // Clearing restores exact equality with a fresh histogram.
+        a.clear();
+        assert_eq!(a, LatencyHistogram::new());
+        assert_eq!(a.count(), 0);
+        assert_eq!(a.quantile(99.9), 0.0);
     }
 
     #[test]

@@ -19,9 +19,11 @@
 //!     (JSON)       p50…p99.9      ground truth    (any of the nine)
 //! ```
 //!
-//! Everything runs at CPU speed on one thread, deterministically: the same
-//! seed and configuration produce a byte-identical completion log and JSON
-//! report. With `ReplayConfig::n_shards > 1` the engine mirrors the
+//! Everything runs at CPU speed, deterministically: the same seed and
+//! configuration produce a byte-identical completion log and JSON report —
+//! including under [`run_replay_parallel`], which fans the shards of an
+//! open-loop replay out over worker threads and merges their outcomes
+//! back into the exact single-threaded result. With `ReplayConfig::n_shards > 1` the engine mirrors the
 //! multi-library [`crate::cluster`] layer in virtual time — one batcher
 //! and one drive pool per shard behind the consistent-hash ring — and the
 //! [`QosReport`] gains a per-shard percentile breakdown next to the
@@ -51,14 +53,14 @@ pub mod histogram;
 pub mod report;
 
 pub use arrivals::{
-    Arrival, ArrivalModel, BurstyArrivals, DiurnalArrivals, PoissonArrivals, RequestMix,
-    TraceArrivals,
+    scan_trace, Arrival, ArrivalModel, BurstyArrivals, DiurnalArrivals, PoissonArrivals,
+    RequestMix, StreamingTraceArrivals, TraceArrivals, TraceScan, DEFAULT_TRACE_WINDOW,
 };
 pub use clock::{EventQueue, VirtualClock};
 pub use driver::{drive_closed_loop, LiveDriveStats, RequestSink};
 pub use engine::{
-    simulate, simulate_traced, LoopMode, ReplayCompletion, ReplayConfig, ReplayOutcome,
-    ReplayStats, ShardOutcome,
+    simulate, simulate_parallel, simulate_traced, simulate_with_arena, LoopMode, ReplayArena,
+    ReplayCompletion, ReplayConfig, ReplayOutcome, ReplayStats, ShardOutcome,
 };
 pub use histogram::LatencyHistogram;
 pub use report::{reports_json, LatencyStats, QosReport, ShardQos};
@@ -99,6 +101,47 @@ pub fn run_replay_traced(
     let policy_name = policy.name();
     let arrivals_name = model.name();
     let outcome = engine::simulate_traced(cfg, catalog, policy, model, trace);
+    let report = QosReport::new(&policy_name, &arrivals_name, seed, duration_s, cfg, &outcome);
+    (report, outcome)
+}
+
+/// [`run_replay`] reusing a [`ReplayArena`] across policies: identical
+/// report and outcome, without reallocating the event queue, histograms,
+/// and completion log per policy. Hand the outcome back to
+/// [`ReplayArena::recycle`] once it has been consumed.
+#[allow(clippy::too_many_arguments)]
+pub fn run_replay_with_arena(
+    cfg: &ReplayConfig,
+    catalog: &[Tape],
+    policy: &dyn Scheduler,
+    model: &mut dyn ArrivalModel,
+    seed: u64,
+    duration_s: f64,
+    arena: &mut ReplayArena,
+) -> (QosReport, ReplayOutcome) {
+    let policy_name = policy.name();
+    let arrivals_name = model.name();
+    let outcome = engine::simulate_with_arena(cfg, catalog, policy, model, arena);
+    let report = QosReport::new(&policy_name, &arrivals_name, seed, duration_s, cfg, &outcome);
+    (report, outcome)
+}
+
+/// [`run_replay`] over `threads` worker threads (open-loop sharded
+/// replays only — see [`simulate_parallel`] for the determinism
+/// contract). `make_model` must yield identical arrival streams on every
+/// call; the report is byte-identical to the single-threaded one.
+pub fn run_replay_parallel(
+    cfg: &ReplayConfig,
+    catalog: &[Tape],
+    policy: &(dyn Scheduler + Sync),
+    make_model: &(dyn Fn() -> Box<dyn ArrivalModel> + Sync),
+    seed: u64,
+    duration_s: f64,
+    threads: usize,
+) -> (QosReport, ReplayOutcome) {
+    let policy_name = policy.name();
+    let arrivals_name = make_model().name();
+    let outcome = engine::simulate_parallel(cfg, catalog, policy, make_model, threads);
     let report = QosReport::new(&policy_name, &arrivals_name, seed, duration_s, cfg, &outcome);
     (report, outcome)
 }

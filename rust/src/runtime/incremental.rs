@@ -1,0 +1,377 @@
+//! Incremental dense SimpleDP re-solve for growing batches.
+//!
+//! A `Batcher` open batch grows one request at a time, and every growth
+//! step used to pay a full Θ(k²·n) dense wavefront. But when the batch
+//! grows by a *new last file* (an append in sorted tape order), almost the
+//! whole previous table is still exact: appending file `k` changes no
+//! `ℓ/r/x/n_ℓ` value of files `0..k`, so row `b < k` cells differ from the
+//! old table only where the old evaluation was touched by the edge clamp —
+//! the skip branch reads row `b−1` at column `min(ns + x_b, ns_max)` and
+//! `ns_max` just grew. [`IncrementalTable`] keeps the full value table as
+//! per-file rows and repairs exactly that suffix region:
+//!
+//! - row 0 gains the new columns (`T[0, ns] = 2·s(0)·ns`, never stale);
+//! - row `b ≥ 1` is recomputed for columns `ns ≥ τ_b` with
+//!   `τ_b = τ_{b−1} − x_b` (saturating), `τ_0 = n_old + 1`: a
+//!   conservative stale front covering (a) the direct clamp
+//!   (`ns + x_b > n_old`), (b) stale skip reads (the skip branch reads
+//!   column `ns + x_b ≥ τ_{b−1}`, already repaired when row `b` runs), and
+//!   (c) stale detour reads (a detour reads row `c−1` at the *same*
+//!   column, and `τ` is nonincreasing in `b`, so column `ns < τ_b ≤ τ_{c−1}`
+//!   is never stale);
+//! - the appended file's own row is computed in full.
+//!
+//! Every repaired cell therefore reads only never-stale or
+//! already-repaired cells, which makes the incremental cost **bit-equal**
+//! to a from-scratch [`dense_cost`] — property-tested against the sparse
+//! solver and ci-gated. For a batch grown by unit-multiplicity appends the
+//! repair work is Θ(b·(b + x_k)) per step (~k³ total) instead of Θ(k²·n)
+//! per step (~k³·n̄ total): the win is the per-step factor n.
+//!
+//! Any non-append mutation — a multiplicity bump, an insertion before the
+//! last file, a different tape geometry or `U` — falls back to a full
+//! rebuild (same table layout, so the next append extends again).
+//! Schedules always go through the scratch solver: reconstruction needs
+//! the choice table, which the repair path deliberately does not maintain.
+//!
+//! [`IncrementalBackend`] wraps a thread-local table behind the
+//! [`SimpleDpBackend`] seam (CLI id `incremental`), with process-wide
+//! append/fallback counters exported via [`incremental_stats`].
+//!
+//! [`dense_cost`]: crate::sched::simpledp_dense::dense_cost
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::model::{virtual_lb, Cost, Instance, ReqFile};
+use crate::sched::simpledp_dense::{dense_solve_into, DenseScratch};
+use crate::sched::Schedule;
+
+use super::SimpleDpBackend;
+
+static INC_APPENDS: AtomicU64 = AtomicU64::new(0);
+static INC_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide incremental-solver counters: `(appends, fallbacks)`,
+/// summed over every thread since process start. An append means a batch
+/// growth step skipped the from-scratch wavefront and repaired the stale
+/// suffix instead; a fallback is a full rebuild.
+pub fn incremental_stats() -> (u64, u64) {
+    (INC_APPENDS.load(Ordering::Relaxed), INC_FALLBACKS.load(Ordering::Relaxed))
+}
+
+/// The dense SimpleDP value table of the last solved instance, stored as
+/// one row per requested file so an append extends in place.
+#[derive(Debug, Default)]
+pub struct IncrementalTable {
+    tape_len: u64,
+    u: u64,
+    files: Vec<ReqFile>,
+    /// `rows[b][ns]` = `T[b, ns]`, each row of length `width`.
+    rows: Vec<Vec<Cost>>,
+    /// `n + 1` for the stored instance.
+    width: usize,
+}
+
+impl IncrementalTable {
+    pub fn new() -> IncrementalTable {
+        IncrementalTable::default()
+    }
+
+    /// Whether `inst` extends the stored instance by exactly one appended
+    /// last file (same tape, same `U`, identical prefix).
+    fn is_append(&self, inst: &Instance) -> bool {
+        !self.files.is_empty()
+            && self.tape_len == inst.tape_len()
+            && self.u == inst.u()
+            && inst.k() == self.files.len() + 1
+            && inst.files()[..self.files.len()] == self.files[..]
+    }
+
+    /// Whether `inst` is byte-identical to the stored instance.
+    fn is_same(&self, inst: &Instance) -> bool {
+        self.tape_len == inst.tape_len()
+            && self.u == inst.u()
+            && inst.files() == &self.files[..]
+    }
+
+    /// One cell of the dense recurrence, reading rows `0..b` of `rows`
+    /// (must already be correct at the columns the cell reads — see the
+    /// module docs for the repair invariant).
+    fn cell(inst: &Instance, below: &[Vec<Cost>], b: usize, ns: usize, ns_max: usize) -> Cost {
+        let xb = inst.x(b) as usize;
+        let shifted = (ns + xb).min(ns_max);
+        let gap2 = 2 * (inst.r(b) - inst.r(b - 1)) as Cost;
+        let lead2 = 2 * (inst.l(b) - inst.r(b - 1)) as Cost * inst.x(b) as Cost;
+        let mut best = below[b - 1][shifted] + gap2 * ns as Cost + lead2;
+        let u = inst.u() as Cost;
+        for c in 1..=b {
+            let span2 = 2 * (inst.r(b) - inst.r(c - 1)) as Cost;
+            let det2 = 2 * (u + inst.r(b) as Cost - inst.l(c) as Cost);
+            let v = below[c - 1][ns]
+                + span2 * ns as Cost
+                + det2 * (ns as Cost + inst.nl(c) as Cost)
+                + 2 * inst.in_detour_span_cost(c, b);
+            if v < best {
+                best = v;
+            }
+        }
+        best
+    }
+
+    /// Full rebuild: the same bottom-up wavefront as
+    /// [`crate::sched::simpledp_dense::dense_table`], laid out per row.
+    fn rebuild(&mut self, inst: &Instance) {
+        let k = inst.k();
+        let ns_max = inst.n() as usize;
+        let width = ns_max + 1;
+        self.rows.resize_with(k, Vec::new);
+        self.rows.truncate(k);
+        for (b, row) in self.rows.iter_mut().enumerate() {
+            row.clear();
+            row.resize(width, 0);
+            if b == 0 {
+                for (ns, v) in row.iter_mut().enumerate() {
+                    *v = 2 * inst.s(0) as Cost * ns as Cost;
+                }
+            }
+        }
+        for b in 1..k {
+            let (below, rest) = self.rows.split_at_mut(b);
+            let row = &mut rest[0];
+            for (ns, v) in row.iter_mut().enumerate() {
+                *v = Self::cell(inst, below, b, ns, ns_max);
+            }
+        }
+        self.tape_len = inst.tape_len();
+        self.u = inst.u();
+        self.files = inst.files().to_vec();
+        self.width = width;
+    }
+
+    /// Append repair: extend row 0, repair each existing row's stale
+    /// suffix (`ns ≥ τ_b`, `τ_b = τ_{b−1} − x_b` saturating from
+    /// `τ_0 = n_old + 1`), then compute the new last row in full.
+    fn extend(&mut self, inst: &Instance) {
+        let k = inst.k();
+        let ns_max = inst.n() as usize;
+        let width = ns_max + 1;
+        debug_assert_eq!(k, self.rows.len() + 1);
+        self.rows[0].resize(width, 0);
+        for ns in self.width..width {
+            self.rows[0][ns] = 2 * inst.s(0) as Cost * ns as Cost;
+        }
+        let mut tau = self.width; // τ_0 = n_old + 1
+        for b in 1..k - 1 {
+            tau = tau.saturating_sub(inst.x(b) as usize);
+            let (below, rest) = self.rows.split_at_mut(b);
+            let row = &mut rest[0];
+            row.resize(width, 0);
+            for ns in tau..width {
+                row[ns] = Self::cell(inst, below, b, ns, ns_max);
+            }
+        }
+        let b = k - 1;
+        let mut row = vec![0; width];
+        for (ns, v) in row.iter_mut().enumerate() {
+            *v = Self::cell(inst, &self.rows, b, ns, ns_max);
+        }
+        self.rows.push(row);
+        self.files.push(inst.files()[b]);
+        self.width = width;
+    }
+
+    /// Exact optimal disjoint-detour cost (including `VirtualLB`) of
+    /// `inst`, reusing the stored table when `inst` is the stored
+    /// instance or a one-file append of it, rebuilding otherwise. The
+    /// second element reports which path ran (`true` = incremental).
+    pub fn opt_cost(&mut self, inst: &Instance) -> (Cost, bool) {
+        let incremental = if !self.rows.is_empty() && self.is_same(inst) {
+            true
+        } else if self.is_append(inst) {
+            self.extend(inst);
+            true
+        } else {
+            self.rebuild(inst);
+            false
+        };
+        let cost = self.rows[inst.k() - 1][0] + virtual_lb(inst);
+        (cost, incremental)
+    }
+}
+
+thread_local! {
+    static TABLE: RefCell<IncrementalTable> = RefCell::new(IncrementalTable::new());
+    static SCRATCH: RefCell<DenseScratch> = RefCell::new(DenseScratch::default());
+}
+
+/// Incremental dense SimpleDP backend: cost queries over a growing batch
+/// repair the previous thread-local table instead of re-solving from
+/// scratch; everything else (non-append mutations, schedule requests)
+/// serves through the exact scratch solver.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IncrementalBackend;
+
+impl SimpleDpBackend for IncrementalBackend {
+    fn id(&self) -> &'static str {
+        "incremental"
+    }
+
+    fn opt_cost(&self, inst: &Instance) -> Cost {
+        let (cost, incremental) = TABLE.with(|t| t.borrow_mut().opt_cost(inst));
+        if incremental {
+            INC_APPENDS.fetch_add(1, Ordering::Relaxed);
+        } else {
+            INC_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+        }
+        cost
+    }
+
+    fn opt_schedule(&self, inst: &Instance) -> Schedule {
+        // Reconstruction needs the choice table the repair path does not
+        // maintain: full solve through the reusable scratch buffers.
+        SCRATCH.with(|s| dense_solve_into(inst, &mut s.borrow_mut())).1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Scheduler, SimpleDp};
+    use crate::sim::evaluate;
+    use crate::util::rng::Rng;
+
+    fn grow_step(rng: &mut Rng, files: &mut Vec<ReqFile>) -> bool {
+        // 1-in-4 steps mutate an existing file's multiplicity (a
+        // non-append growth: the same batch gaining a duplicate request),
+        // the rest append a fresh file after the current last one.
+        if !files.is_empty() && rng.below(4) == 0 {
+            let i = rng.below(files.len() as u64) as usize;
+            files[i].x += 1;
+            false
+        } else {
+            let prev_r = files.last().map(|f| f.r).unwrap_or(0);
+            let l = prev_r + 1 + rng.below(5);
+            let r = l + 1 + rng.below(8);
+            files.push(ReqFile { l, r, x: 1 + rng.below(3) });
+            true
+        }
+    }
+
+    #[test]
+    fn incremental_cost_is_bit_equal_on_random_grow_sequences() {
+        // The property the ci gate leans on: along random grow sequences
+        // (appends interleaved with multiplicity bumps), the incremental
+        // cost equals the scratch solver's bit for bit, and BOTH paths
+        // (append repair and full fallback) are exercised.
+        let mut rng = Rng::new(0x1C41);
+        let (mut appends, mut fallbacks) = (0u64, 0u64);
+        for case in 0..25 {
+            let mut table = IncrementalTable::new();
+            let u = rng.below(9);
+            let mut files: Vec<ReqFile> = Vec::new();
+            for step in 0..18 {
+                let appended = grow_step(&mut rng, &mut files);
+                let inst = Instance::new(600, u, files.clone()).unwrap();
+                let (cost, incremental) = table.opt_cost(&inst);
+                assert_eq!(
+                    cost,
+                    SimpleDp::cost(&inst),
+                    "case {case} step {step} (append: {appended})"
+                );
+                // The first step has no table to extend; later appends
+                // must take the incremental path, mutations must not.
+                if step > 0 {
+                    assert_eq!(incremental, appended, "case {case} step {step}");
+                }
+                if incremental { appends += 1 } else { fallbacks += 1 };
+            }
+        }
+        assert!(appends > 100, "append repair under-exercised: {appends}");
+        assert!(fallbacks > 25, "fallback path under-exercised: {fallbacks}");
+    }
+
+    #[test]
+    fn incremental_handles_clamp_heavy_multiplicities() {
+        // Large multiplicities drive the skip-branch clamp hard (the
+        // stale region the repair exists for): dominant x on the first,
+        // middle, and appended file.
+        let mut table = IncrementalTable::new();
+        let seqs: Vec<Vec<ReqFile>> = vec![
+            vec![
+                ReqFile { l: 0, r: 5, x: 60 },
+                ReqFile { l: 20, r: 30, x: 1 },
+                ReqFile { l: 40, r: 45, x: 1 },
+                ReqFile { l: 50, r: 52, x: 7 },
+            ],
+            vec![
+                ReqFile { l: 3, r: 6, x: 1 },
+                ReqFile { l: 20, r: 30, x: 60 },
+                ReqFile { l: 40, r: 45, x: 1 },
+                ReqFile { l: 90, r: 99, x: 2 },
+            ],
+            vec![
+                ReqFile { l: 5, r: 6, x: 2 },
+                ReqFile { l: 6, r: 30, x: 1 },
+                ReqFile { l: 31, r: 32, x: 8 },
+                ReqFile { l: 60, r: 61, x: 55 },
+            ],
+        ];
+        for (i, seq) in seqs.iter().enumerate() {
+            for step in 1..=seq.len() {
+                let inst = Instance::new(200, 3, seq[..step].to_vec()).unwrap();
+                let (cost, incremental) = table.opt_cost(&inst);
+                assert_eq!(cost, SimpleDp::cost(&inst), "seq {i} step {step}");
+                // Each sequence restarts (different first file): step 1
+                // falls back, every later step is a pure append.
+                assert_eq!(incremental, step > 1, "seq {i} step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_repeated_instance_is_served_from_the_table() {
+        let files = vec![
+            ReqFile { l: 5, r: 6, x: 2 },
+            ReqFile { l: 6, r: 30, x: 1 },
+            ReqFile { l: 31, r: 32, x: 8 },
+        ];
+        let inst = Instance::new(100, 3, files).unwrap();
+        let mut table = IncrementalTable::new();
+        let (c1, first) = table.opt_cost(&inst);
+        let (c2, second) = table.opt_cost(&inst);
+        assert!(!first, "first solve must rebuild");
+        assert!(second, "identical re-solve must reuse the table");
+        assert_eq!(c1, c2);
+        assert_eq!(c1, SimpleDp::cost(&inst));
+        // A different U on the same files must NOT reuse the table.
+        let (c3, third) = table.opt_cost(&inst.with_u(9));
+        assert!(!third);
+        assert_eq!(c3, SimpleDp::cost(&inst.with_u(9)));
+    }
+
+    #[test]
+    fn incremental_backend_serves_exact_costs_and_schedules() {
+        let b = IncrementalBackend;
+        assert_eq!(b.id(), "incremental");
+        let (a0, f0) = incremental_stats();
+        let mut files = vec![ReqFile { l: 2, r: 4, x: 2 }];
+        let mut last = None;
+        for add in [(10u64, 30u64, 5u64), (33, 34, 1), (50, 80, 4), (90, 99, 2)] {
+            files.push(ReqFile { l: add.0, r: add.1, x: add.2 });
+            let inst = Instance::new(110, 0, files.clone()).unwrap();
+            let expected = SimpleDp::cost(&inst);
+            assert_eq!(b.opt_cost(&inst), expected);
+            let sched = b.opt_schedule(&inst);
+            assert_eq!(evaluate(&inst, &sched).cost, expected);
+            last = Some(inst);
+        }
+        let (a1, f1) = incremental_stats();
+        assert!(a1 > a0, "appends must be counted");
+        assert!(f1 > f0, "the first solve counts as a fallback");
+        // The schedule detour list matches the sparse solver's cost too.
+        let inst = last.unwrap();
+        let sparse = evaluate(&inst, &SimpleDp.schedule(&inst)).cost;
+        assert_eq!(b.opt_cost(&inst), sparse);
+    }
+}

@@ -6,6 +6,11 @@
 //!
 //! - [`DenseBackend`] — the exact pure-Rust `i128` implementation in
 //!   [`crate::sched::simpledp_dense`]. Always available; the default.
+//! - [`IncrementalBackend`] — the same dense wavefront, but cost queries
+//!   over a *growing* batch (each instance appending one file to the
+//!   previous one) repair the previous table instead of re-solving from
+//!   scratch. Opt-in by name (`--backend incremental`); costs stay
+//!   bit-equal to [`DenseBackend`].
 //! - `XlaSimpleDp` — PJRT execution of the AOT-compiled artifacts produced
 //!   by `python/compile/aot.py` (`make artifacts`). Compiled in only with
 //!   `--features xla`; instances that fit no artifact bucket fall back to
@@ -18,10 +23,12 @@
 mod dense;
 #[cfg(feature = "xla")]
 mod engine;
+mod incremental;
 #[cfg(feature = "xla")]
 mod xla_simpledp;
 
 pub use dense::{dense_cache_stats, DenseBackend};
+pub use incremental::{incremental_stats, IncrementalBackend, IncrementalTable};
 #[cfg(feature = "xla")]
 pub use engine::{Engine, RuntimeError};
 #[cfg(feature = "xla")]
@@ -44,7 +51,7 @@ pub const ARTIFACT_DIR: &str = "artifacts";
 /// approximate.
 pub trait SimpleDpBackend: Send + Sync {
     /// Stable identifier used for CLI selection and report labels
-    /// (`"dense"`, `"xla"`).
+    /// (`"dense"`, `"incremental"`, `"xla"`).
     fn id(&self) -> &'static str;
 
     /// Optimal disjoint-detour cost (including `VirtualLB`).
@@ -91,13 +98,20 @@ pub fn default_backend() -> Arc<dyn SimpleDpBackend> {
     Arc::new(DenseBackend)
 }
 
-/// Look a backend up by (case-insensitive) id: `"dense"` is always
-/// available; `"xla"` requires the `xla` feature and a constructible PJRT
-/// engine. Errors carry a user-facing explanation.
+/// Look a backend up by (case-insensitive) id: `"dense"` and
+/// `"incremental"` are always available; `"xla"` requires the `xla`
+/// feature and a constructible PJRT engine. Errors carry a user-facing
+/// explanation. (`incremental` is name-selectable only: it stays out of
+/// [`available_backends`] because it is the *same* exact engine as dense
+/// with a different re-solve strategy, not an additional backend to sweep
+/// in comparisons.)
 pub fn backend_by_name(name: &str) -> Result<Arc<dyn SimpleDpBackend>, String> {
     let n = name.to_ascii_lowercase();
     if n == "dense" {
         return Ok(Arc::new(DenseBackend));
+    }
+    if n == "incremental" {
+        return Ok(Arc::new(IncrementalBackend));
     }
     if n == "xla" {
         #[cfg(feature = "xla")]
@@ -114,7 +128,7 @@ pub fn backend_by_name(name: &str) -> Result<Arc<dyn SimpleDpBackend>, String> {
             );
         }
     }
-    Err(format!("unknown backend `{name}` (known: dense, xla)"))
+    Err(format!("unknown backend `{name}` (known: dense, incremental, xla)"))
 }
 
 /// Every backend constructible in this build: dense always, xla when the
@@ -160,7 +174,21 @@ mod tests {
     fn backend_by_name_resolves_dense_case_insensitively() {
         assert_eq!(backend_by_name("dense").unwrap().id(), "dense");
         assert_eq!(backend_by_name("Dense").unwrap().id(), "dense");
-        assert!(backend_by_name("nope").unwrap_err().contains("unknown backend"));
+        assert_eq!(backend_by_name("Incremental").unwrap().id(), "incremental");
+        let err = backend_by_name("nope").unwrap_err();
+        assert!(err.contains("unknown backend"));
+        assert!(err.contains("incremental"), "error must list the known ids: {err}");
+    }
+
+    #[test]
+    fn incremental_backend_is_selectable_but_not_swept() {
+        // `available_backends` drives comparison sweeps; incremental is
+        // the same exact engine as dense, so it must stay name-only.
+        let policy = BackendPolicy::new(backend_by_name("incremental").unwrap());
+        assert_eq!(policy.name(), "SimpleDP[incremental]");
+        assert!(available_backends().iter().all(|b| b.id() != "incremental"));
+        let i = inst();
+        assert_eq!(policy.backend().opt_cost(&i), SimpleDp::cost(&i));
     }
 
     #[cfg(not(feature = "xla"))]

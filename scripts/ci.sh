@@ -310,4 +310,20 @@ print(f"ci: obs push gate OK — pull {p['pull_submits_per_s']:.0f} -> "
       f"({p['push_submits_per_s'] / p['pull_submits_per_s']:.2f}x)")
 EOF
 
+# Raw-speed gate (a) — parallel replay determinism: fanning the sharded
+# smoke replay over 4 worker threads must not move a byte of the QoS
+# JSON vs the single-threaded run of the same flags (the arm gate
+# artifact above, which ran with the default --threads 1).
+./target/release/tapesched replay --shards 4 --smoke --seed 7 \
+    --threads 4 --out /tmp/replay_threads4_ci.json
+cmp /tmp/replay_arm_default.json /tmp/replay_threads4_ci.json
+echo "ci: parallel replay gate OK (4 threads byte-identical to 1)"
+
+# Raw-speed gate (b) — incremental DP re-solve: the property tests pin
+# the table to the full solver bit for bit over random grow sequences,
+# and require both repair paths to fire (appends extended in place,
+# non-appends falling back to a rebuild).
+cargo test -q incremental_
+echo "ci: incremental DP gate OK (bit-equal property tests green)"
+
 echo "ci: all gates green"
