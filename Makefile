@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test benches bench-smoke bench-json replay-smoke shard-smoke arm-smoke exclusivity-smoke net-smoke obs-smoke perf-smoke examples fmt fmt-check artifacts ci clean
+.PHONY: verify build test benches bench-smoke bench-json replay-smoke shard-smoke arm-smoke exclusivity-smoke net-smoke obs-smoke perf-smoke audit-smoke examples fmt fmt-check artifacts ci clean
 
 verify: ## tier-1 gate: release build + full test suite
 	$(CARGO) build --release
@@ -138,6 +138,13 @@ perf-smoke: build
 		--threads 4 --out results/perf-threads4.json
 	cmp results/perf-threads1.json results/perf-threads4.json
 	@echo "perf-smoke: results/perf-threads4.json (byte-identical to 1 thread)"
+
+# Determinism & invariant lint: the shipped tree must audit clean — zero
+# findings, zero unused waivers (rules and waiver syntax: rust/README.md,
+# "Static analysis"). Exit 1 on any finding.
+audit-smoke: build
+	./target/release/tapesched audit rust/src
+	@echo "audit-smoke: rust/src audits clean"
 
 examples:
 	$(CARGO) build --examples

@@ -1,0 +1,417 @@
+//! A line-aware Rust tokenizer — just enough lexing for the audit rules.
+//!
+//! This is deliberately **not** a parser: the rules in [`super::rules`]
+//! work on token sequences (`Instant :: now`, `. unwrap (`), so all the
+//! lexer must get right is what is *code* versus what is a string, a char
+//! literal, or a comment — the classic places a naive `grep` lint goes
+//! wrong (`"// audit"` inside a string, `{:?}` inside a doc comment,
+//! `'a'` versus the lifetime `'a`). It handles line comments, nested
+//! block comments, string and byte-string literals, raw strings with any
+//! number of `#`s, char literals, lifetimes, and raw identifiers, and
+//! tags every token with its 1-based source line so findings point at
+//! real locations.
+//!
+//! Line comments are returned separately from the token stream: they are
+//! dead weight for every rule except the waiver scanner, which reads
+//! `// audit:allow(rule-id) reason` annotations out of them.
+
+/// What kind of lexeme a [`Tok`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unwrap`, `HashMap`).
+    Ident,
+    /// Operator or delimiter, multi-char ops pre-joined (`::`, `+=`).
+    Punct,
+    /// String or byte-string literal, raw or not, quotes included.
+    Str,
+    /// Character literal, quotes included.
+    CharLit,
+    /// Lifetime (`'a`, `'static`), leading quote included.
+    Lifetime,
+    /// Numeric literal (approximate: suffixes ride along).
+    Num,
+}
+
+/// One token: kind, exact text, and the 1-based line it starts on.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One `//` comment: its line and the text after the slashes.
+#[derive(Debug, Clone)]
+pub struct LineComment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// The lexer's output: the code tokens plus the line comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<LineComment>,
+}
+
+/// Multi-character operators the rules care about, longest-match-first so
+/// `==` never lexes as two `=`s (the accounting rule tells assignment
+/// from comparison by exactly this distinction).
+const PUNCT2: [&str; 16] = [
+    "::", "==", "!=", "+=", "-=", "*=", "/=", "=>", "->", "..", "&&", "||", "<=", ">=", "<<",
+    ">>",
+];
+
+/// Tokenize `src`. Never fails: unexpected bytes become single-char
+/// punctuation tokens, and unterminated literals run to end of input —
+/// an audit must degrade on weird input, not abort.
+pub fn tokenize(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let end = line_end(b, i);
+                out.comments.push(LineComment {
+                    line,
+                    text: src[i + 2..end].to_string(),
+                });
+                i = end;
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                // Block comments nest in Rust.
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < b.len() && depth > 0 {
+                    if b[j] == b'/' && b.get(j + 1) == Some(&b'*') {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == b'*' && b.get(j + 1) == Some(&b'/') {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        if b[j] == b'\n' {
+                            line += 1;
+                        }
+                        j += 1;
+                    }
+                }
+                i = j;
+            }
+            b'r' | b'b' if raw_str_hashes(b, i).is_some() => {
+                let (open, hashes) = raw_str_hashes(b, i).unwrap_or((i, 0));
+                let (end, newlines) = raw_str_end(b, open + 1, hashes);
+                out.toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: src[i..end].to_string(),
+                    line,
+                });
+                line += newlines;
+                i = end;
+            }
+            b'r' if b.get(i + 1) == Some(&b'#')
+                && b.get(i + 2).is_some_and(|c| is_ident_start(*c)) =>
+            {
+                // Raw identifier r#ident: token text keeps only the name.
+                let end = ident_end(b, i + 2);
+                out.toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: src[i + 2..end].to_string(),
+                    line,
+                });
+                i = end;
+            }
+            b'"' => {
+                let (end, newlines) = string_end(b, i + 1);
+                out.toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: src[i..end].to_string(),
+                    line,
+                });
+                line += newlines;
+                i = end;
+            }
+            b'b' if b.get(i + 1) == Some(&b'"') => {
+                let (end, newlines) = string_end(b, i + 2);
+                out.toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: src[i..end].to_string(),
+                    line,
+                });
+                line += newlines;
+                i = end;
+            }
+            b'\'' => {
+                let (tok, end) = char_or_lifetime(src, b, i, line);
+                out.toks.push(tok);
+                i = end;
+            }
+            _ if c.is_ascii_digit() => {
+                let mut end = ident_end(b, i);
+                // Fractional part: `.` followed by a digit (so `0..n`
+                // stays a range, not a malformed float).
+                if b.get(end) == Some(&b'.') && b.get(end + 1).is_some_and(|c| c.is_ascii_digit())
+                {
+                    end = ident_end(b, end + 1);
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Num,
+                    text: src[i..end].to_string(),
+                    line,
+                });
+                i = end;
+            }
+            _ if is_ident_start(c) => {
+                let end = ident_end(b, i);
+                out.toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: src[i..end].to_string(),
+                    line,
+                });
+                i = end;
+            }
+            _ => {
+                let two = PUNCT2
+                    .iter()
+                    .find(|p| src[i..].starts_with(*p))
+                    .copied();
+                let text = match two {
+                    Some(p) => p.to_string(),
+                    None => (c as char).to_string(),
+                };
+                let len = text.len();
+                out.toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text,
+                    line,
+                });
+                i += len;
+            }
+        }
+    }
+    out
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn ident_end(b: &[u8], start: usize) -> usize {
+    let mut j = start;
+    while j < b.len() && is_ident_continue(b[j]) {
+        j += 1;
+    }
+    j
+}
+
+fn line_end(b: &[u8], start: usize) -> usize {
+    let mut j = start;
+    while j < b.len() && b[j] != b'\n' {
+        j += 1;
+    }
+    j
+}
+
+/// If `i` starts a raw (byte) string — `r"`, `r#"`, `br##"` … — return
+/// the index of the opening quote and the hash count.
+fn raw_str_hashes(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((j, hashes))
+    } else {
+        None
+    }
+}
+
+/// Scan a raw string body from just past the opening quote to just past
+/// the closing `"###…`; returns (end index, newlines crossed).
+fn raw_str_end(b: &[u8], start: usize, hashes: usize) -> (usize, u32) {
+    let mut j = start;
+    let mut newlines = 0u32;
+    while j < b.len() {
+        if b[j] == b'"' && b[j + 1..].iter().take(hashes).filter(|c| **c == b'#').count() == hashes
+        {
+            return (j + 1 + hashes, newlines);
+        }
+        if b[j] == b'\n' {
+            newlines += 1;
+        }
+        j += 1;
+    }
+    (b.len(), newlines)
+}
+
+/// Scan a normal string body (escapes honored) from just past the opening
+/// quote to just past the closing quote; returns (end, newlines crossed).
+fn string_end(b: &[u8], start: usize) -> (usize, u32) {
+    let mut j = start;
+    let mut newlines = 0u32;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return (j + 1, newlines),
+            b'\n' => {
+                newlines += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    (b.len(), newlines)
+}
+
+/// Disambiguate `'a'` (char literal) from `'a` (lifetime) at index `i`
+/// (the quote). Escapes (`'\n'`) and punctuation chars (`'('`) are
+/// always char literals.
+fn char_or_lifetime(src: &str, b: &[u8], i: usize, line: u32) -> (Tok, usize) {
+    if b.get(i + 1).is_some_and(|c| is_ident_start(*c)) {
+        let end = ident_end(b, i + 1);
+        if b.get(end) == Some(&b'\'') && end == i + 2 {
+            // 'x' — one identifier char then a closing quote.
+            return (
+                Tok { kind: TokKind::CharLit, text: src[i..end + 1].to_string(), line },
+                end + 1,
+            );
+        }
+        return (
+            Tok { kind: TokKind::Lifetime, text: src[i..end].to_string(), line },
+            end,
+        );
+    }
+    // Escaped or punctuation char literal: scan to the closing quote.
+    let mut j = i + 1;
+    if b.get(j) == Some(&b'\\') {
+        j += 2;
+    } else if j < b.len() {
+        j += 1;
+    }
+    while j < b.len() && b[j] != b'\'' {
+        j += 1;
+    }
+    let end = (j + 1).min(b.len());
+    (
+        Tok { kind: TokKind::CharLit, text: src[i..end].to_string(), line },
+        end,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn slashes_inside_strings_are_not_comments() {
+        let lexed = tokenize(r#"let url = "http://example.com"; // real comment"#);
+        assert_eq!(lexed.comments.len(), 1);
+        assert_eq!(lexed.comments[0].text, " real comment");
+        let strs: Vec<_> =
+            lexed.toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].text.contains("http://example.com"));
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let lexed = tokenize("a /* outer /* inner */ still comment */ b");
+        assert_eq!(idents("a /* outer /* inner */ still comment */ b"), ["a", "b"]);
+        assert!(lexed.toks.iter().all(|t| t.text != "inner"));
+    }
+
+    #[test]
+    fn raw_strings_swallow_quotes_and_hashes() {
+        let src = r##"let s = r#"say "hi" // not a comment"#; done();"##;
+        let lexed = tokenize(src);
+        assert!(lexed.comments.is_empty());
+        assert!(idents(src).contains(&"done".to_string()));
+        let strs: Vec<_> =
+            lexed.toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].text.contains("not a comment"));
+    }
+
+    #[test]
+    fn char_literals_versus_lifetimes() {
+        let lexed = tokenize(r"fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\n'; }");
+        let kinds: Vec<_> = lexed
+            .toks
+            .iter()
+            .filter(|t| matches!(t.kind, TokKind::Lifetime | TokKind::CharLit))
+            .map(|t| (t.kind, t.text.clone()))
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (TokKind::Lifetime, "'a".to_string()),
+                (TokKind::Lifetime, "'a".to_string()),
+                (TokKind::CharLit, "'x'".to_string()),
+                (TokKind::CharLit, r"'\n'".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn multi_char_operators_stay_joined() {
+        let texts: Vec<String> =
+            tokenize("a += b; c == d; e::f()").toks.into_iter().map(|t| t.text).collect();
+        assert!(texts.contains(&"+=".to_string()));
+        assert!(texts.contains(&"==".to_string()));
+        assert!(texts.contains(&"::".to_string()));
+        assert!(!texts.contains(&"=".to_string()));
+    }
+
+    #[test]
+    fn lines_are_tracked_across_literals_and_comments() {
+        let src = "a\n/* two\nlines */\nb \"str\nspan\" c\nd";
+        let lexed = tokenize(src);
+        let line_of = |name: &str| {
+            lexed.toks.iter().find(|t| t.text == name).map(|t| t.line)
+        };
+        assert_eq!(line_of("a"), Some(1));
+        assert_eq!(line_of("b"), Some(4));
+        assert_eq!(line_of("c"), Some(5));
+        assert_eq!(line_of("d"), Some(6));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let texts: Vec<String> =
+            tokenize("for i in 0..10 { let x = 1.5; }").toks.into_iter().map(|t| t.text).collect();
+        assert!(texts.contains(&"0".to_string()));
+        assert!(texts.contains(&"..".to_string()));
+        assert!(texts.contains(&"10".to_string()));
+        assert!(texts.contains(&"1.5".to_string()));
+    }
+}

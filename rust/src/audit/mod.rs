@@ -1,0 +1,357 @@
+//! `tapesched audit` — a dependency-free static-analysis pass over this
+//! crate's own sources, enforcing the invariants the test suite can only
+//! check dynamically:
+//!
+//! * **determinism zone** (`replay/`, `sched/`, `sim/`, `model/`,
+//!   `dataset/`, `cluster/ring.rs`, `coordinator/batcher.rs`): no wall
+//!   clocks, no thread identity, no iteration over hash-ordered
+//!   containers, no Debug/`to_string` formatting of `f64`.
+//! * **wire zone** (`net/wire.rs`): every `TAG_*` constant and `Message`
+//!   variant present in both `encode` and `decode`; a diff adding a tag
+//!   must also bump `PROTOCOL_VERSION`.
+//! * **panic policy** (`net/`, `obs/expo.rs`, `coordinator/service.rs`):
+//!   no `.unwrap()` / `.expect(` — serving loops degrade, never abort.
+//! * **accounting** (everywhere): files mutating two or more of the
+//!   `submitted`/`completed`/`shed` ledger counters must reference the
+//!   `debug_assert_drain_invariant` helper.
+//!
+//! Findings can be suppressed with a waiver comment on (or immediately
+//! above) the offending line — `audit:allow(rule-id)` after `//`,
+//! followed by a mandatory reason. A waiver that suppresses nothing is
+//! itself a finding (`unused-waiver`), so the waiver set cannot rot;
+//! `--fix-waivers` deletes stale ones mechanically. `#[cfg(test)]` items
+//! are exempt from all rules.
+
+pub mod lexer;
+pub mod rules;
+pub mod zones;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use lexer::{tokenize, Lexed};
+use rules::Finding;
+
+/// All findings for one file, `rel` being `/`-separated and relative to
+/// the scan root.
+#[derive(Debug)]
+pub struct FileReport {
+    pub rel: String,
+    pub findings: Vec<Finding>,
+}
+
+/// A parsed waiver comment.
+#[derive(Debug)]
+struct Waiver {
+    rule: String,
+    /// Line the comment itself is on (the line `--fix-waivers` edits).
+    comment_line: u32,
+    /// Line whose findings it suppresses: its own line for a trailing
+    /// comment, the next code line for a standalone one.
+    target_line: u32,
+}
+
+/// Parse one line-comment body. `Some(Ok(...))` is a well-formed waiver,
+/// `Some(Err(line))` is a waiver missing its reason, `None` is an
+/// ordinary comment. Doc comments never match: their body starts with
+/// `/` or `!`, not with the `audit:allow` keyword.
+fn parse_waiver(text: &str) -> Option<Result<String, ()>> {
+    let t = text.trim_start();
+    let rest = t.strip_prefix("audit:allow(")?;
+    let close = rest.find(')')?;
+    let rule = &rest[..close];
+    if rule.is_empty()
+        || !rule.bytes().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'-')
+    {
+        return None;
+    }
+    let reason = rest[close + 1..].trim();
+    if reason.is_empty() {
+        return Some(Err(()));
+    }
+    Some(Ok(rule.to_string()))
+}
+
+/// Extract waivers from a lexed file, plus `waiver-syntax` findings for
+/// malformed ones (a waiver without a reason is a reviewable lie).
+fn collect_waivers(lexed: &Lexed) -> (Vec<Waiver>, Vec<Finding>) {
+    let mut code_lines: Vec<u32> = lexed.toks.iter().map(|t| t.line).collect();
+    code_lines.sort_unstable();
+    code_lines.dedup();
+    let mut waivers = Vec::new();
+    let mut syntax = Vec::new();
+    for c in &lexed.comments {
+        match parse_waiver(&c.text) {
+            None => {}
+            Some(Err(())) => syntax.push(Finding {
+                rule: "waiver-syntax",
+                line: c.line,
+                msg: "waiver needs a reason after the closing paren".to_string(),
+                hint: "write the why inline: audit:allow(rule-id) <reason>",
+            }),
+            Some(Ok(rule)) => {
+                let target_line = if code_lines.binary_search(&c.line).is_ok() {
+                    c.line
+                } else {
+                    code_lines
+                        .iter()
+                        .copied()
+                        .find(|l| *l > c.line)
+                        .unwrap_or(c.line)
+                };
+                waivers.push(Waiver { rule, comment_line: c.line, target_line });
+            }
+        }
+    }
+    (waivers, syntax)
+}
+
+/// Audit one file's source. Applies the zone-appropriate rules, then the
+/// waiver pass; returns findings sorted by line. Pure — no filesystem or
+/// git access (the diff-aware `wire-proto-bump` rule lives in
+/// [`audit_tree`]).
+pub fn audit_source(rel: &str, src: &str) -> Vec<Finding> {
+    let lexed = tokenize(src);
+    let mask = rules::test_mask(&lexed.toks);
+    let mut findings = Vec::new();
+    if zones::in_det_zone(rel) {
+        rules::rule_wallclock(&lexed.toks, &mask, &mut findings);
+        rules::rule_hash_iter(&lexed.toks, &mask, &mut findings);
+        if !zones::float_fmt_sanctioned(rel) {
+            rules::rule_float_fmt(&lexed.toks, &mask, &mut findings);
+        }
+    }
+    if zones::in_panic_zone(rel) {
+        rules::rule_panic_path(&lexed.toks, &mask, &mut findings);
+    }
+    rules::rule_acct(&lexed.toks, &mask, &mut findings);
+    if rel == zones::WIRE_FILE {
+        rules::rule_wire_parity(&lexed.toks, &mut findings);
+    }
+
+    let (waivers, syntax) = collect_waivers(&lexed);
+    let mut used = vec![false; waivers.len()];
+    let mut kept: Vec<Finding> = Vec::new();
+    for f in findings {
+        let mut waived = false;
+        for (wi, w) in waivers.iter().enumerate() {
+            if w.rule == f.rule && w.target_line == f.line {
+                used[wi] = true;
+                waived = true;
+            }
+        }
+        if !waived {
+            kept.push(f);
+        }
+    }
+    for (wi, w) in waivers.iter().enumerate() {
+        if !used[wi] {
+            kept.push(Finding {
+                rule: "unused-waiver",
+                line: w.comment_line,
+                msg: format!("waiver for `{}` suppresses nothing", w.rule),
+                hint: "delete the stale waiver, or run: tapesched audit --fix-waivers",
+            });
+        }
+    }
+    kept.extend(syntax);
+    kept.sort_by_key(|f| f.line);
+    kept
+}
+
+/// Recursively collect `*.rs` paths under `dir`, sorted at every level
+/// so the report order is byte-stable across platforms.
+fn walk(dir: &Path, root: &Path, out: &mut Vec<(String, PathBuf)>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, root, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, p));
+        }
+    }
+    Ok(())
+}
+
+/// Audit every `.rs` file under `root` (normally `rust/src`). Also runs
+/// the git-diff `wire-proto-bump` check when a git work tree is
+/// reachable from `root`; skipped silently otherwise. Only files with
+/// findings appear in the result, sorted by path.
+pub fn audit_tree(root: &Path) -> io::Result<Vec<FileReport>> {
+    let mut files = Vec::new();
+    walk(root, root, &mut files)?;
+    let mut reports: Vec<FileReport> = Vec::new();
+    for (rel, path) in files {
+        let src = fs::read_to_string(&path)?;
+        let findings = audit_source(&rel, &src);
+        if !findings.is_empty() {
+            reports.push(FileReport { rel, findings });
+        }
+    }
+    if let Some(f) = rules::rule_proto_bump(root) {
+        match reports.iter_mut().find(|r| r.rel == zones::WIRE_FILE) {
+            Some(r) => {
+                r.findings.push(f);
+                r.findings.sort_by_key(|f| f.line);
+            }
+            None => reports.push(FileReport {
+                rel: zones::WIRE_FILE.to_string(),
+                findings: vec![f],
+            }),
+        }
+        reports.sort_by(|a, b| a.rel.cmp(&b.rel));
+    }
+    Ok(reports)
+}
+
+/// Total finding count across a report set.
+pub fn total_findings(reports: &[FileReport]) -> usize {
+    reports.iter().map(|r| r.findings.len()).sum()
+}
+
+/// Render reports as `file:line: [rule] message` lines with an indented
+/// fix hint under each, plus a one-line summary.
+pub fn render(reports: &[FileReport]) -> String {
+    let mut out = String::new();
+    for r in reports {
+        for f in &r.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", r.rel, f.line, f.rule, f.msg));
+            out.push_str(&format!("    hint: {}\n", f.hint));
+        }
+    }
+    let n = total_findings(reports);
+    if n == 0 {
+        out.push_str("audit clean: 0 findings\n");
+    } else {
+        out.push_str(&format!("{n} finding(s)\n"));
+    }
+    out
+}
+
+/// Mechanically remove waivers reported as `unused-waiver`: a standalone
+/// waiver line is deleted outright, a trailing waiver is stripped back
+/// to the code before its `//`. Returns the number of waivers removed.
+pub fn fix_unused_waivers(root: &Path, reports: &[FileReport]) -> io::Result<usize> {
+    let mut removed = 0usize;
+    for r in reports {
+        let mut lines: Vec<u32> = r
+            .findings
+            .iter()
+            .filter(|f| f.rule == "unused-waiver")
+            .map(|f| f.line)
+            .collect();
+        if lines.is_empty() {
+            continue;
+        }
+        lines.sort_unstable();
+        lines.dedup();
+        let path = root.join(&r.rel);
+        let src = fs::read_to_string(&path)?;
+        let had_trailing_newline = src.ends_with('\n');
+        let mut out_lines: Vec<String> = src.lines().map(|l| l.to_string()).collect();
+        // Highest line first so earlier indices stay valid on deletion.
+        for line in lines.into_iter().rev() {
+            let idx = (line as usize).saturating_sub(1);
+            if idx >= out_lines.len() {
+                continue;
+            }
+            let l = &out_lines[idx];
+            let keep = match l.find("audit:allow(") {
+                Some(pos) => match l[..pos].rfind("//") {
+                    Some(slash) => l[..slash].trim_end().to_string(),
+                    None => String::new(),
+                },
+                None => continue,
+            };
+            if keep.trim().is_empty() {
+                out_lines.remove(idx);
+            } else {
+                out_lines[idx] = keep;
+            }
+            removed += 1;
+        }
+        let mut new_src = out_lines.join("\n");
+        if had_trailing_newline {
+            new_src.push('\n');
+        }
+        fs::write(&path, new_src)?;
+    }
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Fixture sources are built by joining lines, so no literal waiver
+    // comment appears in this file's own token stream.
+    fn waiver(rule: &str, reason: &str) -> String {
+        format!("// audit:allow({rule}) {reason}")
+    }
+
+    #[test]
+    fn trailing_waiver_suppresses_its_own_line() {
+        let src = format!(
+            "fn f() {{ let t = Instant::now(); {} }}",
+            waiver("wallclock", "startup banner only")
+        );
+        assert!(audit_source("replay/x.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn standalone_waiver_targets_next_code_line() {
+        let src = format!(
+            "fn f() {{\n    {}\n    let t = Instant::now();\n}}",
+            waiver("wallclock", "diagnostic timer")
+        );
+        assert!(audit_source("replay/x.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn wrong_rule_waiver_leaves_finding_and_flags_waiver() {
+        let src = format!(
+            "fn f() {{ let t = Instant::now(); {} }}",
+            waiver("hash-iter", "mismatched rule id")
+        );
+        let fs = audit_source("replay/x.rs", &src);
+        let rules: Vec<_> = fs.iter().map(|f| f.rule).collect();
+        assert!(rules.contains(&"wallclock"));
+        assert!(rules.contains(&"unused-waiver"));
+    }
+
+    #[test]
+    fn waiver_without_reason_is_a_syntax_finding() {
+        let src = format!("fn f() {{}}\n{}\n", "// audit:allow(wallclock)");
+        let fs = audit_source("replay/x.rs", &src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "waiver-syntax");
+    }
+
+    #[test]
+    fn doc_comments_never_parse_as_waivers() {
+        let src = "/// audit:allow(wallclock) not a real waiver\nfn f() {}\n";
+        assert!(audit_source("replay/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn zone_gating_applies_rules_per_path() {
+        let src = "fn f(m: &Mutex<u32>) { let t = Instant::now(); m.lock().unwrap(); }";
+        let det: Vec<_> =
+            audit_source("sched/x.rs", src).iter().map(|f| f.rule).collect::<Vec<_>>();
+        assert_eq!(det, vec!["wallclock"]);
+        let panic: Vec<_> =
+            audit_source("net/x.rs", src).iter().map(|f| f.rule).collect::<Vec<_>>();
+        assert_eq!(panic, vec!["panic-path"]);
+        assert!(audit_source("cluster/shard.rs", src).is_empty());
+    }
+}

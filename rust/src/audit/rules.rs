@@ -1,0 +1,680 @@
+//! The audit rules. Each rule walks the token stream from
+//! [`super::lexer`] and appends [`Finding`]s; none of them parses Rust —
+//! they match short token patterns (`Instant :: now`, `. unwrap (`),
+//! which is exactly as much syntax as the invariants need.
+//!
+//! Code under `#[cfg(test)]` is exempt everywhere: tests may use wall
+//! clocks, unwraps, and Debug formatting freely. The exemption is a
+//! token mask computed once per file by [`test_mask`].
+
+use super::lexer::{Tok, TokKind};
+
+/// One rule violation: rule id, 1-based line, message, and a fix hint.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub line: u32,
+    pub msg: String,
+    pub hint: &'static str,
+}
+
+/// Every rule id the engine can emit, in display order. Fixture tests
+/// iterate this to prove each rule has a firing and a non-firing case.
+pub const ALL_RULES: [&str; 9] = [
+    "wallclock",
+    "hash-iter",
+    "float-fmt",
+    "panic-path",
+    "acct-invariant",
+    "wire-tag-parity",
+    "wire-proto-bump",
+    "unused-waiver",
+    "waiver-syntax",
+];
+
+const HINT_WALLCLOCK: &str =
+    "thread time through SimClock / pass timestamps in as data; waive only for diagnostics";
+const HINT_HASH_ITER: &str =
+    "collect and sort keys first, or switch the container to BTreeMap/Vec";
+const HINT_FLOAT_FMT: &str =
+    "route floats through replay/report.rs formatters or encode bits via f64::to_bits";
+const HINT_PANIC: &str =
+    "serving loops must degrade: use util::sync recover helpers or match and shed";
+const HINT_ACCT: &str =
+    "call coordinator::debug_assert_drain_invariant at the drain/fold point, or waive with why";
+const HINT_PARITY: &str = "add the tag to the missing match so encode and decode stay exhaustive";
+const HINT_BUMP: &str = "bump PROTOCOL_VERSION in net/wire.rs alongside the new tag";
+
+fn is_open(t: &str) -> bool {
+    matches!(t, "(" | "[" | "{")
+}
+
+fn is_close(t: &str) -> bool {
+    matches!(t, ")" | "]" | "}")
+}
+
+/// Mark every token inside a `#[cfg(test)]`-attributed item. The scan
+/// finds the attribute, skips to its closing `]`, then swallows the
+/// following item up to its matching top-level `}` (or a `;` for
+/// declarations without a body).
+pub fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is_cfg_test = toks[i].text == "#"
+            && i + 6 < toks.len()
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks[i + 3].text == "("
+            && toks[i + 4].text == "test";
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // Closing `]` of the attribute (depth counted from the `cfg`).
+        let mut j = i + 2;
+        let mut depth = 0i32;
+        while j < toks.len() {
+            if is_open(&toks[j].text) {
+                depth += 1;
+            } else if is_close(&toks[j].text) {
+                depth -= 1;
+                if depth < 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        // Skip the attributed item: to matching `}` or a top-level `;`.
+        let mut k = j + 1;
+        let mut bdepth = 0i32;
+        while k < toks.len() {
+            match toks[k].text.as_str() {
+                "{" => bdepth += 1,
+                "}" => {
+                    bdepth -= 1;
+                    if bdepth == 0 {
+                        break;
+                    }
+                }
+                ";" if bdepth == 0 => break,
+                _ => {}
+            }
+            k += 1;
+        }
+        let end = (k + 1).min(toks.len());
+        for slot in &mut mask[i..end] {
+            *slot = true;
+        }
+        i = k + 1;
+    }
+    mask
+}
+
+/// determinism zone: no wall clocks, no thread identity.
+pub fn rule_wallclock(toks: &[Tok], mask: &[bool], findings: &mut Vec<Finding>) {
+    for i in 0..toks.len().saturating_sub(2) {
+        if mask[i] {
+            continue;
+        }
+        let (a, b, c) = (&toks[i], &toks[i + 1], &toks[i + 2]);
+        if b.text == "::" && c.text == "now" && (a.text == "Instant" || a.text == "SystemTime") {
+            findings.push(Finding {
+                rule: "wallclock",
+                line: a.line,
+                msg: format!("{}::now() in a deterministic module", a.text),
+                hint: HINT_WALLCLOCK,
+            });
+        }
+        if a.text == "thread" && b.text == "::" && c.text == "current" {
+            findings.push(Finding {
+                rule: "wallclock",
+                line: a.line,
+                msg: "thread::current() in a deterministic module".to_string(),
+                hint: HINT_WALLCLOCK,
+            });
+        }
+    }
+}
+
+const HASH_TYPES: [&str; 4] = ["HashMap", "HashSet", "FxHashMap", "FxHashSet"];
+const ORDER_METHODS: [&str; 9] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// Identifiers bound to a hash-ordered container in this file, found via
+/// type ascription (`x: FxHashMap<…>`) or construction assignment
+/// (`let x = HashMap::new()`).
+fn hash_bound_idents(toks: &[Tok], mask: &[bool]) -> Vec<String> {
+    let mut bound = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if mask[i] || t.kind != TokKind::Ident || !HASH_TYPES.contains(&t.text.as_str()) {
+            continue;
+        }
+        // ident ':' [& mut path-segments]* HashX
+        let mut j = i as isize - 1;
+        while j >= 0
+            && matches!(
+                toks[j as usize].text.as_str(),
+                "&" | "mut" | "::" | "collections" | "std" | "util" | "hash" | "crate"
+            )
+        {
+            j -= 1;
+        }
+        if j >= 1
+            && toks[j as usize].text == ":"
+            && toks[j as usize - 1].kind == TokKind::Ident
+        {
+            bound.push(toks[j as usize - 1].text.clone());
+            continue;
+        }
+        // let [mut] ident = HashX::new / ::default / ::with_capacity
+        let mut j = i as isize - 1;
+        while j >= 0 && matches!(toks[j as usize].text.as_str(), "::" | "collections" | "std") {
+            j -= 1;
+        }
+        if j >= 1 && toks[j as usize].text == "=" && toks[j as usize - 1].kind == TokKind::Ident {
+            bound.push(toks[j as usize - 1].text.clone());
+        }
+    }
+    bound
+}
+
+/// determinism zone: no iteration over hash-ordered containers.
+pub fn rule_hash_iter(toks: &[Tok], mask: &[bool], findings: &mut Vec<Finding>) {
+    let bound = hash_bound_idents(toks, mask);
+    for (i, t) in toks.iter().enumerate() {
+        if mask[i] || t.kind != TokKind::Ident || !bound.contains(&t.text) {
+            continue;
+        }
+        if i + 2 < toks.len()
+            && toks[i + 1].text == "."
+            && ORDER_METHODS.contains(&toks[i + 2].text.as_str())
+        {
+            findings.push(Finding {
+                rule: "hash-iter",
+                line: t.line,
+                msg: format!("iteration over hash-ordered `{}` in a deterministic module", t.text),
+                hint: HINT_HASH_ITER,
+            });
+        }
+        // for x in [&][mut] ident {
+        let mut j = i as isize - 1;
+        while j >= 0 && matches!(toks[j as usize].text.as_str(), "&" | "mut") {
+            j -= 1;
+        }
+        if j >= 0
+            && toks[j as usize].text == "in"
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "{"
+        {
+            findings.push(Finding {
+                rule: "hash-iter",
+                line: t.line,
+                msg: format!("for-loop over hash-ordered `{}` in a deterministic module", t.text),
+                hint: HINT_HASH_ITER,
+            });
+        }
+    }
+}
+
+const FMT_MACROS: [&str; 7] =
+    ["format", "print", "println", "eprint", "eprintln", "write", "writeln"];
+
+/// Identifiers known to be `f64` in this file, via ascription
+/// (`x: f64`, `x: &mut f64`) or `let x = … as f64`.
+fn float_idents(toks: &[Tok], mask: &[bool]) -> Vec<String> {
+    let mut floats = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if mask[i] || t.text != "f64" {
+            continue;
+        }
+        let mut j = i as isize - 1;
+        while j >= 0 && matches!(toks[j as usize].text.as_str(), "&" | "mut") {
+            j -= 1;
+        }
+        if j >= 1
+            && toks[j as usize].text == ":"
+            && toks[j as usize - 1].kind == TokKind::Ident
+        {
+            floats.push(toks[j as usize - 1].text.clone());
+        }
+        if i >= 1 && toks[i - 1].text == "as" {
+            // Walk back to the statement start; if it is a `let`, bind.
+            let mut j = i as isize - 2;
+            while j >= 0 && !matches!(toks[j as usize].text.as_str(), ";" | "{" | "}") {
+                j -= 1;
+            }
+            let mut k = (j + 1) as usize;
+            if k < toks.len() && toks[k].text == "let" {
+                k += 1;
+                if k < toks.len() && toks[k].text == "mut" {
+                    k += 1;
+                }
+                if k < toks.len() && toks[k].kind == TokKind::Ident {
+                    floats.push(toks[k].text.clone());
+                }
+            }
+        }
+    }
+    floats
+}
+
+/// Does a `{name:?}` placeholder for any known float appear in `lit`?
+fn debug_named_float(lit: &str, floats: &[String]) -> Option<String> {
+    let bytes = lit.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i] == b'{' {
+            let mut j = i + 1;
+            while j < bytes.len()
+                && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_')
+            {
+                j += 1;
+            }
+            if j > i + 1 && lit[j..].starts_with(":?}") {
+                let name = &lit[i + 1..j];
+                if floats.iter().any(|f| f == name) {
+                    return Some(name.to_string());
+                }
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// determinism zone: no Debug-formatting or `to_string()` on f64.
+pub fn rule_float_fmt(toks: &[Tok], mask: &[bool], findings: &mut Vec<Finding>) {
+    let floats = float_idents(toks, mask);
+    for (i, t) in toks.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        if t.kind == TokKind::Ident
+            && floats.contains(&t.text)
+            && i + 3 < toks.len()
+            && toks[i + 1].text == "."
+            && toks[i + 2].text == "to_string"
+            && toks[i + 3].text == "("
+        {
+            findings.push(Finding {
+                rule: "float-fmt",
+                line: t.line,
+                msg: format!("to_string() on f64 `{}` in a deterministic module", t.text),
+                hint: HINT_FLOAT_FMT,
+            });
+        }
+        if t.kind == TokKind::Ident
+            && FMT_MACROS.contains(&t.text.as_str())
+            && i + 2 < toks.len()
+            && toks[i + 1].text == "!"
+        {
+            // Scan the macro call: first string literal + ident args.
+            let mut j = i + 2;
+            let mut depth = 0i32;
+            let mut lit: Option<&str> = None;
+            let mut args: Vec<&str> = Vec::new();
+            while j < toks.len() {
+                let tj = &toks[j];
+                if is_open(&tj.text) {
+                    depth += 1;
+                } else if is_close(&tj.text) {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if tj.kind == TokKind::Str && lit.is_none() {
+                    lit = Some(&tj.text);
+                } else if tj.kind == TokKind::Ident {
+                    args.push(&tj.text);
+                }
+                j += 1;
+            }
+            if let Some(l) = lit {
+                if l.contains("{:?}") && args.iter().any(|a| floats.iter().any(|f| f == a)) {
+                    findings.push(Finding {
+                        rule: "float-fmt",
+                        line: t.line,
+                        msg: "Debug-formatting an f64 in a deterministic module".to_string(),
+                        hint: HINT_FLOAT_FMT,
+                    });
+                }
+                if let Some(name) = debug_named_float(l, &floats) {
+                    findings.push(Finding {
+                        rule: "float-fmt",
+                        line: t.line,
+                        msg: format!("Debug-formatting f64 `{name}` in a deterministic module"),
+                        hint: HINT_FLOAT_FMT,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// panic zone: `.unwrap()` / `.expect(` forbidden — serving loops degrade.
+pub fn rule_panic_path(toks: &[Tok], mask: &[bool], findings: &mut Vec<Finding>) {
+    for i in 1..toks.len().saturating_sub(1) {
+        if mask[i] {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind == TokKind::Ident
+            && (t.text == "unwrap" || t.text == "expect")
+            && toks[i - 1].text == "."
+            && toks[i + 1].text == "("
+        {
+            findings.push(Finding {
+                rule: "panic-path",
+                line: t.line,
+                msg: format!(".{}() in a serving-path module", t.text),
+                hint: HINT_PANIC,
+            });
+        }
+    }
+}
+
+const ACCT_COUNTERS: [&str; 3] = ["submitted", "completed", "shed"];
+
+/// accounting zone (all files): a file mutating two or more of the
+/// drain-ledger counters must reference `debug_assert_drain_invariant`.
+/// One finding per file, anchored at the first mutation site.
+pub fn rule_acct(toks: &[Tok], mask: &[bool], findings: &mut Vec<Finding>) {
+    let has_helper = toks.iter().any(|t| t.text == "debug_assert_drain_invariant");
+    let mut mutated: Vec<(&str, u32)> = Vec::new();
+    for i in 1..toks.len().saturating_sub(1) {
+        if mask[i] {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != TokKind::Ident
+            || !ACCT_COUNTERS.contains(&t.text.as_str())
+            || toks[i - 1].text != "."
+        {
+            continue;
+        }
+        let nxt = toks[i + 1].text.as_str();
+        let is_mut = matches!(nxt, "+=" | "-=" | "=")
+            || (nxt == "."
+                && i + 2 < toks.len()
+                && matches!(toks[i + 2].text.as_str(), "fetch_add" | "fetch_sub"));
+        if is_mut && !mutated.iter().any(|(n, _)| *n == t.text) {
+            let name: &str = ACCT_COUNTERS
+                .iter()
+                .find(|c| **c == t.text)
+                .copied()
+                .unwrap_or("submitted");
+            mutated.push((name, t.line));
+        }
+    }
+    if mutated.len() >= 2 && !has_helper {
+        let first = mutated.iter().map(|(_, l)| *l).min().unwrap_or(1);
+        let mut names: Vec<&str> = mutated.iter().map(|(n, _)| *n).collect();
+        names.sort_unstable();
+        findings.push(Finding {
+            rule: "acct-invariant",
+            line: first,
+            msg: format!(
+                "mutates [{}] but never references debug_assert_drain_invariant",
+                names.join(", ")
+            ),
+            hint: HINT_ACCT,
+        });
+    }
+}
+
+/// Token span `[open_brace, close_brace]` of the first `fn <name>` body.
+fn fn_body_span(toks: &[Tok], name: &str) -> Option<(usize, usize)> {
+    for i in 0..toks.len().saturating_sub(1) {
+        if toks[i].text != "fn" || toks[i + 1].text != name {
+            continue;
+        }
+        let mut j = i;
+        while j < toks.len() && toks[j].text != "{" {
+            j += 1;
+        }
+        let mut depth = 0i32;
+        let mut k = j;
+        while k < toks.len() {
+            match toks[k].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((j, k));
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+    }
+    None
+}
+
+/// wire zone (`net/wire.rs` only): every `TAG_*` constant and every
+/// `Message` enum variant must appear in both `fn encode` and
+/// `fn decode`, so the two match arms can never drift apart.
+pub fn rule_wire_parity(toks: &[Tok], findings: &mut Vec<Finding>) {
+    let mut names: Vec<(String, u32)> = Vec::new();
+    for i in 0..toks.len().saturating_sub(1) {
+        if toks[i].text == "const"
+            && toks[i + 1].kind == TokKind::Ident
+            && toks[i + 1].text.starts_with("TAG_")
+        {
+            names.push((toks[i + 1].text.clone(), toks[i + 1].line));
+        }
+    }
+    for i in 0..toks.len().saturating_sub(2) {
+        if toks[i].text != "enum" || toks[i + 1].text != "Message" {
+            continue;
+        }
+        let mut j = i;
+        while j < toks.len() && toks[j].text != "{" {
+            j += 1;
+        }
+        let mut depth = 0i32;
+        let mut k = j;
+        while k < toks.len() {
+            match toks[k].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {
+                    if depth == 1
+                        && toks[k].kind == TokKind::Ident
+                        && k + 1 < toks.len()
+                        && matches!(toks[k + 1].text.as_str(), "{" | "(" | ",")
+                    {
+                        names.push((toks[k].text.clone(), toks[k].line));
+                    }
+                }
+            }
+            k += 1;
+        }
+        break;
+    }
+    let enc = fn_body_span(toks, "encode");
+    let dec = fn_body_span(toks, "decode");
+    let (enc, dec) = match (enc, dec) {
+        (Some(e), Some(d)) => (e, d),
+        _ => {
+            findings.push(Finding {
+                rule: "wire-tag-parity",
+                line: 1,
+                msg: "cannot locate fn encode / fn decode bodies".to_string(),
+                hint: HINT_PARITY,
+            });
+            return;
+        }
+    };
+    let present = |name: &str, span: (usize, usize)| {
+        toks[span.0..=span.1].iter().any(|t| t.text == name)
+    };
+    for (name, line) in names {
+        let (in_enc, in_dec) = (present(&name, enc), present(&name, dec));
+        if in_enc != in_dec {
+            let missing = if in_enc { "decode" } else { "encode" };
+            findings.push(Finding {
+                rule: "wire-tag-parity",
+                line,
+                msg: format!("`{name}` missing from fn {missing}"),
+                hint: HINT_PARITY,
+            });
+        }
+    }
+}
+
+/// Cross-diff rule: run `git diff HEAD -- net/wire.rs` from the scan
+/// root; a diff adding a `const TAG_` line without touching
+/// `PROTOCOL_VERSION` is a protocol-compat hazard. Silently skipped when
+/// git is unavailable or the root is not a work tree.
+pub fn rule_proto_bump(root: &std::path::Path) -> Option<Finding> {
+    let out = std::process::Command::new("git")
+        .args(["diff", "HEAD", "--", super::zones::WIRE_FILE])
+        .current_dir(root)
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let diff = String::from_utf8_lossy(&out.stdout);
+    let mut added_tag = false;
+    let mut touched_ver = false;
+    for l in diff.lines() {
+        if l.starts_with('+') && l.contains("const TAG_") {
+            added_tag = true;
+        }
+        if (l.starts_with('+') || l.starts_with('-')) && l.contains("PROTOCOL_VERSION") {
+            touched_ver = true;
+        }
+    }
+    if added_tag && !touched_ver {
+        return Some(Finding {
+            rule: "wire-proto-bump",
+            line: 1,
+            msg: "new TAG_ constant without a PROTOCOL_VERSION bump in the same diff".to_string(),
+            hint: HINT_BUMP,
+        });
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::lexer::tokenize;
+
+    fn run<F>(src: &str, rule: F) -> Vec<Finding>
+    where
+        F: Fn(&[Tok], &[bool], &mut Vec<Finding>),
+    {
+        let lexed = tokenize(src);
+        let mask = test_mask(&lexed.toks);
+        let mut out = Vec::new();
+        rule(&lexed.toks, &mask, &mut out);
+        out
+    }
+
+    #[test]
+    fn cfg_test_items_are_masked() {
+        let src = "fn live() { let t = Instant::now(); }\n\
+                   #[cfg(test)]\nmod tests { fn t() { let u = Instant::now(); } }";
+        let hits = run(src, rule_wallclock);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 1);
+    }
+
+    #[test]
+    fn acct_requires_two_counters() {
+        // Only one counter mutated → no finding (replay/driver.rs case).
+        let one = "fn f(s: &mut S) { s.submitted += 1; }";
+        assert!(run(one, rule_acct).is_empty());
+        // Two counters, no helper → fires once at the first site.
+        let two = "fn f(s: &mut S) { s.submitted += 1; s.shed += n; }";
+        let hits = run(two, rule_acct);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "acct-invariant");
+        // Helper referenced anywhere in the file → clean.
+        let ok = "fn f(s: &mut S) { s.submitted += 1; s.shed += n; \
+                  debug_assert_drain_invariant(s.submitted, 0, s.shed, \"f\"); }";
+        assert!(run(ok, rule_acct).is_empty());
+    }
+
+    #[test]
+    fn acct_sees_atomic_mutation() {
+        let src = "fn f(m: &M) { m.submitted.fetch_add(1, O); m.completed.fetch_add(1, O); }";
+        assert_eq!(run(src, rule_acct).len(), 1);
+        // Comparison is not mutation.
+        let cmp = "fn f(s: &S) -> bool { s.submitted == s.completed }";
+        assert!(run(cmp, rule_acct).is_empty());
+    }
+
+    #[test]
+    fn hash_iter_binds_by_ascription_and_ctor() {
+        let asc = "fn f(m: &FxHashMap<u32, u32>) {}\nfn g(m: &M) { for k in &m.m {} }";
+        // `m` ascribed FxHashMap; plain field access not flagged, but
+        // direct iteration of the bound name is.
+        let src = "fn f(scores: &FxHashMap<u32, u32>) { for k in scores { use_it(k); } }";
+        assert_eq!(run(src, rule_hash_iter).len(), 1);
+        let ctor = "fn f() { let mut seen = HashSet::new(); for s in &seen {} }";
+        assert_eq!(run(ctor, rule_hash_iter).len(), 1);
+        let method = "fn f(idx: &FxHashMap<u32, u32>) { let v: Vec<_> = idx.keys().collect(); }";
+        assert_eq!(run(method, rule_hash_iter).len(), 1);
+        assert!(run(asc, rule_hash_iter).is_empty());
+        // Sorted-afterwards pattern on a Vec is fine.
+        let vec = "fn f(v: &Vec<u32>) { for x in v {} }";
+        assert!(run(vec, rule_hash_iter).is_empty());
+    }
+
+    #[test]
+    fn float_fmt_catches_debug_and_to_string() {
+        let dbg = "fn f(ratio: f64) { println!(\"{:?}\", ratio); }";
+        assert_eq!(run(dbg, rule_float_fmt).len(), 1);
+        let named = "fn f(ratio: f64) { println!(\"{ratio:?}\"); }";
+        assert_eq!(run(named, rule_float_fmt).len(), 1);
+        let ts = "fn f(x: u64) { let share = x as f64; let s = share.to_string(); }";
+        assert_eq!(run(ts, rule_float_fmt).len(), 1);
+        // Display formatting of ints and {} on floats are not flagged.
+        let ok = "fn f(n: u64, ratio: f64) { println!(\"{} {ratio}\", n); }";
+        assert!(run(ok, rule_float_fmt).is_empty());
+    }
+
+    #[test]
+    fn panic_path_matches_method_calls_only() {
+        let bad = "fn f(m: &Mutex<u32>) { let g = m.lock().unwrap(); }";
+        assert_eq!(run(bad, rule_panic_path).len(), 1);
+        let exp = "fn f(o: Option<u32>) { o.expect(\"present\"); }";
+        assert_eq!(run(exp, rule_panic_path).len(), 1);
+        // `unwrap_or_else` is a different identifier; free fn `expect` too.
+        let ok = "fn f(m: &Mutex<u32>) { let g = m.lock().unwrap_or_else(p); expect(1); }";
+        assert!(run(ok, rule_panic_path).is_empty());
+    }
+
+    #[test]
+    fn wire_parity_cross_checks_encode_and_decode() {
+        let src = "const TAG_A: u8 = 1;\nconst TAG_B: u8 = 2;\n\
+                   enum Message { Ping, Pong { x: u8 } }\n\
+                   fn encode() { t(TAG_A); t(TAG_B); m(Message::Ping); m(Message::Pong); }\n\
+                   fn decode() { t(TAG_A); m(Message::Ping); m(Message::Pong); }";
+        let lexed = tokenize(src);
+        let mut out = Vec::new();
+        rule_wire_parity(&lexed.toks, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].msg.contains("TAG_B"));
+        assert!(out[0].msg.contains("decode"));
+    }
+}

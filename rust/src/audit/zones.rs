@@ -1,0 +1,73 @@
+//! Module-zone classification: which rules apply to which files.
+//!
+//! Paths are relative to the scan root (normally `rust/src`), always
+//! `/`-separated. The zone map is deliberately a hard-coded table rather
+//! than configuration: the zones *are* repo policy, and changing them
+//! should be a reviewed diff here, not an env var.
+
+/// Directories whose entire contents are deterministic-by-contract:
+/// replay must be bit-reproducible, the DP/solver and simulator feed
+/// golden files, and the model/dataset layers feed both.
+const DET_DIRS: [&str; 5] = ["replay/", "sched/", "sim/", "model/", "dataset/"];
+
+/// Individual files in otherwise non-deterministic trees that still sit
+/// on the deterministic path (the rendezvous ring drives placement; the
+/// batcher orders requests into batches).
+const DET_FILES: [&str; 2] = ["cluster/ring.rs", "coordinator/batcher.rs"];
+
+/// Serving-path zones where a panic aborts a loop that must degrade
+/// instead: the whole wire layer, the exposition endpoint, and the
+/// coordinator dispatcher.
+const PANIC_DIRS: [&str; 1] = ["net/"];
+const PANIC_FILES: [&str; 2] = ["obs/expo.rs", "coordinator/service.rs"];
+
+/// Files sanctioned to format floats for humans: the QoS report writer
+/// (its JSON formatter is itself deterministic and golden-tested).
+/// `net/wire.rs` needs no entry — it is outside the determinism zone.
+const FLOAT_FMT_SANCTIONED: [&str; 1] = ["replay/report.rs"];
+
+/// The one file subject to the encode/decode tag-parity cross-check.
+pub const WIRE_FILE: &str = "net/wire.rs";
+
+/// True if `rel` is in the determinism zone (wallclock / hash-iter /
+/// float-fmt rules apply).
+pub fn in_det_zone(rel: &str) -> bool {
+    DET_DIRS.iter().any(|d| rel.starts_with(d)) || DET_FILES.contains(&rel)
+}
+
+/// True if `rel` is in the panic-policy zone (`unwrap`/`expect` banned).
+pub fn in_panic_zone(rel: &str) -> bool {
+    PANIC_DIRS.iter().any(|d| rel.starts_with(d)) || PANIC_FILES.contains(&rel)
+}
+
+/// True if `rel` may Debug-format / stringify floats even though it sits
+/// in the determinism zone.
+pub fn float_fmt_sanctioned(rel: &str) -> bool {
+    FLOAT_FMT_SANCTIONED.contains(&rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zone_membership() {
+        assert!(in_det_zone("replay/engine.rs"));
+        assert!(in_det_zone("sched/dp.rs"));
+        assert!(in_det_zone("cluster/ring.rs"));
+        assert!(in_det_zone("coordinator/batcher.rs"));
+        assert!(!in_det_zone("coordinator/service.rs"));
+        assert!(!in_det_zone("net/wire.rs"));
+        assert!(!in_det_zone("cluster/shard.rs"));
+
+        assert!(in_panic_zone("net/server.rs"));
+        assert!(in_panic_zone("net/wire.rs"));
+        assert!(in_panic_zone("obs/expo.rs"));
+        assert!(in_panic_zone("coordinator/service.rs"));
+        assert!(!in_panic_zone("coordinator/batcher.rs"));
+        assert!(!in_panic_zone("replay/engine.rs"));
+
+        assert!(float_fmt_sanctioned("replay/report.rs"));
+        assert!(!float_fmt_sanctioned("replay/engine.rs"));
+    }
+}

@@ -171,6 +171,7 @@ pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
     };
     for s in &shards {
         snap.routed_total += s.routed;
+        // audit:allow(acct-invariant) rollup folds sampled live snapshots whose legs are read at different instants; drain paths assert the exact ledger
         snap.submitted += s.metrics.submitted;
         snap.completed += s.metrics.completed;
         snap.rejected += s.metrics.rejected;

@@ -213,6 +213,26 @@ impl SharedMetrics {
     }
 }
 
+/// Assert the drain-ledger invariant at a quiescent point: every request
+/// that entered the system has left it, `submitted == completed + shed`.
+///
+/// Call this only where the counters are stable — after joins, at the
+/// end of a drain, on a folded dead-worker snapshot — never on a live
+/// snapshot, whose three legs are Relaxed loads taken at different
+/// instants and may transiently disagree. Callers whose `submitted` leg
+/// excludes shed requests (the replay engine's convention) pass
+/// `submitted + shed` for the first argument. The `tapesched audit`
+/// accounting rule requires any file mutating two or more of these
+/// counters to reference this helper.
+#[track_caller]
+pub fn debug_assert_drain_invariant(submitted: u64, completed: u64, shed: u64, context: &str) {
+    debug_assert!(
+        submitted == completed + shed,
+        "drain invariant violated in {context}: \
+         submitted={submitted} != completed={completed} + shed={shed}"
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -37,5 +37,5 @@ mod metrics;
 mod service;
 
 pub use batcher::{Batch, Batcher, BatcherConfig, PushOutcome};
-pub use metrics::{MetricsSnapshot, SharedMetrics};
+pub use metrics::{debug_assert_drain_invariant, MetricsSnapshot, SharedMetrics};
 pub use service::{Completion, Coordinator, CoordinatorConfig, ReadRequest, SubmitError};

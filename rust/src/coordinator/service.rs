@@ -42,13 +42,14 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{Batch, Batcher, BatcherConfig, PushOutcome};
-use super::metrics::{MetricsSnapshot, SharedMetrics};
+use super::metrics::{debug_assert_drain_invariant, MetricsSnapshot, SharedMetrics};
 use crate::model::{Instance, Tape};
 use crate::obs::{write_counter, write_gauge, write_type, Registry, TraceRecorder};
 use crate::resources::{ArmTimeline, CartridgeLedger, DrivePool, DriveStage};
 use crate::runtime::{BackendPolicy, SimpleDpBackend};
 use crate::sched::Scheduler;
 use crate::sim::{evaluate, Affinity, DriveParams, MountPlan};
+use crate::util::sync::{lock_recover, wait_recover, wait_timeout_recover};
 
 /// A client read request for one file on one tape.
 #[derive(Debug, Clone)]
@@ -305,7 +306,7 @@ impl Coordinator {
             return Err(SubmitError::Stopping);
         }
         {
-            let catalog = self.shared.catalog.lock().unwrap();
+            let catalog = lock_recover(&self.shared.catalog, "submit catalog");
             match catalog.get(&req.tape) {
                 None => return Err(SubmitError::UnknownTape),
                 Some(t) if req.file_index >= t.n_files() => {
@@ -319,14 +320,15 @@ impl Coordinator {
         // dispatcher needs that lock to pop, so a worker can never serve
         // the request before its submit time is registered.
         let cap_hit = {
-            let mut batcher = self.shared.batcher.lock().unwrap();
+            let mut batcher = lock_recover(&self.shared.batcher, "submit batcher");
             match batcher.push(&req.tape, req.file_index, req.id, now) {
                 PushOutcome::Busy => {
                     self.shared.metrics.on_reject(1);
                     return Err(SubmitError::Busy);
                 }
                 outcome => {
-                    self.shared.submit_times.lock().unwrap().insert(req.id, now);
+                    lock_recover(&self.shared.submit_times, "submit times")
+                        .insert(req.id, now);
                     self.shared.metrics.on_submit(1);
                     outcome.ready()
                 }
@@ -340,7 +342,7 @@ impl Coordinator {
 
     /// Register a tape (or replace its catalog entry) while running.
     pub fn register_tape(&self, tape: Tape) {
-        self.shared.catalog.lock().unwrap().insert(tape.name.clone(), tape);
+        lock_recover(&self.shared.catalog, "register_tape").insert(tape.name.clone(), tape);
     }
 
     /// Remove a tape from the catalog so subsequent submits for it fail
@@ -354,11 +356,12 @@ impl Coordinator {
         // Hold the batcher lock across the backlog check and the catalog
         // removal: a queued request observed as zero backlog here cannot
         // reappear, because every push needs this lock.
-        let batcher = self.shared.batcher.lock().unwrap();
+        let batcher = lock_recover(&self.shared.batcher, "deregister_tape batcher");
         if batcher.tape_backlog(name) > 0 {
             return false;
         }
-        let removed = self.shared.catalog.lock().unwrap().remove(name).is_some();
+        let removed =
+            lock_recover(&self.shared.catalog, "deregister_tape catalog").remove(name).is_some();
         drop(batcher);
         removed
     }
@@ -430,14 +433,33 @@ impl Coordinator {
     pub fn finish(mut self) -> (Vec<Completion>, MetricsSnapshot) {
         self.shared.stopping.store(true, Ordering::SeqCst);
         self.shared.wakeup.notify_all();
+        // A panicked thread already aborted its own work; finish still
+        // returns whatever the healthy threads completed, so the drain
+        // degrades instead of cascading the panic into the caller.
+        let mut degraded = false;
         if let Some(d) = self.dispatcher.take() {
-            d.join().expect("dispatcher panicked");
+            if d.join().is_err() {
+                eprintln!("tapesched: dispatcher panicked; returning partial drain");
+                degraded = true;
+            }
         }
         for w in self.workers.drain(..) {
-            w.join().expect("worker panicked");
+            if w.join().is_err() {
+                eprintln!("tapesched: drive worker panicked; returning partial drain");
+                degraded = true;
+            }
         }
-        let completions = std::mem::take(&mut *self.shared.completions.lock().unwrap());
-        (completions, self.shared.metrics.snapshot())
+        let completions =
+            std::mem::take(&mut *lock_recover(&self.shared.completions, "finish completions"));
+        let snap = self.shared.metrics.snapshot();
+        // Every thread is joined, so the ledger is quiescent: anything
+        // accepted either completed or was shed (`rejected` never entered
+        // the system). A panicked thread may have dropped work on the
+        // floor, so a degraded drain skips the exact check.
+        if !degraded {
+            debug_assert_drain_invariant(snap.submitted, snap.completed, snap.shed, "finish");
+        }
+        (completions, snap)
     }
 }
 
@@ -448,7 +470,8 @@ fn dispatcher_loop(shared: Arc<Shared>, txs: Vec<Sender<Job>>, cfg: CoordinatorC
         // Stage 0: a parked batch whose cartridge has freed goes first
         // (FIFO by free time — it was popped from the batcher earlier).
         if exclusive {
-            let unparked = shared.resources.lock().unwrap().ledger.pop_ready();
+            let unparked =
+                lock_recover(&shared.resources, "dispatcher unpark").ledger.pop_ready();
             if let Some((_tape, parked)) = unparked {
                 let unparked_at = Instant::now();
                 shared.metrics.on_cartridge_wait(
@@ -462,7 +485,7 @@ fn dispatcher_loop(shared: Arc<Shared>, txs: Vec<Sender<Job>>, cfg: CoordinatorC
             }
         }
         let batch = {
-            let mut b = shared.batcher.lock().unwrap();
+            let mut b = lock_recover(&shared.batcher, "dispatcher batcher");
             match b.pop_ready(Instant::now(), stopping) {
                 Some(batch) => Some(batch),
                 None if stopping && b.pending() == 0 => {
@@ -472,14 +495,20 @@ fn dispatcher_loop(shared: Arc<Shared>, txs: Vec<Sender<Job>>, cfg: CoordinatorC
                     // blocking on the wakeup workers notify on every
                     // release (the timeout bounds a lost-notify race
                     // between the waiter check and the wait).
-                    if !exclusive || shared.resources.lock().unwrap().ledger.no_waiters() {
+                    if !exclusive
+                        || lock_recover(&shared.resources, "dispatcher drain check")
+                            .ledger
+                            .no_waiters()
+                    {
                         break;
                     }
-                    let guard = shared.batcher.lock().unwrap();
-                    let _ = shared
-                        .wakeup
-                        .wait_timeout(guard, Duration::from_millis(5))
-                        .unwrap();
+                    let guard = lock_recover(&shared.batcher, "dispatcher drain wait");
+                    let _ = wait_timeout_recover(
+                        &shared.wakeup,
+                        guard,
+                        Duration::from_millis(5),
+                        "dispatcher drain wait",
+                    );
                     None
                 }
                 None => {
@@ -490,10 +519,12 @@ fn dispatcher_loop(shared: Arc<Shared>, txs: Vec<Sender<Job>>, cfg: CoordinatorC
                     let wait = deadline
                         .map(|d| d.saturating_duration_since(Instant::now()))
                         .unwrap_or(Duration::from_millis(20));
-                    let (_b, _timeout) = shared
-                        .wakeup
-                        .wait_timeout(b, wait.min(Duration::from_millis(50)))
-                        .unwrap();
+                    let _b = wait_timeout_recover(
+                        &shared.wakeup,
+                        b,
+                        wait.min(Duration::from_millis(50)),
+                        "dispatcher batch wait",
+                    );
                     None
                 }
             }
@@ -504,7 +535,7 @@ fn dispatcher_loop(shared: Arc<Shared>, txs: Vec<Sender<Job>>, cfg: CoordinatorC
             // another drive (or already has earlier batches waiting)
             // parks FIFO until the cartridge frees.
             if exclusive {
-                let mut res = shared.resources.lock().unwrap();
+                let mut res = lock_recover(&shared.resources, "dispatcher park");
                 if !res.ledger.available(&batch.tape) {
                     let tape = batch.tape.clone();
                     res.ledger.park(tape, ParkedBatch { batch, parked_at: sealed_at });
@@ -533,22 +564,30 @@ fn place_and_send(
     unparked_at: Instant,
 ) -> bool {
     let instance = {
-        let catalog = shared.catalog.lock().unwrap();
-        match catalog.get(&batch.tape) {
-            Some(tape) => {
-                Instance::from_tape(tape, &batch.multiplicities(), cfg.drive.uturn_bytes())
-                    .expect("batch requests validated at submit")
-            }
-            None => {
+        let catalog = lock_recover(&shared.catalog, "dispatcher catalog");
+        let built = catalog.get(&batch.tape).map(|tape| {
+            Instance::from_tape(tape, &batch.multiplicities(), cfg.drive.uturn_bytes())
+        });
+        match built {
+            Some(Ok(instance)) => instance,
+            missing_or_invalid => {
                 // The tape was deregistered between a submit's validation
-                // and its push (rehoming race): shed the batch rather
-                // than panicking on the missing entry. `on_shed` (not
-                // `on_reject`) keeps the in-flight accounting honest —
-                // these requests were accepted but will never complete.
+                // and its push (rehoming race), or its catalog entry was
+                // replaced by one the batch no longer fits (`register_tape`
+                // mid-flight): shed the batch rather than panicking in the
+                // dispatcher. `on_shed` (not `on_reject`) keeps the
+                // in-flight accounting honest — these requests were
+                // accepted but will never complete.
+                if let Some(Err(e)) = missing_or_invalid {
+                    eprintln!(
+                        "tapesched: shedding batch for {}: stale instance ({e:?})",
+                        batch.tape
+                    );
+                }
                 drop(catalog);
                 let n = batch.n_requests() as u64;
                 {
-                    let mut submit = shared.submit_times.lock().unwrap();
+                    let mut submit = lock_recover(&shared.submit_times, "dispatcher shed");
                     for (_, ids) in &batch.by_file {
                         for id in ids {
                             submit.remove(id);
@@ -560,7 +599,9 @@ fn place_and_send(
                 // never release it either: re-arm any remaining waiters
                 // or they would wedge the drain.
                 if cfg.exclusive_tapes {
-                    shared.resources.lock().unwrap().ledger.renote(&batch.tape);
+                    lock_recover(&shared.resources, "dispatcher shed renote")
+                        .ledger
+                        .renote(&batch.tape);
                 }
                 return true;
             }
@@ -571,7 +612,7 @@ fn place_and_send(
     // same critical section. Workers signal `resource_freed` after every
     // batch, so this cannot wedge while any drive is still serving.
     let (drive_idx, plan, evicted_hold) = {
-        let mut res = shared.resources.lock().unwrap();
+        let mut res = lock_recover(&shared.resources, "dispatcher placement");
         loop {
             if let Some((i, plan)) = res.drives.pick(cfg.affinity, &batch.tape) {
                 res.tick += 1;
@@ -601,7 +642,7 @@ fn place_and_send(
                 res.drives.set_stage(i, DriveStage::Executing);
                 break (i, plan, evicted_hold);
             }
-            res = shared.resource_freed.wait(res).unwrap();
+            res = wait_recover(&shared.resource_freed, res, "dispatcher placement wait");
         }
     };
     // Remount accounting only when the placement policy can produce hits
@@ -656,7 +697,7 @@ fn worker_loop(
                 MountPlan::Hit => 0,
             };
             let now_us = shared.wall_us();
-            let r = shared.arms.lock().unwrap().reserve(now_us, dur_us);
+            let r = lock_recover(&shared.arms, "worker arm reserve").reserve(now_us, dur_us);
             shared.metrics.on_arm_wait(r.wait_us as f64 / 1e6);
             arm_wait_us = r.wait_us;
             if r.wait_us > 0 {
@@ -669,7 +710,9 @@ fn worker_loop(
         // not a sleep — only the hold is timed, matching the replay
         // engine's unmount-done event.
         if let Some(evicted) = job.evicted.take() {
-            shared.resources.lock().unwrap().ledger.release_unthreaded(&evicted);
+            lock_recover(&shared.resources, "worker evict release")
+                .ledger
+                .release_unthreaded(&evicted);
             shared.resource_freed.notify_all();
             shared.wakeup.notify_all();
         }
@@ -685,8 +728,8 @@ fn worker_loop(
         // shared accounting path (`Batch::request_service_times`), with
         // the mount charge the placement stage determined (0 on a hit).
         {
-            let mut submit = shared.submit_times.lock().unwrap();
-            let mut completions = shared.completions.lock().unwrap();
+            let mut submit = lock_recover(&shared.submit_times, "worker completion");
+            let mut completions = lock_recover(&shared.completions, "worker completion");
             // Span boundaries on the wall-µs grid of `arm_origin`. The
             // dispatcher does drive placement *after* any cartridge park,
             // so the measured waits are re-laid in the canonical stage
@@ -734,7 +777,7 @@ fn worker_loop(
         // stage (and the dispatcher's batcher sleep, so parked batches
         // are re-checked promptly).
         {
-            let mut res = shared.resources.lock().unwrap();
+            let mut res = lock_recover(&shared.resources, "worker release");
             if cfg.exclusive_tapes {
                 match cfg.affinity {
                     Affinity::Lru => res.ledger.release_threaded(&job.batch.tape),

@@ -51,8 +51,15 @@
 //! - [`dataset`] — IN2P3-format loader, calibrated synthetic generator, stats.
 //! - [`analysis`] — performance profiles (Dolan–Moré) and CSV reports.
 //! - [`bench`] — the in-crate benchmark framework used by `cargo bench`.
+//! - [`audit`] — the in-crate static-analysis pass (`tapesched audit`)
+//!   enforcing determinism, wire-parity, panic-policy, and accounting
+//!   invariants over these very sources.
+
+#![forbid(unsafe_code)]
+#![deny(rust_2018_idioms)]
 
 pub mod analysis;
+pub mod audit;
 pub mod bench;
 pub mod cli;
 pub mod cluster;

@@ -13,6 +13,7 @@
 //! - `worker`         — networked fleet: serve one shard for a coordinator
 //! - `rpc-tax`        — in-process vs loopback-networked QoS comparison
 //! - `spans`          — per-stage latency breakdown of a `--trace-out` dump
+//! - `audit`          — determinism & invariant lint over the source tree
 //!
 //! Run `tapesched <cmd> --help` equivalent: flags are documented below in
 //! each handler (and in README.md).
@@ -25,6 +26,7 @@ use std::time::Duration;
 use tapesched::analysis::{
     cartridge_summary, mount_summary, qos_comparison, report::run_evaluation, shard_summary,
 };
+use tapesched::audit;
 use tapesched::cli::Args;
 use tapesched::cluster::{Cluster, ClusterConfig, ClusterMetricsSnapshot, HashRing};
 use tapesched::coordinator::{BatcherConfig, Completion, Coordinator, CoordinatorConfig};
@@ -70,6 +72,7 @@ fn main() {
         "worker" => cmd_worker(&args),
         "rpc-tax" => cmd_rpc_tax(&args),
         "spans" => cmd_spans(&args),
+        "audit" => cmd_audit(&args),
         "help" | "--help" | "-h" => usage(),
         other => {
             eprintln!("error: unknown command `{other}`");
@@ -121,6 +124,7 @@ COMMANDS:
                   [--data DIR] [--out FILE.json] [--kill-after M]
                   [--push-metrics] [--push-ms N]
   spans           --in FILE.jsonl [--check]
+  audit           [--fix-waivers] [PATH]
   help
 
 Without --data, commands use the built-in calibrated generator (seed 0x12P32021).
@@ -186,7 +190,17 @@ clients connected with the push-fed gauge then track in-flight locally
 and skip one MetricsPull round trip per submit. `rpc-tax --push-metrics`
 measures exactly that recovery: the loopback closed loop runs once in
 pull mode and once in push mode, and the report gains a push_report
-section with both submits/s figures."
+section with both submits/s figures.
+`audit` runs the built-in determinism & invariant linter over the crate
+sources (default PATH: rust/src, or src when run from rust/): wall-clock
+reads and hash-order iteration in the deterministic replay/scheduling
+zone, unwrap/expect on the networked request path, encode/decode tag
+parity in net/wire.rs, and drain-invariant references in files that
+mutate the submitted/completed/shed ledger. Findings print as
+file:line: [rule-id] with a one-line hint; suppress a line with
+`audit:allow(rule-id) reason` in a `//` comment (unused waivers are
+themselves findings; --fix-waivers deletes them). Exit 0 clean, 1 with
+findings. CI runs this gate before clippy (scripts/ci.sh)."
     );
 }
 
@@ -1509,4 +1523,48 @@ fn cmd_spans(args: &Args) {
         }
     }
     print!("{}", render_breakdown(&breakdown(&spans)));
+}
+
+fn cmd_audit(args: &Args) {
+    args.reject_unknown(&["fix-waivers"]);
+    if args.positional.len() > 1 {
+        eprintln!("error: audit takes at most one PATH (the source root to scan)");
+        std::process::exit(2);
+    }
+    let root = match args.positional.first() {
+        Some(p) => PathBuf::from(p),
+        // Default to the crate sources regardless of whether we run from
+        // the repo root or from rust/.
+        None => ["rust/src", "src"]
+            .into_iter()
+            .map(PathBuf::from)
+            .find(|p| p.is_dir())
+            .unwrap_or_else(|| {
+                eprintln!("error: neither rust/src nor src exists here; pass PATH explicitly");
+                std::process::exit(2);
+            }),
+    };
+    if !root.is_dir() {
+        eprintln!("error: {} is not a directory", root.display());
+        std::process::exit(2);
+    }
+    let run = |root: &Path| {
+        audit::audit_tree(root).unwrap_or_else(|e| {
+            eprintln!("error scanning {}: {e}", root.display());
+            std::process::exit(1);
+        })
+    };
+    let mut reports = run(&root);
+    if args.has("fix-waivers") {
+        let removed = audit::fix_unused_waivers(&root, &reports).unwrap_or_else(|e| {
+            eprintln!("error rewriting waivers under {}: {e}", root.display());
+            std::process::exit(1);
+        });
+        eprintln!("audit: removed {removed} unused waiver(s)");
+        reports = run(&root);
+    }
+    print!("{}", audit::render(&reports));
+    if audit::total_findings(&reports) > 0 {
+        std::process::exit(1);
+    }
 }

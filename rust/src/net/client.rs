@@ -28,6 +28,7 @@ use std::sync::{Arc, Mutex};
 use crate::cluster::{rollup, ClusterMetricsSnapshot, ShardLoad};
 use crate::coordinator::{Completion, ReadRequest, SubmitError};
 use crate::replay::RequestSink;
+use crate::util::sync::lock_recover;
 
 use super::frame::{read_frame, write_frame};
 use super::wire::{self, Message, Role, SubmitOutcome, PROTOCOL_VERSION};
@@ -132,7 +133,7 @@ impl RemoteCluster {
     /// One request/response round trip. The connection lock is held
     /// across the pair so concurrent callers cannot interleave frames.
     fn call(&self, msg: &Message) -> io::Result<Message> {
-        let mut conn = self.conn.lock().unwrap();
+        let mut conn = lock_recover(&self.conn, "client connection");
         write_frame(&mut *conn, &wire::encode(msg))?;
         match read_frame(&mut *conn)? {
             Some(payload) => Ok(wire::decode(&payload)?),
@@ -200,7 +201,7 @@ impl RemoteCluster {
 
     /// Tell the coordinator to shut the fleet down without draining.
     pub fn shutdown(self) -> io::Result<()> {
-        let mut conn = self.conn.lock().unwrap();
+        let mut conn = lock_recover(&self.conn, "client connection");
         write_frame(&mut *conn, &wire::encode(&Message::Shutdown))?;
         Ok(())
     }

@@ -65,13 +65,23 @@ impl LoopbackFleet {
     /// Join every thread after the fleet was drained or shut down.
     /// Worker threads that were deliberately killed report their I/O
     /// error; that is expected, so per-thread results are returned rather
-    /// than unwrapped.
+    /// than unwrapped. A thread that *panicked* (rather than erroring)
+    /// is reported as an `io::Error` too — the caller sees a failed leg,
+    /// not a cascaded abort.
     pub fn join(self) -> (io::Result<()>, Vec<io::Result<()>>) {
-        let server = self.server.join().expect("coordinator server panicked");
+        fn flatten(joined: std::thread::Result<io::Result<()>>, who: &str) -> io::Result<()> {
+            match joined {
+                Ok(r) => r,
+                Err(_) => {
+                    Err(io::Error::new(io::ErrorKind::Other, format!("{who} thread panicked")))
+                }
+            }
+        }
+        let server = flatten(self.server.join(), "coordinator server");
         let workers = self
             .workers
             .into_iter()
-            .map(|w| w.join().expect("worker thread panicked"))
+            .map(|w| flatten(w.join(), "worker"))
             .collect();
         (server, workers)
     }

@@ -59,10 +59,12 @@ use crate::cluster::{
     merge_snapshots, partition_catalog, HashRing, ShardBackend, ShardSet,
 };
 use crate::coordinator::{
-    Completion, CoordinatorConfig, MetricsSnapshot, ReadRequest, SubmitError,
+    debug_assert_drain_invariant, Completion, CoordinatorConfig, MetricsSnapshot, ReadRequest,
+    SubmitError,
 };
 use crate::model::Tape;
 use crate::obs::{write_counter, write_gauge, write_type, ExpositionServer, Registry};
+use crate::util::sync::{lock_recover, read_recover, wait_timeout_recover, write_recover};
 
 use super::frame::{read_frame, write_frame};
 use super::wire::{self, Message, Role, SubmitOutcome, PROTOCOL_VERSION};
@@ -146,6 +148,7 @@ fn fold_dead_era(
     let mut synth = last.unwrap_or_default();
     synth.submitted = accepted_era;
     synth.shed = accepted_era.saturating_sub(synth.completed);
+    debug_assert_drain_invariant(synth.submitted, synth.completed, synth.shed, "fold_dead_era");
     match carry {
         Some(c) => merge_snapshots(&c, &synth),
         None => synth,
@@ -206,6 +209,14 @@ impl WorkerShard {
         }
     }
 
+    /// The error a round trip reports when the connection slot emptied
+    /// between the liveness check and the send (a concurrent `die`). The
+    /// callers' `Err` handling treats it exactly like a mid-request
+    /// hangup, so the shard degrades to its carried accounting.
+    fn conn_lost_error() -> io::Error {
+        io::Error::new(io::ErrorKind::NotConnected, "worker connection lost")
+    }
+
     fn round_trip(conn: &mut TcpStream, msg: &Message) -> io::Result<Message> {
         send(conn, msg)?;
         match recv(conn)? {
@@ -220,7 +231,7 @@ impl WorkerShard {
 
 impl ShardBackend for WorkerShard {
     fn submit(&self, req: ReadRequest) -> Result<(), SubmitError> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state, "shard submit");
         if st.drained {
             return Err(SubmitError::Stopping);
         }
@@ -232,7 +243,10 @@ impl ShardBackend for WorkerShard {
             tape: req.tape,
             file_index: req.file_index as u64,
         };
-        let reply = WorkerShard::round_trip(st.conn.as_mut().unwrap(), &msg);
+        let reply = match st.conn.as_mut() {
+            Some(conn) => WorkerShard::round_trip(conn, &msg),
+            None => Err(WorkerShard::conn_lost_error()),
+        };
         let outcome = match reply {
             Ok(Message::SubmitResult { outcome }) => outcome,
             Ok(_) | Err(_) => {
@@ -256,11 +270,14 @@ impl ShardBackend for WorkerShard {
     }
 
     fn metrics(&self) -> MetricsSnapshot {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state, "shard metrics");
         if st.drained || st.conn.is_none() {
             return WorkerShard::carry_or_default(&st);
         }
-        let reply = WorkerShard::round_trip(st.conn.as_mut().unwrap(), &Message::MetricsPull);
+        let reply = match st.conn.as_mut() {
+            Some(conn) => WorkerShard::round_trip(conn, &Message::MetricsPull),
+            None => Err(WorkerShard::conn_lost_error()),
+        };
         match reply {
             Ok(Message::MetricsReply { loads }) => {
                 let m = loads
@@ -282,7 +299,7 @@ impl ShardBackend for WorkerShard {
     }
 
     fn drain(&self) -> (Vec<Completion>, MetricsSnapshot) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state, "shard drain");
         if st.drained {
             return (Vec::new(), WorkerShard::carry_or_default(&st));
         }
@@ -291,7 +308,10 @@ impl ShardBackend for WorkerShard {
             // Already died: the carry IS the shard's final accounting.
             return (Vec::new(), WorkerShard::carry_or_default(&st));
         }
-        let reply = WorkerShard::round_trip(st.conn.as_mut().unwrap(), &Message::Drain);
+        let reply = match st.conn.as_mut() {
+            Some(conn) => WorkerShard::round_trip(conn, &Message::Drain),
+            None => Err(WorkerShard::conn_lost_error()),
+        };
         match reply {
             Ok(Message::DrainResult { completions, loads }) => {
                 let fin = loads
@@ -340,19 +360,20 @@ impl ServerState {
     /// report `ShardDown` rather than wedging the fleet).
     fn fleet_ready(members: &BTreeMap<usize, Arc<WorkerShard>>, n_shards: usize) -> bool {
         members.len() == n_shards
-            && members.values().all(|w| w.state.lock().unwrap().ever_live)
+            && members.values().all(|w| lock_recover(&w.state, "fleet_ready").ever_live)
     }
 
     fn wait_fleet_ready(&self) {
-        let mut members = self.members.lock().unwrap();
+        let mut members = lock_recover(&self.members, "wait_fleet_ready");
         while !ServerState::fleet_ready(&members, self.n_shards)
             && !self.done.load(Ordering::SeqCst)
         {
-            let (guard, _) = self
-                .fleet_ready
-                .wait_timeout(members, Duration::from_millis(50))
-                .unwrap();
-            members = guard;
+            members = wait_timeout_recover(
+                &self.fleet_ready,
+                members,
+                Duration::from_millis(50),
+                "wait_fleet_ready",
+            );
         }
     }
 }
@@ -457,7 +478,7 @@ fn handle_connection(state: Arc<ServerState>, mut stream: TcpStream) -> io::Resu
 /// the handshake and mark the shard live.
 fn handle_worker(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<()> {
     let (id, shard_arc, fresh) = {
-        let mut members = state.members.lock().unwrap();
+        let mut members = lock_recover(&state.members, "worker join");
         let mut pick = None;
         for id in 0..state.n_shards {
             match members.get(&id) {
@@ -466,7 +487,7 @@ fn handle_worker(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<(
                     break;
                 }
                 Some(ws) => {
-                    let mut st = ws.state.lock().unwrap();
+                    let mut st = lock_recover(&ws.state, "worker join pick");
                     if st.conn.is_none() && !st.drained && !st.joining {
                         st.joining = true;
                         pick = Some(id);
@@ -488,14 +509,15 @@ fn handle_worker(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<(
                 let kill_after =
                     state.kill.and_then(|(s, n)| (s == id).then_some(n));
                 let ws = Arc::new(WorkerShard::new(id, kill_after));
-                ws.state.lock().unwrap().joining = true;
+                lock_recover(&ws.state, "worker join fresh").joining = true;
                 members.insert(id, Arc::clone(&ws));
                 (id, ws, true)
             }
         }
     };
     if fresh {
-        state.set.write().unwrap().attach(id, Arc::clone(&shard_arc) as Arc<dyn ShardBackend>);
+        write_recover(&state.set, "worker attach")
+            .attach(id, Arc::clone(&shard_arc) as Arc<dyn ShardBackend>);
     }
     let handshake = (|| -> io::Result<()> {
         send(
@@ -521,7 +543,7 @@ fn handle_worker(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<(
         }
     })();
     {
-        let mut st = shard_arc.state.lock().unwrap();
+        let mut st = lock_recover(&shard_arc.state, "worker handshake finish");
         st.joining = false;
         if handshake.is_ok() {
             st.conn = Some(stream);
@@ -546,7 +568,7 @@ fn handle_client(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<(
         match recv(&mut stream)? {
             None => return Ok(()),
             Some(Message::Submit { id, tape, file_index }) => {
-                let result = state.set.read().unwrap().submit(ReadRequest {
+                let result = read_recover(&state.set, "client submit").submit(ReadRequest {
                     id,
                     tape,
                     file_index: file_index as usize,
@@ -559,11 +581,11 @@ fn handle_client(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<(
                 )?;
             }
             Some(Message::MetricsPull) => {
-                let loads = state.set.read().unwrap().loads();
+                let loads = read_recover(&state.set, "client pull").loads();
                 send(&mut stream, &Message::MetricsReply { loads })?;
             }
             Some(Message::Drain) => {
-                let (completions, loads) = state.set.read().unwrap().drain();
+                let (completions, loads) = read_recover(&state.set, "client drain").drain();
                 send(&mut stream, &Message::DrainResult { completions, loads })?;
                 // Reply first, then stop the accept loop: the frame is in
                 // the socket before the process can exit.
@@ -572,9 +594,9 @@ fn handle_client(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<(
             }
             Some(Message::Shutdown) => {
                 // Abandon without draining: tell live workers to exit.
-                let members = state.members.lock().unwrap();
+                let members = lock_recover(&state.members, "client shutdown");
                 for ws in members.values() {
-                    let mut st = ws.state.lock().unwrap();
+                    let mut st = lock_recover(&ws.state, "client shutdown shard");
                     if let Some(conn) = st.conn.as_mut() {
                         send(conn, &Message::Shutdown).ok();
                     }
@@ -614,10 +636,10 @@ fn handle_pusher(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<(
             None | Some(Message::Shutdown) => return Ok(()),
             Some(Message::MetricsPush { loads }) => {
                 {
-                    let members = state.members.lock().unwrap();
+                    let members = lock_recover(&state.members, "pusher absorb");
                     for load in loads {
                         if let Some(ws) = members.get(&load.shard) {
-                            let mut st = ws.state.lock().unwrap();
+                            let mut st = lock_recover(&ws.state, "pusher absorb shard");
                             if st.conn.is_some() && !st.drained {
                                 st.pushed = Some(load.metrics);
                             }
@@ -644,13 +666,13 @@ fn handle_pusher(state: Arc<ServerState>, mut stream: TcpStream) -> io::Result<(
 /// the push path). `routed` is reported as 0: the subscriber stream and
 /// the scrape page consume the metrics sums, not the router counters.
 fn advisory_loads(state: &ServerState) -> Vec<crate::cluster::ShardLoad> {
-    let members = state.members.lock().unwrap();
+    let members = lock_recover(&state.members, "advisory loads");
     members
         .iter()
         .map(|(id, ws)| crate::cluster::ShardLoad {
             shard: *id,
             routed: 0,
-            metrics: WorkerShard::advisory(&ws.state.lock().unwrap()),
+            metrics: WorkerShard::advisory(&lock_recover(&ws.state, "advisory loads shard")),
         })
         .collect()
 }
@@ -683,11 +705,11 @@ fn handle_subscriber(state: Arc<ServerState>, mut stream: TcpStream) -> io::Resu
 fn register_fleet_exposition(state: &Arc<ServerState>, registry: &Registry) {
     let state = Arc::clone(state);
     registry.register(move |buf| {
-        let members = state.members.lock().unwrap();
+        let members = lock_recover(&state.members, "fleet scrape");
         let shards: Vec<(usize, bool, MetricsSnapshot)> = members
             .iter()
             .map(|(id, ws)| {
-                let st = ws.state.lock().unwrap();
+                let st = lock_recover(&ws.state, "fleet scrape shard");
                 (*id, st.conn.is_some(), WorkerShard::advisory(&st))
             })
             .collect();

@@ -247,15 +247,15 @@ impl<'a> Reader<'a> {
     }
 
     fn u16(&mut self) -> Result<u16, WireError> {
-        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap())) // audit:allow(panic-path) take(n) returned exactly n bytes; infallible conversion
     }
 
     fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap())) // audit:allow(panic-path) take(n) returned exactly n bytes; infallible conversion
     }
 
     fn u64(&mut self) -> Result<u64, WireError> {
-        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap())) // audit:allow(panic-path) take(n) returned exactly n bytes; infallible conversion
     }
 
     fn f64(&mut self) -> Result<f64, WireError> {
@@ -292,7 +292,7 @@ fn put_tape(out: &mut Vec<u8>, t: &Tape) {
     }
 }
 
-fn get_tape(r: &mut Reader) -> Result<Tape, WireError> {
+fn get_tape(r: &mut Reader<'_>) -> Result<Tape, WireError> {
     let name = r.str()?;
     let n = r.u32()? as usize;
     let mut files = Vec::with_capacity(n.min(1 << 16));
@@ -321,7 +321,7 @@ fn put_config(out: &mut Vec<u8>, c: &CoordinatorConfig) {
     put_bool(out, c.exclusive_tapes);
 }
 
-fn get_config(r: &mut Reader) -> Result<CoordinatorConfig, WireError> {
+fn get_config(r: &mut Reader<'_>) -> Result<CoordinatorConfig, WireError> {
     let n_drives = r.u32()? as usize;
     let window = std::time::Duration::from_nanos(r.u64()?);
     let max_batch = r.u32()? as usize;
@@ -369,7 +369,7 @@ fn put_snapshot(out: &mut Vec<u8>, m: &MetricsSnapshot) {
     put_f64(out, m.p99_latency_s);
 }
 
-fn get_snapshot(r: &mut Reader) -> Result<MetricsSnapshot, WireError> {
+fn get_snapshot(r: &mut Reader<'_>) -> Result<MetricsSnapshot, WireError> {
     Ok(MetricsSnapshot {
         submitted: r.u64()?,
         completed: r.u64()?,
@@ -401,7 +401,7 @@ fn put_loads(out: &mut Vec<u8>, loads: &[ShardLoad]) {
     }
 }
 
-fn get_loads(r: &mut Reader) -> Result<Vec<ShardLoad>, WireError> {
+fn get_loads(r: &mut Reader<'_>) -> Result<Vec<ShardLoad>, WireError> {
     let n = r.u32()? as usize;
     let mut loads = Vec::with_capacity(n.min(1 << 12));
     for _ in 0..n {
@@ -423,7 +423,7 @@ fn put_completions(out: &mut Vec<u8>, cs: &[Completion]) {
     }
 }
 
-fn get_completions(r: &mut Reader) -> Result<Vec<Completion>, WireError> {
+fn get_completions(r: &mut Reader<'_>) -> Result<Vec<Completion>, WireError> {
     let n = r.u32()? as usize;
     let mut cs = Vec::with_capacity(n.min(1 << 16));
     for _ in 0..n {

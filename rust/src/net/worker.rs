@@ -37,6 +37,7 @@ use std::time::Duration;
 use crate::cluster::ShardLoad;
 use crate::coordinator::{Coordinator, ReadRequest, SubmitError};
 use crate::sched::scheduler_by_name;
+use crate::util::sync::lock_recover;
 
 use super::frame::{read_frame, write_frame};
 use super::wire::{self, Message, Role, SubmitOutcome, PROTOCOL_VERSION};
@@ -122,7 +123,7 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
             // Clean close or a dead coordinator: discard un-drained work —
             // the server side sheds this shard's accepted batches.
             Ok(None) | Err(_) => {
-                if let Some(c) = coordinator.lock().unwrap().take() {
+                if let Some(c) = lock_recover(&coordinator, "worker serve").take() {
                     let _ = c.finish();
                 }
                 stop_pusher(pusher);
@@ -131,7 +132,7 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
         };
         match msg {
             Message::Submit { id, tape, file_index } => {
-                let result = match &*coordinator.lock().unwrap() {
+                let result = match &*lock_recover(&coordinator, "worker serve") {
                     Some(c) => c.submit(ReadRequest {
                         id,
                         tape,
@@ -145,7 +146,7 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
                 )?;
             }
             Message::MetricsPull => {
-                let metrics = match &*coordinator.lock().unwrap() {
+                let metrics = match &*lock_recover(&coordinator, "worker serve") {
                     Some(c) => c.metrics(),
                     None => Default::default(),
                 };
@@ -159,7 +160,7 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
                 )?;
             }
             Message::Drain => {
-                let (completions, metrics) = match coordinator.lock().unwrap().take() {
+                let (completions, metrics) = match lock_recover(&coordinator, "worker serve").take() {
                     Some(c) => c.finish(),
                     None => (Vec::new(), Default::default()),
                 };
@@ -176,7 +177,7 @@ pub fn run_worker_on(mut stream: TcpStream) -> io::Result<()> {
                 return serve_drained(stream, shard);
             }
             Message::Shutdown => {
-                if let Some(c) = coordinator.lock().unwrap().take() {
+                if let Some(c) = lock_recover(&coordinator, "worker serve").take() {
                     let _ = c.finish();
                 }
                 stop_pusher(pusher);
@@ -269,7 +270,7 @@ fn push_loop(
             std::thread::sleep(Duration::from_millis(slice));
             slept += slice;
         }
-        let metrics = match &*coordinator.lock().unwrap() {
+        let metrics = match &*lock_recover(&coordinator, "worker pusher") {
             Some(c) => c.metrics(),
             None => return Ok(()), // drained under us
         };

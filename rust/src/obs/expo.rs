@@ -39,13 +39,13 @@ impl Registry {
     where
         F: Fn(&mut String) + Send + Sync + 'static,
     {
-        self.sources.lock().unwrap().push(Box::new(f));
+        crate::util::sync::lock_recover(&self.sources, "registry register").push(Box::new(f));
     }
 
     /// Render the whole page (the body of a scrape response).
     pub fn render(&self) -> String {
         let mut buf = String::new();
-        for f in self.sources.lock().unwrap().iter() {
+        for f in crate::util::sync::lock_recover(&self.sources, "registry render").iter() {
             f(&mut buf);
         }
         buf

@@ -33,6 +33,7 @@ pub struct VirtualClock {
 
 impl VirtualClock {
     pub fn new() -> VirtualClock {
+        // audit:allow(wallclock) anchor only: virtual time is the integer us counter below; the origin is never read by scheduling
         VirtualClock { origin: Instant::now(), now_us: 0 }
     }
 

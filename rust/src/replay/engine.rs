@@ -52,7 +52,9 @@ use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use crate::cluster::HashRing;
-use crate::coordinator::{Batch, Batcher, BatcherConfig, PushOutcome};
+use crate::coordinator::{
+    debug_assert_drain_invariant, Batch, Batcher, BatcherConfig, PushOutcome,
+};
 use crate::model::{Instance, Tape};
 use crate::obs::TraceRecorder;
 use crate::resources::{ArmPool, CartridgeLedger, DrivePool, DriveStage};
@@ -813,6 +815,16 @@ fn simulate_impl(
         eng.stats.submitted, eng.stats.completed,
         "in-flight invariant: submitted − completed must be 0 at drain"
     );
+    // Same ledger through the shared helper (the audit accounting rule's
+    // anchor). The engine's `submitted` counts *accepted* requests only —
+    // shed ones never enter it — so the helper's ledger-side `submitted`
+    // is accepted + shed.
+    debug_assert_drain_invariant(
+        eng.stats.submitted + eng.stats.shed,
+        eng.stats.completed,
+        eng.stats.shed,
+        "replay drain",
+    );
     assert_eq!(
         eng.next_id,
         eng.stats.submitted + eng.stats.shed + eng.phantoms,
@@ -1021,6 +1033,7 @@ impl<'a> Engine<'a> {
         let inst = Instance::from_tape(tape, &batch.multiplicities(), self.cfg.drive.uturn_bytes())
             .expect("replayed requests are validated against the catalog");
 
+        // audit:allow(wallclock) measures real scheduler compute for the sched_wall_s diagnostic; never feeds virtual time or any golden field
         let wall = Instant::now();
         let sched = self.policy.schedule(&inst);
         let wall_s = wall.elapsed().as_secs_f64();

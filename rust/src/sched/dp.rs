@@ -533,6 +533,7 @@ mod tests {
 impl<'a> DpSolver<'a> {
     /// Number of memoized cells (diagnostics).
     pub(crate) fn memo_len(&self) -> usize {
+        // audit:allow(hash-iter) order-insensitive sum over memo layers; diagnostics only, never serialized into a golden artifact
         self.layers
             .values()
             .map(|l| l.cells.iter().filter(|c| c.0 != UNSET).count())

@@ -4,6 +4,7 @@
 pub mod hash;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// Convert seconds to the virtual-time unit (integer µs, rounded to
 /// nearest, negatives clamped to zero). This is the **one** µs-grid

@@ -1,0 +1,135 @@
+//! Poison-tolerant lock helpers for serving paths.
+//!
+//! The panic policy (enforced by `tapesched audit`) forbids
+//! `.unwrap()`/`.expect(` in `net/`, `obs/expo.rs`, and
+//! `coordinator/service.rs`: a panicked worker must degrade the service,
+//! not abort it. A poisoned `Mutex`/`RwLock` is exactly that case — some
+//! thread died mid-critical-section — and for this crate's state
+//! (metrics counters, connection slots, membership tables) the data is
+//! still structurally valid: every critical section leaves the guarded
+//! value consistent at each await-free step, so the right response is to
+//! log once and keep serving, not to cascade the panic through every
+//! thread that touches the lock.
+//!
+//! These helpers centralize that choice: they recover the guard from a
+//! [`PoisonError`] and emit one `stderr` line so the original panic
+//! (already printed by the runtime) is traceable to its blast radius.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+fn note_poison(what: &str, context: &str) {
+    eprintln!("tapesched: {what} poisoned in {context}; recovering and continuing");
+}
+
+/// Lock `m`, recovering (with a logged note) if a holder panicked.
+pub fn lock_recover<'a, T>(m: &'a Mutex<T>, context: &str) -> MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            note_poison("mutex", context);
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Read-lock `l`, recovering if a writer panicked.
+pub fn read_recover<'a, T>(l: &'a RwLock<T>, context: &str) -> RwLockReadGuard<'a, T> {
+    match l.read() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            note_poison("rwlock(read)", context);
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Write-lock `l`, recovering if a holder panicked.
+pub fn write_recover<'a, T>(l: &'a RwLock<T>, context: &str) -> RwLockWriteGuard<'a, T> {
+    match l.write() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            note_poison("rwlock(write)", context);
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Wait on `cv`, recovering the guard if the mutex was poisoned while
+/// parked. Spurious-wakeup semantics are unchanged: callers keep their
+/// usual predicate loop.
+pub fn wait_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    context: &str,
+) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => {
+            note_poison("condvar mutex", context);
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Timed wait on `cv` with poison recovery. The timeout flag is dropped:
+/// every call site in this crate re-checks its predicate and deadline in
+/// a loop, so "woke by timeout" and "woke spuriously" are handled the
+/// same way.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+    context: &str,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, _)) => g,
+        Err(poisoned) => {
+            note_poison("condvar mutex", context);
+            poisoned.into_inner().0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let g = lock_recover(&m, "test");
+        assert_eq!(*g, 7);
+    }
+
+    #[test]
+    fn rwlock_recover_survives_poison() {
+        let l = Arc::new(RwLock::new(3u32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(*read_recover(&l, "test"), 3);
+        *write_recover(&l, "test") = 4;
+        assert_eq!(*read_recover(&l, "test"), 4);
+    }
+
+    #[test]
+    fn wait_timeout_recover_returns_after_deadline() {
+        let m = Mutex::new(false);
+        let cv = Condvar::new();
+        let g = lock_recover(&m, "test");
+        let g = wait_timeout_recover(&cv, g, Duration::from_millis(5), "test");
+        assert!(!*g);
+    }
+}

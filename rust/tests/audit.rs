@@ -1,0 +1,297 @@
+//! Fixture tests for `tapesched audit`: every rule id has a firing and a
+//! non-firing case, waivers suppress and rot loudly, the tokenizer
+//! survives the classic lexing traps, and — the gate CI leans on — the
+//! shipped source tree audits clean.
+//!
+//! Fixture sources live under `tests/audit/`; they are data, not
+//! compiled code (cargo only builds top-level `tests/*.rs`), so they can
+//! contain deliberate violations.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use tapesched::audit::rules::{rule_proto_bump, ALL_RULES};
+use tapesched::audit::{audit_source, audit_tree, fix_unused_waivers, render, total_findings};
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/audit").join(name);
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("fixture {name}: {e}"))
+}
+
+/// Rule ids fired when `name` is audited as if it lived at `rel`.
+fn fired(rel: &str, name: &str) -> Vec<&'static str> {
+    audit_source(rel, &fixture(name)).into_iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn wallclock_fires_on_every_clock_read() {
+    assert_eq!(
+        fired("replay/fixture.rs", "wallclock_hit.rs"),
+        ["wallclock", "wallclock", "wallclock"],
+        "Instant::now, SystemTime::now, thread::current"
+    );
+}
+
+#[test]
+fn wallclock_spares_carried_instants_and_tests() {
+    assert!(fired("replay/fixture.rs", "wallclock_miss.rs").is_empty());
+}
+
+#[test]
+fn wallclock_only_applies_in_the_determinism_zone() {
+    assert!(fired("analysis/fixture.rs", "wallclock_hit.rs").is_empty());
+    // Single det-zone files, not just directories, are covered.
+    assert!(!fired("cluster/ring.rs", "wallclock_hit.rs").is_empty());
+    assert!(!fired("coordinator/batcher.rs", "wallclock_hit.rs").is_empty());
+}
+
+#[test]
+fn hash_iter_fires_on_method_and_for_loop() {
+    assert_eq!(fired("sched/fixture.rs", "hash_iter_hit.rs"), ["hash-iter", "hash-iter"]);
+}
+
+#[test]
+fn hash_iter_spares_btreemap_and_point_lookups() {
+    assert!(fired("sched/fixture.rs", "hash_iter_miss.rs").is_empty());
+}
+
+#[test]
+fn float_fmt_fires_on_debug_and_to_string() {
+    assert_eq!(
+        fired("model/fixture.rs", "float_fmt_hit.rs"),
+        ["float-fmt", "float-fmt", "float-fmt"],
+        "positional {{:?}}, named {{x:?}}, .to_string()"
+    );
+}
+
+#[test]
+fn float_fmt_spares_fixed_precision_and_bits() {
+    assert!(fired("model/fixture.rs", "float_fmt_miss.rs").is_empty());
+}
+
+#[test]
+fn float_fmt_is_sanctioned_in_the_report_module() {
+    // replay/report.rs is the one deterministic formatter allowed to
+    // format floats — same violating source, zero findings there.
+    assert!(fired("replay/report.rs", "float_fmt_hit.rs").is_empty());
+}
+
+#[test]
+fn panic_path_fires_on_unwrap_and_expect() {
+    assert_eq!(
+        fired("net/fixture.rs", "panic_path_hit.rs"),
+        ["panic-path", "panic-path", "panic-path"]
+    );
+    // The two single-file panic-zone members are covered too.
+    assert!(!fired("obs/expo.rs", "panic_path_hit.rs").is_empty());
+    assert!(!fired("coordinator/service.rs", "panic_path_hit.rs").is_empty());
+}
+
+#[test]
+fn panic_path_spares_degrading_code_and_tests() {
+    assert!(fired("net/fixture.rs", "panic_path_miss.rs").is_empty());
+}
+
+#[test]
+fn panic_path_only_applies_in_the_panic_zone() {
+    assert!(fired("replay/fixture.rs", "panic_path_hit.rs").is_empty());
+}
+
+#[test]
+fn acct_fires_once_per_file_at_first_mutation() {
+    let findings = audit_source("cluster/fixture.rs", &fixture("acct_hit.rs"));
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].rule, "acct-invariant");
+    assert_eq!(findings[0].line, 11, "anchored at the first counter mutation");
+}
+
+#[test]
+fn acct_spares_single_counters_and_helper_callers() {
+    assert!(fired("cluster/fixture.rs", "acct_miss.rs").is_empty());
+}
+
+#[test]
+fn acct_applies_outside_every_named_zone() {
+    // The accounting rule is global — a util file is not exempt.
+    assert_eq!(fired("util/fixture.rs", "acct_hit.rs"), ["acct-invariant"]);
+}
+
+#[test]
+fn wire_parity_fires_on_one_sided_tags_and_variants() {
+    let findings = audit_source("net/wire.rs", &fixture("wire_parity_hit.rs"));
+    let rules: Vec<_> = findings.iter().map(|f| f.rule).collect();
+    assert_eq!(rules, ["wire-tag-parity", "wire-tag-parity"]);
+    let msgs: Vec<_> = findings.iter().map(|f| f.msg.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("TAG_DRAIN") && m.contains("decode")));
+    assert!(msgs.iter().any(|m| m.contains("Shutdown") && m.contains("encode")));
+}
+
+#[test]
+fn wire_parity_spares_balanced_codecs_and_other_files() {
+    assert!(fired("net/wire.rs", "wire_parity_miss.rs").is_empty());
+    // The same lopsided codec under any other path is not checked.
+    assert!(fired("net/codec.rs", "wire_parity_hit.rs").is_empty());
+}
+
+#[test]
+fn waivers_suppress_trailing_and_standalone() {
+    assert!(fired("replay/fixture.rs", "waived.rs").is_empty());
+}
+
+#[test]
+fn unused_waivers_are_findings() {
+    let findings = audit_source("replay/fixture.rs", &fixture("unused_waiver.rs"));
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].rule, "unused-waiver");
+    assert_eq!(findings[0].line, 5, "anchored at the waiver comment itself");
+}
+
+#[test]
+fn reasonless_waivers_are_syntax_findings_and_do_not_suppress() {
+    let rules = fired("replay/fixture.rs", "waiver_syntax.rs");
+    assert!(rules.contains(&"waiver-syntax"));
+    assert!(rules.contains(&"wallclock"), "a malformed waiver suppresses nothing");
+}
+
+#[test]
+fn cfg_test_items_are_exempt_in_every_zone() {
+    assert!(fired("replay/fixture.rs", "cfg_test_exempt.rs").is_empty());
+    assert!(fired("net/fixture.rs", "cfg_test_exempt.rs").is_empty());
+}
+
+#[test]
+fn tokenizer_traps_do_not_produce_findings() {
+    assert!(fired("replay/fixture.rs", "tokenizer_edges.rs").is_empty());
+    assert!(fired("net/fixture.rs", "tokenizer_edges.rs").is_empty());
+}
+
+#[test]
+fn every_rule_id_has_fixture_coverage() {
+    let mut covered: Vec<&str> = Vec::new();
+    covered.extend(fired("replay/fixture.rs", "wallclock_hit.rs"));
+    covered.extend(fired("sched/fixture.rs", "hash_iter_hit.rs"));
+    covered.extend(fired("model/fixture.rs", "float_fmt_hit.rs"));
+    covered.extend(fired("net/fixture.rs", "panic_path_hit.rs"));
+    covered.extend(fired("cluster/fixture.rs", "acct_hit.rs"));
+    covered.extend(fired("net/wire.rs", "wire_parity_hit.rs"));
+    covered.extend(fired("replay/fixture.rs", "unused_waiver.rs"));
+    covered.extend(fired("replay/fixture.rs", "waiver_syntax.rs"));
+    // wire-proto-bump is diff-driven; proto_bump_needs_a_version_change
+    // covers it against a scratch git repo.
+    covered.push("wire-proto-bump");
+    for rule in ALL_RULES {
+        assert!(covered.contains(&rule), "no fixture fires `{rule}`");
+    }
+}
+
+/// Scratch tree under `CARGO_TARGET_TMPDIR` seeded with fixture files.
+fn scratch_tree(tag: &str, files: &[(&str, &str)]) -> PathBuf {
+    let root = Path::new(env!("CARGO_TARGET_TMPDIR")).join(format!("audit_{tag}"));
+    if root.exists() {
+        fs::remove_dir_all(&root).expect("clear scratch tree");
+    }
+    for (rel, fix) in files {
+        let dst = root.join(rel);
+        fs::create_dir_all(dst.parent().expect("parent")).expect("mkdir");
+        fs::write(&dst, fixture(fix)).expect("seed fixture");
+    }
+    root
+}
+
+#[test]
+fn audit_tree_reports_per_file_sorted_and_renders() {
+    let root = scratch_tree(
+        "tree",
+        &[
+            ("replay/bad.rs", "wallclock_hit.rs"),
+            ("replay/good.rs", "wallclock_miss.rs"),
+            ("util/stale.rs", "unused_waiver.rs"),
+        ],
+    );
+    let reports = audit_tree(&root).expect("scan scratch tree");
+    let rels: Vec<_> = reports.iter().map(|r| r.rel.as_str()).collect();
+    assert_eq!(rels, ["replay/bad.rs", "util/stale.rs"], "clean files are omitted, order stable");
+    assert_eq!(total_findings(&reports), 4);
+    let page = render(&reports);
+    assert!(page.contains("replay/bad.rs:6: [wallclock]"), "page:\n{page}");
+    assert!(page.contains("    hint: "));
+    assert!(page.contains("4 finding(s)\n"));
+}
+
+#[test]
+fn clean_tree_renders_the_zero_line() {
+    let root = scratch_tree("clean", &[("replay/good.rs", "wallclock_miss.rs")]);
+    let reports = audit_tree(&root).expect("scan scratch tree");
+    assert_eq!(total_findings(&reports), 0);
+    assert_eq!(render(&reports), "audit clean: 0 findings\n");
+}
+
+#[test]
+fn fix_waivers_deletes_standalone_and_strips_trailing() {
+    let root = scratch_tree("fix", &[("util/stale.rs", "unused_waiver.rs")]);
+    // Add a trailing unused waiver by hand next to the standalone one.
+    let extra = root.join("util/trailing.rs");
+    let waiver = format!("// audit:allow({}) stale trailing reason", "wallclock");
+    fs::write(&extra, format!("pub fn f() -> u64 {{\n    7 {waiver}\n}}\n")).expect("seed");
+    let reports = audit_tree(&root).expect("scan");
+    assert_eq!(total_findings(&reports), 2);
+    let removed = fix_unused_waivers(&root, &reports).expect("rewrite");
+    assert_eq!(removed, 2);
+    let after = audit_tree(&root).expect("rescan");
+    assert_eq!(total_findings(&after), 0, "fixed tree audits clean");
+    let stale = fs::read_to_string(root.join("util/stale.rs")).expect("read back");
+    assert!(!stale.contains("audit:allow"));
+    let trailing = fs::read_to_string(&extra).expect("read back");
+    assert_eq!(trailing, "pub fn f() -> u64 {\n    7\n}\n", "code before the waiver survives");
+}
+
+#[test]
+fn proto_bump_needs_a_version_change() {
+    let git = |root: &Path, args: &[&str]| {
+        std::process::Command::new("git")
+            .args(args)
+            .current_dir(root)
+            .env("GIT_AUTHOR_NAME", "audit")
+            .env("GIT_AUTHOR_EMAIL", "audit@test")
+            .env("GIT_COMMITTER_NAME", "audit")
+            .env("GIT_COMMITTER_EMAIL", "audit@test")
+            .output()
+    };
+    let root = scratch_tree("proto", &[("net/wire.rs", "wire_parity_miss.rs")]);
+    let ok = git(&root, &["init", "-q"]).map(|o| o.status.success()).unwrap_or(false);
+    if !ok {
+        eprintln!("skipping proto-bump test: git unavailable");
+        return;
+    }
+    assert!(git(&root, &["add", "."]).expect("git add").status.success());
+    assert!(git(&root, &["commit", "-q", "-m", "seed"]).expect("git commit").status.success());
+
+    // Unchanged tree: no finding.
+    assert!(rule_proto_bump(&root).is_none());
+
+    // Adding a tag without touching PROTOCOL_VERSION is the hazard.
+    let wire = root.join("net/wire.rs");
+    let mut src = fs::read_to_string(&wire).expect("read wire");
+    src.push_str("pub const TAG_EXTRA: u8 = 9;\n");
+    fs::write(&wire, &src).expect("grow wire");
+    let finding = rule_proto_bump(&root).expect("new tag without bump must fire");
+    assert_eq!(finding.rule, "wire-proto-bump");
+
+    // Bumping the version in the same diff clears it.
+    let bumped = src.replace("PROTOCOL_VERSION: u16 = 1", "PROTOCOL_VERSION: u16 = 2");
+    assert_ne!(bumped, src, "fixture must carry a PROTOCOL_VERSION to bump");
+    fs::write(&wire, bumped).expect("bump version");
+    assert!(rule_proto_bump(&root).is_none());
+}
+
+#[test]
+fn the_shipped_tree_audits_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let reports = audit_tree(&src).expect("scan shipped sources");
+    assert_eq!(
+        total_findings(&reports),
+        0,
+        "shipped tree must audit clean (zero findings, zero unused waivers):\n{}",
+        render(&reports)
+    );
+}

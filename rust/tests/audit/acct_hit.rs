@@ -1,0 +1,14 @@
+// Fixture: mutates two legs of the submitted/completed/shed ledger and
+// never references debug_assert_drain_invariant — one `acct-invariant`
+// finding, anchored at the first mutation.
+pub struct Stats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+}
+
+pub fn absorb(into: &mut Stats, from: &Stats) {
+    into.submitted += from.submitted;
+    into.completed += from.completed;
+    into.shed += from.shed;
+}

@@ -1,0 +1,22 @@
+// Fixture: accounting-clean files. Mutating a single ledger leg does not
+// demand the invariant (there is nothing to balance it against), and a
+// file that mutates several legs but calls the helper is sanctioned.
+pub struct Stats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+}
+
+pub fn count_submit(s: &mut Stats) {
+    s.submitted += 1;
+}
+
+pub fn drain(s: &mut Stats, done: u64, dropped: u64) {
+    s.completed += done;
+    s.shed += dropped;
+    debug_assert_drain_invariant(s.submitted, s.completed, s.shed, "fixture drain");
+}
+
+fn debug_assert_drain_invariant(submitted: u64, completed: u64, shed: u64, context: &str) {
+    debug_assert!(submitted == completed + shed, "{context}");
+}

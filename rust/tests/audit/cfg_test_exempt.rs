@@ -1,0 +1,20 @@
+// Fixture: every class of violation, all inside #[cfg(test)] items —
+// the test mask must exempt them all, in any zone.
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    use std::time::Instant;
+
+    #[test]
+    fn tests_do_whatever_they_want() {
+        let t = Instant::now();
+        let m: HashMap<u32, u32> = HashMap::new();
+        for (k, v) in m.iter() {
+            assert!(k <= v);
+        }
+        let q: Mutex<f64> = Mutex::new(0.0);
+        let x: f64 = *q.lock().unwrap();
+        assert!(format!("{x:?}").len() > 1 || t.elapsed().as_nanos() > 0);
+    }
+}

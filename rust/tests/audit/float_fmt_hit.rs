@@ -1,0 +1,9 @@
+// Fixture: Debug / to_string formatting of f64 in a deterministic
+// module. All three sites must fire `float-fmt` — Debug float output is
+// shortest-round-trip and not byte-stable across toolchains.
+pub fn report(p99: f64) -> String {
+    let positional = format!("latency {:?}", p99);
+    let named = format!("latency {p99:?}");
+    let stringified = p99.to_string();
+    format!("{positional} {named} {stringified}")
+}

@@ -1,0 +1,12 @@
+// Fixture: sanctioned float formatting in a deterministic module —
+// fixed-precision placeholders and bit-exact encodings only.
+pub fn report(p99: f64) -> String {
+    let fixed = format!("latency {p99:.6}");
+    let bits = p99.to_bits();
+    format!("{fixed} raw={bits:016x}")
+}
+
+pub fn debug_ints(count: u64, ids: &[u64]) -> String {
+    // Debug formatting of non-floats is fine anywhere.
+    format!("{count} ids={ids:?}")
+}

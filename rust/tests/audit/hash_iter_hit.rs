@@ -1,0 +1,19 @@
+// Fixture: iteration over hash-ordered containers in a deterministic
+// module. Both the method call and the for-loop must fire `hash-iter`.
+use std::collections::HashMap;
+
+pub fn sum(by_tape: &HashMap<String, u64>) -> u64 {
+    let mut total = 0;
+    for v in by_tape.values() {
+        total += v;
+    }
+    total
+}
+
+pub fn names(seen: std::collections::HashSet<String>) -> Vec<String> {
+    let mut out = Vec::new();
+    for n in &seen {
+        out.push(n.clone());
+    }
+    out
+}

@@ -1,0 +1,16 @@
+// Fixture: order-safe container use in a deterministic module. BTreeMap
+// iterates sorted, and point lookups into a HashMap never observe the
+// hash order.
+use std::collections::{BTreeMap, HashMap};
+
+pub fn ordered_sum(by_tape: &BTreeMap<String, u64>) -> u64 {
+    by_tape.values().sum()
+}
+
+pub fn lookup(index: &HashMap<u64, String>, id: u64) -> Option<&String> {
+    index.get(&id)
+}
+
+pub fn lookup_all(index: &HashMap<u64, String>, ids: &[u64]) -> Vec<String> {
+    ids.iter().filter_map(|id| index.get(id).cloned()).collect()
+}

@@ -1,0 +1,13 @@
+// Fixture: panicking extractors in a serving-path module. Both sites
+// must fire `panic-path` — a poisoned lock must degrade, not abort the
+// dispatcher.
+use std::sync::Mutex;
+
+pub fn drain(m: &Mutex<Vec<u64>>) -> Vec<u64> {
+    let mut q = m.lock().unwrap();
+    std::mem::take(&mut *q)
+}
+
+pub fn first(m: &Mutex<Vec<u64>>) -> u64 {
+    *m.lock().expect("queue lock").first().expect("non-empty")
+}

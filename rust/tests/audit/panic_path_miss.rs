@@ -1,0 +1,28 @@
+// Fixture: serving-path module that degrades instead of panicking —
+// poisoned locks recover, absent values shed. Unwraps in the test module
+// are exempt.
+use std::sync::Mutex;
+
+pub fn drain(m: &Mutex<Vec<u64>>) -> Vec<u64> {
+    let mut q = match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    std::mem::take(&mut *q)
+}
+
+pub fn first(m: &Mutex<Vec<u64>>) -> Option<u64> {
+    drain(m).first().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drains_in_order() {
+        let m = Mutex::new(vec![1, 2]);
+        m.lock().unwrap().push(3);
+        assert_eq!(drain(&m), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,18 @@
+// Fixture: tokenizer traps. Everything here LOOKS like a violation to a
+// regex but is string/comment/lifetime content — audits clean in every
+// zone.
+pub const DOC: &str = "call Instant::now() // not a comment, not code";
+pub const RAW: &str = r#"m.lock().unwrap() and "{x:?}" stay inert in raw strings"#;
+pub const BYTES: &[u8] = b"SystemTime::now()";
+
+/* Instant::now() in a block comment
+   /* nested: thread::current() */
+   still a comment */
+pub fn lifetimes_are_not_chars<'a>(s: &'a str) -> &'a str {
+    let _not_a_lifetime: char = 'a';
+    s
+}
+
+pub fn ranges_survive_numbers() -> u64 {
+    (0..10).map(|i| i * 2).sum()
+}

@@ -1,0 +1,7 @@
+// Fixture: a waiver that suppresses nothing. The code below is clean, so
+// the waiver itself must fire `unused-waiver` (and --fix-waivers must
+// delete the standalone line).
+pub fn add(a: u64, b: u64) -> u64 {
+    // audit:allow(wallclock) left over from a deleted diagnostic
+    a + b
+}

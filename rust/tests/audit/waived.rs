@@ -1,0 +1,15 @@
+// Fixture: real violations suppressed by well-formed waivers — one
+// trailing, one standalone on the line above. Audits clean, and both
+// waivers count as used.
+use std::time::Instant;
+
+pub fn diag_origin() -> Instant {
+    Instant::now() // audit:allow(wallclock) diagnostic anchor; differences only, never scheduled
+}
+
+pub fn diag_pair() -> (Instant, Instant) {
+    let a = diag_origin();
+    // audit:allow(wallclock) second leg of the same diagnostic anchor
+    let b = Instant::now();
+    (a, b)
+}

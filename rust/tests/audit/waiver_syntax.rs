@@ -1,0 +1,8 @@
+// Fixture: a waiver with no reason after the closing paren. Must fire
+// `waiver-syntax` — an unexplained suppression is unreviewable.
+use std::time::Instant;
+
+pub fn origin() -> Instant {
+    // audit:allow(wallclock)
+    Instant::now()
+}

@@ -1,0 +1,13 @@
+// Fixture: wall-clock reads in a deterministic module. Audited as if it
+// lived at replay/fixture.rs — all three sites must fire `wallclock`.
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> (Instant, SystemTime) {
+    let a = Instant::now();
+    let b = SystemTime::now();
+    (a, b)
+}
+
+pub fn who() -> std::thread::Thread {
+    std::thread::current()
+}

@@ -1,0 +1,18 @@
+// Fixture: clean deterministic module. Instants are only *carried*, and
+// the wall-clock read in the test module is exempt via #[cfg(test)].
+use std::time::{Duration, Instant};
+
+pub fn shift(t: Instant, us: u64) -> Instant {
+    t + Duration::from_micros(us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tests_may_read_the_clock() {
+        let t = Instant::now();
+        assert!(shift(t, 1) > t);
+    }
+}

@@ -1,0 +1,28 @@
+// Fixture: audited as net/wire.rs. TAG_DRAIN is encoded but never
+// decoded, and the Shutdown variant is decoded but never encoded — both
+// must fire `wire-tag-parity`.
+pub const TAG_SUBMIT: u8 = 1;
+pub const TAG_DRAIN: u8 = 2;
+pub const PROTOCOL_VERSION: u16 = 1;
+
+pub enum Message {
+    Submit { tape: String },
+    Shutdown,
+}
+
+pub fn encode(msg: &Message, out: &mut Vec<u8>) {
+    match msg {
+        Message::Submit { tape } => {
+            out.push(TAG_SUBMIT);
+            out.extend_from_slice(tape.as_bytes());
+        }
+        _ => out.push(TAG_DRAIN),
+    }
+}
+
+pub fn decode(buf: &[u8]) -> Option<Message> {
+    match buf.first()? {
+        &TAG_SUBMIT => Some(Message::Submit { tape: String::new() }),
+        _ => Some(Message::Shutdown),
+    }
+}

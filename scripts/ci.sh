@@ -21,6 +21,19 @@ cargo test -q
 cargo bench --no-run
 cargo build --examples
 
+# Static-analysis gate, deliberately ahead of clippy: the built-in
+# determinism & invariant linter (`tapesched audit`, rules in
+# rust/README.md) must report zero findings and zero unused waivers on
+# the shipped tree. Enforced by default; AUDIT_STRICT=0 downgrades it to
+# advisory while iterating on a new rule.
+if ! ./target/release/tapesched audit rust/src; then
+    echo "ci: audit findings (fix, or waive with \`audit:allow(rule-id) reason\`;" \
+         "stale waivers: \`tapesched audit --fix-waivers\`)" >&2
+    if [ "${AUDIT_STRICT:-1}" = "1" ]; then
+        exit 1
+    fi
+fi
+
 # Lint gate: clippy with -D warnings. Enforced by default (CLIPPY_STRICT=0
 # downgrades it to advisory for local iteration); skipped only when the
 # toolchain ships without clippy.
@@ -33,6 +46,37 @@ if cargo clippy --version >/dev/null 2>&1; then
     fi
 else
     echo "ci: clippy unavailable; skipping lint gate" >&2
+fi
+
+# Advisory sanitizer jobs — opt-in and never fatal. They target the two
+# places static rules reach weakest: the condvar dispatcher
+# (coordinator::service tests exercise park/unpark, drain hand-off, and
+# poison recovery) and the framed codec + serving loops under net::.
+# Both need a nightly toolchain; each skips gracefully when the
+# toolchain or component is absent (offline stable images).
+if [ "${MIRI:-0}" = "1" ]; then
+    if cargo +nightly miri --version >/dev/null 2>&1; then
+        echo "ci: advisory Miri pass (coordinator::service + net::wire tests)" >&2
+        MIRIFLAGS="-Zmiri-disable-isolation" \
+            cargo +nightly miri test -q --lib coordinator::service:: net::wire:: \
+            || echo "ci: Miri reported issues (advisory, not failing the gate)" >&2
+    else
+        echo "ci: MIRI=1 but nightly miri is unavailable; skipping" >&2
+    fi
+fi
+if [ "${TSAN:-0}" = "1" ]; then
+    host="$(rustc -vV | sed -n 's/^host: //p')"
+    if cargo +nightly --version >/dev/null 2>&1 \
+        && rustup component list --toolchain nightly 2>/dev/null \
+            | grep -q '^rust-src (installed)'; then
+        echo "ci: advisory ThreadSanitizer pass (coordinator::service + net tests)" >&2
+        RUSTFLAGS="-Zsanitizer=thread" \
+            cargo +nightly test -q -Zbuild-std --target "$host" \
+            --lib coordinator::service:: net:: \
+            || echo "ci: TSan reported issues (advisory, not failing the gate)" >&2
+    else
+        echo "ci: TSAN=1 but nightly rust-src is unavailable; skipping" >&2
+    fi
 fi
 
 # Replay gate: a seeded 2-second virtual replay must emit a parseable,
