@@ -126,10 +126,14 @@ obs-smoke: build
 		--push-metrics --out results/rpc-tax-push.json
 	@echo "obs-smoke: results/obs-trace.jsonl (chains checked), results/rpc-tax-push.json"
 
-# Raw-speed gate: the same sharded smoke replay single-threaded and over
-# 4 worker threads — the parallel merge contract is byte-identity, checked
-# with cmp (the incremental-DP property gate lives in scripts/ci.sh; this
-# target reproduces the determinism artifacts).
+# Raw-speed gate: (a) the same sharded smoke replay single-threaded and
+# over 4 worker threads — the parallel merge contract is byte-identity,
+# checked with cmp; (b) the skewed 9-shard ring over 3 workers, with and
+# without --steal — LPT assignment and epoch stealing move shard
+# ownership, never bytes; (c) `serve --backend incremental` must finish
+# the smoke workload with nonzero table appends and the drain invariant
+# `submitted = completed + shed` intact (the full property gates live in
+# scripts/ci.sh; this target reproduces the determinism artifacts).
 perf-smoke: build
 	mkdir -p results
 	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
@@ -137,7 +141,23 @@ perf-smoke: build
 	./target/release/tapesched replay --shards 4 --smoke --seed 7 \
 		--threads 4 --out results/perf-threads4.json
 	cmp results/perf-threads1.json results/perf-threads4.json
-	@echo "perf-smoke: results/perf-threads4.json (byte-identical to 1 thread)"
+	./target/release/tapesched replay --shards 9 --smoke --seed 7 \
+		--threads 1 --out results/perf-skew1.json
+	./target/release/tapesched replay --shards 9 --smoke --seed 7 \
+		--threads 3 --out results/perf-skew3.json
+	./target/release/tapesched replay --shards 9 --smoke --seed 7 \
+		--threads 3 --steal --out results/perf-skew3-steal.json
+	cmp results/perf-skew1.json results/perf-skew3.json
+	cmp results/perf-skew1.json results/perf-skew3-steal.json
+	./target/release/tapesched serve --requests 400 --seed 7 \
+		--backend incremental | tee results/perf-incremental.txt
+	@grep -Eq 'incremental appends/rebuilds = [1-9][0-9]* /' \
+		results/perf-incremental.txt \
+		|| { echo "perf-smoke: no incremental appends recorded" >&2; exit 1; }
+	@awk '/drain submitted\/completed\/shed/ { seen = 1; if ($$4 != $$6 + $$8) bad = 1 } \
+		END { exit (bad || !seen) }' results/perf-incremental.txt \
+		|| { echo "perf-smoke: drain invariant violated or missing" >&2; exit 1; }
+	@echo "perf-smoke: parallel replay byte-stable (4 + 9 shards, steal on/off); incremental serve OK"
 
 # Determinism & invariant lint: the shipped tree must audit clean — zero
 # findings, zero unused waivers (rules and waiver syntax: rust/README.md,

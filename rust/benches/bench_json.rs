@@ -25,33 +25,155 @@
 //!   request-lifecycle `TraceRecorder` is attached (the observability
 //!   tax; near zero by design, since recording is nine ring-buffer
 //!   writes per completion).
+//! - `work_stealing` — factor by which the `--steal` epoch re-pack
+//!   shrinks the busiest worker's load vs static round-robin on a
+//!   deliberately skewed ring (one hot shard); the merged outcomes are
+//!   asserted identical, so only the balance moves.
+//! - `serving_incremental` — closed-loop submits per wall second into a
+//!   `Coordinator` whose drive workers solve through the incremental
+//!   re-solve backend; the run must record table appends (the serving
+//!   path actually repaired tables instead of re-solving from scratch).
+//! - `streaming_replay_events` / `streaming_parallel_speedup` /
+//!   `streaming_peak_alloc_mb` — a generated on-disk trace replayed
+//!   through `StreamingTraceArrivals` (10⁸ events full / 2×10⁵ smoke,
+//!   override with `TAPESCHED_STREAM_EVENTS`): events per wall second
+//!   single-threaded, the speedup of the same replay over worker
+//!   threads, and the peak live allocation during the run measured by
+//!   the counting-allocator shim below (the arrival side stays
+//!   O(reorder window); what grows is the completion log).
 //!
 //! `make bench-json` runs this; `--smoke` (or `TAPESCHED_SMOKE=1`) keeps
-//! it to seconds.
+//! it to seconds. Schema history: v4 added the `work_stealing`,
+//! `serving_incremental`, and `streaming_*` cases.
 
+use std::io::Write as _;
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use tapesched::bench::{bench, smoke_requested, BenchConfig};
+use tapesched::cluster::HashRing;
 use tapesched::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
-use tapesched::dataset::{generate_dataset, GeneratorConfig};
+use tapesched::dataset::{generate_dataset, open_trace_file, GeneratorConfig};
 use tapesched::model::Tape;
 use tapesched::net::{CoordinatorServerConfig, LoopbackFleet};
 use tapesched::obs::{Stage, TraceRecorder, DEFAULT_TRACE_CAP};
 use tapesched::model::Instance;
 use tapesched::replay::{
-    drive_closed_loop, simulate, simulate_parallel, simulate_traced, ArrivalModel, LoopMode,
-    PoissonArrivals, ReplayConfig, RequestMix,
+    drive_closed_loop, simulate, simulate_parallel, simulate_parallel_balanced, simulate_traced,
+    ArrivalModel, AssignMode, LoopMode, PoissonArrivals, ReplayConfig, RequestMix,
+    StreamingTraceArrivals, DEFAULT_TRACE_WINDOW,
 };
-use tapesched::runtime::IncrementalTable;
+use tapesched::runtime::{backend_by_name, IncrementalTable};
 use tapesched::sched::simpledp_dense::{dense_cost_into, DenseScratch};
 use tapesched::sched::{scheduler_by_name, Gs};
 use tapesched::sim::{Affinity, DriveParams};
+use tapesched::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Allocation-counting shim: the flat-memory evidence for the streaming
+// replay case — a pass-through to the system allocator plus three
+// relaxed counters, no external deps. (The library crate forbids unsafe
+// code; this bench binary is its own crate root, so the one `unsafe
+// impl` the evidence needs lives here.) The default `realloc` /
+// `alloc_zeroed` provided methods route through `alloc`/`dealloc`, so
+// the counters see every byte.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static LIVE_BYTES: AtomicU64 = AtomicU64::new(0);
+static PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
+static TOTAL_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed)
+                + layout.size() as u64;
+            PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+            TOTAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, layout: Layout) {
+        System.dealloc(p, layout);
+        LIVE_BYTES.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Start a peak-allocation measurement window: returns the live-byte
+/// baseline and resets the high-water mark to it.
+fn mem_mark() -> u64 {
+    let live = LIVE_BYTES.load(Ordering::Relaxed);
+    PEAK_BYTES.store(live, Ordering::Relaxed);
+    live
+}
+
+/// Peak live bytes above the `mem_mark` baseline.
+fn mem_peak_since(baseline: u64) -> u64 {
+    PEAK_BYTES.load(Ordering::Relaxed).saturating_sub(baseline)
+}
 
 struct Entry {
     name: &'static str,
     value: f64,
     unit: &'static str,
+}
+
+/// Generate a sorted on-disk trace (`timestamp_ns<TAB>tape<TAB>file_id`)
+/// of `events` reads over `catalog`, ~10k requests per virtual second.
+/// Streamed straight to disk through a buffered writer — the trace is
+/// never held in memory, mirroring how the replay will read it back.
+fn write_stream_trace(path: &Path, catalog: &[Tape], events: u64, seed: u64) {
+    let file = std::fs::File::create(path).expect("create streaming trace file");
+    let mut w = std::io::BufWriter::with_capacity(1 << 20, file);
+    let mut rng = Rng::new(seed);
+    let mut t_ns: u64 = 0;
+    for _ in 0..events {
+        t_ns += 20_000 + rng.next_u64() % 160_000;
+        let tape = (rng.next_u64() % catalog.len() as u64) as usize;
+        let file_id = (rng.next_u64() % catalog[tape].n_files() as u64) as usize;
+        writeln!(w, "{t_ns}\t{}\t{file_id}", catalog[tape].name)
+            .expect("write streaming trace line");
+    }
+    w.flush().expect("flush streaming trace");
+}
+
+/// A catalog whose ring placement is deliberately skewed: `hot_tapes`
+/// tapes on one hot shard, one tape on each of two cold shards whose ids
+/// collide with the hot worker under `shard % 2` — the geometry where
+/// static round-robin piles everything on one worker.
+fn skewed_catalog(n_shards: usize, vnodes: usize, hot_tapes: usize) -> Vec<Tape> {
+    let ring = HashRing::new(n_shards, vnodes);
+    let (hot, colds) = (0usize, [2usize, 4]);
+    let mut tapes = Vec::new();
+    let mut hot_found = 0usize;
+    let mut cold_found = [false; 2];
+    let mut i = 0usize;
+    while hot_found < hot_tapes || cold_found.iter().any(|&c| !c) {
+        let name = format!("SKEW{i:05}");
+        let s = ring.route(&name);
+        if s == hot && hot_found < hot_tapes {
+            tapes.push(Tape::from_sizes(name, &[1_000; 40]));
+            hot_found += 1;
+        } else if let Some(k) = colds.iter().position(|&c| c == s) {
+            if !cold_found[k] {
+                tapes.push(Tape::from_sizes(name, &[1_000; 40]));
+                cold_found[k] = true;
+            }
+        }
+        i += 1;
+        assert!(i < 200_000, "ring never routed a candidate to the target shards");
+    }
+    tapes
 }
 
 /// One giant batching window flushed at drain: submit throughput then
@@ -238,6 +360,132 @@ fn main() {
         entries.push(Entry { name: "parallel_replay", value: speedup, unit: "x" });
     }
 
+    // 2d. Work stealing on a skewed ring: one hot shard owns nearly all
+    // tapes, so static round-robin piles hot + cold shards onto worker 0
+    // and idles worker 1. The `--steal` epoch re-pack must recover that
+    // idle time; the entry's value is the factor by which it shrinks the
+    // busiest worker's virtual load. Byte-identity across modes is an
+    // assert, not a statistic.
+    {
+        let cfg = ReplayConfig {
+            n_drives: 3,
+            batcher: BatcherConfig {
+                window: Duration::from_millis(100),
+                max_batch: 256,
+                ..BatcherConfig::default()
+            },
+            drive: DriveParams::default(),
+            mode: LoopMode::Open,
+            retry_backoff_s: 0.01,
+            n_shards: 9,
+            vnodes: 64,
+            ..ReplayConfig::default()
+        };
+        let skewed = skewed_catalog(cfg.n_shards, cfg.vnodes, 18);
+        let (rate, duration) = if smoke { (60.0, 2.0) } else { (100.0, 30.0) };
+        let make_model = || -> Box<dyn ArrivalModel> {
+            Box::new(PoissonArrivals::new(RequestMix::new(&skewed), rate, duration, 13))
+        };
+        let run = |mode| simulate_parallel_balanced(&cfg, &skewed, &Gs, &make_model, 2, mode);
+        let (out_rr, rr) = run(AssignMode::RoundRobin);
+        let (out_stolen, stolen) = run(AssignMode::Stolen);
+        assert_eq!(
+            out_rr.completions, out_stolen.completions,
+            "assignment mode perturbed the replay"
+        );
+        assert!(stolen.steal_events > 0, "skewed ring must trigger steals");
+        let max_rr = rr.worker_busy_us.iter().copied().max().unwrap_or(0);
+        let max_stolen = stolen.worker_busy_us.iter().copied().max().unwrap_or(1);
+        let factor = max_rr as f64 / max_stolen.max(1) as f64;
+        println!(
+            "    → work_stealing: {factor:.2} x busiest-worker load reduction \
+             ({} steals; busy ratio {:.2} vs round-robin {})",
+            stolen.steal_events,
+            stolen.busy_ratio(),
+            if rr.busy_ratio().is_finite() { format!("{:.2}", rr.busy_ratio()) } else { "inf".into() },
+        );
+        entries.push(Entry { name: "work_stealing", value: factor, unit: "x" });
+    }
+
+    // 2e. The flat-memory streaming replay: a generated on-disk trace
+    // pushed through `StreamingTraceArrivals` (never materialized), once
+    // single-threaded and once fanned out. 10⁸ events in the full run,
+    // 2×10⁵ in smoke; `TAPESCHED_STREAM_EVENTS` overrides either.
+    {
+        let events: u64 = std::env::var("TAPESCHED_STREAM_EVENTS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(if smoke { 200_000 } else { 100_000_000 });
+        let cfg = ReplayConfig {
+            n_drives: 4,
+            batcher: BatcherConfig {
+                window: Duration::from_millis(100),
+                max_batch: 256,
+                ..BatcherConfig::default()
+            },
+            drive: DriveParams::default(),
+            mode: LoopMode::Open,
+            retry_backoff_s: 0.01,
+            n_shards: 8,
+            vnodes: 64,
+            ..ReplayConfig::default()
+        };
+        let trace_path = Path::new("BENCH_stream_trace.tsv");
+        write_stream_trace(trace_path, &catalog, events, 17);
+        let make_model = || -> Box<dyn ArrivalModel> {
+            let reader = open_trace_file(trace_path).expect("streaming trace written above");
+            Box::new(StreamingTraceArrivals::new(
+                "stream",
+                reader,
+                &catalog,
+                DEFAULT_TRACE_WINDOW,
+            ))
+        };
+        let baseline = mem_mark();
+        let wall = Instant::now();
+        let single = {
+            let mut model = make_model();
+            simulate(&cfg, &catalog, &Gs, model.as_mut())
+        };
+        let s_single = wall.elapsed().as_secs_f64().max(1e-9);
+        let peak = mem_peak_since(baseline);
+        assert_eq!(
+            single.stats.submitted + single.stats.shed,
+            events,
+            "every trace event must be submitted or shed"
+        );
+        let threads = 4;
+        let wall = Instant::now();
+        let parallel = simulate_parallel(&cfg, &catalog, &Gs, &make_model, threads);
+        let s_parallel = wall.elapsed().as_secs_f64().max(1e-9);
+        assert_eq!(parallel.stats.submitted, single.stats.submitted);
+        assert_eq!(parallel.stats.completed, single.stats.completed);
+        assert_eq!(
+            parallel.completions, single.completions,
+            "streaming parallel merge diverged from the single-threaded replay"
+        );
+        std::fs::remove_file(trace_path).ok();
+        let eps = events as f64 / s_single;
+        let speedup = s_single / s_parallel;
+        let peak_mb = peak as f64 / (1024.0 * 1024.0);
+        println!(
+            "    → streaming_replay_events: {eps:.0} events/s \
+             ({events} events in {s_single:.3} wall s)"
+        );
+        println!(
+            "    → streaming_parallel_speedup: {speedup:.2} x \
+             (1 thread {s_single:.3} s vs {threads} threads {s_parallel:.3} s)"
+        );
+        println!(
+            "    → streaming_peak_alloc_mb: {peak_mb:.1} MB peak live allocation \
+             ({} allocations; arrivals stay O(window), the completion log grows)",
+            TOTAL_ALLOCS.load(Ordering::Relaxed)
+        );
+        entries.push(Entry { name: "streaming_replay_events", value: eps, unit: "events/s" });
+        entries.push(Entry { name: "streaming_parallel_speedup", value: speedup, unit: "x" });
+        entries.push(Entry { name: "streaming_peak_alloc_mb", value: peak_mb, unit: "MB" });
+    }
+
     // 3 + 4. The serving seam, in-process vs over the wire. Same config,
     // same request count, same closed loop; the driver polls in-flight
     // before every submit, so the loopback number pays two framed round
@@ -301,6 +549,43 @@ fn main() {
         entries.push(Entry { name: "loopback_rpc_submits", value: sps, unit: "submits/s" });
     }
 
+    // 5. The serving path through the incremental backend: same closed
+    // loop as `coordinator_submits`, but drive workers solve via the
+    // per-tape re-solve tables. The snapshot must show appended columns
+    // (growing backlogs repaired in place, not re-solved from scratch)
+    // with the drain invariant intact.
+    {
+        let backend = backend_by_name("incremental").expect("incremental backend is built in");
+        let coord =
+            Coordinator::start_with_backend(drain_flush_cfg(4), catalog.clone(), backend);
+        let mut model =
+            PoissonArrivals::new(RequestMix::new(&catalog), 1_000.0, f64::INFINITY, 7);
+        let wall = Instant::now();
+        let stats = drive_closed_loop(
+            &coord,
+            &catalog,
+            &mut model,
+            n_requests,
+            Duration::from_millis(1),
+            n_requests,
+        );
+        let s = wall.elapsed().as_secs_f64().max(1e-9);
+        assert_eq!(stats.submitted, n_requests);
+        let (_completions, m) = coord.finish();
+        assert_eq!(m.completed + m.shed, n_requests, "drain invariant broken");
+        assert!(
+            m.incremental_appends > 0,
+            "serving through the incremental backend must append table columns"
+        );
+        let sps = n_requests as f64 / s;
+        println!(
+            "    → serving_incremental: {sps:.0} submits/s \
+             ({} appends / {} rebuilds over {n_requests} requests)",
+            m.incremental_appends, m.incremental_rebuilds
+        );
+        entries.push(Entry { name: "serving_incremental", value: sps, unit: "submits/s" });
+    }
+
     let body: Vec<String> = entries
         .iter()
         .map(|e| {
@@ -311,7 +596,7 @@ fn main() {
         })
         .collect();
     let json = format!(
-        "{{\n  \"schema\": \"tapesched-bench-v3\",\n  \"smoke\": {smoke},\n  \
+        "{{\n  \"schema\": \"tapesched-bench-v4\",\n  \"smoke\": {smoke},\n  \
          \"benches\": [\n{}\n  ]\n}}\n",
         body.join(",\n")
     );

@@ -9,7 +9,7 @@ pub mod svg;
 
 pub use profile::{performance_profile, ProfileCurve, ProfilePoint};
 pub use report::{
-    cartridge_summary, mount_summary, qos_comparison, run_evaluation, shard_summary,
-    EvalRecord, EvalTable,
+    cartridge_summary, mount_summary, qos_comparison, run_evaluation,
+    run_evaluation_with_threads, shard_summary, EvalRecord, EvalTable,
 };
 pub use svg::trajectory_svg;

@@ -117,15 +117,31 @@ pub fn run_evaluation(
     u: u64,
     max_k: Option<usize>,
 ) -> EvalTable {
+    run_evaluation_with_threads(ds, schedulers, u, max_k, None)
+}
+
+/// [`run_evaluation`] with an explicit worker count: `threads` caps the
+/// sweep's thread pool (`None` = one worker per core). The records are
+/// identical for any value — the pool only changes the wall-clock
+/// `seconds` fields — so `figures --threads N` can trade latency for
+/// machine share without touching the figures.
+pub fn run_evaluation_with_threads(
+    ds: &Dataset,
+    schedulers: &[Box<dyn Scheduler + Send + Sync>],
+    u: u64,
+    max_k: Option<usize>,
+    threads: Option<usize>,
+) -> EvalTable {
     let names: Vec<String> = schedulers.iter().map(|s| s.name()).collect();
     let work: Vec<&TapeData> = ds
         .tapes
         .iter()
         .filter(|t| max_k.map_or(true, |cap| t.n_req() <= cap))
         .collect();
-    let n_workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+    let n_workers = threads
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
         .min(work.len())
         .max(1);
     let slots: Vec<Mutex<Vec<EvalRecord>>> =
@@ -454,6 +470,24 @@ mod tests {
         assert!(table.contains("parked on a cartridge waitlist"));
         assert!(table.contains("cart wait"));
         assert_eq!(table.lines().count(), 2, "header + ladder:\n{table}");
+    }
+
+    #[test]
+    fn explicit_thread_counts_reproduce_the_sweep() {
+        // `--threads N` is a machine-share knob, never a result knob:
+        // every pool width yields the default sweep's records.
+        let ds = small_ds();
+        let a = run_evaluation(&ds, &algos(), 500, None);
+        for threads in [1usize, 2, 7] {
+            let b = run_evaluation_with_threads(&ds, &algos(), 500, None, Some(threads));
+            assert_eq!(a.records.len(), b.records.len(), "threads={threads}");
+            for (x, y) in a.records.iter().zip(&b.records) {
+                assert_eq!(x.algorithm, y.algorithm, "threads={threads}");
+                assert_eq!(x.tape, y.tape, "threads={threads}");
+                assert_eq!(x.cost, y.cost, "threads={threads}");
+                assert_eq!(x.n_detours, y.n_detours, "threads={threads}");
+            }
+        }
     }
 
     #[test]

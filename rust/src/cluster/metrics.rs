@@ -59,6 +59,10 @@ pub struct ClusterMetricsSnapshot {
     /// extremes the routing layer is judged on.
     pub max_shard_completed: u64,
     pub min_shard_completed: u64,
+    /// Incremental-backend repair work fleet-wide (0 unless shards serve
+    /// with `--backend incremental`): columns appended vs. rebuilds.
+    pub incremental_appends: u64,
+    pub incremental_rebuilds: u64,
 }
 
 impl ClusterMetricsSnapshot {
@@ -142,6 +146,8 @@ pub fn merge_snapshots(a: &MetricsSnapshot, b: &MetricsSnapshot) -> MetricsSnaps
         ),
         p50_latency_s: pct_side.p50_latency_s,
         p99_latency_s: pct_side.p99_latency_s,
+        incremental_appends: a.incremental_appends + b.incremental_appends,
+        incremental_rebuilds: a.incremental_rebuilds + b.incremental_rebuilds,
     }
 }
 
@@ -168,6 +174,8 @@ pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
         mean_service_s: 0.0,
         max_shard_completed: 0,
         min_shard_completed: u64::MAX,
+        incremental_appends: 0,
+        incremental_rebuilds: 0,
     };
     for s in &shards {
         snap.routed_total += s.routed;
@@ -186,6 +194,8 @@ pub fn rollup(mut shards: Vec<ShardLoad>) -> ClusterMetricsSnapshot {
         snap.max_arm_wait_s = snap.max_arm_wait_s.max(s.metrics.max_arm_wait_s);
         snap.max_shard_completed = snap.max_shard_completed.max(s.metrics.completed);
         snap.min_shard_completed = snap.min_shard_completed.min(s.metrics.completed);
+        snap.incremental_appends += s.metrics.incremental_appends;
+        snap.incremental_rebuilds += s.metrics.incremental_rebuilds;
     }
     if shards.is_empty() {
         snap.min_shard_completed = 0;
@@ -227,6 +237,8 @@ mod tests {
             mean_sched_s_per_batch: 0.0,
             p50_latency_s: lat,
             p99_latency_s: lat,
+            incremental_appends: completed / 3,
+            incremental_rebuilds: completed / 6,
         }
     }
 
@@ -259,6 +271,8 @@ mod tests {
         assert!((snap.mean_service_s - 1.625).abs() < 1e-12);
         assert_eq!(snap.max_shard_completed, 30);
         assert_eq!(snap.min_shard_completed, 10);
+        assert_eq!(snap.incremental_appends, 10 + 3);
+        assert_eq!(snap.incremental_rebuilds, 5 + 1);
         assert!((snap.imbalance_ratio() - 3.0).abs() < 1e-12);
     }
 
@@ -273,6 +287,8 @@ mod tests {
         assert_eq!(merged.batches, 15 + 5);
         assert_eq!(merged.cartridge_parks, 3 + 1);
         assert_eq!(merged.arm_ops, 6 + 2);
+        assert_eq!(merged.incremental_appends, 10 + 3);
+        assert_eq!(merged.incremental_rebuilds, 5 + 1);
         assert!((merged.mean_latency_s - 3.25).abs() < 1e-12);
         assert!((merged.mean_service_s - 1.625).abs() < 1e-12);
         assert!((merged.max_cartridge_wait_s - 4.0).abs() < 1e-12);

@@ -32,6 +32,11 @@ pub struct SharedMetrics {
     arm_ops: AtomicU64,
     arm_wait_sum_us: AtomicU64,
     arm_wait_max_us: AtomicU64,
+    /// Incremental-backend repair work: columns appended onto a stored
+    /// per-prefix table vs. restarts from a fresh one-file prefix. Zero
+    /// unless the shard serves with `--backend incremental`.
+    incremental_appends: AtomicU64,
+    incremental_rebuilds: AtomicU64,
     /// Sum of end-to-end request latencies, in µs.
     latency_sum_us: AtomicU64,
     /// Sum of in-tape service times, in µs.
@@ -84,6 +89,12 @@ pub struct MetricsSnapshot {
     pub mean_sched_s_per_batch: f64,
     pub p50_latency_s: f64,
     pub p99_latency_s: f64,
+    /// Incremental-backend solve work (0 on other backends): table
+    /// columns appended in place vs. rebuilds from a one-file prefix.
+    /// Appended after the latency fields — the wire codec encodes
+    /// snapshots in declaration order (`net::wire`, protocol v3).
+    pub incremental_appends: u64,
+    pub incremental_rebuilds: u64,
 }
 
 const RESERVOIR_CAP: usize = 65_536;
@@ -134,6 +145,19 @@ impl SharedMetrics {
         self.arm_ops.fetch_add(1, Ordering::Relaxed);
         self.arm_wait_sum_us.fetch_add(us, Ordering::Relaxed);
         self.arm_wait_max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Record incremental-backend repair work drained from a drive
+    /// worker after a dispatch (`take_thread_incremental_stats`). Both
+    /// legs are usually small; (0, 0) is a cheap no-op for the common
+    /// non-incremental backends.
+    pub fn on_incremental(&self, appends: u64, rebuilds: u64) {
+        if appends > 0 {
+            self.incremental_appends.fetch_add(appends, Ordering::Relaxed);
+        }
+        if rebuilds > 0 {
+            self.incremental_rebuilds.fetch_add(rebuilds, Ordering::Relaxed);
+        }
     }
 
     /// Record one served request: end-to-end latency + in-tape service (s).
@@ -209,6 +233,8 @@ impl SharedMetrics {
                 / batches.max(1) as f64,
             p50_latency_s: pct(50.0),
             p99_latency_s: pct(99.0),
+            incremental_appends: self.incremental_appends.load(Ordering::Relaxed),
+            incremental_rebuilds: self.incremental_rebuilds.load(Ordering::Relaxed),
         }
     }
 }
@@ -250,6 +276,8 @@ mod tests {
         m.on_cartridge_wait(2.0);
         m.on_cartridge_wait(4.0);
         m.on_arm_wait(0.5);
+        m.on_incremental(4, 1);
+        m.on_incremental(0, 0);
         m.on_complete(2.0, 1.0);
         m.on_complete(4.0, 3.0);
         let s = m.snapshot();
@@ -269,6 +297,8 @@ mod tests {
         assert!((s.mean_latency_s - 3.0).abs() < 1e-3);
         assert!((s.mean_service_s - 2.0).abs() < 1e-3);
         assert!((s.mean_sched_s_per_batch - 0.5).abs() < 1e-3);
+        assert_eq!(s.incremental_appends, 4);
+        assert_eq!(s.incremental_rebuilds, 1);
         assert!(s.p50_latency_s >= 2.0 && s.p99_latency_s <= 4.0 + 1e-9);
     }
 
@@ -278,6 +308,8 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.mean_latency_s, 0.0);
         assert_eq!(s.p99_latency_s, 0.0);
+        assert_eq!(s.incremental_appends, 0);
+        assert_eq!(s.incremental_rebuilds, 0);
     }
 
     #[test]

@@ -393,6 +393,8 @@ impl Coordinator {
                 ("tapesched_rejected_total", m.rejected),
                 ("tapesched_shed_total", m.shed),
                 ("tapesched_batches_total", m.batches),
+                ("tapesched_incremental_appends_total", m.incremental_appends),
+                ("tapesched_incremental_rebuilds_total", m.incremental_rebuilds),
             ] {
                 write_type(buf, name, "counter");
                 write_counter(buf, name, labels, v);
@@ -720,6 +722,11 @@ fn worker_loop(
         let schedule = policy.schedule(&job.instance);
         let sched_s = policy_t0.elapsed().as_secs_f64();
         shared.metrics.on_batch(sched_s);
+        // Drain the incremental backend's thread-local repair counters
+        // (this worker thread just ran the solve, so the delta is its
+        // own). A (0, 0) delta — any other backend — is a no-op.
+        let (inc_appends, inc_rebuilds) = crate::runtime::take_thread_incremental_stats();
+        shared.metrics.on_incremental(inc_appends, inc_rebuilds);
 
         let out = evaluate(&job.instance, &schedule);
         let done_wall = Instant::now();
@@ -967,6 +974,71 @@ mod tests {
         for (a, b) in via_backend.iter().zip(&via_sparse) {
             assert!((a - b).abs() < 1e-9, "backend {a} vs sparse {b}");
         }
+    }
+
+    #[test]
+    fn incremental_backend_serves_bit_equal_to_the_fresh_solve() {
+        // Pseudorandom grow sequences (fixed LCG, deterministic batch
+        // composition via the drain-only window + cap splits) through a
+        // live Coordinator, served once by `--backend incremental` and
+        // once by the fresh dense solve. Schedules are bit-equal (the
+        // debug assertion inside the backend checks every solve), so the
+        // per-request service times must match to the bit. Single-file
+        // batches drive the rebuild path, multi-file batches the append
+        // path — both legs are required to fire.
+        let mut config = cfg();
+        config.batcher.window = Duration::from_secs(3600);
+        config.batcher.max_batch = 5;
+
+        let drain = |c: Coordinator| -> (Vec<f64>, MetricsSnapshot) {
+            let mut rng: u64 = 0x5eed_cafe;
+            let mut id = 0u64;
+            for wave in 0..6u64 {
+                // TAPE001 gets bursts (cap-split multi-file batches →
+                // appends); TAPE002 gets one lone request per wave (k=1
+                // batches → rebuilds).
+                for _ in 0..5 {
+                    rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    let file_index = (rng >> 33) as usize % 50;
+                    assert!(c
+                        .submit(ReadRequest { id, tape: "TAPE001".into(), file_index })
+                        .is_ok());
+                    id += 1;
+                }
+                assert!(c
+                    .submit(ReadRequest {
+                        id,
+                        tape: "TAPE002".into(),
+                        file_index: (wave * 7) as usize,
+                    })
+                    .is_ok());
+                id += 1;
+            }
+            let (mut completions, m) = c.finish();
+            assert_eq!(m.completed, 36);
+            debug_assert_drain_invariant(m.submitted, m.completed, m.shed, "incremental test");
+            completions.sort_by_key(|c| c.request_id);
+            (completions.iter().map(|c| c.service_s).collect(), m)
+        };
+
+        let (via_incremental, m_inc) = drain(Coordinator::start_with_backend(
+            config.clone(),
+            catalog(),
+            crate::runtime::backend_by_name("incremental").unwrap(),
+        ));
+        let (via_fresh, m_fresh) = drain(Coordinator::start_with_backend(
+            config,
+            catalog(),
+            crate::runtime::default_backend(),
+        ));
+        assert_eq!(via_incremental.len(), via_fresh.len());
+        for (a, b) in via_incremental.iter().zip(&via_fresh) {
+            assert_eq!(a.to_bits(), b.to_bits(), "incremental {a} vs fresh {b}");
+        }
+        assert!(m_inc.incremental_appends > 0, "append repairs must fire");
+        assert!(m_inc.incremental_rebuilds > 0, "rebuilds must fire");
+        assert_eq!(m_fresh.incremental_appends, 0, "dense backend does no repairs");
+        assert_eq!(m_fresh.incremental_rebuilds, 0);
     }
 
     #[test]

@@ -24,7 +24,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use tapesched::analysis::{
-    cartridge_summary, mount_summary, qos_comparison, report::run_evaluation, shard_summary,
+    cartridge_summary, mount_summary, qos_comparison, report::run_evaluation_with_threads,
+    shard_summary,
 };
 use tapesched::audit;
 use tapesched::cli::Args;
@@ -41,12 +42,15 @@ use tapesched::obs::{
     TraceRecorder, DEFAULT_TRACE_CAP,
 };
 use tapesched::replay::{
-    drive_closed_loop, reports_json, run_replay_parallel, run_replay_traced,
-    run_replay_with_arena, scan_trace, ArrivalModel, BurstyArrivals, DiurnalArrivals,
-    LiveDriveStats, LoopMode, PoissonArrivals, ReplayArena, ReplayConfig, RequestMix,
-    StreamingTraceArrivals, TraceArrivals, DEFAULT_TRACE_WINDOW,
+    busy_ratio, drive_closed_loop, reports_json, round_robin_assignment, run_replay_parallel,
+    run_replay_traced, run_replay_with_arena, scan_trace, worker_busy_us, ArrivalModel,
+    AssignMode, BurstyArrivals, DiurnalArrivals, LiveDriveStats, LoopMode, PoissonArrivals,
+    ReplayArena, ReplayConfig, ReplayOutcome, RequestMix, StreamingTraceArrivals, TraceArrivals,
+    WorkerBalance, DEFAULT_TRACE_WINDOW,
 };
-use tapesched::runtime::{backend_by_name, dense_cache_stats, BackendPolicy};
+use tapesched::runtime::{
+    backend_by_name, dense_cache_stats, incremental_stats, BackendPolicy,
+};
 use tapesched::sched::{paper_schedulers, scheduler_by_name, Scheduler};
 use tapesched::sim::{evaluate, Affinity, DriveParams};
 use tapesched::util::rng::Rng;
@@ -93,6 +97,7 @@ COMMANDS:
   dataset-stats   [--data DIR] [--scatter FILE]
   figures         --experiment fig14|fig15|fig16|timing|all
                   [--data DIR] [--out DIR] [--max-k N] [--algos a,b,…]
+                  [--threads N]
   adversarial     [--z N]
   solve           --tape NAME --algo NAME [--data DIR] [--u N]
                   [--backend dense|incremental|xla]
@@ -110,7 +115,7 @@ COMMANDS:
                   [--backlog N] [--data DIR] [--tapes N] [--out FILE.json]
                   [--backend dense|incremental|xla] [--shards N] [--vnodes K]
                   [--arms N] [--affinity none|lru] [--exclusive-tapes on|off]
-                  [--trace-file PATH] [--smoke] [--threads N]
+                  [--trace-file PATH] [--smoke] [--threads N] [--steal]
                   [--trace-out FILE.jsonl] [--trace-cap N]
   coordinator     [--listen ADDR] [--shards N] [--policy NAME] [--drives N]
                   [--seed N] [--tapes N] [--data DIR] [--vnodes K]
@@ -138,7 +143,14 @@ QoS JSON document — p50/p95/p99/p99.9 latencies per policy — to stdout (or
 fans the shards of an open-loop replay out over N worker threads; the
 merged report is byte-identical to the single-threaded one (open-loop
 only — the closed-loop in-flight cap couples shards — and incompatible
-with --trace-out, which records a single engine's span stream).
+with --trace-out, which records a single engine's span stream). Shards
+land on workers by a deterministic pre-pass: arrival weights are counted
+per shard, then greedily bin-packed (LPT) onto the least-loaded worker;
+--steal additionally re-packs at fixed virtual-time epoch barriers,
+moving still-pending shards off overloaded workers (each accepted move
+is a steal_event). Either way the per-worker busy times, the max/min
+balance ratio, its round-robin counterfactual, and the steal count print
+to stderr — never into the QoS JSON.
 --shards N (serve, replay) shards the catalog over N libraries behind a
 consistent-hash router (--vnodes points per shard); the replay report then
 carries a per-shard QoS breakdown next to the fleet-wide one, with --drives
@@ -231,6 +243,35 @@ fn dense_backend_selected(args: &Args) -> bool {
     matches!(args.get("backend"), Some(b) if b.eq_ignore_ascii_case("dense"))
 }
 
+/// Whether `--backend incremental` was selected — the only configuration
+/// in which the append/rebuild repair counters describe the serving path.
+fn incremental_backend_selected(args: &Args) -> bool {
+    matches!(args.get("backend"), Some(b) if b.eq_ignore_ascii_case("incremental"))
+}
+
+/// Print the parallel-replay balance evidence to stderr (never into the
+/// QoS JSON — the report stays byte-identical across thread counts).
+/// Includes the counterfactual round-robin ratio computed from the same
+/// outcome, so a single run shows what the weighted assignment bought.
+fn print_worker_balance(balance: &WorkerBalance, outcome: &ReplayOutcome) {
+    let threads = balance.worker_busy_us.len();
+    let rr = round_robin_assignment(balance.assignment.len(), threads);
+    let rr_busy = worker_busy_us(&rr, threads, &outcome.per_shard);
+    let busy: Vec<String> = balance
+        .worker_busy_us
+        .iter()
+        .map(|&us| format!("{:.1}", us as f64 / 1e6))
+        .collect();
+    eprintln!(
+        "worker balance ({:?}): busy_s [{}], max/min {:.2} (round-robin {:.2}), steal_events {}",
+        balance.mode,
+        busy.join(" "),
+        balance.busy_ratio(),
+        busy_ratio(&rr_busy),
+        balance.steal_events
+    );
+}
+
 /// Resolve `--<flag>` (an algorithm name) plus the optional `--backend`
 /// into a scheduling policy. `--backend` selects the execution engine of
 /// the SimpleDP policy, so it only combines with `--<flag> SimpleDP` (the
@@ -293,7 +334,9 @@ fn cmd_dataset_stats(args: &Args) {
 }
 
 fn cmd_figures(args: &Args) {
-    args.reject_unknown(&["experiment", "data", "out", "max-k", "algos", "seed", "tapes"]);
+    args.reject_unknown(&[
+        "experiment", "data", "out", "max-k", "algos", "seed", "tapes", "threads",
+    ]);
     let experiment = args.get_or("experiment", "all");
     let ds = dataset_from(args);
     let out_dir = PathBuf::from(args.get_or("out", "results"));
@@ -303,6 +346,19 @@ fn cmd_figures(args: &Args) {
     let max_k = match args.get_parsed_or("max-k", 80usize) {
         0 => None,
         k => Some(k),
+    };
+    // --threads N caps the sweep's thread pool (default: one per core).
+    // The records are identical for any width — this is a machine-share
+    // knob, not a result knob.
+    let threads = match args.get("threads") {
+        None => None,
+        Some(_) => match args.get_parsed_or("threads", 0usize) {
+            0 => {
+                eprintln!("error: --threads must be positive");
+                std::process::exit(2);
+            }
+            n => Some(n),
+        },
     };
 
     let schedulers: Vec<Box<dyn Scheduler + Send + Sync>> = match args.get("algos") {
@@ -333,7 +389,7 @@ fn cmd_figures(args: &Args) {
 
     for (name, u) in runs {
         eprintln!("running {name} (U = {u}) on {} tapes…", ds.tapes.len());
-        let table = run_evaluation(&ds, &schedulers, u, max_k);
+        let table = run_evaluation_with_threads(&ds, &schedulers, u, max_k, threads);
         let profile_path = out_dir.join(format!("{name}.csv"));
         std::fs::write(&profile_path, table.profiles_csv("DP")).expect("write profiles");
         let raw_path = out_dir.join(format!("{name}_raw.csv"));
@@ -545,6 +601,12 @@ fn cmd_serve(args: &Args) {
             let (hits, misses) = dense_cache_stats();
             println!("  dense cache hits/misses = {hits} / {misses}");
         }
+        if incremental_backend_selected(args) {
+            println!(
+                "  incremental appends/rebuilds = {} / {}",
+                m.incremental_appends, m.incremental_rebuilds
+            );
+        }
         return;
     }
 
@@ -604,6 +666,19 @@ fn cmd_serve(args: &Args) {
         let (hits, misses) = dense_cache_stats();
         println!("  dense cache hits/misses = {hits} / {misses}");
     }
+    if incremental_backend_selected(args) {
+        println!(
+            "  incremental appends/rebuilds = {} / {}",
+            m.incremental_appends, m.incremental_rebuilds
+        );
+        // The drain triple the perf-smoke gate checks (`submitted =
+        // completed + shed` with nonzero appends): the incremental path
+        // must repair tables, never drop work.
+        println!(
+            "  drain submitted/completed/shed = {} / {} / {}",
+            m.submitted, m.completed, m.shed
+        );
+    }
     if let (Some(path), Some(trace)) = (args.get("trace-out"), &trace) {
         write_trace(path, trace);
     }
@@ -650,7 +725,7 @@ fn cmd_replay(args: &Args) {
         "arrivals", "rate", "duration", "policy", "drives", "seed", "mode", "cap", "data",
         "tapes", "backend", "window-ms", "max-batch", "backlog", "out", "shards", "vnodes",
         "arms", "affinity", "exclusive-tapes", "trace-file", "smoke", "connect", "requests",
-        "trace-out", "trace-cap", "threads",
+        "trace-out", "trace-cap", "threads", "steal",
     ]);
     // --connect ADDR: there is no virtual clock across a process boundary,
     // so a networked replay degrades to the wall-clock closed-loop driver —
@@ -730,6 +805,16 @@ fn cmd_replay(args: &Args) {
             std::process::exit(2);
         }
     }
+    // --steal: epoch-barrier work stealing on top of the pre-pass
+    // assignment. Ownership stays a pure function of the seeded pre-pass,
+    // so the report is byte-identical either way; only the balance
+    // evidence printed to stderr changes.
+    let steal = args.has("steal");
+    if steal && threads <= 1 {
+        eprintln!("error: --steal rebalances parallel workers; combine it with --threads N > 1");
+        std::process::exit(2);
+    }
+    let assign_mode = if steal { AssignMode::Stolen } else { AssignMode::Weighted };
     let n_arms = args.get_parsed_or("arms", 0usize);
     let affinity = Affinity::from_name(&args.get_choice_or("affinity", &["none", "lru"], "none"))
         .expect("choice already validated");
@@ -928,7 +1013,7 @@ fn cmd_replay(args: &Args) {
     let mut arena = ReplayArena::new();
     for policy in &policies {
         let (report, outcome) = if threads > 1 {
-            run_replay_parallel(
+            let (report, outcome, balance) = run_replay_parallel(
                 &cfg,
                 &catalog,
                 policy.as_ref(),
@@ -936,7 +1021,10 @@ fn cmd_replay(args: &Args) {
                 seed,
                 duration,
                 threads,
-            )
+                assign_mode,
+            );
+            print_worker_balance(&balance, &outcome);
+            (report, outcome)
         } else if trace.is_some() {
             let mut model = make_model();
             run_replay_traced(
@@ -985,6 +1073,10 @@ fn cmd_replay(args: &Args) {
     if dense_backend_selected(args) {
         let (hits, misses) = dense_cache_stats();
         eprintln!("dense cache hits/misses: {hits} / {misses}");
+    }
+    if incremental_backend_selected(args) {
+        let (appends, rebuilds) = incremental_stats();
+        eprintln!("incremental appends/rebuilds: {appends} / {rebuilds}");
     }
     if let (Some(path), Some(trace)) = (args.get("trace-out"), &trace) {
         write_trace(path, trace);

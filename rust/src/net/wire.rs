@@ -41,8 +41,10 @@ use crate::sim::{Affinity, DriveParams};
 /// handshake rejects a peer with a different version outright — there is
 /// no negotiation, the fleet is deployed as one unit. Version 2 added
 /// the push-telemetry roles, `MetricsPush`/`MetricsPushAck` (tags
-/// 13–14), and `Assign::push_ms`.
-pub const PROTOCOL_VERSION: u16 = 2;
+/// 13–14), and `Assign::push_ms`. Version 3 appended the incremental
+/// backend's repair counters (`incremental_appends`/`incremental_rebuilds`)
+/// to the [`MetricsSnapshot`] encoding.
+pub const PROTOCOL_VERSION: u16 = 3;
 
 /// Decode failure: the payload did not match its tag's schema.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -367,6 +369,8 @@ fn put_snapshot(out: &mut Vec<u8>, m: &MetricsSnapshot) {
     put_f64(out, m.mean_sched_s_per_batch);
     put_f64(out, m.p50_latency_s);
     put_f64(out, m.p99_latency_s);
+    put_u64(out, m.incremental_appends);
+    put_u64(out, m.incremental_rebuilds);
 }
 
 fn get_snapshot(r: &mut Reader<'_>) -> Result<MetricsSnapshot, WireError> {
@@ -389,6 +393,8 @@ fn get_snapshot(r: &mut Reader<'_>) -> Result<MetricsSnapshot, WireError> {
         mean_sched_s_per_batch: r.f64()?,
         p50_latency_s: r.f64()?,
         p99_latency_s: r.f64()?,
+        incremental_appends: r.u64()?,
+        incremental_rebuilds: r.u64()?,
     })
 }
 
@@ -604,6 +610,8 @@ mod tests {
             mean_sched_s_per_batch: 0.0009765625,
             p50_latency_s: 55.5,
             p99_latency_s: 120.75,
+            incremental_appends: 34,
+            incremental_rebuilds: 7,
         }
     }
 

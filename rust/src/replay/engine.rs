@@ -21,12 +21,20 @@
 //!
 //! **Parallel mode** ([`simulate_parallel`]) exploits that shards are
 //! independent between routing decisions: each of `N` worker threads
-//! replays the *same* arrival stream against the shards it owns
-//! (`shard % N`), counting foreign arrivals as phantoms so request ids
-//! and event-queue positions stay aligned, and the per-worker outcomes
-//! merge into a [`ReplayOutcome`] byte-identical to the single-threaded
-//! one (ci-gated). Open loop only — the closed-loop in-flight cap couples
-//! shards through global state.
+//! replays the *same* arrival stream against the shards it owns,
+//! counting foreign arrivals as phantoms so request ids and event-queue
+//! positions stay aligned, and the per-worker outcomes merge into a
+//! [`ReplayOutcome`] byte-identical to the single-threaded one
+//! (ci-gated). Ownership comes from a deterministic pre-pass over the
+//! arrival stream ([`AssignMode`]): a greedy LPT bin-pack over per-shard
+//! arrival weights by default, static `shard % N` round-robin as the
+//! counterfactual baseline, and an epoch-barrier work-stealing re-pack
+//! (`--steal`) on top of round-robin. Because the assignment is a pure
+//! function of the seeded pre-pass, every mode replays the exact same
+//! events — [`simulate_parallel_balanced`] reports who served what in a
+//! [`WorkerBalance`] side channel instead of perturbing the outcome.
+//! Open loop only — the closed-loop in-flight cap couples shards through
+//! global state.
 //!
 //! Two driver disciplines:
 //!
@@ -474,23 +482,243 @@ pub fn simulate_with_arena(
     simulate_impl(cfg, catalog, policy, model, None, None, Some(arena))
 }
 
-/// Fan a sharded open-loop replay out over `threads` OS threads — one
-/// worker per shard group (`shard % threads == worker`) — and merge the
-/// per-worker outcomes deterministically. Every worker replays the *same*
-/// arrival stream from its own `make_model()` instance (the factory must
-/// yield identical streams: a seeded synthetic model or a shared trace),
-/// serving the requests of its own shards and dropping the rest as
-/// phantoms, which keeps request ids, event-queue positions, and each
-/// shard's FIFO tie-break order exactly as in the single-threaded run.
-/// The merged [`ReplayOutcome`] is therefore identical to [`simulate`]'s
-/// — same completion log, histograms, and per-shard breakdown; only the
-/// wall-clock `sched_wall_s` diagnostic differs (it sums real compute
-/// across workers) — and the `--threads 4` vs `--threads 1` QoS `cmp`
-/// gate in ci.sh pins the reports byte for byte.
+/// How [`simulate_parallel_balanced`] maps shards to worker threads.
+/// Ownership is decided *before* the replay, from a deterministic
+/// pre-pass over the arrival stream, so every mode preserves the
+/// byte-identical merge contract — the modes differ only in which worker
+/// serves which shard, never in what any shard computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignMode {
+    /// Static `shard % threads` ownership — the pre-balancing scheme,
+    /// kept as the counterfactual baseline (it idles workers on skewed
+    /// rings).
+    RoundRobin,
+    /// Greedy LPT bin-pack over pre-pass arrival weights: shards sorted
+    /// by (weight desc, id asc) land on the least-loaded worker,
+    /// lowest-index tie-break. The default for `--threads N`.
+    Weighted,
+    /// Deterministic work stealing (`--steal`): start from round-robin,
+    /// then at each fixed virtual-time epoch barrier move shards that
+    /// still have remaining work off overloaded workers whenever the
+    /// move strictly improves the projected balance — a lower maximum
+    /// load, or a higher minimum at equal maximum. Each accepted move is
+    /// one [`WorkerBalance::steal_events`] count.
+    Stolen,
+}
+
+/// Virtual-time barriers the [`AssignMode::Stolen`] re-pack evaluates at:
+/// the pre-pass horizon is split into this many equal epochs.
+const STEAL_EPOCHS: usize = 8;
+
+/// The balance side channel of [`simulate_parallel_balanced`]: which
+/// worker owned which shard and how busy each worker's shards kept it.
+/// Deliberately *not* part of [`ReplayOutcome`] — the QoS report stays
+/// byte-identical across thread counts and assignment modes (the ci.sh
+/// `cmp` gate), so balance evidence travels next to the outcome, never
+/// inside it.
+#[derive(Debug, Clone)]
+pub struct WorkerBalance {
+    pub mode: AssignMode,
+    /// Shard → owning worker.
+    pub assignment: Vec<usize>,
+    /// Σ virtual `busy_drive_us` over each worker's shards — the
+    /// deterministic measure of how much serving work each worker did.
+    pub worker_busy_us: Vec<u64>,
+    /// Accepted epoch-barrier moves (0 outside [`AssignMode::Stolen`]).
+    pub steal_events: u64,
+    /// Pre-pass per-shard arrival counts (empty for `RoundRobin`, which
+    /// runs no pre-pass).
+    pub shard_weights: Vec<u64>,
+}
+
+impl WorkerBalance {
+    /// `max/min` worker busy time: 1.0 for an idle replay, `∞` when some
+    /// worker stayed idle while another served.
+    pub fn busy_ratio(&self) -> f64 {
+        busy_ratio(&self.worker_busy_us)
+    }
+}
+
+/// `max/min` over per-worker busy times (see [`WorkerBalance::busy_ratio`]).
+pub fn busy_ratio(busy: &[u64]) -> f64 {
+    let max = busy.iter().copied().max().unwrap_or(0);
+    let min = busy.iter().copied().min().unwrap_or(0);
+    if max == 0 {
+        1.0
+    } else if min == 0 {
+        f64::INFINITY
+    } else {
+        max as f64 / min as f64
+    }
+}
+
+/// The static `shard % threads` ownership vector.
+pub fn round_robin_assignment(n_shards: usize, threads: usize) -> Vec<usize> {
+    (0..n_shards).map(|s| s % threads).collect()
+}
+
+/// Σ `busy_drive_us` of each worker's shards under `assignment` — usable
+/// against any outcome's per-shard breakdown, so the counterfactual
+/// round-robin balance can be computed from the same run.
+pub fn worker_busy_us(
+    assignment: &[usize],
+    threads: usize,
+    per_shard: &[ShardOutcome],
+) -> Vec<u64> {
+    let mut busy = vec![0u64; threads];
+    for sh in per_shard {
+        busy[assignment[sh.shard]] += sh.stats.busy_drive_us;
+    }
+    busy
+}
+
+/// Pre-pass: replay the arrival stream (routing only, no serving),
+/// counting arrivals per shard and the stream horizon. The ring and
+/// route duplicate `simulate_impl`'s exactly, so the weights describe
+/// precisely the work each shard will see.
+fn prepass_weights(
+    cfg: &ReplayConfig,
+    catalog: &[Tape],
+    model: &mut dyn ArrivalModel,
+) -> (Vec<u64>, f64) {
+    let ring = HashRing::new(cfg.n_shards, cfg.vnodes);
+    let tape_shard: Vec<usize> = catalog.iter().map(|t| ring.route(&t.name)).collect();
+    let mut weights = vec![0u64; cfg.n_shards];
+    let mut horizon_s = 0.0f64;
+    while let Some(a) = model.next_arrival() {
+        weights[tape_shard[a.tape]] += 1;
+        horizon_s = horizon_s.max(a.at_s);
+    }
+    (weights, horizon_s)
+}
+
+/// Second pre-pass for [`AssignMode::Stolen`]: bucket each shard's
+/// arrivals into [`STEAL_EPOCHS`] equal slices of `[0, horizon]`.
+fn prepass_epochs(
+    cfg: &ReplayConfig,
+    catalog: &[Tape],
+    model: &mut dyn ArrivalModel,
+    horizon_s: f64,
+) -> Vec<Vec<u64>> {
+    let ring = HashRing::new(cfg.n_shards, cfg.vnodes);
+    let tape_shard: Vec<usize> = catalog.iter().map(|t| ring.route(&t.name)).collect();
+    let mut buckets = vec![vec![0u64; STEAL_EPOCHS]; cfg.n_shards];
+    while let Some(a) = model.next_arrival() {
+        let e = if horizon_s > 0.0 {
+            (((a.at_s / horizon_s) * STEAL_EPOCHS as f64) as usize).min(STEAL_EPOCHS - 1)
+        } else {
+            0
+        };
+        buckets[tape_shard[a.tape]][e] += 1;
+    }
+    buckets
+}
+
+/// Least-loaded worker, lowest index on ties.
+fn least_loaded(load: &[u64]) -> usize {
+    let mut best = 0;
+    for w in 1..load.len() {
+        if load[w] < load[best] {
+            best = w;
+        }
+    }
+    best
+}
+
+/// Greedy LPT bin-pack: heaviest shard first onto the least-loaded
+/// worker — the deterministic assignment behind [`AssignMode::Weighted`].
+fn lpt_assignment(weights: &[u64], threads: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by_key(|&s| (std::cmp::Reverse(weights[s]), s));
+    let mut load = vec![0u64; threads];
+    let mut assignment = vec![0usize; weights.len()];
+    for s in order {
+        let w = least_loaded(&load);
+        assignment[s] = w;
+        load[w] += weights[s];
+    }
+    assignment
+}
+
+/// Epoch-barrier steal refinement: starting from `assignment`, consider
+/// at each barrier the shards that still have work in the remaining
+/// epochs (heaviest remaining first, shard-id tie-break) and move one to
+/// the least-loaded worker whenever that strictly improves the projected
+/// balance — `(max load, -min load)` drops lexicographically, so a steal
+/// either shrinks the straggler or feeds an idle worker without growing
+/// the straggler. A move re-homes the shard's *whole* lifetime — replay
+/// state cannot migrate mid-run — so the barriers only stage which
+/// candidates are considered when. Pure arithmetic over the pre-pass:
+/// the final assignment is a function of (epoch weights, threads) alone,
+/// which is what keeps the stolen replay byte-identical.
+fn steal_refine(epochs: &[Vec<u64>], threads: usize, assignment: &mut [usize]) -> u64 {
+    let totals: Vec<u64> = epochs.iter().map(|b| b.iter().sum()).collect();
+    let mut load = vec![0u64; threads];
+    for (s, &w) in assignment.iter().enumerate() {
+        load[w] += totals[s];
+    }
+    let extremes = |load: &[u64]| {
+        let max = load.iter().copied().max().unwrap_or(0);
+        let min = load.iter().copied().min().unwrap_or(0);
+        (max, min)
+    };
+    let mut steals = 0u64;
+    for e in 0..STEAL_EPOCHS {
+        let remaining: Vec<u64> = epochs.iter().map(|b| b[e..].iter().sum()).collect();
+        let mut order: Vec<usize> = (0..epochs.len()).collect();
+        order.sort_by_key(|&s| (std::cmp::Reverse(remaining[s]), s));
+        for s in order {
+            if remaining[s] == 0 {
+                continue;
+            }
+            let cur = assignment[s];
+            let target = least_loaded(&load);
+            if target == cur {
+                continue;
+            }
+            let (max_before, min_before) = extremes(&load);
+            let after: Vec<u64> = load
+                .iter()
+                .enumerate()
+                .map(|(w, &l)| match w {
+                    _ if w == cur => l - totals[s],
+                    _ if w == target => l + totals[s],
+                    _ => l,
+                })
+                .collect();
+            let (max_after, min_after) = extremes(&after);
+            let improves = max_after < max_before
+                || (max_after == max_before && min_after > min_before);
+            if improves {
+                load = after;
+                assignment[s] = target;
+                steals += 1;
+            }
+        }
+    }
+    steals
+}
+
+/// Fan a sharded open-loop replay out over `threads` OS threads and merge
+/// the per-worker outcomes deterministically, assigning shards to workers
+/// by pre-pass weight ([`AssignMode::Weighted`] — see
+/// [`simulate_parallel_balanced`] for the other modes and the balance
+/// side channel). Every worker replays the *same* arrival stream from its
+/// own `make_model()` instance (the factory must yield identical streams:
+/// a seeded synthetic model or a shared trace), serving the requests of
+/// its own shards and dropping the rest as phantoms, which keeps request
+/// ids, event-queue positions, and each shard's FIFO tie-break order
+/// exactly as in the single-threaded run. The merged [`ReplayOutcome`] is
+/// therefore identical to [`simulate`]'s — same completion log,
+/// histograms, and per-shard breakdown; only the wall-clock
+/// `sched_wall_s` diagnostic differs (it sums real compute across
+/// workers) — and the `--threads 4` vs `--threads 1` QoS `cmp` gate in
+/// ci.sh pins the reports byte for byte.
 ///
 /// Open loop only: the closed-loop in-flight cap and client queue couple
 /// shards through global state, so masking shards would change behavior.
-/// `threads` is clamped to `[1, n_shards]`; a clamp to 1 runs plain
+/// `threads` is clamped to `[1, n_shards]` (with a stderr note — a
+/// worker without shards would only idle); a clamp to 1 runs plain
 /// [`simulate`].
 pub fn simulate_parallel(
     cfg: &ReplayConfig,
@@ -499,35 +727,92 @@ pub fn simulate_parallel(
     make_model: &(dyn Fn() -> Box<dyn ArrivalModel> + Sync),
     threads: usize,
 ) -> ReplayOutcome {
+    simulate_parallel_balanced(cfg, catalog, policy, make_model, threads, AssignMode::Weighted).0
+}
+
+/// [`simulate_parallel`] with an explicit [`AssignMode`], returning the
+/// [`WorkerBalance`] side channel next to the outcome. The outcome is
+/// byte-identical across every mode and thread count (test-pinned);
+/// only the balance — who served what, and how evenly — changes.
+pub fn simulate_parallel_balanced(
+    cfg: &ReplayConfig,
+    catalog: &[Tape],
+    policy: &(dyn Scheduler + Sync),
+    make_model: &(dyn Fn() -> Box<dyn ArrivalModel> + Sync),
+    threads: usize,
+    mode: AssignMode,
+) -> (ReplayOutcome, WorkerBalance) {
     assert!(
         matches!(cfg.mode, LoopMode::Open),
         "parallel replay requires open-loop mode (the closed-loop in-flight cap couples shards)"
     );
-    let threads = threads.clamp(1, cfg.n_shards.max(1));
-    if threads == 1 {
-        return simulate(cfg, catalog, policy, make_model().as_mut());
+    let ceiling = cfg.n_shards.max(1);
+    if threads > ceiling {
+        eprintln!(
+            "tapesched: clamping --threads {threads} to {ceiling} \
+             (one worker per shard is the parallel ceiling; extra workers would own nothing)"
+        );
     }
-    let mut slots: Vec<Option<ReplayOutcome>> = Vec::new();
-    slots.resize_with(threads, || None);
-    std::thread::scope(|scope| {
-        for (w, slot) in slots.iter_mut().enumerate() {
-            scope.spawn(move || {
-                let owned: Vec<bool> =
-                    (0..cfg.n_shards).map(|s| s % threads == w).collect();
-                let mut model = make_model();
-                *slot = Some(simulate_impl(
-                    cfg,
-                    catalog,
-                    policy,
-                    model.as_mut(),
-                    None,
-                    Some(&owned),
-                    None,
-                ));
-            });
+    let threads = threads.clamp(1, ceiling);
+    let mut steal_events = 0u64;
+    let (assignment, shard_weights) = if threads == 1 {
+        (vec![0usize; cfg.n_shards], Vec::new())
+    } else {
+        match mode {
+            AssignMode::RoundRobin => {
+                (round_robin_assignment(cfg.n_shards, threads), Vec::new())
+            }
+            AssignMode::Weighted => {
+                let (weights, _) = prepass_weights(cfg, catalog, make_model().as_mut());
+                (lpt_assignment(&weights, threads), weights)
+            }
+            AssignMode::Stolen => {
+                let (weights, horizon_s) =
+                    prepass_weights(cfg, catalog, make_model().as_mut());
+                let epochs = prepass_epochs(cfg, catalog, make_model().as_mut(), horizon_s);
+                let mut assignment = round_robin_assignment(cfg.n_shards, threads);
+                steal_events = steal_refine(&epochs, threads, &mut assignment);
+                (assignment, weights)
+            }
         }
-    });
-    merge_outcomes(cfg, threads, slots.into_iter().map(Option::unwrap).collect())
+    };
+    let outcome = if threads == 1 {
+        simulate(cfg, catalog, policy, make_model().as_mut())
+    } else {
+        let mut slots: Vec<Option<ReplayOutcome>> = Vec::new();
+        slots.resize_with(threads, || None);
+        std::thread::scope(|scope| {
+            for (w, slot) in slots.iter_mut().enumerate() {
+                let assignment = &assignment;
+                scope.spawn(move || {
+                    let owned: Vec<bool> =
+                        (0..cfg.n_shards).map(|s| assignment[s] == w).collect();
+                    let mut model = make_model();
+                    *slot = Some(simulate_impl(
+                        cfg,
+                        catalog,
+                        policy,
+                        model.as_mut(),
+                        None,
+                        Some(&owned),
+                        None,
+                    ));
+                });
+            }
+        });
+        merge_outcomes(cfg, &assignment, slots.into_iter().map(Option::unwrap).collect())
+    };
+    let busy = worker_busy_us(&assignment, threads, &outcome.per_shard);
+    (
+        outcome,
+        WorkerBalance {
+            mode,
+            assignment,
+            worker_busy_us: busy,
+            steal_events,
+            shard_weights,
+        },
+    )
 }
 
 /// Deterministically merge the per-worker outcomes of a parallel replay.
@@ -535,10 +820,10 @@ pub fn simulate_parallel(
 /// and sorting reproduces the single-threaded log exactly; the integer
 /// counters and histograms sum exactly because every fleet-level
 /// increment in the engine pairs with a shard-level one and each shard
-/// lives in exactly one worker.
+/// lives in exactly one worker (`assignment[shard]`).
 fn merge_outcomes(
     cfg: &ReplayConfig,
-    threads: usize,
+    assignment: &[usize],
     workers: Vec<ReplayOutcome>,
 ) -> ReplayOutcome {
     let mut stats = ReplayStats::default();
@@ -574,7 +859,7 @@ fn merge_outcomes(
         drive_wait.merge(&out.drive_wait);
         cartridge_wait.merge(&out.cartridge_wait);
         for sh in out.per_shard {
-            if sh.shard % threads == w {
+            if assignment[sh.shard] == w {
                 per_shard[sh.shard] = Some(sh);
             }
         }
@@ -1691,6 +1976,174 @@ mod tests {
         );
         let par = simulate_parallel(&config, &catalog, &SimpleDp, &make_model, 3);
         assert_outcomes_identical(&single, &par, "pipeline threads=3");
+    }
+
+    /// Build a deliberately skewed catalog: `hot_tapes` tapes routing to
+    /// shard `hot` plus exactly one tape on each shard in `colds`, found
+    /// by scanning candidate names through the same ring the engine
+    /// builds. All other shards stay empty — the hot shard carries the
+    /// overwhelming share of the ring.
+    fn skewed_catalog(
+        n_shards: usize,
+        vnodes: usize,
+        hot: usize,
+        colds: &[usize],
+        hot_tapes: usize,
+    ) -> Vec<Tape> {
+        let ring = HashRing::new(n_shards, vnodes);
+        let mut tapes = Vec::new();
+        let mut hot_found = 0usize;
+        let mut cold_found = vec![false; colds.len()];
+        let mut i = 0usize;
+        while hot_found < hot_tapes || cold_found.iter().any(|&c| !c) {
+            let name = format!("SKEW{i:05}");
+            let s = ring.route(&name);
+            if s == hot && hot_found < hot_tapes {
+                tapes.push(Tape::from_sizes(name, &[1_000; 40]));
+                hot_found += 1;
+            } else if let Some(k) = colds.iter().position(|&c| c == s) {
+                if !cold_found[k] {
+                    tapes.push(Tape::from_sizes(name, &[1_000; 40]));
+                    cold_found[k] = true;
+                }
+            }
+            i += 1;
+            assert!(i < 200_000, "ring never routed a candidate to the target shards");
+        }
+        tapes
+    }
+
+    #[test]
+    fn skewed_ring_replay_is_byte_identical_across_assign_modes() {
+        // One hot shard holding 90% of the tapes (18 of 20), the rest on
+        // a single cold shard whose id collides with the hot worker under
+        // both `threads % 2` and `threads % 3` masks — the worst case for
+        // round-robin. Every (threads, mode) combination must still
+        // reproduce the single-threaded outcome byte for byte: ownership
+        // is a pure function of the seeded pre-pass, never of timing.
+        let mut config = cfg(LoopMode::Open);
+        config.n_shards = 9;
+        config.vnodes = 64;
+        let catalog = skewed_catalog(config.n_shards, config.vnodes, 0, &[6], 18);
+        assert_eq!(catalog.len(), 20);
+        let make_model = || -> Box<dyn ArrivalModel> {
+            Box::new(PoissonArrivals::new(RequestMix::new(&catalog), 60.0, 10.0, 7))
+        };
+        let single = simulate(&config, &catalog, &Gs, make_model().as_mut());
+        assert!(single.stats.completed > 300, "workload too small to be probative");
+        for threads in [2, 3, 9] {
+            for mode in [AssignMode::RoundRobin, AssignMode::Weighted, AssignMode::Stolen] {
+                let (par, balance) = simulate_parallel_balanced(
+                    &config, &catalog, &Gs, &make_model, threads, mode,
+                );
+                assert_outcomes_identical(
+                    &single,
+                    &par,
+                    &format!("threads={threads} mode={mode:?}"),
+                );
+                assert_eq!(balance.assignment.len(), config.n_shards);
+                assert_eq!(balance.worker_busy_us.len(), threads);
+                assert_eq!(
+                    balance.worker_busy_us.iter().sum::<u64>(),
+                    single.stats.busy_drive_us,
+                    "worker busy times must partition the fleet total"
+                );
+                if mode != AssignMode::Stolen {
+                    assert_eq!(balance.steal_events, 0, "steals only happen under --steal");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_and_stolen_strictly_beat_round_robin_on_a_hot_shard() {
+        // Geometry chosen so round-robin piles the hot shard *and* both
+        // cold shards onto worker 0 (cold ids ≡ hot id modulo the thread
+        // count), leaving the other workers fully idle: busy ratio ∞.
+        // The weight-aware assignments must split the work — a finite
+        // ratio — and the stolen re-pack must record the moves it made.
+        for (threads, colds) in [(2usize, [2usize, 4]), (3, [3, 6])] {
+            let mut config = cfg(LoopMode::Open);
+            config.n_shards = 9;
+            config.vnodes = 64;
+            let catalog = skewed_catalog(config.n_shards, config.vnodes, 0, &colds, 18);
+            let make_model = || -> Box<dyn ArrivalModel> {
+                Box::new(PoissonArrivals::new(RequestMix::new(&catalog), 60.0, 10.0, 7))
+            };
+            let run = |mode| {
+                simulate_parallel_balanced(&config, &catalog, &Gs, &make_model, threads, mode)
+            };
+            let (out_rr, rr) = run(AssignMode::RoundRobin);
+            let (out_w, weighted) = run(AssignMode::Weighted);
+            let (out_s, stolen) = run(AssignMode::Stolen);
+            assert_outcomes_identical(&out_rr, &out_w, &format!("t={threads} rr vs weighted"));
+            assert_outcomes_identical(&out_rr, &out_s, &format!("t={threads} rr vs stolen"));
+            assert!(
+                rr.busy_ratio().is_infinite(),
+                "t={threads}: round-robin should idle a worker on this geometry"
+            );
+            for (name, b) in [("weighted", &weighted), ("stolen", &stolen)] {
+                assert!(
+                    b.busy_ratio().is_finite(),
+                    "t={threads} {name}: every worker should get busy shards"
+                );
+                assert!(
+                    b.busy_ratio() < rr.busy_ratio(),
+                    "t={threads} {name}: busy ratio must strictly improve on round-robin"
+                );
+            }
+            assert!(
+                stolen.steal_events > 0,
+                "t={threads}: the re-pack must record its moves"
+            );
+            assert!(!weighted.shard_weights.is_empty() && !stolen.shard_weights.is_empty());
+        }
+        // At threads == n_shards every worker owns exactly one shard in
+        // every scheme — no move can lower the max, so stealing is a
+        // recorded no-op and the ratio can only tie round-robin's.
+        let mut config = cfg(LoopMode::Open);
+        config.n_shards = 9;
+        config.vnodes = 64;
+        let catalog = skewed_catalog(config.n_shards, config.vnodes, 0, &[6], 18);
+        let make_model = || -> Box<dyn ArrivalModel> {
+            Box::new(PoissonArrivals::new(RequestMix::new(&catalog), 60.0, 10.0, 7))
+        };
+        let (_, rr) =
+            simulate_parallel_balanced(&config, &catalog, &Gs, &make_model, 9, AssignMode::RoundRobin);
+        let (_, stolen) =
+            simulate_parallel_balanced(&config, &catalog, &Gs, &make_model, 9, AssignMode::Stolen);
+        assert_eq!(stolen.steal_events, 0);
+        assert!(stolen.busy_ratio() <= rr.busy_ratio() || stolen.busy_ratio().is_infinite());
+    }
+
+    #[test]
+    fn lpt_and_steal_assignments_are_deterministic_functions_of_weights() {
+        // Pure-arithmetic sanity on the packers themselves, no replay:
+        // LPT puts the heavy shard alone and balances the rest with
+        // lowest-index tie-breaks; the steal refinement repairs the
+        // round-robin pile-up and counts exactly its accepted moves.
+        let weights = [100u64, 10, 10, 10, 0];
+        let a = lpt_assignment(&weights, 2);
+        assert_eq!(a, vec![0, 1, 1, 1, 1]);
+        let mut rr = round_robin_assignment(5, 2);
+        assert_eq!(rr, vec![0, 1, 0, 1, 0]);
+        // All weight in one epoch: shard 0 (100) + shards 2 (10) and
+        // 4 (0) start on worker 0 (load 110) vs worker 1 (load 20);
+        // moving shard 2 to worker 1 lowers the max (110 → 100), then no
+        // further move helps.
+        let epochs: Vec<Vec<u64>> = weights.iter().map(|&w| {
+            let mut b = vec![0u64; STEAL_EPOCHS];
+            b[0] = w;
+            b
+        }).collect();
+        let steals = steal_refine(&epochs, 2, &mut rr);
+        assert_eq!(steals, 1);
+        assert_eq!(rr, vec![0, 1, 1, 1, 0]);
+        let busy = worker_busy_us(&[0, 1, 1], 2, &[]);
+        assert_eq!(busy, vec![0, 0]);
+        assert_eq!(busy_ratio(&[0, 0]), 1.0);
+        assert!(busy_ratio(&[5, 0]).is_infinite());
+        assert!((busy_ratio(&[10, 5]) - 2.0).abs() < 1e-12);
     }
 
     #[test]

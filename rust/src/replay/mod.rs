@@ -59,8 +59,9 @@ pub use arrivals::{
 pub use clock::{EventQueue, VirtualClock};
 pub use driver::{drive_closed_loop, LiveDriveStats, RequestSink};
 pub use engine::{
-    simulate, simulate_parallel, simulate_traced, simulate_with_arena, LoopMode, ReplayArena,
-    ReplayCompletion, ReplayConfig, ReplayOutcome, ReplayStats, ShardOutcome,
+    busy_ratio, round_robin_assignment, simulate, simulate_parallel, simulate_parallel_balanced,
+    simulate_traced, simulate_with_arena, worker_busy_us, AssignMode, LoopMode, ReplayArena,
+    ReplayCompletion, ReplayConfig, ReplayOutcome, ReplayStats, ShardOutcome, WorkerBalance,
 };
 pub use histogram::LatencyHistogram;
 pub use report::{reports_json, LatencyStats, QosReport, ShardQos};
@@ -129,7 +130,11 @@ pub fn run_replay_with_arena(
 /// [`run_replay`] over `threads` worker threads (open-loop sharded
 /// replays only — see [`simulate_parallel`] for the determinism
 /// contract). `make_model` must yield identical arrival streams on every
-/// call; the report is byte-identical to the single-threaded one.
+/// call; the report is byte-identical to the single-threaded one for any
+/// [`AssignMode`]. The returned [`WorkerBalance`] is the side channel
+/// describing how evenly the work landed — callers print it to stderr or
+/// benches, never into the QoS JSON.
+#[allow(clippy::too_many_arguments)]
 pub fn run_replay_parallel(
     cfg: &ReplayConfig,
     catalog: &[Tape],
@@ -138,10 +143,12 @@ pub fn run_replay_parallel(
     seed: u64,
     duration_s: f64,
     threads: usize,
-) -> (QosReport, ReplayOutcome) {
+    mode: AssignMode,
+) -> (QosReport, ReplayOutcome, WorkerBalance) {
     let policy_name = policy.name();
     let arrivals_name = make_model().name();
-    let outcome = engine::simulate_parallel(cfg, catalog, policy, make_model, threads);
+    let (outcome, balance) =
+        engine::simulate_parallel_balanced(cfg, catalog, policy, make_model, threads, mode);
     let report = QosReport::new(&policy_name, &arrivals_name, seed, duration_s, cfg, &outcome);
-    (report, outcome)
+    (report, outcome, balance)
 }

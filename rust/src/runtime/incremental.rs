@@ -31,21 +31,44 @@
 //! Any non-append mutation — a multiplicity bump, an insertion before the
 //! last file, a different tape geometry or `U` — falls back to a full
 //! rebuild (same table layout, so the next append extends again).
-//! Schedules always go through the scratch solver: reconstruction needs
-//! the choice table, which the repair path deliberately does not maintain.
 //!
-//! [`IncrementalBackend`] wraps a thread-local table behind the
-//! [`SimpleDpBackend`] seam (CLI id `incremental`), with process-wide
-//! append/fallback counters exported via [`incremental_stats`].
+//! ## Schedules without a choice table
+//!
+//! The repair path deliberately keeps no per-cell decision record, but the
+//! schedule is still reconstructible *exactly* from values alone
+//! (the value walk inside [`IncrementalTable::opt_solve`]): at each cell
+//! re-evaluates the skip branch first and takes it on equality (ties favor
+//! skip, exactly like `fill_dense`'s strict-`<` detour updates), otherwise
+//! scans `c = 1..=b` ascending for the first branch reproducing the cell
+//! value (the recorded choice in a tracked solve is the first `c`
+//! attaining the final minimum). Arithmetic is exact `i128`, so the
+//! decisions — and therefore the detour list — are bit-identical to
+//! [`dense_solve_into`]'s, which is what lets the serving path assert
+//! per-request service times unchanged under `--backend incremental`.
+//!
+//! ## The serving path
+//!
+//! [`IncrementalBackend`] keys thread-local tables by *instance prefix
+//! fingerprint* (tape geometry + `U` + first requested file), one table
+//! per hot tape prefix per thread — coordinator drive workers each get
+//! their own family for free. [`IncrementalTable::opt_solve`] brings the
+//! keyed table to the queried instance by the cheapest route: nothing when
+//! the instance is stored verbatim, a chain of one-file append repairs
+//! when it extends the stored batch (the growing-backlog case), or a
+//! restart from the first file followed by append repairs otherwise.
+//! Process-wide append/rebuild counters are exported via
+//! [`incremental_stats`]; per-thread deltas for the coordinator's
+//! `MetricsSnapshot` via [`take_thread_incremental_stats`].
 //!
 //! [`dense_cost`]: crate::sched::simpledp_dense::dense_cost
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::model::{virtual_lb, Cost, Instance, ReqFile};
 use crate::sched::simpledp_dense::{dense_solve_into, DenseScratch};
-use crate::sched::Schedule;
+use crate::sched::{Detour, Schedule};
 
 use super::SimpleDpBackend;
 
@@ -58,6 +81,38 @@ static INC_FALLBACKS: AtomicU64 = AtomicU64::new(0);
 /// suffix instead; a fallback is a full rebuild.
 pub fn incremental_stats() -> (u64, u64) {
     (INC_APPENDS.load(Ordering::Relaxed), INC_FALLBACKS.load(Ordering::Relaxed))
+}
+
+thread_local! {
+    /// This thread's not-yet-collected (appends, rebuilds) deltas — the
+    /// per-worker attribution behind the coordinator's
+    /// `incremental_appends`/`incremental_rebuilds` snapshot counters
+    /// (the global atomics above cannot distinguish threads).
+    static THREAD_DELTAS: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+}
+
+/// Drain the calling thread's incremental-solver `(appends, rebuilds)`
+/// deltas accumulated since the previous call. A coordinator drive worker
+/// calls this after each dispatch to attribute the solver's work to its
+/// own [`crate::coordinator::SharedMetrics`]; threads that never run the
+/// incremental backend always read `(0, 0)`.
+pub fn take_thread_incremental_stats() -> (u64, u64) {
+    THREAD_DELTAS.with(|d| d.replace((0, 0)))
+}
+
+fn count_incremental(appends: u64, rebuilds: u64) {
+    if appends > 0 {
+        INC_APPENDS.fetch_add(appends, Ordering::Relaxed);
+    }
+    if rebuilds > 0 {
+        INC_FALLBACKS.fetch_add(rebuilds, Ordering::Relaxed);
+    }
+    if appends > 0 || rebuilds > 0 {
+        THREAD_DELTAS.with(|d| {
+            let (a, r) = d.get();
+            d.set((a + appends, r + rebuilds));
+        });
+    }
 }
 
 /// The dense SimpleDP value table of the last solved instance, stored as
@@ -198,17 +253,166 @@ impl IncrementalTable {
         let cost = self.rows[inst.k() - 1][0] + virtual_lb(inst);
         (cost, incremental)
     }
+
+    /// Length of the stored file vector when `inst` extends it (same tape
+    /// geometry and `U`, stored files an exact prefix of `inst`'s): the
+    /// rows that can be kept. `0` means no reuse.
+    fn reusable_prefix(&self, inst: &Instance) -> usize {
+        let len = self.files.len();
+        if len > 0
+            && self.tape_len == inst.tape_len()
+            && self.u == inst.u()
+            && len <= inst.k()
+            && inst.files()[..len] == self.files[..]
+        {
+            len
+        } else {
+            0
+        }
+    }
+
+    /// The `j`-file prefix of `inst` as its own instance (the shape each
+    /// append-repair step solves).
+    fn prefix_instance(inst: &Instance, j: usize) -> Instance {
+        Instance::new(inst.tape_len(), inst.u(), inst.files()[..j].to_vec())
+            .expect("a prefix of a valid instance is itself valid")
+    }
+
+    /// Bring the table to `inst` by the cheapest exact route: no work when
+    /// `inst` is stored verbatim, one append repair per missing file when
+    /// it extends the stored batch, or a restart from the one-file prefix
+    /// (plus append repairs) for any other shape. Returns the
+    /// `(appends, rebuilds)` performed.
+    ///
+    /// Building an unrelated instance through the append chain instead of
+    /// one full wavefront is itself cheaper (each step's new row is
+    /// `Θ(j·n_j)` against the prefix's `n_j`, not the final `n`) and keeps
+    /// the stored batch a growth frontier: the next instance extending it
+    /// pays only its own appended columns.
+    fn sync(&mut self, inst: &Instance) -> (u64, u64) {
+        let k = inst.k();
+        let mut stored = self.reusable_prefix(inst);
+        let mut rebuilds = 0;
+        if stored == 0 {
+            self.rebuild(&Self::prefix_instance(inst, 1));
+            rebuilds = 1;
+            stored = 1;
+        }
+        let appends = (k - stored) as u64;
+        for j in stored + 1..=k {
+            if j == k {
+                self.extend(inst);
+            } else {
+                self.extend(&Self::prefix_instance(inst, j));
+            }
+        }
+        (appends, rebuilds)
+    }
+
+    /// Reconstruct the optimal schedule from table values alone, walking
+    /// root-down and re-deriving each cell's decision by *exact* equality:
+    /// the skip branch is tested first (ties favor skip, as in
+    /// `fill_dense`, whose detour updates are strict `<`), then detour
+    /// branches `c = 1..=b` ascending — the first branch reproducing the
+    /// cell value is the one a tracked solve would have recorded. The
+    /// returned detour list is therefore bit-identical to
+    /// [`dense_solve_into`]'s.
+    ///
+    /// The table must already be synced to `inst`.
+    fn reconstruct(&self, inst: &Instance) -> Schedule {
+        let ns_max = inst.n() as usize;
+        let u = inst.u() as Cost;
+        let mut detours = Vec::new();
+        let (mut b, mut ns) = (inst.k() - 1, 0usize);
+        while b > 0 {
+            let here = self.rows[b][ns];
+            let xb = inst.x(b) as usize;
+            let shifted = (ns + xb).min(ns_max);
+            let gap2 = 2 * (inst.r(b) - inst.r(b - 1)) as Cost;
+            let lead2 = 2 * (inst.l(b) - inst.r(b - 1)) as Cost * inst.x(b) as Cost;
+            if self.rows[b - 1][shifted] + gap2 * ns as Cost + lead2 == here {
+                ns = shifted;
+                b -= 1;
+                continue;
+            }
+            let mut chosen = None;
+            for c in 1..=b {
+                let span2 = 2 * (inst.r(b) - inst.r(c - 1)) as Cost;
+                let det2 = 2 * (u + inst.r(b) as Cost - inst.l(c) as Cost);
+                let v = self.rows[c - 1][ns]
+                    + span2 * ns as Cost
+                    + det2 * (ns as Cost + inst.nl(c) as Cost)
+                    + 2 * inst.in_detour_span_cost(c, b);
+                if v == here {
+                    chosen = Some(c);
+                    break;
+                }
+            }
+            let c = chosen.expect("some branch must reproduce an exact table cell");
+            detours.push(Detour::new(c, b));
+            b = c - 1;
+        }
+        detours
+    }
+
+    /// Exact optimal cost *and* schedule of `inst` through the table:
+    /// sync to the instance, read the root cost, and reconstruct the
+    /// detour list by exact value walk. Returns the `(appends, rebuilds)`
+    /// the sync performed.
+    pub fn opt_solve(&mut self, inst: &Instance) -> (Cost, Schedule, (u64, u64)) {
+        let work = self.sync(inst);
+        let cost = self.rows[inst.k() - 1][0] + virtual_lb(inst);
+        let schedule = self.reconstruct(inst);
+        (cost, schedule, work)
+    }
 }
 
+/// Cap on tables kept per thread: past this the whole family is dropped
+/// (the next solves rebuild). Keeps long multi-tape serving runs at a
+/// bounded footprint without an LRU structure on the hot path.
+const MAX_TABLES_PER_THREAD: usize = 64;
+
 thread_local! {
-    static TABLE: RefCell<IncrementalTable> = RefCell::new(IncrementalTable::new());
+    /// Per-thread table family, keyed by instance prefix fingerprint —
+    /// one growth frontier per hot tape prefix. A coordinator drive
+    /// worker is one thread, so this is exactly the per-worker state the
+    /// serving path wants, with zero synchronization.
+    static TABLES: RefCell<HashMap<u64, IncrementalTable>> = RefCell::new(HashMap::new());
     static SCRATCH: RefCell<DenseScratch> = RefCell::new(DenseScratch::default());
 }
 
-/// Incremental dense SimpleDP backend: cost queries over a growing batch
-/// repair the previous thread-local table instead of re-solving from
-/// scratch; everything else (non-append mutations, schedule requests)
-/// serves through the exact scratch solver.
+/// Fingerprint of the instance's *prefix identity*: tape geometry, `U`,
+/// and the first requested file. Growing the batch never changes these,
+/// so every growth step of one backlog lands on the same table (FNV-1a
+/// over the fields; a collision only costs a rebuild, never correctness).
+fn prefix_fingerprint(inst: &Instance) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let first = inst.files()[0];
+    let mut h = OFFSET;
+    for field in [inst.tape_len(), inst.u(), first.l, first.r, first.x] {
+        h ^= field;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+fn with_table<R>(inst: &Instance, f: impl FnOnce(&mut IncrementalTable) -> R) -> R {
+    TABLES.with(|tables| {
+        let mut tables = tables.borrow_mut();
+        let fp = prefix_fingerprint(inst);
+        if tables.len() >= MAX_TABLES_PER_THREAD && !tables.contains_key(&fp) {
+            tables.clear();
+        }
+        f(tables.entry(fp).or_default())
+    })
+}
+
+/// Incremental dense SimpleDP backend: solves over a growing batch repair
+/// the thread-local table keyed by the instance's prefix fingerprint
+/// instead of re-solving from scratch, and schedules come from the exact
+/// value walk over that table — bit-identical (debug-asserted) to the
+/// scratch solver's.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct IncrementalBackend;
 
@@ -218,19 +422,26 @@ impl SimpleDpBackend for IncrementalBackend {
     }
 
     fn opt_cost(&self, inst: &Instance) -> Cost {
-        let (cost, incremental) = TABLE.with(|t| t.borrow_mut().opt_cost(inst));
-        if incremental {
-            INC_APPENDS.fetch_add(1, Ordering::Relaxed);
-        } else {
-            INC_FALLBACKS.fetch_add(1, Ordering::Relaxed);
-        }
+        let (cost, _, (appends, rebuilds)) = with_table(inst, |t| t.opt_solve(inst));
+        count_incremental(appends, rebuilds);
         cost
     }
 
     fn opt_schedule(&self, inst: &Instance) -> Schedule {
-        // Reconstruction needs the choice table the repair path does not
-        // maintain: full solve through the reusable scratch buffers.
-        SCRATCH.with(|s| dense_solve_into(inst, &mut s.borrow_mut())).1
+        let (cost, schedule, (appends, rebuilds)) = with_table(inst, |t| t.opt_solve(inst));
+        count_incremental(appends, rebuilds);
+        if cfg!(debug_assertions) {
+            // The serving-path bit-equality contract: cost AND detour
+            // list must match the fresh scratch solve exactly.
+            let (fresh_cost, fresh_schedule) =
+                SCRATCH.with(|s| dense_solve_into(inst, &mut s.borrow_mut()));
+            debug_assert_eq!(cost, fresh_cost, "incremental cost diverged from fresh solve");
+            debug_assert_eq!(
+                schedule, fresh_schedule,
+                "incremental schedule diverged from fresh solve"
+            );
+        }
+        schedule
     }
 }
 
@@ -348,6 +559,77 @@ mod tests {
         let (c3, third) = table.opt_cost(&inst.with_u(9));
         assert!(!third);
         assert_eq!(c3, SimpleDp::cost(&inst.with_u(9)));
+    }
+
+    #[test]
+    fn incremental_schedules_are_bit_identical_to_the_fresh_solve() {
+        // The serving-path contract: along random grow sequences the
+        // value-walk reconstruction must reproduce dense_solve_into's
+        // detour list exactly — same decisions, not merely same cost.
+        let mut rng = Rng::new(0x51EA);
+        let mut scratch = DenseScratch::default();
+        for case in 0..15 {
+            let mut table = IncrementalTable::new();
+            let u = rng.below(7);
+            let mut files: Vec<ReqFile> = Vec::new();
+            for step in 0..14 {
+                grow_step(&mut rng, &mut files);
+                let inst = Instance::new(500, u, files.clone()).unwrap();
+                let (cost, sched, _) = table.opt_solve(&inst);
+                let (fresh_cost, fresh_sched) = dense_solve_into(&inst, &mut scratch);
+                assert_eq!(cost, fresh_cost, "case {case} step {step}: cost");
+                assert_eq!(sched, fresh_sched, "case {case} step {step}: schedule");
+            }
+        }
+    }
+
+    #[test]
+    fn opt_solve_reuses_the_longest_stored_prefix() {
+        let f = |l: u64, r: u64, x: u64| ReqFile { l, r, x };
+        let files =
+            vec![f(2, 4, 2), f(10, 30, 5), f(33, 34, 1), f(50, 80, 4), f(90, 99, 2)];
+        let mut table = IncrementalTable::new();
+        let inst = |k: usize| Instance::new(110, 3, files[..k].to_vec()).unwrap();
+        // Fresh: one rebuild (first file) plus one append per later file.
+        let (_, _, work) = table.opt_solve(&inst(3));
+        assert_eq!(work, (2, 1));
+        // Verbatim re-solve: pure table hit, no work.
+        let (_, _, work) = table.opt_solve(&inst(3));
+        assert_eq!(work, (0, 0));
+        // Growth by two files: exactly two append repairs.
+        let (_, _, work) = table.opt_solve(&inst(5));
+        assert_eq!(work, (2, 0));
+        // A shrink cannot reuse rows (the clamp column moved): restart.
+        let (_, _, work) = table.opt_solve(&inst(2));
+        assert_eq!(work, (1, 1));
+        // A different U restarts even on identical files.
+        let other = Instance::new(110, 9, files[..2].to_vec()).unwrap();
+        let (cost, sched, work) = table.opt_solve(&other);
+        assert_eq!(work, (1, 1));
+        assert_eq!(cost, SimpleDp::cost(&other));
+        assert_eq!(evaluate(&other, &sched).cost, cost);
+    }
+
+    #[test]
+    fn thread_deltas_attribute_backend_work_to_the_calling_thread() {
+        // Each test runs on its own thread, but drain defensively anyway.
+        let _ = take_thread_incremental_stats();
+        let b = IncrementalBackend;
+        let files = vec![
+            ReqFile { l: 1, r: 3, x: 1 },
+            ReqFile { l: 7, r: 9, x: 2 },
+            ReqFile { l: 12, r: 20, x: 1 },
+        ];
+        let inst = Instance::new(64, 2, files).unwrap();
+        let _ = b.opt_schedule(&inst);
+        assert_eq!(
+            take_thread_incremental_stats(),
+            (2, 1),
+            "k = 3 fresh: one rebuild plus two appends"
+        );
+        assert_eq!(take_thread_incremental_stats(), (0, 0), "drained");
+        let _ = b.opt_schedule(&inst);
+        assert_eq!(take_thread_incremental_stats(), (0, 0), "verbatim re-solve is free");
     }
 
     #[test]

@@ -6,11 +6,13 @@
 //!
 //! - [`DenseBackend`] — the exact pure-Rust `i128` implementation in
 //!   [`crate::sched::simpledp_dense`]. Always available; the default.
-//! - [`IncrementalBackend`] — the same dense wavefront, but cost queries
-//!   over a *growing* batch (each instance appending one file to the
-//!   previous one) repair the previous table instead of re-solving from
-//!   scratch. Opt-in by name (`--backend incremental`); costs stay
-//!   bit-equal to [`DenseBackend`].
+//! - [`IncrementalBackend`] — the same dense wavefront, but solves over a
+//!   *growing* batch repair the stored per-prefix table instead of
+//!   re-solving from scratch, and schedules come from an exact value walk
+//!   over that table. Opt-in by name (`--backend incremental`); costs and
+//!   detour lists stay bit-equal to [`DenseBackend`] (debug-asserted on
+//!   the serving path), so `serve`/`replay --backend incremental` change
+//!   speed, never output.
 //! - `XlaSimpleDp` — PJRT execution of the AOT-compiled artifacts produced
 //!   by `python/compile/aot.py` (`make artifacts`). Compiled in only with
 //!   `--features xla`; instances that fit no artifact bucket fall back to
@@ -28,7 +30,9 @@ mod incremental;
 mod xla_simpledp;
 
 pub use dense::{dense_cache_stats, DenseBackend};
-pub use incremental::{incremental_stats, IncrementalBackend, IncrementalTable};
+pub use incremental::{
+    incremental_stats, take_thread_incremental_stats, IncrementalBackend, IncrementalTable,
+};
 #[cfg(feature = "xla")]
 pub use engine::{Engine, RuntimeError};
 #[cfg(feature = "xla")]

@@ -370,4 +370,48 @@ echo "ci: parallel replay gate OK (4 threads byte-identical to 1)"
 cargo test -q incremental_
 echo "ci: incremental DP gate OK (bit-equal property tests green)"
 
+# Raw-speed gate (c) — skewed-ring work stealing: a 9-shard ring over 3
+# workers (the consistent-hash spread is uneven at this geometry), with
+# and without --steal, must emit the same bytes as the single-threaded
+# run — shard ownership is a pure function of the seeded pre-pass, so
+# LPT assignment and epoch stealing move work, never results. The
+# balance evidence (per-worker busy times, max/min ratio, round-robin
+# counterfactual, steal count) must land on stderr, never in the JSON.
+./target/release/tapesched replay --shards 9 --smoke --seed 7 \
+    --threads 1 --out /tmp/replay_skew1_ci.json
+./target/release/tapesched replay --shards 9 --smoke --seed 7 \
+    --threads 3 --out /tmp/replay_skew3_ci.json 2> /tmp/replay_skew3_ci.err
+./target/release/tapesched replay --shards 9 --smoke --seed 7 \
+    --threads 3 --steal --out /tmp/replay_skew3_steal_ci.json \
+    2> /tmp/replay_skew3_steal_ci.err
+cmp /tmp/replay_skew1_ci.json /tmp/replay_skew3_ci.json
+cmp /tmp/replay_skew1_ci.json /tmp/replay_skew3_steal_ci.json
+grep -q "worker balance (Weighted)" /tmp/replay_skew3_ci.err
+grep -q "worker balance (Stolen)" /tmp/replay_skew3_steal_ci.err
+echo "ci: work-stealing gate OK (9 shards x {1,3,3+steal} byte-identical, balance on stderr)"
+
+# Raw-speed gate (d) — incremental DP on the serving path: the smoke
+# serve with --backend incremental must record nonzero table appends
+# (growing same-tape backlogs repaired in place instead of re-solved)
+# and keep the drain invariant submitted = completed + shed intact. The
+# bit-equality of served service times against the fresh solve is pinned
+# by the coordinator::service property test (runs under `cargo test`
+# above) and by the debug assertion inside the backend itself.
+./target/release/tapesched serve --requests 400 --seed 7 \
+    --backend incremental > /tmp/serve_incr_ci.out
+python3 - /tmp/serve_incr_ci.out <<'EOF'
+import re, sys
+text = open(sys.argv[1]).read()
+m = re.search(r"incremental appends/rebuilds = (\d+) / (\d+)", text)
+assert m, f"no incremental counter line in:\n{text}"
+appends, rebuilds = int(m.group(1)), int(m.group(2))
+assert appends > 0, "serving path never appended a column"
+d = re.search(r"drain submitted/completed/shed = (\d+) / (\d+) / (\d+)", text)
+assert d, f"no drain triple in:\n{text}"
+sub, comp, shed = (int(x) for x in d.groups())
+assert sub == comp + shed, (sub, comp, shed)
+print(f"ci: serving-incremental gate OK ({appends} appends, {rebuilds} rebuilds, "
+      f"{sub} = {comp} + {shed})")
+EOF
+
 echo "ci: all gates green"
